@@ -1,0 +1,77 @@
+//! Elastic pipeline with REAL OS processes: spawns `multiworld worker`
+//! subprocesses for a 3-stage pipeline, streams requests through it,
+//! then SIGKILLs a worker to show fault isolation at true process
+//! granularity (closed sockets / silent rings, watchdog detection).
+//!
+//! Requires `make artifacts` and `cargo build --release` (the workers
+//! run from `target/release/multiworld`; set `MW_BIN` to override).
+//!
+//! Run: `cargo run --release --example elastic_pipeline`
+
+use multiworld::config::ServingConfig;
+use multiworld::launch::ProcessCluster;
+use multiworld::multiworld::{StatePolicy, WatchdogConfig, WorldManager};
+use multiworld::mwccl::WorldOptions;
+use multiworld::runtime::artifacts_dir;
+use multiworld::serving::topology::{NodeId, Topology};
+use multiworld::serving::{Leader, RequestGen};
+use multiworld::util::time::Clock;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_dir().join("model.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let bin = multiworld::baselines::multiproc::multiworld_bin()
+        .map_err(|_| anyhow::anyhow!("build the binary first: cargo build --release"))?;
+    std::env::set_var("MW_BIN", &bin);
+
+    // 1-2-1 rhombus across real processes.
+    let topo = Topology::pipeline("proc", &[1, 2, 1], 42_000);
+    println!("spawning {} worker processes…", topo.workers().len());
+    let cluster = ProcessCluster::start(topo.clone(), artifacts_dir(), "tcp")?;
+
+    // The leader lives in THIS process.
+    let cfg = ServingConfig { heartbeat_ms: 150, miss_threshold: 3, ..Default::default() };
+    let mgr = WorldManager::with_options(
+        StatePolicy::Kv,
+        WatchdogConfig {
+            heartbeat: Duration::from_millis(cfg.heartbeat_ms),
+            miss_threshold: cfg.miss_threshold,
+        },
+        Clock::system(),
+    );
+    let manifest = multiworld::config::ModelManifest::load(artifacts_dir().join("model.json"))?;
+    let opts = WorldOptions::tcp().with_init_timeout(Duration::from_secs(180));
+    let leader = Leader::new(
+        mgr,
+        &topo,
+        &opts,
+        manifest.batch,
+        manifest.seq_len,
+        manifest.vocab,
+        &cfg,
+    )?;
+    println!("pipeline up: {} worlds established across 5 processes", topo.worlds.len());
+
+    // Phase 1: serve through real processes.
+    let mut gen = RequestGen::new(7, manifest.seq_len, manifest.vocab, None);
+    let r1 = leader.serve(gen.take(64), Some(200.0), Duration::from_secs(120));
+    println!(
+        "[healthy]  {}/{} answered, p50 {:.1} ms, throughput {:.1} req/s",
+        r1.completed, 64, r1.p50_ms, r1.throughput_rps
+    );
+
+    // Phase 2: SIGKILL the replicated middle stage's second replica.
+    println!("SIGKILLing worker s1r1…");
+    cluster.kill(NodeId::Worker { stage: 1, replica: 1 })?;
+    let r2 = leader.serve(gen.take(64), Some(200.0), Duration::from_secs(120));
+    println!(
+        "[degraded] {}/{} answered, p50 {:.1} ms, retries {} (traffic rerouted through s1r0)",
+        r2.completed, 64, r2.p50_ms, r2.retries
+    );
+    assert_eq!(r2.completed, 64, "service must survive the process kill");
+
+    println!("fault isolation across real processes: OK");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quickstart: the MultiWorld API in 60 lines.
+//!
+//! One process (here: the main thread) joins TWO worlds at once — the
+//! thing a classic CCL cannot do — moves tensors through both, survives
+//! one world's peer dying, and keeps using the other.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use multiworld::multiworld::WorldManager;
+use multiworld::mwccl::{Rendezvous, WorldOptions};
+use multiworld::tensor::Tensor;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // A worker-side manager: watchdog, per-world state, communicator.
+    let mgr = WorldManager::new();
+    let comm = mgr.communicator();
+
+    // Join two independent 2-member worlds (peers run on threads here;
+    // across processes it is the same call with a shared store port).
+    let mut peers = Vec::new();
+    for name in ["alpha", "beta"] {
+        let worlds = Rendezvous::single_process(name, 2, WorldOptions::shm())?;
+        let mut it = worlds.into_iter();
+        mgr.adopt(it.next().unwrap()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        peers.push(it.next().unwrap());
+    }
+    println!("member of worlds: {:?}", mgr.world_names());
+
+    // Peers send one tensor each; receive from BOTH worlds, in whichever
+    // order they land (async ops + wait_any — §3.2's non-blocking CCL).
+    let senders: Vec<_> = peers
+        .into_iter()
+        .enumerate()
+        .map(|(i, w)| {
+            std::thread::spawn(move || {
+                let t = Tensor::from_f32(&[2], &[i as f32, 42.0]);
+                w.send(t, 0, 0).unwrap();
+                w // keep the world alive until the send is delivered
+            })
+        })
+        .collect();
+    let works = vec![
+        comm.recv("alpha", 1, 0).map_err(|e| anyhow::anyhow!("{e}"))?,
+        comm.recv("beta", 1, 0).map_err(|e| anyhow::anyhow!("{e}"))?,
+    ];
+    let first = comm.wait_any(&works).unwrap();
+    println!("first tensor arrived from world #{first}");
+    for (name, w) in ["alpha", "beta"].iter().zip(&works) {
+        let t = w.wait().map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+        println!("  {name}: {:?} -> {:?}", t.shape(), t.as_f32());
+    }
+
+    // Fault isolation: kill beta's peer; alpha keeps working.
+    let mut saved = Vec::new();
+    for s in senders {
+        saved.push(s.join().unwrap());
+    }
+    let beta_peer = saved.pop().unwrap();
+    let alpha_peer = saved.pop().unwrap();
+    drop(beta_peer); // "process crash"
+    std::thread::sleep(Duration::from_millis(100));
+    let err = comm.recv_blocking("beta", 1, 1).unwrap_err();
+    println!("beta is broken as expected: {err}");
+
+    let h = std::thread::spawn(move || {
+        alpha_peer.send(Tensor::from_f32(&[1], &[7.0]), 0, 1).unwrap();
+    });
+    let t = comm.recv_blocking("alpha", 1, 1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    h.join().unwrap();
+    println!("alpha still works after beta died: {:?}", t.as_f32());
+    println!("remaining worlds: {:?}", mgr.world_names());
+    Ok(())
+}

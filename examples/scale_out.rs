@@ -1,0 +1,71 @@
+//! Online scaling demo (Fig. 2c): start a 1-1-1 pipeline, drive load,
+//! let the controller's policy scale the middle stage out when queue
+//! depth builds, and show both replicas taking traffic — all without
+//! restarting any existing worker.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example scale_out`
+
+use multiworld::config::ServingConfig;
+use multiworld::launch::InProcCluster;
+use multiworld::mwccl::WorldOptions;
+use multiworld::runtime::artifacts_dir;
+use multiworld::serving::controller::ScalingPolicy;
+use multiworld::serving::topology::Topology;
+use multiworld::serving::RequestGen;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_dir().join("model.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let topo = Topology::pipeline("scale", &[1, 1, 1], 44_000);
+    let cfg = ServingConfig { heartbeat_ms: 100, batch_timeout_ms: 2, ..Default::default() };
+    let cluster = InProcCluster::start(
+        topo,
+        artifacts_dir(),
+        WorldOptions::shm().with_init_timeout(Duration::from_secs(180)),
+        ScalingPolicy { scale_up_depth: 8.0, max_replicas: 2, recover: false },
+        &cfg,
+    )?;
+    let manifest = cluster.manifest.clone();
+    println!("pipeline 1x1x1 up; scale-out threshold: 8 queued batches per replica");
+
+    // A policy thread watching the leader's queue depth (the loop the
+    // controller would run in a deployment).
+    let leader = cluster.leader.clone();
+    let controller = cluster.controller.clone();
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let policy = std::thread::spawn(move || {
+        while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+            let depth = leader.depth_per_replica();
+            if depth.is_finite() {
+                if let Ok(Some(action)) = controller.maybe_scale_out(1, depth) {
+                    println!("  [controller] {action:?} (queue depth {depth:.0})");
+                }
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    });
+
+    // Open-loop burst: far more than one middle replica keeps up with.
+    let n = manifest.batch * 24;
+    println!("driving a burst of {n} requests…");
+    let mut gen = RequestGen::new(3, manifest.seq_len, manifest.vocab, None);
+    let report = cluster
+        .leader
+        .serve(gen.take(n), Some(2_000.0), Duration::from_secs(180));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = policy.join();
+
+    println!(
+        "burst done: {}/{} answered, p50 {:.1} ms, p99 {:.1} ms, throughput {:.1} req/s",
+        report.completed, n, report.p50_ms, report.p99_ms, report.throughput_rps
+    );
+    println!("controller actions: {:?}", cluster.controller.actions());
+    println!("live workers after scaling: {:?}", cluster.live_workers());
+    println!("topology now: {} (replica ids are append-only)", cluster.controller.topology().shape());
+    cluster.shutdown();
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! End-to-end serving driver (the mandated E7 experiment): load the
+//! AOT-compiled transformer, deploy the paper's 1-2-1 rhombus pipeline,
+//! serve batched Poisson traffic, kill the replicated middle stage's
+//! replica mid-run, let the controller recover it, and report
+//! latency/throughput for each phase.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_model [-- --requests 256 --rate 300]`
+//!
+//! Results of a reference run are recorded in EXPERIMENTS.md §E7.
+
+use multiworld::config::ServingConfig;
+use multiworld::launch::InProcCluster;
+use multiworld::mwccl::WorldOptions;
+use multiworld::runtime::artifacts_dir;
+use multiworld::serving::controller::ScalingPolicy;
+use multiworld::serving::topology::{NodeId, Topology};
+use multiworld::serving::RequestGen;
+use multiworld::util::args::Command;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Command::new("serve_model", "end-to-end elastic serving demo")
+        .opt("requests", "requests per phase", Some("192"))
+        .opt("rate", "arrival rate (req/s)", Some("300"))
+        .opt("transport", "shm|tcp", Some("tcp"));
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let m = cli.parse(&argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let n_requests: usize = m.usize("requests").map_err(anyhow::Error::msg)?;
+    let rate: f64 = m.f64("rate").map_err(anyhow::Error::msg)?;
+    let opts = match m.get_or("transport", "tcp").as_str() {
+        "shm" => WorldOptions::shm(),
+        _ => WorldOptions::tcp(),
+    }
+    .with_init_timeout(Duration::from_secs(180));
+
+    if !artifacts_dir().join("model.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+
+    println!("== deploying 1-2-1 pipeline (leader + 4 workers, one world per edge) ==");
+    let topo = Topology::pipeline("serve", &[1, 2, 1], 40_000);
+    println!("worlds: {:?}", topo.worlds.iter().map(|w| w.name.as_str()).collect::<Vec<_>>());
+    let cfg = ServingConfig { heartbeat_ms: 100, miss_threshold: 3, ..ServingConfig::from_env() };
+    let cluster = InProcCluster::start(
+        topo,
+        artifacts_dir(),
+        opts,
+        ScalingPolicy { recover: true, ..Default::default() },
+        &cfg,
+    )?;
+    let manifest = cluster.manifest.clone();
+    println!(
+        "model: {} — {} params, {} stages, batch {}, seq {}",
+        manifest.model,
+        manifest.total_params(),
+        manifest.stages.len(),
+        manifest.batch,
+        manifest.seq_len
+    );
+
+    let mut gen = RequestGen::new(0xE7, manifest.seq_len, manifest.vocab, None);
+
+    // Phase 1 — healthy pipeline.
+    println!("\n== phase 1: healthy pipeline, {n_requests} requests at {rate}/s ==");
+    let r1 = cluster
+        .leader
+        .serve(gen.take(n_requests), Some(rate), Duration::from_secs(120));
+    print_report("healthy", &r1);
+
+    // Phase 2 — kill the middle replica mid-run; retries + the other
+    // replica absorb the traffic; the controller spawns a replacement.
+    println!("\n== phase 2: killing s1r1 mid-run ==");
+    let killer = {
+        let c: &InProcCluster = &cluster;
+        std::thread::scope(|s| {
+            let h = s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(300));
+                let killed = c.kill(NodeId::Worker { stage: 1, replica: 1 });
+                println!("  [failure injector] killed s1r1: {killed}");
+            });
+            let r = c
+                .leader
+                .serve(gen.take(n_requests), Some(rate), Duration::from_secs(180));
+            h.join().unwrap();
+            r
+        })
+    };
+    print_report("with failure + recovery", &killer);
+
+    // Give the controller a beat, then show the healed topology.
+    std::thread::sleep(Duration::from_secs(2));
+    println!(
+        "\ncontroller actions: {:?}",
+        cluster.controller.actions()
+    );
+    println!("live workers: {:?}", cluster.live_workers());
+
+    // Phase 3 — steady state after recovery.
+    println!("\n== phase 3: post-recovery steady state ==");
+    let r3 = cluster
+        .leader
+        .serve(gen.take(n_requests), Some(rate), Duration::from_secs(120));
+    print_report("recovered", &r3);
+
+    cluster.shutdown();
+    println!("\nE7 complete — record these numbers in EXPERIMENTS.md §E7.");
+    Ok(())
+}
+
+fn print_report(phase: &str, r: &multiworld::serving::LeaderReport) {
+    println!(
+        "  [{phase}] completed {}  throughput {:.1} req/s  p50 {:.1} ms  p99 {:.1} ms  mean {:.1} ms  retries {}",
+        r.completed, r.throughput_rps, r.p50_ms, r.p99_ms, r.mean_ms, r.retries
+    );
+}

@@ -1,0 +1,128 @@
+"""AOT pipeline: lower every pipeline stage (and the full model) to HLO
+*text* and emit the manifest the Rust runtime consumes.
+
+Interchange format is HLO text, NOT `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, example_input, full_model, init_params, make_stage_fns
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps with `to_tuple1`).
+
+    CRITICAL: the default printer elides large constants as `{...}`,
+    which the XLA text parser silently reads back as *zeros* — the baked
+    model weights would vanish. `print_large_constants=True` keeps them.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_stage(fn, in_shape, in_dtype):
+    dtype = {"i32": jnp.int32, "f32": jnp.float32}[in_dtype]
+    spec = jax.ShapeDtypeStruct(in_shape, dtype)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def build(cfg: ModelConfig, out_dir: str, quiet: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg)
+    stages = make_stage_fns(cfg, params)
+
+    manifest = {
+        "model": cfg.name,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "stages": [],
+    }
+
+    for st in stages:
+        hlo = lower_stage(st["fn"], st["in_shape"], st["in_dtype"])
+        fname = f"{st['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        if not quiet:
+            print(f"  {fname}: {len(hlo)} chars, {st['params']} params")
+        manifest["stages"].append(
+            {
+                "name": st["name"],
+                "hlo": fname,
+                "in_shape": list(st["in_shape"]),
+                "out_shape": list(st["out_shape"]),
+                "in_dtype": st["in_dtype"],
+                "out_dtype": st["out_dtype"],
+                "params": st["params"],
+            }
+        )
+
+    # The monolithic model, for the single-executable baseline and for
+    # stage-composition checks from Rust.
+    hlo = lower_stage(full_model(cfg, params), (cfg.batch, cfg.seq_len), "i32")
+    with open(os.path.join(out_dir, "full_model.hlo.txt"), "w") as f:
+        f.write(hlo)
+    manifest["full_model"] = "full_model.hlo.txt"
+
+    # A golden input/output pair so the Rust runtime can self-check
+    # numerics end to end without Python in the loop.
+    tokens = example_input(cfg)
+    logits = jax.jit(full_model(cfg, params))(tokens)
+    golden = {
+        "tokens": [int(t) for t in tokens.reshape(-1)],
+        "tokens_shape": list(tokens.shape),
+        "logits_sample": [float(x) for x in jnp.asarray(logits).reshape(-1)[:64]],
+        "logits_shape": list(logits.shape),
+        "logits_checksum": float(jnp.abs(logits).sum()),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    with open(os.path.join(out_dir, "model.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not quiet:
+        print(f"wrote {out_dir}/model.json ({len(manifest['stages'])} stages)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--stages", type=int, default=3)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=16)
+    args = ap.parse_args()
+    cfg = ModelConfig(
+        n_stages=args.stages,
+        n_layers=args.layers,
+        d_model=args.d_model,
+        batch=args.batch,
+        seq_len=args.seq_len,
+    )
+    build(cfg, args.out)
+
+
+if __name__ == "__main__":
+    main()

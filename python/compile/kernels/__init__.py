@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into stage HLO)."""
+
+from .attention import attention
+from .mlp import layernorm, mlp
+from . import ref
+
+__all__ = ["attention", "mlp", "layernorm", "ref"]

@@ -1,0 +1,62 @@
+"""Layer-1 Pallas kernel: fused causal attention.
+
+TPU-shaped rather than GPU-ported (DESIGN.md §Hardware-Adaptation): the
+grid iterates over (batch × heads); each step pulls one head's Q, K and
+V tiles from HBM into VMEM via `BlockSpec`, runs QKᵀ → masked softmax →
+PV entirely in VMEM, and writes the output tile back. The matmuls are
+[S, Dh] × [Dh, S] and [S, S] × [S, Dh]; fp32 accumulation throughout
+(`preferred_element_type`), which is the MXU contract.
+
+`interpret=True` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute. Numerics are
+validated against `ref.attention_ref` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool):
+    """One grid step == one (batch, head) pair; refs are [1, S, Dh] VMEM."""
+    q = q_ref[0, ...].astype(jnp.float32)
+    k = k_ref[0, ...].astype(jnp.float32)
+    v = v_ref[0, ...].astype(jnp.float32)
+    s = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=jnp.float32))
+    # [S, S] score tile in VMEM — the MXU-shaped contraction.
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(row >= col, scores, -1e30)
+    # Numerically-stable softmax, staying in VMEM.
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    o_ref[0, ...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, *, causal: bool = True):
+    """Fused attention over [BH, S, Dh] tensors (one grid row per head).
+
+    VMEM per grid step ≈ 4 × S × Dh × 4 B (q, k, v, o) + S² × 4 B for the
+    score tile; with S, Dh ≤ 128 that is ≤ 320 KiB — comfortably inside a
+    TPU core's ~16 MiB VMEM with double-buffering headroom.
+    """
+    if q.shape != k.shape or q.shape != v.shape:
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    bh, s, dh = q.shape
+    block = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, causal=causal),
+        grid=(bh,),
+        in_specs=[block, block, block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,  # CPU-PJRT execution; Mosaic is TPU-only
+    )(q, k, v)

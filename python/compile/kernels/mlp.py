@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: fused transformer MLP (GEMM → GELU → GEMM).
+
+The HBM↔VMEM schedule: the grid tiles the row dimension of the
+activations; each step keeps an [bn, D] activation tile plus the full
+W1 [D, F] and W2 [F, D] weight panels resident in VMEM and fuses the
+intermediate GELU so the [bn, F] hidden tile never round-trips to HBM —
+the fusion that on GPU would be done inside one threadblock is expressed
+here purely through `BlockSpec`.
+
+VMEM per step with D=128, F=512, bn=128, fp32:
+  x (64 KiB) + w1 (256 KiB) + h (256 KiB) + w2 (256 KiB) + out (64 KiB)
+  ≈ 0.9 MiB — well inside budget; the two GEMMs are 128-multiple shaped
+for the MXU. interpret=True for CPU-PJRT (see attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=jnp.float32))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    w1 = w1_ref[...].astype(jnp.float32)
+    b1 = b1_ref[...].astype(jnp.float32)
+    w2 = w2_ref[...].astype(jnp.float32)
+    b2 = b2_ref[...].astype(jnp.float32)
+    h = _gelu(jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1)
+    out = jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is ≤ target (rows per grid step)."""
+    best = 1
+    for cand in range(1, min(n, target) + 1):
+        if n % cand == 0:
+            best = cand
+    return best
+
+
+@jax.jit
+def mlp(x, w1, b1, w2, b2):
+    """Fused MLP over x: [N, D] with w1: [D, F], w2: [F, D]."""
+    n, d = x.shape
+    f = w1.shape[1]
+    if w1.shape[0] != d or w2.shape != (f, d) or b1.shape != (f,) or b2.shape != (d,):
+        raise ValueError(
+            f"mlp shape mismatch: x{x.shape} w1{w1.shape} b1{b1.shape} w2{w2.shape} b2{b2.shape}"
+        )
+    bn = _pick_block(n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),  # activation tile
+            pl.BlockSpec((d, f), lambda i: (0, 0)),   # W1 panel (resident)
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),   # W2 panel (resident)
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis as a Pallas kernel (VPU-side op).
+
+    Rows are tiled like `mlp`; per-step state is one [bn, D] tile plus
+    the [D] scale/shift vectors.
+    """
+    n, d = x.shape
+    bn = _pick_block(n)
+
+    def kernel(x_ref, g_ref, b_ref, o_ref):
+        xv = x_ref[...].astype(jnp.float32)
+        mu = xv.mean(axis=-1, keepdims=True)
+        var = ((xv - mu) ** 2).mean(axis=-1, keepdims=True)
+        y = (xv - mu) / jnp.sqrt(var + eps)
+        y = y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: `pytest python/tests`
+asserts the Pallas kernels (run in interpret mode) match these
+references to tight tolerances across shape/dtype sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """Scaled dot-product attention over [B, S, Dh] per-head tensors.
+
+    Args:
+      q, k, v: [batch_heads, seq, head_dim]
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      [batch_heads, seq, head_dim]
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=jnp.float32))
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (matches the kernel's formula exactly)."""
+    x32 = x.astype(jnp.float32)
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=jnp.float32))
+    y = 0.5 * x32 * (1.0 + jnp.tanh(c * (x32 + 0.044715 * x32**3)))
+    return y.astype(x.dtype)
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Fused transformer MLP: gelu(x @ w1 + b1) @ w2 + b2.
+
+    Args:
+      x: [n, d]; w1: [d, f]; b1: [f]; w2: [f, d]; b2: [d]
+    """
+    h = gelu_ref(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1.astype(jnp.float32))
+    out = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mu) / jnp.sqrt(var + eps) * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return y.astype(x.dtype)

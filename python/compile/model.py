@@ -1,0 +1,194 @@
+"""Layer-2 JAX model: a small decoder-only transformer, partitioned into
+pipeline stages for the serving experiments.
+
+The model is deliberately self-contained: weights are generated from a
+fixed PRNG seed and *baked into the HLO as constants* by `aot.py`, so a
+stage artifact is a pure function Tensor→Tensor and the Rust runtime
+never handles parameters.
+
+Stage map (n_stages = 3 by default, matching the paper's Fig. 2
+three-stage pipeline with the middle stage as the replication target):
+
+  stage_0: tokens  i32[B, S]      → embeddings + first block(s) → f32[B, S, D]
+  stage_k: hidden  f32[B, S, D]   → transformer block(s)        → f32[B, S, D]
+  stage_N: hidden  f32[B, S, D]   → final LN + LM head          → f32[B, S, V]
+
+Every block calls the Layer-1 Pallas kernels (`kernels.attention`,
+`kernels.mlp`, `kernels.layernorm`) so the kernels lower into the same
+HLO the Rust coordinator executes.
+"""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, layernorm, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shapes for the served model and its pipeline split."""
+
+    name: str = "tiny-transformer"
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 256
+    seq_len: int = 16
+    batch: int = 8
+    n_stages: int = 3
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def layer_split(self):
+        """Distribute n_layers across n_stages (first/last also carry
+        embedding / head)."""
+        assert 1 <= self.n_stages <= self.n_layers + 2
+        base = self.n_layers // self.n_stages
+        extra = self.n_layers % self.n_stages
+        return [base + (1 if i < extra else 0) for i in range(self.n_stages)]
+
+
+def init_params(cfg: ModelConfig):
+    """Deterministic parameter pytree."""
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+    scale_emb = 1.0 / math.sqrt(cfg.d_model)
+    params = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * scale_emb,
+        "pos_emb": jax.random.normal(next(keys), (cfg.seq_len, cfg.d_model)) * scale_emb,
+        "ln_f": {"gamma": jnp.ones(cfg.d_model), "beta": jnp.zeros(cfg.d_model)},
+        "head": jax.random.normal(next(keys), (cfg.d_model, cfg.vocab)) * scale_emb,
+        "blocks": [],
+    }
+    scale_attn = 1.0 / math.sqrt(cfg.d_model)
+    scale_ff = 1.0 / math.sqrt(cfg.d_ff)
+    for _ in range(cfg.n_layers):
+        params["blocks"].append(
+            {
+                "ln1": {"gamma": jnp.ones(cfg.d_model), "beta": jnp.zeros(cfg.d_model)},
+                "wqkv": jax.random.normal(next(keys), (cfg.d_model, 3 * cfg.d_model)) * scale_attn,
+                "wo": jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)) * scale_attn,
+                "ln2": {"gamma": jnp.ones(cfg.d_model), "beta": jnp.zeros(cfg.d_model)},
+                "w1": jax.random.normal(next(keys), (cfg.d_model, cfg.d_ff)) * scale_attn,
+                "b1": jnp.zeros(cfg.d_ff),
+                "w2": jax.random.normal(next(keys), (cfg.d_ff, cfg.d_model)) * scale_ff,
+                "b2": jnp.zeros(cfg.d_model),
+            }
+        )
+    return params
+
+
+def param_count(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def block_apply(cfg: ModelConfig, bp, x):
+    """One pre-LN transformer block over x: [B, S, D], via Pallas kernels."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = cfg.head_dim
+
+    # Attention sublayer.
+    xn = layernorm(x.reshape(b * s, d), bp["ln1"]["gamma"], bp["ln1"]["beta"]).reshape(b, s, d)
+    qkv = xn @ bp["wqkv"]  # [B, S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [B, S, D] -> [B*H, S, Dh]
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    def unheads(t):  # [B*H, S, Dh] -> [B, S, D]
+        return t.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+
+    attn = unheads(attention(heads(q), heads(k), heads(v), causal=True))
+    x = x + attn @ bp["wo"]
+
+    # MLP sublayer (fused Pallas kernel over flattened rows).
+    xn = layernorm(x.reshape(b * s, d), bp["ln2"]["gamma"], bp["ln2"]["beta"])
+    y = mlp(xn, bp["w1"], bp["b1"], bp["w2"], bp["b2"])
+    return x + y.reshape(b, s, d)
+
+
+def make_stage_fns(cfg: ModelConfig, params):
+    """Build the per-stage pure functions plus IO metadata.
+
+    Returns a list of dicts: {fn, in_shape, out_shape, in_dtype,
+    out_dtype, params} — the manifest `aot.py` serializes.
+    """
+    split = cfg.layer_split()
+    stages = []
+    layer_idx = 0
+    for si, n_blocks in enumerate(split):
+        blocks = params["blocks"][layer_idx : layer_idx + n_blocks]
+        layer_idx += n_blocks
+        first = si == 0
+        last = si == len(split) - 1
+
+        def stage_fn(x, blocks=blocks, first=first, last=last):
+            if first:
+                tok = x  # i32 [B, S]
+                x = params["tok_emb"][tok] + params["pos_emb"][None, :, :]
+            for bp in blocks:
+                x = block_apply(cfg, bp, x)
+            if last:
+                b, s, d = x.shape
+                xn = layernorm(
+                    x.reshape(b * s, d), params["ln_f"]["gamma"], params["ln_f"]["beta"]
+                ).reshape(b, s, d)
+                x = xn @ params["head"]  # logits [B, S, V]
+            return x
+
+        n_params = sum(param_count(bp) for bp in blocks)
+        if first:
+            n_params += param_count(params["tok_emb"]) + param_count(params["pos_emb"])
+        if last:
+            n_params += param_count(params["ln_f"]) + param_count(params["head"])
+        stages.append(
+            {
+                "name": f"stage_{si}",
+                "fn": stage_fn,
+                "in_shape": (cfg.batch, cfg.seq_len) if first else (cfg.batch, cfg.seq_len, cfg.d_model),
+                "out_shape": (cfg.batch, cfg.seq_len, cfg.vocab)
+                if last
+                else (cfg.batch, cfg.seq_len, cfg.d_model),
+                "in_dtype": "i32" if first else "f32",
+                "out_dtype": "f32",
+                "params": n_params,
+            }
+        )
+    return stages
+
+
+@functools.lru_cache(maxsize=4)
+def _cached(cfg: ModelConfig):
+    params = init_params(cfg)
+    return params
+
+
+def full_model(cfg: ModelConfig, params=None):
+    """The unpartitioned model (reference for stage-composition tests and
+    the single-executable baseline)."""
+    if params is None:
+        params = _cached(cfg)
+    stages = make_stage_fns(cfg, params)
+
+    def fn(tokens):
+        x = tokens
+        for st in stages:
+            x = st["fn"](x)
+        return x
+
+    return fn
+
+
+def example_input(cfg: ModelConfig, seed: int = 1234):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (cfg.batch, cfg.seq_len), 0, cfg.vocab, dtype=jnp.int32)

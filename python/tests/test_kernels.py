@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose
+against `ref.py`. This is the kernel-level correctness gate the build
+runs before artifacts ship.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32_TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bh=st.integers(min_value=1, max_value=12),
+    seq=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    dh=st.sampled_from([4, 8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_attention_matches_ref_f32(bh, seq, dh, causal, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(k1, (bh, seq, dh))
+    k = rand(k2, (bh, seq, dh))
+    v = rand(k3, (bh, seq, dh))
+    out = attention(q, k, v, causal=causal)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, **F32_TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seq=st.sampled_from([4, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_attention_bf16(seq, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = [rand(kk, (4, seq, 16), dtype=jnp.bfloat16) for kk in keys]
+    out = attention(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), **BF16_TOL
+    )
+
+
+def test_attention_causal_ignores_future():
+    # Perturbing future positions of K/V must not change earlier outputs.
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    q = rand(ks[0], (2, 8, 16))
+    k = rand(ks[1], (2, 8, 16))
+    v = rand(ks[2], (2, 8, 16))
+    base = attention(q, k, v, causal=True)
+    k2 = k.at[:, -1, :].add(100.0)
+    v2 = v.at[:, -1, :].add(-50.0)
+    pert = attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(base[:, :-1, :], pert[:, :-1, :], **F32_TOL)
+    assert not np.allclose(base[:, -1, :], pert[:, -1, :])
+
+
+def test_attention_softmax_rows_bounded():
+    # Output of attention is a convex combination of V rows.
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = [rand(kk, (3, 16, 8)) for kk in keys]
+    out = np.asarray(attention(q, k, v, causal=False))
+    vmin, vmax = np.asarray(v).min(axis=1), np.asarray(v).max(axis=1)
+    assert (out <= vmax[:, None, :] + 1e-4).all()
+    assert (out >= vmin[:, None, :] - 1e-4).all()
+
+
+def test_attention_shape_mismatch_raises():
+    q = jnp.zeros((2, 4, 8))
+    k = jnp.zeros((2, 4, 16))
+    with pytest.raises(ValueError):
+        attention(q, k, k)
+
+
+# ----------------------------------------------------------------------- mlp
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 3, 8, 64, 128, 200]),
+    d=st.sampled_from([8, 32, 64]),
+    f=st.sampled_from([16, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mlp_matches_ref(n, d, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = rand(ks[0], (n, d))
+    w1 = rand(ks[1], (d, f), scale=0.3)
+    b1 = rand(ks[2], (f,), scale=0.1)
+    w2 = rand(ks[3], (f, d), scale=0.3)
+    b2 = rand(ks[4], (d,), scale=0.1)
+    out = mlp(x, w1, b1, w2, b2)
+    expect = ref.mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, expect, rtol=5e-5, atol=5e-5)
+
+
+def test_mlp_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        mlp(
+            jnp.zeros((4, 8)),
+            jnp.zeros((9, 16)),
+            jnp.zeros(16),
+            jnp.zeros((16, 8)),
+            jnp.zeros(8),
+        )
+
+
+# ----------------------------------------------------------------- layernorm
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 16, 128, 384]),
+    d=st.sampled_from([8, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_layernorm_matches_ref(n, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(ks[0], (n, d), scale=3.0)
+    gamma = rand(ks[1], (d,), scale=0.5) + 1.0
+    beta = rand(ks[2], (d,), scale=0.5)
+    out = layernorm(x, gamma, beta)
+    expect = ref.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(out, expect, rtol=5e-5, atol=5e-5)
+
+
+def test_layernorm_output_standardized():
+    x = rand(jax.random.PRNGKey(3), (32, 64), scale=10.0)
+    out = np.asarray(layernorm(x, jnp.ones(64), jnp.zeros(64)))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)

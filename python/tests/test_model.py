@@ -1,0 +1,126 @@
+"""L2 correctness: stage partitioning composes to the full model, shapes
+chain, parameter accounting matches, and the AOT manifest is coherent."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    example_input,
+    full_model,
+    init_params,
+    make_stage_fns,
+    param_count,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG)
+
+
+@pytest.fixture(scope="module")
+def stages(params):
+    return make_stage_fns(CFG, params)
+
+
+def test_stage_shapes_chain(stages):
+    for a, b in zip(stages, stages[1:]):
+        assert a["out_shape"] == b["in_shape"]
+        assert a["out_dtype"] == b["in_dtype"]
+    assert stages[0]["in_dtype"] == "i32"
+    assert stages[-1]["out_shape"] == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+
+def test_stage_composition_equals_full_model(params, stages):
+    tokens = example_input(CFG)
+    x = tokens
+    for st in stages:
+        x = st["fn"](x)
+        assert x.shape == st["out_shape"], st["name"]
+    full = full_model(CFG, params)(tokens)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_param_accounting(params, stages):
+    total = sum(st["params"] for st in stages)
+    assert total == param_count(params)
+
+
+def test_layer_split_covers_all_layers():
+    for n_stages in (1, 2, 3, 4):
+        cfg = ModelConfig(n_stages=n_stages)
+        split = cfg.layer_split()
+        assert sum(split) == cfg.n_layers
+        assert len(split) == n_stages
+        assert all(s >= 0 for s in split)
+
+
+def test_deterministic_weights():
+    a = init_params(CFG)
+    b = init_params(CFG)
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert all(np.array_equal(x, y) for x, y in zip(la, lb))
+
+
+def test_logits_are_finite_and_sensitive_to_input(params):
+    fn = full_model(CFG, params)
+    t1 = example_input(CFG, seed=1)
+    t2 = example_input(CFG, seed=2)
+    l1, l2 = fn(t1), fn(t2)
+    assert np.isfinite(np.asarray(l1)).all()
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_causality_end_to_end(params):
+    # Changing the last token must not change logits at earlier positions.
+    fn = full_model(CFG, params)
+    tokens = example_input(CFG, seed=3)
+    l1 = np.asarray(fn(tokens))
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+    l2 = np.asarray(fn(tokens2))
+    np.testing.assert_allclose(l1[:, :-1, :], l2[:, :-1, :], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[:, -1, :], l2[:, -1, :])
+
+
+def test_aot_manifest_consistency(tmp_path):
+    from compile.aot import build
+
+    cfg = ModelConfig(n_layers=2, n_stages=2, d_model=32, d_ff=64, batch=2, seq_len=8)
+    manifest = build(cfg, str(tmp_path), quiet=True)
+    on_disk = json.loads((tmp_path / "model.json").read_text())
+    assert on_disk == manifest
+    assert len(manifest["stages"]) == 2
+    for st in manifest["stages"]:
+        hlo = (tmp_path / st["hlo"]).read_text()
+        assert "ENTRY" in hlo
+        assert "{...}" not in hlo, "large constants must not be elided"
+    golden = json.loads((tmp_path / "golden.json").read_text())
+    assert golden["logits_shape"] == [2, 8, cfg.vocab]
+    assert len(golden["tokens"]) == 2 * 8
+    assert np.isfinite(golden["logits_checksum"])
+
+
+def test_hlo_text_has_single_parameter(tmp_path):
+    # Stage artifacts must be pure Tensor→Tensor functions: exactly one
+    # entry parameter (weights baked as constants).
+    from compile.aot import build
+
+    cfg = ModelConfig(n_layers=1, n_stages=1, d_model=32, d_ff=64, batch=2, seq_len=4)
+    build(cfg, str(tmp_path), quiet=True)
+    text = (tmp_path / "stage_0.hlo.txt").read_text()
+    # ENTRY is the last computation in the module, so everything after it
+    # is the entry body (slicing to the first '}' would stop at a layout
+    # annotation like `{1,0}`).
+    entry = text[text.index("ENTRY") :]
+    n_params = entry.count("parameter(")
+    assert n_params == 1, f"expected 1 entry parameter, found {n_params}"

@@ -1,0 +1,51 @@
+//! Ablation — completion-poll strategy (§3.2/§3.3): the paper mitigates
+//! polling-induced throughput loss with busy waiting, paying one CPU
+//! core. This bench quantifies the trade across strategies:
+//!
+//! * `BusyWait`  — pure spin (the paper's choice)
+//! * `SpinYield` — spin briefly, then yield (our default)
+//! * `Sleep(1ms)`— naive polling (what the paper warns loses throughput)
+
+use multiworld::bench::scenarios::mw_fanin_throughput;
+use multiworld::bench::Table;
+use multiworld::multiworld::{PollStrategy, StatePolicy};
+use multiworld::mwccl::WorldOptions;
+use multiworld::util::fmt_rate;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
+    let strategies: [(&str, PollStrategy); 3] = [
+        ("busy-wait", PollStrategy::BusyWait),
+        ("spin+yield", PollStrategy::SpinYield),
+        ("sleep 1ms", PollStrategy::Sleep(Duration::from_millis(1))),
+    ];
+    for (elems, label) in [(1_000usize, "4K"), (100_000usize, "400K")] {
+        let mut table = Table::new(
+            &format!("Ablation A2 — poll strategy, 2 senders, {label} tensors"),
+            &["strategy", "throughput", "vs busy-wait"],
+        );
+        let msgs = if quick { 64 } else { 1024.min(40_000_000 / (elems * 4)).max(32) };
+        let mut base = 0.0f64;
+        for (name, strat) in strategies {
+            let bps = mw_fanin_throughput(
+                2,
+                elems,
+                msgs,
+                WorldOptions::shm(),
+                StatePolicy::Kv,
+                strat,
+            );
+            if base == 0.0 {
+                base = bps;
+            }
+            table.row(&[
+                name.to_string(),
+                fmt_rate(bps),
+                format!("{:.2}×", bps / base),
+            ]);
+        }
+        table.emit(&format!("ablation_polling_{label}"));
+    }
+    println!("paper: busy waiting trades one CPU core for throughput; naive sleeping loses it");
+}

@@ -1,0 +1,85 @@
+//! Ablation — per-world state management (§3.2): the paper's key-value
+//! design vs the save/restore *swap* baseline, as the number of worlds a
+//! worker belongs to grows.
+//!
+//! Measures (a) raw `activate` cost per op for both managers and (b)
+//! end-to-end fan-in throughput with the full stack under each policy.
+//! Expected shape: kv stays flat; swap degrades as world count (and
+//! therefore switch frequency) rises.
+
+use multiworld::bench::scenarios::mw_fanin_throughput;
+use multiworld::bench::Table;
+use multiworld::multiworld::state::{
+    make_state_manager, StatePolicy, WorldState,
+};
+use multiworld::multiworld::PollStrategy;
+use multiworld::mwccl::WorldOptions;
+use multiworld::util::fmt_rate;
+use std::time::Instant;
+
+/// Raw state-activation microbenchmark: round-robin ops across N worlds.
+fn activate_ns_per_op(policy: StatePolicy, n_worlds: usize, blob: usize) -> f64 {
+    let m = make_state_manager(policy);
+    for i in 0..n_worlds {
+        m.insert(WorldState::new(&format!("w{i}"), 0, 2, blob));
+    }
+    let ops = 20_000usize;
+    let t0 = Instant::now();
+    for k in 0..ops {
+        m.next_seq(&format!("w{}", k % n_worlds)).unwrap();
+    }
+    t0.elapsed().as_nanos() as f64 / ops as f64
+}
+
+fn main() {
+    let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
+    let blob = 64 * 1024; // NCCL-communicator-scale state per world
+
+    let mut micro = Table::new(
+        "Ablation A1a — state activation cost (64 KiB state blob per world)",
+        &["worlds", "kv ns/op", "swap ns/op", "swap/kv"],
+    );
+    for n in [1usize, 2, 4, 8, 16, 32] {
+        let kv = activate_ns_per_op(StatePolicy::Kv, n, blob);
+        let swap = activate_ns_per_op(StatePolicy::Swap, n, blob);
+        micro.row(&[
+            n.to_string(),
+            format!("{kv:.0}"),
+            format!("{swap:.0}"),
+            format!("{:.1}×", swap / kv),
+        ]);
+    }
+    micro.emit("ablation_state_micro");
+
+    let mut e2e = Table::new(
+        "Ablation A1b — fan-in throughput under each state policy (40 KB tensors)",
+        &["worlds(senders)", "kv", "swap", "swap/kv"],
+    );
+    for senders in [1usize, 2, 4] {
+        let msgs = if quick { 64 } else { 512 };
+        let kv = mw_fanin_throughput(
+            senders,
+            10_000,
+            msgs,
+            WorldOptions::shm(),
+            StatePolicy::Kv,
+            PollStrategy::SpinYield,
+        );
+        let swap = mw_fanin_throughput(
+            senders,
+            10_000,
+            msgs,
+            WorldOptions::shm(),
+            StatePolicy::Swap,
+            PollStrategy::SpinYield,
+        );
+        e2e.row(&[
+            senders.to_string(),
+            fmt_rate(kv),
+            fmt_rate(swap),
+            format!("{:.3}", swap / kv),
+        ]);
+    }
+    e2e.emit("ablation_state_e2e");
+    println!("expected shape: kv flat in #worlds; swap degrades with switch frequency");
+}

@@ -1,0 +1,70 @@
+//! Figure 1 — tensor forwarding through a Kafka-style message bus:
+//! throughput by tensor size plus the sender/receiver time split across
+//! device-copy / serialize / network.
+//!
+//! Paper numbers for shape comparison: ≈147 MB/s at 400 KB tensors; up
+//! to 45% of sender time and 53% of receiver time spent in the copy +
+//! serialize stages. Our "device" copy is a 3 GB/s-paced memcpy
+//! (DESIGN.md documents the PCIe substitution).
+
+use multiworld::baselines::msgbus::{Broker, BusClient, DeviceStage};
+use multiworld::bench::Table;
+use multiworld::tensor::Tensor;
+use multiworld::util::fmt_rate;
+use multiworld::util::prng::Rng;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
+    let sizes: [(usize, &str); 4] =
+        [(1_000, "4K"), (10_000, "40K"), (100_000, "400K"), (1_000_000, "4M")];
+    let mut table = Table::new(
+        "Fig 1 — tensor forwarding via message bus",
+        &["size", "throughput", "send copy%", "send ser%", "recv copy%", "recv ser%"],
+    );
+    for (elems, label) in sizes {
+        let msgs = if quick { 16 } else { 64.min(20_000_000 / (elems * 4)).max(8) };
+        let broker = Broker::start().unwrap();
+        let producer = BusClient::connect(broker.addr(), DeviceStage::pcie()).unwrap();
+        let consumer = BusClient::connect(broker.addr(), DeviceStage::pcie()).unwrap();
+        let mut rng = Rng::new(1);
+        let t = Tensor::f32_1d(elems, &mut rng);
+        let topic = format!("acts-{label}");
+        let bytes = (elems * 4 * msgs) as f64;
+        let t0 = Instant::now();
+        let feeder = std::thread::spawn(move || {
+            for _ in 0..msgs {
+                producer.publish_tensor(&topic, &t).unwrap();
+            }
+            producer
+        });
+        let topic2 = format!("acts-{label}");
+        for k in 0..msgs {
+            consumer
+                .fetch_tensor(&topic2, k as u64, Duration::from_secs(30))
+                .unwrap()
+                .expect("record");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let producer = feeder.join().unwrap();
+        let split = |c: &BusClient| {
+            let copy = *c.time_copy.lock().unwrap();
+            let ser = *c.time_serialize.lock().unwrap();
+            let net = *c.time_network.lock().unwrap();
+            let total = (copy + ser + net).max(1e-12);
+            (100.0 * copy / total, 100.0 * ser / total)
+        };
+        let (s_copy, s_ser) = split(&producer);
+        let (r_copy, r_ser) = split(&consumer);
+        table.row(&[
+            label.to_string(),
+            fmt_rate(bytes / dt),
+            format!("{s_copy:.0}%"),
+            format!("{s_ser:.0}%"),
+            format!("{r_copy:.0}%"),
+            format!("{r_ser:.0}%"),
+        ]);
+    }
+    table.emit("fig1_msgbus");
+    println!("paper shape: ~147 MB/s @400K; copy+serialize ≈45% send / ≈53% recv");
+}

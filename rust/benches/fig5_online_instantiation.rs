@@ -1,0 +1,210 @@
+//! Figure 5 — online instantiation. A leader receives 4 MB tensors from
+//! W1-R1 at full speed; part-way through, it initializes W2 on a
+//! separate thread (blocking rendezvous), the W2-R1 joiner arrives
+//! later, and both stream concurrently.
+//!
+//! Reproduced shape: W1 throughput is *unaffected* while the leader
+//! waits for W2's joiner (the init blocks only its own thread); the
+//! join itself takes ~tens of ms; after the join both worlds stream at
+//! roughly equal rates. Absolute GB/s is CPU memcpy, not NVLink.
+
+use multiworld::bench::write_csv;
+use multiworld::metrics::Timeline;
+use multiworld::multiworld::{StatePolicy, WatchdogConfig, WorldManager};
+use multiworld::mwccl::{Rendezvous, World, WorldOptions};
+use multiworld::tensor::Tensor;
+use multiworld::util::fmt_rate;
+use multiworld::util::time::since_epoch;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ELEMS: usize = 1_000_000; // "a 32-bit floating point tensor whose length is 1M" = 4 MB
+const WINDOW: usize = 25; // tensors per throughput sample (paper: 5000)
+
+fn uniq(p: &str) -> String {
+    static N: AtomicU64 = AtomicU64::new(0);
+    format!("{p}-{}-{}", std::process::id(), N.fetch_add(1, Ordering::Relaxed))
+}
+
+fn spam(world: World, stop: Arc<AtomicBool>) {
+    // Publish watchdog heartbeats like a real MultiWorld worker would
+    // (the leader's watchdog monitors this world's store).
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let store = world.store();
+        let name = world.name().to_string();
+        let rank = world.rank();
+        let hb_stop = hb_stop.clone();
+        std::thread::spawn(move || {
+            if let Some(store) = store {
+                while !hb_stop.load(Ordering::Relaxed) {
+                    let now = multiworld::util::time::unix_millis();
+                    let _ = store.set(&format!("mw/{name}/hb/{rank}"), now.to_string().as_bytes());
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        })
+    };
+    let mut rng = multiworld::util::prng::Rng::new(world.rank() as u64);
+    let t = Tensor::f32_1d(ELEMS, &mut rng);
+    let mut k = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        if world.send(t.clone(), 0, k).is_err() {
+            break;
+        }
+        k += 1;
+    }
+    hb_stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+}
+
+/// Drain `n` tensors from a world, recording a throughput point per
+/// WINDOW into the timeline.
+struct Drainer {
+    series: &'static str,
+    window_start: Instant,
+    in_window: usize,
+}
+
+impl Drainer {
+    fn new(series: &'static str) -> Self {
+        Drainer { series, window_start: Instant::now(), in_window: 0 }
+    }
+
+    fn on_tensor(&mut self, tl: &Timeline) {
+        self.in_window += 1;
+        if self.in_window == WINDOW {
+            let dt = self.window_start.elapsed().as_secs_f64();
+            let bps = (WINDOW * ELEMS * 4) as f64 / dt;
+            tl.record(self.series, bps / 1e9); // GB/s
+            self.in_window = 0;
+            self.window_start = Instant::now();
+        }
+    }
+}
+
+fn main() {
+    let tl = Timeline::new();
+    let mgr = WorldManager::with_options(
+        StatePolicy::Kv,
+        WatchdogConfig::default(),
+        multiworld::util::time::Clock::system(),
+    );
+    let comm = mgr.communicator();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // W1 up, streaming.
+    let w1 = uniq("fig5-w1");
+    let worlds = Rendezvous::single_process(&w1, 2, WorldOptions::shm()).unwrap();
+    let mut it = worlds.into_iter();
+    mgr.adopt(it.next().unwrap()).unwrap();
+    let w1_peer = it.next().unwrap();
+    let stop1 = stop.clone();
+    let s1 = std::thread::spawn(move || spam(w1_peer, stop1));
+    tl.record_labeled("event", 1.0, "W1 initialized");
+
+    // Leader drains W1; W2 init fires at +1 s; joiner arrives at +2 s.
+    let w2 = uniq("fig5-w2");
+    let port = multiworld::util::free_port();
+    let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+    let t0 = since_epoch();
+    let mut d1 = Drainer::new("W1-R1");
+    let mut d2 = Drainer::new("W2-R1");
+    let mut k1 = 0u64;
+    let mut k2 = 0u64;
+    let mut init_handle = None;
+    let mut joiner: Option<std::thread::JoinHandle<World>> = None;
+    let mut join_started = None;
+    let mut w2_live = false;
+    let mut s2: Option<std::thread::JoinHandle<()>> = None;
+    let mut pending = vec![(1u8, comm.recv(&w1, 1, k1).unwrap())];
+    k1 += 1;
+
+    let run_for = 5.0;
+    while since_epoch() - t0 < run_for {
+        let now = since_epoch() - t0;
+        if now >= 1.0 && init_handle.is_none() {
+            // Paper: leader initializes W2 at the 10 s mark (scaled).
+            init_handle = Some(mgr.initialize_world_async(&w2, 0, 2, addr, WorldOptions::shm()));
+            tl.record_labeled("event", 1.0, "leader starts W2 init (async)");
+        }
+        if now >= 2.0 && joiner.is_none() {
+            // Paper: W2-R1 joins at the 20 s mark; the join takes ~20 ms.
+            let w2n = w2.clone();
+            join_started = Some(Instant::now());
+            joiner = Some(std::thread::spawn(move || {
+                World::init(&w2n, 1, 2, addr, WorldOptions::shm()).unwrap()
+            }));
+            tl.record_labeled("event", 1.0, "W2-R1 joining");
+        }
+        if let Some(h) = &init_handle {
+            if h.is_done() && !w2_live {
+                let join_ms = join_started
+                    .map(|t| t.elapsed().as_secs_f64() * 1e3)
+                    .unwrap_or(0.0);
+                tl.record_labeled("event", 1.0, &format!("W2 join complete ({join_ms:.0} ms)"));
+                println!("join took {join_ms:.1} ms (paper: ≈20 ms)");
+                w2_live = true;
+                let peer = joiner.take().unwrap().join().unwrap();
+                let stop2 = stop.clone();
+                s2 = Some(std::thread::spawn(move || spam(peer, stop2)));
+                pending.push((2u8, comm.recv(&w2, 1, k2).unwrap()));
+                k2 += 1;
+            }
+        }
+        // Drain whichever world has data.
+        let works: Vec<_> = pending.iter().map(|(_, w)| w.clone()).collect();
+        if let Some(idx) = comm.wait_any_deadline(&works, Some(Duration::from_millis(10))) {
+            let (which, work) = pending.swap_remove(idx);
+            if work.wait().is_ok() {
+                if which == 1 {
+                    d1.on_tensor(&tl);
+                    pending.push((1, comm.recv(&w1, 1, k1).unwrap()));
+                    k1 += 1;
+                } else {
+                    d2.on_tensor(&tl);
+                    pending.push((2, comm.recv(&w2, 1, k2).unwrap()));
+                    k2 += 1;
+                }
+            }
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    // Drain remaining sends so sender threads can exit.
+    drop(pending);
+    let _ = s1.join();
+    if let Some(s) = s2 {
+        let _ = s.join();
+    }
+
+    // Report.
+    println!("\n=== Fig 5 — online instantiation (time scaled 10×, {} MB tensors) ===", ELEMS * 4 / 1_000_000);
+    let mean = |pts: &[multiworld::metrics::TimelinePoint]| {
+        if pts.is_empty() { 0.0 } else { pts.iter().map(|p| p.value).sum::<f64>() / pts.len() as f64 }
+    };
+    let w1_pts = tl.series("W1-R1");
+    let before: Vec<_> = w1_pts.iter().filter(|p| p.t - t0 < 1.0).cloned().collect();
+    let waiting: Vec<_> = w1_pts
+        .iter()
+        .filter(|p| p.t - t0 >= 1.0 && p.t - t0 < 2.0)
+        .cloned()
+        .collect();
+    let after: Vec<_> = w1_pts.iter().filter(|p| p.t - t0 >= 2.5).cloned().collect();
+    let w2_after: Vec<_> = tl.series("W2-R1").iter().filter(|p| p.t - t0 >= 2.5).cloned().collect();
+    println!("W1 throughput before init     : {}", fmt_rate(mean(&before) * 1e9));
+    println!("W1 throughput while waiting   : {}", fmt_rate(mean(&waiting) * 1e9));
+    println!("W1 throughput after W2 joined : {}", fmt_rate(mean(&after) * 1e9));
+    println!("W2 throughput after joining   : {}", fmt_rate(mean(&w2_after) * 1e9));
+    write_csv("fig5_online_instantiation", &tl.to_csv());
+
+    // Shape assertions: waiting-phase throughput within 25% of before;
+    // both worlds produce data after the join.
+    if mean(&before) > 0.0 {
+        let ratio = mean(&waiting) / mean(&before);
+        println!("W1 while-waiting / before ratio: {ratio:.2} (paper: ≈1.0)");
+        assert!(ratio > 0.5, "W1 must not stall while leader waits for W2 (ratio {ratio:.2})");
+    }
+    assert!(!w2_after.is_empty(), "W2 must stream after joining");
+    println!("shape assertions passed ✓");
+}

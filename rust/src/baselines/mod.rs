@@ -1,0 +1,17 @@
+//! The paper's comparison systems, implemented for real:
+//!
+//! * [`singleworld`] — "SW": vanilla CCL usage, one world for the whole
+//!   job. No MultiWorld layer, no watchdog, no per-op state activation —
+//!   the lowest-overhead datapoint in Figs 6/7, and the architecture
+//!   whose single fault domain Fig 4 (left) exposes.
+//! * [`multiproc`] — "MP": the alternative MultiWorld architecture the
+//!   paper implements and rejects: a main process with one *subprocess
+//!   per world*, tensors crossing the process boundary over pipe IPC
+//!   with serialization both ways (Fig 6's worst line at small sizes).
+//! * [`msgbus`] — the Kafka-style message bus of Fig 1: a broker
+//!   process, produce/consume over TCP, mandatory serialize +
+//!   (simulated) GPU↔CPU staging copies.
+
+pub mod msgbus;
+pub mod multiproc;
+pub mod singleworld;

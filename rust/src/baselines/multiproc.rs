@@ -1,0 +1,181 @@
+//! The MultiProcessing ("MP") baseline — the alternative MultiWorld
+//! architecture the paper evaluates and rejects (§4.3): instead of one
+//! process holding many worlds, a *main* process delegates each world to
+//! a dedicated **subprocess**, moving every tensor across the process
+//! boundary through pipe IPC (serialize → pipe write → pipe read →
+//! deserialize) before it ever reaches the CCL.
+//!
+//! The extra IPC hop is exactly why MP loses at small tensor sizes in
+//! Fig. 6 (and only approaches MW/SW at 4 MB on the bandwidth-limited
+//! host-to-host path).
+//!
+//! Implementation: [`MpEndpoint::spawn`] launches `multiworld mp-proxy`,
+//! a child that joins the world as the given rank and shuttles framed
+//! tensors between its stdin/stdout and the CCL. The main process talks
+//! to the child exclusively through those pipes.
+
+use crate::tensor::{read_tensor, write_tensor, Tensor};
+use std::io::{BufReader, BufWriter, Write};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+
+/// Locate the `multiworld` binary for spawning proxies from tests and
+/// benches (their `current_exe` is the test harness, not our CLI).
+pub fn multiworld_bin() -> anyhow::Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("MW_BIN") {
+        return Ok(p.into());
+    }
+    let exe = std::env::current_exe()?;
+    // target/{debug,release}/deps/<test> -> target/{debug,release}/multiworld
+    for dir in [exe.parent(), exe.parent().and_then(|p| p.parent())]
+        .into_iter()
+        .flatten()
+    {
+        let cand = dir.join("multiworld");
+        if cand.exists() {
+            return Ok(cand);
+        }
+    }
+    anyhow::bail!(
+        "multiworld binary not found near {} (build it or set MW_BIN)",
+        exe.display()
+    )
+}
+
+/// Main-process handle to one world's proxy subprocess.
+pub struct MpEndpoint {
+    child: Child,
+    stdin: Option<BufWriter<ChildStdin>>,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl MpEndpoint {
+    /// Spawn the proxy: it joins `world` as `rank` (of 2) over the given
+    /// transport, with the per-world store on `store_port`.
+    pub fn spawn(
+        world: &str,
+        rank: usize,
+        store_port: u16,
+        transport: &str,
+    ) -> anyhow::Result<MpEndpoint> {
+        let bin = multiworld_bin()?;
+        let mut child = Command::new(bin)
+            .arg("mp-proxy")
+            .arg("--world")
+            .arg(world)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--store-port")
+            .arg(store_port.to_string())
+            .arg("--transport")
+            .arg(transport)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()?;
+        let stdin = Some(BufWriter::new(child.stdin.take().expect("proxy stdin")));
+        let stdout = BufReader::new(child.stdout.take().expect("proxy stdout"));
+        Ok(MpEndpoint { child, stdin, stdout })
+    }
+
+    /// Ship a tensor to the peer: serialize across the IPC pipe; the
+    /// proxy forwards it through the CCL.
+    pub fn send_tensor(&mut self, t: &Tensor) -> anyhow::Result<()> {
+        let stdin = self
+            .stdin
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("endpoint already shut down"))?;
+        write_tensor(stdin, t)?;
+        stdin.flush()?;
+        Ok(())
+    }
+
+    /// Receive a tensor the proxy pulled from the CCL (deserialized off
+    /// the IPC pipe).
+    pub fn recv_tensor(&mut self) -> anyhow::Result<Tensor> {
+        read_tensor(&mut self.stdout)
+    }
+
+    /// Close stdin (EOF → proxy drains and exits) and reap.
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        drop(self.stdin.take());
+        let _ = self.child.wait()?;
+        Ok(())
+    }
+
+    /// Hard-kill the proxy (failure injection).
+    pub fn kill(mut self) -> anyhow::Result<()> {
+        self.child.kill()?;
+        let _ = self.child.wait();
+        Ok(())
+    }
+}
+
+impl Drop for MpEndpoint {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The proxy-side loop (runs inside `multiworld mp-proxy`): stdin →
+/// world.send, world.recv → stdout, independent tag streams, until
+/// stdin EOF or a CCL error.
+pub fn run_proxy(
+    world_name: &str,
+    rank: usize,
+    store_port: u16,
+    transport: &str,
+) -> anyhow::Result<()> {
+    use crate::mwccl::{World, WorldOptions};
+    let opts = match transport {
+        "tcp" => WorldOptions::tcp(),
+        "shm" => WorldOptions::shm(),
+        other => anyhow::bail!("unknown transport {other}"),
+    };
+    let addr: std::net::SocketAddr = format!("127.0.0.1:{store_port}").parse()?;
+    let world = World::init(world_name, rank, 2, addr, opts)
+        .map_err(|e| anyhow::anyhow!("proxy init: {e}"))?;
+    let peer = 1 - rank;
+
+    // Downlink: CCL → stdout.
+    let w2 = world.clone();
+    let down = std::thread::Builder::new()
+        .name("mp-proxy-down".into())
+        .spawn(move || -> anyhow::Result<()> {
+            let stdout = std::io::stdout();
+            let mut out = BufWriter::new(stdout.lock());
+            let mut tag = 0u64;
+            loop {
+                match w2.recv(peer, tag) {
+                    Ok(t) => {
+                        write_tensor(&mut out, &t)?;
+                        out.flush()?;
+                        tag += 1;
+                    }
+                    Err(_) => return Ok(()), // world gone — exit quietly
+                }
+            }
+        })?;
+
+    // Uplink: stdin → CCL.
+    let stdin = std::io::stdin();
+    let mut input = BufReader::new(stdin.lock());
+    let mut tag = 0u64;
+    loop {
+        match read_tensor(&mut input) {
+            Ok(t) => {
+                world
+                    .send(t, peer, tag)
+                    .map_err(|e| anyhow::anyhow!("proxy send: {e}"))?;
+                tag += 1;
+            }
+            Err(_) => break, // EOF from the main process
+        }
+    }
+    // The downlink thread holds a World clone, so a plain drop would not
+    // tear the links down — abort explicitly to unblock its recv.
+    world.abort("proxy stdin closed");
+    drop(world);
+    let _ = down.join();
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! A criterion-free benchmark harness.
+//!
+//! `cargo bench` targets in this repo are `harness = false` binaries that
+//! use [`BenchRunner`] for timing (warmup + measured iterations, robust
+//! stats) and [`Table`] to print the paper-figure rows. Results are also
+//! dumped as CSV under `target/bench-results/` so EXPERIMENTS.md can
+//! reference exact numbers.
+
+pub mod scenarios;
+pub mod stats;
+
+pub use stats::Summary;
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Timing harness: run a closure for `warmup` then `iters` measured
+/// passes and summarize.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub iters: usize,
+    /// Hard cap on measurement wallclock; stops early if exceeded.
+    pub max_time: Duration,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 3, iters: 10, max_time: Duration::from_secs(30) }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        BenchRunner { warmup: 1, iters: 5, max_time: Duration::from_secs(10) }
+    }
+
+    /// Honor `MW_BENCH_QUICK=1` for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f` (which should perform one complete unit of work and may
+    /// return a per-iteration byte count for throughput summaries).
+    pub fn run<F: FnMut() -> u64>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let mut bytes = 0u64;
+        let start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            bytes = f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if start.elapsed() > self.max_time {
+                break;
+            }
+        }
+        Summary::from_samples(&samples, bytes)
+    }
+}
+
+/// A printable results table, matching the rows of one paper figure.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, "{:<w$}  ", c, w = widths[i]);
+            }
+            s.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and persist CSV under `target/bench-results/`.
+    pub fn emit(&self, csv_name: &str) {
+        print!("{}", self.render());
+        let mut csv = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            csv.push_str(&row.join(","));
+            csv.push('\n');
+        }
+        let dir = results_dir();
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(format!("{csv_name}.csv"));
+        if std::fs::write(&path, &csv).is_ok() {
+            println!("[csv] {}", path.display());
+        }
+    }
+}
+
+/// Where bench CSVs land.
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("target/bench-results")
+}
+
+/// Persist an arbitrary CSV (used by the timeline figures).
+pub fn write_csv(name: &str, content: &str) {
+    let dir = results_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.csv"));
+    if std::fs::write(&path, content).is_ok() {
+        println!("[csv] {}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_collects_samples() {
+        let r = BenchRunner { warmup: 1, iters: 4, max_time: Duration::from_secs(5) };
+        let s = r.run(|| {
+            std::thread::sleep(Duration::from_millis(2));
+            1024
+        });
+        assert_eq!(s.n, 4);
+        assert!(s.mean >= 0.002);
+        assert!(s.throughput_bps(1024) > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["size", "MW", "SW"]);
+        t.row(&["4K".into(), "1.00".into(), "1.02".into()]);
+        t.row(&["4M".into(), "15.40".into(), "15.90".into()]);
+        let s = t.render();
+        assert!(s.contains("=== Fig X ==="));
+        assert!(s.contains("4M"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Summary statistics for benchmark samples.
+
+/// Robust summary of a set of duration samples (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    /// Bytes moved per iteration (0 if not a throughput bench).
+    pub bytes_per_iter: u64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64], bytes_per_iter: u64) -> Self {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile(&sorted, 0.50),
+            p90: percentile(&sorted, 0.90),
+            p99: percentile(&sorted, 0.99),
+            bytes_per_iter,
+        }
+    }
+
+    /// Mean throughput for `bytes` per iteration.
+    pub fn throughput_bps(&self, bytes: u64) -> f64 {
+        if self.mean <= 0.0 {
+            0.0
+        } else {
+            bytes as f64 / self.mean
+        }
+    }
+
+    /// Throughput using the recorded per-iteration byte count.
+    pub fn throughput(&self) -> f64 {
+        self.throughput_bps(self.bytes_per_iter)
+    }
+}
+
+/// Linear-interpolated percentile of pre-sorted data.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_samples() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0], 100);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+        assert!((s.throughput_bps(100) - 40.0).abs() < 1e-9);
+        assert!((s.throughput() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 1.0), 50.0);
+        assert!((percentile(&xs, 0.5) - 30.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.25) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = Summary::from_samples(&[], 0);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.throughput_bps(100), 0.0);
+    }
+
+    #[test]
+    fn std_is_zero_for_constant() {
+        let s = Summary::from_samples(&[2.0, 2.0, 2.0], 0);
+        assert!(s.std.abs() < 1e-12);
+    }
+}

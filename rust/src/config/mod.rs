@@ -1,0 +1,228 @@
+//! Configuration: the AOT model manifest (written by
+//! `python/compile/aot.py`) and the serving topology spec consumed by the
+//! launcher. Both are JSON parsed with [`crate::util::json`] — no serde
+//! in the offline registry.
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled pipeline stage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    pub name: String,
+    /// Path to the HLO text artifact, relative to the manifest dir.
+    pub hlo: PathBuf,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub in_dtype: DType,
+    pub out_dtype: DType,
+    /// Parameter count (for logs/roofline estimates).
+    pub params: u64,
+}
+
+/// The model manifest: an ordered list of stages plus model metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelManifest {
+    pub model: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub stages: Vec<StageSpec>,
+    /// Directory the manifest was loaded from (artifact paths resolve
+    /// against this).
+    pub base_dir: PathBuf,
+}
+
+impl ModelManifest {
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let base_dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Self::parse(&text, base_dir)
+    }
+
+    pub fn parse(text: &str, base_dir: PathBuf) -> anyhow::Result<Self> {
+        let j = Json::parse(text)?;
+        let req_num = |j: &Json, k: &str| -> anyhow::Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing numeric '{k}'"))
+        };
+        let req_str = |j: &Json, k: &str| -> anyhow::Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing string '{k}'"))
+        };
+        let shape_of = |j: &Json, k: &str| -> anyhow::Result<Vec<usize>> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .ok_or_else(|| anyhow::anyhow!("stage missing shape '{k}'"))
+        };
+        let stages_json = j
+            .get("stages")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'stages'"))?;
+        let mut stages = Vec::with_capacity(stages_json.len());
+        for s in stages_json {
+            stages.push(StageSpec {
+                name: req_str(s, "name")?,
+                hlo: PathBuf::from(req_str(s, "hlo")?),
+                in_shape: shape_of(s, "in_shape")?,
+                out_shape: shape_of(s, "out_shape")?,
+                in_dtype: DType::from_name(&req_str(s, "in_dtype")?)?,
+                out_dtype: DType::from_name(&req_str(s, "out_dtype")?)?,
+                params: s.get("params").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+            });
+        }
+        anyhow::ensure!(!stages.is_empty(), "manifest has no stages");
+        // Adjacent stages must agree on the activation shape.
+        for w in stages.windows(2) {
+            anyhow::ensure!(
+                w[0].out_shape == w[1].in_shape && w[0].out_dtype == w[1].in_dtype,
+                "stage boundary mismatch: {} out {:?} vs {} in {:?}",
+                w[0].name,
+                w[0].out_shape,
+                w[1].name,
+                w[1].in_shape
+            );
+        }
+        Ok(ModelManifest {
+            model: req_str(&j, "model")?,
+            d_model: req_num(&j, "d_model")?,
+            n_layers: req_num(&j, "n_layers")?,
+            vocab: req_num(&j, "vocab")?,
+            seq_len: req_num(&j, "seq_len")?,
+            batch: req_num(&j, "batch")?,
+            stages,
+            base_dir,
+        })
+    }
+
+    /// Absolute path of a stage's HLO artifact.
+    pub fn hlo_path(&self, stage: &StageSpec) -> PathBuf {
+        if stage.hlo.is_absolute() {
+            stage.hlo.clone()
+        } else {
+            self.base_dir.join(&stage.hlo)
+        }
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.stages.iter().map(|s| s.params).sum()
+    }
+}
+
+/// Serving/runtime knobs with environment overrides, shared by examples
+/// and benches.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Max requests fused into one batch by the dynamic batcher.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_timeout_ms: u64,
+    /// Watchdog heartbeat period.
+    pub heartbeat_ms: u64,
+    /// Heartbeats missed before a world is declared broken (paper: ~3 s
+    /// at 1 Hz ⇒ 3 misses).
+    pub miss_threshold: u32,
+    /// Per-replica inflight cap before the router backpressures.
+    pub replica_inflight: usize,
+    /// Scale-out trigger: queue depth per healthy replica.
+    pub scale_up_queue_depth: usize,
+    /// Scale-in trigger: utilization below this for `scale_window_ms`.
+    pub scale_down_util: f64,
+    pub scale_window_ms: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_batch: 8,
+            batch_timeout_ms: 5,
+            heartbeat_ms: 250,
+            miss_threshold: 3,
+            replica_inflight: 4,
+            scale_up_queue_depth: 16,
+            scale_down_util: 0.2,
+            scale_window_ms: 2_000,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Apply `MW_*` environment overrides.
+    pub fn from_env() -> Self {
+        let mut c = Self::default();
+        let get = |k: &str| std::env::var(k).ok();
+        if let Some(v) = get("MW_MAX_BATCH").and_then(|s| s.parse().ok()) {
+            c.max_batch = v;
+        }
+        if let Some(v) = get("MW_BATCH_TIMEOUT_MS").and_then(|s| s.parse().ok()) {
+            c.batch_timeout_ms = v;
+        }
+        if let Some(v) = get("MW_HEARTBEAT_MS").and_then(|s| s.parse().ok()) {
+            c.heartbeat_ms = v;
+        }
+        if let Some(v) = get("MW_MISS_THRESHOLD").and_then(|s| s.parse().ok()) {
+            c.miss_threshold = v;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "model": "tiny-transformer",
+      "d_model": 64, "n_layers": 4, "vocab": 256, "seq_len": 16, "batch": 8,
+      "stages": [
+        {"name": "stage_0", "hlo": "stage_0.hlo.txt",
+         "in_shape": [8, 16], "out_shape": [8, 16, 64],
+         "in_dtype": "i32", "out_dtype": "f32", "params": 16384},
+        {"name": "stage_1", "hlo": "stage_1.hlo.txt",
+         "in_shape": [8, 16, 64], "out_shape": [8, 16, 64],
+         "in_dtype": "f32", "out_dtype": "f32", "params": 99000},
+        {"name": "stage_2", "hlo": "stage_2.hlo.txt",
+         "in_shape": [8, 16, 64], "out_shape": [8, 16, 256],
+         "in_dtype": "f32", "out_dtype": "f32", "params": 16640}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = ModelManifest::parse(MANIFEST, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.model, "tiny-transformer");
+        assert_eq!(m.stages.len(), 3);
+        assert_eq!(m.stages[0].in_dtype, DType::I32);
+        assert_eq!(m.total_params(), 16384 + 99000 + 16640);
+        assert_eq!(m.hlo_path(&m.stages[1]), PathBuf::from("/tmp/a/stage_1.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_boundary_mismatch() {
+        let bad = MANIFEST.replace("\"out_shape\": [8, 16, 64],\n         \"in_dtype\": \"i32\"", "\"out_shape\": [8, 16, 32],\n         \"in_dtype\": \"i32\"");
+        assert!(bad.contains("[8, 16, 32]"), "test setup: replacement applied");
+        assert!(ModelManifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_stages() {
+        let bad = r#"{"model":"m","d_model":1,"n_layers":1,"vocab":1,"seq_len":1,"batch":1,"stages":[]}"#;
+        assert!(ModelManifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn serving_config_defaults() {
+        let c = ServingConfig::default();
+        assert_eq!(c.miss_threshold, 3);
+        assert!(c.max_batch >= 1);
+    }
+}

@@ -1,0 +1,210 @@
+//! Cluster control plane: topology updates and failure reports over a
+//! shared TCPStore, so worker *processes* learn about online
+//! instantiation without any connection to the leader's address space.
+//!
+//! Keys:
+//! ```text
+//!   ctl/seq                  counter of published updates
+//!   ctl/update/<n>           JSON: {"kind":"add_world"|"shutdown", world def…}
+//!   ctl/broken/<world>       failure report (world name → reason)
+//! ```
+
+use crate::serving::stage_worker::TopoUpdate;
+use crate::serving::topology::WorldDef;
+use crate::serving::NodeId;
+use crate::store::StoreClient;
+use crate::util::json::Json;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Publisher/subscriber over the cluster store.
+pub struct ControlPlane {
+    store: Arc<StoreClient>,
+}
+
+impl ControlPlane {
+    pub fn connect(addr: SocketAddr, timeout: Duration) -> anyhow::Result<ControlPlane> {
+        Ok(ControlPlane { store: Arc::new(StoreClient::connect(addr, timeout)?) })
+    }
+
+    pub fn from_store(store: Arc<StoreClient>) -> ControlPlane {
+        ControlPlane { store }
+    }
+
+    /// Publish a world-add update (online instantiation). Every node
+    /// sees it; nodes that aren't members ignore it.
+    pub fn publish_add_world(&self, def: &WorldDef) -> anyhow::Result<()> {
+        let j = Json::obj(vec![
+            ("kind", Json::str("add_world")),
+            ("name", Json::str(def.name.clone())),
+            ("up", Json::str(def.members[0].to_string())),
+            ("down", Json::str(def.members[1].to_string())),
+            ("store_port", Json::num(def.store_port as f64)),
+        ]);
+        self.publish(&j.to_string())
+    }
+
+    /// Publish a shutdown for one node (scale-in) or all (`None`).
+    pub fn publish_shutdown(&self, node: Option<NodeId>) -> anyhow::Result<()> {
+        let target = node.map(|n| n.to_string()).unwrap_or_else(|| "*".into());
+        let j = Json::obj(vec![
+            ("kind", Json::str("shutdown")),
+            ("node", Json::str(target)),
+        ]);
+        self.publish(&j.to_string())
+    }
+
+    fn publish(&self, payload: &str) -> anyhow::Result<()> {
+        let n = self.store.add("ctl/seq", 1)?;
+        self.store.set(&format!("ctl/update/{n}"), payload.as_bytes())?;
+        Ok(())
+    }
+
+    /// Report a broken world (workers call this so the controller can
+    /// see mid-pipeline failures it isn't a member of).
+    pub fn report_broken(&self, world: &str, reason: &str) -> anyhow::Result<()> {
+        self.store
+            .set(&format!("ctl/broken/{world}"), reason.as_bytes())?;
+        Ok(())
+    }
+
+    /// Broken worlds reported so far.
+    pub fn broken_worlds(&self) -> anyhow::Result<Vec<String>> {
+        Ok(self
+            .store
+            .keys("ctl/broken/")?
+            .into_iter()
+            .filter_map(|k| k.strip_prefix("ctl/broken/").map(|s| s.to_string()))
+            .collect())
+    }
+
+    /// Spawn a listener thread translating published updates into
+    /// `TopoUpdate`s for `node`, delivered on `tx`. Returns a stop flag.
+    pub fn listen(
+        &self,
+        node: NodeId,
+        tx: Sender<TopoUpdate>,
+    ) -> Arc<AtomicBool> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let store = self.store.clone();
+        std::thread::Builder::new()
+            .name(format!("ctl-listen-{node}"))
+            .spawn(move || {
+                let mut next: i64 = 1;
+                while !stop2.load(Ordering::Relaxed) {
+                    let key = format!("ctl/update/{next}");
+                    match store.wait(&key, Duration::from_millis(200)) {
+                        Ok(bytes) => {
+                            next += 1;
+                            let Ok(text) = String::from_utf8(bytes) else { continue };
+                            let Ok(j) = Json::parse(&text) else { continue };
+                            match j.get("kind").and_then(|v| v.as_str()) {
+                                Some("add_world") => {
+                                    if let Some(def) = parse_world(&j) {
+                                        if def.rank_of(node).is_some()
+                                            && tx.send(TopoUpdate::AddWorld(def)).is_err()
+                                        {
+                                            return;
+                                        }
+                                    }
+                                }
+                                Some("shutdown") => {
+                                    let target = j.get("node").and_then(|v| v.as_str());
+                                    if target == Some("*")
+                                        || target == Some(node.to_string().as_str())
+                                    {
+                                        let _ = tx.send(TopoUpdate::Shutdown);
+                                        return;
+                                    }
+                                }
+                                _ => {}
+                            }
+                        }
+                        Err(_) => { /* timeout — loop to check stop */ }
+                    }
+                }
+            })
+            .expect("spawn control listener");
+        stop
+    }
+}
+
+fn parse_world(j: &Json) -> Option<WorldDef> {
+    Some(WorldDef {
+        name: j.get("name")?.as_str()?.to_string(),
+        members: [
+            NodeId::parse(j.get("up")?.as_str()?).ok()?,
+            NodeId::parse(j.get("down")?.as_str()?).ok()?,
+        ],
+        store_port: j.get("store_port")?.as_usize()? as u16,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::StoreServer;
+
+    fn plane() -> (StoreServer, ControlPlane) {
+        let server = StoreServer::bind_any().unwrap();
+        let cp = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
+        (server, cp)
+    }
+
+    #[test]
+    fn add_world_reaches_member_only() {
+        let (server, cp) = plane();
+        let member = NodeId::Worker { stage: 1, replica: 0 };
+        let outsider = NodeId::Worker { stage: 2, replica: 5 };
+        let (tx_m, rx_m) = std::sync::mpsc::channel();
+        let (tx_o, rx_o) = std::sync::mpsc::channel();
+        let cp_m = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
+        let cp_o = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
+        let stop_m = cp_m.listen(member, tx_m);
+        let stop_o = cp_o.listen(outsider, tx_o);
+        let def = WorldDef {
+            name: "w-new".into(),
+            members: [NodeId::Leader, member],
+            store_port: 12345,
+        };
+        cp.publish_add_world(&def).unwrap();
+        match rx_m.recv_timeout(Duration::from_secs(2)).unwrap() {
+            TopoUpdate::AddWorld(got) => assert_eq!(got, def),
+            other => panic!("{other:?}"),
+        }
+        assert!(rx_o.recv_timeout(Duration::from_millis(300)).is_err());
+        stop_m.store(true, Ordering::Relaxed);
+        stop_o.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn shutdown_targets_node_or_all() {
+        let (server, cp) = plane();
+        let a = NodeId::Worker { stage: 0, replica: 0 };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cp_a = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
+        let _stop = cp_a.listen(a, tx);
+        cp.publish_shutdown(Some(NodeId::Worker { stage: 9, replica: 9 }))
+            .unwrap();
+        cp.publish_shutdown(Some(a)).unwrap();
+        // The targeted shutdown must arrive (the other is ignored).
+        match rx.recv_timeout(Duration::from_secs(2)).unwrap() {
+            TopoUpdate::Shutdown => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn broken_world_reports_accumulate() {
+        let (_server, cp) = plane();
+        cp.report_broken("w1", "remote error").unwrap();
+        cp.report_broken("w2", "watchdog").unwrap();
+        let mut got = cp.broken_worlds().unwrap();
+        got.sort();
+        assert_eq!(got, vec!["w1".to_string(), "w2".to_string()]);
+    }
+}

@@ -1,0 +1,309 @@
+//! In-process cluster: every pipeline node is a thread with its own
+//! `WorldManager` (its own watchdog, store clients and links) and its
+//! own PJRT engine — the xla wrapper types are not `Send`, so each
+//! worker thread compiles its stage executable itself, exactly as a
+//! worker process would. Faithful down to the transport: killing a
+//! worker drops its sockets and rings exactly like process death (TCP
+//! peers see resets; shm peers see silence until the watchdog fires).
+
+use crate::config::{ModelManifest, ServingConfig};
+use crate::multiworld::{StatePolicy, WatchdogConfig, WorldEvent, WorldManager};
+use crate::mwccl::WorldOptions;
+use crate::runtime::Engine;
+use crate::serving::controller::{Controller, ScalingPolicy, Spawner};
+use crate::serving::stage_worker::{run_stage_worker, StageWorkerConfig, TopoUpdate};
+use crate::serving::topology::{NodeId, Topology, WorldDef};
+use crate::serving::{Leader, WorkerStats};
+use crate::util::time::Clock;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+use std::time::Duration;
+
+struct WorkerHandle {
+    stop: Arc<AtomicBool>,
+    ctrl: Sender<TopoUpdate>,
+    thread: Option<std::thread::JoinHandle<anyhow::Result<WorkerStats>>>,
+}
+
+/// A whole pipeline in one process. See module docs.
+pub struct InProcCluster {
+    pub leader: Arc<Leader>,
+    pub controller: Arc<Controller>,
+    pub manifest: ModelManifest,
+    opts: WorldOptions,
+    workers: Arc<Mutex<HashMap<NodeId, WorkerHandle>>>,
+    forwarders: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+struct SpawnerInner {
+    artifacts: PathBuf,
+    manifest: ModelManifest,
+    opts: WorldOptions,
+    wd_cfg: WatchdogConfig,
+    workers: Arc<Mutex<HashMap<NodeId, WorkerHandle>>>,
+    controller: Mutex<Option<Arc<Controller>>>,
+    topology_template: Topology,
+    /// Broken-world reports from every node, drained into the
+    /// controller once it exists (workers spawn before the controller).
+    broken_tx: Sender<String>,
+}
+
+impl SpawnerInner {
+    /// Start one worker thread that joins exactly `worlds`. The PJRT
+    /// engine and stage executable are created *inside* the thread.
+    fn spawn_node(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()> {
+        let NodeId::Worker { stage, .. } = node else {
+            anyhow::bail!("can only spawn workers");
+        };
+        let spec = self
+            .manifest
+            .stages
+            .get(stage)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no stage {stage} in manifest"))?;
+        let hlo_path = self.manifest.hlo_path(&spec);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (ctrl_tx, ctrl_rx) = std::sync::mpsc::channel();
+        // A private topology containing only this node's worlds.
+        let mut topo = Topology {
+            replicas: self.topology_template.replicas.clone(),
+            worlds,
+            prefix: self.topology_template.prefix.clone(),
+            generation: 0,
+        };
+        topo.worlds.retain(|w| w.rank_of(node).is_some());
+        let opts = self.opts.clone();
+        let wd_cfg = self.wd_cfg.clone();
+        let stop2 = stop.clone();
+        let broken_tx = self.broken_tx.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("worker-{node}"))
+            .spawn(move || -> anyhow::Result<WorkerStats> {
+                // Per-worker PJRT client, like a real worker process.
+                let engine = Engine::cpu()?;
+                let stage_runner = Arc::new(engine.load_stage(&hlo_path, &spec)?);
+                let mgr =
+                    WorldManager::with_options(StatePolicy::Kv, wd_cfg, Clock::system());
+                // Forward this worker's broken-world events to the shared
+                // report channel (mid-pipeline failures are invisible to
+                // the leader otherwise); the cluster drains it into the
+                // controller.
+                {
+                    let events = mgr.subscribe();
+                    std::thread::Builder::new()
+                        .name(format!("evt-fwd-{node}"))
+                        .spawn(move || {
+                            while let Ok(evt) = events.recv() {
+                                if let WorldEvent::Broken { world, .. } = evt {
+                                    if broken_tx.send(world).is_err() {
+                                        return;
+                                    }
+                                }
+                            }
+                        })?;
+                }
+                crate::serving::stage_worker::init_node_worlds(&mgr, &topo, node, &opts)?;
+                run_stage_worker(
+                    mgr,
+                    StageWorkerConfig {
+                        node,
+                        topology: topo,
+                        stage: Some(stage_runner),
+                        opts,
+                        control: Some(ctrl_rx),
+                        stop: stop2,
+                    },
+                )
+            })?;
+        self.workers.lock().unwrap().insert(
+            node,
+            WorkerHandle { stop, ctrl: ctrl_tx, thread: Some(thread) },
+        );
+        Ok(())
+    }
+}
+
+/// Spawner that launches worker threads inside this cluster.
+struct ThreadSpawner {
+    inner: Arc<SpawnerInner>,
+}
+
+impl Spawner for ThreadSpawner {
+    fn spawn(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()> {
+        self.inner.spawn_node(node, worlds)?;
+        // Register the fresh worker's control channel with the controller.
+        if let Some(ctl) = self.inner.controller.lock().unwrap().clone() {
+            if let Some(h) = self.inner.workers.lock().unwrap().get(&node) {
+                ctl.register_worker(node, h.ctrl.clone());
+            }
+        }
+        Ok(())
+    }
+}
+
+impl InProcCluster {
+    /// Bring up leader + all workers of `topo`, wire the controller, and
+    /// wait until every world is established.
+    pub fn start(
+        topo: Topology,
+        artifacts: PathBuf,
+        opts: WorldOptions,
+        policy: ScalingPolicy,
+        serving_cfg: &ServingConfig,
+    ) -> anyhow::Result<InProcCluster> {
+        let manifest = ModelManifest::load(artifacts.join("model.json"))?;
+        let wd_cfg = WatchdogConfig {
+            heartbeat: Duration::from_millis(serving_cfg.heartbeat_ms),
+            miss_threshold: serving_cfg.miss_threshold,
+        };
+        let workers = Arc::new(Mutex::new(HashMap::new()));
+        let (broken_tx, broken_rx) = std::sync::mpsc::channel::<String>();
+        let spawner_inner = Arc::new(SpawnerInner {
+            artifacts: artifacts.clone(),
+            manifest: manifest.clone(),
+            opts: opts.clone(),
+            wd_cfg: wd_cfg.clone(),
+            workers: workers.clone(),
+            controller: Mutex::new(None),
+            topology_template: topo.clone(),
+            broken_tx: broken_tx.clone(),
+        });
+
+        // Workers first (their world inits block until peers arrive, so
+        // spawn all, then the leader joins and everything rendezvouses).
+        for node in topo.workers() {
+            let worlds: Vec<WorldDef> =
+                topo.worlds_of(node).into_iter().cloned().collect();
+            spawner_inner.spawn_node(node, worlds)?;
+        }
+
+        let leader_mgr =
+            WorldManager::with_options(StatePolicy::Kv, wd_cfg, Clock::system());
+        let leader = Leader::new(
+            leader_mgr,
+            &topo,
+            &opts,
+            manifest.batch,
+            manifest.seq_len,
+            manifest.vocab,
+            serving_cfg,
+        )?;
+
+        // Controller wiring.
+        let leader_for_join = leader.clone();
+        let opts_for_join = opts.clone();
+        let controller = Arc::new(Controller::new(
+            topo.clone(),
+            policy,
+            Box::new(ThreadSpawner { inner: spawner_inner.clone() }),
+            move |def| leader_for_join.join_world(def, &opts_for_join),
+        ));
+        *spawner_inner.controller.lock().unwrap() = Some(controller.clone());
+        {
+            let ws = workers.lock().unwrap();
+            for (node, h) in ws.iter() {
+                controller.register_worker(*node, h.ctrl.clone());
+            }
+        }
+
+        // Leader's own broken-world events also feed the report channel…
+        let events = leader.manager().subscribe();
+        let leader_tx = broken_tx.clone();
+        let fwd = std::thread::spawn(move || {
+            while let Ok(evt) = events.recv() {
+                if let WorldEvent::Broken { world, .. } = evt {
+                    if leader_tx.send(world).is_err() {
+                        return;
+                    }
+                }
+            }
+        });
+        // …and one drainer routes every report into the controller
+        // (reports queued before the controller existed included).
+        let ctl2 = controller.clone();
+        let drainer = std::thread::spawn(move || {
+            while let Ok(world) = broken_rx.recv() {
+                if std::env::var("MW_DEBUG").is_ok() {
+                    eprintln!("[cluster] draining broken report: {world}");
+                }
+                let _ = ctl2.on_world_broken(&world);
+            }
+        });
+        let _ = &spawner_inner.artifacts; // reserved for worlds-override spawns
+
+        Ok(InProcCluster {
+            leader,
+            controller,
+            manifest,
+            opts,
+            workers,
+            forwarders: Mutex::new(vec![fwd, drainer]),
+        })
+    }
+
+    /// Abruptly kill a worker: its thread exits without any goodbye, its
+    /// manager drops (heartbeats stop, sockets close). Equivalent to
+    /// SIGKILL at the transport level.
+    pub fn kill(&self, node: NodeId) -> bool {
+        let handle = self.workers.lock().unwrap().remove(&node);
+        match handle {
+            Some(h) => {
+                h.stop.store(true, Ordering::Relaxed);
+                if let Some(t) = h.thread {
+                    let _ = t.join();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Graceful scale-in of a worker (drain + retire).
+    pub fn retire(&self, node: NodeId) -> anyhow::Result<()> {
+        self.controller.scale_in(node)?;
+        if let Some(h) = self.workers.lock().unwrap().remove(&node) {
+            h.stop.store(true, Ordering::Relaxed);
+            if let Some(t) = h.thread {
+                let _ = t.join();
+            }
+        }
+        Ok(())
+    }
+
+    /// Living worker nodes.
+    pub fn live_workers(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.workers.lock().unwrap().keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    pub fn world_options(&self) -> &WorldOptions {
+        &self.opts
+    }
+
+    /// Stop everything (leader worlds drop with the Leader).
+    pub fn shutdown(&self) {
+        let mut ws = self.workers.lock().unwrap();
+        for (_, h) in ws.iter_mut() {
+            h.stop.store(true, Ordering::Relaxed);
+            let _ = h.ctrl.send(TopoUpdate::Shutdown);
+        }
+        for (_, h) in ws.iter_mut() {
+            if let Some(t) = h.thread.take() {
+                let _ = t.join();
+            }
+        }
+        ws.clear();
+        self.forwarders.lock().unwrap().clear();
+    }
+}
+
+impl Drop for InProcCluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,25 @@
+//! Deployment: bring a pipeline topology to life.
+//!
+//! Two launchers share all serving code:
+//!
+//! * [`inproc::InProcCluster`] — every node is a thread in this process.
+//!   Transports, stores, watchdogs and failure signals are the real
+//!   ones (sockets, mmap rings); only the process boundary is
+//!   collapsed. Used by tests and most benches; supports abrupt "kill"
+//!   of a worker.
+//! * [`process::ProcessCluster`] — every worker is a real OS process
+//!   running `multiworld worker`; kill(2) is the failure injector. Used
+//!   by the examples for end-to-end fidelity.
+//!
+//! [`control::ControlPlane`] carries topology updates (online
+//! instantiation) to worker processes through a cluster-wide TCPStore;
+//! in-process workers get the same updates over their mpsc control
+//! channels directly.
+
+pub mod control;
+pub mod inproc;
+pub mod process;
+
+pub use control::ControlPlane;
+pub use inproc::InProcCluster;
+pub use process::ProcessCluster;

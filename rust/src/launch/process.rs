@@ -1,0 +1,147 @@
+//! Process cluster: workers are real OS processes running
+//! `multiworld worker`; failure injection is `SIGKILL`. The leader stays
+//! in the calling process; topology updates reach workers through the
+//! [`super::ControlPlane`] store.
+
+use crate::serving::topology::{NodeId, Topology, WorldDef};
+use crate::store::StoreServer;
+use crate::util::free_port;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+
+/// A worker subprocess.
+struct ProcHandle {
+    child: Child,
+}
+
+/// See module docs.
+pub struct ProcessCluster {
+    pub topology: Topology,
+    pub artifacts: PathBuf,
+    /// Cluster store hosting the control plane.
+    pub cluster_store: Arc<StoreServer>,
+    pub cluster_port: u16,
+    topo_file: PathBuf,
+    procs: Mutex<HashMap<NodeId, ProcHandle>>,
+    transport: String,
+}
+
+impl ProcessCluster {
+    /// Write the topology file, host the cluster store and spawn one
+    /// `multiworld worker` process per worker node. The caller then
+    /// builds its `Leader` against the same topology.
+    pub fn start(
+        topo: Topology,
+        artifacts: PathBuf,
+        transport: &str,
+    ) -> anyhow::Result<ProcessCluster> {
+        let cluster_port = free_port();
+        let cluster_store =
+            Arc::new(StoreServer::bind(&format!("127.0.0.1:{cluster_port}"))?);
+        let topo_file =
+            std::env::temp_dir().join(format!("mw-topo-{}-{cluster_port}.json", std::process::id()));
+        topo.save(&topo_file)?;
+        let cluster = ProcessCluster {
+            topology: topo,
+            artifacts,
+            cluster_store,
+            cluster_port,
+            topo_file,
+            procs: Mutex::new(HashMap::new()),
+            transport: transport.to_string(),
+        };
+        for node in cluster.topology.workers() {
+            cluster.spawn_worker(node, None)?;
+        }
+        Ok(cluster)
+    }
+
+    /// Spawn one worker process. `extra_worlds` (for replacements) is a
+    /// JSON file of additional world defs beyond the topology file.
+    pub fn spawn_worker(
+        &self,
+        node: NodeId,
+        extra_worlds: Option<&[WorldDef]>,
+    ) -> anyhow::Result<()> {
+        let exe = std::env::current_exe()?;
+        let mut cmd = Command::new(exe);
+        cmd.arg("worker")
+            .arg("--topology")
+            .arg(&self.topo_file)
+            .arg("--node")
+            .arg(node.to_string())
+            .arg("--artifacts")
+            .arg(&self.artifacts)
+            .arg("--cluster-port")
+            .arg(self.cluster_port.to_string())
+            .arg("--transport")
+            .arg(&self.transport)
+            .stdout(Stdio::inherit())
+            .stderr(Stdio::inherit());
+        if let Some(worlds) = extra_worlds {
+            // Replacement workers join only their fresh worlds, passed
+            // through a dedicated file.
+            let mut t = Topology {
+                replicas: self.topology.replicas.clone(),
+                worlds: worlds.to_vec(),
+                prefix: self.topology.prefix.clone(),
+                generation: self.topology.generation,
+            };
+            t.worlds.retain(|w| w.rank_of(node).is_some());
+            let path = std::env::temp_dir().join(format!(
+                "mw-worlds-{}-{node}.json",
+                std::process::id()
+            ));
+            t.save(&path)?;
+            cmd.arg("--worlds-override").arg(path);
+        }
+        let child = cmd.spawn()?;
+        self.procs.lock().unwrap().insert(node, ProcHandle { child });
+        Ok(())
+    }
+
+    /// SIGKILL a worker — the real failure injector.
+    pub fn kill(&self, node: NodeId) -> anyhow::Result<bool> {
+        let handle = self.procs.lock().unwrap().remove(&node);
+        match handle {
+            Some(mut h) => {
+                h.child.kill()?;
+                let _ = h.child.wait();
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Wait for a worker to exit by itself (drain/shutdown).
+    pub fn wait(&self, node: NodeId) -> anyhow::Result<Option<i32>> {
+        let handle = self.procs.lock().unwrap().remove(&node);
+        match handle {
+            Some(mut h) => {
+                let status = h.child.wait()?;
+                Ok(status.code())
+            }
+            None => Ok(None),
+        }
+    }
+
+    pub fn live_workers(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.procs.lock().unwrap().keys().copied().collect();
+        v.sort();
+        v
+    }
+}
+
+impl Drop for ProcessCluster {
+    fn drop(&mut self) {
+        let mut procs = self.procs.lock().unwrap();
+        for (_, h) in procs.iter_mut() {
+            let _ = h.child.kill();
+            let _ = h.child.wait();
+        }
+        procs.clear();
+        let _ = std::fs::remove_file(&self.topo_file);
+    }
+}

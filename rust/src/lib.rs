@@ -1,0 +1,53 @@
+//! # MultiWorld — elastic model serving with multi-world collective communication
+//!
+//! Reproduction of *"Enabling Elastic Model Serving with MultiWorld"*
+//! (Lee, Jajoo, Kompella — Cisco Research, CS.DC 2024) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Classic collective communication libraries (CCLs) build a *world*: a
+//! process group with fixed membership that forms a single fault domain.
+//! One worker failure breaks the whole world, and a world can never grow.
+//! MultiWorld lifts both limits by letting a single worker belong to
+//! **many worlds at once** — each pipeline edge becomes its own small
+//! world, so failures are isolated per-edge and new workers join by
+//! creating fresh worlds instead of re-initializing everything.
+//!
+//! ## Layer map
+//!
+//! * [`mwccl`] — the CCL substrate built from scratch: worlds, rendezvous,
+//!   the eight collectives (`send`, `recv`, `broadcast`, `all_reduce`,
+//!   `reduce`, `all_gather`, `gather`, `scatter`), shared-memory and TCP
+//!   transports, and asynchronous [`mwccl::work::Work`] handles.
+//! * [`store`] — a PyTorch-style `TCPStore` (blocking KV over TCP) used
+//!   for rendezvous and watchdog heartbeats.
+//! * [`multiworld`] — the paper's contribution: `WorldManager`,
+//!   `WorldCommunicator` (fault-tolerant async collectives + busy-wait
+//!   poller), `Watchdog`, and per-world state management.
+//! * [`serving`] — the model-serving framework on top: stage pipeline,
+//!   router, dynamic batcher, online-instantiation controller.
+//! * [`baselines`] — single-world (vanilla CCL), MultiProcessing (a
+//!   subprocess per world + pipe IPC) and the Kafka-like message bus.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas stages
+//!   (HLO text → `xla` crate → CPU client); python is never on the
+//!   request path.
+//! * [`launch`] — process topology: spawn workers, kill them, recover.
+//!
+//! Substrates that would normally be crates ([`util::args`],
+//! [`util::json`], [`util::prop`], [`bench`], [`config`], [`metrics`])
+//! are implemented in-tree: the build is fully offline.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod launch;
+pub mod metrics;
+pub mod multiworld;
+pub mod mwccl;
+pub mod runtime;
+pub mod serving;
+pub mod store;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

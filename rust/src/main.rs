@@ -1,0 +1,175 @@
+//! `multiworld` — the CLI: worker processes, the MP proxy, the
+//! end-to-end serve demo and artifact verification.
+//!
+//! The leader/launcher side typically lives in examples and benches;
+//! this binary is what they spawn.
+
+use multiworld::launch::ControlPlane;
+use multiworld::multiworld::{StatePolicy, WatchdogConfig, WorldEvent, WorldManager};
+use multiworld::mwccl::WorldOptions;
+use multiworld::runtime::ModelRuntime;
+use multiworld::serving::stage_worker::{run_stage_worker, StageWorkerConfig};
+use multiworld::serving::topology::{NodeId, Topology};
+use multiworld::util::args::Command;
+use multiworld::util::time::Clock;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cli() -> Command {
+    Command::new("multiworld", "elastic model serving with multi-world CCL")
+        .sub(
+            Command::new("worker", "run one pipeline stage worker")
+                .req("topology", "topology JSON file")
+                .req("node", "node id, e.g. s1r0")
+                .opt("artifacts", "AOT artifacts dir", Some("artifacts"))
+                .opt("cluster-port", "control-plane store port", None)
+                .opt("transport", "shm|tcp", Some("shm"))
+                .opt("worlds-override", "join only the worlds in this file", None)
+                .opt("heartbeat-ms", "watchdog heartbeat", Some("250"))
+                .opt("miss-threshold", "heartbeats missed before broken", Some("3")),
+        )
+        .sub(
+            Command::new("mp-proxy", "MP-baseline world proxy (stdin/stdout IPC)")
+                .req("world", "world name")
+                .req("rank", "rank in the 2-member world")
+                .req("store-port", "per-world store port")
+                .opt("transport", "shm|tcp", Some("shm")),
+        )
+        .sub(
+            Command::new("verify", "load artifacts and check numerics vs the JAX golden")
+                .opt("artifacts", "AOT artifacts dir", Some("artifacts")),
+        )
+        .sub(Command::new("info", "print build/runtime info"))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let matches = match cli().parse(&argv) {
+        Ok(m) => m,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let Some(sub) = matches.sub else {
+        eprintln!("{}", cli().help_text());
+        std::process::exit(2);
+    };
+    let result = match sub.command.as_str() {
+        "worker" => cmd_worker(&sub),
+        "mp-proxy" => cmd_mp_proxy(&sub),
+        "verify" => cmd_verify(&sub),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command {other}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn world_opts(transport: &str) -> anyhow::Result<WorldOptions> {
+    Ok(match transport {
+        "shm" => WorldOptions::shm(),
+        "tcp" => WorldOptions::tcp(),
+        other => anyhow::bail!("unknown transport {other:?}"),
+    })
+}
+
+fn cmd_worker(m: &multiworld::util::args::Matches) -> anyhow::Result<()> {
+    let topo_path = m.get("topology").unwrap();
+    let node = NodeId::parse(m.get("node").unwrap())?;
+    let topo = match m.get("worlds-override") {
+        Some(p) => Topology::load(std::path::Path::new(p))?,
+        None => Topology::load(std::path::Path::new(topo_path))?,
+    };
+    let opts = world_opts(&m.get_or("transport", "shm"))?;
+    let wd = WatchdogConfig {
+        heartbeat: Duration::from_millis(m.u64("heartbeat-ms").map_err(anyhow::Error::msg)?),
+        miss_threshold: m.usize("miss-threshold").map_err(anyhow::Error::msg)? as u32,
+    };
+    let mgr = WorldManager::with_options(StatePolicy::Kv, wd, Clock::system());
+
+    // Stage executable.
+    let NodeId::Worker { stage, .. } = node else {
+        anyhow::bail!("worker command needs a worker node id");
+    };
+    let runtime = ModelRuntime::load(m.get_or("artifacts", "artifacts"))?;
+    let stage_runner = runtime
+        .stages
+        .get(stage)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("stage {stage} not in artifacts"))?;
+
+    // Control plane (process mode): updates + failure reporting.
+    let control = if let Some(port) = m.get("cluster-port") {
+        let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse()?;
+        let cp = ControlPlane::connect(addr, Duration::from_secs(10))?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let _listener_stop = cp.listen(node, tx);
+        // Forward broken-world events to the control plane.
+        let cp2 = ControlPlane::connect(addr, Duration::from_secs(10))?;
+        let events = mgr.subscribe();
+        std::thread::spawn(move || {
+            while let Ok(evt) = events.recv() {
+                if let WorldEvent::Broken { world, reason } = evt {
+                    let _ = cp2.report_broken(&world, &reason);
+                }
+            }
+        });
+        Some(rx)
+    } else {
+        None
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+
+    multiworld::serving::stage_worker::init_node_worlds(&mgr, &topo, node, &opts)?;
+    eprintln!("[worker {node}] worlds up: {:?}", mgr.world_names());
+    let stats = run_stage_worker(
+        mgr,
+        StageWorkerConfig {
+            node,
+            topology: topo,
+            stage: Some(stage_runner),
+            opts,
+            control,
+            stop,
+        },
+    )?;
+    eprintln!("[worker {node}] done: {stats:?}");
+    Ok(())
+}
+
+fn cmd_mp_proxy(m: &multiworld::util::args::Matches) -> anyhow::Result<()> {
+    multiworld::baselines::multiproc::run_proxy(
+        m.get("world").unwrap(),
+        m.usize("rank").map_err(anyhow::Error::msg)?,
+        m.u64("store-port").map_err(anyhow::Error::msg)? as u16,
+        &m.get_or("transport", "shm"),
+    )
+}
+
+fn cmd_verify(m: &multiworld::util::args::Matches) -> anyhow::Result<()> {
+    let dir = m.get_or("artifacts", "artifacts");
+    let rt = ModelRuntime::load(&dir)?;
+    rt.verify_golden(&dir)?;
+    println!(
+        "OK: {} ({} stages, {} params) matches the JAX golden output",
+        rt.manifest.model,
+        rt.manifest.stages.len(),
+        rt.manifest.total_params()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("multiworld {} — CS.DC 2024 reproduction", env!("CARGO_PKG_VERSION"));
+    let engine = multiworld::runtime::Engine::cpu()?;
+    println!("pjrt platform: {}", engine.platform());
+    println!("shm dir: {}", multiworld::mwccl::transport::shm::shm_dir().display());
+    Ok(())
+}

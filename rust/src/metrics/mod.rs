@@ -1,0 +1,320 @@
+//! Lightweight metrics: counters, gauges, histograms and a timestamped
+//! timeline recorder used to regenerate the paper's time-series figures
+//! (Figs 4 and 5).
+
+use crate::util::time::since_epoch;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value.
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with exponential buckets from 1µs to ~68s plus a
+/// running sum/count for exact means.
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i µs, 2^(i+1) µs).
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 27; // 2^26 µs ≈ 67 s
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, dur: std::time::Duration) {
+        self.observe_us(dur.as_micros() as u64);
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// A single named registry shared across a process.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Registry::default())
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Text dump, one metric per line (sorted, stable for tests).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} {}\n", v.get()));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {k} {}\n", v.get()));
+        }
+        for (k, v) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist {k} count={} mean_us={:.1} p50_us={} p99_us={} max_us={}\n",
+                v.count(),
+                v.mean_us(),
+                v.quantile_us(0.50),
+                v.quantile_us(0.99),
+                v.max_us()
+            ));
+        }
+        out
+    }
+}
+
+/// One timestamped event in an experiment timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelinePoint {
+    /// Seconds since the experiment epoch.
+    pub t: f64,
+    /// Series name ("W1-R1", "W2-R1", …) — the paper labels series by
+    /// world-rank identifiers.
+    pub series: String,
+    /// Value (GB/s for throughput plots, 1.0 for event markers).
+    pub value: f64,
+    /// Optional annotation ("join", "failure detected", …).
+    pub label: String,
+}
+
+/// Records (t, series, value) points; dumps CSV that the bench harness
+/// prints for the timeline figures.
+#[derive(Default, Clone)]
+pub struct Timeline {
+    points: Arc<Mutex<Vec<TimelinePoint>>>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, series: &str, value: f64) {
+        self.record_at(since_epoch(), series, value, "");
+    }
+
+    pub fn record_labeled(&self, series: &str, value: f64, label: &str) {
+        self.record_at(since_epoch(), series, value, label);
+    }
+
+    pub fn record_at(&self, t: f64, series: &str, value: f64, label: &str) {
+        self.points.lock().unwrap().push(TimelinePoint {
+            t,
+            series: series.to_string(),
+            value,
+            label: label.to_string(),
+        });
+    }
+
+    pub fn points(&self) -> Vec<TimelinePoint> {
+        self.points.lock().unwrap().clone()
+    }
+
+    /// Points for one series, ordered by time.
+    pub fn series(&self, name: &str) -> Vec<TimelinePoint> {
+        let mut v: Vec<_> = self
+            .points
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|p| p.series == name)
+            .cloned()
+            .collect();
+        v.sort_by(|a, b| a.t.total_cmp(&b.t));
+        v
+    }
+
+    /// CSV dump: `t,series,value,label`.
+    pub fn to_csv(&self) -> String {
+        let mut points = self.points();
+        points.sort_by(|a, b| a.t.total_cmp(&b.t));
+        let mut s = String::from("t_sec,series,value,label\n");
+        for p in points {
+            s.push_str(&format!("{:.3},{},{:.6},{}\n", p.t, p.series, p.value, p.label));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("reqs").inc();
+        r.counter("reqs").add(4);
+        assert_eq!(r.counter("reqs").get(), 5);
+        r.gauge("depth").set(7);
+        r.gauge("depth").add(-2);
+        assert_eq!(r.gauge("depth").get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for us in [10u64, 100, 1_000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.observe_us(us);
+            }
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn histogram_observe_duration() {
+        let h = Histogram::default();
+        h.observe(Duration::from_millis(3));
+        assert_eq!(h.count(), 1);
+        assert!(h.mean_us() >= 3000.0);
+    }
+
+    #[test]
+    fn timeline_series_sorted() {
+        let tl = Timeline::new();
+        tl.record_at(2.0, "W1-R1", 10.0, "");
+        tl.record_at(1.0, "W1-R1", 5.0, "");
+        tl.record_at(1.5, "W2-R1", 7.0, "join");
+        let s = tl.series("W1-R1");
+        assert_eq!(s.len(), 2);
+        assert!(s[0].t < s[1].t);
+        let csv = tl.to_csv();
+        assert!(csv.starts_with("t_sec,series,value,label\n"));
+        assert!(csv.contains("W2-R1"));
+        assert!(csv.contains("join"));
+    }
+
+    #[test]
+    fn registry_render_stable() {
+        let r = Registry::new();
+        r.counter("b").inc();
+        r.counter("a").inc();
+        let out = r.render();
+        let a = out.find("counter a").unwrap();
+        let b = out.find("counter b").unwrap();
+        assert!(a < b);
+    }
+}

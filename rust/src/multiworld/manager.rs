@@ -1,0 +1,328 @@
+//! The World Manager (§3.3): initialization and termination of worlds,
+//! quarantine of broken worlds, and the cleanup pipeline driven by
+//! watchdog alerts.
+
+use super::state::{make_state_manager, StateManager, StatePolicy, WorldState};
+use super::watchdog::{Watchdog, WatchdogConfig};
+use super::{MwError, MwResult, WorldCommunicator};
+use crate::mwccl::{World, WorldOptions};
+use crate::util::time::Clock;
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Size of the simulated communicator blob registered per world (what a
+/// real CCL would keep per communicator: peer endpoints, channel state).
+const COMM_BLOB_BYTES: usize = 16 * 1024;
+
+/// Lifecycle notifications delivered to subscribers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorldEvent {
+    Added(String),
+    /// World broke (watchdog alert or remote error) and was cleaned up.
+    Broken { world: String, reason: String },
+    Removed(String),
+}
+
+type WorldMap = Arc<RwLock<HashMap<String, World>>>;
+type Subscribers = Arc<Mutex<Vec<Sender<WorldEvent>>>>;
+type Tombstones = Arc<Mutex<HashMap<String, String>>>;
+
+/// Stops the watchdog daemon when the last manager clone drops. Without
+/// this, the daemon's self-`Arc` would keep it heart-beating after its
+/// owner died — a zombie that makes dead workers look alive to peers.
+struct WatchdogGuard(Arc<Watchdog>);
+
+impl Drop for WatchdogGuard {
+    fn drop(&mut self) {
+        self.0.shutdown();
+    }
+}
+
+/// The manager. Cheap to clone (all state shared).
+#[derive(Clone)]
+pub struct WorldManager {
+    worlds: WorldMap,
+    state: Arc<dyn StateManager>,
+    subscribers: Subscribers,
+    /// Worlds that broke, with the reason — so the communicator can
+    /// answer `Broken` rather than `UnknownWorld` after cleanup.
+    tombstones: Tombstones,
+    watchdog: Arc<Watchdog>,
+    _wd_guard: Arc<WatchdogGuard>,
+}
+
+impl WorldManager {
+    /// Create a manager with the paper's key-value state management and
+    /// a running watchdog.
+    pub fn new() -> WorldManager {
+        Self::with_options(StatePolicy::Kv, WatchdogConfig::default(), Clock::system())
+    }
+
+    /// Full-control constructor (state policy for the ablation, manual
+    /// clock for deterministic tests).
+    pub fn with_options(
+        policy: StatePolicy,
+        wd_cfg: WatchdogConfig,
+        clock: Clock,
+    ) -> WorldManager {
+        let worlds: WorldMap = Arc::new(RwLock::new(HashMap::new()));
+        let subscribers: Subscribers = Arc::new(Mutex::new(Vec::new()));
+        let tombstones: Tombstones = Arc::new(Mutex::new(HashMap::new()));
+        let state: Arc<dyn StateManager> = Arc::from(make_state_manager(policy));
+
+        // Watchdog alert → quarantine & clean up the world.
+        let cb_worlds = worlds.clone();
+        let cb_subs = subscribers.clone();
+        let cb_tombs = tombstones.clone();
+        let cb_state = state.clone();
+        let watchdog = Watchdog::start(
+            wd_cfg,
+            clock,
+            Arc::new(move |world: &str, reason: &str| {
+                Self::break_world_impl(&cb_worlds, &cb_subs, &cb_tombs, cb_state.as_ref(), world, reason);
+            }),
+        );
+
+        let guard = Arc::new(WatchdogGuard(watchdog.clone()));
+        WorldManager { worlds, state, subscribers, tombstones, watchdog, _wd_guard: guard }
+    }
+
+    /// Initialize (join) a world and put it under management. Blocking:
+    /// returns once every member has arrived (see
+    /// [`Self::initialize_world_async`] for the non-disruptive form).
+    pub fn initialize_world(
+        &self,
+        name: &str,
+        rank: usize,
+        size: usize,
+        store_addr: SocketAddr,
+        opts: WorldOptions,
+    ) -> MwResult<()> {
+        if self.worlds.read().unwrap().contains_key(name) {
+            return Err(MwError::AlreadyExists(name.to_string()));
+        }
+        let world = World::init(name, rank, size, store_addr, opts)?;
+        self.adopt(world)
+    }
+
+    /// Put an externally initialized world under management (used by the
+    /// launcher, and by tests that build worlds directly).
+    pub fn adopt(&self, world: World) -> MwResult<()> {
+        let name = world.name().to_string();
+        let (rank, size) = (world.rank(), world.size());
+        {
+            let mut map = self.worlds.write().unwrap();
+            if map.contains_key(&name) {
+                return Err(MwError::AlreadyExists(name));
+            }
+            self.state
+                .insert(WorldState::new(&name, rank, size, COMM_BLOB_BYTES));
+            if let Some(store) = world.store() {
+                self.watchdog.watch(&name, rank, size, store);
+            }
+            map.insert(name.clone(), world);
+        }
+        self.tombstones.lock().unwrap().remove(&name);
+        self.emit(WorldEvent::Added(name));
+        Ok(())
+    }
+
+    /// Fig. 5's mechanism: run the blocking `initialize_world` on a
+    /// separate thread so in-flight traffic on existing worlds is never
+    /// stalled while waiting for a joiner. Returns a handle to await.
+    pub fn initialize_world_async(
+        &self,
+        name: &str,
+        rank: usize,
+        size: usize,
+        store_addr: SocketAddr,
+        opts: WorldOptions,
+    ) -> InitHandle {
+        let mgr = self.clone();
+        let name = name.to_string();
+        let result: Arc<Mutex<Option<MwResult<()>>>> = Arc::new(Mutex::new(None));
+        let r2 = result.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("mw-init-{name}"))
+            .spawn(move || {
+                let res = mgr.initialize_world(&name, rank, size, store_addr, opts);
+                *r2.lock().unwrap() = Some(res);
+            })
+            .expect("spawn init thread");
+        InitHandle { result, thread: Some(thread) }
+    }
+
+    /// Gracefully terminate a world: unwatch, abort pending collectives,
+    /// drop links and state.
+    pub fn remove_world(&self, name: &str) -> MwResult<()> {
+        let world = {
+            let mut map = self.worlds.write().unwrap();
+            map.remove(name)
+        };
+        let world = world.ok_or_else(|| MwError::UnknownWorld(name.to_string()))?;
+        self.watchdog.unwatch(name);
+        self.state.remove(name);
+        // Best-effort heartbeat-key cleanup while the store is still up.
+        if let Some(store) = world.store() {
+            if let Ok(keys) = store.keys(&format!("mw/{name}/hb/")) {
+                for k in keys {
+                    let _ = store.delete(&k);
+                }
+            }
+        }
+        world.abort("world removed");
+        self.tombstones.lock().unwrap().remove(name);
+        self.emit(WorldEvent::Removed(name.to_string()));
+        Ok(())
+    }
+
+    /// The communicator façade for issuing collectives by world name.
+    pub fn communicator(&self) -> WorldCommunicator {
+        WorldCommunicator::new(self.clone())
+    }
+
+    /// Resolve a live world. Detects worlds that broke via remote error
+    /// (progress thread marked them) and routes them through cleanup.
+    pub fn world(&self, name: &str) -> MwResult<World> {
+        let world = {
+            let map = self.worlds.read().unwrap();
+            map.get(name).cloned()
+        };
+        match world {
+            Some(w) if w.is_broken() => {
+                let reason = w
+                    .broken_reason()
+                    .map(|e| e.to_string())
+                    .unwrap_or_else(|| "unknown".into());
+                self.break_world(name, &reason);
+                Err(MwError::Broken(name.to_string(), reason))
+            }
+            Some(w) => Ok(w),
+            None => {
+                if let Some(reason) = self.tombstones.lock().unwrap().get(name) {
+                    return Err(MwError::Broken(name.to_string(), reason.clone()));
+                }
+                Err(MwError::UnknownWorld(name.to_string()))
+            }
+        }
+    }
+
+    /// Per-op state activation (see `state.rs`); also where the kv-vs-
+    /// swap ablation cost lands on the hot path.
+    pub(crate) fn activate_state(&self, name: &str) -> MwResult<u64> {
+        self.state
+            .next_seq(name)
+            .ok_or_else(|| MwError::UnknownWorld(name.to_string()))
+    }
+
+    /// Names of live worlds.
+    pub fn world_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.worlds.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Subscribe to lifecycle events.
+    pub fn subscribe(&self) -> Receiver<WorldEvent> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.subscribers.lock().unwrap().push(tx);
+        rx
+    }
+
+    /// Declare a world broken (watchdog path calls the impl directly;
+    /// this is for the remote-error path and tests).
+    pub fn break_world(&self, name: &str, reason: &str) {
+        Self::break_world_impl(
+            &self.worlds,
+            &self.subscribers,
+            &self.tombstones,
+            self.state.as_ref(),
+            name,
+            reason,
+        );
+    }
+
+    fn break_world_impl(
+        worlds: &WorldMap,
+        subscribers: &Subscribers,
+        tombstones: &Tombstones,
+        state: &dyn StateManager,
+        name: &str,
+        reason: &str,
+    ) {
+        let world = {
+            let mut map = worlds.write().unwrap();
+            map.remove(name)
+        };
+        let Some(world) = world else {
+            return; // already cleaned up
+        };
+        if std::env::var("MW_DEBUG").is_ok() {
+            eprintln!("[manager] break_world {name}: {reason}");
+        }
+        // Abort pending collective ops so the application unblocks with
+        // an exception it can handle (§3.3).
+        world.abort(reason);
+        state.remove(name);
+        tombstones
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), reason.to_string());
+        let event = WorldEvent::Broken { world: name.to_string(), reason: reason.to_string() };
+        let mut subs = subscribers.lock().unwrap();
+        subs.retain(|tx| tx.send(event.clone()).is_ok());
+    }
+
+    fn emit(&self, event: WorldEvent) {
+        let mut subs = self.subscribers.lock().unwrap();
+        subs.retain(|tx| tx.send(event.clone()).is_ok());
+    }
+
+    /// Access to the watchdog (benches tune it; tests drive ticks).
+    pub fn watchdog(&self) -> &Arc<Watchdog> {
+        &self.watchdog
+    }
+}
+
+impl Default for WorldManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Handle returned by [`WorldManager::initialize_world_async`].
+pub struct InitHandle {
+    result: Arc<Mutex<Option<MwResult<()>>>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl InitHandle {
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        self.result.lock().unwrap().is_some()
+    }
+
+    /// Block until initialization finishes and return its result.
+    pub fn wait(mut self) -> MwResult<()> {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        self.result
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| Err(MwError::Ccl(crate::mwccl::CclError::InitFailure(
+                "init thread vanished".into(),
+            ))))
+    }
+}
+
+impl Drop for InitHandle {
+    fn drop(&mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

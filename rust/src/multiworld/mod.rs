@@ -1,0 +1,60 @@
+//! MultiWorld — the paper's contribution (§3).
+//!
+//! The CCL below ([`crate::mwccl`]) gives us worlds that are static,
+//! single-fault-domain process groups. This layer makes a *worker*
+//! elastic by letting it hold **many worlds at once** and by managing
+//! their lifecycle:
+//!
+//! * [`manager::WorldManager`] — `initialize_world` / `remove_world` /
+//!   `communicator` (§3.3 "World Manager"). World initialization is a
+//!   blocking collective, so it can run on a separate thread
+//!   ([`manager::WorldManager::initialize_world_async`]) — this is what
+//!   keeps existing worlds' traffic flowing while a new worker joins
+//!   (Fig. 5: no impact on W1's throughput while the leader waits for
+//!   W2-R1).
+//! * [`communicator::WorldCommunicator`] — fault-tolerant, non-blocking
+//!   collectives addressed by world *name* (§3.3 "World Communicator";
+//!   "including a world name as a function argument suffices"), plus the
+//!   busy-wait polling loop over many worlds' pending works.
+//! * [`watchdog::Watchdog`] — the threaded daemon heart-beating through
+//!   each world's TCPStore and flagging worlds whose members go quiet
+//!   (§3.3 "Watchdog"); the only failure signal on the shared-memory
+//!   path.
+//! * [`state::StateManager`] — per-world state kept as key-value entries
+//!   (our design) vs. save/restore swapping (the naive baseline the
+//!   paper rejects; kept for the ablation bench).
+
+pub mod communicator;
+pub mod manager;
+pub mod state;
+pub mod watchdog;
+
+pub use communicator::{PollStrategy, WorldCommunicator};
+pub use manager::{WorldEvent, WorldManager};
+pub use state::{KvStateManager, StateManager, StatePolicy, SwapStateManager};
+pub use watchdog::{Watchdog, WatchdogConfig};
+
+use crate::mwccl::CclError;
+
+/// Errors from the MultiWorld layer.
+#[derive(Clone, Debug, thiserror::Error)]
+pub enum MwError {
+    /// No world with that name is registered with the manager.
+    #[error("unknown world '{0}'")]
+    UnknownWorld(String),
+
+    /// `initialize_world` for a name that already exists.
+    #[error("world '{0}' already exists")]
+    AlreadyExists(String),
+
+    /// The world exists but was broken (watchdog or remote error) and is
+    /// quarantined pending cleanup.
+    #[error("world '{0}' is broken: {1}")]
+    Broken(String, String),
+
+    /// Underlying CCL failure.
+    #[error(transparent)]
+    Ccl(#[from] CclError),
+}
+
+pub type MwResult<T> = Result<T, MwError>;

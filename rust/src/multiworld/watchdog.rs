@@ -1,0 +1,363 @@
+//! The watchdog (§3.3): a threaded daemon that publishes this worker's
+//! liveness into each world's TCPStore and checks every peer's
+//! heartbeat. Missing updates for longer than the threshold — or losing
+//! the store itself (the leader hosting it died) — marks the world
+//! broken and notifies the manager.
+//!
+//! This is the *only* failure signal on the shared-memory transport,
+//! where peer death is silent; on TCP it complements `RemoteError` (a
+//! peer that wedges without closing its socket is also caught here).
+
+use crate::store::StoreClient;
+use crate::util::time::Clock;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Watchdog tuning.
+#[derive(Clone, Debug)]
+pub struct WatchdogConfig {
+    /// Heartbeat publish/check period.
+    pub heartbeat: Duration,
+    /// Consecutive missed periods before a peer is declared dead
+    /// (paper example: updates missed "for a certain duration (e.g., 3
+    /// seconds)" at ~1 s heartbeats ⇒ 3 misses).
+    pub miss_threshold: u32,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig { heartbeat: Duration::from_millis(250), miss_threshold: 3 }
+    }
+}
+
+/// One world under watch.
+struct Watched {
+    world: String,
+    rank: usize,
+    size: usize,
+    store: Arc<StoreClient>,
+    /// Wall-clock (ms) when each peer's heartbeat was last seen fresh.
+    last_seen: HashMap<usize, u64>,
+    /// First heartbeat grace: peers may not have published yet.
+    started_at: u64,
+}
+
+/// Callback invoked when a watched world is declared broken.
+pub type BrokenCallback = Arc<dyn Fn(&str, &str) + Send + Sync>;
+
+/// See module docs.
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    clock: Clock,
+    watched: Arc<Mutex<HashMap<String, Watched>>>,
+    on_broken: BrokenCallback,
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Watchdog {
+    /// Create and start the daemon thread.
+    pub fn start(cfg: WatchdogConfig, clock: Clock, on_broken: BrokenCallback) -> Arc<Watchdog> {
+        let wd = Arc::new(Watchdog {
+            cfg,
+            clock,
+            watched: Arc::new(Mutex::new(HashMap::new())),
+            on_broken,
+            stop: Arc::new(AtomicBool::new(false)),
+            thread: Mutex::new(None),
+        });
+        let wd2 = wd.clone();
+        let handle = std::thread::Builder::new()
+            .name("mw-watchdog".into())
+            .spawn(move || wd2.run())
+            .expect("spawn watchdog");
+        *wd.thread.lock().unwrap() = Some(handle);
+        wd
+    }
+
+    /// Begin watching a world (called by the manager at world init).
+    pub fn watch(&self, world: &str, rank: usize, size: usize, store: Arc<StoreClient>) {
+        let now = self.clock.now_millis();
+        self.watched.lock().unwrap().insert(
+            world.to_string(),
+            Watched {
+                world: world.to_string(),
+                rank,
+                size,
+                store,
+                last_seen: HashMap::new(),
+                started_at: now,
+            },
+        );
+    }
+
+    /// Stop watching (world removed).
+    pub fn unwatch(&self, world: &str) {
+        self.watched.lock().unwrap().remove(world);
+    }
+
+    /// Worlds currently under watch.
+    pub fn watched_worlds(&self) -> Vec<String> {
+        self.watched.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// One watchdog pass: publish own heartbeat, check peers. Public so
+    /// deterministic tests can drive it with a manual clock instead of
+    /// sleeping.
+    pub fn tick(&self) {
+        let now = self.clock.now_millis();
+        let deadline_ms = self.cfg.heartbeat.as_millis() as u64 * self.cfg.miss_threshold as u64;
+        let mut broken: Vec<(String, String)> = Vec::new();
+        {
+            let mut watched = self.watched.lock().unwrap();
+            for w in watched.values_mut() {
+                // 1. Publish my liveness.
+                let my_key = format!("mw/{}/hb/{}", w.world, w.rank);
+                if let Err(e) = w.store.set(&my_key, now.to_string().as_bytes()) {
+                    // The store is gone — its host (the world leader) is
+                    // dead. That breaks the world for everyone.
+                    broken.push((w.world.clone(), format!("store unreachable: {e}")));
+                    continue;
+                }
+                // 2. Check the peers.
+                for peer in 0..w.size {
+                    if peer == w.rank {
+                        continue;
+                    }
+                    let key = format!("mw/{}/hb/{peer}", w.world);
+                    let stamp = match w.store.get(&key) {
+                        Ok(Some(v)) => String::from_utf8(v).ok().and_then(|s| s.parse::<u64>().ok()),
+                        Ok(None) => None,
+                        Err(e) => {
+                            broken.push((w.world.clone(), format!("store unreachable: {e}")));
+                            break;
+                        }
+                    };
+                    let last = match stamp {
+                        // Stamps from other processes use the same wall
+                        // clock; a manual test clock sees its own writes.
+                        Some(ts) => {
+                            let e = w.last_seen.entry(peer).or_insert(ts);
+                            if ts > *e {
+                                *e = ts;
+                            }
+                            *e
+                        }
+                        // Never heartbeated: grace period from watch start.
+                        None => *w.last_seen.entry(peer).or_insert(w.started_at),
+                    };
+                    if now.saturating_sub(last) > deadline_ms {
+                        broken.push((
+                            w.world.clone(),
+                            format!(
+                                "rank {peer} missed heartbeats for {} ms (> {deadline_ms} ms)",
+                                now.saturating_sub(last)
+                            ),
+                        ));
+                        break;
+                    }
+                }
+            }
+            for (world, _) in &broken {
+                watched.remove(world);
+            }
+        }
+        for (world, reason) in broken {
+            if std::env::var("MW_DEBUG").is_ok() {
+                eprintln!("[watchdog] alert {world}: {reason}");
+            }
+            (self.on_broken)(&world, &reason);
+        }
+    }
+
+    fn run(&self) {
+        while !self.stop.load(Ordering::Relaxed) {
+            self.tick();
+            std::thread::sleep(self.cfg.heartbeat);
+        }
+    }
+
+    /// Stop the daemon (joined on drop as well).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            // The daemon thread itself may hold the last Arc (it exits
+            // right after shutdown); joining ourselves would deadlock.
+            if t.thread().id() != std::thread::current().id() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::StoreServer;
+    use crate::util::time::Clock;
+    use std::sync::atomic::AtomicUsize;
+
+    struct Fixture {
+        _server: StoreServer,
+        store: Arc<StoreClient>,
+        broken: Arc<Mutex<Vec<(String, String)>>>,
+        calls: Arc<AtomicUsize>,
+    }
+
+    fn fixture() -> Fixture {
+        let server = StoreServer::bind_any().unwrap();
+        let store =
+            Arc::new(StoreClient::connect(server.addr(), Duration::from_secs(2)).unwrap());
+        Fixture {
+            _server: server,
+            store,
+            broken: Arc::new(Mutex::new(Vec::new())),
+            calls: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    fn watchdog_with(fx: &Fixture, clock: Clock) -> Arc<Watchdog> {
+        let broken = fx.broken.clone();
+        let calls = fx.calls.clone();
+        Watchdog::start(
+            WatchdogConfig { heartbeat: Duration::from_millis(3600_000), miss_threshold: 3 },
+            clock,
+            Arc::new(move |w, r| {
+                broken.lock().unwrap().push((w.to_string(), r.to_string()));
+                calls.fetch_add(1, Ordering::SeqCst);
+            }),
+        )
+    }
+
+    #[test]
+    fn healthy_peers_stay_healthy() {
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 0, 2, fx.store.clone());
+        // Peer 1 heartbeats via the same store.
+        for step in 0..5 {
+            clock.advance(Duration::from_secs(1));
+            fx.store
+                .set("mw/w1/hb/1", clock.now_millis().to_string().as_bytes())
+                .unwrap();
+            wd.tick();
+            assert!(fx.broken.lock().unwrap().is_empty(), "step {step}");
+        }
+        wd.shutdown();
+    }
+
+    #[test]
+    fn missed_heartbeats_break_world() {
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        // heartbeat period is effectively ∞ for the daemon; we drive ticks.
+        wd.watch("w1", 0, 2, fx.store.clone());
+        fx.store
+            .set("mw/w1/hb/1", clock.now_millis().to_string().as_bytes())
+            .unwrap();
+        wd.tick(); // sees fresh stamp
+        assert!(fx.broken.lock().unwrap().is_empty());
+        // Peer goes quiet; threshold is 3 × 3600s on the manual clock.
+        clock.advance(Duration::from_secs(3 * 3600 + 10));
+        wd.tick();
+        let broken = fx.broken.lock().unwrap();
+        assert_eq!(broken.len(), 1);
+        assert_eq!(broken[0].0, "w1");
+        assert!(broken[0].1.contains("rank 1"), "{}", broken[0].1);
+    }
+
+    #[test]
+    fn peer_that_never_heartbeats_gets_grace_then_breaks() {
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 0, 2, fx.store.clone());
+        wd.tick();
+        assert!(fx.broken.lock().unwrap().is_empty(), "grace period holds");
+        clock.advance(Duration::from_secs(4 * 3600));
+        wd.tick();
+        assert_eq!(fx.broken.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn broken_world_reported_once_and_unwatched() {
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 0, 2, fx.store.clone());
+        clock.advance(Duration::from_secs(4 * 3600));
+        wd.tick();
+        wd.tick();
+        wd.tick();
+        assert_eq!(fx.calls.load(Ordering::SeqCst), 1, "no duplicate alerts");
+        assert!(wd.watched_worlds().is_empty());
+    }
+
+    #[test]
+    fn store_death_breaks_world() {
+        // The store's host (world leader) dying must break the world.
+        let server = StoreServer::bind_any().unwrap();
+        let store =
+            Arc::new(StoreClient::connect(server.addr(), Duration::from_secs(2)).unwrap());
+        let broken = Arc::new(Mutex::new(Vec::new()));
+        let b2 = broken.clone();
+        let clock = Clock::manual();
+        let wd = Watchdog::start(
+            WatchdogConfig { heartbeat: Duration::from_millis(3600_000), miss_threshold: 3 },
+            clock.clone(),
+            Arc::new(move |w: &str, r: &str| {
+                b2.lock().unwrap().push((w.to_string(), r.to_string()))
+            }),
+        );
+        wd.watch("w9", 1, 2, store);
+        drop(server);
+        std::thread::sleep(Duration::from_millis(50));
+        wd.tick();
+        let broken = broken.lock().unwrap();
+        assert_eq!(broken.len(), 1);
+        assert!(broken[0].1.contains("store unreachable"), "{}", broken[0].1);
+    }
+
+    #[test]
+    fn unwatch_stops_monitoring() {
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 0, 2, fx.store.clone());
+        wd.unwatch("w1");
+        clock.advance(Duration::from_secs(10 * 3600));
+        wd.tick();
+        assert!(fx.broken.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn multiple_worlds_fail_independently() {
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("wa", 0, 2, fx.store.clone());
+        wd.watch("wb", 0, 2, fx.store.clone());
+        // wb's peer stays alive, wa's never shows up.
+        for _ in 0..5 {
+            clock.advance(Duration::from_secs(3600));
+            fx.store
+                .set("mw/wb/hb/1", clock.now_millis().to_string().as_bytes())
+                .unwrap();
+            wd.tick();
+        }
+        let broken = fx.broken.lock().unwrap();
+        assert_eq!(broken.len(), 1);
+        assert_eq!(broken[0].0, "wa");
+        assert_eq!(wd.watched_worlds(), vec!["wb".to_string()]);
+    }
+}

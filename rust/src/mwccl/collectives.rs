@@ -1,0 +1,347 @@
+//! The eight collective operations (§3.3: "We support 8 collective
+//! operations: send, recv, broadcast, all-reduce, reduce, all-gather,
+//! gather, and scatter.").
+//!
+//! Every op exists in asynchronous form (`i*` prefixed, returning
+//! [`Work`]) plus a blocking convenience wrapper. Algorithms are flat
+//! (star through the root) — the paper's worlds are 2–3 ranks, where
+//! flat is optimal; ring variants are a perf-pass option behind the same
+//! API.
+//!
+//! Deadlock-freedom: receiver threads always drain transports into
+//! unbounded inboxes, so a send never blocks on the peer's op order —
+//! within one world, ops still execute in submission order on the
+//! progress thread (CCL contract: all ranks issue collectives in the
+//! same order).
+
+use super::error::{CclError, CclResult};
+use super::wire::{make_tag, TagKind};
+use super::work::Work;
+use super::world::{ReduceOp, World, WorldCore};
+use crate::tensor::Tensor;
+
+impl World {
+    // ---------------------------------------------------------------- p2p
+
+    /// Async point-to-point send. `tag` is user-chosen (48-bit).
+    pub fn isend(&self, t: Tensor, dst: usize, tag: u64) -> Work {
+        let desc = format!("isend dst={dst} tag={tag} world={}", self.name());
+        if dst == self.rank() || dst >= self.size() {
+            return Work::failed(desc, CclError::InvalidUsage(format!("bad dst {dst}")));
+        }
+        let wire = make_tag(TagKind::P2p, tag);
+        self.submit(desc, move |core| {
+            core.send_tensor(dst, wire, &t)?;
+            Ok(None)
+        })
+    }
+
+    /// Async point-to-point receive; the Work resolves to the tensor.
+    ///
+    /// Unlike collectives, `irecv`s go to the world's p2p *poller*, so
+    /// receives from different peers complete in arrival order, not
+    /// submission order — a leader can post receives to all its senders
+    /// and harvest whichever lands first (the Fig. 4 pattern).
+    pub fn irecv(&self, src: usize, tag: u64) -> Work {
+        let desc = format!("irecv src={src} tag={tag} world={}", self.name());
+        if src == self.rank() || src >= self.size() {
+            return Work::failed(desc, CclError::InvalidUsage(format!("bad src {src}")));
+        }
+        if let Err(e) = self.core().check_healthy() {
+            return Work::failed(desc, e);
+        }
+        let wire = make_tag(TagKind::P2p, tag);
+        let work = Work::pending(desc);
+        work.set_running();
+        self.core().register_recv(src, wire, work.clone());
+        work
+    }
+
+    /// Blocking send.
+    pub fn send(&self, t: Tensor, dst: usize, tag: u64) -> CclResult<()> {
+        self.isend(t, dst, tag).wait().map(|_| ())
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self, src: usize, tag: u64) -> CclResult<Tensor> {
+        self.irecv(src, tag)
+            .wait()?
+            .ok_or_else(|| CclError::Transport("recv returned no tensor".into()))
+    }
+
+    // --------------------------------------------------------- broadcast
+
+    /// Async broadcast: root's tensor is delivered to every rank. Root
+    /// passes `Some(tensor)`, non-roots pass `None` (shape travels on
+    /// the wire, so receivers need no pre-allocation). Resolves to the
+    /// broadcast tensor on every rank.
+    pub fn ibroadcast(&self, t: Option<Tensor>, root: usize) -> Work {
+        let desc = format!("broadcast root={root} world={}", self.name());
+        if root >= self.size() {
+            return Work::failed(desc, CclError::InvalidUsage(format!("bad root {root}")));
+        }
+        let me = self.rank();
+        if me == root && t.is_none() {
+            return Work::failed(desc, CclError::InvalidUsage("root must supply tensor".into()));
+        }
+        if self.size() == 1 {
+            return Work::done(desc, t);
+        }
+        let seq = self.core().next_seq();
+        let wire = make_tag(TagKind::Broadcast, seq);
+        self.submit(desc, move |core| broadcast_impl(core, t, root, wire).map(Some))
+    }
+
+    /// Blocking broadcast.
+    pub fn broadcast(&self, t: Option<Tensor>, root: usize) -> CclResult<Tensor> {
+        self.ibroadcast(t, root)
+            .wait()?
+            .ok_or_else(|| CclError::Transport("broadcast returned no tensor".into()))
+    }
+
+    // ------------------------------------------------------------ reduce
+
+    /// Async reduce: every rank contributes `t`; the root's Work
+    /// resolves to the reduction, other ranks' resolve to `None`.
+    pub fn ireduce(&self, t: Tensor, root: usize, op: ReduceOp) -> Work {
+        let desc = format!("reduce root={root} {op:?} world={}", self.name());
+        if root >= self.size() {
+            return Work::failed(desc, CclError::InvalidUsage(format!("bad root {root}")));
+        }
+        if self.size() == 1 {
+            return Work::done(desc, Some(t));
+        }
+        let seq = self.core().next_seq();
+        let wire = make_tag(TagKind::Reduce, seq);
+        self.submit(desc, move |core| reduce_impl(core, t, root, op, wire))
+    }
+
+    /// Blocking reduce (returns the reduction at root, `None` elsewhere).
+    pub fn reduce(&self, t: Tensor, root: usize, op: ReduceOp) -> CclResult<Option<Tensor>> {
+        self.ireduce(t, root, op).wait()
+    }
+
+    // -------------------------------------------------------- all_reduce
+
+    /// Async all-reduce (reduce to rank 0, then broadcast). Resolves to
+    /// the reduced tensor on every rank.
+    pub fn iall_reduce(&self, t: Tensor, op: ReduceOp) -> Work {
+        let desc = format!("all_reduce {op:?} world={}", self.name());
+        if self.size() == 1 {
+            return Work::done(desc, Some(t));
+        }
+        let seq = self.core().next_seq();
+        let rtag = make_tag(TagKind::AllReduce, seq * 2);
+        let btag = make_tag(TagKind::AllReduce, seq * 2 + 1);
+        self.submit(desc, move |core| {
+            let reduced = reduce_impl(core, t, 0, op, rtag)?;
+            broadcast_impl(core, reduced, 0, btag).map(Some)
+        })
+    }
+
+    /// Blocking all-reduce.
+    pub fn all_reduce(&self, t: Tensor, op: ReduceOp) -> CclResult<Tensor> {
+        self.iall_reduce(t, op)
+            .wait()?
+            .ok_or_else(|| CclError::Transport("all_reduce returned no tensor".into()))
+    }
+
+    // ------------------------------------------------------------ gather
+
+    /// Async gather: root's Work resolves to the rank-order concatenation
+    /// along axis 0; contributions must share trailing dims.
+    pub fn igather(&self, t: Tensor, root: usize) -> Work {
+        let desc = format!("gather root={root} world={}", self.name());
+        if root >= self.size() {
+            return Work::failed(desc, CclError::InvalidUsage(format!("bad root {root}")));
+        }
+        if self.size() == 1 {
+            return Work::done(desc, Some(t));
+        }
+        let seq = self.core().next_seq();
+        let wire = make_tag(TagKind::Gather, seq);
+        self.submit(desc, move |core| gather_impl(core, t, root, wire))
+    }
+
+    /// Blocking gather.
+    pub fn gather(&self, t: Tensor, root: usize) -> CclResult<Option<Tensor>> {
+        self.igather(t, root).wait()
+    }
+
+    // -------------------------------------------------------- all_gather
+
+    /// Async all-gather: every rank resolves to the concatenation
+    /// (gather to rank 0, broadcast back).
+    pub fn iall_gather(&self, t: Tensor) -> Work {
+        let desc = format!("all_gather world={}", self.name());
+        if self.size() == 1 {
+            return Work::done(desc, Some(t));
+        }
+        let seq = self.core().next_seq();
+        let gtag = make_tag(TagKind::AllGather, seq * 2);
+        let btag = make_tag(TagKind::AllGather, seq * 2 + 1);
+        self.submit(desc, move |core| {
+            let gathered = gather_impl(core, t, 0, gtag)?;
+            broadcast_impl(core, gathered, 0, btag).map(Some)
+        })
+    }
+
+    /// Blocking all-gather.
+    pub fn all_gather(&self, t: Tensor) -> CclResult<Tensor> {
+        self.iall_gather(t)
+            .wait()?
+            .ok_or_else(|| CclError::Transport("all_gather returned no tensor".into()))
+    }
+
+    // ----------------------------------------------------------- scatter
+
+    /// Async scatter: root supplies one tensor per rank (in rank order);
+    /// every rank's Work resolves to its part. Non-roots pass `None`.
+    pub fn iscatter(&self, parts: Option<Vec<Tensor>>, root: usize) -> Work {
+        let desc = format!("scatter root={root} world={}", self.name());
+        if root >= self.size() {
+            return Work::failed(desc, CclError::InvalidUsage(format!("bad root {root}")));
+        }
+        let me = self.rank();
+        if me == root {
+            match &parts {
+                Some(p) if p.len() == self.size() => {}
+                Some(p) => {
+                    return Work::failed(
+                        desc,
+                        CclError::InvalidUsage(format!(
+                            "scatter needs {} parts, got {}",
+                            self.size(),
+                            p.len()
+                        )),
+                    )
+                }
+                None => {
+                    return Work::failed(desc, CclError::InvalidUsage("root must supply parts".into()))
+                }
+            }
+        }
+        if self.size() == 1 {
+            return Work::done(desc, parts.map(|mut p| p.remove(0)));
+        }
+        let seq = self.core().next_seq();
+        let wire = make_tag(TagKind::Scatter, seq);
+        self.submit(desc, move |core| scatter_impl(core, parts, root, wire).map(Some))
+    }
+
+    /// Blocking scatter.
+    pub fn scatter(&self, parts: Option<Vec<Tensor>>, root: usize) -> CclResult<Tensor> {
+        self.iscatter(parts, root)
+            .wait()?
+            .ok_or_else(|| CclError::Transport("scatter returned no tensor".into()))
+    }
+}
+
+// ------------------------------------------------------------------ impls
+
+fn broadcast_impl(
+    core: &WorldCore,
+    t: Option<Tensor>,
+    root: usize,
+    wire: u64,
+) -> CclResult<Tensor> {
+    if core.rank == root {
+        let t = t.ok_or_else(|| CclError::InvalidUsage("root must supply tensor".into()))?;
+        for peer in 0..core.size {
+            if peer != root {
+                core.send_tensor(peer, wire, &t)?;
+            }
+        }
+        Ok(t)
+    } else {
+        core.recv_tensor(root, wire)
+    }
+}
+
+fn reduce_impl(
+    core: &WorldCore,
+    t: Tensor,
+    root: usize,
+    op: ReduceOp,
+    wire: u64,
+) -> CclResult<Option<Tensor>> {
+    if core.rank == root {
+        let mut acc = t;
+        if acc.dtype() != crate::tensor::DType::F32 {
+            return Err(CclError::InvalidUsage("reduce requires f32 tensors".into()));
+        }
+        for peer in 0..core.size {
+            if peer == root {
+                continue;
+            }
+            let part = core.recv_tensor(peer, wire)?;
+            if part.shape() != acc.shape() || part.dtype() != acc.dtype() {
+                return Err(CclError::InvalidUsage(format!(
+                    "reduce shape mismatch: {:?} vs {:?} from rank {peer}",
+                    acc.shape(),
+                    part.shape()
+                )));
+            }
+            match op {
+                ReduceOp::Sum | ReduceOp::Avg => acc.add_assign(&part),
+                ReduceOp::Max => acc.max_assign(&part),
+            }
+        }
+        if op == ReduceOp::Avg {
+            acc.scale(1.0 / core.size as f32);
+        }
+        Ok(Some(acc))
+    } else {
+        core.send_tensor(root, wire, &t)?;
+        Ok(None)
+    }
+}
+
+fn gather_impl(
+    core: &WorldCore,
+    t: Tensor,
+    root: usize,
+    wire: u64,
+) -> CclResult<Option<Tensor>> {
+    if core.rank == root {
+        let mut parts: Vec<Option<Tensor>> = (0..core.size).map(|_| None).collect();
+        parts[root] = Some(t);
+        for peer in 0..core.size {
+            if peer == root {
+                continue;
+            }
+            parts[peer] = Some(core.recv_tensor(peer, wire)?);
+        }
+        let parts: Vec<Tensor> = parts.into_iter().map(|p| p.unwrap()).collect();
+        let cat = Tensor::concat(&parts)
+            .map_err(|e| CclError::InvalidUsage(format!("gather concat: {e}")))?;
+        Ok(Some(cat))
+    } else {
+        core.send_tensor(root, wire, &t)?;
+        Ok(None)
+    }
+}
+
+fn scatter_impl(
+    core: &WorldCore,
+    parts: Option<Vec<Tensor>>,
+    root: usize,
+    wire: u64,
+) -> CclResult<Tensor> {
+    if core.rank == root {
+        let mut parts = parts.unwrap(); // validated at submit
+        // Send in reverse so removal by index stays cheap and rank order
+        // on the wire is immaterial (distinct links).
+        let mine = parts[root].clone();
+        for peer in (0..core.size).rev() {
+            if peer == root {
+                continue;
+            }
+            core.send_tensor(peer, wire, &parts[peer])?;
+        }
+        parts.clear();
+        Ok(mine)
+    } else {
+        core.recv_tensor(root, wire)
+    }
+}

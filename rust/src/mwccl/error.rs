@@ -1,0 +1,74 @@
+//! CCL error taxonomy, mirroring NCCL's where it matters.
+
+/// Errors surfaced by collective operations.
+#[derive(Clone, Debug, thiserror::Error, PartialEq)]
+pub enum CclError {
+    /// The remote side of a connection failed — analogue of
+    /// `ncclRemoteError`. Only the *TCP* transport can raise this; the
+    /// shared-memory transport cannot detect peer death (by design,
+    /// reproducing NCCL's intra-host behaviour).
+    #[error("remote error (peer {peer}): {detail}")]
+    RemoteError { peer: usize, detail: String },
+
+    /// The op was aborted locally (watchdog broke the world, or the
+    /// world was removed while the op was pending).
+    #[error("operation aborted: {0}")]
+    Aborted(String),
+
+    /// The world this op was issued on is broken; no further collectives
+    /// may run on it.
+    #[error("world '{0}' is broken")]
+    WorldBroken(String),
+
+    /// Rendezvous or membership problem.
+    #[error("init failure: {0}")]
+    InitFailure(String),
+
+    /// Caller misuse (bad rank, shape mismatch between peers, …).
+    #[error("invalid usage: {0}")]
+    InvalidUsage(String),
+
+    /// Deadline exceeded on a bounded wait.
+    #[error("timeout: {0}")]
+    Timeout(String),
+
+    /// Underlying I/O failure not attributable to the peer.
+    #[error("transport error: {0}")]
+    Transport(String),
+}
+
+impl CclError {
+    /// True when the error means the *world* (not just this op) is dead
+    /// and must be cleaned up by the layer above.
+    pub fn is_fatal_to_world(&self) -> bool {
+        matches!(
+            self,
+            CclError::RemoteError { .. }
+                | CclError::WorldBroken(_)
+                | CclError::Aborted(_)
+                | CclError::Transport(_)
+        )
+    }
+}
+
+pub type CclResult<T> = Result<T, CclError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fatality_classification() {
+        assert!(CclError::RemoteError { peer: 1, detail: "reset".into() }.is_fatal_to_world());
+        assert!(CclError::WorldBroken("w1".into()).is_fatal_to_world());
+        assert!(CclError::Aborted("watchdog".into()).is_fatal_to_world());
+        assert!(!CclError::InvalidUsage("bad rank".into()).is_fatal_to_world());
+        assert!(!CclError::Timeout("t".into()).is_fatal_to_world());
+    }
+
+    #[test]
+    fn display_mentions_peer() {
+        let e = CclError::RemoteError { peer: 3, detail: "connection reset".into() };
+        assert!(e.to_string().contains("peer 3"));
+    }
+}

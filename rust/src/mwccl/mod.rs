@@ -1,0 +1,37 @@
+//! `mwccl` — a from-scratch collective communication library with NCCL's
+//! *semantics*, including the limitations the paper works around.
+//!
+//! A [`World`] is a process group: fixed membership decided at
+//! [`World::init`] rendezvous, a single fault domain, and no way to grow
+//! or shrink — exactly the CCL constraint motivating MultiWorld. On top
+//! of point-to-point transports it offers the paper's eight collectives
+//! (`send`, `recv`, `broadcast`, `all_reduce`, `reduce`, `all_gather`,
+//! `gather`, `scatter`), each available in asynchronous form returning a
+//! [`Work`] handle (mirroring `torch.distributed`'s `isend`/`irecv`).
+//!
+//! Failure semantics are modeled on NCCL:
+//!
+//! * **TCP transport** (host-to-host): peer death surfaces as
+//!   [`CclError::RemoteError`] — the analogue of `ncclRemoteError`.
+//! * **SHM transport** (intra-host, the NVLink/shared-memory path): peer
+//!   death raises *no event whatsoever*; a pending `recv` simply never
+//!   completes. This is the exact gap §3.2 of the paper describes, and
+//!   why the MultiWorld layer adds a watchdog.
+//!
+//! Ops within one world are serialized by a per-world progress thread
+//! (like NCCL's per-communicator stream ordering); ops in *different*
+//! worlds proceed concurrently — which is what lets MultiWorld's
+//! communicator poll many worlds without deadlock.
+
+pub mod collectives;
+pub mod error;
+pub mod rendezvous;
+pub mod transport;
+pub mod wire;
+pub mod work;
+pub mod world;
+
+pub use error::{CclError, CclResult};
+pub use rendezvous::{Rendezvous, TransportKind, WorldOptions};
+pub use work::{Work, WorkState};
+pub use world::{ReduceOp, World};

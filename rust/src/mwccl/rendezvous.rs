@@ -1,0 +1,326 @@
+//! World initialization: rendezvous through a per-world TCPStore.
+//!
+//! Mirrors `torch.distributed.init_process_group`: rank 0 hosts the
+//! store at a pre-agreed address (PyTorch's MASTER_ADDR/MASTER_PORT);
+//! every rank registers its transport endpoint, links are established
+//! pairwise, and a store barrier makes the world usable only once every
+//! member is wired. The same store instance later carries the
+//! MultiWorld watchdog's heartbeats (§3.3: "One TCPStore instance is
+//! associated with one world").
+
+use super::error::{CclError, CclResult};
+use super::transport::ratelimit::RateLimiter;
+use super::transport::shm::{shm_dir, ShmLink, DEFAULT_RING_BYTES};
+use super::transport::tcp::TcpLink;
+use super::transport::Link;
+use super::world::World;
+use crate::store::{StoreClient, StoreServer};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which transport a world runs over.
+#[derive(Clone)]
+pub enum TransportKind {
+    /// Host-to-host path: real sockets, failures detectable, optional
+    /// shared bandwidth cap (the paper's 10 Gbps inter-VM link).
+    Tcp { limiter: Option<Arc<RateLimiter>> },
+    /// Intra-host path: mmap ring pairs, failures silent (NVLink/shm
+    /// analogue).
+    Shm { ring_bytes: usize },
+}
+
+impl std::fmt::Debug for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportKind::Tcp { limiter } => write!(
+                f,
+                "Tcp{{limit={}}}",
+                limiter.as_ref().map(|l| l.rate_bps()).unwrap_or(f64::INFINITY)
+            ),
+            TransportKind::Shm { ring_bytes } => write!(f, "Shm{{ring={ring_bytes}}}"),
+        }
+    }
+}
+
+/// Options for [`World::init`].
+#[derive(Clone, Debug)]
+pub struct WorldOptions {
+    pub transport: TransportKind,
+    /// Rendezvous deadline (how long to wait for peers to arrive).
+    pub init_timeout: Duration,
+    /// Per-collective blocking-wait deadline; `None` waits until the
+    /// link errors or is aborted (NCCL default behaviour).
+    pub op_timeout: Option<Duration>,
+}
+
+impl Default for WorldOptions {
+    fn default() -> Self {
+        WorldOptions {
+            transport: TransportKind::Shm { ring_bytes: DEFAULT_RING_BYTES },
+            init_timeout: Duration::from_secs(30),
+            op_timeout: None,
+        }
+    }
+}
+
+impl WorldOptions {
+    pub fn tcp() -> Self {
+        WorldOptions {
+            transport: TransportKind::Tcp { limiter: None },
+            ..Default::default()
+        }
+    }
+
+    pub fn tcp_limited(limiter: Arc<RateLimiter>) -> Self {
+        WorldOptions {
+            transport: TransportKind::Tcp { limiter: Some(limiter) },
+            ..Default::default()
+        }
+    }
+
+    pub fn shm() -> Self {
+        Self::default()
+    }
+
+    pub fn with_op_timeout(mut self, t: Duration) -> Self {
+        self.op_timeout = Some(t);
+        self
+    }
+
+    /// Raise the rendezvous deadline (slow CI machines compiling many
+    /// PJRT executables before joining worlds).
+    pub fn with_init_timeout(mut self, t: Duration) -> Self {
+        self.init_timeout = t;
+        self
+    }
+}
+
+/// Namespace helper for store keys of one world.
+fn key(world: &str, suffix: &str) -> String {
+    format!("mw/{world}/{suffix}")
+}
+
+impl World {
+    /// Initialize (join) the world `name` as `rank` of `size`.
+    ///
+    /// Rank 0 hosts the store server on `store_addr`; everyone else
+    /// connects to it. Blocks until all `size` members have arrived and
+    /// all pairwise links are up — this is the collective, blocking init
+    /// the paper works around by running it in a separate thread at the
+    /// MultiWorld layer.
+    pub fn init(
+        name: &str,
+        rank: usize,
+        size: usize,
+        store_addr: SocketAddr,
+        opts: WorldOptions,
+    ) -> CclResult<World> {
+        if size == 0 || rank >= size {
+            return Err(CclError::InvalidUsage(format!("bad rank {rank} of {size}")));
+        }
+        // 1. Store: leader hosts, members connect.
+        let server = if rank == 0 {
+            Some(Arc::new(StoreServer::bind(&store_addr.to_string()).map_err(
+                |e| CclError::InitFailure(format!("store bind {store_addr}: {e}")),
+            )?))
+        } else {
+            None
+        };
+        let store = Arc::new(
+            StoreClient::connect(store_addr, opts.init_timeout)
+                .map_err(|e| CclError::InitFailure(format!("store connect: {e}")))?,
+        );
+
+        if size == 1 {
+            return Ok(World::from_parts(
+                name.to_string(),
+                rank,
+                size,
+                HashMap::new(),
+                Some(store),
+                server,
+                opts.op_timeout,
+            ));
+        }
+
+        // 2. Links.
+        let links: HashMap<usize, Box<dyn Link>> = match &opts.transport {
+            TransportKind::Tcp { limiter } => {
+                tcp_links(name, rank, size, &store, limiter.clone(), opts.init_timeout)?
+            }
+            TransportKind::Shm { ring_bytes } => {
+                shm_links(name, rank, size, *ring_bytes, opts.init_timeout)?
+            }
+        };
+
+        // 3. Barrier: the world exists only when everyone is wired.
+        barrier(&store, &key(name, "ready"), size, opts.init_timeout)?;
+
+        Ok(World::from_parts(
+            name.to_string(),
+            rank,
+            size,
+            links,
+            Some(store),
+            server,
+            opts.op_timeout,
+        ))
+    }
+}
+
+/// Store-based barrier: increment a counter; the last arriver publishes
+/// the go key; everyone waits for it.
+pub fn barrier(
+    store: &StoreClient,
+    counter_key: &str,
+    size: usize,
+    timeout: Duration,
+) -> CclResult<()> {
+    let n = store
+        .add(counter_key, 1)
+        .map_err(|e| CclError::InitFailure(format!("barrier add: {e}")))?;
+    let go_key = format!("{counter_key}/go");
+    if n as usize == size {
+        store
+            .set(&go_key, b"1")
+            .map_err(|e| CclError::InitFailure(format!("barrier set: {e}")))?;
+    }
+    store
+        .wait(&go_key, timeout)
+        .map_err(|e| CclError::InitFailure(format!("barrier wait: {e}")))?;
+    Ok(())
+}
+
+/// Establish full-mesh TCP links: every rank listens; the higher rank of
+/// each pair dials the lower; a 8-byte hello (`rank:u32 || magic:u32`)
+/// identifies the dialer.
+fn tcp_links(
+    world: &str,
+    rank: usize,
+    size: usize,
+    store: &StoreClient,
+    limiter: Option<Arc<RateLimiter>>,
+    timeout: Duration,
+) -> CclResult<HashMap<usize, Box<dyn Link>>> {
+    const HELLO_MAGIC: u32 = 0x4D57_4C4B; // "MWLK"
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| CclError::InitFailure(format!("listener: {e}")))?;
+    let my_addr = listener
+        .local_addr()
+        .map_err(|e| CclError::InitFailure(e.to_string()))?;
+    store
+        .set(&key(world, &format!("addr/{rank}")), my_addr.to_string().as_bytes())
+        .map_err(|e| CclError::InitFailure(format!("publish addr: {e}")))?;
+
+    let mut links: HashMap<usize, Box<dyn Link>> = HashMap::new();
+
+    // Dial every lower rank.
+    for peer in 0..rank {
+        let addr_bytes = store
+            .wait(&key(world, &format!("addr/{peer}")), timeout)
+            .map_err(|e| CclError::InitFailure(format!("peer {peer} addr: {e}")))?;
+        let addr: SocketAddr = String::from_utf8(addr_bytes)
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| CclError::InitFailure(format!("bad addr for {peer}")))?;
+        let mut stream = TcpStream::connect_timeout(&addr, timeout)
+            .map_err(|e| CclError::InitFailure(format!("dial {peer}: {e}")))?;
+        let mut hello = [0u8; 8];
+        hello[0..4].copy_from_slice(&(rank as u32).to_le_bytes());
+        hello[4..8].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
+        stream
+            .write_all(&hello)
+            .map_err(|e| CclError::InitFailure(format!("hello to {peer}: {e}")))?;
+        links.insert(peer, Box::new(TcpLink::new(peer, stream, limiter.clone())?));
+    }
+
+    // Accept every higher rank.
+    let expect_accepts = size - rank - 1;
+    listener
+        .set_nonblocking(false)
+        .map_err(|e| CclError::InitFailure(e.to_string()))?;
+    let deadline = std::time::Instant::now() + timeout;
+    for _ in 0..expect_accepts {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| CclError::InitFailure(e.to_string()))?;
+        let stream = loop {
+            match listener.accept() {
+                Ok((s, _)) => break s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(CclError::InitFailure("accept timeout".into()));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(CclError::InitFailure(format!("accept: {e}"))),
+            }
+        };
+        stream
+            .set_nonblocking(false)
+            .map_err(|e| CclError::InitFailure(e.to_string()))?;
+        let mut hello = [0u8; 8];
+        let mut s = stream;
+        s.read_exact(&mut hello)
+            .map_err(|e| CclError::InitFailure(format!("hello read: {e}")))?;
+        let peer = u32::from_le_bytes(hello[0..4].try_into().unwrap()) as usize;
+        let magic = u32::from_le_bytes(hello[4..8].try_into().unwrap());
+        if magic != HELLO_MAGIC || peer <= rank || peer >= size {
+            return Err(CclError::InitFailure(format!(
+                "bad hello: peer={peer} magic={magic:#x}"
+            )));
+        }
+        links.insert(peer, Box::new(TcpLink::new(peer, s, limiter.clone())?));
+    }
+    Ok(links)
+}
+
+/// Establish full-mesh shm ring links (pair files created by the lower
+/// rank of each pair).
+fn shm_links(
+    world: &str,
+    rank: usize,
+    size: usize,
+    ring_bytes: usize,
+    timeout: Duration,
+) -> CclResult<HashMap<usize, Box<dyn Link>>> {
+    let dir = shm_dir();
+    let mut links: HashMap<usize, Box<dyn Link>> = HashMap::new();
+    for peer in 0..size {
+        if peer == rank {
+            continue;
+        }
+        let link = ShmLink::connect(&dir, world, rank, peer, ring_bytes, timeout)?;
+        links.insert(peer, Box::new(link));
+    }
+    Ok(links)
+}
+
+/// Test/bench helper: bring up all `size` ranks of a world on threads in
+/// this process and return them in rank order. Transports behave exactly
+/// as across processes (same sockets / mmap files).
+pub struct Rendezvous;
+
+impl Rendezvous {
+    pub fn single_process(name: &str, size: usize, opts: WorldOptions) -> CclResult<Vec<World>> {
+        let port = crate::util::free_port();
+        let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+        let handles: Vec<_> = (0..size)
+            .map(|rank| {
+                let name = name.to_string();
+                let opts = opts.clone();
+                std::thread::spawn(move || World::init(&name, rank, size, addr, opts))
+            })
+            .collect();
+        let mut worlds = Vec::with_capacity(size);
+        for h in handles {
+            worlds.push(h.join().map_err(|_| {
+                CclError::InitFailure("rendezvous thread panicked".into())
+            })??);
+        }
+        Ok(worlds)
+    }
+}

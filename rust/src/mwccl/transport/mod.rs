@@ -1,0 +1,49 @@
+//! Point-to-point transports beneath the collectives.
+//!
+//! Two real transports exist, chosen per world at rendezvous:
+//!
+//! * [`tcp::TcpLink`] — the *host-to-host* path. Peer death is visible:
+//!   the kernel returns EOF/ECONNRESET and the link fails all pending
+//!   receives with [`CclError::RemoteError`] (NCCL's `ncclRemoteError`).
+//! * [`shm::ShmLink`] — the *intra-host* path (stands in for
+//!   NVLink/shared-memory). A lock-free SPSC ring in an mmap'd file.
+//!   Peer death is **silent**: no error, no wakeup — a pending receive
+//!   waits forever until something above (the MultiWorld watchdog)
+//!   aborts the link. This reproduces the failure-detection gap that
+//!   motivates the paper's watchdog design.
+//!
+//! Both push received frames into a shared [`inbox::Inbox`] keyed by
+//! tag, so `recv` order is decoupled from arrival order (needed for the
+//! paper's "P4 must receive from P2 and P3 in arbitrary order" case).
+
+pub mod inbox;
+pub mod ratelimit;
+pub mod shm;
+pub mod tcp;
+
+use super::error::CclResult;
+use std::time::Duration;
+
+/// A bidirectional point-to-point channel to one peer rank.
+pub trait Link: Send + Sync {
+    /// Send one logical message (gathered from `parts`) under `tag`.
+    /// Blocks only on transport backpressure.
+    fn send(&self, tag: u64, parts: &[&[u8]]) -> CclResult<()>;
+
+    /// Block until a message with `tag` arrives; `timeout=None` waits
+    /// until the link errors or is aborted.
+    fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>>;
+
+    /// Non-blocking poll for a message with `tag`.
+    fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>>;
+
+    /// Abort everything pending on this link (local decision — watchdog
+    /// or world teardown). Idempotent.
+    fn abort(&self, reason: &str);
+
+    /// Transport name for diagnostics ("tcp" / "shm").
+    fn kind(&self) -> &'static str;
+
+    /// Peer rank this link talks to.
+    fn peer(&self) -> usize;
+}

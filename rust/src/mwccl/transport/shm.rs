@@ -1,0 +1,565 @@
+//! Shared-memory ring transport — the intra-host path (the analogue of
+//! NCCL's shared-memory/NVLink channel).
+//!
+//! One `ShmLink` owns a *pair* of SPSC rings in mmap'd files (one per
+//! direction). The ring is a classic head/tail byte ring: the producer
+//! advances `head`, the consumer advances `tail`, frames wrap around the
+//! capacity.
+//!
+//! **Deliberate semantics: peer death is silent.** There is no liveness
+//! word in the ring and no I/O event when the peer exits — a pending
+//! `recv` just waits, exactly like NCCL over shared memory ("the
+//! communication via shared memory does not raise any exception even in
+//! the presence of a failure", §3.2). The only ways out are local
+//! [`Link::abort`] — which is what the MultiWorld watchdog calls — or a
+//! caller-supplied timeout.
+
+use super::inbox::Inbox;
+use super::Link;
+use crate::mwccl::error::{CclError, CclResult};
+use crate::mwccl::wire::{decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FRAME_HDR, SEG_MAX};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Default ring capacity (per direction).
+pub const DEFAULT_RING_BYTES: usize = 4 * 1024 * 1024;
+
+const MAGIC: u64 = 0x4D57_52494E4731; // "MWRING1"
+const HDR_BYTES: usize = 64;
+
+/// A single mmap'd SPSC ring. `head`/`tail` are free-running cursors
+/// (never wrapped) so fill level is simply `head - tail`.
+struct Ring {
+    ptr: *mut u8,
+    map_len: usize,
+    capacity: usize,
+    path: PathBuf,
+    owner: bool,
+}
+
+// The raw pointer is to MAP_SHARED memory; synchronization is done via
+// the atomic cursors, single-producer/single-consumer per direction.
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn create(path: &Path, capacity: usize) -> CclResult<Ring> {
+        let map_len = HDR_BYTES + capacity;
+        let file = open_shm(path, true, map_len)?;
+        let ptr = map_shm(file, map_len)?;
+        let ring = Ring { ptr, map_len, capacity, path: path.to_path_buf(), owner: true };
+        // Initialize cursors before publishing the magic.
+        ring.cap_slot().store(capacity as u64, Ordering::Relaxed);
+        ring.head().store(0, Ordering::Relaxed);
+        ring.tail().store(0, Ordering::Relaxed);
+        ring.magic().store(MAGIC, Ordering::Release);
+        Ok(ring)
+    }
+
+    fn attach(path: &Path, timeout: Duration) -> CclResult<Ring> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if path.exists() {
+                if let Ok(meta) = std::fs::metadata(path) {
+                    let map_len = meta.len() as usize;
+                    if map_len > HDR_BYTES {
+                        let file = open_shm(path, false, map_len)?;
+                        let ptr = map_shm(file, map_len)?;
+                        let ring = Ring {
+                            ptr,
+                            map_len,
+                            capacity: map_len - HDR_BYTES,
+                            path: path.to_path_buf(),
+                            owner: false,
+                        };
+                        if ring.magic().load(Ordering::Acquire) == MAGIC {
+                            let cap = ring.cap_slot().load(Ordering::Relaxed) as usize;
+                            if cap != ring.capacity {
+                                return Err(CclError::InitFailure(format!(
+                                    "ring capacity mismatch: file says {cap}, mapped {}",
+                                    ring.capacity
+                                )));
+                            }
+                            return Ok(ring);
+                        }
+                        // Not initialized yet; unmap and retry.
+                        drop(ring);
+                    }
+                }
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(CclError::InitFailure(format!(
+                    "shm ring {} never appeared",
+                    path.display()
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[inline]
+    fn magic(&self) -> &AtomicU64 {
+        unsafe { &*(self.ptr as *const AtomicU64) }
+    }
+
+    #[inline]
+    fn cap_slot(&self) -> &AtomicU64 {
+        unsafe { &*(self.ptr.add(8) as *const AtomicU64) }
+    }
+
+    #[inline]
+    fn head(&self) -> &AtomicU64 {
+        unsafe { &*(self.ptr.add(16) as *const AtomicU64) }
+    }
+
+    #[inline]
+    fn tail(&self) -> &AtomicU64 {
+        unsafe { &*(self.ptr.add(24) as *const AtomicU64) }
+    }
+
+    #[inline]
+    fn data(&self) -> *mut u8 {
+        unsafe { self.ptr.add(HDR_BYTES) }
+    }
+
+    /// Copy `src` into the ring at free-running offset `at` (wrapping).
+    fn write_at(&self, at: u64, src: &[u8]) {
+        let cap = self.capacity;
+        let off = (at % cap as u64) as usize;
+        let first = src.len().min(cap - off);
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.data().add(off), first);
+            if first < src.len() {
+                std::ptr::copy_nonoverlapping(
+                    src.as_ptr().add(first),
+                    self.data(),
+                    src.len() - first,
+                );
+            }
+        }
+    }
+
+    /// Copy out of the ring at free-running offset `at` (wrapping).
+    fn read_at(&self, at: u64, dst: &mut [u8]) {
+        let cap = self.capacity;
+        let off = (at % cap as u64) as usize;
+        let first = dst.len().min(cap - off);
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.data().add(off), dst.as_mut_ptr(), first);
+            if first < dst.len() {
+                std::ptr::copy_nonoverlapping(
+                    self.data(),
+                    dst.as_mut_ptr().add(first),
+                    dst.len() - first,
+                );
+            }
+        }
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr as *mut libc::c_void, self.map_len);
+        }
+        if self.owner {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+fn open_shm(path: &Path, create: bool, len: usize) -> CclResult<i32> {
+    use std::os::unix::ffi::OsStrExt;
+    let cstr = std::ffi::CString::new(path.as_os_str().as_bytes())
+        .map_err(|e| CclError::InitFailure(format!("bad path: {e}")))?;
+    let flags = if create { libc::O_RDWR | libc::O_CREAT } else { libc::O_RDWR };
+    let fd = unsafe { libc::open(cstr.as_ptr(), flags, 0o600) };
+    if fd < 0 {
+        return Err(CclError::InitFailure(format!(
+            "open {} failed: {}",
+            path.display(),
+            std::io::Error::last_os_error()
+        )));
+    }
+    if create {
+        let rc = unsafe { libc::ftruncate(fd, len as libc::off_t) };
+        if rc != 0 {
+            unsafe { libc::close(fd) };
+            return Err(CclError::InitFailure(format!(
+                "ftruncate: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+    }
+    Ok(fd)
+}
+
+fn map_shm(fd: i32, len: usize) -> CclResult<*mut u8> {
+    let ptr = unsafe {
+        libc::mmap(
+            std::ptr::null_mut(),
+            len,
+            libc::PROT_READ | libc::PROT_WRITE,
+            libc::MAP_SHARED,
+            fd,
+            0,
+        )
+    };
+    unsafe { libc::close(fd) };
+    if ptr == libc::MAP_FAILED {
+        return Err(CclError::InitFailure(format!(
+            "mmap: {}",
+            std::io::Error::last_os_error()
+        )));
+    }
+    Ok(ptr as *mut u8)
+}
+
+/// The bidirectional shared-memory link (a TX ring and an RX ring).
+pub struct ShmLink {
+    peer: usize,
+    tx: Arc<Ring>,
+    rx: Arc<Ring>,
+    inbox: Arc<Inbox>,
+    aborted: Arc<AtomicBool>,
+    send_lock: Mutex<()>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ShmLink {
+    /// Create or attach the ring pair for (me, peer) under `dir`.
+    ///
+    /// File naming is symmetric: the i→j direction lives in
+    /// `mw-<world>-<i>to<j>.ring`. The *creator* side makes both files;
+    /// the other side attaches. Creator is the lower rank.
+    pub fn connect(
+        dir: &Path,
+        world: &str,
+        me: usize,
+        peer: usize,
+        ring_bytes: usize,
+        timeout: Duration,
+    ) -> CclResult<Self> {
+        let name = |from: usize, to: usize| dir.join(format!("mw-{world}-{from}to{to}.ring"));
+        let (tx, rx) = if me < peer {
+            let tx = Ring::create(&name(me, peer), ring_bytes)?;
+            let rx = Ring::create(&name(peer, me), ring_bytes)?;
+            (tx, rx)
+        } else {
+            let tx = Ring::attach(&name(me, peer), timeout)?;
+            let rx = Ring::attach(&name(peer, me), timeout)?;
+            (tx, rx)
+        };
+        let tx = Arc::new(tx);
+        let rx = Arc::new(rx);
+        let inbox = Arc::new(Inbox::new());
+        let aborted = Arc::new(AtomicBool::new(false));
+        let reader = {
+            let rx = rx.clone();
+            let inbox = inbox.clone();
+            let aborted = aborted.clone();
+            std::thread::Builder::new()
+                .name(format!("shm-rx-peer{peer}"))
+                .spawn(move || reader_loop(rx, inbox, aborted))
+                .map_err(|e| CclError::Transport(format!("spawn: {e}")))?
+        };
+        Ok(ShmLink {
+            peer,
+            tx,
+            rx,
+            inbox,
+            aborted,
+            send_lock: Mutex::new(()),
+            reader: Mutex::new(Some(reader)),
+        })
+    }
+
+    /// Free bytes in the TX ring.
+    fn tx_free(&self) -> usize {
+        let head = self.tx.head().load(Ordering::Acquire);
+        let tail = self.tx.tail().load(Ordering::Acquire);
+        self.tx.capacity - (head - tail) as usize
+    }
+}
+
+/// Consumer loop: drain frames from the RX ring into the inbox.
+///
+/// Spin-then-yield: busy-poll briefly (latency), then sleep 50 µs bites
+/// (CPU). **No peer-liveness check on purpose** — see module docs.
+fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>) {
+    let mut hdr = [0u8; FRAME_HDR];
+    let mut payload = vec![0u8; SEG_MAX];
+    let mut idle_spins = 0u32;
+    loop {
+        if aborted.load(Ordering::Acquire) {
+            return;
+        }
+        let head = rx.head().load(Ordering::Acquire);
+        let tail = rx.tail().load(Ordering::Acquire);
+        let avail = (head - tail) as usize;
+        if avail < FRAME_HDR {
+            idle_spins += 1;
+            if idle_spins < 256 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            continue;
+        }
+        idle_spins = 0;
+        rx.read_at(tail, &mut hdr);
+        let (tag, len, flags) = decode_frame_hdr(&hdr);
+        let len = len as usize;
+        debug_assert!(len <= SEG_MAX);
+        let need = FRAME_HDR + len;
+        // The producer publishes head only after the whole frame is
+        // in the ring, so avail >= FRAME_HDR implies we must wait for
+        // the rest if the header says more.
+        while ((rx.head().load(Ordering::Acquire) - tail) as usize) < need {
+            if aborted.load(Ordering::Acquire) {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        rx.read_at(tail + FRAME_HDR as u64, &mut payload[..len]);
+        rx.tail().store(tail + need as u64, Ordering::Release);
+        inbox.push_frame(tag, &payload[..len], flags & FLAG_LAST != 0);
+    }
+}
+
+impl Link for ShmLink {
+    fn send(&self, tag: u64, parts: &[&[u8]]) -> CclResult<()> {
+        if self.aborted.load(Ordering::Acquire) {
+            return Err(CclError::Aborted("shm link aborted".into()));
+        }
+        let _guard = self.send_lock.lock().unwrap();
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut hdr = [0u8; FRAME_HDR];
+        let mut remaining = total;
+        let mut part_idx = 0usize;
+        let mut part_off = 0usize;
+        // Segments must fit the ring with room for ≥2 frames in flight,
+        // or a message bigger than the ring would wait forever for space
+        // that can never exist.
+        let max_seg = SEG_MAX
+            .min((self.tx.capacity.saturating_sub(2 * FRAME_HDR)) / 2)
+            .max(1024);
+        loop {
+            let seg = remaining.min(max_seg);
+            let need = FRAME_HDR + seg;
+            // Wait for ring space. Peer death leaves the ring full forever;
+            // only a local abort (the watchdog) breaks the wait. Faithful
+            // to NCCL-over-shm.
+            let mut spins = 0u32;
+            while self.tx_free() < need {
+                if self.aborted.load(Ordering::Acquire) {
+                    return Err(CclError::Aborted("shm link aborted".into()));
+                }
+                spins += 1;
+                if spins < 256 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+            let head = self.tx.head().load(Ordering::Relaxed);
+            let flags = if seg == remaining { FLAG_LAST } else { 0 };
+            encode_frame_hdr(&mut hdr, tag, seg as u32, flags);
+            self.tx.write_at(head, &hdr);
+            // Gather `seg` bytes from parts.
+            let mut written = 0usize;
+            while written < seg {
+                let part = parts[part_idx];
+                let avail = part.len() - part_off;
+                let take = avail.min(seg - written);
+                self.tx
+                    .write_at(head + (FRAME_HDR + written) as u64, &part[part_off..part_off + take]);
+                written += take;
+                part_off += take;
+                if part_off == part.len() {
+                    part_idx += 1;
+                    part_off = 0;
+                }
+            }
+            // Publish the whole frame at once.
+            self.tx.head().store(head + need as u64, Ordering::Release);
+            remaining -= seg;
+            if remaining == 0 {
+                return Ok(());
+            }
+        }
+    }
+
+    fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        self.inbox.recv(tag, timeout)
+    }
+
+    fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>> {
+        self.inbox.try_recv(tag)
+    }
+
+    fn abort(&self, reason: &str) {
+        if self.aborted.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.inbox.fail(CclError::Aborted(reason.to_string()));
+    }
+
+    fn kind(&self) -> &'static str {
+        "shm"
+    }
+
+    fn peer(&self) -> usize {
+        self.peer
+    }
+}
+
+impl Drop for ShmLink {
+    fn drop(&mut self) {
+        self.abort("link dropped");
+        if let Some(t) = self.reader.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        let _ = self.rx; // rings unmap in their own Drop
+    }
+}
+
+/// Directory for ring files: `$MW_SHM_DIR`, else `/dev/shm` if present,
+/// else the system temp dir.
+pub fn shm_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("MW_SHM_DIR") {
+        return PathBuf::from(d);
+    }
+    let dev_shm = Path::new("/dev/shm");
+    if dev_shm.is_dir() {
+        dev_shm.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{read_tensor, write_tensor, Tensor};
+    use crate::util::prng::Rng;
+
+    fn unique_world(tag: &str) -> String {
+        format!(
+            "t{}-{}-{}",
+            std::process::id(),
+            tag,
+            crate::util::time::unix_millis()
+        )
+    }
+
+    fn link_pair(tag: &str, ring_bytes: usize) -> (ShmLink, ShmLink) {
+        let dir = shm_dir();
+        let world = unique_world(tag);
+        let w2 = world.clone();
+        let d2 = dir.clone();
+        let t = std::thread::spawn(move || {
+            ShmLink::connect(&d2, &w2, 1, 0, ring_bytes, Duration::from_secs(5)).unwrap()
+        });
+        let a = ShmLink::connect(&dir, &world, 0, 1, ring_bytes, Duration::from_secs(5)).unwrap();
+        let b = t.join().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn small_roundtrip() {
+        let (a, b) = link_pair("small", 64 * 1024);
+        a.send(1, &[b"ping"]).unwrap();
+        assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"ping");
+        b.send(2, &[b"pong"]).unwrap();
+        assert_eq!(a.recv(2, Some(Duration::from_secs(2))).unwrap(), b"pong");
+    }
+
+    #[test]
+    fn message_larger_than_ring() {
+        // 4 MB tensor through 256 KiB rings forces cut-through streaming.
+        let (a, b) = link_pair("big", 256 * 1024);
+        let mut rng = Rng::new(3);
+        let t = Tensor::f32_1d(1_000_000, &mut rng);
+        let mut framed = Vec::new();
+        write_tensor(&mut framed, &t).unwrap();
+        let checksum = t.checksum();
+        let sender = std::thread::spawn(move || {
+            a.send(9, &[&framed]).unwrap();
+            a // keep alive until send completes
+        });
+        let got = b.recv(9, Some(Duration::from_secs(20))).unwrap();
+        sender.join().unwrap();
+        let back = read_tensor(&mut got.as_slice()).unwrap();
+        assert_eq!(back.checksum(), checksum);
+    }
+
+    #[test]
+    fn wraparound_many_messages() {
+        let (a, b) = link_pair("wrap", 16 * 1024);
+        let payload = vec![0xABu8; 3000];
+        for i in 0..64u64 {
+            a.send(i, &[&payload]).unwrap();
+            let got = b.recv(i, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(got.len(), 3000);
+            assert!(got.iter().all(|&x| x == 0xAB));
+        }
+    }
+
+    #[test]
+    fn peer_death_is_silent() {
+        // THE key semantic: dropping the peer does NOT error the recv.
+        let (a, b) = link_pair("silent", 64 * 1024);
+        drop(a);
+        let res = b.recv(5, Some(Duration::from_millis(200)));
+        assert!(
+            matches!(res, Err(CclError::Timeout(_))),
+            "shm peer death must be silent (timeout), got {res:?}"
+        );
+    }
+
+    #[test]
+    fn abort_unblocks_silent_wait() {
+        let (_a, b) = link_pair("abort", 64 * 1024);
+        let b = Arc::new(b);
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.recv(5, None));
+        std::thread::sleep(Duration::from_millis(30));
+        b.abort("watchdog says peer is dead");
+        assert!(matches!(t.join().unwrap(), Err(CclError::Aborted(_))));
+    }
+
+    #[test]
+    fn interleaved_tags() {
+        let (a, b) = link_pair("tags", 64 * 1024);
+        a.send(10, &[b"ten"]).unwrap();
+        a.send(20, &[b"twenty"]).unwrap();
+        a.send(10, &[b"ten2"]).unwrap();
+        assert_eq!(b.recv(20, Some(Duration::from_secs(2))).unwrap(), b"twenty");
+        assert_eq!(b.recv(10, Some(Duration::from_secs(2))).unwrap(), b"ten");
+        assert_eq!(b.recv(10, Some(Duration::from_secs(2))).unwrap(), b"ten2");
+    }
+
+    #[test]
+    fn ring_files_cleaned_up_by_owner() {
+        let dir = shm_dir();
+        let world = unique_world("cleanup");
+        let path = dir.join(format!("mw-{world}-0to1.ring"));
+        {
+            let (_a, _b) = {
+                let w2 = world.clone();
+                let d2 = dir.clone();
+                let t = std::thread::spawn(move || {
+                    ShmLink::connect(&d2, &w2, 1, 0, 8192, Duration::from_secs(5)).unwrap()
+                });
+                let a =
+                    ShmLink::connect(&dir, &world, 0, 1, 8192, Duration::from_secs(5)).unwrap();
+                (a, t.join().unwrap())
+            };
+            assert!(path.exists());
+        }
+        assert!(!path.exists(), "owner drop must unlink ring files");
+    }
+}

@@ -1,0 +1,299 @@
+//! TCP link — the host-to-host transport.
+//!
+//! Peer death is *detectable* here: the reader thread sees EOF or
+//! ECONNRESET and fails the inbox with [`CclError::RemoteError`], the
+//! analogue of `ncclRemoteError` in §3.2 of the paper. An optional
+//! shared [`RateLimiter`] emulates the testbed's 10 Gbps NIC.
+
+use super::inbox::Inbox;
+use super::ratelimit::RateLimiter;
+use super::Link;
+use crate::mwccl::error::{CclError, CclResult};
+use crate::mwccl::wire::{decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FRAME_HDR, SEG_MAX};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// See module docs.
+pub struct TcpLink {
+    peer: usize,
+    writer: Mutex<TcpStream>,
+    stream: TcpStream, // kept for shutdown() on abort
+    inbox: Arc<Inbox>,
+    limiter: Option<Arc<RateLimiter>>,
+    aborted: AtomicBool,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl TcpLink {
+    /// Wrap an established, already-identified stream.
+    pub fn new(peer: usize, stream: TcpStream, limiter: Option<Arc<RateLimiter>>) -> CclResult<Self> {
+        stream
+            .set_nodelay(true)
+            .map_err(|e| CclError::Transport(format!("nodelay: {e}")))?;
+        let writer = stream
+            .try_clone()
+            .map_err(|e| CclError::Transport(format!("clone: {e}")))?;
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| CclError::Transport(format!("clone: {e}")))?;
+        let inbox = Arc::new(Inbox::new());
+        let inbox2 = inbox.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("tcp-rx-peer{peer}"))
+            .spawn(move || reader_loop(read_half, inbox2, peer))
+            .map_err(|e| CclError::Transport(format!("spawn: {e}")))?;
+        Ok(TcpLink {
+            peer,
+            writer: Mutex::new(writer),
+            stream,
+            inbox,
+            limiter,
+            aborted: AtomicBool::new(false),
+            reader: Mutex::new(Some(reader)),
+        })
+    }
+
+    fn check_aborted(&self) -> CclResult<()> {
+        if self.aborted.load(Ordering::Acquire) {
+            Err(CclError::Aborted("tcp link aborted".into()))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, inbox: Arc<Inbox>, peer: usize) {
+    let mut hdr = [0u8; FRAME_HDR];
+    let mut payload = vec![0u8; SEG_MAX];
+    loop {
+        if let Err(e) = stream.read_exact(&mut hdr) {
+            // EOF or reset: the remote side is gone. This is the
+            // ncclRemoteError analogue — detectable on this path only.
+            inbox.fail(CclError::RemoteError { peer, detail: e.to_string() });
+            return;
+        }
+        let (tag, len, flags) = decode_frame_hdr(&hdr);
+        let len = len as usize;
+        if len > SEG_MAX {
+            inbox.fail(CclError::Transport(format!("oversized frame {len}")));
+            return;
+        }
+        if let Err(e) = stream.read_exact(&mut payload[..len]) {
+            inbox.fail(CclError::RemoteError { peer, detail: e.to_string() });
+            return;
+        }
+        inbox.push_frame(tag, &payload[..len], flags & FLAG_LAST != 0);
+    }
+}
+
+impl Link for TcpLink {
+    fn send(&self, tag: u64, parts: &[&[u8]]) -> CclResult<()> {
+        self.check_aborted()?;
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        // Hold the writer for the whole logical message so frames of two
+        // concurrent sends never interleave (reassembly contract).
+        let mut w = self.writer.lock().unwrap();
+        // Iterate the logical message in SEG_MAX slices that may span
+        // `parts` boundaries.
+        let mut hdr = [0u8; FRAME_HDR];
+        let mut remaining = total;
+        let mut part_idx = 0usize;
+        let mut part_off = 0usize;
+        if total == 0 {
+            encode_frame_hdr(&mut hdr, tag, 0, FLAG_LAST);
+            w.write_all(&hdr)
+                .map_err(|e| CclError::RemoteError { peer: self.peer, detail: e.to_string() })?;
+            return Ok(());
+        }
+        while remaining > 0 {
+            let seg = remaining.min(SEG_MAX);
+            if let Some(rl) = &self.limiter {
+                rl.acquire(seg + FRAME_HDR);
+            }
+            let flags = if seg == remaining { FLAG_LAST } else { 0 };
+            encode_frame_hdr(&mut hdr, tag, seg as u32, flags);
+            w.write_all(&hdr)
+                .map_err(|e| CclError::RemoteError { peer: self.peer, detail: e.to_string() })?;
+            let mut seg_left = seg;
+            while seg_left > 0 {
+                let part = parts[part_idx];
+                let avail = part.len() - part_off;
+                let take = avail.min(seg_left);
+                w.write_all(&part[part_off..part_off + take]).map_err(|e| {
+                    CclError::RemoteError { peer: self.peer, detail: e.to_string() }
+                })?;
+                part_off += take;
+                seg_left -= take;
+                if part_off == part.len() {
+                    part_idx += 1;
+                    part_off = 0;
+                }
+            }
+            remaining -= seg;
+        }
+        Ok(())
+    }
+
+    fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        self.inbox.recv(tag, timeout)
+    }
+
+    fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>> {
+        self.inbox.try_recv(tag)
+    }
+
+    fn abort(&self, reason: &str) {
+        if self.aborted.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.inbox.fail(CclError::Aborted(reason.to_string()));
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn peer(&self) -> usize {
+        self.peer
+    }
+}
+
+impl Drop for TcpLink {
+    fn drop(&mut self) {
+        self.abort("link dropped");
+        if let Some(t) = self.reader.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{read_tensor, write_tensor, Tensor};
+    use crate::util::prng::Rng;
+    use std::net::TcpListener;
+
+    /// Build a connected pair of links over loopback.
+    fn link_pair(limiter: Option<Arc<RateLimiter>>) -> (TcpLink, TcpLink) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || listener.accept().unwrap().0);
+        let a_stream = TcpStream::connect(addr).unwrap();
+        let b_stream = t.join().unwrap();
+        let a = TcpLink::new(1, a_stream, limiter.clone()).unwrap();
+        let b = TcpLink::new(0, b_stream, limiter).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn small_message_roundtrip() {
+        let (a, b) = link_pair(None);
+        a.send(42, &[b"hello ", b"world"]).unwrap();
+        assert_eq!(b.recv(42, Some(Duration::from_secs(2))).unwrap(), b"hello world");
+    }
+
+    #[test]
+    fn large_message_segments_and_reassembles() {
+        let (a, b) = link_pair(None);
+        let mut rng = Rng::new(77);
+        let t = Tensor::f32_1d(1_000_000, &mut rng); // 4 MB > SEG_MAX
+        let mut framed = Vec::new();
+        write_tensor(&mut framed, &t).unwrap();
+        a.send(7, &[&framed]).unwrap();
+        let got = b.recv(7, Some(Duration::from_secs(10))).unwrap();
+        let back = read_tensor(&mut got.as_slice()).unwrap();
+        assert_eq!(back.checksum(), t.checksum());
+    }
+
+    #[test]
+    fn empty_message() {
+        let (a, b) = link_pair(None);
+        a.send(1, &[]).unwrap();
+        assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"");
+    }
+
+    #[test]
+    fn bidirectional_concurrent() {
+        let (a, b) = link_pair(None);
+        let a = Arc::new(a);
+        let b = Arc::new(b);
+        let a2 = a.clone();
+        let b2 = b.clone();
+        let t1 = std::thread::spawn(move || {
+            for i in 0..100u32 {
+                a2.send(1, &[&i.to_le_bytes()]).unwrap();
+            }
+        });
+        let t2 = std::thread::spawn(move || {
+            for i in 0..100u32 {
+                b2.send(2, &[&(i * 2).to_le_bytes()]).unwrap();
+            }
+        });
+        for i in 0..100u32 {
+            let m = b.recv(1, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(u32::from_le_bytes(m.try_into().unwrap()), i);
+            let m = a.recv(2, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(u32::from_le_bytes(m.try_into().unwrap()), i * 2);
+        }
+        t1.join().unwrap();
+        t2.join().unwrap();
+    }
+
+    #[test]
+    fn peer_death_raises_remote_error() {
+        let (a, b) = link_pair(None);
+        drop(a); // "kill" the peer process
+        let err = b.recv(9, Some(Duration::from_secs(2))).unwrap_err();
+        assert!(
+            matches!(err, CclError::RemoteError { .. }),
+            "expected RemoteError (ncclRemoteError analogue), got {err:?}"
+        );
+    }
+
+    #[test]
+    fn abort_wakes_pending_recv() {
+        let (_a, b) = link_pair(None);
+        let b = Arc::new(b);
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.recv(3, None));
+        std::thread::sleep(Duration::from_millis(30));
+        b.abort("watchdog");
+        assert!(matches!(t.join().unwrap(), Err(CclError::Aborted(_))));
+    }
+
+    #[test]
+    fn rate_limiter_caps_throughput() {
+        // 40 MB/s cap; send 2 MB => ≥ ~50 ms wall.
+        let rl = Arc::new(RateLimiter::new(40.0e6));
+        let (a, b) = link_pair(Some(rl));
+        let payload = vec![0u8; 2_000_000];
+        let t0 = std::time::Instant::now();
+        a.send(5, &[&payload]).unwrap();
+        let got = b.recv(5, Some(Duration::from_secs(10))).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(got.len(), payload.len());
+        assert!(dt > 0.03, "rate limit not applied: {dt}s");
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let (a, b) = link_pair(None);
+        assert_eq!(b.try_recv(11).unwrap(), None);
+        a.send(11, &[b"x"]).unwrap();
+        // Poll until the reader thread lands it.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        loop {
+            if let Some(m) = b.try_recv(11).unwrap() {
+                assert_eq!(m, b"x");
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "message never arrived");
+            std::thread::yield_now();
+        }
+    }
+}

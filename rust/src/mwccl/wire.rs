@@ -1,0 +1,101 @@
+//! Frame layout shared by both transports.
+//!
+//! A logical message (one tensor or control payload) is segmented into
+//! frames of at most [`SEG_MAX`] payload bytes so the fixed-size shm ring
+//! never has to hold a whole 4 MB tensor, and so the receiver can start
+//! draining while the sender is still writing (cut-through, not
+//! store-and-forward).
+//!
+//! ```text
+//! frame := tag:u64  seg_len:u32  flags:u8   payload[seg_len]
+//! flags bit0 = LAST segment of this message
+//! ```
+//!
+//! Frames of one message are contiguous on a link (senders hold the link
+//! writer lock for the whole message), so reassembly is a simple
+//! accumulator per tag.
+
+/// Maximum payload bytes per frame.
+pub const SEG_MAX: usize = 256 * 1024;
+
+/// Frame header length: tag(8) + len(4) + flags(1).
+pub const FRAME_HDR: usize = 13;
+
+/// Flag: final segment of the message.
+pub const FLAG_LAST: u8 = 1;
+
+/// Encode a frame header into `out[0..FRAME_HDR]`.
+#[inline]
+pub fn encode_frame_hdr(out: &mut [u8], tag: u64, seg_len: u32, flags: u8) {
+    out[0..8].copy_from_slice(&tag.to_le_bytes());
+    out[8..12].copy_from_slice(&seg_len.to_le_bytes());
+    out[12] = flags;
+}
+
+/// Decode a frame header.
+#[inline]
+pub fn decode_frame_hdr(h: &[u8]) -> (u64, u32, u8) {
+    let tag = u64::from_le_bytes(h[0..8].try_into().unwrap());
+    let len = u32::from_le_bytes(h[8..12].try_into().unwrap());
+    (tag, len, h[12])
+}
+
+/// Tag namespace. User p2p tags live in the low 48 bits; collective ops
+/// get a distinct kind so internal traffic can never collide with user
+/// tags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TagKind {
+    P2p = 0,
+    Broadcast = 1,
+    Reduce = 2,
+    AllReduce = 3,
+    Gather = 4,
+    AllGather = 5,
+    Scatter = 6,
+    Control = 7,
+}
+
+/// Compose a wire tag from kind and a 48-bit id (sequence number or user
+/// tag).
+#[inline]
+pub fn make_tag(kind: TagKind, id: u64) -> u64 {
+    debug_assert!(id < (1 << 48), "tag id overflow");
+    ((kind as u64) << 48) | (id & ((1 << 48) - 1))
+}
+
+/// Split a wire tag back into (kind byte, id).
+#[inline]
+pub fn split_tag(tag: u64) -> (u8, u64) {
+    ((tag >> 48) as u8, tag & ((1 << 48) - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_hdr_roundtrip() {
+        let mut buf = [0u8; FRAME_HDR];
+        encode_frame_hdr(&mut buf, 0xDEADBEEF, 4096, FLAG_LAST);
+        let (tag, len, flags) = decode_frame_hdr(&buf);
+        assert_eq!(tag, 0xDEADBEEF);
+        assert_eq!(len, 4096);
+        assert_eq!(flags, FLAG_LAST);
+    }
+
+    #[test]
+    fn tag_namespace_disjoint() {
+        let user = make_tag(TagKind::P2p, 7);
+        let bcast = make_tag(TagKind::Broadcast, 7);
+        assert_ne!(user, bcast);
+        assert_eq!(split_tag(user), (0, 7));
+        assert_eq!(split_tag(bcast), (1, 7));
+    }
+
+    #[test]
+    fn seg_max_sane() {
+        assert!(SEG_MAX >= 64 * 1024);
+        assert!(SEG_MAX % 4096 == 0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Asynchronous operation handles.
+//!
+//! Every collective returns a [`Work`] immediately (like
+//! `torch.distributed.isend`/`irecv` with `async_op=True`). The paper's
+//! design (§3.2) requires non-blocking CCL operations so one process can
+//! service many worlds; `Work` is the unit the MultiWorld communicator's
+//! busy-wait poller checks.
+
+use super::error::CclError;
+use crate::tensor::Tensor;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Lifecycle of an async op.
+#[derive(Clone, Debug)]
+pub enum WorkState {
+    /// Queued behind earlier ops of the same world.
+    Pending,
+    /// Executing on the world's progress thread.
+    Running,
+    /// Finished; receives carry the tensor, sends carry `None`.
+    Done(Option<Tensor>),
+    /// Failed (remote error, abort, misuse).
+    Failed(CclError),
+}
+
+struct Inner {
+    state: Mutex<WorkState>,
+    cv: Condvar,
+    desc: String,
+}
+
+/// Cloneable handle to one asynchronous collective operation.
+#[derive(Clone)]
+pub struct Work {
+    inner: Arc<Inner>,
+}
+
+impl Work {
+    /// New pending work (crate-internal: worlds create these).
+    pub(crate) fn pending(desc: impl Into<String>) -> Work {
+        Work {
+            inner: Arc::new(Inner {
+                state: Mutex::new(WorkState::Pending),
+                cv: Condvar::new(),
+                desc: desc.into(),
+            }),
+        }
+    }
+
+    /// A work that is already failed (ops issued on broken worlds).
+    pub(crate) fn failed(desc: impl Into<String>, err: CclError) -> Work {
+        let w = Work::pending(desc);
+        w.fail(err);
+        w
+    }
+
+    /// A work that is already complete (degenerate ops, e.g. broadcast
+    /// in a world of size 1).
+    pub(crate) fn done(desc: impl Into<String>, t: Option<Tensor>) -> Work {
+        let w = Work::pending(desc);
+        w.complete(t);
+        w
+    }
+
+    pub(crate) fn set_running(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        if matches!(*st, WorkState::Pending) {
+            *st = WorkState::Running;
+        }
+    }
+
+    pub(crate) fn complete(&self, t: Option<Tensor>) {
+        let mut st = self.inner.state.lock().unwrap();
+        if !matches!(*st, WorkState::Done(_) | WorkState::Failed(_)) {
+            *st = WorkState::Done(t);
+            self.inner.cv.notify_all();
+        }
+    }
+
+    pub(crate) fn fail(&self, err: CclError) {
+        let mut st = self.inner.state.lock().unwrap();
+        if !matches!(*st, WorkState::Done(_) | WorkState::Failed(_)) {
+            *st = WorkState::Failed(err);
+            self.inner.cv.notify_all();
+        }
+    }
+
+    /// Human-readable description ("irecv src=2 tag=7 world=W3").
+    pub fn desc(&self) -> &str {
+        &self.inner.desc
+    }
+
+    /// True once the op is Done or Failed. This is the cheap probe the
+    /// busy-wait poll loop uses.
+    pub fn is_completed(&self) -> bool {
+        matches!(
+            *self.inner.state.lock().unwrap(),
+            WorkState::Done(_) | WorkState::Failed(_)
+        )
+    }
+
+    /// Non-blocking result check: `None` while in flight.
+    pub fn poll(&self) -> Option<Result<Option<Tensor>, CclError>> {
+        match &*self.inner.state.lock().unwrap() {
+            WorkState::Done(t) => Some(Ok(t.clone())),
+            WorkState::Failed(e) => Some(Err(e.clone())),
+            _ => None,
+        }
+    }
+
+    /// Block until completion.
+    pub fn wait(&self) -> Result<Option<Tensor>, CclError> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            match &*st {
+                WorkState::Done(t) => return Ok(t.clone()),
+                WorkState::Failed(e) => return Err(e.clone()),
+                _ => {
+                    st = self.inner.cv.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Block with a deadline; `None` on timeout (op still in flight).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<Option<Tensor>, CclError>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            match &*st {
+                WorkState::Done(t) => return Some(Ok(t.clone())),
+                WorkState::Failed(e) => return Some(Err(e.clone())),
+                _ => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (guard, _) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                }
+            }
+        }
+    }
+
+    /// The failure, if the op failed (PyTorch's `Work.exception()`).
+    pub fn exception(&self) -> Option<CclError> {
+        match &*self.inner.state.lock().unwrap() {
+            WorkState::Failed(e) => Some(e.clone()),
+            _ => None,
+        }
+    }
+
+    /// Snapshot of the current state.
+    pub fn state(&self) -> WorkState {
+        self.inner.state.lock().unwrap().clone()
+    }
+}
+
+impl std::fmt::Debug for Work {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Work({} — {:?})", self.desc(), self.state())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let w = Work::pending("isend dst=1");
+        assert!(!w.is_completed());
+        assert!(w.poll().is_none());
+        w.set_running();
+        assert!(!w.is_completed());
+        w.complete(None);
+        assert!(w.is_completed());
+        assert!(matches!(w.poll(), Some(Ok(None))));
+        assert!(w.exception().is_none());
+    }
+
+    #[test]
+    fn failure_path() {
+        let w = Work::pending("irecv src=0");
+        w.fail(CclError::WorldBroken("w1".into()));
+        assert!(w.is_completed());
+        assert!(matches!(w.exception(), Some(CclError::WorldBroken(_))));
+        assert!(w.wait().is_err());
+    }
+
+    #[test]
+    fn terminal_state_is_sticky() {
+        let w = Work::pending("op");
+        w.complete(None);
+        w.fail(CclError::Aborted("late".into()));
+        assert!(matches!(w.poll(), Some(Ok(None))), "Done must not be overwritten");
+        let w2 = Work::pending("op2");
+        w2.fail(CclError::Aborted("first".into()));
+        w2.complete(None);
+        assert!(w2.exception().is_some(), "Failed must not be overwritten");
+    }
+
+    #[test]
+    fn wait_blocks_until_complete() {
+        let w = Work::pending("op");
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || w2.wait());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!w.is_completed());
+        let tensor = Tensor::from_f32(&[2], &[1.0, 2.0]);
+        w.complete(Some(tensor.clone()));
+        let got = t.join().unwrap().unwrap().unwrap();
+        assert_eq!(got, tensor);
+    }
+
+    #[test]
+    fn wait_timeout_returns_none_in_flight() {
+        let w = Work::pending("op");
+        assert!(w.wait_timeout(Duration::from_millis(40)).is_none());
+        w.complete(None);
+        assert!(w.wait_timeout(Duration::from_millis(10)).is_some());
+    }
+}

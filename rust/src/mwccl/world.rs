@@ -1,0 +1,395 @@
+//! The `World` — one fixed process group, one fault domain.
+//!
+//! Membership is decided at init and can never change (that is the CCL
+//! property the paper lifts at the layer above by giving a worker *many*
+//! worlds). All collectives of a world are serialized on its dedicated
+//! *progress thread*, like NCCL serializes per-communicator ops on a
+//! stream; collectives of different worlds run concurrently because each
+//! world has its own thread.
+//!
+//! When any op hits a fatal error (remote peer death on TCP, local
+//! abort), the world transitions to **broken**: links abort, pending and
+//! future works fail with [`CclError::WorldBroken`], and the layer above
+//! is expected to clean up (`WorldManager::remove_world`).
+
+use super::error::{CclError, CclResult};
+use super::transport::Link;
+use super::work::Work;
+use crate::tensor::{read_tensor, serialize::encode_header, Tensor};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Reduction operator for `reduce`/`all_reduce`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Avg,
+}
+
+/// A queued operation: runs on the progress thread.
+pub(crate) struct Job {
+    pub work: Work,
+    pub run: Box<dyn FnOnce(&WorldCore) -> CclResult<Option<Tensor>> + Send>,
+}
+
+/// Internals shared between the handle, the progress thread and the
+/// MultiWorld layer.
+pub struct WorldCore {
+    pub name: String,
+    pub rank: usize,
+    pub size: usize,
+    links: HashMap<usize, Box<dyn Link>>,
+    broken: AtomicBool,
+    broken_reason: Mutex<Option<CclError>>,
+    /// Collective sequence number; all ranks issue collectives in the
+    /// same order (CCL contract), so sequence numbers align across ranks
+    /// and serve as matching tags.
+    seq: AtomicU64,
+    /// Default timeout applied to blocking waits inside collectives.
+    pub op_timeout: Option<Duration>,
+    /// Point-to-point receives pending on the p2p poller thread.
+    /// Unlike collectives (strictly ordered on the progress thread),
+    /// `irecv`s from *different peers* complete concurrently — the
+    /// property Fig. 4's leader (one world, two senders) relies on.
+    pending_recvs: Mutex<Vec<PendingRecv>>,
+}
+
+pub(crate) struct PendingRecv {
+    pub peer: usize,
+    pub wire_tag: u64,
+    pub work: Work,
+}
+
+impl WorldCore {
+    pub(crate) fn link(&self, peer: usize) -> CclResult<&dyn Link> {
+        self.links
+            .get(&peer)
+            .map(|b| b.as_ref())
+            .ok_or_else(|| CclError::InvalidUsage(format!("no link to rank {peer}")))
+    }
+
+    pub(crate) fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn check_healthy(&self) -> CclResult<()> {
+        if self.broken.load(Ordering::Acquire) {
+            Err(CclError::WorldBroken(self.name.clone()))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Serialize a tensor into (header, payload-view) and send to `peer`.
+    pub(crate) fn send_tensor(&self, peer: usize, tag: u64, t: &Tensor) -> CclResult<()> {
+        let hdr = encode_header(t)
+            .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
+        self.link(peer)?.send(tag, &[&hdr, t.bytes()])
+    }
+
+    /// Receive a tensor from `peer` under `tag`.
+    pub(crate) fn recv_tensor(&self, peer: usize, tag: u64) -> CclResult<Tensor> {
+        let bytes = self.link(peer)?.recv(tag, self.op_timeout)?;
+        read_tensor(&mut bytes.as_slice())
+            .map_err(|e| CclError::Transport(format!("bad tensor frame from {peer}: {e}")))
+    }
+
+    /// Queue a p2p receive for the poller.
+    pub(crate) fn register_recv(&self, peer: usize, wire_tag: u64, work: Work) {
+        self.pending_recvs
+            .lock()
+            .unwrap()
+            .push(PendingRecv { peer, wire_tag, work });
+    }
+
+    fn break_world(&self, err: &CclError) {
+        if self.broken.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        *self.broken_reason.lock().unwrap() = Some(err.clone());
+        for link in self.links.values() {
+            link.abort(&format!("world {} broken: {err}", self.name));
+        }
+    }
+}
+
+/// Handle to one world. Clone freely; dropping the last handle shuts the
+/// progress thread down and aborts the links.
+pub struct World {
+    core: Arc<WorldCore>,
+    job_tx: Sender<Job>,
+    /// Progress thread join handle (shared; joined by the last drop).
+    progress: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+    /// p2p poller thread + its stop flag (shared like `progress`).
+    poller: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+    poller_stop: Arc<AtomicBool>,
+    /// Keep the rendezvous store client alive (the watchdog reuses it).
+    store: Option<Arc<crate::store::StoreClient>>,
+    /// Rank-0 hosts the per-world store server; its lifetime is tied to
+    /// the world's (PyTorch behaviour: TCPStore dies with the leader).
+    _store_server: Option<Arc<crate::store::StoreServer>>,
+}
+
+impl std::fmt::Debug for World {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "World({} rank {}/{}{})",
+            self.core.name,
+            self.core.rank,
+            self.core.size,
+            if self.is_broken() { " BROKEN" } else { "" }
+        )
+    }
+}
+
+impl Clone for World {
+    fn clone(&self) -> Self {
+        World {
+            core: self.core.clone(),
+            job_tx: self.job_tx.clone(),
+            progress: self.progress.clone(),
+            poller: self.poller.clone(),
+            poller_stop: self.poller_stop.clone(),
+            store: self.store.clone(),
+            _store_server: self._store_server.clone(),
+        }
+    }
+}
+
+impl World {
+    /// Assemble a world from already-established links (rendezvous calls
+    /// this; tests may call it directly with in-memory pairs).
+    pub(crate) fn from_parts(
+        name: String,
+        rank: usize,
+        size: usize,
+        links: HashMap<usize, Box<dyn Link>>,
+        store: Option<Arc<crate::store::StoreClient>>,
+        store_server: Option<Arc<crate::store::StoreServer>>,
+        op_timeout: Option<Duration>,
+    ) -> World {
+        debug_assert_eq!(links.len(), size - 1, "need a link to every peer");
+        let core = Arc::new(WorldCore {
+            name: name.clone(),
+            rank,
+            size,
+            links,
+            broken: AtomicBool::new(false),
+            broken_reason: Mutex::new(None),
+            seq: AtomicU64::new(0),
+            op_timeout,
+            pending_recvs: Mutex::new(Vec::new()),
+        });
+        let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
+        let core2 = core.clone();
+        let progress = std::thread::Builder::new()
+            .name(format!("mw-progress-{name}-r{rank}"))
+            .spawn(move || progress_loop(core2, job_rx))
+            .expect("spawn progress thread");
+        let poller_stop = Arc::new(AtomicBool::new(false));
+        let core3 = core.clone();
+        let stop3 = poller_stop.clone();
+        let poller = std::thread::Builder::new()
+            .name(format!("mw-p2p-{name}-r{rank}"))
+            .spawn(move || p2p_poll_loop(core3, stop3))
+            .expect("spawn p2p poller");
+        World {
+            core,
+            job_tx,
+            progress: Arc::new(Mutex::new(Some(progress))),
+            poller: Arc::new(Mutex::new(Some(poller))),
+            poller_stop,
+            store,
+            _store_server: store_server,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.core.name
+    }
+
+    pub fn rank(&self) -> usize {
+        self.core.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.core.size
+    }
+
+    /// The per-world store client (heartbeat channel for the watchdog).
+    pub fn store(&self) -> Option<Arc<crate::store::StoreClient>> {
+        self.store.clone()
+    }
+
+    pub fn is_broken(&self) -> bool {
+        self.core.broken.load(Ordering::Acquire)
+    }
+
+    /// Why the world broke, once broken.
+    pub fn broken_reason(&self) -> Option<CclError> {
+        self.core.broken_reason.lock().unwrap().clone()
+    }
+
+    /// Locally break the world: abort links, fail pending and future
+    /// ops. Idempotent. The watchdog calls this on missed heartbeats.
+    pub fn abort(&self, reason: &str) {
+        self.core
+            .break_world(&CclError::Aborted(reason.to_string()));
+    }
+
+    /// Submit an op closure to the progress thread.
+    pub(crate) fn submit(
+        &self,
+        desc: String,
+        run: impl FnOnce(&WorldCore) -> CclResult<Option<Tensor>> + Send + 'static,
+    ) -> Work {
+        if let Err(e) = self.core.check_healthy() {
+            return Work::failed(desc, e);
+        }
+        let work = Work::pending(desc);
+        let job = Job { work: work.clone(), run: Box::new(run) };
+        if self.job_tx.send(job).is_err() {
+            work.fail(CclError::WorldBroken(self.core.name.clone()));
+        }
+        work
+    }
+
+    /// Direct access for the collectives module.
+    pub(crate) fn core(&self) -> &Arc<WorldCore> {
+        &self.core
+    }
+}
+
+impl Drop for World {
+    fn drop(&mut self) {
+        // Only tear down with the last external handle (core is also held
+        // by the progress and poller threads, hence the +2).
+        if Arc::strong_count(&self.core) <= 3 {
+            self.core
+                .break_world(&CclError::Aborted("world dropped".into()));
+            self.poller_stop.store(true, Ordering::Release);
+            // Closing the channel ends the progress loop.
+            let (dead_tx, _) = std::sync::mpsc::channel::<Job>();
+            let _ = std::mem::replace(&mut self.job_tx, dead_tx);
+            if let Some(h) = self.progress.lock().unwrap().take() {
+                let _ = h.join();
+            }
+            if let Some(h) = self.poller.lock().unwrap().take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The p2p poller: completes pending `irecv`s as their messages land,
+/// regardless of order or peer — a non-blocking complement to the
+/// strictly-ordered progress thread. On a fatal link error it breaks the
+/// world and fails everything registered.
+fn p2p_poll_loop(core: Arc<WorldCore>, stop: Arc<AtomicBool>) {
+    let mut idle_spins = 0u32;
+    loop {
+        if stop.load(Ordering::Acquire) {
+            fail_pending(&core, CclError::Aborted("world dropped".into()));
+            return;
+        }
+        if core.broken.load(Ordering::Acquire) {
+            let reason = core
+                .broken_reason
+                .lock()
+                .unwrap()
+                .clone()
+                .unwrap_or_else(|| CclError::WorldBroken(core.name.clone()));
+            fail_pending(&core, reason);
+            // Stay alive to fail future registrations promptly (irecv
+            // also checks health at submit, so this is belt-and-braces).
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        let mut made_progress = false;
+        let mut fatal: Option<CclError> = None;
+        {
+            let mut pending = core.pending_recvs.lock().unwrap();
+            let mut i = 0;
+            while i < pending.len() {
+                let pr = &pending[i];
+                let link = match core.link(pr.peer) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        pending.swap_remove(i).work.fail(e);
+                        continue;
+                    }
+                };
+                match link.try_recv(pr.wire_tag) {
+                    Ok(Some(bytes)) => {
+                        let pr = pending.swap_remove(i);
+                        match read_tensor(&mut bytes.as_slice()) {
+                            Ok(t) => pr.work.complete(Some(t)),
+                            Err(e) => pr.work.fail(CclError::Transport(format!(
+                                "bad tensor frame: {e}"
+                            ))),
+                        }
+                        made_progress = true;
+                    }
+                    Ok(None) => {
+                        i += 1;
+                    }
+                    Err(e) => {
+                        let pr = pending.swap_remove(i);
+                        if e.is_fatal_to_world() && fatal.is_none() {
+                            fatal = Some(e.clone());
+                        }
+                        pr.work.fail(e);
+                        made_progress = true;
+                    }
+                }
+            }
+        }
+        if let Some(e) = fatal {
+            core.break_world(&e);
+            continue;
+        }
+        if made_progress {
+            idle_spins = 0;
+        } else {
+            idle_spins += 1;
+            if idle_spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+    }
+}
+
+fn fail_pending(core: &WorldCore, err: CclError) {
+    let mut pending = core.pending_recvs.lock().unwrap();
+    for pr in pending.drain(..) {
+        pr.work.fail(err.clone());
+    }
+}
+
+/// Runs ops strictly in submission order; a fatal error breaks the world
+/// and fails everything still queued.
+fn progress_loop(core: Arc<WorldCore>, rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        if let Err(e) = core.check_healthy() {
+            job.work.fail(e);
+            continue;
+        }
+        job.work.set_running();
+        match (job.run)(&core) {
+            Ok(t) => job.work.complete(t),
+            Err(e) => {
+                if e.is_fatal_to_world() {
+                    core.break_world(&e);
+                }
+                job.work.fail(e);
+            }
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Dynamic batching: fuse queued requests into model-batch-sized groups,
+//! dispatching when the batch fills or a deadline expires (vLLM-style
+//! continuous batching simplified to the fixed-batch AOT executable).
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Queue {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// See module docs. Thread-safe: producers `push`, one consumer loops on
+/// `next_batch`.
+pub struct DynamicBatcher {
+    q: Mutex<Queue>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub timeout: Duration,
+    depth_high_water: AtomicBool,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, timeout: Duration) -> Arc<Self> {
+        assert!(max_batch >= 1);
+        Arc::new(DynamicBatcher {
+            q: Mutex::new(Queue { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            max_batch,
+            timeout,
+            depth_high_water: AtomicBool::new(false),
+        })
+    }
+
+    /// Enqueue a request. Returns current queue depth (for the
+    /// controller's scaling signal).
+    pub fn push(&self, r: Request) -> usize {
+        let mut q = self.q.lock().unwrap();
+        q.items.push_back(r);
+        let depth = q.items.len();
+        self.cv.notify_one();
+        depth
+    }
+
+    /// Queue depth right now.
+    pub fn depth(&self) -> usize {
+        self.q.lock().unwrap().items.len()
+    }
+
+    /// No more requests will arrive; wake the consumer to drain.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking: wait for the first request, then fill up to `max_batch`
+    /// until `timeout` elapses. `None` once closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut q = self.q.lock().unwrap();
+        // Phase 1: wait for anything.
+        loop {
+            if !q.items.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        }
+        // Phase 2: batch-fill window.
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            if q.items.len() >= self.max_batch || q.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            q = self.cv.wait_timeout(q, deadline - now).unwrap().0;
+        }
+        let n = q.items.len().min(self.max_batch);
+        let batch: Vec<Request> = q.items.drain(..n).collect();
+        self.depth_high_water
+            .fetch_or(q.items.len() > self.max_batch, Ordering::Relaxed);
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![0; 4])
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let b = DynamicBatcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(100), "no timeout wait");
+    }
+
+    #[test]
+    fn partial_batch_waits_for_timeout() {
+        let b = DynamicBatcher::new(8, Duration::from_millis(60));
+        b.push(req(0));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn late_arrivals_join_the_window() {
+        let b = DynamicBatcher::new(8, Duration::from_millis(150));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            b2.push(req(1));
+            b2.push(req(2));
+        });
+        b.push(req(0));
+        let batch = b.next_batch().unwrap();
+        t.join().unwrap();
+        assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let b = DynamicBatcher::new(3, Duration::from_millis(10));
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        let b1 = b.next_batch().unwrap();
+        let b2 = b.next_batch().unwrap();
+        let b3 = b.next_batch().unwrap();
+        let ids: Vec<u64> = b1.iter().chain(&b2).chain(&b3).map(|r| r.id).collect();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        assert_eq!((b1.len(), b2.len(), b3.len()), (3, 3, 1));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        b.push(req(0));
+        b.close();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let b = DynamicBatcher::new(4, Duration::from_secs(10));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(30));
+        b.close();
+        assert!(t.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn depth_reporting() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        assert_eq!(b.push(req(0)), 1);
+        assert_eq!(b.push(req(1)), 2);
+        assert_eq!(b.depth(), 2);
+        let _ = b.next_batch();
+        assert_eq!(b.depth(), 0);
+    }
+}

@@ -1,0 +1,357 @@
+//! The elasticity controller — the piece the paper explicitly leaves as
+//! future work ("the design and implementation of a controller is out
+//! of scope") and that we build as the extension deliverable.
+//!
+//! Responsibilities:
+//!
+//! * **Recovery**: when a worker dies (reported through broken edge
+//!   worlds), mint a replacement replica with *fresh* worlds — broken
+//!   world names are never reused — and orchestrate the join: existing
+//!   members get [`TopoUpdate::AddWorld`] on their control channels, the
+//!   new worker is spawned via the [`Spawner`].
+//! * **Scale-out**: when the leader's queue depth per replica exceeds
+//!   the policy threshold, add a replica to the bottleneck stage the
+//!   same way (Fig. 2c).
+//! * **Scale-in**: drain and retire a replica when utilization stays
+//!   below the low-water mark.
+
+use super::stage_worker::TopoUpdate;
+use super::topology::{NodeId, Topology, WorldDef};
+use crate::util::free_port;
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+/// Scaling policy knobs.
+#[derive(Clone, Debug)]
+pub struct ScalingPolicy {
+    /// Queue depth per alive replica that triggers scale-out.
+    pub scale_up_depth: f64,
+    /// Ceiling on replicas per stage.
+    pub max_replicas: usize,
+    /// Respawn replacements for dead workers.
+    pub recover: bool,
+}
+
+impl Default for ScalingPolicy {
+    fn default() -> Self {
+        ScalingPolicy { scale_up_depth: 16.0, max_replicas: 4, recover: true }
+    }
+}
+
+/// How the controller materializes a new worker (thread in-process,
+/// `multiworld worker` subprocess via the launcher).
+pub trait Spawner: Send + Sync {
+    /// Bring up `node`; it must join exactly `worlds`.
+    fn spawn(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()>;
+}
+
+/// Decisions the controller took (test/bench introspection).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    Recovered { dead: NodeId, replacement: NodeId },
+    ScaledOut { stage: usize, node: NodeId },
+    ScaledIn { node: NodeId },
+}
+
+/// See module docs.
+pub struct Controller {
+    topo: Mutex<Topology>,
+    policy: ScalingPolicy,
+    spawner: Box<dyn Spawner>,
+    /// Control channels of running workers.
+    worker_ctrl: Mutex<HashMap<NodeId, Sender<TopoUpdate>>>,
+    /// Callback to join the leader's side of fresh worlds.
+    leader_join: Box<dyn Fn(&WorldDef) -> anyhow::Result<()> + Send + Sync>,
+    /// Nodes already declared dead (dedupe repeated reports).
+    dead: Mutex<HashSet<NodeId>>,
+    /// Broken-world strikes per worker: a node is declared dead only
+    /// when *every* world it belongs to has been reported broken (its
+    /// neighbors keep at least one healthy world, so they never qualify).
+    strikes: Mutex<HashMap<NodeId, HashSet<String>>>,
+    actions: Mutex<Vec<Action>>,
+}
+
+impl Controller {
+    pub fn new(
+        topo: Topology,
+        policy: ScalingPolicy,
+        spawner: Box<dyn Spawner>,
+        leader_join: impl Fn(&WorldDef) -> anyhow::Result<()> + Send + Sync + 'static,
+    ) -> Controller {
+        Controller {
+            topo: Mutex::new(topo),
+            policy,
+            spawner,
+            worker_ctrl: Mutex::new(HashMap::new()),
+            leader_join: Box::new(leader_join),
+            dead: Mutex::new(HashSet::new()),
+            strikes: Mutex::new(HashMap::new()),
+            actions: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Register a running worker's control channel.
+    pub fn register_worker(&self, node: NodeId, tx: Sender<TopoUpdate>) {
+        self.worker_ctrl.lock().unwrap().insert(node, tx);
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo.lock().unwrap().clone()
+    }
+
+    pub fn actions(&self) -> Vec<Action> {
+        self.actions.lock().unwrap().clone()
+    }
+
+    /// A world broke somewhere in the pipeline. Both worker members get
+    /// a strike; the worker whose *every* world is now reported broken
+    /// is the dead one (its neighbors keep ≥1 healthy world). Dead
+    /// workers are recovered once.
+    pub fn on_world_broken(&self, world: &str) -> anyhow::Result<Option<Action>> {
+        if std::env::var("MW_DEBUG").is_ok() {
+            eprintln!("[controller] broken world reported: {world}");
+        }
+        let dead_node = {
+            let topo = self.topo.lock().unwrap();
+            let Some(def) = topo.worlds.iter().find(|w| w.name == world) else {
+                return Ok(None); // already cleaned up
+            };
+            let members = def.members;
+            let mut strikes = self.strikes.lock().unwrap();
+            let mut verdict = None;
+            for m in members {
+                if let NodeId::Worker { .. } = m {
+                    let set = strikes.entry(m).or_default();
+                    set.insert(world.to_string());
+                    let total = topo.worlds_of(m).len();
+                    if total > 0 && set.len() >= total {
+                        verdict = Some(m);
+                    }
+                }
+            }
+            verdict
+        };
+        let Some(dead_node) = dead_node else { return Ok(None) };
+        self.strikes.lock().unwrap().remove(&dead_node);
+        self.declare_dead(dead_node)
+    }
+
+    /// Declare a worker dead (explicit form used when the observer knows
+    /// exactly who died, e.g. the launcher saw the process exit).
+    pub fn declare_dead(&self, dead_node: NodeId) -> anyhow::Result<Option<Action>> {
+        {
+            let mut dead = self.dead.lock().unwrap();
+            if !dead.insert(dead_node) {
+                return Ok(None); // already handled
+            }
+        }
+        let NodeId::Worker { stage, .. } = dead_node else {
+            return Ok(None);
+        };
+        // Remove the corpse's worlds from the map.
+        {
+            let mut topo = self.topo.lock().unwrap();
+            topo.remove_node(dead_node);
+        }
+        self.worker_ctrl.lock().unwrap().remove(&dead_node);
+        if !self.policy.recover {
+            return Ok(None);
+        }
+        let replacement = self.add_replica(stage)?;
+        let action = Action::Recovered { dead: dead_node, replacement };
+        self.actions.lock().unwrap().push(action.clone());
+        Ok(Some(action))
+    }
+
+    /// Scaling check: call periodically with the leader's queue depth
+    /// per replica.
+    pub fn maybe_scale_out(&self, stage: usize, depth_per_replica: f64) -> anyhow::Result<Option<Action>> {
+        if depth_per_replica < self.policy.scale_up_depth {
+            return Ok(None);
+        }
+        {
+            let topo = self.topo.lock().unwrap();
+            if topo.replicas[stage] >= self.policy.max_replicas {
+                return Ok(None);
+            }
+        }
+        let node = self.add_replica(stage)?;
+        let action = Action::ScaledOut { stage, node };
+        self.actions.lock().unwrap().push(action.clone());
+        Ok(Some(action))
+    }
+
+    /// The shared mint-and-join path (Fig. 2c online instantiation):
+    /// 1. extend the topology with a new replica and fresh worlds;
+    /// 2. tell every *existing* member to join its side (non-blocking
+    ///    for their data planes — they init on their control threads);
+    /// 3. spawn the new worker, which joins all its worlds.
+    fn add_replica(&self, stage: usize) -> anyhow::Result<NodeId> {
+        let (node, fresh) = {
+            let mut topo = self.topo.lock().unwrap();
+            let base = free_port();
+            topo.add_replica(stage, base)
+        };
+        // Existing members first, so their rendezvous is already waiting
+        // when the new worker arrives (paper: join takes ~20 ms).
+        let ctrl = self.worker_ctrl.lock().unwrap();
+        for def in &fresh {
+            for member in def.members {
+                if member == node {
+                    continue;
+                }
+                match member {
+                    NodeId::Leader => (self.leader_join)(def)?,
+                    w => {
+                        if let Some(tx) = ctrl.get(&w) {
+                            let _ = tx.send(TopoUpdate::AddWorld(def.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        drop(ctrl);
+        self.spawner.spawn(node, fresh)?;
+        Ok(node)
+    }
+
+    /// Retire a replica (scale-in): drain via Shutdown on its control
+    /// channel and drop its worlds from the topology.
+    pub fn scale_in(&self, node: NodeId) -> anyhow::Result<Option<Action>> {
+        let removed = {
+            let mut topo = self.topo.lock().unwrap();
+            topo.remove_node(node)
+        };
+        if removed.is_empty() {
+            return Ok(None);
+        }
+        if let Some(tx) = self.worker_ctrl.lock().unwrap().remove(&node) {
+            let _ = tx.send(TopoUpdate::Shutdown);
+        }
+        let action = Action::ScaledIn { node };
+        self.actions.lock().unwrap().push(action.clone());
+        Ok(Some(action))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    struct CountingSpawner(Arc<AtomicUsize>);
+
+    impl Spawner for CountingSpawner {
+        fn spawn(&self, _node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()> {
+            assert!(!worlds.is_empty());
+            self.0.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+    }
+
+    fn controller(policy: ScalingPolicy) -> (Controller, Arc<AtomicUsize>) {
+        let spawned = Arc::new(AtomicUsize::new(0));
+        let topo = Topology::pipeline("t", &[1, 2, 1], 31_000);
+        let c = Controller::new(
+            topo,
+            policy,
+            Box::new(CountingSpawner(spawned.clone())),
+            |_def| Ok(()),
+        );
+        (c, spawned)
+    }
+
+    #[test]
+    fn recovery_replaces_dead_worker_once() {
+        let (c, spawned) = controller(ScalingPolicy::default());
+        let p3 = NodeId::Worker { stage: 1, replica: 1 };
+        // When P3 dies, BOTH of its edge worlds break (Fig. 2b). The
+        // first report only strikes; the second proves P3 dead (its
+        // neighbors still have healthy worlds elsewhere).
+        let worlds: Vec<String> = c
+            .topology()
+            .worlds_of(p3)
+            .iter()
+            .map(|w| w.name.clone())
+            .collect();
+        assert_eq!(worlds.len(), 2);
+        assert!(c.on_world_broken(&worlds[0]).unwrap().is_none());
+        let action = c.on_world_broken(&worlds[1]).unwrap().unwrap();
+        match action {
+            Action::Recovered { dead, replacement } => {
+                assert_eq!(dead, p3);
+                assert_eq!(replacement, NodeId::Worker { stage: 1, replica: 2 });
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(spawned.load(Ordering::SeqCst), 1);
+        // Duplicate reports (the second edge also broke) are no-ops.
+        assert!(c.declare_dead(p3).unwrap().is_none());
+        assert_eq!(spawned.load(Ordering::SeqCst), 1);
+        // Topology: P3 gone, replacement wired to both live neighbors.
+        // (`replicas` is an id allocator: r1 is burned, r2 minted.)
+        let topo = c.topology();
+        assert_eq!(topo.replicas, vec![1, 3, 1]);
+        assert_eq!(topo.live_replicas(1), vec![0, 2]);
+        assert!(topo.worlds_of(p3).is_empty());
+        let repl = NodeId::Worker { stage: 1, replica: 2 };
+        assert_eq!(topo.worlds_of(repl).len(), 2);
+    }
+
+    #[test]
+    fn no_recovery_when_disabled() {
+        let (c, spawned) =
+            controller(ScalingPolicy { recover: false, ..Default::default() });
+        let p2 = NodeId::Worker { stage: 1, replica: 0 };
+        assert!(c.declare_dead(p2).unwrap().is_none());
+        assert_eq!(spawned.load(Ordering::SeqCst), 0);
+        assert!(c.topology().worlds_of(p2).is_empty(), "corpse still removed");
+    }
+
+    #[test]
+    fn scale_out_on_depth_threshold() {
+        let (c, spawned) = controller(ScalingPolicy {
+            scale_up_depth: 10.0,
+            max_replicas: 3,
+            recover: true,
+        });
+        assert!(c.maybe_scale_out(1, 5.0).unwrap().is_none(), "below threshold");
+        let action = c.maybe_scale_out(1, 12.0).unwrap().unwrap();
+        assert!(matches!(action, Action::ScaledOut { stage: 1, .. }));
+        assert_eq!(spawned.load(Ordering::SeqCst), 1);
+        assert_eq!(c.topology().replicas, vec![1, 3, 1]);
+        // Ceiling respected.
+        assert!(c.maybe_scale_out(1, 100.0).unwrap().is_none());
+    }
+
+    #[test]
+    fn scale_in_retires_node() {
+        let (c, _) = controller(ScalingPolicy::default());
+        let node = NodeId::Worker { stage: 1, replica: 1 };
+        let (tx, rx) = std::sync::mpsc::channel();
+        c.register_worker(node, tx);
+        let action = c.scale_in(node).unwrap().unwrap();
+        assert_eq!(action, Action::ScaledIn { node });
+        assert!(matches!(rx.try_recv(), Ok(TopoUpdate::Shutdown)));
+        assert!(c.topology().worlds_of(node).is_empty());
+        // Second scale_in is a no-op.
+        assert!(c.scale_in(node).unwrap().is_none());
+    }
+
+    #[test]
+    fn existing_members_receive_add_world() {
+        let (c, _) = controller(ScalingPolicy::default());
+        let p1 = NodeId::Worker { stage: 0, replica: 0 };
+        let p4 = NodeId::Worker { stage: 2, replica: 0 };
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        let (tx4, rx4) = std::sync::mpsc::channel();
+        c.register_worker(p1, tx1);
+        c.register_worker(p4, tx4);
+        c.maybe_scale_out(1, 1e9).unwrap().unwrap();
+        // P1 gets the upstream edge, P4 the downstream edge.
+        assert!(matches!(rx1.try_recv(), Ok(TopoUpdate::AddWorld(_))));
+        assert!(matches!(rx4.try_recv(), Ok(TopoUpdate::AddWorld(_))));
+    }
+}

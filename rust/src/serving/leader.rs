@@ -1,0 +1,363 @@
+//! The leader: request ingestion, dynamic batching, dispatch into the
+//! pipeline, response collection, retry on loss, and SLO accounting.
+//!
+//! The leader is rank 0 of each `in-*` world (feeding stage-0 replicas)
+//! and rank 1 of each `out-*` world (hearing from last-stage replicas).
+//! Batches carry an id in their [`Envelope`]; responses are correlated
+//! by id, so replicated stages may reorder freely. Lost batches (a
+//! worker died while holding them) are re-dispatched after
+//! `retry_timeout` — at-least-once with response dedupe.
+
+use super::batcher::DynamicBatcher;
+use super::request::{Request, Response};
+use super::router::ReplicaRouter;
+use super::stage_worker::{Envelope, TAG_DATA};
+use super::topology::{NodeId, Topology, WorldDef};
+use crate::metrics::{Histogram, Timeline};
+use crate::multiworld::{WorldCommunicator, WorldEvent, WorldManager};
+use crate::mwccl::{Work, WorldOptions};
+use crate::tensor::Tensor;
+use crate::util::time::since_epoch;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct Outstanding {
+    requests: Vec<Request>,
+    sent_at: Instant,
+    attempts: u32,
+}
+
+/// See module docs.
+pub struct Leader {
+    mgr: WorldManager,
+    comm: WorldCommunicator,
+    pub batcher: Arc<DynamicBatcher>,
+    in_router: ReplicaRouter,
+    out_edges: Mutex<Vec<String>>,
+    batch_size: usize,
+    seq_len: usize,
+    vocab: usize,
+    next_batch_id: AtomicU64,
+    outstanding: Mutex<HashMap<u64, Outstanding>>,
+    responses: Mutex<Vec<Response>>,
+    pub latency: Histogram,
+    pub timeline: Timeline,
+    retry_timeout: Duration,
+    stop: Arc<AtomicBool>,
+}
+
+/// Final numbers for a serve run.
+#[derive(Clone, Debug)]
+pub struct LeaderReport {
+    pub completed: usize,
+    pub duration: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub retries: u64,
+}
+
+impl Leader {
+    /// Join the leader's worlds and set up the data structures.
+    /// `batch_size`/`seq_len`/`vocab` come from the model manifest.
+    pub fn new(
+        mgr: WorldManager,
+        topo: &Topology,
+        opts: &WorldOptions,
+        batch_size: usize,
+        seq_len: usize,
+        vocab: usize,
+        cfg: &crate::config::ServingConfig,
+    ) -> anyhow::Result<Arc<Leader>> {
+        super::stage_worker::init_node_worlds(&mgr, topo, NodeId::Leader, opts)?;
+        let comm = mgr.communicator();
+        let in_router = ReplicaRouter::new(cfg.replica_inflight);
+        for w in topo.out_edges(NodeId::Leader) {
+            in_router.add_replica(&w.name);
+        }
+        let out_edges: Vec<String> = topo
+            .in_edges(NodeId::Leader)
+            .iter()
+            .map(|w| w.name.clone())
+            .collect();
+        Ok(Arc::new(Leader {
+            mgr,
+            comm,
+            batcher: DynamicBatcher::new(
+                batch_size,
+                Duration::from_millis(cfg.batch_timeout_ms),
+            ),
+            in_router,
+            out_edges: Mutex::new(out_edges),
+            batch_size,
+            seq_len,
+            vocab,
+            next_batch_id: AtomicU64::new(1),
+            outstanding: Mutex::new(HashMap::new()),
+            responses: Mutex::new(Vec::new()),
+            latency: Histogram::default(),
+            timeline: Timeline::new(),
+            retry_timeout: Duration::from_secs(2),
+            stop: Arc::new(AtomicBool::new(false)),
+        }))
+    }
+
+    /// The manager (for event wiring by the controller).
+    pub fn manager(&self) -> &WorldManager {
+        &self.mgr
+    }
+
+    /// Join a fresh world created by online instantiation (the leader's
+    /// side; called by the controller).
+    pub fn join_world(&self, def: &WorldDef, opts: &WorldOptions) -> anyhow::Result<()> {
+        let rank = def
+            .rank_of(NodeId::Leader)
+            .ok_or_else(|| anyhow::anyhow!("leader not in {}", def.name))?;
+        let addr: std::net::SocketAddr =
+            format!("127.0.0.1:{}", def.store_port).parse().unwrap();
+        self.mgr
+            .initialize_world(&def.name, rank, 2, addr, opts.clone())?;
+        if rank == 0 {
+            self.in_router.add_replica(&def.name);
+        } else {
+            self.out_edges.lock().unwrap().push(def.name.clone());
+        }
+        Ok(())
+    }
+
+    /// Pack up to `batch_size` requests into the model input tensor,
+    /// padding by repeating the first row.
+    fn pack_batch(&self, reqs: &[Request]) -> Tensor {
+        let mut tokens = Vec::with_capacity(self.batch_size * self.seq_len);
+        for r in reqs {
+            assert_eq!(r.tokens.len(), self.seq_len, "request seq len");
+            tokens.extend_from_slice(&r.tokens);
+        }
+        for _ in reqs.len()..self.batch_size {
+            let row = reqs[0].tokens.clone();
+            tokens.extend_from_slice(&row);
+        }
+        Tensor::from_i32(&[self.batch_size, self.seq_len], &tokens)
+    }
+
+    fn dispatch(&self, id: u64, reqs: Vec<Request>) -> bool {
+        let tensor = self.pack_batch(&reqs);
+        let env = Envelope { id, tensor }.pack();
+        loop {
+            let Some(edge) = self.in_router.pick() else {
+                return false; // everything dead/saturated
+            };
+            match self.comm.send_blocking(&edge, env.clone(), 1, TAG_DATA) {
+                Ok(()) => {
+                    self.in_router.complete(&edge);
+                    let attempts = {
+                        let mut out = self.outstanding.lock().unwrap();
+                        let entry = out.entry(id).or_insert(Outstanding {
+                            requests: reqs.clone(),
+                            sent_at: Instant::now(),
+                            attempts: 0,
+                        });
+                        entry.sent_at = Instant::now();
+                        entry.attempts += 1;
+                        entry.attempts
+                    };
+                    let _ = attempts;
+                    return true;
+                }
+                Err(_) => {
+                    self.in_router.mark_dead(&edge);
+                }
+            }
+        }
+    }
+
+    fn harvest_response(&self, env: Envelope) {
+        let taken = self.outstanding.lock().unwrap().remove(&env.id);
+        let Some(out) = taken else {
+            return; // duplicate (retry raced with the original) — dedupe
+        };
+        let logits = env.tensor; // [B, S, V]
+        let now = since_epoch();
+        let mut responses = self.responses.lock().unwrap();
+        for (row, req) in out.requests.iter().enumerate() {
+            let next_token = argmax_last(&logits, row, self.seq_len, self.vocab);
+            let latency = now - req.arrival;
+            self.latency
+                .observe(Duration::from_secs_f64(latency.max(0.0)));
+            responses.push(Response { id: req.id, latency, next_token });
+        }
+        self.timeline
+            .record("completed", responses.len() as f64);
+    }
+
+    /// Serve `requests` (arriving at `rate` rps, or open-loop) and block
+    /// until all responses are in or `deadline` passes.
+    pub fn serve(
+        self: &Arc<Self>,
+        requests: Vec<Request>,
+        rate: Option<f64>,
+        deadline: Duration,
+    ) -> LeaderReport {
+        let t_start = Instant::now();
+        let total = requests.len();
+        let mut retries = 0u64;
+
+        // Ingest thread: requests → batcher at the given rate.
+        let batcher = self.batcher.clone();
+        let ingest = {
+            let mut rng = crate::util::prng::Rng::new(0xFEED);
+            std::thread::spawn(move || {
+                for mut r in requests {
+                    if let Some(rate) = rate {
+                        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
+                    }
+                    r.arrival = since_epoch();
+                    batcher.push(r);
+                }
+                batcher.close();
+            })
+        };
+
+        // Dispatch thread: batches → pipeline.
+        let me = self.clone();
+        let dispatcher = std::thread::spawn(move || {
+            while let Some(batch) = me.batcher.next_batch() {
+                let id = me.next_batch_id.fetch_add(1, Ordering::Relaxed);
+                if !me.dispatch(id, batch) {
+                    break; // pipeline dead
+                }
+            }
+        });
+
+        // Collect loop (this thread): post irecv on every out-edge, poll.
+        let hard_deadline = Instant::now() + deadline;
+        let mut pending: HashMap<String, Work> = HashMap::new();
+        let events = self.mgr.subscribe();
+        while self.responses.lock().unwrap().len() < total {
+            if Instant::now() >= hard_deadline {
+                break;
+            }
+            // Fault events: drop broken edges from the router/collection.
+            while let Ok(evt) = events.try_recv() {
+                if let WorldEvent::Broken { world, .. } = evt {
+                    self.in_router.mark_dead(&world);
+                    self.out_edges.lock().unwrap().retain(|e| e != &world);
+                    pending.remove(&world);
+                    self.timeline.record_labeled("failure", 1.0, &world);
+                }
+            }
+            // (Re-)post receives.
+            {
+                let edges = self.out_edges.lock().unwrap().clone();
+                for e in edges {
+                    if !pending.contains_key(&e) {
+                        if let Ok(w) = self.comm.recv(&e, 0, TAG_DATA) {
+                            pending.insert(e, w);
+                        }
+                    }
+                }
+            }
+            if pending.is_empty() {
+                std::thread::sleep(Duration::from_millis(5));
+            } else {
+                let names: Vec<String> = pending.keys().cloned().collect();
+                let works: Vec<Work> = names.iter().map(|n| pending[n].clone()).collect();
+                if let Some(idx) =
+                    self.comm.wait_any_deadline(&works, Some(Duration::from_millis(20)))
+                {
+                    let edge = names[idx].clone();
+                    let work = pending.remove(&edge).unwrap();
+                    match work.wait() {
+                        Ok(Some(packed)) => {
+                            if let Ok(env) = Envelope::unpack(&packed) {
+                                self.harvest_response(env);
+                            }
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            self.mgr.break_world(&edge, &e.to_string());
+                        }
+                    }
+                }
+            }
+            // Retry stale outstanding batches (lost to a dead worker).
+            let stale: Vec<(u64, Vec<Request>)> = {
+                let out = self.outstanding.lock().unwrap();
+                out.iter()
+                    .filter(|(_, o)| o.sent_at.elapsed() > self.retry_timeout && o.attempts < 5)
+                    .map(|(id, o)| (*id, o.requests.clone()))
+                    .collect()
+            };
+            for (id, reqs) in stale {
+                retries += 1;
+                self.timeline.record_labeled("retry", 1.0, &format!("batch {id}"));
+                if !self.dispatch(id, reqs) {
+                    break;
+                }
+            }
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = ingest.join();
+        self.batcher.close();
+        let _ = dispatcher.join();
+
+        let completed = self.responses.lock().unwrap().len();
+        let duration = t_start.elapsed().as_secs_f64();
+        LeaderReport {
+            completed,
+            duration,
+            throughput_rps: completed as f64 / duration,
+            p50_ms: self.latency.quantile_us(0.50) as f64 / 1e3,
+            p99_ms: self.latency.quantile_us(0.99) as f64 / 1e3,
+            mean_ms: self.latency.mean_us() / 1e3,
+            retries,
+        }
+    }
+
+    /// Responses collected so far (test introspection).
+    pub fn responses(&self) -> Vec<Response> {
+        self.responses.lock().unwrap().clone()
+    }
+
+    /// Current queue depth per alive stage-0 replica (scaling signal).
+    pub fn depth_per_replica(&self) -> f64 {
+        let (alive, _) = self.in_router.counts();
+        if alive == 0 {
+            f64::INFINITY
+        } else {
+            self.batcher.depth() as f64 / alive as f64
+        }
+    }
+}
+
+/// Argmax over the vocab at the last sequence position of `row`.
+fn argmax_last(logits: &Tensor, row: usize, seq_len: usize, vocab: usize) -> i32 {
+    let data = logits.as_f32();
+    let base = row * seq_len * vocab + (seq_len - 1) * vocab;
+    let slice = &data[base..base + vocab];
+    let mut best = 0usize;
+    for (i, &v) in slice.iter().enumerate() {
+        if v > slice[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_last_position() {
+        // B=1, S=2, V=4; row 0, last position has max at index 2.
+        let logits = Tensor::from_f32(
+            &[1, 2, 4],
+            &[9.0, 0.0, 0.0, 0.0, 0.1, 0.2, 5.0, 0.3],
+        );
+        assert_eq!(argmax_last(&logits, 0, 2, 4), 2);
+    }
+}

@@ -1,0 +1,40 @@
+//! The model-serving framework built on MultiWorld.
+//!
+//! This is the "full-fledged model serving system" the paper's
+//! conclusion names as future work, built here as a first-class part of
+//! the reproduction: a leader process batches and routes requests into a
+//! stage-partitioned pipeline whose workers execute AOT-compiled model
+//! stages (see [`crate::runtime`]) and forward activations through
+//! MultiWorld worlds — one small world per pipeline edge, exactly the
+//! Fig. 2 rhombus.
+//!
+//! Pieces (each independently testable):
+//!
+//! * [`request`] — request/response types and the Poisson workload
+//!   generator.
+//! * [`batcher`] — the dynamic batcher (max batch / timeout fill).
+//! * [`router`] — replica selection with least-inflight routing,
+//!   backpressure and replica death handling.
+//! * [`topology`] — names and members of every world in a pipeline
+//!   deployment (leader↔stage0, stageᵢ↔stageᵢ₊₁ bipartite, last↔leader).
+//! * [`stage_worker`] — the worker loop: receive activation from any
+//!   in-edge, run the stage, route downstream.
+//! * [`leader`] — the leader loop: batch, inject, collect, measure.
+//! * [`controller`] — elasticity: watches load and failures, decides
+//!   scale-out/in and recovery, and drives online instantiation.
+
+pub mod batcher;
+pub mod controller;
+pub mod leader;
+pub mod request;
+pub mod router;
+pub mod stage_worker;
+pub mod topology;
+
+pub use batcher::DynamicBatcher;
+pub use controller::{Controller, ScalingPolicy};
+pub use leader::{Leader, LeaderReport};
+pub use request::{Request, RequestGen, Response};
+pub use router::ReplicaRouter;
+pub use stage_worker::{run_stage_worker, StageWorkerConfig, WorkerStats};
+pub use topology::{NodeId, Topology, WorldDef};

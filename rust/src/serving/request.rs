@@ -1,0 +1,108 @@
+//! Inference requests, responses and the synthetic workload generator.
+
+use crate::util::prng::Rng;
+use crate::util::time::since_epoch;
+
+/// One inference request: a token sequence for the model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Arrival time (seconds since experiment epoch).
+    pub arrival: f64,
+}
+
+impl Request {
+    pub fn new(id: u64, tokens: Vec<i32>) -> Self {
+        Request { id, tokens, arrival: since_epoch() }
+    }
+}
+
+/// The serving result for one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Seconds from arrival to completion.
+    pub latency: f64,
+    /// Argmax token at the last position (the "answer"; enough to prove
+    /// real logits flowed back).
+    pub next_token: i32,
+}
+
+/// Poisson-arrival synthetic workload: fixed-length uniform-random token
+/// sequences, exponential inter-arrival gaps.
+pub struct RequestGen {
+    rng: Rng,
+    next_id: u64,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// Requests per second (None = as-fast-as-possible).
+    pub rate: Option<f64>,
+}
+
+impl RequestGen {
+    pub fn new(seed: u64, seq_len: usize, vocab: usize, rate: Option<f64>) -> Self {
+        RequestGen { rng: Rng::new(seed), next_id: 0, seq_len, vocab, rate }
+    }
+
+    /// Produce the next request, returning the inter-arrival delay the
+    /// caller should sleep before injecting it (0 for open-loop max
+    /// rate).
+    pub fn next(&mut self) -> (Request, std::time::Duration) {
+        let tokens: Vec<i32> = (0..self.seq_len)
+            .map(|_| self.rng.below(self.vocab as u64) as i32)
+            .collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        let gap = match self.rate {
+            Some(r) => std::time::Duration::from_secs_f64(self.rng.exp(r)),
+            None => std::time::Duration::ZERO,
+        };
+        (Request::new(id, tokens), gap)
+    }
+
+    /// Generate `n` requests eagerly (benchmark setup path).
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next().0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_sequential_and_tokens_in_range() {
+        let mut g = RequestGen::new(1, 16, 256, None);
+        let reqs = g.take(50);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), 16);
+            assert!(r.tokens.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn poisson_gaps_have_correct_mean() {
+        let mut g = RequestGen::new(2, 4, 16, Some(100.0));
+        let n = 5000;
+        let total: f64 = (0..n).map(|_| g.next().1.as_secs_f64()).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.01).abs() < 0.002, "mean gap {mean}");
+    }
+
+    #[test]
+    fn open_loop_has_zero_gap() {
+        let mut g = RequestGen::new(3, 4, 16, None);
+        assert_eq!(g.next().1, std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<_> = RequestGen::new(7, 8, 64, None).take(10);
+        let b: Vec<_> = RequestGen::new(7, 8, 64, None).take(10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+}

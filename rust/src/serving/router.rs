@@ -1,0 +1,241 @@
+//! Replica routing: pick which replica of a (replicated) stage gets the
+//! next batch. Least-inflight with round-robin tie-break, inflight caps
+//! for backpressure, and replica death/addition at runtime — the
+//! data-plane half of the paper's stage-level scaling story.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Clone, Debug, Default)]
+struct ReplicaState {
+    inflight: usize,
+    dispatched: u64,
+    alive: bool,
+}
+
+/// See module docs. Keyed by an opaque replica id (the edge-world name
+/// in the pipeline).
+#[derive(Default)]
+pub struct ReplicaRouter {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    replicas: BTreeMap<String, ReplicaState>,
+    rr_cursor: usize,
+    max_inflight: usize,
+}
+
+impl ReplicaRouter {
+    /// `max_inflight` of 0 means unbounded.
+    pub fn new(max_inflight: usize) -> Self {
+        ReplicaRouter {
+            inner: Mutex::new(Inner {
+                replicas: BTreeMap::new(),
+                rr_cursor: 0,
+                max_inflight,
+            }),
+        }
+    }
+
+    pub fn add_replica(&self, id: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .replicas
+            .entry(id.to_string())
+            .or_insert_with(ReplicaState::default)
+            .alive = true;
+    }
+
+    /// A replica died (its edge world broke): stop routing to it. Its
+    /// inflight work is presumed lost; callers requeue.
+    pub fn mark_dead(&self, id: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(r) = inner.replicas.get_mut(id) {
+            r.alive = false;
+            r.inflight = 0;
+        }
+    }
+
+    pub fn remove_replica(&self, id: &str) {
+        self.inner.lock().unwrap().replicas.remove(id);
+    }
+
+    /// Choose the next replica: among alive replicas under the inflight
+    /// cap, least inflight wins; ties break round-robin. `None` when
+    /// everything is dead or saturated (backpressure).
+    pub fn pick(&self) -> Option<String> {
+        let mut inner = self.inner.lock().unwrap();
+        let cap = inner.max_inflight;
+        let candidates: Vec<(String, usize)> = inner
+            .replicas
+            .iter()
+            .filter(|(_, s)| s.alive && (cap == 0 || s.inflight < cap))
+            .map(|(k, s)| (k.clone(), s.inflight))
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let min_inflight = candidates.iter().map(|(_, i)| *i).min().unwrap();
+        let tied: Vec<&String> = candidates
+            .iter()
+            .filter(|(_, i)| *i == min_inflight)
+            .map(|(k, _)| k)
+            .collect();
+        let cursor = inner.rr_cursor;
+        inner.rr_cursor = inner.rr_cursor.wrapping_add(1);
+        let chosen = tied[cursor % tied.len()].clone();
+        let st = inner.replicas.get_mut(&chosen).unwrap();
+        st.inflight += 1;
+        st.dispatched += 1;
+        Some(chosen)
+    }
+
+    /// A dispatched batch completed (or failed) on `id`.
+    pub fn complete(&self, id: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(r) = inner.replicas.get_mut(id) {
+            r.inflight = r.inflight.saturating_sub(1);
+        }
+    }
+
+    /// (alive, total) replica counts.
+    pub fn counts(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        let alive = inner.replicas.values().filter(|r| r.alive).count();
+        (alive, inner.replicas.len())
+    }
+
+    /// Dispatch totals per replica (diagnostics / load-balance tests).
+    pub fn dispatch_counts(&self) -> BTreeMap<String, u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .replicas
+            .iter()
+            .map(|(k, s)| (k.clone(), s.dispatched))
+            .collect()
+    }
+
+    /// Total inflight across alive replicas.
+    pub fn inflight(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .replicas
+            .values()
+            .filter(|r| r.alive)
+            .map(|r| r.inflight)
+            .sum()
+    }
+
+    pub fn alive_replicas(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .replicas
+            .iter()
+            .filter(|(_, s)| s.alive)
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_when_balanced() {
+        let r = ReplicaRouter::new(0);
+        r.add_replica("a");
+        r.add_replica("b");
+        let first = r.pick().unwrap();
+        r.complete(&first);
+        let second = r.pick().unwrap();
+        r.complete(&second);
+        assert_ne!(first, second, "tie-break must rotate");
+    }
+
+    #[test]
+    fn least_inflight_wins() {
+        let r = ReplicaRouter::new(0);
+        r.add_replica("a");
+        r.add_replica("b");
+        let x = r.pick().unwrap(); // x has 1 inflight now
+        let y = r.pick().unwrap();
+        assert_ne!(x, y);
+        r.complete(&y); // y back to 0, x still 1
+        assert_eq!(r.pick().unwrap(), y);
+    }
+
+    #[test]
+    fn inflight_cap_backpressures() {
+        let r = ReplicaRouter::new(2);
+        r.add_replica("a");
+        assert!(r.pick().is_some());
+        assert!(r.pick().is_some());
+        assert!(r.pick().is_none(), "cap reached");
+        r.complete("a");
+        assert!(r.pick().is_some());
+    }
+
+    #[test]
+    fn dead_replica_not_picked() {
+        let r = ReplicaRouter::new(0);
+        r.add_replica("a");
+        r.add_replica("b");
+        r.mark_dead("a");
+        for _ in 0..10 {
+            assert_eq!(r.pick().unwrap(), "b");
+        }
+        assert_eq!(r.counts(), (1, 2));
+    }
+
+    #[test]
+    fn all_dead_is_none() {
+        let r = ReplicaRouter::new(0);
+        r.add_replica("a");
+        r.mark_dead("a");
+        assert!(r.pick().is_none());
+    }
+
+    #[test]
+    fn revival_via_add_replica() {
+        // Online instantiation: a replacement replica under the same or a
+        // new id starts taking traffic.
+        let r = ReplicaRouter::new(0);
+        r.add_replica("a");
+        r.mark_dead("a");
+        assert!(r.pick().is_none());
+        r.add_replica("a2");
+        assert_eq!(r.pick().unwrap(), "a2");
+    }
+
+    #[test]
+    fn load_spreads_evenly() {
+        let r = ReplicaRouter::new(0);
+        for id in ["a", "b", "c"] {
+            r.add_replica(id);
+        }
+        for _ in 0..300 {
+            let id = r.pick().unwrap();
+            r.complete(&id);
+        }
+        let counts = r.dispatch_counts();
+        for (_, c) in counts {
+            assert_eq!(c, 100);
+        }
+    }
+
+    #[test]
+    fn mark_dead_resets_inflight() {
+        let r = ReplicaRouter::new(1);
+        r.add_replica("a");
+        let _ = r.pick().unwrap();
+        r.mark_dead("a");
+        r.add_replica("a"); // revived (new worker, same edge id)
+        assert!(r.pick().is_some(), "inflight from the dead epoch is forgotten");
+    }
+}

@@ -1,0 +1,323 @@
+//! The stage worker: the compute node of the serving pipeline.
+//!
+//! A worker owns one model stage (an AOT PJRT executable), is the
+//! downstream member of a world per upstream neighbor and the upstream
+//! member of a world per downstream neighbor, and loops:
+//!
+//! ```text
+//!   wait_any(pending irecv over in-edges)        ← non-blocking CCL +
+//!      → unpack envelope → stage.run             busy-wait poller
+//!      → pick out-edge (least-inflight router)   ← stage-level routing
+//!      → send envelope downstream
+//! ```
+//!
+//! Fault tolerance: a broken in-edge is dropped (the worker keeps
+//! serving its other edges — Fig. 2b); a broken out-edge is marked dead
+//! in the router and the batch is re-routed to a surviving replica.
+//! Online instantiation: the control channel delivers fresh
+//! [`WorldDef`]s; the worker joins them with `initialize_world_async`,
+//! so existing traffic never stalls (Fig. 5).
+
+use super::topology::{NodeId, Topology, WorldDef};
+use crate::multiworld::{MwError, WorldEvent, WorldManager};
+use crate::mwccl::{CclError, Work, WorldOptions};
+use crate::runtime::StageRunner;
+use crate::serving::router::ReplicaRouter;
+use crate::tensor::{read_tensor, DType, Tensor};
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Data-plane tag (one logical stream per edge world; messages queue
+/// FIFO under the tag).
+pub const TAG_DATA: u64 = 1;
+
+/// An in-flight unit: request-batch id + activation tensor, packed into
+/// a U8 tensor so it rides the existing collectives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    pub id: u64,
+    pub tensor: Tensor,
+}
+
+impl Envelope {
+    pub fn pack(&self) -> Tensor {
+        let mut bytes = Vec::with_capacity(8 + 64 + self.tensor.byte_len());
+        bytes.extend_from_slice(&self.id.to_le_bytes());
+        crate::tensor::write_tensor(&mut bytes, &self.tensor).expect("pack envelope");
+        let n = bytes.len();
+        Tensor::from_bytes(DType::U8, &[n], bytes).expect("pack envelope tensor")
+    }
+
+    pub fn unpack(t: &Tensor) -> anyhow::Result<Envelope> {
+        anyhow::ensure!(t.dtype() == DType::U8, "envelope must be U8");
+        let bytes = t.bytes();
+        anyhow::ensure!(bytes.len() >= 8, "envelope too short");
+        let id = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+        let tensor = read_tensor(&mut &bytes[8..])?;
+        Ok(Envelope { id, tensor })
+    }
+}
+
+/// Control-plane messages to a running worker.
+#[derive(Debug)]
+pub enum TopoUpdate {
+    /// Join a fresh world (online instantiation / scale-out).
+    AddWorld(WorldDef),
+    /// Drain and exit.
+    Shutdown,
+}
+
+/// Configuration for one worker node.
+pub struct StageWorkerConfig {
+    pub node: NodeId,
+    pub topology: Topology,
+    /// Stage executable; `None` = forward-only (transport benches).
+    pub stage: Option<Arc<StageRunner>>,
+    pub opts: WorldOptions,
+    /// Control channel (None = static topology).
+    pub control: Option<Receiver<TopoUpdate>>,
+    pub stop: Arc<AtomicBool>,
+}
+
+/// What a worker did during its run.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub processed: u64,
+    pub forwarded: u64,
+    pub in_edge_failures: u64,
+    pub out_edge_failures: u64,
+    pub joined_worlds: u64,
+}
+
+/// Initialize this node's side of every world it belongs to, in
+/// parallel (each `World::init` blocks until the peer arrives).
+pub fn init_node_worlds(
+    mgr: &WorldManager,
+    topo: &Topology,
+    node: NodeId,
+    opts: &WorldOptions,
+) -> anyhow::Result<()> {
+    let defs: Vec<WorldDef> = topo.worlds_of(node).into_iter().cloned().collect();
+    let handles: Vec<_> = defs
+        .into_iter()
+        .map(|def| {
+            let rank = def.rank_of(node).expect("member");
+            let addr: SocketAddr = format!("127.0.0.1:{}", def.store_port).parse().unwrap();
+            mgr_init_async(mgr.clone(), def.name.clone(), rank, 2, addr, opts.clone())
+        })
+        .collect();
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("init thread panicked"))??;
+    }
+    Ok(())
+}
+
+fn mgr_init_async(
+    mgr: WorldManager,
+    name: String,
+    rank: usize,
+    size: usize,
+    addr: SocketAddr,
+    opts: WorldOptions,
+) -> std::thread::JoinHandle<Result<(), MwError>> {
+    std::thread::Builder::new()
+        .name(format!("init-{name}-r{rank}"))
+        .spawn(move || mgr.initialize_world(&name, rank, size, addr, opts))
+        .expect("spawn world init")
+}
+
+/// Run the worker loop until `stop` or until every in-edge is gone and
+/// no control channel can bring more.
+pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Result<WorkerStats> {
+    let comm = mgr.communicator();
+    let events = mgr.subscribe();
+    let mut stats = WorkerStats::default();
+
+    // Live edge sets.
+    let mut in_edges: Vec<String> = cfg
+        .topology
+        .in_edges(cfg.node)
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    let out_router = ReplicaRouter::new(0);
+    for w in cfg.topology.out_edges(cfg.node) {
+        out_router.add_replica(&w.name);
+    }
+
+    // One posted irecv per live in-edge.
+    let mut pending: HashMap<String, Work> = HashMap::new();
+    for e in &in_edges {
+        if let Ok(w) = comm.recv(e, 0, TAG_DATA) {
+            pending.insert(e.clone(), w);
+        }
+    }
+
+    let debug = std::env::var("MW_DEBUG").is_ok();
+    let mut last_dbg = std::time::Instant::now();
+    loop {
+        if debug && last_dbg.elapsed() > Duration::from_secs(1) {
+            last_dbg = std::time::Instant::now();
+            eprintln!(
+                "[worker {}] alive: in={:?} pending={} out={:?}",
+                cfg.node,
+                in_edges,
+                pending.len(),
+                out_router.alive_replicas()
+            );
+        }
+        if cfg.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Control-plane: join new worlds without stalling the data path.
+        if let Some(ctrl) = &cfg.control {
+            while let Ok(update) = ctrl.try_recv() {
+                match update {
+                    TopoUpdate::AddWorld(def) => {
+                        let rank = match def.rank_of(cfg.node) {
+                            Some(r) => r,
+                            None => continue, // not our world
+                        };
+                        let addr: SocketAddr =
+                            format!("127.0.0.1:{}", def.store_port).parse().unwrap();
+                        // Blocking init is fine *here*: the joiner is new
+                        // and has no traffic yet. Existing members join
+                        // via their own control threads concurrently.
+                        mgr.initialize_world(&def.name, rank, 2, addr, cfg.opts.clone())?;
+                        stats.joined_worlds += 1;
+                        if rank == 1 {
+                            in_edges.push(def.name.clone());
+                            if let Ok(w) = comm.recv(&def.name, 0, TAG_DATA) {
+                                pending.insert(def.name.clone(), w);
+                            }
+                        } else {
+                            out_router.add_replica(&def.name);
+                        }
+                    }
+                    TopoUpdate::Shutdown => {
+                        cfg.stop.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        // Fault events: drop broken edges.
+        while let Ok(evt) = events.try_recv() {
+            if let WorldEvent::Broken { world, .. } = evt {
+                if in_edges.contains(&world) {
+                    in_edges.retain(|e| e != &world);
+                    pending.remove(&world);
+                    stats.in_edge_failures += 1;
+                } else {
+                    out_router.mark_dead(&world);
+                    stats.out_edge_failures += 1;
+                }
+            }
+        }
+        if pending.is_empty() {
+            if cfg.control.is_none() && in_edges.is_empty() {
+                break; // nothing will ever arrive again
+            }
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+
+        // Poll for a completed receive (bounded so control/stop stay live).
+        let names: Vec<String> = pending.keys().cloned().collect();
+        let works: Vec<Work> = names.iter().map(|n| pending[n].clone()).collect();
+        let Some(idx) = comm.wait_any_deadline(&works, Some(Duration::from_millis(20))) else {
+            continue;
+        };
+        let edge = names[idx].clone();
+        let work = pending.remove(&edge).unwrap();
+        match work.wait() {
+            Ok(Some(packed)) => {
+                // Re-post the receive on this edge first (keep the pipe full).
+                if let Ok(w) = comm.recv(&edge, 0, TAG_DATA) {
+                    pending.insert(edge.clone(), w);
+                }
+                let env = Envelope::unpack(&packed)?;
+                let result = match &cfg.stage {
+                    Some(stage) => stage.run(&env.tensor)?,
+                    None => env.tensor, // forward-only mode
+                };
+                stats.processed += 1;
+                // Route downstream, retrying across replicas on failure.
+                let out = Envelope { id: env.id, tensor: result }.pack();
+                loop {
+                    let Some(target) = out_router.pick() else {
+                        // No downstream alive: drop (leader will retry the batch).
+                        break;
+                    };
+                    match comm.send_blocking(&target, out.clone(), 1, TAG_DATA) {
+                        Ok(()) => {
+                            out_router.complete(&target);
+                            stats.forwarded += 1;
+                            break;
+                        }
+                        Err(_) => {
+                            out_router.mark_dead(&target);
+                            stats.out_edge_failures += 1;
+                        }
+                    }
+                }
+            }
+            Ok(None) => {}
+            Err(e) => {
+                if debug {
+                    eprintln!("[worker {}] recv on {edge} failed: {e}", cfg.node);
+                }
+                // In-edge broke (remote error or watchdog abort).
+                if matches!(
+                    e,
+                    CclError::RemoteError { .. }
+                        | CclError::Aborted(_)
+                        | CclError::WorldBroken(_)
+                ) {
+                    mgr.break_world(&edge, &e.to_string());
+                    in_edges.retain(|x| x != &edge);
+                    stats.in_edge_failures += 1;
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn envelope_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::rand_f32(&[4, 8], &mut rng);
+        let env = Envelope { id: 0xDEAD_BEEF, tensor: t.clone() };
+        let packed = env.pack();
+        assert_eq!(packed.dtype(), DType::U8);
+        let back = Envelope::unpack(&packed).unwrap();
+        assert_eq!(back.id, 0xDEAD_BEEF);
+        assert_eq!(back.tensor.checksum(), t.checksum());
+    }
+
+    #[test]
+    fn envelope_rejects_garbage() {
+        let t = Tensor::from_bytes(DType::U8, &[4], vec![1, 2, 3, 4]).unwrap();
+        assert!(Envelope::unpack(&t).is_err());
+        let f = Tensor::zeros(DType::F32, &[4]);
+        assert!(Envelope::unpack(&f).is_err());
+    }
+
+    #[test]
+    fn envelope_empty_tensor() {
+        let env = Envelope { id: 7, tensor: Tensor::zeros(DType::F32, &[0]) };
+        let back = Envelope::unpack(&env.pack()).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.tensor.elems(), 0);
+    }
+}

@@ -1,0 +1,468 @@
+//! Pipeline topology: which worlds exist, who is in them, and on which
+//! store port each rendezvouses.
+//!
+//! Per the paper (§3.1, Fig. 2) every pipeline *edge* is its own
+//! two-member world:
+//!
+//! ```text
+//!   leader → stage0 replicas          world  in-{0}r{r}
+//!   stageᵢ replica a → stageᵢ₊₁ b     world  e{i}r{a}-{i+1}r{b}   (bipartite)
+//!   last-stage replica r → leader     world  out-{N-1}r{r}
+//! ```
+//!
+//! The upstream member is always rank 0 (and hosts the per-world store);
+//! the downstream member is rank 1. Worlds never span more than one
+//! edge, so a worker failure breaks exactly the edges it touches.
+//!
+//! A topology serializes to JSON so the launcher can hand it to worker
+//! processes; generation numbers let online instantiation mint fresh
+//! world names for replacement workers (a broken world's name is never
+//! reused — CCL worlds are unrecoverable by design).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A participant in the serving deployment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NodeId {
+    Leader,
+    Worker { stage: usize, replica: usize },
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NodeId::Leader => write!(f, "leader"),
+            NodeId::Worker { stage, replica } => write!(f, "s{stage}r{replica}"),
+        }
+    }
+}
+
+impl NodeId {
+    pub fn parse(s: &str) -> anyhow::Result<NodeId> {
+        if s == "leader" {
+            return Ok(NodeId::Leader);
+        }
+        let rest = s
+            .strip_prefix('s')
+            .ok_or_else(|| anyhow::anyhow!("bad node id {s:?}"))?;
+        let (stage, replica) = rest
+            .split_once('r')
+            .ok_or_else(|| anyhow::anyhow!("bad node id {s:?}"))?;
+        Ok(NodeId::Worker { stage: stage.parse()?, replica: replica.parse()? })
+    }
+}
+
+/// One two-member world (a pipeline edge).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorldDef {
+    pub name: String,
+    /// members[0] is rank 0 (upstream, hosts the store), members[1] is
+    /// rank 1 (downstream).
+    pub members: [NodeId; 2],
+    pub store_port: u16,
+}
+
+impl WorldDef {
+    pub fn rank_of(&self, node: NodeId) -> Option<usize> {
+        self.members.iter().position(|m| *m == node)
+    }
+
+    pub fn peer_of(&self, node: NodeId) -> Option<NodeId> {
+        match self.rank_of(node)? {
+            0 => Some(self.members[1]),
+            _ => Some(self.members[0]),
+        }
+    }
+}
+
+/// The full deployment map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Topology {
+    /// Replicas per stage, e.g. `[1, 2, 1]` is the paper's rhombus.
+    pub replicas: Vec<usize>,
+    pub worlds: Vec<WorldDef>,
+    /// Prefix for world names (namespacing parallel experiments).
+    pub prefix: String,
+    /// Monotone counter for replacement-world names.
+    pub generation: u64,
+}
+
+impl Topology {
+    /// Build the standard pipeline topology. `base_port` seeds store
+    /// ports (world *k* uses `base_port + k`).
+    pub fn pipeline(prefix: &str, replicas: &[usize], base_port: u16) -> Topology {
+        assert!(!replicas.is_empty());
+        assert!(replicas.iter().all(|&r| r >= 1));
+        let mut worlds = Vec::new();
+        let mut port = base_port;
+        let mut push = |name: String, up: NodeId, down: NodeId, port: &mut u16| {
+            worlds.push(WorldDef { name, members: [up, down], store_port: *port });
+            *port += 1;
+        };
+        let n = replicas.len();
+        // Leader → stage 0.
+        for r in 0..replicas[0] {
+            push(
+                format!("{prefix}-in-s0r{r}"),
+                NodeId::Leader,
+                NodeId::Worker { stage: 0, replica: r },
+                &mut port,
+            );
+        }
+        // Stage i → stage i+1 (full bipartite, one world per pair).
+        for i in 0..n - 1 {
+            for a in 0..replicas[i] {
+                for b in 0..replicas[i + 1] {
+                    push(
+                        format!("{prefix}-e-s{i}r{a}-s{}r{b}", i + 1),
+                        NodeId::Worker { stage: i, replica: a },
+                        NodeId::Worker { stage: i + 1, replica: b },
+                        &mut port,
+                    );
+                }
+            }
+        }
+        // Last stage → leader.
+        for r in 0..replicas[n - 1] {
+            push(
+                format!("{prefix}-out-s{}r{r}", n - 1),
+                NodeId::Worker { stage: n - 1, replica: r },
+                NodeId::Leader,
+                &mut port,
+            );
+        }
+        Topology {
+            replicas: replicas.to_vec(),
+            worlds,
+            prefix: prefix.to_string(),
+            generation: 0,
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Worlds `node` participates in.
+    pub fn worlds_of(&self, node: NodeId) -> Vec<&WorldDef> {
+        self.worlds
+            .iter()
+            .filter(|w| w.members.contains(&node))
+            .collect()
+    }
+
+    /// Worlds where `node` is the downstream member (its inputs).
+    pub fn in_edges(&self, node: NodeId) -> Vec<&WorldDef> {
+        self.worlds
+            .iter()
+            .filter(|w| w.members[1] == node)
+            .collect()
+    }
+
+    /// Worlds where `node` is the upstream member (its outputs).
+    pub fn out_edges(&self, node: NodeId) -> Vec<&WorldDef> {
+        self.worlds
+            .iter()
+            .filter(|w| w.members[0] == node)
+            .collect()
+    }
+
+    /// All nodes mentioned in the topology.
+    pub fn nodes(&self) -> Vec<NodeId> {
+        let mut set: Vec<NodeId> = Vec::new();
+        for w in &self.worlds {
+            for m in w.members {
+                if !set.contains(&m) {
+                    set.push(m);
+                }
+            }
+        }
+        set.sort();
+        set
+    }
+
+    /// Worker nodes only.
+    pub fn workers(&self) -> Vec<NodeId> {
+        self.nodes()
+            .into_iter()
+            .filter(|n| matches!(n, NodeId::Worker { .. }))
+            .collect()
+    }
+
+    /// Live replica ids of a stage (derived from world membership —
+    /// `replicas[stage]` is an id *allocator* and keeps counting dead
+    /// ones).
+    pub fn live_replicas(&self, stage: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .workers()
+            .into_iter()
+            .filter_map(|n| match n {
+                NodeId::Worker { stage: s, replica } if s == stage => Some(replica),
+                _ => None,
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Add a replacement/scale-out replica of `stage` with fresh worlds
+    /// to every neighbor (the online-instantiation step: "configuring P5
+    /// to inherit the exact role of P3"). Returns the new node and the
+    /// world definitions that must be initialized.
+    pub fn add_replica(
+        &mut self,
+        stage: usize,
+        base_port: u16,
+    ) -> (NodeId, Vec<WorldDef>) {
+        assert!(stage < self.replicas.len());
+        self.generation += 1;
+        let gen = self.generation;
+        let replica = self.replicas[stage];
+        self.replicas[stage] += 1;
+        let node = NodeId::Worker { stage, replica };
+        let prefix = self.prefix.clone();
+        let mut port = base_port;
+        let mut fresh = Vec::new();
+        let mut push = |name: String, up: NodeId, down: NodeId, port: &mut u16| {
+            let def = WorldDef { name, members: [up, down], store_port: *port };
+            *port += 1;
+            fresh.push(def);
+        };
+        // Upstream edges — wire to *live* neighbors only (dead replica
+        // ids stay burned).
+        if stage == 0 {
+            push(
+                format!("{prefix}-in-s0r{replica}#g{gen}"),
+                NodeId::Leader,
+                node,
+                &mut port,
+            );
+        } else {
+            for a in self.live_replicas(stage - 1) {
+                push(
+                    format!("{prefix}-e-s{}r{a}-s{stage}r{replica}#g{gen}", stage - 1),
+                    NodeId::Worker { stage: stage - 1, replica: a },
+                    node,
+                    &mut port,
+                );
+            }
+        }
+        // Downstream edges.
+        if stage == self.replicas.len() - 1 {
+            push(format!("{prefix}-out-s{stage}r{replica}#g{gen}"), node, NodeId::Leader, &mut port);
+        } else {
+            for b in self.live_replicas(stage + 1) {
+                push(
+                    format!("{prefix}-e-s{stage}r{replica}-s{}r{b}#g{gen}", stage + 1),
+                    node,
+                    NodeId::Worker { stage: stage + 1, replica: b },
+                    &mut port,
+                );
+            }
+        }
+        self.worlds.extend(fresh.clone());
+        (node, fresh)
+    }
+
+    /// Drop every world touching `node` (it died). Returns the removed
+    /// world names.
+    pub fn remove_node(&mut self, node: NodeId) -> Vec<String> {
+        let (dead, keep): (Vec<WorldDef>, Vec<WorldDef>) = self
+            .worlds
+            .drain(..)
+            .partition(|w| w.members.contains(&node));
+        self.worlds = keep;
+        dead.into_iter().map(|w| w.name).collect()
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prefix", Json::str(self.prefix.clone())),
+            ("generation", Json::num(self.generation as f64)),
+            (
+                "replicas",
+                Json::arr(self.replicas.iter().map(|&r| Json::num(r as f64)).collect()),
+            ),
+            (
+                "worlds",
+                Json::arr(
+                    self.worlds
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("name", Json::str(w.name.clone())),
+                                ("up", Json::str(w.members[0].to_string())),
+                                ("down", Json::str(w.members[1].to_string())),
+                                ("store_port", Json::num(w.store_port as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Topology> {
+        let prefix = j
+            .get("prefix")
+            .and_then(|v| v.as_str())
+            .unwrap_or("mw")
+            .to_string();
+        let generation = j.get("generation").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+        let replicas = j
+            .get("replicas")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        let mut worlds = Vec::new();
+        for w in j
+            .get("worlds")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("topology missing worlds"))?
+        {
+            let name = w
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("world missing name"))?
+                .to_string();
+            let up = NodeId::parse(w.get("up").and_then(|v| v.as_str()).unwrap_or(""))?;
+            let down = NodeId::parse(w.get("down").and_then(|v| v.as_str()).unwrap_or(""))?;
+            let store_port = w
+                .get("store_port")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("world missing store_port"))? as u16;
+            worlds.push(WorldDef { name, members: [up, down], store_port });
+        }
+        Ok(Topology { replicas, worlds, prefix, generation })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Topology> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Map stage→replica-count as a compact string ("1x2x1").
+    pub fn shape(&self) -> String {
+        self.replicas
+            .iter()
+            .map(|r| r.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+
+    /// Per-stage count of live edge worlds, for diagnostics.
+    pub fn edge_counts(&self) -> BTreeMap<usize, usize> {
+        let mut m = BTreeMap::new();
+        for w in &self.worlds {
+            if let NodeId::Worker { stage, .. } = w.members[0] {
+                *m.entry(stage).or_insert(0) += 1;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rhombus_topology_matches_paper() {
+        // Fig. 2a: stages [1, 2, 1] ⇒ P1 feeds P2 and P3, both feed P4.
+        let t = Topology::pipeline("mw", &[1, 2, 1], 20_000);
+        // Worlds: 1 in + (1×2) + (2×1) + 1 out = 6.
+        assert_eq!(t.worlds.len(), 6);
+        let p1 = NodeId::Worker { stage: 0, replica: 0 };
+        let p4 = NodeId::Worker { stage: 2, replica: 0 };
+        assert_eq!(t.out_edges(p1).len(), 2, "P1 feeds both middle replicas");
+        assert_eq!(t.in_edges(p4).len(), 2, "P4 hears from both middle replicas");
+        assert_eq!(t.in_edges(NodeId::Leader).len(), 1);
+        assert_eq!(t.workers().len(), 4);
+    }
+
+    #[test]
+    fn node_id_roundtrip() {
+        for n in [NodeId::Leader, NodeId::Worker { stage: 3, replica: 7 }] {
+            assert_eq!(NodeId::parse(&n.to_string()).unwrap(), n);
+        }
+        assert!(NodeId::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn store_ports_unique() {
+        let t = Topology::pipeline("mw", &[2, 3, 2], 21_000);
+        let mut ports: Vec<u16> = t.worlds.iter().map(|w| w.store_port).collect();
+        ports.sort_unstable();
+        ports.dedup();
+        assert_eq!(ports.len(), t.worlds.len());
+    }
+
+    #[test]
+    fn ranks_follow_upstream_downstream() {
+        let t = Topology::pipeline("mw", &[1, 1], 22_000);
+        for w in &t.worlds {
+            assert_eq!(w.rank_of(w.members[0]), Some(0));
+            assert_eq!(w.rank_of(w.members[1]), Some(1));
+            assert_eq!(w.peer_of(w.members[0]), Some(w.members[1]));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Topology::pipeline("exp1", &[1, 2, 1], 23_000);
+        let j = t.to_json();
+        let back = Topology::from_json(&j).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn add_replica_connects_both_sides_with_fresh_names() {
+        let mut t = Topology::pipeline("mw", &[1, 2, 1], 24_000);
+        let before = t.worlds.len();
+        let (node, fresh) = t.add_replica(1, 25_000);
+        assert_eq!(node, NodeId::Worker { stage: 1, replica: 2 });
+        // New middle replica: 1 upstream (from s0r0) + 1 downstream (to s2r0).
+        assert_eq!(fresh.len(), 2);
+        assert!(fresh.iter().all(|w| w.name.contains("#g1")), "generation-tagged");
+        assert_eq!(t.worlds.len(), before + 2);
+        assert_eq!(t.replicas, vec![1, 3, 1]);
+    }
+
+    #[test]
+    fn add_replica_first_and_last_stage_touch_leader() {
+        let mut t = Topology::pipeline("mw", &[1, 1], 26_000);
+        let (_, fresh0) = t.add_replica(0, 27_000);
+        assert!(fresh0.iter().any(|w| w.members[0] == NodeId::Leader));
+        let (_, fresh1) = t.add_replica(1, 28_000);
+        assert!(fresh1.iter().any(|w| w.members[1] == NodeId::Leader));
+    }
+
+    #[test]
+    fn remove_node_drops_exactly_its_worlds() {
+        let mut t = Topology::pipeline("mw", &[1, 2, 1], 29_000);
+        let p3 = NodeId::Worker { stage: 1, replica: 1 };
+        let dead = t.remove_node(p3);
+        // P3 touched two worlds (from P1, to P4) — Fig. 2b.
+        assert_eq!(dead.len(), 2);
+        assert_eq!(t.worlds.len(), 4);
+        assert!(t.worlds_of(p3).is_empty());
+        // P2's worlds intact.
+        let p2 = NodeId::Worker { stage: 1, replica: 0 };
+        assert_eq!(t.worlds_of(p2).len(), 2);
+    }
+
+    #[test]
+    fn shape_string() {
+        assert_eq!(Topology::pipeline("x", &[1, 2, 1], 30_000).shape(), "1x2x1");
+    }
+}

@@ -1,0 +1,151 @@
+//! Blocking store client. One TCP connection, requests serialized under
+//! a mutex so a client handle can be shared across threads (the watchdog
+//! thread and the communicator share one).
+
+use super::protocol::{read_response, write_request, Op, Status};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Client handle to a [`super::StoreServer`].
+pub struct StoreClient {
+    conn: Mutex<Conn>,
+    addr: SocketAddr,
+}
+
+impl StoreClient {
+    /// Connect, retrying until `timeout` (rendezvous races: clients often
+    /// start before the leader's server is up).
+    pub fn connect(addr: SocketAddr, timeout: Duration) -> anyhow::Result<Self> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    let writer = stream.try_clone()?;
+                    return Ok(StoreClient {
+                        conn: Mutex::new(Conn { reader: BufReader::new(stream), writer }),
+                        addr,
+                    });
+                }
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        anyhow::bail!("store connect to {addr} timed out: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn call(&self, op: Op, key: &str, val: &[u8]) -> anyhow::Result<(Status, Vec<u8>)> {
+        let mut conn = self.conn.lock().unwrap();
+        write_request(&mut conn.writer, op, key, val)?;
+        read_response(&mut conn.reader)
+    }
+
+    /// Insert or overwrite.
+    pub fn set(&self, key: &str, val: &[u8]) -> anyhow::Result<()> {
+        match self.call(Op::Set, key, val)? {
+            (Status::Ok, _) => Ok(()),
+            (s, v) => anyhow::bail!("set failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Fetch; `None` if absent.
+    pub fn get(&self, key: &str) -> anyhow::Result<Option<Vec<u8>>> {
+        match self.call(Op::Get, key, &[])? {
+            (Status::Ok, v) => Ok(Some(v)),
+            (Status::NotFound, _) => Ok(None),
+            (s, v) => anyhow::bail!("get failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Atomic add; returns the new value. Keys created on first add.
+    pub fn add(&self, key: &str, delta: i64) -> anyhow::Result<i64> {
+        match self.call(Op::Add, key, &delta.to_le_bytes())? {
+            (Status::Ok, v) => Ok(String::from_utf8(v)?.parse()?),
+            (s, v) => anyhow::bail!("add failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Block until `key` exists (or timeout) and return its value.
+    pub fn wait(&self, key: &str, timeout: Duration) -> anyhow::Result<Vec<u8>> {
+        let ms = timeout.as_millis() as u64;
+        match self.call(Op::Wait, key, &ms.to_le_bytes())? {
+            (Status::Ok, v) => Ok(v),
+            (Status::Timeout, _) => anyhow::bail!("wait({key}) timeout after {ms} ms"),
+            (s, v) => anyhow::bail!("wait failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Delete; returns whether the key existed.
+    pub fn delete(&self, key: &str) -> anyhow::Result<bool> {
+        match self.call(Op::Delete, key, &[])? {
+            (Status::Ok, _) => Ok(true),
+            (Status::NotFound, _) => Ok(false),
+            (s, v) => anyhow::bail!("delete failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Compare-and-set. Returns the value now stored under `key`
+    /// (i.e. `new` on success, the conflicting current value otherwise).
+    /// PyTorch quirk preserved: empty `old` + missing key ⇒ insert.
+    pub fn compare_set(&self, key: &str, old: &[u8], new: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let mut val = Vec::with_capacity(4 + old.len() + new.len());
+        val.extend_from_slice(&(old.len() as u32).to_le_bytes());
+        val.extend_from_slice(old);
+        val.extend_from_slice(new);
+        match self.call(Op::CompareSet, key, &val)? {
+            (Status::Ok, v) => Ok(v),
+            (s, v) => anyhow::bail!("compare_set failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// All keys with the given prefix.
+    pub fn keys(&self, prefix: &str) -> anyhow::Result<Vec<String>> {
+        match self.call(Op::Keys, prefix, &[])? {
+            (Status::Ok, mut v) => {
+                let mut out = Vec::new();
+                let mut rest = v.as_mut_slice();
+                while rest.len() >= 4 {
+                    let len = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                    anyhow::ensure!(rest.len() >= 4 + len, "short KEYS frame");
+                    out.push(String::from_utf8(rest[4..4 + len].to_vec())?);
+                    rest = &mut rest[4 + len..];
+                }
+                Ok(out)
+            }
+            (s, v) => anyhow::bail!("keys failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Total number of keys.
+    pub fn num_keys(&self) -> anyhow::Result<u64> {
+        match self.call(Op::NumKeys, "", &[])? {
+            (Status::Ok, v) => {
+                anyhow::ensure!(v.len() == 8, "short NUM_KEYS frame");
+                Ok(u64::from_le_bytes(v.try_into().unwrap()))
+            }
+            (s, v) => anyhow::bail!("num_keys failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&self) -> anyhow::Result<()> {
+        match self.call(Op::Ping, "", &[])? {
+            (Status::Ok, _) => Ok(()),
+            (s, _) => anyhow::bail!("ping failed: {s:?}"),
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! TCPStore — a PyTorch-compatible-in-spirit blocking key-value store
+//! over TCP.
+//!
+//! PyTorch creates one `TCPStore` per process group during `init`; the
+//! paper's watchdog piggybacks worker heartbeats on exactly that store
+//! ("It relies on TCPStore created by PyTorch during the initialization
+//! of a world. One TCPStore instance is associated with one world.").
+//! We reproduce that: the world *leader* hosts a [`StoreServer`]; every
+//! member connects a [`StoreClient`]. Rendezvous, rank assignment,
+//! address exchange and heartbeats all flow through it.
+//!
+//! ## Protocol (length-prefixed binary, one request per round trip)
+//!
+//! ```text
+//!   request  = op:u8  key_len:u32  key  val_len:u32  val
+//!   response = status:u8  val_len:u32  val
+//!   ops: 1=SET 2=GET 3=ADD(val=i64 le) 4=WAIT(timeout ms in val)
+//!        5=DELETE 6=COMPARE_SET(val = old_len:u32 old new)
+//!        7=KEYS(prefix in key) 8=NUM_KEYS 9=PING
+//!   status: 0=ok 1=not_found 2=timeout 3=error
+//! ```
+
+mod client;
+mod protocol;
+mod server;
+
+pub use client::StoreClient;
+pub use protocol::{Op, Status};
+pub use server::StoreServer;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn pair() -> (StoreServer, StoreClient) {
+        let server = StoreServer::bind_any().unwrap();
+        let client = StoreClient::connect(server.addr(), Duration::from_secs(2)).unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let (_s, c) = pair();
+        c.set("alpha", b"1").unwrap();
+        assert_eq!(c.get("alpha").unwrap(), Some(b"1".to_vec()));
+        assert_eq!(c.get("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn add_is_atomic_counter() {
+        let (_s, c) = pair();
+        assert_eq!(c.add("ctr", 5).unwrap(), 5);
+        assert_eq!(c.add("ctr", 2).unwrap(), 7);
+        assert_eq!(c.add("ctr", -3).unwrap(), 4);
+    }
+
+    #[test]
+    fn wait_blocks_until_set() {
+        let (s, c) = pair();
+        let addr = s.addr();
+        let setter = std::thread::spawn(move || {
+            let c2 = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+            std::thread::sleep(Duration::from_millis(50));
+            c2.set("later", b"v").unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        let v = c.wait("later", Duration::from_secs(2)).unwrap();
+        assert_eq!(v, b"v");
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        setter.join().unwrap();
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let (_s, c) = pair();
+        let err = c.wait("never", Duration::from_millis(80)).unwrap_err();
+        assert!(err.to_string().contains("timeout"), "{err}");
+    }
+
+    #[test]
+    fn delete_and_num_keys() {
+        let (_s, c) = pair();
+        c.set("a", b"1").unwrap();
+        c.set("b", b"2").unwrap();
+        assert_eq!(c.num_keys().unwrap(), 2);
+        assert!(c.delete("a").unwrap());
+        assert!(!c.delete("a").unwrap());
+        assert_eq!(c.num_keys().unwrap(), 1);
+    }
+
+    #[test]
+    fn compare_set_semantics() {
+        let (_s, c) = pair();
+        c.set("k", b"old").unwrap();
+        // Wrong expectation fails and returns current value.
+        let cur = c.compare_set("k", b"nope", b"new").unwrap();
+        assert_eq!(cur, b"old");
+        // Right expectation swaps.
+        let cur = c.compare_set("k", b"old", b"new").unwrap();
+        assert_eq!(cur, b"new");
+        // Empty expectation on a missing key inserts (PyTorch semantics).
+        let cur = c.compare_set("fresh", b"", b"init").unwrap();
+        assert_eq!(cur, b"init");
+    }
+
+    #[test]
+    fn keys_by_prefix() {
+        let (_s, c) = pair();
+        c.set("hb/w1/0", b"1").unwrap();
+        c.set("hb/w1/1", b"2").unwrap();
+        c.set("addr/0", b"x").unwrap();
+        let mut keys = c.keys("hb/w1/").unwrap();
+        keys.sort();
+        assert_eq!(keys, vec!["hb/w1/0".to_string(), "hb/w1/1".to_string()]);
+    }
+
+    #[test]
+    fn many_clients_shared_view() {
+        let (s, _c) = pair();
+        let addr = s.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let c = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+                    c.add("shared", i as i64 + 1).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let c = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+        let total: i64 = String::from_utf8(c.get("shared").unwrap().unwrap())
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(total, (1..=8).sum::<i64>());
+    }
+
+    #[test]
+    fn server_shutdown_breaks_clients() {
+        let (s, c) = pair();
+        drop(s);
+        // Give the acceptor a beat to die.
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(c.set("x", b"y").is_err() || c.get("x").is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Wire protocol shared by the store server and client.
+
+use std::io::{Read, Write};
+
+/// Request opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    Set = 1,
+    Get = 2,
+    Add = 3,
+    Wait = 4,
+    Delete = 5,
+    CompareSet = 6,
+    Keys = 7,
+    NumKeys = 8,
+    Ping = 9,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            1 => Op::Set,
+            2 => Op::Get,
+            3 => Op::Add,
+            4 => Op::Wait,
+            5 => Op::Delete,
+            6 => Op::CompareSet,
+            7 => Op::Keys,
+            8 => Op::NumKeys,
+            9 => Op::Ping,
+            _ => anyhow::bail!("bad store op {v}"),
+        })
+    }
+}
+
+/// Response status codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    Ok = 0,
+    NotFound = 1,
+    Timeout = 2,
+    Error = 3,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            0 => Status::Ok,
+            1 => Status::NotFound,
+            2 => Status::Timeout,
+            3 => Status::Error,
+            _ => anyhow::bail!("bad store status {v}"),
+        })
+    }
+}
+
+/// Encode one request frame.
+pub fn write_request<W: Write>(w: &mut W, op: Op, key: &str, val: &[u8]) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(9 + key.len() + val.len());
+    buf.push(op as u8);
+    buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    buf.extend_from_slice(key.as_bytes());
+    buf.extend_from_slice(&(val.len() as u32).to_le_bytes());
+    buf.extend_from_slice(val);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Decode one request frame.
+pub fn read_request<R: Read>(r: &mut R) -> anyhow::Result<(Op, String, Vec<u8>)> {
+    let mut op = [0u8; 1];
+    r.read_exact(&mut op)?;
+    let op = Op::from_u8(op[0])?;
+    let key = read_chunk(r, 1 << 16)?;
+    let val = read_chunk(r, 1 << 26)?;
+    Ok((op, String::from_utf8(key)?, val))
+}
+
+/// Encode one response frame.
+pub fn write_response<W: Write>(w: &mut W, status: Status, val: &[u8]) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(5 + val.len());
+    buf.push(status as u8);
+    buf.extend_from_slice(&(val.len() as u32).to_le_bytes());
+    buf.extend_from_slice(val);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Decode one response frame.
+pub fn read_response<R: Read>(r: &mut R) -> anyhow::Result<(Status, Vec<u8>)> {
+    let mut st = [0u8; 1];
+    r.read_exact(&mut st)?;
+    let status = Status::from_u8(st[0])?;
+    let val = read_chunk(r, 1 << 26)?;
+    Ok((status, val))
+}
+
+fn read_chunk<R: Read>(r: &mut R, max: usize) -> anyhow::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    anyhow::ensure!(len <= max, "store chunk too large: {len}");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, Op::Set, "hb/w1/0", b"12345").unwrap();
+        let (op, key, val) = read_request(&mut buf.as_slice()).unwrap();
+        assert_eq!(op, Op::Set);
+        assert_eq!(key, "hb/w1/0");
+        assert_eq!(val, b"12345");
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, Status::Timeout, b"").unwrap();
+        let (st, val) = read_response(&mut buf.as_slice()).unwrap();
+        assert_eq!(st, Status::Timeout);
+        assert!(val.is_empty());
+    }
+
+    #[test]
+    fn rejects_oversized_key() {
+        // key length field says 1 MiB — beyond the 64 KiB key cap.
+        let mut buf = vec![Op::Get as u8];
+        buf.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(read_request(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn op_status_tags() {
+        for op in [Op::Set, Op::Get, Op::Add, Op::Wait, Op::Delete, Op::CompareSet, Op::Keys, Op::NumKeys, Op::Ping] {
+            assert_eq!(Op::from_u8(op as u8).unwrap(), op);
+        }
+        assert!(Op::from_u8(0).is_err());
+        for st in [Status::Ok, Status::NotFound, Status::Timeout, Status::Error] {
+            assert_eq!(Status::from_u8(st as u8).unwrap(), st);
+        }
+        assert!(Status::from_u8(9).is_err());
+    }
+}

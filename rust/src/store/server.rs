@@ -1,0 +1,233 @@
+//! The store server: one thread per client connection, shared map with
+//! condvar wakeups for WAIT.
+
+use super::protocol::{read_request, write_response, Op, Status};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Default)]
+struct Shared {
+    map: Mutex<BTreeMap<String, Vec<u8>>>,
+    changed: Condvar,
+}
+
+/// A TCPStore server. Dropping it stops the acceptor, closes the port
+/// AND severs established connections — a dead store must look dead to
+/// its clients (the watchdog relies on `store unreachable` as a
+/// world-leader-death signal).
+pub struct StoreServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StoreServer {
+    /// Bind an ephemeral localhost port.
+    pub fn bind_any() -> anyhow::Result<Self> {
+        Self::bind("127.0.0.1:0")
+    }
+
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        // Poll the listener so drop() can stop the acceptor promptly.
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let s2 = shared.clone();
+        let stop2 = stop.clone();
+        let conns2 = conns.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("store-accept-{}", addr.port()))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if let Ok(dup) = stream.try_clone() {
+                                conns2.lock().unwrap().push(dup);
+                            }
+                            let s3 = s2.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("store-conn".into())
+                                .spawn(move || handle_conn(stream, s3, stop3));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(StoreServer { addr, shared, stop, conns, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of keys currently stored (for tests/diagnostics).
+    pub fn len(&self) -> usize {
+        self.shared.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for StoreServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake any blocked WAITs so their connections notice shutdown.
+        self.shared.changed.notify_all();
+        // Sever established connections: clients must observe the death
+        // immediately, exactly as if the hosting process was killed.
+        for conn in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let (op, key, val) = match read_request(&mut reader) {
+            Ok(r) => r,
+            Err(_) => return, // client went away
+        };
+        let result = apply(&shared, &stop, op, &key, &val);
+        let (status, out) = match result {
+            Ok((s, v)) => (s, v),
+            Err(e) => (Status::Error, e.to_string().into_bytes()),
+        };
+        if write_response(&mut writer, status, &out).is_err() {
+            return;
+        }
+    }
+}
+
+fn apply(
+    shared: &Shared,
+    stop: &AtomicBool,
+    op: Op,
+    key: &str,
+    val: &[u8],
+) -> anyhow::Result<(Status, Vec<u8>)> {
+    match op {
+        Op::Ping => Ok((Status::Ok, b"pong".to_vec())),
+        Op::Set => {
+            let mut m = shared.map.lock().unwrap();
+            m.insert(key.to_string(), val.to_vec());
+            shared.changed.notify_all();
+            Ok((Status::Ok, Vec::new()))
+        }
+        Op::Get => {
+            let m = shared.map.lock().unwrap();
+            match m.get(key) {
+                Some(v) => Ok((Status::Ok, v.clone())),
+                None => Ok((Status::NotFound, Vec::new())),
+            }
+        }
+        Op::Add => {
+            anyhow::ensure!(val.len() == 8, "ADD takes i64");
+            let delta = i64::from_le_bytes(val.try_into().unwrap());
+            let mut m = shared.map.lock().unwrap();
+            let cur: i64 = m
+                .get(key)
+                .and_then(|v| std::str::from_utf8(v).ok())
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let next = cur + delta;
+            m.insert(key.to_string(), next.to_string().into_bytes());
+            shared.changed.notify_all();
+            Ok((Status::Ok, next.to_string().into_bytes()))
+        }
+        Op::Wait => {
+            anyhow::ensure!(val.len() == 8, "WAIT takes u64 timeout ms");
+            let timeout = Duration::from_millis(u64::from_le_bytes(val.try_into().unwrap()));
+            let deadline = Instant::now() + timeout;
+            let mut m = shared.map.lock().unwrap();
+            loop {
+                if let Some(v) = m.get(key) {
+                    return Ok((Status::Ok, v.clone()));
+                }
+                if stop.load(Ordering::Relaxed) {
+                    return Ok((Status::Error, b"server shutting down".to_vec()));
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Ok((Status::Timeout, Vec::new()));
+                }
+                let (guard, _timeout) = shared
+                    .changed
+                    .wait_timeout(m, (deadline - now).min(Duration::from_millis(100)))
+                    .unwrap();
+                m = guard;
+            }
+        }
+        Op::Delete => {
+            let mut m = shared.map.lock().unwrap();
+            let existed = m.remove(key).is_some();
+            Ok((
+                if existed { Status::Ok } else { Status::NotFound },
+                Vec::new(),
+            ))
+        }
+        Op::CompareSet => {
+            // val = old_len:u32 old new
+            anyhow::ensure!(val.len() >= 4, "COMPARE_SET frame too short");
+            let old_len = u32::from_le_bytes(val[0..4].try_into().unwrap()) as usize;
+            anyhow::ensure!(val.len() >= 4 + old_len, "COMPARE_SET old truncated");
+            let old = &val[4..4 + old_len];
+            let new = &val[4 + old_len..];
+            let mut m = shared.map.lock().unwrap();
+            let cur = m.get(key).cloned();
+            let out = match cur {
+                None if old.is_empty() => {
+                    m.insert(key.to_string(), new.to_vec());
+                    shared.changed.notify_all();
+                    new.to_vec()
+                }
+                None => Vec::new(), // missing and expectation non-empty: no-op
+                Some(c) if c == old => {
+                    m.insert(key.to_string(), new.to_vec());
+                    shared.changed.notify_all();
+                    new.to_vec()
+                }
+                Some(c) => c,
+            };
+            Ok((Status::Ok, out))
+        }
+        Op::Keys => {
+            let m = shared.map.lock().unwrap();
+            let mut out = Vec::new();
+            for k in m.keys() {
+                if k.starts_with(key) {
+                    out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+                    out.extend_from_slice(k.as_bytes());
+                }
+            }
+            Ok((Status::Ok, out))
+        }
+        Op::NumKeys => {
+            let m = shared.map.lock().unwrap();
+            Ok((Status::Ok, (m.len() as u64).to_le_bytes().to_vec()))
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Element types the serving path moves around.
+
+/// Supported element types. `BF16` is opaque 2-byte words to the
+//  coordinator (PJRT does the math); `U8` carries serialized payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum DType {
+    F32 = 0,
+    BF16 = 1,
+    I32 = 2,
+    U8 = 3,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub const fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 => 2,
+            DType::U8 => 1,
+        }
+    }
+
+    /// Wire tag → dtype.
+    pub fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            0 => DType::F32,
+            1 => DType::BF16,
+            2 => DType::I32,
+            3 => DType::U8,
+            _ => anyhow::bail!("unknown dtype tag {v}"),
+        })
+    }
+
+    /// Name as it appears in the AOT manifest ("f32", "bf16", ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        }
+    }
+
+    /// Parse a manifest name.
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "f32" | "float32" => DType::F32,
+            "bf16" | "bfloat16" => DType::BF16,
+            "i32" | "int32" => DType::I32,
+            "u8" | "uint8" => DType::U8,
+            _ => anyhow::bail!("unknown dtype name {s:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::BF16.size(), 2);
+        assert_eq!(DType::I32.size(), 4);
+        assert_eq!(DType::U8.size(), 1);
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for d in [DType::F32, DType::BF16, DType::I32, DType::U8] {
+            assert_eq!(DType::from_u8(d as u8).unwrap(), d);
+        }
+        assert!(DType::from_u8(200).is_err());
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for d in [DType::F32, DType::BF16, DType::I32, DType::U8] {
+            assert_eq!(DType::from_name(d.name()).unwrap(), d);
+        }
+        assert!(DType::from_name("f64").is_err());
+    }
+}

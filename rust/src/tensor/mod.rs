@@ -1,0 +1,332 @@
+//! Tensors as they travel between pipeline workers.
+//!
+//! A [`Tensor`] is a shaped, typed, contiguous byte buffer. The CCL moves
+//! raw bytes; dtype/shape ride in a fixed 64-byte header so a receiver
+//! can pre-validate before copying into its own buffer (NCCL-style ops
+//! require both sides to agree on element count, which the collectives
+//! enforce).
+//!
+//! bf16 is carried as raw u16 words — the coordinator never does math on
+//! bf16, it only moves buffers between PJRT executables, so no software
+//! float conversion sits on the hot path.
+
+mod dtype;
+pub mod serialize;
+
+pub use dtype::DType;
+pub use serialize::{read_tensor, write_tensor, HEADER_LEN};
+
+use crate::util::prng::Rng;
+use std::fmt;
+
+/// Maximum rank we serialize in the fixed header.
+pub const MAX_RANK: usize = 8;
+
+/// A shaped, typed byte buffer. Data is always contiguous row-major.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    dtype: DType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        assert!(shape.len() <= MAX_RANK, "rank {} > {}", shape.len(), MAX_RANK);
+        let elems: usize = shape.iter().product();
+        Tensor { dtype, shape: shape.to_vec(), data: vec![0u8; elems * dtype.size()] }
+    }
+
+    /// Build from an f32 slice.
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
+        let elems: usize = shape.iter().product();
+        assert_eq!(elems, values.len(), "shape/value mismatch");
+        let mut t = Tensor::zeros(DType::F32, shape);
+        t.data.copy_from_slice(bytes_of_f32(values));
+        t
+    }
+
+    /// Build from an i32 slice (token ids).
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Self {
+        let elems: usize = shape.iter().product();
+        assert_eq!(elems, values.len(), "shape/value mismatch");
+        let mut t = Tensor::zeros(DType::I32, shape);
+        let bytes = unsafe {
+            std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
+        };
+        t.data.copy_from_slice(bytes);
+        t
+    }
+
+    /// Build from raw parts (validates length).
+    pub fn from_bytes(dtype: DType, shape: &[usize], data: Vec<u8>) -> anyhow::Result<Self> {
+        let elems: usize = shape.iter().product();
+        anyhow::ensure!(
+            data.len() == elems * dtype.size(),
+            "byte length {} != {} elems × {}B",
+            data.len(),
+            elems,
+            dtype.size()
+        );
+        anyhow::ensure!(shape.len() <= MAX_RANK, "rank too large");
+        Ok(Tensor { dtype, shape: shape.to_vec(), data })
+    }
+
+    /// Random-uniform f32 tensor in [-1, 1) — synthetic activations. The
+    /// paper's throughput experiments forward "a 32-bit floating point
+    /// tensor whose length is 1M" etc.; this is that generator.
+    pub fn rand_f32(shape: &[usize], rng: &mut Rng) -> Self {
+        let mut t = Tensor::zeros(DType::F32, shape);
+        rng.fill_f32(t.as_f32_mut());
+        t
+    }
+
+    /// 1-D f32 tensor of `len` elements (paper sizes: 1K, 10K, … 1M).
+    pub fn f32_1d(len: usize, rng: &mut Rng) -> Self {
+        Self::rand_f32(&[len], rng)
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// View as f32 (panics on other dtypes).
+    pub fn as_f32(&self) -> &[f32] {
+        assert_eq!(self.dtype, DType::F32, "as_f32 on {:?}", self.dtype);
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const f32, self.data.len() / 4)
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.dtype, DType::F32, "as_f32_mut on {:?}", self.dtype);
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.data.as_mut_ptr() as *mut f32,
+                self.data.len() / 4,
+            )
+        }
+    }
+
+    /// View as i32 (panics on other dtypes).
+    pub fn as_i32(&self) -> &[i32] {
+        assert_eq!(self.dtype, DType::I32, "as_i32 on {:?}", self.dtype);
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const i32, self.data.len() / 4)
+        }
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> anyhow::Result<Self> {
+        let new: usize = shape.iter().product();
+        anyhow::ensure!(new == self.elems(), "reshape {:?} -> {:?}", self.shape, shape);
+        anyhow::ensure!(shape.len() <= MAX_RANK, "rank too large");
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// FNV-1a checksum over dtype, shape and data — used by integration
+    /// tests to prove bytes survive transport unmodified.
+    pub fn checksum(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        eat(self.dtype as u8);
+        for &d in &self.shape {
+            for b in (d as u64).to_le_bytes() {
+                eat(b);
+            }
+        }
+        for &b in &self.data {
+            eat(b);
+        }
+        h
+    }
+
+    /// Element-wise sum into self (f32 only) — the reduction kernel for
+    /// all_reduce/reduce with `ReduceOp::Sum`.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.dtype, DType::F32);
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        let a = self.as_f32_mut();
+        let b = other.as_f32();
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += *y;
+        }
+    }
+
+    /// Element-wise max into self (f32 only).
+    pub fn max_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.dtype, DType::F32);
+        assert_eq!(self.shape, other.shape, "max_assign shape mismatch");
+        let a = self.as_f32_mut();
+        let b = other.as_f32();
+        for (x, y) in a.iter_mut().zip(b) {
+            *x = x.max(*y);
+        }
+    }
+
+    /// Scale all elements (f32 only) — `ReduceOp::Avg` divides by world size.
+    pub fn scale(&mut self, k: f32) {
+        for x in self.as_f32_mut() {
+            *x *= k;
+        }
+    }
+
+    /// Split a rank-≥1 tensor into `n` equal chunks along axis 0
+    /// (scatter). Errors if axis 0 is not divisible by `n`.
+    pub fn chunk(&self, n: usize) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(self.rank() >= 1, "chunk on rank-0 tensor");
+        anyhow::ensure!(n > 0 && self.shape[0] % n == 0, "axis0 {} not divisible by {n}", self.shape[0]);
+        let rows = self.shape[0] / n;
+        let mut sub_shape = self.shape.clone();
+        sub_shape[0] = rows;
+        let chunk_bytes = self.data.len() / n;
+        Ok((0..n)
+            .map(|i| Tensor {
+                dtype: self.dtype,
+                shape: sub_shape.clone(),
+                data: self.data[i * chunk_bytes..(i + 1) * chunk_bytes].to_vec(),
+            })
+            .collect())
+    }
+
+    /// Concatenate along axis 0 (all_gather/gather inverse of `chunk`).
+    pub fn concat(parts: &[Tensor]) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(!parts.is_empty(), "concat of nothing");
+        let first = &parts[0];
+        let mut shape = first.shape.clone();
+        let mut data = Vec::with_capacity(parts.iter().map(|p| p.data.len()).sum());
+        let mut rows = 0usize;
+        for p in parts {
+            anyhow::ensure!(p.dtype == first.dtype, "dtype mismatch in concat");
+            anyhow::ensure!(p.shape[1..] == first.shape[1..], "trailing shape mismatch");
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        shape[0] = rows;
+        Ok(Tensor { dtype: first.dtype, shape, data })
+    }
+}
+
+fn bytes_of_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Tensor<{:?}>{:?} ({} bytes, fnv={:016x})",
+            self.dtype,
+            self.shape,
+            self.byte_len(),
+            self.checksum()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_views() {
+        let t = Tensor::zeros(DType::F32, &[2, 3]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert!(t.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_f32_roundtrip() {
+        let t = Tensor::from_f32(&[4], &[1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.as_f32(), &[1.0, -2.5, 3.25, 0.0]);
+    }
+
+    #[test]
+    fn checksum_detects_mutation() {
+        let mut r = Rng::new(1);
+        let mut t = Tensor::rand_f32(&[128], &mut r);
+        let before = t.checksum();
+        t.as_f32_mut()[7] += 1.0;
+        assert_ne!(before, t.checksum());
+    }
+
+    #[test]
+    fn checksum_covers_shape() {
+        let t = Tensor::zeros(DType::F32, &[2, 8]);
+        let u = Tensor::zeros(DType::F32, &[4, 4]);
+        assert_ne!(t.checksum(), u.checksum());
+    }
+
+    #[test]
+    fn add_assign_sums() {
+        let mut a = Tensor::from_f32(&[3], &[1.0, 2.0, 3.0]);
+        let b = Tensor::from_f32(&[3], &[10.0, 20.0, 30.0]);
+        a.add_assign(&b);
+        assert_eq!(a.as_f32(), &[11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn chunk_concat_inverse() {
+        let mut r = Rng::new(2);
+        let t = Tensor::rand_f32(&[8, 5], &mut r);
+        let parts = t.chunk(4).unwrap();
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].shape(), &[2, 5]);
+        let back = Tensor::concat(&parts).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn chunk_rejects_indivisible() {
+        let t = Tensor::zeros(DType::F32, &[7, 2]);
+        assert!(t.chunk(3).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_elems() {
+        let t = Tensor::zeros(DType::F32, &[6]);
+        assert!(t.clone().reshape(&[2, 3]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn i32_tokens() {
+        let t = Tensor::from_i32(&[2, 2], &[1, 2, 3, 4]);
+        assert_eq!(t.as_i32(), &[1, 2, 3, 4]);
+        assert_eq!(t.dtype(), DType::I32);
+    }
+}

@@ -1,0 +1,150 @@
+//! Fixed-header tensor framing for streams and ring buffers.
+//!
+//! Layout (little-endian), total 64 bytes of header then the payload:
+//!
+//! ```text
+//!   0..4    magic  "MWT1"
+//!   4..5    dtype tag
+//!   5..6    rank
+//!   6..8    reserved (zero)
+//!   8..16   payload byte length (u64)
+//!  16..64   shape dims, 6×u64 used (MAX_RANK=8 dims packed as u48 would
+//!           be cute; we keep 6 u64 slots and spill ranks 7..8 into the
+//!           first two via validation — in practice serving tensors are
+//!           rank ≤ 4)
+//! ```
+//!
+//! The header is deliberately fixed-size so the shm ring can reserve
+//! space without a second pass, and so a receiver can sanity-check the
+//! length *before* allocating.
+
+use super::{DType, Tensor, MAX_RANK};
+use std::io::{Read, Write};
+
+/// Serialized header length in bytes.
+pub const HEADER_LEN: usize = 64;
+
+const MAGIC: &[u8; 4] = b"MWT1";
+/// Shape slots in the fixed header.
+const SHAPE_SLOTS: usize = 6;
+
+/// Encode the header into a 64-byte array.
+pub fn encode_header(t: &Tensor) -> anyhow::Result<[u8; HEADER_LEN]> {
+    anyhow::ensure!(
+        t.rank() <= SHAPE_SLOTS,
+        "rank {} exceeds wire limit {SHAPE_SLOTS}",
+        t.rank()
+    );
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(MAGIC);
+    h[4] = t.dtype() as u8;
+    h[5] = t.rank() as u8;
+    h[8..16].copy_from_slice(&(t.byte_len() as u64).to_le_bytes());
+    for (i, &d) in t.shape().iter().enumerate() {
+        let off = 16 + i * 8;
+        h[off..off + 8].copy_from_slice(&(d as u64).to_le_bytes());
+    }
+    Ok(h)
+}
+
+/// Decode a header; returns (dtype, shape, payload_len).
+pub fn decode_header(h: &[u8]) -> anyhow::Result<(DType, Vec<usize>, usize)> {
+    anyhow::ensure!(h.len() >= HEADER_LEN, "short header");
+    anyhow::ensure!(&h[0..4] == MAGIC, "bad tensor magic {:?}", &h[0..4]);
+    let dtype = DType::from_u8(h[4])?;
+    let rank = h[5] as usize;
+    anyhow::ensure!(rank <= MAX_RANK.min(SHAPE_SLOTS), "bad rank {rank}");
+    let payload = u64::from_le_bytes(h[8..16].try_into().unwrap()) as usize;
+    let mut shape = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let off = 16 + i * 8;
+        shape.push(u64::from_le_bytes(h[off..off + 8].try_into().unwrap()) as usize);
+    }
+    // Checked arithmetic: a corrupted header must be rejected, not
+    // overflow (found by prop_dtype_header_rejects_corruption).
+    let elems = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("shape element product overflows"))?;
+    let expect = elems
+        .checked_mul(dtype.size())
+        .ok_or_else(|| anyhow::anyhow!("byte length overflows"))?;
+    anyhow::ensure!(
+        payload == expect,
+        "header inconsistent: payload {payload} != {elems} elems × {}B",
+        dtype.size()
+    );
+    Ok((dtype, shape, payload))
+}
+
+/// Write header + payload to a stream.
+pub fn write_tensor<W: Write>(w: &mut W, t: &Tensor) -> anyhow::Result<()> {
+    let h = encode_header(t)?;
+    w.write_all(&h)?;
+    w.write_all(t.bytes())?;
+    Ok(())
+}
+
+/// Read one tensor from a stream (blocking until complete).
+pub fn read_tensor<R: Read>(r: &mut R) -> anyhow::Result<Tensor> {
+    let mut h = [0u8; HEADER_LEN];
+    r.read_exact(&mut h)?;
+    let (dtype, shape, payload) = decode_header(&h)?;
+    let mut data = vec![0u8; payload];
+    r.read_exact(&mut data)?;
+    Tensor::from_bytes(dtype, &shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut rng = Rng::new(5);
+        for shape in [vec![1usize], vec![16, 8], vec![2, 3, 4, 5]] {
+            let t = Tensor::rand_f32(&shape, &mut rng);
+            let mut buf = Vec::new();
+            write_tensor(&mut buf, &t).unwrap();
+            assert_eq!(buf.len(), HEADER_LEN + t.byte_len());
+            let back = read_tensor(&mut buf.as_slice()).unwrap();
+            assert_eq!(back, t);
+            assert_eq!(back.checksum(), t.checksum());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let t = Tensor::zeros(DType::F32, &[4]);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        buf[0] = b'X';
+        assert!(read_tensor(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_length() {
+        let t = Tensor::zeros(DType::F32, &[4]);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        // Corrupt payload length.
+        buf[8] = 0xFF;
+        assert!(read_tensor(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_high_rank_on_wire() {
+        let t = Tensor::zeros(DType::F32, &[1, 1, 1, 1, 1, 1, 1]);
+        assert!(encode_header(&t).is_err());
+    }
+
+    #[test]
+    fn empty_tensor_roundtrip() {
+        let t = Tensor::zeros(DType::U8, &[0]);
+        let mut buf = Vec::new();
+        write_tensor(&mut buf, &t).unwrap();
+        let back = read_tensor(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.elems(), 0);
+    }
+}

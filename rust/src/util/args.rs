@@ -1,0 +1,294 @@
+//! A small declarative CLI argument parser (clap is not available
+//! offline). Supports subcommands, `--flag`, `--key value`,
+//! `--key=value`, positional arguments, defaults and generated help.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+/// Specification of a command (or subcommand).
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+    subs: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, ..Default::default() }
+    }
+
+    /// `--key <value>` option with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false, required: false });
+        self
+    }
+
+    /// `--key <value>` option that must be present.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    /// Positional argument (all required, ordered).
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn sub(mut self, cmd: Command) -> Self {
+        self.subs.push(cmd);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = write!(s, "usage: {}", self.name);
+        if !self.subs.is_empty() {
+            let _ = write!(s, " <command>");
+        }
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        if !self.opts.is_empty() {
+            let _ = write!(s, " [options]");
+        }
+        let _ = writeln!(s);
+        if !self.subs.is_empty() {
+            let _ = writeln!(s, "\ncommands:");
+            for c in &self.subs {
+                let _ = writeln!(s, "  {:<24} {}", c.name, c.about);
+            }
+        }
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "\narguments:");
+            for (p, h) in &self.positionals {
+                let _ = writeln!(s, "  {:<24} {}", format!("<{p}>"), h);
+            }
+        }
+        if !self.opts.is_empty() {
+            let _ = writeln!(s, "\noptions:");
+            for o in &self.opts {
+                let left = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let default = match o.default {
+                    Some(d) => format!(" [default: {d}]"),
+                    None if o.required => " [required]".to_string(),
+                    None => String::new(),
+                };
+                let _ = writeln!(s, "  {:<24} {}{}", left, o.help, default);
+            }
+        }
+        s
+    }
+
+    /// Parse argv (excluding the program name). Returns the matched
+    /// subcommand chain and values, or a printable error/help string.
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, String> {
+        let mut m = Matches {
+            command: self.name.to_string(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positionals: Vec::new(),
+            sub: None,
+        };
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                m.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    m.flags.push(key.to_string());
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    m.values.insert(key.to_string(), v);
+                }
+            } else if !self.subs.is_empty() && m.sub.is_none() && m.positionals.is_empty() {
+                let sub = self
+                    .subs
+                    .iter()
+                    .find(|c| c.name == a.as_str())
+                    .ok_or_else(|| format!("unknown command '{a}'\n\n{}", self.help_text()))?;
+                let rest = argv[i + 1..].to_vec();
+                let sub_matches = sub.parse(&rest)?;
+                m.sub = Some(Box::new(sub_matches));
+                break;
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if m.sub.is_none() {
+            for o in &self.opts {
+                if o.required && !m.values.contains_key(o.name) {
+                    return Err(format!("missing required --{}\n\n{}", o.name, self.help_text()));
+                }
+            }
+            if !self.subs.is_empty() {
+                return Err(format!("missing command\n\n{}", self.help_text()));
+            }
+            if m.positionals.len() < self.positionals.len() {
+                return Err(format!(
+                    "missing argument <{}>\n\n{}",
+                    self.positionals[m.positionals.len()].0,
+                    self.help_text()
+                ));
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Parse results.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+    pub sub: Option<Box<Matches>>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("--{name} missing"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("--{name} missing"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("--{name} missing"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Command {
+        Command::new("multiworld", "test cli")
+            .sub(
+                Command::new("worker", "run a worker")
+                    .req("rank", "rank in world")
+                    .opt("size", "tensor size", Some("1024"))
+                    .flag("verbose", "chatty"),
+            )
+            .sub(Command::new("launch", "launch topology").pos("config", "path"))
+    }
+
+    #[test]
+    fn parses_subcommand_options() {
+        let m = cli().parse(&argv("worker --rank 3 --size=4096 --verbose")).unwrap();
+        let w = m.sub.unwrap();
+        assert_eq!(w.command, "worker");
+        assert_eq!(w.usize("rank").unwrap(), 3);
+        assert_eq!(w.usize("size").unwrap(), 4096);
+        assert!(w.flag("verbose"));
+    }
+
+    #[test]
+    fn default_applies() {
+        let m = cli().parse(&argv("worker --rank 0")).unwrap();
+        assert_eq!(m.sub.unwrap().usize("size").unwrap(), 1024);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv("worker")).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv("worker --rank 0 --nope 1")).is_err());
+    }
+
+    #[test]
+    fn positional_required() {
+        assert!(cli().parse(&argv("launch")).is_err());
+        let m = cli().parse(&argv("launch topo.json")).unwrap();
+        assert_eq!(m.sub.unwrap().positionals, vec!["topo.json"]);
+    }
+
+    #[test]
+    fn help_is_error_path() {
+        let e = cli().parse(&argv("--help")).unwrap_err();
+        assert!(e.contains("commands:"));
+    }
+}

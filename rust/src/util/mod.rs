@@ -1,0 +1,75 @@
+//! Small self-contained utilities: deterministic PRNG, wall/mono clocks,
+//! a minimal JSON value + parser, a clap-free argument parser, a
+//! proptest-lite property harness, and shared helpers.
+
+pub mod args;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod time;
+
+use std::net::TcpListener;
+
+/// Pick an unused localhost TCP port by binding port 0 and dropping the
+/// listener. Races are possible but vanishingly rare in tests.
+pub fn free_port() -> u16 {
+    let l = TcpListener::bind(("127.0.0.1", 0)).expect("bind :0");
+    l.local_addr().unwrap().port()
+}
+
+/// Format a byte count with binary units ("4.0 KiB", "3.2 GiB").
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Format a throughput in bytes/sec using decimal units matching the
+/// paper's figures (MB/s, GB/s).
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    } else if bytes_per_sec >= 1e6 {
+        format!("{:.2} MB/s", bytes_per_sec / 1e6)
+    } else if bytes_per_sec >= 1e3 {
+        format!("{:.2} KB/s", bytes_per_sec / 1e3)
+    } else {
+        format!("{:.2} B/s", bytes_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_port_is_bindable() {
+        let p = free_port();
+        assert!(p > 0);
+        // Port should be immediately re-bindable.
+        TcpListener::bind(("127.0.0.1", p)).unwrap();
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(4096), "4.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert_eq!(fmt_rate(147.0e6), "147.00 MB/s");
+        assert_eq!(fmt_rate(15.9e9), "15.90 GB/s");
+        assert_eq!(fmt_rate(12.0), "12.00 B/s");
+    }
+}

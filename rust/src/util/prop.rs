@@ -1,0 +1,188 @@
+//! proptest-lite: a tiny property-based testing harness.
+//!
+//! The offline registry has no `proptest`/`quickcheck`, so we carry the
+//! 10% of the idea we need: run a property over a few hundred generated
+//! cases from a deterministic seed, and on failure *shrink* the input by
+//! re-running the property over progressively smaller candidates before
+//! reporting. Generators are plain closures over [`crate::util::prng::Rng`]
+//! plus a `Shrink` hook.
+
+use crate::util::prng::Rng;
+
+/// Number of cases per property (override with `MW_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("MW_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(192)
+}
+
+/// A value generator with an optional shrinker.
+pub struct Gen<T> {
+    pub gen: Box<dyn Fn(&mut Rng) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { gen: Box::new(gen), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'static) -> Self {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    /// Map the generated value (shrinking is lost across map; fine for
+    /// derived small types).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        let g = self.gen;
+        Gen::new(move |r| f(g(r)))
+    }
+}
+
+/// usize in `[lo, hi]` with geometric shrink toward `lo`: candidates jump
+/// half the remaining distance first, so shrinking converges to the
+/// boundary of the failing region in O(log range) passes.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(move |r: &mut Rng| r.range(lo, hi)).with_shrink(move |&v| {
+        let mut out = Vec::new();
+        if v > lo {
+            out.push(lo);
+            let mut delta = (v - lo) / 2;
+            while delta > 0 {
+                out.push(v - delta);
+                delta /= 2;
+            }
+            out.dedup();
+        }
+        out
+    })
+}
+
+/// Vec of f32 in [-1,1) with length in `[min_len, max_len]`; shrinks by
+/// halving the length and zeroing elements.
+pub fn vec_f32(min_len: usize, max_len: usize) -> Gen<Vec<f32>> {
+    Gen::new(move |r: &mut Rng| {
+        let n = r.range(min_len, max_len);
+        let mut v = vec![0.0f32; n];
+        r.fill_f32(&mut v);
+        v
+    })
+    .with_shrink(move |v: &Vec<f32>| {
+        let mut out = Vec::new();
+        if v.len() > min_len {
+            let half = (v.len() / 2).max(min_len);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    })
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs; shrink on failure; panic
+/// with the minimal counterexample. The seed is fixed per property name
+/// so failures reproduce.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let seed = name.bytes().fold(0xC0FFEEu64, |h, b| {
+        h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
+    });
+    let mut rng = Rng::new(seed);
+    let cases = default_cases();
+    for case in 0..cases {
+        let input = (gen.gen)(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(gen, &prop, input, msg);
+            panic!(
+                "property '{name}' failed (case {case}/{cases}):\n  input: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone + std::fmt::Debug>(
+    gen: &Gen<T>,
+    prop: &impl Fn(&T) -> PropResult,
+    mut current: T,
+    mut msg: String,
+) -> (T, String) {
+    // Bounded shrink passes to avoid infinite loops with cyclic shrinkers.
+    for _ in 0..64 {
+        let mut advanced = false;
+        for cand in (gen.shrink)(&current) {
+            if let Err(m) = prop(&cand) {
+                current = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (current, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", &vec_f32(0, 32), |v| {
+            let fwd: f32 = v.iter().sum();
+            let rev: f32 = v.iter().rev().sum();
+            // Float addition is not associative, but reversal of <=32
+            // small values stays within a loose tolerance.
+            if (fwd - rev).abs() < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("{fwd} vs {rev}"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-small", &usize_in(0, 1000), |&v| {
+                if v < 500 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let msg = match r {
+            Ok(_) => panic!("property should have failed"),
+            Err(e) => *e.downcast::<String>().unwrap(),
+        };
+        // Shrinker should walk 500..=1000 down to exactly 500.
+        assert!(msg.contains("input: 500"), "unshrunk: {msg}");
+    }
+
+    #[test]
+    fn deterministic_by_name() {
+        let mut seen = Vec::new();
+        for _ in 0..2 {
+            let collected = std::cell::RefCell::new(Vec::new());
+            check("det", &usize_in(0, 99), |&v| {
+                collected.borrow_mut().push(v);
+                Ok(())
+            });
+            seen.push(collected.into_inner());
+        }
+        assert_eq!(seen[0], seen[1]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Clock helpers: a shared monotonic epoch for experiment timelines and a
+//! controllable clock for deterministic tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Seconds since the process-wide experiment epoch. All timeline plots
+/// (Figs 4 and 5) stamp events with this so multiple threads agree on t=0.
+pub fn since_epoch() -> f64 {
+    epoch().elapsed().as_secs_f64()
+}
+
+/// The experiment epoch — first call wins.
+pub fn epoch() -> Instant {
+    use once_cell::sync::Lazy;
+    static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+    *EPOCH
+}
+
+/// Unix wall-clock in milliseconds (heartbeat stamps that cross
+/// processes go through the store as wall time).
+pub fn unix_millis() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// A stopwatch with lap support for coarse phase timing.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now }
+    }
+
+    /// Time since construction.
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Time since the previous `lap()` (or construction).
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        d
+    }
+}
+
+/// A virtual clock the watchdog tests can drive manually. Real code uses
+/// [`Clock::system`]; tests use [`Clock::manual`] and call
+/// [`Clock::advance`] to simulate missed heartbeats without sleeping.
+#[derive(Clone, Debug)]
+pub struct Clock {
+    inner: ClockInner,
+}
+
+#[derive(Clone, Debug)]
+enum ClockInner {
+    System,
+    Manual(Arc<AtomicU64>), // millis
+}
+
+impl Clock {
+    pub fn system() -> Self {
+        Clock { inner: ClockInner::System }
+    }
+
+    pub fn manual() -> Self {
+        Clock {
+            inner: ClockInner::Manual(Arc::new(AtomicU64::new(0))),
+        }
+    }
+
+    /// Current time in milliseconds (wall for system, virtual otherwise).
+    pub fn now_millis(&self) -> u64 {
+        match &self.inner {
+            ClockInner::System => unix_millis(),
+            ClockInner::Manual(t) => t.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Advance a manual clock; panics on a system clock.
+    pub fn advance(&self, d: Duration) {
+        match &self.inner {
+            ClockInner::System => panic!("cannot advance the system clock"),
+            ClockInner::Manual(t) => {
+                t.fetch_add(d.as_millis() as u64, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_increase() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        let l1 = sw.lap();
+        assert!(l1 >= Duration::from_millis(4));
+        let l2 = sw.lap();
+        assert!(l2 < l1);
+        assert!(sw.total() >= l1);
+    }
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = Clock::manual();
+        assert_eq!(c.now_millis(), 0);
+        c.advance(Duration::from_millis(1500));
+        assert_eq!(c.now_millis(), 1500);
+        let c2 = c.clone();
+        c2.advance(Duration::from_millis(500));
+        assert_eq!(c.now_millis(), 2000, "clones share time");
+    }
+
+    #[test]
+    fn epoch_is_monotone() {
+        let a = since_epoch();
+        let b = since_epoch();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,400 @@
+//! Integration tests for the CCL substrate: rendezvous, the eight
+//! collectives over both transports, NCCL-faithful failure semantics,
+//! and the single-fault-domain contract.
+
+use multiworld::mwccl::{CclError, Rendezvous, ReduceOp, TransportKind, WorldOptions, World};
+use multiworld::tensor::Tensor;
+use multiworld::util::prng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn uniq(name: &str) -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "{name}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+fn both_transports() -> Vec<(&'static str, WorldOptions)> {
+    vec![
+        ("shm", WorldOptions::shm()),
+        ("tcp", WorldOptions::tcp()),
+    ]
+}
+
+#[test]
+fn p2p_send_recv_roundtrip() {
+    for (label, opts) in both_transports() {
+        let worlds = Rendezvous::single_process(&uniq("p2p"), 2, opts).unwrap();
+        let (w0, w1) = (worlds[0].clone(), worlds[1].clone());
+        let mut rng = Rng::new(1);
+        let t = Tensor::rand_f32(&[64, 32], &mut rng);
+        let csum = t.checksum();
+        let sender = std::thread::spawn(move || w1.send(t, 0, 7).unwrap());
+        let got = w0.recv(1, 7).unwrap();
+        sender.join().unwrap();
+        assert_eq!(got.checksum(), csum, "transport {label}");
+        assert_eq!(got.shape(), &[64, 32]);
+    }
+}
+
+#[test]
+fn isend_irecv_are_nonblocking() {
+    let worlds = Rendezvous::single_process(&uniq("async"), 2, WorldOptions::shm()).unwrap();
+    let w0 = worlds[0].clone();
+    let w1 = worlds[1].clone();
+    // Post the recv before the send exists: must not block the caller.
+    let recv_work = w0.irecv(1, 3);
+    assert!(!recv_work.is_completed());
+    let mut rng = Rng::new(2);
+    let t = Tensor::f32_1d(1000, &mut rng);
+    let send_work = w1.isend(t.clone(), 0, 3);
+    send_work.wait().unwrap();
+    let got = recv_work.wait().unwrap().unwrap();
+    assert_eq!(got.checksum(), t.checksum());
+}
+
+#[test]
+fn out_of_order_tags_match_correctly() {
+    let worlds = Rendezvous::single_process(&uniq("tags"), 2, WorldOptions::shm()).unwrap();
+    let (w0, w1) = (worlds[0].clone(), worlds[1].clone());
+    let a = Tensor::from_f32(&[1], &[1.0]);
+    let b = Tensor::from_f32(&[1], &[2.0]);
+    w1.send(a, 0, 100).unwrap();
+    w1.send(b, 0, 200).unwrap();
+    // Receive in reverse tag order.
+    let got_b = w0.recv(1, 200).unwrap();
+    let got_a = w0.recv(1, 100).unwrap();
+    assert_eq!(got_b.as_f32(), &[2.0]);
+    assert_eq!(got_a.as_f32(), &[1.0]);
+}
+
+#[test]
+fn broadcast_all_sizes() {
+    for (label, opts) in both_transports() {
+        for size in [2usize, 3, 4] {
+            let worlds = Rendezvous::single_process(&uniq("bcast"), size, opts.clone()).unwrap();
+            let mut rng = Rng::new(9);
+            let t = Tensor::rand_f32(&[16], &mut rng);
+            let csum = t.checksum();
+            let handles: Vec<_> = worlds
+                .into_iter()
+                .map(|w| {
+                    let t = if w.rank() == 0 { Some(t.clone()) } else { None };
+                    std::thread::spawn(move || w.broadcast(t, 0).unwrap())
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap().checksum(), csum, "{label} size={size}");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_reduce_sum_and_avg_and_max() {
+    let size = 3;
+    for (op, expect) in [
+        (ReduceOp::Sum, vec![0.0 + 1.0 + 2.0, 3.0 * 10.0 + 0.0 + 1.0 + 2.0]),
+        (ReduceOp::Avg, vec![1.0, 11.0]),
+        (ReduceOp::Max, vec![2.0, 12.0]),
+    ] {
+        let worlds = Rendezvous::single_process(&uniq("ar"), size, WorldOptions::shm()).unwrap();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                let r = w.rank() as f32;
+                let t = Tensor::from_f32(&[2], &[r, 10.0 + r]);
+                std::thread::spawn(move || w.all_reduce(t, op).unwrap())
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got.as_f32(), expect.as_slice(), "{op:?}");
+        }
+    }
+}
+
+#[test]
+fn reduce_only_root_gets_result() {
+    let worlds = Rendezvous::single_process(&uniq("red"), 3, WorldOptions::shm()).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let t = Tensor::from_f32(&[1], &[w.rank() as f32 + 1.0]);
+            std::thread::spawn(move || (w.rank(), w.reduce(t, 1, ReduceOp::Sum).unwrap()))
+        })
+        .collect();
+    for h in handles {
+        let (rank, res) = h.join().unwrap();
+        if rank == 1 {
+            assert_eq!(res.unwrap().as_f32(), &[6.0]);
+        } else {
+            assert!(res.is_none());
+        }
+    }
+}
+
+#[test]
+fn gather_concatenates_in_rank_order() {
+    let worlds = Rendezvous::single_process(&uniq("gat"), 3, WorldOptions::tcp()).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let r = w.rank() as f32;
+            let t = Tensor::from_f32(&[1, 2], &[r, r * 10.0]);
+            std::thread::spawn(move || (w.rank(), w.gather(t, 0).unwrap()))
+        })
+        .collect();
+    for h in handles {
+        let (rank, res) = h.join().unwrap();
+        if rank == 0 {
+            let t = res.unwrap();
+            assert_eq!(t.shape(), &[3, 2]);
+            assert_eq!(t.as_f32(), &[0.0, 0.0, 1.0, 10.0, 2.0, 20.0]);
+        } else {
+            assert!(res.is_none());
+        }
+    }
+}
+
+#[test]
+fn all_gather_everyone_gets_concat() {
+    let worlds = Rendezvous::single_process(&uniq("ag"), 3, WorldOptions::shm()).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let t = Tensor::from_f32(&[1], &[w.rank() as f32]);
+            std::thread::spawn(move || w.all_gather(t).unwrap())
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().unwrap();
+        assert_eq!(got.as_f32(), &[0.0, 1.0, 2.0]);
+    }
+}
+
+#[test]
+fn scatter_distributes_parts() {
+    let worlds = Rendezvous::single_process(&uniq("sc"), 3, WorldOptions::shm()).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let parts = if w.rank() == 0 {
+                Some(
+                    (0..3)
+                        .map(|i| Tensor::from_f32(&[2], &[i as f32, i as f32 + 0.5]))
+                        .collect::<Vec<_>>(),
+                )
+            } else {
+                None
+            };
+            std::thread::spawn(move || (w.rank(), w.scatter(parts, 0).unwrap()))
+        })
+        .collect();
+    for h in handles {
+        let (rank, t) = h.join().unwrap();
+        assert_eq!(t.as_f32(), &[rank as f32, rank as f32 + 0.5]);
+    }
+}
+
+#[test]
+fn world_of_one_degenerates_gracefully() {
+    let worlds = Rendezvous::single_process(&uniq("solo"), 1, WorldOptions::shm()).unwrap();
+    let w = &worlds[0];
+    let t = Tensor::from_f32(&[2], &[5.0, 6.0]);
+    assert_eq!(w.broadcast(Some(t.clone()), 0).unwrap().as_f32(), &[5.0, 6.0]);
+    assert_eq!(w.all_reduce(t.clone(), ReduceOp::Sum).unwrap().as_f32(), &[5.0, 6.0]);
+    assert_eq!(w.all_gather(t.clone()).unwrap().as_f32(), &[5.0, 6.0]);
+}
+
+#[test]
+fn invalid_usage_is_rejected_without_breaking_world() {
+    let worlds = Rendezvous::single_process(&uniq("bad"), 2, WorldOptions::shm()).unwrap();
+    let w0 = &worlds[0];
+    let t = Tensor::from_f32(&[1], &[0.0]);
+    // Send to self.
+    assert!(matches!(
+        w0.isend(t.clone(), 0, 1).wait(),
+        Err(CclError::InvalidUsage(_))
+    ));
+    // Rank out of range.
+    assert!(matches!(
+        w0.isend(t.clone(), 5, 1).wait(),
+        Err(CclError::InvalidUsage(_))
+    ));
+    // World still healthy afterwards.
+    assert!(!w0.is_broken());
+    let w1 = worlds[1].clone();
+    let sender = std::thread::spawn(move || w1.send(Tensor::from_f32(&[1], &[3.0]), 0, 9).unwrap());
+    assert_eq!(w0.recv(1, 9).unwrap().as_f32(), &[3.0]);
+    sender.join().unwrap();
+}
+
+// ---------------------------------------------------------------- failure
+
+#[test]
+fn tcp_peer_death_breaks_world_with_remote_error() {
+    let worlds = Rendezvous::single_process(&uniq("die-tcp"), 2, WorldOptions::tcp()).unwrap();
+    let w0 = worlds[0].clone();
+    let w1 = worlds.into_iter().nth(1).unwrap();
+    let pending = w0.irecv(1, 1);
+    // Kill the peer (dropping the World closes its sockets — same signal
+    // the kernel gives when the process dies).
+    drop(w1);
+    let err = pending.wait().unwrap_err();
+    assert!(
+        matches!(err, CclError::RemoteError { .. } | CclError::Aborted(_)),
+        "got {err:?}"
+    );
+    // The world is now broken: subsequent ops fail fast.
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(w0.is_broken());
+    let again = w0.irecv(1, 2).wait().unwrap_err();
+    assert!(matches!(again, CclError::WorldBroken(_)), "got {again:?}");
+}
+
+#[test]
+fn shm_peer_death_is_silent_until_aborted() {
+    // The NCCL-over-shared-memory gap (§3.2): peer death raises nothing.
+    let worlds = Rendezvous::single_process(&uniq("die-shm"), 2, WorldOptions::shm()).unwrap();
+    let w0 = worlds[0].clone();
+    let w1 = worlds.into_iter().nth(1).unwrap();
+    let pending = w0.irecv(1, 1);
+    drop(w1); // peer vanishes
+    assert!(
+        pending.wait_timeout(Duration::from_millis(300)).is_none(),
+        "shm recv must hang silently after peer death"
+    );
+    assert!(!w0.is_broken(), "no error may be raised on the shm path");
+    // The watchdog's remedy: abort the world locally.
+    w0.abort("watchdog: missed heartbeats");
+    let err = pending.wait().unwrap_err();
+    assert!(matches!(err, CclError::Aborted(_) | CclError::WorldBroken(_)));
+    assert!(w0.is_broken());
+}
+
+#[test]
+fn fault_domain_isolation_two_worlds() {
+    // Leader belongs to two worlds (the MultiWorld premise). Killing the
+    // peer of world B must not disturb world A.
+    let mut wa = Rendezvous::single_process(&uniq("iso-a"), 2, WorldOptions::tcp()).unwrap();
+    let mut wb = Rendezvous::single_process(&uniq("iso-b"), 2, WorldOptions::tcp()).unwrap();
+    let a1 = wa.pop().unwrap();
+    let a0 = wa.pop().unwrap();
+    let b1 = wb.pop().unwrap();
+    let b0 = wb.pop().unwrap();
+    // Kill B's worker.
+    drop(b1);
+    std::thread::sleep(Duration::from_millis(50));
+    let _ = b0.irecv(1, 1).wait(); // drives B into broken state
+    assert!(b0.is_broken());
+    // A is untouched: traffic still flows.
+    assert!(!a0.is_broken());
+    let sender = std::thread::spawn(move || {
+        a1.send(Tensor::from_f32(&[1], &[42.0]), 0, 5).unwrap();
+    });
+    assert_eq!(a0.recv(1, 5).unwrap().as_f32(), &[42.0]);
+    sender.join().unwrap();
+}
+
+#[test]
+fn work_handles_surface_broken_world_to_all_waiters() {
+    let worlds = Rendezvous::single_process(&uniq("multi-wait"), 2, WorldOptions::shm()).unwrap();
+    let w0 = worlds[0].clone();
+    let pendings: Vec<_> = (0..4).map(|i| w0.irecv(1, i)).collect();
+    w0.abort("test abort");
+    for p in pendings {
+        assert!(p.wait().is_err());
+    }
+}
+
+#[test]
+fn rate_limited_world_caps_throughput() {
+    use multiworld::mwccl::transport::ratelimit::RateLimiter;
+    let limiter = Arc::new(RateLimiter::new(50.0e6)); // 50 MB/s
+    let opts = WorldOptions::tcp_limited(limiter);
+    let worlds = Rendezvous::single_process(&uniq("rate"), 2, opts).unwrap();
+    let (w0, w1) = (worlds[0].clone(), worlds[1].clone());
+    let mut rng = Rng::new(4);
+    let t = Tensor::f32_1d(500_000, &mut rng); // 2 MB
+    let t0 = std::time::Instant::now();
+    let sender = std::thread::spawn(move || w1.send(t, 0, 1).unwrap());
+    let got = w0.recv(1, 1).unwrap();
+    sender.join().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(got.byte_len(), 2_000_000);
+    assert!(dt > 0.025, "2MB at 50MB/s should take ≥~35ms, took {dt}s");
+}
+
+#[test]
+fn many_concurrent_worlds_one_process() {
+    // A process can be a member of many worlds at once — the property
+    // MultiWorld builds on. 6 worlds, all moving traffic concurrently.
+    let mut handles = Vec::new();
+    for i in 0..6 {
+        let worlds =
+            Rendezvous::single_process(&uniq(&format!("multi{i}")), 2, WorldOptions::shm())
+                .unwrap();
+        let (w0, w1) = (worlds[0].clone(), worlds[1].clone());
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(i as u64);
+            for k in 0..20u64 {
+                let t = Tensor::f32_1d(1000, &mut rng);
+                let c = t.checksum();
+                let send = w1.isend(t, 0, k);
+                let got = w0.recv(1, k).unwrap();
+                send.wait().unwrap();
+                assert_eq!(got.checksum(), c);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn worlds_are_static_no_late_joiners() {
+    // CCL contract: a 2-rank world cannot accept rank 2 — init with an
+    // out-of-range rank fails immediately.
+    let port = multiworld::util::free_port();
+    let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+    let err = World::init(&uniq("static"), 2, 2, addr, WorldOptions::shm()).unwrap_err();
+    assert!(matches!(err, CclError::InvalidUsage(_)));
+}
+
+#[test]
+fn collective_sequence_interleaving() {
+    // Multiple different collectives back-to-back keep their ordering.
+    let worlds = Rendezvous::single_process(&uniq("seq"), 2, WorldOptions::shm()).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            std::thread::spawn(move || {
+                let r = w.rank() as f32;
+                let b = w
+                    .broadcast(if w.rank() == 0 { Some(Tensor::from_f32(&[1], &[7.0])) } else { None }, 0)
+                    .unwrap();
+                let s = w.all_reduce(Tensor::from_f32(&[1], &[r + 1.0]), ReduceOp::Sum).unwrap();
+                let g = w.all_gather(Tensor::from_f32(&[1], &[r])).unwrap();
+                (b, s, g)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (b, s, g) = h.join().unwrap();
+        assert_eq!(b.as_f32(), &[7.0]);
+        assert_eq!(s.as_f32(), &[3.0]);
+        assert_eq!(g.as_f32(), &[0.0, 1.0]);
+    }
+}
+
+#[test]
+fn transport_kind_debug_labels() {
+    let t = TransportKind::Shm { ring_bytes: 1024 };
+    assert!(format!("{t:?}").contains("Shm"));
+}

@@ -1,0 +1,264 @@
+//! Property-based tests (via the in-tree proptest-lite harness) over the
+//! coordinator's pure invariants: routing, batching, topology algebra,
+//! tensor framing and the envelope codec.
+
+use multiworld::serving::batcher::DynamicBatcher;
+use multiworld::serving::router::ReplicaRouter;
+use multiworld::serving::stage_worker::Envelope;
+use multiworld::serving::topology::{NodeId, Topology};
+use multiworld::serving::Request;
+use multiworld::tensor::{serialize, DType, Tensor};
+use multiworld::util::prop::{check, usize_in, vec_f32, Gen};
+use multiworld::util::prng::Rng;
+use std::time::Duration;
+
+#[test]
+fn prop_router_never_exceeds_inflight_cap() {
+    check("router-cap", &usize_in(1, 8), |&cap| {
+        let r = ReplicaRouter::new(cap);
+        for i in 0..4 {
+            r.add_replica(&format!("r{i}"));
+        }
+        let mut rng = Rng::new(cap as u64);
+        let mut outstanding: Vec<String> = Vec::new();
+        for _ in 0..300 {
+            if rng.chance(0.6) {
+                if let Some(id) = r.pick() {
+                    outstanding.push(id);
+                }
+            } else if let Some(id) = outstanding.pop() {
+                r.complete(&id);
+            }
+            if r.inflight() > cap * 4 {
+                return Err(format!("inflight {} > cap {} × replicas", r.inflight(), cap));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_dispatch_conserved() {
+    // Every pick() is recorded against exactly one replica.
+    check("router-conserve", &usize_in(1, 200), |&n| {
+        let r = ReplicaRouter::new(0);
+        for i in 0..3 {
+            r.add_replica(&format!("r{i}"));
+        }
+        for _ in 0..n {
+            let id = r.pick().ok_or("pick failed")?;
+            r.complete(&id);
+        }
+        let total: u64 = r.dispatch_counts().values().sum();
+        if total == n as u64 {
+            Ok(())
+        } else {
+            Err(format!("dispatched {total} != picks {n}"))
+        }
+    });
+}
+
+#[test]
+fn prop_router_balance_within_one() {
+    // With immediate completion, round-robin keeps loads within 1.
+    check("router-balance", &usize_in(1, 300), |&n| {
+        let r = ReplicaRouter::new(0);
+        for i in 0..4 {
+            r.add_replica(&format!("r{i}"));
+        }
+        for _ in 0..n {
+            let id = r.pick().ok_or("pick failed")?;
+            r.complete(&id);
+        }
+        let counts = r.dispatch_counts();
+        let max = counts.values().max().copied().unwrap_or(0);
+        let min = counts.values().min().copied().unwrap_or(0);
+        if max - min <= 1 {
+            Ok(())
+        } else {
+            Err(format!("imbalance: {counts:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_preserves_every_request_once_in_order() {
+    check("batcher-fifo", &usize_in(0, 100), |&n| {
+        let b = DynamicBatcher::new(7, Duration::from_millis(1));
+        for i in 0..n {
+            b.push(Request::new(i as u64, vec![0; 4]));
+        }
+        b.close();
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            if batch.len() > 7 {
+                return Err(format!("batch of {} > max 7", batch.len()));
+            }
+            seen.extend(batch.into_iter().map(|r| r.id));
+        }
+        let expect: Vec<u64> = (0..n as u64).collect();
+        if seen == expect {
+            Ok(())
+        } else {
+            Err(format!("requests lost/reordered: {} of {}", seen.len(), n))
+        }
+    });
+}
+
+#[test]
+fn prop_topology_edges_consistent() {
+    // For any replica vector: every world has distinct members, each
+    // worker has ≥1 in-edge and ≥1 out-edge, in/out views partition the
+    // world set, and store ports are unique.
+    let gen = Gen::new(|r: &mut Rng| {
+        let stages = r.range(1, 4);
+        (0..stages).map(|_| r.range(1, 3)).collect::<Vec<usize>>()
+    });
+    check("topology-edges", &gen, |replicas| {
+        let t = Topology::pipeline("p", replicas, 10_000);
+        let mut ports = std::collections::HashSet::new();
+        for w in &t.worlds {
+            if w.members[0] == w.members[1] {
+                return Err(format!("self-loop world {}", w.name));
+            }
+            if !ports.insert(w.store_port) {
+                return Err(format!("duplicate port {}", w.store_port));
+            }
+        }
+        let mut in_total = 0;
+        let mut out_total = 0;
+        for node in t.workers() {
+            let ins = t.in_edges(node).len();
+            let outs = t.out_edges(node).len();
+            if ins == 0 || outs == 0 {
+                return Err(format!("{node} has ins={ins} outs={outs}"));
+            }
+            in_total += ins;
+            out_total += outs;
+        }
+        // Leader's edges complete the partition.
+        in_total += t.in_edges(NodeId::Leader).len();
+        out_total += t.out_edges(NodeId::Leader).len();
+        if in_total != t.worlds.len() || out_total != t.worlds.len() {
+            return Err(format!(
+                "in {}, out {} != worlds {}",
+                in_total,
+                out_total,
+                t.worlds.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topology_remove_then_add_replica_keeps_connectivity() {
+    let gen = Gen::new(|r: &mut Rng| (r.range(2, 3), r.range(1, 3), r.range(0, 1)));
+    check("topology-heal", &gen, |&(stages, mid, _)| {
+        let mut replicas = vec![1usize; stages];
+        replicas[stages / 2] = mid + 1;
+        let mut t = Topology::pipeline("h", &replicas, 11_000);
+        let victim = NodeId::Worker { stage: stages / 2, replica: 0 };
+        t.remove_node(victim);
+        let (node, fresh) = t.add_replica(stages / 2, 12_000);
+        if fresh.is_empty() {
+            return Err("replacement has no worlds".into());
+        }
+        let ins = t.in_edges(node).len();
+        let outs = t.out_edges(node).len();
+        if ins == 0 || outs == 0 {
+            return Err(format!("replacement not connected: ins={ins} outs={outs}"));
+        }
+        // Replacement never reuses a dead replica id.
+        if node == victim {
+            return Err("burned replica id reused".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_frame_roundtrip() {
+    check("tensor-frame", &vec_f32(0, 4096), |v| {
+        let t = Tensor::from_f32(&[v.len()], v);
+        let mut buf = Vec::new();
+        serialize::write_tensor(&mut buf, &t).map_err(|e| e.to_string())?;
+        let back = serialize::read_tensor(&mut buf.as_slice()).map_err(|e| e.to_string())?;
+        if back.checksum() == t.checksum() {
+            Ok(())
+        } else {
+            Err("checksum mismatch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_envelope_roundtrip_any_id_and_payload() {
+    let gen = Gen::new(|r: &mut Rng| {
+        let id = r.next_u64();
+        let n = r.range(0, 2048);
+        let mut v = vec![0.0f32; n];
+        r.fill_f32(&mut v);
+        (id, v)
+    });
+    check("envelope-roundtrip", &gen, |(id, v)| {
+        let env = Envelope { id: *id, tensor: Tensor::from_f32(&[v.len()], v) };
+        let back = Envelope::unpack(&env.pack()).map_err(|e| e.to_string())?;
+        if back.id == *id && back.tensor.checksum() == env.tensor.checksum() {
+            Ok(())
+        } else {
+            Err("envelope mismatch".into())
+        }
+    });
+}
+
+#[test]
+fn prop_chunk_concat_identity() {
+    let gen = Gen::new(|r: &mut Rng| {
+        let parts = r.range(1, 6);
+        let rows_per = r.range(1, 5);
+        let cols = r.range(1, 8);
+        (parts, rows_per, cols, r.next_u64())
+    });
+    check("chunk-concat", &gen, |&(parts, rows_per, cols, seed)| {
+        let mut rng = Rng::new(seed);
+        let t = Tensor::rand_f32(&[parts * rows_per, cols], &mut rng);
+        let chunks = t.chunk(parts).map_err(|e| e.to_string())?;
+        let back = Tensor::concat(&chunks).map_err(|e| e.to_string())?;
+        if back == t {
+            Ok(())
+        } else {
+            Err("chunk∘concat ≠ id".into())
+        }
+    });
+}
+
+#[test]
+fn prop_dtype_header_rejects_corruption() {
+    // Flipping any single header byte must never yield a tensor that
+    // passes validation with different geometry silently.
+    let gen = Gen::new(|r: &mut Rng| (r.range(1, 64), r.range(0, 63), r.range(1, 255) as u8));
+    check("header-corruption", &gen, |&(n, byte, xor)| {
+        let t = Tensor::zeros(DType::F32, &[n]);
+        let mut buf = Vec::new();
+        serialize::write_tensor(&mut buf, &t).map_err(|e| e.to_string())?;
+        buf[byte] ^= xor;
+        match serialize::read_tensor(&mut buf.as_slice()) {
+            // Either rejected…
+            Err(_) => Ok(()),
+            // …or decoded to exactly the same geometry (the flip hit a
+            // don't-care byte such as reserved padding).
+            Ok(back) => {
+                if back.dtype() == DType::F32 && back.shape() == t.shape() {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "corrupted header accepted: {:?} {:?}",
+                        back.dtype(),
+                        back.shape()
+                    ))
+                }
+            }
+        }
+    });
+}

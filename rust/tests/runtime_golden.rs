@@ -1,0 +1,72 @@
+//! Runtime integration: load the AOT artifacts, run the staged pipeline
+//! on PJRT-CPU and verify numerics against the JAX golden output.
+//!
+//! Requires `make artifacts` (skips with a message otherwise, so
+//! `cargo test` works on a fresh checkout).
+
+use multiworld::runtime::{artifacts_dir, ModelRuntime};
+use multiworld::tensor::{DType, Tensor};
+
+fn runtime_or_skip() -> Option<ModelRuntime> {
+    let dir = artifacts_dir();
+    if !dir.join("model.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ModelRuntime::load(&dir).expect("load artifacts"))
+}
+
+#[test]
+fn pipeline_matches_jax_golden() {
+    let Some(rt) = runtime_or_skip() else { return };
+    rt.verify_golden(artifacts_dir()).unwrap();
+}
+
+#[test]
+fn stage_shapes_chain() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for w in rt.manifest.stages.windows(2) {
+        assert_eq!(w[0].out_shape, w[1].in_shape);
+        assert_eq!(w[0].out_dtype, w[1].in_dtype);
+    }
+    assert_eq!(rt.manifest.stages[0].in_dtype, DType::I32);
+    assert_eq!(
+        rt.manifest.stages.last().unwrap().out_shape.last().copied(),
+        Some(rt.manifest.vocab)
+    );
+}
+
+#[test]
+fn stage_rejects_wrong_shape() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let bad = Tensor::zeros(DType::F32, &[1, 2, 3]);
+    assert!(rt.stages[1].run(&bad).is_err());
+    let bad_dtype = Tensor::zeros(DType::F32, &rt.manifest.stages[0].in_shape.clone());
+    assert!(rt.stages[0].run(&bad_dtype).is_err());
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let shape = rt.manifest.stages[0].in_shape.clone();
+    let tokens: Vec<i32> = (0..shape.iter().product::<usize>())
+        .map(|i| (i % rt.manifest.vocab) as i32)
+        .collect();
+    let input = Tensor::from_i32(&shape, &tokens);
+    let a = rt.run_pipeline(&input).unwrap();
+    let b = rt.run_pipeline(&input).unwrap();
+    assert_eq!(a.checksum(), b.checksum());
+}
+
+#[test]
+fn exec_latency_is_recorded() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let shape = rt.manifest.stages[0].in_shape.clone();
+    let tokens: Vec<i32> = vec![1; shape.iter().product()];
+    let input = Tensor::from_i32(&shape, &tokens);
+    rt.run_pipeline(&input).unwrap();
+    for st in &rt.stages {
+        assert!(st.exec_time.count() >= 1, "{} latency recorded", st.spec().name);
+        assert!(st.mean_exec().as_micros() > 0);
+    }
+}
