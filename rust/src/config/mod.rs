@@ -7,6 +7,83 @@ use crate::tensor::DType;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
+/// Collective algorithm selection for a world's bandwidth-bound ops
+/// (`all_reduce`, `broadcast`, `all_gather`).
+///
+/// * `Flat` — star through the root: optimal for the paper's 2–3 rank
+///   worlds and for small messages (fewest hops).
+/// * `Ring` — bandwidth-optimal pipelined ring: each rank sends
+///   `O(size / world)` bytes per NIC instead of the root sending
+///   `(world-1) × size`, so large tensors in large worlds scale.
+/// * `Auto` — per-op choice: ring once the world is big enough (and,
+///   where the message size is known on every rank, big enough to
+///   amortize the extra hops), flat otherwise.
+///
+/// The choice must be identical on every rank of a world (the wire tags
+/// differ between algorithms), which is why [`CollAlgo::use_ring`] only
+/// consumes inputs all ranks agree on: world size always, message bytes
+/// only for ops where every rank knows it up front (all_reduce).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CollAlgo {
+    Flat,
+    Ring,
+    #[default]
+    Auto,
+}
+
+impl CollAlgo {
+    /// Smallest world where `Auto` switches to ring. Below this the flat
+    /// star is at most 2 sequential root transfers — not worth the ring's
+    /// extra latency hops.
+    pub const RING_MIN_WORLD: usize = 4;
+    /// Smallest message (bytes) where `Auto` rings when the size is known
+    /// on all ranks. Matches the flat→ring crossover measured by
+    /// `benches/ablation_collectives.rs`.
+    pub const RING_MIN_BYTES: usize = 1 << 20;
+    /// Ring step indices ride in 8 tag bits (2·(size−1) steps), so rings
+    /// are capped; worlds past this fall back to flat.
+    pub const RING_MAX_WORLD: usize = 128;
+
+    /// Parse a `MW_COLL_ALGO`-style name.
+    pub fn from_name(s: &str) -> Option<CollAlgo> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Some(CollAlgo::Flat),
+            "ring" => Some(CollAlgo::Ring),
+            "auto" => Some(CollAlgo::Auto),
+            _ => None,
+        }
+    }
+
+    /// Default algorithm, honoring the `MW_COLL_ALGO` env override.
+    pub fn from_env() -> CollAlgo {
+        std::env::var("MW_COLL_ALGO")
+            .ok()
+            .and_then(|s| CollAlgo::from_name(&s))
+            .unwrap_or_default()
+    }
+
+    /// Resolve the algorithm for one collective. `bytes` is the message
+    /// size when every rank knows it before the op (all_reduce), `None`
+    /// when only some ranks do (broadcast — non-roots learn the size on
+    /// the wire; all_gather — contributions may differ per rank).
+    pub fn use_ring(self, world_size: usize, bytes: Option<usize>) -> bool {
+        if world_size < 2 || world_size > Self::RING_MAX_WORLD {
+            return false;
+        }
+        match self {
+            CollAlgo::Flat => false,
+            CollAlgo::Ring => true,
+            CollAlgo::Auto => {
+                world_size >= Self::RING_MIN_WORLD
+                    && match bytes {
+                        Some(b) => b >= Self::RING_MIN_BYTES,
+                        None => true,
+                    }
+            }
+        }
+    }
+}
+
 /// One AOT-compiled pipeline stage.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StageSpec {
@@ -224,5 +301,32 @@ mod tests {
         let c = ServingConfig::default();
         assert_eq!(c.miss_threshold, 3);
         assert!(c.max_batch >= 1);
+    }
+
+    #[test]
+    fn coll_algo_parse() {
+        assert_eq!(CollAlgo::from_name("ring"), Some(CollAlgo::Ring));
+        assert_eq!(CollAlgo::from_name("FLAT"), Some(CollAlgo::Flat));
+        assert_eq!(CollAlgo::from_name("auto"), Some(CollAlgo::Auto));
+        assert_eq!(CollAlgo::from_name("star"), None);
+    }
+
+    #[test]
+    fn coll_algo_auto_crossover() {
+        let a = CollAlgo::Auto;
+        // Small worlds always flat, whatever the size.
+        assert!(!a.use_ring(2, Some(64 << 20)));
+        assert!(!a.use_ring(3, None));
+        // Big world + big (or unknown) message rings.
+        assert!(a.use_ring(4, Some(CollAlgo::RING_MIN_BYTES)));
+        assert!(a.use_ring(8, None));
+        // Big world + known-small message stays flat.
+        assert!(!a.use_ring(8, Some(1024)));
+        // Forced choices ignore the heuristics.
+        assert!(CollAlgo::Ring.use_ring(2, Some(1)));
+        assert!(!CollAlgo::Flat.use_ring(64, Some(1 << 30)));
+        // Degenerate and oversized worlds never ring.
+        assert!(!CollAlgo::Ring.use_ring(1, None));
+        assert!(!CollAlgo::Ring.use_ring(1000, None));
     }
 }

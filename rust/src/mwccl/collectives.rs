@@ -3,10 +3,47 @@
 //! gather, and scatter.").
 //!
 //! Every op exists in asynchronous form (`i*` prefixed, returning
-//! [`Work`]) plus a blocking convenience wrapper. Algorithms are flat
-//! (star through the root) — the paper's worlds are 2–3 ranks, where
-//! flat is optimal; ring variants are a perf-pass option behind the same
-//! API.
+//! [`Work`]) plus a blocking convenience wrapper.
+//!
+//! ## Algorithm selector
+//!
+//! The bandwidth-bound collectives (`all_reduce`, `broadcast`,
+//! `all_gather`) run one of two algorithms, chosen per op by the world's
+//! [`crate::config::CollAlgo`] policy (`WorldOptions::coll_algo`, env
+//! `MW_COLL_ALGO`):
+//!
+//! * **Flat** — a star through the root: the root performs `size − 1`
+//!   sequential full-size transfers. Optimal for the paper's 2–3 rank
+//!   worlds and for small messages (fewest hops, no pipeline fill).
+//! * **Ring** — bandwidth-optimal pipelined rings. All-reduce is a
+//!   reduce-scatter followed by an all-gather over [`SEG_MAX`]-sized
+//!   chunks: each rank moves `2·(N−1)/N` of the tensor through its own
+//!   NIC instead of the root moving `(N−1)×` the tensor through one,
+//!   and chunk `k+1` is on the wire while chunk `k` is being reduced
+//!   (the receiver threads drain into unbounded inboxes, so sends never
+//!   wait for the reducer). Broadcast forwards chunks hop-by-hop down
+//!   the ring — a non-root forwards chunk `k` *before* folding it into
+//!   its buffer, so the pipeline depth is one chunk, not one tensor.
+//!   All-gather circulates each rank's serialized contribution `N−1`
+//!   hops.
+//! * **Auto** — ring for worlds of ≥ `CollAlgo::RING_MIN_WORLD` ranks
+//!   (and, for all_reduce where every rank knows the size up front,
+//!   messages ≥ `CollAlgo::RING_MIN_BYTES`); flat otherwise. The
+//!   thresholds match the crossover measured by
+//!   `benches/ablation_collectives.rs`.
+//!
+//! Both algorithms produce identical bytes for broadcast/all_gather; for
+//! all_reduce they fold in different orders, so f32 rounding may differ
+//! in the last ulp (exactly like NCCL's tree vs ring). The algorithm
+//! choice is deterministic from (policy, world size, message size), so
+//! every rank of a world picks the same one — required, because the two
+//! use different wire tags (ring ops tag each (step, chunk), see
+//! [`make_chunk_tag`]).
+//!
+//! Root-centric ops stay flat but are arrival-order: `reduce` posts all
+//! peer receives up front and folds contributions as they land rather
+//! than blocking peer-by-peer, so one slow peer no longer serializes the
+//! fold behind it.
 //!
 //! Deadlock-freedom: receiver threads always drain transports into
 //! unbounded inboxes, so a send never blocks on the peer's op order —
@@ -15,10 +52,15 @@
 //! same order).
 
 use super::error::{CclError, CclResult};
-use super::wire::{make_tag, TagKind};
+use super::wire::{make_chunk_tag, make_tag, TagKind, SEG_MAX};
 use super::work::Work;
 use super::world::{ReduceOp, World, WorldCore};
-use crate::tensor::Tensor;
+use crate::tensor::serialize::encode_header;
+use crate::tensor::{read_tensor, write_tensor, DType, Tensor};
+
+/// Payload bytes per ring chunk message — one transport segment, so a
+/// chunk is the unit of both pipelining and cut-through.
+const RING_CHUNK: usize = SEG_MAX;
 
 impl World {
     // ---------------------------------------------------------------- p2p
@@ -88,6 +130,13 @@ impl World {
             return Work::done(desc, t);
         }
         let seq = self.core().next_seq();
+        // Message size is unknown on non-roots, so Auto decides from the
+        // world size alone (the choice must match on every rank).
+        if self.core().coll_algo.use_ring(self.size(), None) {
+            return self.submit(desc, move |core| {
+                ring_broadcast(core, t, root, seq).map(Some)
+            });
+        }
         let wire = make_tag(TagKind::Broadcast, seq);
         self.submit(desc, move |core| broadcast_impl(core, t, root, wire).map(Some))
     }
@@ -103,6 +152,7 @@ impl World {
 
     /// Async reduce: every rank contributes `t`; the root's Work
     /// resolves to the reduction, other ranks' resolve to `None`.
+    /// Contributions fold in arrival order.
     pub fn ireduce(&self, t: Tensor, root: usize, op: ReduceOp) -> Work {
         let desc = format!("reduce root={root} {op:?} world={}", self.name());
         if root >= self.size() {
@@ -123,14 +173,34 @@ impl World {
 
     // -------------------------------------------------------- all_reduce
 
-    /// Async all-reduce (reduce to rank 0, then broadcast). Resolves to
-    /// the reduced tensor on every rank.
+    /// Async all-reduce. Flat = reduce to rank 0 then broadcast; ring =
+    /// pipelined reduce-scatter + all-gather. Resolves to the reduced
+    /// tensor on every rank.
+    ///
+    /// All ranks must contribute identically-shaped f32 tensors (CCL
+    /// contract). Violating it is detected where possible (shape check
+    /// at the flat root, chunk-length check on the ring), but under
+    /// `Auto` a size mismatch can also make ranks pick different
+    /// algorithms, which — like NCCL with mismatched collective calls —
+    /// stalls until `op_timeout` (set one to get a clean error).
     pub fn iall_reduce(&self, t: Tensor, op: ReduceOp) -> Work {
         let desc = format!("all_reduce {op:?} world={}", self.name());
         if self.size() == 1 {
             return Work::done(desc, Some(t));
         }
         let seq = self.core().next_seq();
+        // All ranks must supply identically-shaped tensors (CCL
+        // contract), so byte_len is the same everywhere and Auto's
+        // choice is consistent across the world.
+        if self
+            .core()
+            .coll_algo
+            .use_ring(self.size(), Some(t.byte_len()))
+        {
+            return self.submit(desc, move |core| {
+                ring_all_reduce(core, t, op, seq).map(Some)
+            });
+        }
         let rtag = make_tag(TagKind::AllReduce, seq * 2);
         let btag = make_tag(TagKind::AllReduce, seq * 2 + 1);
         self.submit(desc, move |core| {
@@ -170,14 +240,22 @@ impl World {
 
     // -------------------------------------------------------- all_gather
 
-    /// Async all-gather: every rank resolves to the concatenation
-    /// (gather to rank 0, broadcast back).
+    /// Async all-gather: every rank resolves to the rank-order
+    /// concatenation. Flat = gather to rank 0 then broadcast; ring =
+    /// each contribution circulates `size − 1` hops.
     pub fn iall_gather(&self, t: Tensor) -> Work {
         let desc = format!("all_gather world={}", self.name());
         if self.size() == 1 {
             return Work::done(desc, Some(t));
         }
         let seq = self.core().next_seq();
+        // Contributions may differ in size per rank, so Auto decides
+        // from the world size alone (the choice must match everywhere).
+        if self.core().coll_algo.use_ring(self.size(), None) {
+            return self.submit(desc, move |core| {
+                ring_all_gather(core, t, seq).map(Some)
+            });
+        }
         let gtag = make_tag(TagKind::AllGather, seq * 2);
         let btag = make_tag(TagKind::AllGather, seq * 2 + 1);
         self.submit(desc, move |core| {
@@ -217,7 +295,10 @@ impl World {
                     )
                 }
                 None => {
-                    return Work::failed(desc, CclError::InvalidUsage("root must supply parts".into()))
+                    return Work::failed(
+                        desc,
+                        CclError::InvalidUsage("root must supply parts".into()),
+                    )
                 }
             }
         }
@@ -237,7 +318,7 @@ impl World {
     }
 }
 
-// ------------------------------------------------------------------ impls
+// ------------------------------------------------------------- flat impls
 
 fn broadcast_impl(
     core: &WorldCore,
@@ -258,6 +339,15 @@ fn broadcast_impl(
     }
 }
 
+/// Root-side fold is arrival-order: all peer receives are outstanding at
+/// once (the receiver threads are always draining into the per-link
+/// inboxes) and whichever contribution lands next is folded next, so a
+/// straggler delays only itself, not every peer queued behind it.
+///
+/// Idle waiting parks on one pending link's inbox condvar (rotating
+/// through them with a short timeout) rather than busy-polling — an
+/// arrival on the parked link wakes the fold immediately; arrivals
+/// elsewhere are picked up on the next rotation sweep.
 fn reduce_impl(
     core: &WorldCore,
     t: Tensor,
@@ -265,36 +355,75 @@ fn reduce_impl(
     op: ReduceOp,
     wire: u64,
 ) -> CclResult<Option<Tensor>> {
-    if core.rank == root {
-        let mut acc = t;
-        if acc.dtype() != crate::tensor::DType::F32 {
-            return Err(CclError::InvalidUsage("reduce requires f32 tensors".into()));
+    if core.rank != root {
+        core.send_tensor(root, wire, &t)?;
+        return Ok(None);
+    }
+    let mut acc = t;
+    if acc.dtype() != DType::F32 {
+        return Err(CclError::InvalidUsage("reduce requires f32 tensors".into()));
+    }
+    let fold = |peer: usize, bytes: Vec<u8>, acc: &mut Tensor| -> CclResult<()> {
+        let part = read_tensor(&mut bytes.as_slice()).map_err(|e| {
+            CclError::Transport(format!("bad tensor frame from {peer}: {e}"))
+        })?;
+        core.recycle(peer, bytes);
+        if part.shape() != acc.shape() || part.dtype() != acc.dtype() {
+            return Err(CclError::InvalidUsage(format!(
+                "reduce shape mismatch: {:?} vs {:?} from rank {peer}",
+                acc.shape(),
+                part.shape()
+            )));
         }
-        for peer in 0..core.size {
-            if peer == root {
-                continue;
+        match op {
+            ReduceOp::Sum | ReduceOp::Avg => acc.add_assign(&part),
+            ReduceOp::Max => acc.max_assign(&part),
+        }
+        Ok(())
+    };
+    const PARK: std::time::Duration = std::time::Duration::from_millis(1);
+    let mut pending: Vec<usize> = (0..core.size).filter(|&p| p != root).collect();
+    let deadline = core.op_timeout.map(|d| std::time::Instant::now() + d);
+    while !pending.is_empty() {
+        // Sweep: fold everything that has already arrived, any order.
+        let mut progressed = false;
+        let mut i = 0;
+        while i < pending.len() {
+            let peer = pending[i];
+            match core.link(peer)?.try_recv(wire)? {
+                Some(bytes) => {
+                    fold(peer, bytes, &mut acc)?;
+                    pending.swap_remove(i);
+                    progressed = true;
+                }
+                None => i += 1,
             }
-            let part = core.recv_tensor(peer, wire)?;
-            if part.shape() != acc.shape() || part.dtype() != acc.dtype() {
-                return Err(CclError::InvalidUsage(format!(
-                    "reduce shape mismatch: {:?} vs {:?} from rank {peer}",
-                    acc.shape(),
-                    part.shape()
+        }
+        if progressed || pending.is_empty() {
+            continue;
+        }
+        if let Some(d) = deadline {
+            if std::time::Instant::now() >= d {
+                return Err(CclError::Timeout(format!(
+                    "reduce: still waiting on ranks {pending:?}"
                 )));
             }
-            match op {
-                ReduceOp::Sum | ReduceOp::Avg => acc.add_assign(&part),
-                ReduceOp::Max => acc.max_assign(&part),
+        }
+        // Nothing ready: park briefly on one pending link's condvar.
+        let peer = pending[0];
+        match core.link(peer)?.recv(wire, Some(PARK)) {
+            Ok(bytes) => {
+                fold(peer, bytes, &mut acc)?;
+                pending.remove(0);
             }
+            Err(CclError::Timeout(_)) => pending.rotate_left(1),
+            Err(e) => return Err(e),
         }
-        if op == ReduceOp::Avg {
-            acc.scale(1.0 / core.size as f32);
-        }
-        Ok(Some(acc))
-    } else {
-        core.send_tensor(root, wire, &t)?;
-        Ok(None)
     }
+    if op == ReduceOp::Avg {
+        acc.scale(1.0 / core.size as f32);
+    }
+    Ok(Some(acc))
 }
 
 fn gather_impl(
@@ -330,18 +459,312 @@ fn scatter_impl(
 ) -> CclResult<Tensor> {
     if core.rank == root {
         let mut parts = parts.unwrap(); // validated at submit
-        // Send in reverse so removal by index stays cheap and rank order
-        // on the wire is immaterial (distinct links).
-        let mine = parts[root].clone();
-        for peer in (0..core.size).rev() {
+        for peer in 0..core.size {
             if peer == root {
                 continue;
             }
             core.send_tensor(peer, wire, &parts[peer])?;
         }
-        parts.clear();
-        Ok(mine)
+        // Take the root's part out of the vec — no tensor clone.
+        Ok(parts.swap_remove(root))
     } else {
         core.recv_tensor(root, wire)
+    }
+}
+
+// ------------------------------------------------------------- ring impls
+
+/// Successor on the ring.
+#[inline]
+fn ring_next(core: &WorldCore) -> usize {
+    (core.rank + 1) % core.size
+}
+
+/// Predecessor on the ring.
+#[inline]
+fn ring_prev(core: &WorldCore) -> usize {
+    (core.rank + core.size - 1) % core.size
+}
+
+/// Number of [`RING_CHUNK`] messages covering `len` bytes (0 for 0).
+#[inline]
+fn chunks_of(len: usize) -> usize {
+    len.div_ceil(RING_CHUNK)
+}
+
+/// Byte bounds of chunk `c` within `[off, off + len)`.
+#[inline]
+fn chunk_bounds(off: usize, len: usize, c: usize) -> (usize, usize) {
+    let lo = off + c * RING_CHUNK;
+    let hi = off + len.min((c + 1) * RING_CHUNK);
+    (lo, hi)
+}
+
+/// Element-wise fold of little-endian f32 words: `dst ← dst ⊕ src`.
+/// Operates on byte slices so pooled (byte-aligned) wire buffers need no
+/// alignment guarantees.
+fn fold_f32(dst: &mut [u8], src: &[u8], op: ReduceOp) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.chunks_exact_mut(4).zip(src.chunks_exact(4)) {
+        let a = f32::from_le_bytes(d.try_into().unwrap());
+        let b = f32::from_le_bytes(s.try_into().unwrap());
+        let v = match op {
+            ReduceOp::Sum | ReduceOp::Avg => a + b,
+            ReduceOp::Max => a.max(b),
+        };
+        d.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bandwidth-optimal ring all-reduce: reduce-scatter then all-gather,
+/// `2·(N−1)` steps, each moving one per-rank slice as a train of
+/// [`RING_CHUNK`] messages. Receives fold chunk `k` while chunk `k+1`
+/// is still in flight (the link reader threads never stop draining).
+///
+/// After the reduce-scatter, rank `r` owns the fully-reduced slice
+/// `(r+1) mod N`; the all-gather circulates the owned slices until every
+/// rank has the whole tensor.
+fn ring_all_reduce(core: &WorldCore, mut t: Tensor, op: ReduceOp, seq: u64) -> CclResult<Tensor> {
+    if t.dtype() != DType::F32 {
+        return Err(CclError::InvalidUsage("all_reduce requires f32 tensors".into()));
+    }
+    let n = core.size;
+    let next = ring_next(core);
+    let prev = ring_prev(core);
+    let elems = t.elems();
+    let (base, extra) = (elems / n, elems % n);
+    // Slice i covers elements [start, start+len): first `extra` slices
+    // get one extra element, so any size divides cleanly.
+    let slice_bytes = |i: usize| -> (usize, usize) {
+        let start = i * base + i.min(extra);
+        let len = base + usize::from(i < extra);
+        (start * 4, len * 4)
+    };
+
+    // One ring step: send the outgoing slice as a chunk train, then
+    // receive the incoming slice's chunks in order — folding them when
+    // `fold` is set (reduce-scatter) or overwriting (all-gather). The
+    // sends never block on the peer's op order (its reader thread always
+    // drains), so chunk c+1 is in flight while chunk c is applied.
+    let ring_step = |t: &mut Tensor,
+                     step: usize,
+                     send_slice: usize,
+                     recv_slice: usize,
+                     fold: Option<ReduceOp>|
+     -> CclResult<()> {
+        let (so, sl) = slice_bytes(send_slice);
+        let (ro, rl) = slice_bytes(recv_slice);
+        for c in 0..chunks_of(sl) {
+            let (lo, hi) = chunk_bounds(so, sl, c);
+            let tag = make_chunk_tag(TagKind::AllReduce, seq, step, c);
+            core.send_bytes(next, tag, &[&t.bytes()[lo..hi]])?;
+        }
+        for c in 0..chunks_of(rl) {
+            let tag = make_chunk_tag(TagKind::AllReduce, seq, step, c);
+            let buf = core.recv_bytes(prev, tag)?;
+            let (lo, hi) = chunk_bounds(ro, rl, c);
+            if buf.len() != hi - lo {
+                return Err(CclError::InvalidUsage(format!(
+                    "all_reduce chunk length mismatch from rank {prev}: {} vs {} \
+                     (peers must pass identically-shaped tensors)",
+                    buf.len(),
+                    hi - lo
+                )));
+            }
+            match fold {
+                Some(op) => fold_f32(&mut t.bytes_mut()[lo..hi], &buf, op),
+                None => t.bytes_mut()[lo..hi].copy_from_slice(&buf),
+            }
+            core.recycle(prev, buf);
+        }
+        Ok(())
+    };
+
+    // ---- phase 1: reduce-scatter (steps 0 .. N-1) ----
+    for s in 0..n - 1 {
+        let send_slice = (core.rank + n - s) % n;
+        let recv_slice = (core.rank + n - s - 1) % n;
+        ring_step(&mut t, s, send_slice, recv_slice, Some(op))?;
+    }
+
+    // Averaging divides the owned (fully-reduced) slice only — the other
+    // slices are overwritten by already-averaged data in phase 2.
+    if op == ReduceOp::Avg {
+        let owned = (core.rank + 1) % n;
+        let (oo, ol) = slice_bytes(owned);
+        let inv = 1.0 / n as f32;
+        for d in t.bytes_mut()[oo..oo + ol].chunks_exact_mut(4) {
+            let v = f32::from_le_bytes(d.try_into().unwrap()) * inv;
+            d.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    // ---- phase 2: all-gather (steps N-1 .. 2N-3) ----
+    for s in 0..n - 1 {
+        let send_slice = (core.rank + 1 + n - s) % n;
+        let recv_slice = (core.rank + n - s) % n;
+        ring_step(&mut t, (n - 1) + s, send_slice, recv_slice, None)?;
+    }
+    Ok(t)
+}
+
+/// Pipelined ring broadcast: the serialized tensor travels the ring
+/// root → root+1 → … → root+N−1 as [`RING_CHUNK`]-sized chunk messages.
+/// Every non-terminal rank forwards chunk `k` *before* appending it
+/// locally, so all hops stream concurrently and the added latency per
+/// extra rank is one chunk, not one tensor. Chunk 0 is an 8-byte
+/// prologue carrying the total length so receivers preallocate once and
+/// know the chunk count up front.
+fn ring_broadcast(
+    core: &WorldCore,
+    t: Option<Tensor>,
+    root: usize,
+    seq: u64,
+) -> CclResult<Tensor> {
+    let n = core.size;
+    let next = ring_next(core);
+    let prev = ring_prev(core);
+    // Position along the chain measured from the root; the last rank
+    // (pos == n-1) must not forward back into the root.
+    let pos = (core.rank + n - root) % n;
+    let tag = |c: usize| make_chunk_tag(TagKind::Broadcast, seq, 0, c);
+
+    if core.rank == root {
+        let t = t.ok_or_else(|| CclError::InvalidUsage("root must supply tensor".into()))?;
+        let hdr = encode_header(&t)
+            .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
+        let total = hdr.len() + t.byte_len();
+        core.send_bytes(next, tag(0), &[&(total as u64).to_le_bytes()])?;
+        // Chunk the virtual stream [header | payload] without copying.
+        for c in 0..chunks_of(total) {
+            let (lo, hi) = chunk_bounds(0, total, c);
+            let h = hdr.len();
+            if hi <= h {
+                core.send_bytes(next, tag(c + 1), &[&hdr[lo..hi]])?;
+            } else if lo >= h {
+                core.send_bytes(next, tag(c + 1), &[&t.bytes()[lo - h..hi - h]])?;
+            } else {
+                core.send_bytes(next, tag(c + 1), &[&hdr[lo..], &t.bytes()[..hi - h]])?;
+            }
+        }
+        return Ok(t);
+    }
+
+    let forward = pos != n - 1;
+    let meta = core.recv_bytes(prev, tag(0))?;
+    if meta.len() != 8 {
+        return Err(CclError::Transport(format!(
+            "broadcast prologue: expected 8 bytes, got {}",
+            meta.len()
+        )));
+    }
+    let total = u64::from_le_bytes(meta.as_slice().try_into().unwrap()) as usize;
+    if forward {
+        core.send_bytes(next, tag(0), &[&meta])?;
+    }
+    core.recycle(prev, meta);
+    let mut buf = Vec::with_capacity(total);
+    for c in 0..chunks_of(total) {
+        let chunk = core.recv_bytes(prev, tag(c + 1))?;
+        if forward {
+            // Forward first: downstream starts on chunk k while we are
+            // still assembling it.
+            core.send_bytes(next, tag(c + 1), &[&chunk])?;
+        }
+        buf.extend_from_slice(&chunk);
+        core.recycle(prev, chunk);
+    }
+    if buf.len() != total {
+        return Err(CclError::Transport(format!(
+            "broadcast stream truncated: {} of {total} bytes",
+            buf.len()
+        )));
+    }
+    read_tensor(&mut buf.as_slice())
+        .map_err(|e| CclError::Transport(format!("bad broadcast tensor: {e}")))
+}
+
+/// Ring all-gather: each rank's serialized contribution circulates
+/// `N−1` hops (store-and-forward per hop, all ranks transferring
+/// concurrently each step), then parts concatenate in rank order —
+/// byte-identical to the flat gather+broadcast result, including
+/// per-rank contributions of differing axis-0 lengths.
+fn ring_all_gather(core: &WorldCore, t: Tensor, seq: u64) -> CclResult<Tensor> {
+    let n = core.size;
+    let next = ring_next(core);
+    let prev = ring_prev(core);
+    let mut parts: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+    let mut mine = Vec::with_capacity(crate::tensor::HEADER_LEN + t.byte_len());
+    write_tensor(&mut mine, &t)
+        .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
+    parts[core.rank] = Some(mine);
+    for s in 0..n - 1 {
+        let send_idx = (core.rank + n - s) % n;
+        let recv_idx = (core.rank + n - s - 1) % n;
+        let tag = make_chunk_tag(TagKind::AllGather, seq, s, 0);
+        core.send_bytes(next, tag, &[parts[send_idx].as_deref().unwrap()])?;
+        parts[recv_idx] = Some(core.recv_bytes(prev, tag)?);
+    }
+    let mut tensors = Vec::with_capacity(n);
+    for (i, p) in parts.iter().enumerate() {
+        let bytes = p.as_deref().unwrap();
+        tensors.push(read_tensor(&mut &*bytes).map_err(|e| {
+            CclError::Transport(format!("bad all_gather tensor from rank {i}: {e}"))
+        })?);
+    }
+    let cat = Tensor::concat(&tensors)
+        .map_err(|e| CclError::InvalidUsage(format!("all_gather concat: {e}")))?;
+    // Everything except our own serialization came off the wire; give
+    // those buffers back to the inbound link's pool.
+    for (i, p) in parts.into_iter().enumerate() {
+        if i == core.rank {
+            continue;
+        }
+        if let Some(b) = p {
+            core.recycle(prev, b);
+        }
+    }
+    Ok(cat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_arithmetic() {
+        assert_eq!(chunks_of(0), 0);
+        assert_eq!(chunks_of(1), 1);
+        assert_eq!(chunks_of(RING_CHUNK), 1);
+        assert_eq!(chunks_of(RING_CHUNK + 1), 2);
+        let (lo, hi) = chunk_bounds(100, RING_CHUNK + 7, 1);
+        assert_eq!(lo, 100 + RING_CHUNK);
+        assert_eq!(hi, 100 + RING_CHUNK + 7);
+    }
+
+    #[test]
+    fn fold_f32_ops() {
+        let a: Vec<u8> = [1.0f32, -2.0, 3.5]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let b: Vec<u8> = [10.0f32, 5.0, -1.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let mut sum = a.clone();
+        fold_f32(&mut sum, &b, ReduceOp::Sum);
+        let got: Vec<f32> = sum
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![11.0, 3.0, 2.5]);
+        let mut mx = a;
+        fold_f32(&mut mx, &b, ReduceOp::Max);
+        let got: Vec<f32> = mx
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![10.0, 5.0, 3.5]);
     }
 }

@@ -22,6 +22,11 @@
 //! (like NCCL's per-communicator stream ordering); ops in *different*
 //! worlds proceed concurrently — which is what lets MultiWorld's
 //! communicator poll many worlds without deadlock.
+//!
+//! Bandwidth-bound collectives select between a flat star and pipelined
+//! ring algorithms per op (see [`collectives`] and
+//! [`crate::config::CollAlgo`]); the receive path reassembles into
+//! pooled, size-hinted buffers (see [`transport::inbox::Inbox`]).
 
 pub mod collectives;
 pub mod error;
@@ -31,6 +36,7 @@ pub mod wire;
 pub mod work;
 pub mod world;
 
+pub use crate::config::CollAlgo;
 pub use error::{CclError, CclResult};
 pub use rendezvous::{Rendezvous, TransportKind, WorldOptions};
 pub use work::{Work, WorkState};

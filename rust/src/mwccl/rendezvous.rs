@@ -14,6 +14,7 @@ use super::transport::shm::{shm_dir, ShmLink, DEFAULT_RING_BYTES};
 use super::transport::tcp::TcpLink;
 use super::transport::Link;
 use super::world::World;
+use crate::config::CollAlgo;
 use crate::store::{StoreClient, StoreServer};
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -25,8 +26,16 @@ use std::time::Duration;
 #[derive(Clone)]
 pub enum TransportKind {
     /// Host-to-host path: real sockets, failures detectable, optional
-    /// shared bandwidth cap (the paper's 10 Gbps inter-VM link).
+    /// shared bandwidth cap (the paper's 10 Gbps inter-VM link). The
+    /// one limiter is shared by **every** link in the world — a single
+    /// NIC the whole (in-process) world contends for.
     Tcp { limiter: Option<Arc<RateLimiter>> },
+    /// Host-to-host path with a *per-rank* NIC: each rank builds its own
+    /// limiter at init, so every member has `rate_bps` of egress of its
+    /// own — the multi-host topology where ring collectives shine (the
+    /// root of a flat star bottlenecks on one NIC; a ring spreads the
+    /// same bytes across all of them).
+    TcpNic { rate_bps: f64 },
     /// Intra-host path: mmap ring pairs, failures silent (NVLink/shm
     /// analogue).
     Shm { ring_bytes: usize },
@@ -40,6 +49,7 @@ impl std::fmt::Debug for TransportKind {
                 "Tcp{{limit={}}}",
                 limiter.as_ref().map(|l| l.rate_bps()).unwrap_or(f64::INFINITY)
             ),
+            TransportKind::TcpNic { rate_bps } => write!(f, "TcpNic{{limit={rate_bps}}}"),
             TransportKind::Shm { ring_bytes } => write!(f, "Shm{{ring={ring_bytes}}}"),
         }
     }
@@ -54,6 +64,10 @@ pub struct WorldOptions {
     /// Per-collective blocking-wait deadline; `None` waits until the
     /// link errors or is aborted (NCCL default behaviour).
     pub op_timeout: Option<Duration>,
+    /// Collective algorithm policy. Must be identical on every rank
+    /// (ring and flat use different wire tags). Defaults to
+    /// [`CollAlgo::Auto`], overridable via `MW_COLL_ALGO`.
+    pub coll_algo: CollAlgo,
 }
 
 impl Default for WorldOptions {
@@ -62,6 +76,7 @@ impl Default for WorldOptions {
             transport: TransportKind::Shm { ring_bytes: DEFAULT_RING_BYTES },
             init_timeout: Duration::from_secs(30),
             op_timeout: None,
+            coll_algo: CollAlgo::from_env(),
         }
     }
 }
@@ -72,6 +87,22 @@ impl WorldOptions {
             transport: TransportKind::Tcp { limiter: None },
             ..Default::default()
         }
+    }
+
+    /// Host-to-host transport where every rank gets its *own* NIC of
+    /// `rate_bps` bytes/sec (built at init) — the multi-host model the
+    /// ring collectives are benchmarked against.
+    pub fn tcp_per_rank_limited(rate_bps: f64) -> Self {
+        WorldOptions {
+            transport: TransportKind::TcpNic { rate_bps },
+            ..Default::default()
+        }
+    }
+
+    /// Select the collective algorithm policy for this world.
+    pub fn with_coll_algo(mut self, algo: CollAlgo) -> Self {
+        self.coll_algo = algo;
+        self
     }
 
     pub fn tcp_limited(limiter: Arc<RateLimiter>) -> Self {
@@ -143,6 +174,7 @@ impl World {
                 Some(store),
                 server,
                 opts.op_timeout,
+                opts.coll_algo,
             ));
         }
 
@@ -150,6 +182,12 @@ impl World {
         let links: HashMap<usize, Box<dyn Link>> = match &opts.transport {
             TransportKind::Tcp { limiter } => {
                 tcp_links(name, rank, size, &store, limiter.clone(), opts.init_timeout)?
+            }
+            TransportKind::TcpNic { rate_bps } => {
+                // One limiter per rank: all of this rank's links share it
+                // (its NIC); other ranks build their own.
+                let nic = Some(Arc::new(RateLimiter::new(*rate_bps)));
+                tcp_links(name, rank, size, &store, nic, opts.init_timeout)?
             }
             TransportKind::Shm { ring_bytes } => {
                 shm_links(name, rank, size, *ring_bytes, opts.init_timeout)?
@@ -167,6 +205,7 @@ impl World {
             Some(store),
             server,
             opts.op_timeout,
+            opts.coll_algo,
         ))
     }
 }

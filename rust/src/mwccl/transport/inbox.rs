@@ -3,11 +3,67 @@
 //! Receiver threads push frames; `recv(tag)` blocks until a *complete*
 //! message for that tag exists. A failed link wakes every waiter with
 //! the error; an aborted link wakes them with `Aborted`.
+//!
+//! The receive path is pooled and allocation-free in steady state:
+//! every frame carries the total message length (see
+//! [`crate::mwccl::wire`]), so the first frame of a message grabs a
+//! buffer of the right capacity from the link's free-list and later
+//! frames append without reallocating. Consumers hand buffers back via
+//! [`Inbox::recycle`] (plumbed through `Link::recycle`) once the payload
+//! has been parsed, closing the loop — large-tensor traffic reuses the
+//! same few buffers instead of exercising the allocator per message.
 
 use crate::mwccl::error::{CclError, CclResult};
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Free-list of reusable message buffers, shared by one link's reader
+/// thread (producer side) and its consumers (via [`Inbox::recycle`]).
+#[derive(Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<u8>>>,
+}
+
+impl BufferPool {
+    /// Buffers retained at most; beyond this, returned buffers are freed.
+    const MAX_POOLED: usize = 32;
+    /// Largest capacity worth hoarding (one pathological 1 GiB tensor
+    /// must not pin its buffer forever).
+    const MAX_POOLED_CAP: usize = 32 << 20;
+
+    /// Take a cleared buffer with at least `capacity` bytes reserved.
+    pub fn take(&self, capacity: usize) -> Vec<u8> {
+        let recycled = self.free.lock().unwrap().pop();
+        match recycled {
+            Some(mut buf) => {
+                buf.clear();
+                if buf.capacity() < capacity {
+                    buf.reserve_exact(capacity);
+                }
+                buf
+            }
+            None => Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Return a buffer for reuse (dropped if the pool is full or the
+    /// buffer is outsized).
+    pub fn put(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > Self::MAX_POOLED_CAP {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < Self::MAX_POOLED {
+            free.push(buf);
+        }
+    }
+
+    /// Number of buffers currently pooled (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
 
 #[derive(Default)]
 struct State {
@@ -24,6 +80,7 @@ struct State {
 pub struct Inbox {
     state: Mutex<State>,
     cv: Condvar,
+    pool: BufferPool,
 }
 
 impl Inbox {
@@ -31,10 +88,24 @@ impl Inbox {
         Self::default()
     }
 
+    /// Largest up-front reservation honored from a frame's `msg_len`
+    /// hint. The buffer still grows as real bytes arrive, so bigger
+    /// messages stay correct — but a corrupt or hostile header cannot
+    /// make us allocate gigabytes before a single payload byte lands.
+    const MAX_SIZE_HINT: usize = 64 << 20;
+
     /// Append one frame; completes the message when `last` is set.
-    pub fn push_frame(&self, tag: u64, payload: &[u8], last: bool) {
+    /// `msg_len` is the total payload length of the whole message (from
+    /// the frame header) — used to preallocate the reassembly buffer
+    /// exactly once, on the first frame (clamped to
+    /// [`Self::MAX_SIZE_HINT`]).
+    pub fn push_frame(&self, tag: u64, payload: &[u8], msg_len: usize, last: bool) {
+        let hint = msg_len.min(Self::MAX_SIZE_HINT);
         let mut st = self.state.lock().unwrap();
-        let buf = st.partial.entry(tag).or_default();
+        let buf = st
+            .partial
+            .entry(tag)
+            .or_insert_with(|| self.pool.take(hint));
         buf.extend_from_slice(payload);
         if last {
             let msg = st.partial.remove(&tag).unwrap_or_default();
@@ -59,7 +130,23 @@ impl Inbox {
         self.state.lock().unwrap().error.clone()
     }
 
+    /// Hand a consumed message buffer back to the link's free-list so
+    /// the next message reuses its allocation.
+    pub fn recycle(&self, buf: Vec<u8>) {
+        self.pool.put(buf);
+    }
+
+    /// Number of buffers waiting in the pool (diagnostics/tests).
+    pub fn pool_len(&self) -> usize {
+        self.pool.pooled()
+    }
+
     /// Blocking receive of one complete message with `tag`.
+    ///
+    /// With `timeout: None` this parks on the condvar until
+    /// [`Inbox::push_frame`] completes a message or [`Inbox::fail`]
+    /// fires — no periodic wakeups. A bounded wait only ever wakes at
+    /// the deadline or on a notification.
     pub fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
         let deadline = timeout.map(|t| Instant::now() + t);
         let mut st = self.state.lock().unwrap();
@@ -75,18 +162,16 @@ impl Inbox {
             if let Some(e) = &st.error {
                 return Err(e.clone());
             }
-            let wait = match deadline {
+            st = match deadline {
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
                         return Err(CclError::Timeout(format!("recv tag {tag:#x}")));
                     }
-                    (d - now).min(Duration::from_millis(50))
+                    self.cv.wait_timeout(st, d - now).unwrap().0
                 }
-                None => Duration::from_millis(50),
+                None => self.cv.wait(st).unwrap(),
             };
-            let (guard, _) = self.cv.wait_timeout(st, wait).unwrap();
-            st = guard;
         }
     }
 
@@ -127,26 +212,55 @@ mod tests {
     #[test]
     fn single_frame_message() {
         let ib = Inbox::new();
-        ib.push_frame(7, b"hello", true);
+        ib.push_frame(7, b"hello", 5, true);
         assert_eq!(ib.recv(7, None).unwrap(), b"hello");
     }
 
     #[test]
     fn multi_frame_reassembly() {
         let ib = Inbox::new();
-        ib.push_frame(1, b"ab", false);
-        ib.push_frame(1, b"cd", false);
+        ib.push_frame(1, b"ab", 6, false);
+        ib.push_frame(1, b"cd", 6, false);
         assert_eq!(ib.try_recv(1).unwrap(), None, "incomplete stays hidden");
-        ib.push_frame(1, b"ef", true);
+        ib.push_frame(1, b"ef", 6, true);
         assert_eq!(ib.recv(1, None).unwrap(), b"abcdef");
+    }
+
+    #[test]
+    fn size_hint_preallocates_once() {
+        let ib = Inbox::new();
+        ib.push_frame(4, &[0u8; 100], 300, false);
+        ib.push_frame(4, &[1u8; 100], 300, false);
+        ib.push_frame(4, &[2u8; 100], 300, true);
+        let msg = ib.recv(4, None).unwrap();
+        assert_eq!(msg.len(), 300);
+        assert!(
+            msg.capacity() >= 300,
+            "first frame must reserve the whole message"
+        );
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused() {
+        let ib = Inbox::new();
+        ib.push_frame(1, &[7u8; 64], 64, true);
+        let msg = ib.recv(1, None).unwrap();
+        let cap = msg.capacity();
+        ib.recycle(msg);
+        assert_eq!(ib.pool_len(), 1);
+        ib.push_frame(1, &[8u8; 32], 32, true);
+        let again = ib.recv(1, None).unwrap();
+        assert_eq!(again, vec![8u8; 32]);
+        assert_eq!(ib.pool_len(), 0, "pooled buffer was taken");
+        assert!(again.capacity() >= cap.min(32));
     }
 
     #[test]
     fn tags_are_independent_fifo() {
         let ib = Inbox::new();
-        ib.push_frame(1, b"x1", true);
-        ib.push_frame(2, b"y", true);
-        ib.push_frame(1, b"x2", true);
+        ib.push_frame(1, b"x1", 2, true);
+        ib.push_frame(2, b"y", 1, true);
+        ib.push_frame(1, b"x2", 2, true);
         assert_eq!(ib.recv(2, None).unwrap(), b"y");
         assert_eq!(ib.recv(1, None).unwrap(), b"x1");
         assert_eq!(ib.recv(1, None).unwrap(), b"x2");
@@ -158,6 +272,24 @@ mod tests {
         let ib = Inbox::new();
         let err = ib.recv(9, Some(Duration::from_millis(60))).unwrap_err();
         assert!(matches!(err, CclError::Timeout(_)));
+    }
+
+    #[test]
+    fn untimed_recv_parks_until_notified() {
+        // Regression for the old 50 ms poll cap: an untimed recv must be
+        // woken by push_frame alone, promptly.
+        let ib = Arc::new(Inbox::new());
+        let ib2 = ib.clone();
+        let t = std::thread::spawn(move || ib2.recv(11, None));
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        ib.push_frame(11, b"wake", 4, true);
+        let got = t.join().unwrap().unwrap();
+        assert_eq!(got, b"wake");
+        assert!(
+            t0.elapsed() < Duration::from_millis(45),
+            "receiver must wake on notify, not on a poll tick"
+        );
     }
 
     #[test]
@@ -182,7 +314,7 @@ mod tests {
     #[test]
     fn messages_delivered_before_error_are_not_lost() {
         let ib = Inbox::new();
-        ib.push_frame(3, b"data", true);
+        ib.push_frame(3, b"data", 4, true);
         ib.fail(CclError::Aborted("shutdown".into()));
         // Already-complete message still deliverable…
         assert_eq!(ib.recv(3, None).unwrap(), b"data");
@@ -198,7 +330,7 @@ mod tests {
                 let ib = ib.clone();
                 std::thread::spawn(move || {
                     for i in 0..50u32 {
-                        ib.push_frame(tag, &i.to_le_bytes(), true);
+                        ib.push_frame(tag, &i.to_le_bytes(), 4, true);
                     }
                 })
             })
@@ -210,7 +342,8 @@ mod tests {
                     let mut got = Vec::new();
                     for _ in 0..50 {
                         let m = ib.recv(tag, Some(Duration::from_secs(5))).unwrap();
-                        got.push(u32::from_le_bytes(m.try_into().unwrap()));
+                        got.push(u32::from_le_bytes(m.as_slice().try_into().unwrap()));
+                        ib.recycle(m);
                     }
                     got
                 })

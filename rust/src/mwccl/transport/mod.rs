@@ -37,6 +37,11 @@ pub trait Link: Send + Sync {
     /// Non-blocking poll for a message with `tag`.
     fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>>;
 
+    /// Return a buffer obtained from `recv`/`try_recv` to the link's
+    /// receive pool once its payload has been parsed, so the next
+    /// message reuses the allocation. Optional — the default drops it.
+    fn recycle(&self, _buf: Vec<u8>) {}
+
     /// Abort everything pending on this link (local decision — watchdog
     /// or world teardown). Idempotent.
     fn abort(&self, reason: &str);

@@ -310,7 +310,7 @@ fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>) {
         }
         idle_spins = 0;
         rx.read_at(tail, &mut hdr);
-        let (tag, len, flags) = decode_frame_hdr(&hdr);
+        let (tag, len, msg_len, flags) = decode_frame_hdr(&hdr);
         let len = len as usize;
         debug_assert!(len <= SEG_MAX);
         let need = FRAME_HDR + len;
@@ -325,7 +325,7 @@ fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>) {
         }
         rx.read_at(tail + FRAME_HDR as u64, &mut payload[..len]);
         rx.tail().store(tail + need as u64, Ordering::Release);
-        inbox.push_frame(tag, &payload[..len], flags & FLAG_LAST != 0);
+        inbox.push_frame(tag, &payload[..len], msg_len as usize, flags & FLAG_LAST != 0);
     }
 }
 
@@ -336,6 +336,11 @@ impl Link for ShmLink {
         }
         let _guard = self.send_lock.lock().unwrap();
         let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total > u32::MAX as usize {
+            return Err(CclError::InvalidUsage(format!(
+                "message of {total} bytes exceeds the 4 GiB wire cap"
+            )));
+        }
         let mut hdr = [0u8; FRAME_HDR];
         let mut remaining = total;
         let mut part_idx = 0usize;
@@ -366,7 +371,7 @@ impl Link for ShmLink {
             }
             let head = self.tx.head().load(Ordering::Relaxed);
             let flags = if seg == remaining { FLAG_LAST } else { 0 };
-            encode_frame_hdr(&mut hdr, tag, seg as u32, flags);
+            encode_frame_hdr(&mut hdr, tag, seg as u32, total as u32, flags);
             self.tx.write_at(head, &hdr);
             // Gather `seg` bytes from parts.
             let mut written = 0usize;
@@ -374,8 +379,10 @@ impl Link for ShmLink {
                 let part = parts[part_idx];
                 let avail = part.len() - part_off;
                 let take = avail.min(seg - written);
-                self.tx
-                    .write_at(head + (FRAME_HDR + written) as u64, &part[part_off..part_off + take]);
+                self.tx.write_at(
+                    head + (FRAME_HDR + written) as u64,
+                    &part[part_off..part_off + take],
+                );
                 written += take;
                 part_off += take;
                 if part_off == part.len() {
@@ -398,6 +405,10 @@ impl Link for ShmLink {
 
     fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>> {
         self.inbox.try_recv(tag)
+    }
+
+    fn recycle(&self, buf: Vec<u8>) {
+        self.inbox.recycle(buf);
     }
 
     fn abort(&self, reason: &str) {

@@ -10,7 +10,7 @@ use super::ratelimit::RateLimiter;
 use super::Link;
 use crate::mwccl::error::{CclError, CclResult};
 use crate::mwccl::wire::{decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FRAME_HDR, SEG_MAX};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -29,7 +29,11 @@ pub struct TcpLink {
 
 impl TcpLink {
     /// Wrap an established, already-identified stream.
-    pub fn new(peer: usize, stream: TcpStream, limiter: Option<Arc<RateLimiter>>) -> CclResult<Self> {
+    pub fn new(
+        peer: usize,
+        stream: TcpStream,
+        limiter: Option<Arc<RateLimiter>>,
+    ) -> CclResult<Self> {
         stream
             .set_nodelay(true)
             .map_err(|e| CclError::Transport(format!("nodelay: {e}")))?;
@@ -75,7 +79,7 @@ fn reader_loop(mut stream: TcpStream, inbox: Arc<Inbox>, peer: usize) {
             inbox.fail(CclError::RemoteError { peer, detail: e.to_string() });
             return;
         }
-        let (tag, len, flags) = decode_frame_hdr(&hdr);
+        let (tag, len, msg_len, flags) = decode_frame_hdr(&hdr);
         let len = len as usize;
         if len > SEG_MAX {
             inbox.fail(CclError::Transport(format!("oversized frame {len}")));
@@ -85,7 +89,52 @@ fn reader_loop(mut stream: TcpStream, inbox: Arc<Inbox>, peer: usize) {
             inbox.fail(CclError::RemoteError { peer, detail: e.to_string() });
             return;
         }
-        inbox.push_frame(tag, &payload[..len], flags & FLAG_LAST != 0);
+        inbox.push_frame(tag, &payload[..len], msg_len as usize, flags & FLAG_LAST != 0);
+    }
+}
+
+/// Write every byte of `pieces` with as few syscalls as possible:
+/// one `write_vectored` covers header + payload fragments of a frame,
+/// with a retry loop for short writes (vectored writes, like plain
+/// `write`, may stop at any byte boundary).
+fn write_all_vectored(w: &mut TcpStream, pieces: &[&[u8]], peer: usize) -> CclResult<()> {
+    let io_err = |e: std::io::Error| CclError::RemoteError { peer, detail: e.to_string() };
+    let mut idx = 0usize; // first piece not fully written
+    let mut off = 0usize; // bytes of pieces[idx] already written
+    loop {
+        while idx < pieces.len() && off == pieces[idx].len() {
+            idx += 1;
+            off = 0;
+        }
+        if idx == pieces.len() {
+            return Ok(());
+        }
+        let slices: Vec<IoSlice> = std::iter::once(IoSlice::new(&pieces[idx][off..]))
+            .chain(pieces[idx + 1..].iter().map(|p| IoSlice::new(p)))
+            .collect();
+        let n = match w.write_vectored(&slices) {
+            Ok(0) => {
+                return Err(CclError::RemoteError {
+                    peer,
+                    detail: "write returned 0 (connection closed)".into(),
+                })
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(io_err(e)),
+        };
+        let mut rem = n;
+        while rem > 0 {
+            let avail = pieces[idx].len() - off;
+            if rem >= avail {
+                rem -= avail;
+                idx += 1;
+                off = 0;
+            } else {
+                off += rem;
+                rem = 0;
+            }
+        }
     }
 }
 
@@ -93,20 +142,25 @@ impl Link for TcpLink {
     fn send(&self, tag: u64, parts: &[&[u8]]) -> CclResult<()> {
         self.check_aborted()?;
         let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total > u32::MAX as usize {
+            return Err(CclError::InvalidUsage(format!(
+                "message of {total} bytes exceeds the 4 GiB wire cap"
+            )));
+        }
         // Hold the writer for the whole logical message so frames of two
         // concurrent sends never interleave (reassembly contract).
         let mut w = self.writer.lock().unwrap();
         // Iterate the logical message in SEG_MAX slices that may span
-        // `parts` boundaries.
-        let mut hdr = [0u8; FRAME_HDR];
+        // `parts` boundaries; each frame goes out as one vectored write
+        // (header + payload fragments), halving syscalls on the hot path
+        // versus separate header/payload write_alls.
         let mut remaining = total;
         let mut part_idx = 0usize;
         let mut part_off = 0usize;
         if total == 0 {
-            encode_frame_hdr(&mut hdr, tag, 0, FLAG_LAST);
-            w.write_all(&hdr)
-                .map_err(|e| CclError::RemoteError { peer: self.peer, detail: e.to_string() })?;
-            return Ok(());
+            let mut hdr = [0u8; FRAME_HDR];
+            encode_frame_hdr(&mut hdr, tag, 0, 0, FLAG_LAST);
+            return write_all_vectored(&mut w, &[&hdr], self.peer);
         }
         while remaining > 0 {
             let seg = remaining.min(SEG_MAX);
@@ -114,17 +168,16 @@ impl Link for TcpLink {
                 rl.acquire(seg + FRAME_HDR);
             }
             let flags = if seg == remaining { FLAG_LAST } else { 0 };
-            encode_frame_hdr(&mut hdr, tag, seg as u32, flags);
-            w.write_all(&hdr)
-                .map_err(|e| CclError::RemoteError { peer: self.peer, detail: e.to_string() })?;
+            let mut hdr = [0u8; FRAME_HDR];
+            encode_frame_hdr(&mut hdr, tag, seg as u32, total as u32, flags);
+            let mut pieces: Vec<&[u8]> = Vec::with_capacity(parts.len() + 1);
+            pieces.push(&hdr);
             let mut seg_left = seg;
             while seg_left > 0 {
                 let part = parts[part_idx];
                 let avail = part.len() - part_off;
                 let take = avail.min(seg_left);
-                w.write_all(&part[part_off..part_off + take]).map_err(|e| {
-                    CclError::RemoteError { peer: self.peer, detail: e.to_string() }
-                })?;
+                pieces.push(&part[part_off..part_off + take]);
                 part_off += take;
                 seg_left -= take;
                 if part_off == part.len() {
@@ -132,6 +185,7 @@ impl Link for TcpLink {
                     part_off = 0;
                 }
             }
+            write_all_vectored(&mut w, &pieces, self.peer)?;
             remaining -= seg;
         }
         Ok(())
@@ -143,6 +197,10 @@ impl Link for TcpLink {
 
     fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>> {
         self.inbox.try_recv(tag)
+    }
+
+    fn recycle(&self, buf: Vec<u8>) {
+        self.inbox.recycle(buf);
     }
 
     fn abort(&self, reason: &str) {
@@ -215,6 +273,32 @@ mod tests {
         let (a, b) = link_pair(None);
         a.send(1, &[]).unwrap();
         assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"");
+    }
+
+    #[test]
+    fn many_fragments_one_vectored_message() {
+        // Exercises the vectored-write path with a frame gathered from
+        // many small parts, including empty ones.
+        let (a, b) = link_pair(None);
+        let parts: Vec<Vec<u8>> = (0..40u8).map(|i| vec![i; (i as usize) % 7]).collect();
+        let refs: Vec<&[u8]> = parts.iter().map(|p| p.as_slice()).collect();
+        let want: Vec<u8> = parts.iter().flatten().copied().collect();
+        a.send(13, &refs).unwrap();
+        assert_eq!(b.recv(13, Some(Duration::from_secs(2))).unwrap(), want);
+    }
+
+    #[test]
+    fn recv_buffers_recycle_through_pool() {
+        let (a, b) = link_pair(None);
+        a.send(21, &[&[5u8; 4096]]).unwrap();
+        let m = b.recv(21, Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(m.len(), 4096);
+        b.recycle(m);
+        // Next message lands in the recycled buffer without reallocating.
+        a.send(22, &[&[6u8; 2048]]).unwrap();
+        let m2 = b.recv(22, Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(m2.len(), 2048);
+        assert!(m2.capacity() >= 2048);
     }
 
     #[test]

@@ -7,9 +7,14 @@
 //! store-and-forward).
 //!
 //! ```text
-//! frame := tag:u64  seg_len:u32  flags:u8   payload[seg_len]
+//! frame := tag:u64  seg_len:u32  msg_len:u32  flags:u8  payload[seg_len]
 //! flags bit0 = LAST segment of this message
 //! ```
+//!
+//! `msg_len` is the total payload length of the whole logical message;
+//! it rides in every frame so the receiver's [`super::transport::inbox::Inbox`]
+//! can preallocate the reassembly buffer once, from the first frame,
+//! instead of growing a `Vec` segment by segment (4 GiB message cap).
 //!
 //! Frames of one message are contiguous on a link (senders hold the link
 //! writer lock for the whole message), so reassembly is a simple
@@ -18,26 +23,28 @@
 /// Maximum payload bytes per frame.
 pub const SEG_MAX: usize = 256 * 1024;
 
-/// Frame header length: tag(8) + len(4) + flags(1).
-pub const FRAME_HDR: usize = 13;
+/// Frame header length: tag(8) + seg_len(4) + msg_len(4) + flags(1).
+pub const FRAME_HDR: usize = 17;
 
 /// Flag: final segment of the message.
 pub const FLAG_LAST: u8 = 1;
 
 /// Encode a frame header into `out[0..FRAME_HDR]`.
 #[inline]
-pub fn encode_frame_hdr(out: &mut [u8], tag: u64, seg_len: u32, flags: u8) {
+pub fn encode_frame_hdr(out: &mut [u8], tag: u64, seg_len: u32, msg_len: u32, flags: u8) {
     out[0..8].copy_from_slice(&tag.to_le_bytes());
     out[8..12].copy_from_slice(&seg_len.to_le_bytes());
-    out[12] = flags;
+    out[12..16].copy_from_slice(&msg_len.to_le_bytes());
+    out[16] = flags;
 }
 
-/// Decode a frame header.
+/// Decode a frame header: (tag, seg_len, msg_len, flags).
 #[inline]
-pub fn decode_frame_hdr(h: &[u8]) -> (u64, u32, u8) {
+pub fn decode_frame_hdr(h: &[u8]) -> (u64, u32, u32, u8) {
     let tag = u64::from_le_bytes(h[0..8].try_into().unwrap());
-    let len = u32::from_le_bytes(h[8..12].try_into().unwrap());
-    (tag, len, h[12])
+    let seg = u32::from_le_bytes(h[8..12].try_into().unwrap());
+    let msg = u32::from_le_bytes(h[12..16].try_into().unwrap());
+    (tag, seg, msg, h[16])
 }
 
 /// Tag namespace. User p2p tags live in the low 48 bits; collective ops
@@ -70,6 +77,29 @@ pub fn split_tag(tag: u64) -> (u8, u64) {
     ((tag >> 48) as u8, tag & ((1 << 48) - 1))
 }
 
+/// Compose a wire tag for one chunk of a *ring* collective. Ring
+/// algorithms move many independent messages per op — one per (ring
+/// step, chunk) — so the 48-bit id is split:
+///
+/// ```text
+/// id := seq:16 | step:8 | chunk:24
+/// ```
+///
+/// 16 bits of sequence are plenty (only a handful of collectives are in
+/// flight per world; matching is also gated by the per-op step/chunk),
+/// 8 step bits cap rings at 128 ranks (2·(N−1) steps — enforced by
+/// `CollAlgo::RING_MAX_WORLD`), and 24 chunk bits allow 16M chunks of
+/// [`SEG_MAX`] ≈ 4 TiB per slice.
+#[inline]
+pub fn make_chunk_tag(kind: TagKind, seq: u64, step: usize, chunk: usize) -> u64 {
+    debug_assert!(step < (1 << 8), "ring step overflow");
+    debug_assert!(chunk < (1 << 24), "ring chunk overflow");
+    make_tag(
+        kind,
+        ((seq & 0xFFFF) << 32) | ((step as u64) << 24) | chunk as u64,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,10 +107,11 @@ mod tests {
     #[test]
     fn frame_hdr_roundtrip() {
         let mut buf = [0u8; FRAME_HDR];
-        encode_frame_hdr(&mut buf, 0xDEADBEEF, 4096, FLAG_LAST);
-        let (tag, len, flags) = decode_frame_hdr(&buf);
+        encode_frame_hdr(&mut buf, 0xDEADBEEF, 4096, 1 << 20, FLAG_LAST);
+        let (tag, seg, msg, flags) = decode_frame_hdr(&buf);
         assert_eq!(tag, 0xDEADBEEF);
-        assert_eq!(len, 4096);
+        assert_eq!(seg, 4096);
+        assert_eq!(msg, 1 << 20);
         assert_eq!(flags, FLAG_LAST);
     }
 
@@ -97,5 +128,23 @@ mod tests {
     fn seg_max_sane() {
         assert!(SEG_MAX >= 64 * 1024);
         assert!(SEG_MAX % 4096 == 0);
+    }
+
+    #[test]
+    fn chunk_tags_distinct_per_step_and_chunk() {
+        let a = make_chunk_tag(TagKind::AllReduce, 3, 0, 0);
+        let b = make_chunk_tag(TagKind::AllReduce, 3, 0, 1);
+        let c = make_chunk_tag(TagKind::AllReduce, 3, 1, 0);
+        let d = make_chunk_tag(TagKind::AllReduce, 4, 0, 0);
+        assert!(a != b && a != c && a != d && b != c);
+        // Kind byte survives.
+        assert_eq!(split_tag(a).0, TagKind::AllReduce as u8);
+    }
+
+    #[test]
+    fn chunk_tag_seq_wraps_at_16_bits() {
+        let a = make_chunk_tag(TagKind::Broadcast, 5, 2, 9);
+        let b = make_chunk_tag(TagKind::Broadcast, 5 + (1 << 16), 2, 9);
+        assert_eq!(a, b, "seq occupies exactly 16 bits");
     }
 }

@@ -15,6 +15,7 @@
 use super::error::{CclError, CclResult};
 use super::transport::Link;
 use super::work::Work;
+use crate::config::CollAlgo;
 use crate::tensor::{read_tensor, serialize::encode_header, Tensor};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -51,6 +52,8 @@ pub struct WorldCore {
     seq: AtomicU64,
     /// Default timeout applied to blocking waits inside collectives.
     pub op_timeout: Option<Duration>,
+    /// Collective algorithm policy (flat star / pipelined ring / auto).
+    pub coll_algo: CollAlgo,
     /// Point-to-point receives pending on the p2p poller thread.
     /// Unlike collectives (strictly ordered on the progress thread),
     /// `irecv`s from *different peers* complete concurrently — the
@@ -91,11 +94,33 @@ impl WorldCore {
         self.link(peer)?.send(tag, &[&hdr, t.bytes()])
     }
 
-    /// Receive a tensor from `peer` under `tag`.
+    /// Receive a tensor from `peer` under `tag`. The wire buffer goes
+    /// back to the link's pool once parsed.
     pub(crate) fn recv_tensor(&self, peer: usize, tag: u64) -> CclResult<Tensor> {
-        let bytes = self.link(peer)?.recv(tag, self.op_timeout)?;
-        read_tensor(&mut bytes.as_slice())
-            .map_err(|e| CclError::Transport(format!("bad tensor frame from {peer}: {e}")))
+        let link = self.link(peer)?;
+        let bytes = link.recv(tag, self.op_timeout)?;
+        let t = read_tensor(&mut bytes.as_slice())
+            .map_err(|e| CclError::Transport(format!("bad tensor frame from {peer}: {e}")))?;
+        link.recycle(bytes);
+        Ok(t)
+    }
+
+    /// Raw-byte send to `peer` (ring collectives move naked chunk
+    /// payloads, not serialized tensors).
+    pub(crate) fn send_bytes(&self, peer: usize, tag: u64, parts: &[&[u8]]) -> CclResult<()> {
+        self.link(peer)?.send(tag, parts)
+    }
+
+    /// Raw-byte receive from `peer` under the world's op timeout.
+    pub(crate) fn recv_bytes(&self, peer: usize, tag: u64) -> CclResult<Vec<u8>> {
+        self.link(peer)?.recv(tag, self.op_timeout)
+    }
+
+    /// Return a consumed wire buffer to `peer`'s link pool.
+    pub(crate) fn recycle(&self, peer: usize, buf: Vec<u8>) {
+        if let Ok(link) = self.link(peer) {
+            link.recycle(buf);
+        }
     }
 
     /// Queue a p2p receive for the poller.
@@ -164,6 +189,7 @@ impl Clone for World {
 impl World {
     /// Assemble a world from already-established links (rendezvous calls
     /// this; tests may call it directly with in-memory pairs).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_parts(
         name: String,
         rank: usize,
@@ -172,6 +198,7 @@ impl World {
         store: Option<Arc<crate::store::StoreClient>>,
         store_server: Option<Arc<crate::store::StoreServer>>,
         op_timeout: Option<Duration>,
+        coll_algo: CollAlgo,
     ) -> World {
         debug_assert_eq!(links.len(), size - 1, "need a link to every peer");
         let core = Arc::new(WorldCore {
@@ -183,6 +210,7 @@ impl World {
             broken_reason: Mutex::new(None),
             seq: AtomicU64::new(0),
             op_timeout,
+            coll_algo,
             pending_recvs: Mutex::new(Vec::new()),
         });
         let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
@@ -333,6 +361,7 @@ fn p2p_poll_loop(core: Arc<WorldCore>, stop: Arc<AtomicBool>) {
                                 "bad tensor frame: {e}"
                             ))),
                         }
+                        link.recycle(bytes);
                         made_progress = true;
                     }
                     Ok(None) => {

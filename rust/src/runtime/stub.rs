@@ -1,0 +1,78 @@
+//! API-compatible stand-in for the PJRT engine when the `pjrt` feature
+//! (and thus the `xla` crate) is disabled. Every entry point that would
+//! execute a model returns a descriptive error instead; the rest of the
+//! stack (CCL, serving, launch) compiles and tests unchanged.
+
+use crate::config::{ModelManifest, StageSpec};
+use crate::tensor::Tensor;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+const NO_PJRT: &str =
+    "built without the 'pjrt' feature: PJRT execution unavailable (rebuild with --features pjrt)";
+
+/// Stub of the PJRT CPU client wrapper.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    pub fn cpu() -> anyhow::Result<Arc<Engine>> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load_stage(
+        self: &Arc<Self>,
+        _hlo_path: &Path,
+        _spec: &StageSpec,
+    ) -> anyhow::Result<StageRunner> {
+        anyhow::bail!(NO_PJRT)
+    }
+}
+
+/// Stub of one compiled pipeline stage.
+pub struct StageRunner {
+    spec: StageSpec,
+    /// Execution latency histogram (µs) — kept for API parity.
+    pub exec_time: crate::metrics::Histogram,
+}
+
+impl StageRunner {
+    pub fn spec(&self) -> &StageSpec {
+        &self.spec
+    }
+
+    pub fn run(&self, _input: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn mean_exec(&self) -> Duration {
+        Duration::from_micros(self.exec_time.mean_us() as u64)
+    }
+}
+
+/// Stub of the loaded model (all stages + monolith).
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+    pub stages: Vec<Arc<StageRunner>>,
+    pub full: Option<StageRunner>,
+}
+
+impl ModelRuntime {
+    pub fn load(_artifacts_dir: impl AsRef<Path>) -> anyhow::Result<ModelRuntime> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn run_pipeline(&self, _tokens: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn verify_golden(&self, _artifacts_dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        anyhow::bail!(NO_PJRT)
+    }
+}

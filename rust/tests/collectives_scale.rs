@@ -1,0 +1,337 @@
+//! Collectives at production-ish world sizes (4 and 8) over both
+//! transports, proving the ring algorithms agree bit-for-bit with the
+//! flat star the seed shipped with.
+//!
+//! Reduction test data is integer-valued f32, so sums are exact and
+//! order-independent — flat (rank-order fold at the root) and ring
+//! (neighbour-order fold) must then produce identical checksums.
+
+use multiworld::config::CollAlgo;
+use multiworld::mwccl::{Rendezvous, ReduceOp, WorldOptions};
+use multiworld::tensor::Tensor;
+use std::time::Duration;
+
+fn uniq(name: &str) -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "cs-{name}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+fn opts(transport: &str, algo: CollAlgo) -> WorldOptions {
+    let base = match transport {
+        "shm" => WorldOptions::shm(),
+        "tcp" => WorldOptions::tcp(),
+        other => panic!("unknown transport {other}"),
+    };
+    // A generous deadline converts any algorithm mismatch into a clean
+    // Timeout instead of a hung test.
+    base.with_coll_algo(algo)
+        .with_op_timeout(Duration::from_secs(60))
+}
+
+/// Integer-valued pseudo-random tensor: exact under f32 summation for
+/// any world size tested here, so fold order cannot change the result.
+fn int_tensor(elems: usize, rank: usize) -> Tensor {
+    let vals: Vec<f32> = (0..elems)
+        .map(|i| ((i as u64 * 31 + rank as u64 * 7 + 3) % 101) as f32)
+        .collect();
+    Tensor::from_f32(&[elems], &vals)
+}
+
+fn expected_sum(elems: usize, size: usize) -> Tensor {
+    let mut acc = vec![0.0f32; elems];
+    for r in 0..size {
+        for (a, b) in acc.iter_mut().zip(int_tensor(elems, r).as_f32()) {
+            *a += *b;
+        }
+    }
+    Tensor::from_f32(&[elems], &acc)
+}
+
+/// Run `all_reduce(Sum)` over a fresh world and return the per-rank
+/// result checksums (asserted identical across ranks).
+fn all_reduce_checksum(transport: &str, size: usize, elems: usize, algo: CollAlgo) -> u64 {
+    let worlds =
+        Rendezvous::single_process(&uniq("ar"), size, opts(transport, algo)).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let t = int_tensor(elems, w.rank());
+            std::thread::spawn(move || w.all_reduce(t, ReduceOp::Sum).unwrap().checksum())
+        })
+        .collect();
+    let sums: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for &s in &sums[1..] {
+        assert_eq!(s, sums[0], "ranks disagree on the all_reduce result");
+    }
+    sums[0]
+}
+
+#[test]
+fn all_reduce_flat_ring_equivalence_sizes_4_and_8() {
+    for transport in ["shm", "tcp"] {
+        for size in [4usize, 8] {
+            let elems = 100_000; // 400 KB — multi-chunk per ring slice at size 4
+            let want = expected_sum(elems, size).checksum();
+            let flat = all_reduce_checksum(transport, size, elems, CollAlgo::Flat);
+            let ring = all_reduce_checksum(transport, size, elems, CollAlgo::Ring);
+            assert_eq!(flat, want, "{transport} size={size}: flat != reference");
+            assert_eq!(ring, want, "{transport} size={size}: ring != reference");
+        }
+    }
+}
+
+#[test]
+fn ring_all_reduce_odd_sizes_and_tiny_tensors() {
+    // Non-divisible element counts (uneven ring slices) and tensors
+    // smaller than the world (empty slices on some ranks).
+    for elems in [100_003usize, 7, 3, 1] {
+        let want = expected_sum(elems, 4).checksum();
+        let ring = all_reduce_checksum("shm", 4, elems, CollAlgo::Ring);
+        assert_eq!(ring, want, "elems={elems}");
+    }
+}
+
+#[test]
+fn ring_all_reduce_world_of_two() {
+    let want = expected_sum(5_000, 2).checksum();
+    assert_eq!(all_reduce_checksum("shm", 2, 5_000, CollAlgo::Ring), want);
+}
+
+#[test]
+fn ring_all_reduce_avg_and_max() {
+    for (op, combine) in [
+        (ReduceOp::Avg, None),
+        (ReduceOp::Max, Some(f32::max as fn(f32, f32) -> f32)),
+    ] {
+        let size = 4;
+        let elems = 10_000;
+        let worlds = Rendezvous::single_process(
+            &uniq("avgmax"),
+            size,
+            opts("shm", CollAlgo::Ring),
+        )
+        .unwrap();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                let t = int_tensor(elems, w.rank());
+                std::thread::spawn(move || w.all_reduce(t, op).unwrap())
+            })
+            .collect();
+        let mut expect = vec![0.0f32; elems];
+        match combine {
+            None => {
+                for r in 0..size {
+                    for (a, b) in expect.iter_mut().zip(int_tensor(elems, r).as_f32()) {
+                        *a += *b;
+                    }
+                }
+                for a in expect.iter_mut() {
+                    *a /= size as f32; // size 4: exact for integer sums
+                }
+            }
+            Some(f) => {
+                expect = int_tensor(elems, 0).as_f32().to_vec();
+                for r in 1..size {
+                    for (a, b) in expect.iter_mut().zip(int_tensor(elems, r).as_f32()) {
+                        *a = f(*a, *b);
+                    }
+                }
+            }
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().as_f32(), expect.as_slice(), "{op:?}");
+        }
+    }
+}
+
+#[test]
+fn broadcast_flat_ring_equivalence_multi_chunk() {
+    // 1.2 MB tensor (several SEG_MAX chunks) from a non-zero root.
+    for transport in ["shm", "tcp"] {
+        for size in [4usize, 8] {
+            let src = int_tensor(300_000, 17);
+            let want = src.checksum();
+            for algo in [CollAlgo::Flat, CollAlgo::Ring] {
+                let worlds =
+                    Rendezvous::single_process(&uniq("bc"), size, opts(transport, algo))
+                        .unwrap();
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .map(|w| {
+                        let t = if w.rank() == 1 { Some(src.clone()) } else { None };
+                        std::thread::spawn(move || w.broadcast(t, 1).unwrap().checksum())
+                    })
+                    .collect();
+                for h in handles {
+                    assert_eq!(
+                        h.join().unwrap(),
+                        want,
+                        "{transport} size={size} {algo:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_gather_flat_ring_equivalence_unequal_parts() {
+    // Per-rank contributions of different axis-0 lengths must concat in
+    // rank order identically under both algorithms.
+    let size = 4;
+    let mut results = Vec::new();
+    for algo in [CollAlgo::Flat, CollAlgo::Ring] {
+        let worlds =
+            Rendezvous::single_process(&uniq("ag"), size, opts("tcp", algo)).unwrap();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                let rows = w.rank() + 1; // 1..=4 rows of width 3
+                let vals: Vec<f32> =
+                    (0..rows * 3).map(|i| (w.rank() * 100 + i) as f32).collect();
+                let t = Tensor::from_f32(&[rows, 3], &vals);
+                std::thread::spawn(move || w.all_gather(t).unwrap())
+            })
+            .collect();
+        let tensors: Vec<Tensor> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for t in &tensors[1..] {
+            assert_eq!(t.checksum(), tensors[0].checksum());
+        }
+        assert_eq!(tensors[0].shape(), &[1 + 2 + 3 + 4, 3]);
+        results.push(tensors[0].checksum());
+    }
+    assert_eq!(results[0], results[1], "flat and ring all_gather differ");
+}
+
+#[test]
+fn reduce_arrival_order_folds_stragglers() {
+    // Peers contribute with staggered delays; the root folds whichever
+    // arrives first. Result must equal the rank-order reference.
+    let size = 4;
+    let elems = 5_000;
+    let root = 2;
+    let worlds = Rendezvous::single_process(&uniq("red"), size, opts("tcp", CollAlgo::Flat))
+        .unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let t = int_tensor(elems, w.rank());
+            std::thread::spawn(move || {
+                if w.rank() != root {
+                    // Reverse-staggered: higher ranks land first.
+                    std::thread::sleep(Duration::from_millis(
+                        20 * (size - w.rank()) as u64,
+                    ));
+                }
+                (w.rank(), w.reduce(t, root, ReduceOp::Sum).unwrap())
+            })
+        })
+        .collect();
+    let want = expected_sum(elems, size).checksum();
+    for h in handles {
+        let (rank, res) = h.join().unwrap();
+        if rank == root {
+            assert_eq!(res.unwrap().checksum(), want);
+        } else {
+            assert!(res.is_none());
+        }
+    }
+}
+
+#[test]
+fn scatter_size_4_distributes_without_root_clone() {
+    let size = 4;
+    let worlds = Rendezvous::single_process(&uniq("sc"), size, opts("shm", CollAlgo::Flat))
+        .unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let parts = if w.rank() == 0 {
+                Some(
+                    (0..size)
+                        .map(|i| Tensor::from_f32(&[2], &[i as f32, i as f32 + 0.5]))
+                        .collect::<Vec<_>>(),
+                )
+            } else {
+                None
+            };
+            std::thread::spawn(move || (w.rank(), w.scatter(parts, 0).unwrap()))
+        })
+        .collect();
+    for h in handles {
+        let (rank, t) = h.join().unwrap();
+        assert_eq!(t.as_f32(), &[rank as f32, rank as f32 + 0.5]);
+    }
+}
+
+#[test]
+fn mixed_async_ops_in_flight_ring() {
+    // Issue broadcast + all_reduce + all_gather back-to-back (all three
+    // in flight) before waiting on any — submission order is the CCL
+    // contract; the ring tags must never cross-match between ops.
+    for transport in ["shm", "tcp"] {
+        let size = 4;
+        let elems = 20_000;
+        let worlds = Rendezvous::single_process(
+            &uniq("mix"),
+            size,
+            opts(transport, CollAlgo::Ring),
+        )
+        .unwrap();
+        let src = int_tensor(elems, 99);
+        let bc_want = src.checksum();
+        let ar_want = expected_sum(elems, size).checksum();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                let bct = if w.rank() == 0 { Some(src.clone()) } else { None };
+                let art = int_tensor(elems, w.rank());
+                let agt = Tensor::from_f32(&[1], &[w.rank() as f32]);
+                std::thread::spawn(move || {
+                    let bc = w.ibroadcast(bct, 0);
+                    let ar = w.iall_reduce(art, ReduceOp::Sum);
+                    let ag = w.iall_gather(agt);
+                    let bc = bc.wait().unwrap().unwrap();
+                    let ar = ar.wait().unwrap().unwrap();
+                    let ag = ag.wait().unwrap().unwrap();
+                    (bc.checksum(), ar.checksum(), ag)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (bc, ar, ag) = h.join().unwrap();
+            assert_eq!(bc, bc_want, "{transport} broadcast");
+            assert_eq!(ar, ar_want, "{transport} all_reduce");
+            assert_eq!(ag.as_f32(), &[0.0, 1.0, 2.0, 3.0], "{transport} all_gather");
+        }
+    }
+}
+
+#[test]
+fn auto_policy_correct_across_sizes() {
+    // Auto picks flat at size 2 and ring at size 8 (large tensor); both
+    // must be correct — this guards the selector's rank-consistency.
+    for (size, elems) in [(2usize, 2_000), (8, 300_000)] {
+        let want = expected_sum(elems, size).checksum();
+        assert_eq!(
+            all_reduce_checksum("shm", size, elems, CollAlgo::Auto),
+            want,
+            "auto size={size}"
+        );
+    }
+}
+
+#[test]
+fn ring_large_tensor_through_small_shm_rings() {
+    // 2 MB tensor, ring algorithm, shm transport: chunk trains stream
+    // cut-through via the mmap rings without ever holding whole slices.
+    let elems = 500_000;
+    let want = expected_sum(elems, 4).checksum();
+    assert_eq!(all_reduce_checksum("shm", 4, elems, CollAlgo::Ring), want);
+}

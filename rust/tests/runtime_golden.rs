@@ -8,6 +8,10 @@ use multiworld::runtime::{artifacts_dir, ModelRuntime};
 use multiworld::tensor::{DType, Tensor};
 
 fn runtime_or_skip() -> Option<ModelRuntime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the 'pjrt' feature (PJRT engine stubbed)");
+        return None;
+    }
     let dir = artifacts_dir();
     if !dir.join("model.json").exists() {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");

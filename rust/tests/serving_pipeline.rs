@@ -28,6 +28,10 @@ fn opts_tcp() -> WorldOptions {
 }
 
 fn have_artifacts() -> bool {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the 'pjrt' feature (PJRT engine stubbed)");
+        return false;
+    }
     let ok = artifacts_dir().join("model.json").exists();
     if !ok {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
