@@ -1,22 +1,31 @@
-//! Ablation — flat (root star) vs ring (pipelined reduce-scatter +
-//! all-gather) collectives, across world sizes and tensor sizes, on the
+//! Ablation — flat (root star) vs ring (pipelined) algorithms for all
+//! six collectives, across world sizes and payload sizes, on the
 //! multi-host topology: TCP with a **per-rank** 10 Gbps NIC
 //! (`WorldOptions::tcp_per_rank_limited`), so the flat root's NIC is the
-//! bottleneck the ring removes.
+//! bottleneck the rings remove or shrink.
 //!
 //! Expected shape: at world size 2 the two algorithms are within noise
-//! (the ring degenerates to one exchange); from world size 4 upward the
-//! ring wins ~size/2× on ≥4 MB tensors (flat moves ~N×S through the
-//! root's NIC, ring ~2S through every NIC concurrently). `Auto` follows
-//! the measured crossover: ring at ≥4 ranks and ≥1 MB.
+//! (rings degenerate to one exchange); from world size 4 upward the
+//! bandwidth-bound rings (all_reduce, broadcast, reduce) win on large
+//! payloads (flat moves ~N×S through the root's NIC, the rings ~S–2S
+//! through every NIC concurrently), while the circulation rings
+//! (gather, all_gather, scatter) trade root-NIC serialization for hop
+//! pipelining. `Auto` follows the measured crossover per op.
 //!
 //! Checksums of both paths are asserted identical per cell
 //! (integer-valued tensors make f32 summation order-independent).
+//!
+//! The CSV (`target/bench-results/ablation_collectives.csv`) is
+//! machine-readable — `op,world,bytes,flat_ms,ring_ms,speedup,auto` —
+//! and consumed by CI's `crossover-matrix` job via
+//! `tools/check_crossover.py`, which warns when the measured knee
+//! disagrees with the configured `RING_MIN_WORLD`/`RING_MIN_BYTES`
+//! defaults.
 
 use multiworld::bench::Table;
-use multiworld::config::CollAlgo;
+use multiworld::config::{CollAlgo, CollOp, CollPolicy};
 use multiworld::mwccl::transport::ratelimit::RATE_10GBPS;
-use multiworld::mwccl::{Rendezvous, ReduceOp, WorldOptions};
+use multiworld::mwccl::{Rendezvous, ReduceOp, World, WorldOptions};
 use multiworld::tensor::Tensor;
 use std::time::{Duration, Instant};
 
@@ -38,23 +47,78 @@ fn int_tensor(elems: usize, rank: usize) -> Tensor {
     Tensor::from_f32(&[elems], &vals)
 }
 
-/// Mean seconds per all_reduce plus the (rank-0) result checksum.
-fn time_all_reduce(size: usize, elems: usize, iters: usize, algo: CollAlgo) -> (f64, u64) {
+/// Prebuilt per-rank input for one op — constructed once per world,
+/// *outside* the timed loop, so the O(elems) tensor fill never pollutes
+/// the flat/ring columns (iterations only pay a memcpy clone, like the
+/// tensor the caller would already hold).
+enum OpInput {
+    /// Every-rank contribution (all_reduce, reduce, gather, all_gather).
+    Tensor(Tensor),
+    /// Broadcast source (root only).
+    Root(Option<Tensor>),
+    /// Scatter parts (root only).
+    Parts(Option<Vec<Tensor>>),
+}
+
+/// Build rank-local input for `op`. `elems` is the *total* payload of
+/// the cell (the gather/scatter family contributes `elems / size` per
+/// rank so every op moves comparable bytes).
+fn make_input(op: CollOp, rank: usize, size: usize, elems: usize) -> OpInput {
+    match op {
+        CollOp::AllReduce | CollOp::Reduce => OpInput::Tensor(int_tensor(elems, rank)),
+        CollOp::Gather | CollOp::AllGather => OpInput::Tensor(int_tensor(elems / size, rank)),
+        CollOp::Broadcast => {
+            OpInput::Root(if rank == 0 { Some(int_tensor(elems, 0)) } else { None })
+        }
+        CollOp::Scatter => OpInput::Parts(if rank == 0 {
+            Some((0..size).map(|i| int_tensor(elems / size, i)).collect())
+        } else {
+            None
+        }),
+    }
+}
+
+/// One iteration of `op` on one rank. Returns a checksum of the rank's
+/// visible result (0 where the op yields nothing on this rank).
+fn run_once(op: CollOp, w: &World, input: &OpInput) -> u64 {
+    match (op, input) {
+        (CollOp::AllReduce, OpInput::Tensor(t)) => {
+            w.all_reduce(t.clone(), ReduceOp::Sum).unwrap().checksum()
+        }
+        (CollOp::Reduce, OpInput::Tensor(t)) => w
+            .reduce(t.clone(), 0, ReduceOp::Sum)
+            .unwrap()
+            .map(|t| t.checksum())
+            .unwrap_or(0),
+        (CollOp::Broadcast, OpInput::Root(t)) => w.broadcast(t.clone(), 0).unwrap().checksum(),
+        (CollOp::Gather, OpInput::Tensor(t)) => w
+            .gather(t.clone(), 0)
+            .unwrap()
+            .map(|t| t.checksum())
+            .unwrap_or(0),
+        (CollOp::AllGather, OpInput::Tensor(t)) => w.all_gather(t.clone()).unwrap().checksum(),
+        (CollOp::Scatter, OpInput::Parts(p)) => w.scatter(p.clone(), 0).unwrap().checksum(),
+        _ => unreachable!("input built for a different op"),
+    }
+}
+
+/// Mean seconds per op (slowest rank) plus the combined result checksum.
+fn time_op(op: CollOp, size: usize, elems: usize, iters: usize, algo: CollAlgo) -> (f64, u64) {
     let opts = WorldOptions::tcp_per_rank_limited(RATE_10GBPS)
         .with_coll_algo(algo)
         .with_op_timeout(Duration::from_secs(120));
-    let worlds = Rendezvous::single_process(&uniq("ar"), size, opts).unwrap();
+    let worlds = Rendezvous::single_process(&uniq(op.name()), size, opts).unwrap();
     let handles: Vec<_> = worlds
         .into_iter()
         .map(|w| {
-            let t = int_tensor(elems, w.rank());
             std::thread::spawn(move || {
+                let input = make_input(op, w.rank(), w.size(), elems);
                 // Warmup synchronizes all ranks and fills buffer pools.
-                let _ = w.all_reduce(t.clone(), ReduceOp::Sum).unwrap();
+                let _ = run_once(op, &w, &input);
                 let t0 = Instant::now();
                 let mut cs = 0u64;
                 for _ in 0..iters {
-                    cs = w.all_reduce(t.clone(), ReduceOp::Sum).unwrap().checksum();
+                    cs = run_once(op, &w, &input);
                 }
                 (t0.elapsed().as_secs_f64(), cs)
             })
@@ -65,55 +129,88 @@ fn time_all_reduce(size: usize, elems: usize, iters: usize, algo: CollAlgo) -> (
     for h in handles {
         let (dt, cs) = h.join().unwrap();
         worst = worst.max(dt);
-        checksum = cs; // identical on every rank (asserted by tests)
+        // Combine across ranks so single-result ops (reduce, gather)
+        // contribute the root's value and symmetric ops every rank's.
+        checksum = checksum.wrapping_add(cs);
     }
     (worst / iters as f64, checksum)
 }
 
+/// The negotiated small-message fast path, printed so the CI quick
+/// ablation shows `Auto` keeping tiny root-sized ops flat.
+fn show_auto_prologue() {
+    let opts = WorldOptions::tcp()
+        .with_coll_algo(CollAlgo::Auto)
+        .with_op_timeout(Duration::from_secs(60));
+    let worlds = Rendezvous::single_process(&uniq("auto-prologue"), 4, opts).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            std::thread::spawn(move || {
+                let small = if w.rank() == 0 { Some(int_tensor(1024, 0)) } else { None };
+                w.broadcast(small, 0).unwrap();
+                let small_pick = w.last_algo(CollOp::Broadcast).unwrap();
+                let big = if w.rank() == 0 { Some(int_tensor(1 << 20, 0)) } else { None };
+                w.broadcast(big, 0).unwrap();
+                (small_pick, w.last_algo(CollOp::Broadcast).unwrap())
+            })
+        })
+        .collect();
+    for h in handles {
+        let (small_pick, big_pick) = h.join().unwrap();
+        assert_eq!(small_pick, "flat", "Auto must keep a 4 KB broadcast flat");
+        assert_eq!(big_pick, "ring", "Auto must ring a 4 MB broadcast");
+    }
+    println!(
+        "auto prologue @ world 4: broadcast 4 KB -> flat, 4 MB -> ring \
+         (root-decided algo byte; non-roots never see the size)"
+    );
+}
+
 fn main() {
     let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
+    let policy = CollPolicy::from_env();
     let mut table = Table::new(
-        "Ablation — flat vs ring all_reduce, tcp with per-rank 10 Gbps NICs",
-        &["world", "tensor", "flat", "ring", "ring/flat speedup", "auto picks"],
+        "Ablation — flat vs ring, all six collectives, tcp with per-rank 10 Gbps NICs",
+        &["op", "world", "bytes", "flat_ms", "ring_ms", "speedup", "auto"],
     );
     let sizes: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
-    let elem_counts: &[(usize, &str)] = if quick {
-        &[(65_536, "256 KB"), (1_048_576, "4 MB")]
+    let elem_counts: &[usize] = if quick {
+        &[65_536, 1_048_576]
     } else {
-        &[
-            (65_536, "256 KB"),
-            (262_144, "1 MB"),
-            (1_048_576, "4 MB"),
-            (4_194_304, "16 MB"),
-        ]
+        &[65_536, 262_144, 1_048_576, 4_194_304]
     };
-    for &world in sizes {
-        for &(elems, label) in elem_counts {
-            let iters = if elems >= 1_048_576 { 3 } else { 5 };
-            let (flat_s, flat_cs) = time_all_reduce(world, elems, iters, CollAlgo::Flat);
-            let (ring_s, ring_cs) = time_all_reduce(world, elems, iters, CollAlgo::Ring);
-            assert_eq!(
-                flat_cs, ring_cs,
-                "flat and ring all_reduce disagree at world={world} elems={elems}"
-            );
-            let auto = if CollAlgo::Auto.use_ring(world, Some(elems * 4)) {
-                "ring"
-            } else {
-                "flat"
-            };
-            table.row(&[
-                world.to_string(),
-                label.to_string(),
-                format!("{:.1} ms", flat_s * 1e3),
-                format!("{:.1} ms", ring_s * 1e3),
-                format!("{:.2}x", flat_s / ring_s),
-                auto.to_string(),
-            ]);
+    for op in CollOp::ALL {
+        for &world in sizes {
+            for &elems in elem_counts {
+                let iters = if elems >= 1_048_576 { 3 } else { 5 };
+                let (flat_s, flat_cs) = time_op(op, world, elems, iters, CollAlgo::Flat);
+                let (ring_s, ring_cs) = time_op(op, world, elems, iters, CollAlgo::Ring);
+                assert_eq!(
+                    flat_cs,
+                    ring_cs,
+                    "flat and ring {} disagree at world={world} elems={elems}",
+                    op.name()
+                );
+                let bytes = elems * 4;
+                let auto = if policy.ring_for_bytes(op, world, bytes) { "ring" } else { "flat" };
+                table.row(&[
+                    op.name().to_string(),
+                    world.to_string(),
+                    bytes.to_string(),
+                    format!("{:.3}", flat_s * 1e3),
+                    format!("{:.3}", ring_s * 1e3),
+                    format!("{:.2}", flat_s / ring_s),
+                    auto.to_string(),
+                ]);
+            }
         }
     }
     table.emit("ablation_collectives");
+    show_auto_prologue();
     println!(
-        "paper shape: parity at world 2; ring ≥2x on ≥4MB tensors at world ≥4 \
-         (root NIC is the flat bottleneck); Auto crossover at ≥4 ranks / ≥1MB"
+        "paper shape: parity at world 2; bandwidth-bound rings (all_reduce, \
+         broadcast, reduce) win on >=4MB payloads at world >=4 (root NIC is \
+         the flat bottleneck); Auto crossover per the MW_RING_MIN_* policy table"
     );
 }

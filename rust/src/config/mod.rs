@@ -7,28 +7,232 @@ use crate::tensor::DType;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
-/// Collective algorithm selection for a world's bandwidth-bound ops
-/// (`all_reduce`, `broadcast`, `all_gather`).
+/// Collective algorithm selection for a world's six collectives
+/// (`broadcast`, `reduce`, `all_reduce`, `gather`, `all_gather`,
+/// `scatter`).
 ///
 /// * `Flat` — star through the root: optimal for the paper's 2–3 rank
 ///   worlds and for small messages (fewest hops).
 /// * `Ring` — bandwidth-optimal pipelined ring: each rank sends
 ///   `O(size / world)` bytes per NIC instead of the root sending
 ///   `(world-1) × size`, so large tensors in large worlds scale.
-/// * `Auto` — per-op choice: ring once the world is big enough (and,
-///   where the message size is known on every rank, big enough to
-///   amortize the extra hops), flat otherwise.
+/// * `Auto` — per-op choice driven by the [`CollPolicy`] threshold
+///   table: ring once the world is big enough *and* the message is big
+///   enough to amortize the extra hops, flat otherwise. Where only the
+///   root knows the payload size, the root resolves the choice and
+///   announces it in a flat-sent prologue frame (see
+///   [`CollPolicy::decide`] returning [`AlgoDecision::Negotiate`]).
 ///
 /// The choice must be identical on every rank of a world (the wire tags
-/// differ between algorithms), which is why [`CollAlgo::use_ring`] only
-/// consumes inputs all ranks agree on: world size always, message bytes
-/// only for ops where every rank knows it up front (all_reduce).
+/// differ between algorithms); the prologue negotiation exists exactly
+/// so that size-aware choices stay rank-consistent even when non-roots
+/// cannot see the size.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum CollAlgo {
     Flat,
     Ring,
     #[default]
     Auto,
+}
+
+/// The six collectives the per-op policy table keys on (p2p send/recv
+/// have no algorithm choice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollOp {
+    Broadcast,
+    Reduce,
+    AllReduce,
+    Gather,
+    AllGather,
+    Scatter,
+}
+
+impl CollOp {
+    /// All six, in table order.
+    pub const ALL: [CollOp; 6] = [
+        CollOp::Broadcast,
+        CollOp::Reduce,
+        CollOp::AllReduce,
+        CollOp::Gather,
+        CollOp::AllGather,
+        CollOp::Scatter,
+    ];
+
+    /// Stable index into per-op tables.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Lowercase name, matching the bench CSV's `op` column.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollOp::Broadcast => "broadcast",
+            CollOp::Reduce => "reduce",
+            CollOp::AllReduce => "all_reduce",
+            CollOp::Gather => "gather",
+            CollOp::AllGather => "all_gather",
+            CollOp::Scatter => "scatter",
+        }
+    }
+
+    /// Environment-variable suffix for per-op overrides
+    /// (`MW_RING_MIN_BYTES_ALL_REDUCE`, …).
+    fn env_suffix(self) -> &'static str {
+        match self {
+            CollOp::Broadcast => "BROADCAST",
+            CollOp::Reduce => "REDUCE",
+            CollOp::AllReduce => "ALL_REDUCE",
+            CollOp::Gather => "GATHER",
+            CollOp::AllGather => "ALL_GATHER",
+            CollOp::Scatter => "SCATTER",
+        }
+    }
+}
+
+/// Ring-eligibility thresholds for one collective under [`CollAlgo::Auto`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RingThreshold {
+    /// Smallest world size where the ring is considered.
+    pub min_world: usize,
+    /// Smallest payload (bytes) where the ring is considered.
+    pub min_bytes: usize,
+}
+
+impl Default for RingThreshold {
+    fn default() -> Self {
+        RingThreshold {
+            min_world: CollAlgo::RING_MIN_WORLD,
+            min_bytes: CollAlgo::RING_MIN_BYTES,
+        }
+    }
+}
+
+/// What a rank should run for one collective invocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoDecision {
+    Flat,
+    Ring,
+    /// The size needed for an `Auto` choice is only known at the op's
+    /// root: the root must resolve flat-vs-ring from the real byte count
+    /// and announce the verdict in a flat-sent prologue frame before the
+    /// data moves.
+    Negotiate,
+}
+
+/// Per-op algorithm policy: a forced/auto selector plus one
+/// [`RingThreshold`] row per collective, overridable via environment:
+///
+/// * `MW_COLL_ALGO` — `flat` / `ring` / `auto` (the selector);
+/// * `MW_RING_MIN_WORLD`, `MW_RING_MIN_BYTES` — all-ops defaults;
+/// * `MW_RING_MIN_WORLD_<OP>`, `MW_RING_MIN_BYTES_<OP>` — per-op rows,
+///   `<OP>` ∈ `BROADCAST`, `REDUCE`, `ALL_REDUCE`, `GATHER`,
+///   `ALL_GATHER`, `SCATTER`.
+///
+/// Defaults mirror the crossover measured by
+/// `benches/ablation_collectives.rs`; CI's `crossover-matrix` job
+/// re-measures the knee on every push and warns when the defaults drift
+/// from the hardware (see `tools/check_crossover.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollPolicy {
+    /// Forced algorithm or auto selection.
+    pub algo: CollAlgo,
+    thresholds: [RingThreshold; 6],
+}
+
+impl Default for CollPolicy {
+    fn default() -> Self {
+        CollPolicy {
+            algo: CollAlgo::default(),
+            thresholds: [RingThreshold::default(); 6],
+        }
+    }
+}
+
+impl CollPolicy {
+    /// Policy with the given selector and default thresholds.
+    pub fn new(algo: CollAlgo) -> Self {
+        CollPolicy { algo, ..Default::default() }
+    }
+
+    /// The threshold row for one op.
+    pub fn threshold(&self, op: CollOp) -> RingThreshold {
+        self.thresholds[op.index()]
+    }
+
+    /// Builder-style per-op threshold override.
+    pub fn with_threshold(mut self, op: CollOp, th: RingThreshold) -> Self {
+        self.thresholds[op.index()] = th;
+        self
+    }
+
+    /// Policy from the process environment (see type docs for the
+    /// variable set).
+    pub fn from_env() -> Self {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// Testable core of [`CollPolicy::from_env`]: `get` plays the role
+    /// of `std::env::var`.
+    pub fn from_lookup(get: impl Fn(&str) -> Option<String>) -> Self {
+        let parse = |k: &str| get(k).and_then(|s| s.parse::<usize>().ok());
+        let base = RingThreshold {
+            min_world: parse("MW_RING_MIN_WORLD").unwrap_or(CollAlgo::RING_MIN_WORLD),
+            min_bytes: parse("MW_RING_MIN_BYTES").unwrap_or(CollAlgo::RING_MIN_BYTES),
+        };
+        let mut thresholds = [base; 6];
+        for op in CollOp::ALL {
+            let row = &mut thresholds[op.index()];
+            if let Some(w) = parse(&format!("MW_RING_MIN_WORLD_{}", op.env_suffix())) {
+                row.min_world = w;
+            }
+            if let Some(b) = parse(&format!("MW_RING_MIN_BYTES_{}", op.env_suffix())) {
+                row.min_bytes = b;
+            }
+        }
+        let algo = get("MW_COLL_ALGO")
+            .and_then(|s| CollAlgo::from_name(&s))
+            .unwrap_or_default();
+        CollPolicy { algo, thresholds }
+    }
+
+    /// Resolve the algorithm for one collective invocation.
+    ///
+    /// `bytes` is the payload size when the caller's rank knows it *and*
+    /// every rank is guaranteed to compute the same value (all_reduce and
+    /// reduce, where the CCL contract makes all contributions
+    /// identically shaped); `None` when only the op's root can know
+    /// (broadcast, gather, all_gather, scatter) — in which case an
+    /// `Auto` world big enough to ring returns
+    /// [`AlgoDecision::Negotiate`] and the root settles it over a
+    /// prologue frame.
+    pub fn decide(&self, op: CollOp, world_size: usize, bytes: Option<usize>) -> AlgoDecision {
+        if world_size < 2 || world_size > CollAlgo::RING_MAX_WORLD {
+            return AlgoDecision::Flat;
+        }
+        match self.algo {
+            CollAlgo::Flat => AlgoDecision::Flat,
+            CollAlgo::Ring => AlgoDecision::Ring,
+            CollAlgo::Auto => {
+                let th = self.threshold(op);
+                if world_size < th.min_world {
+                    return AlgoDecision::Flat;
+                }
+                match bytes {
+                    Some(b) if b >= th.min_bytes => AlgoDecision::Ring,
+                    Some(_) => AlgoDecision::Flat,
+                    None => AlgoDecision::Negotiate,
+                }
+            }
+        }
+    }
+
+    /// Root-side resolution of [`AlgoDecision::Negotiate`]: the final
+    /// flat-vs-ring verdict once the real (or root-estimated) byte count
+    /// is in hand. `true` means ring.
+    pub fn ring_for_bytes(&self, op: CollOp, world_size: usize, bytes: usize) -> bool {
+        matches!(self.decide(op, world_size, Some(bytes)), AlgoDecision::Ring)
+    }
 }
 
 impl CollAlgo {
@@ -62,26 +266,6 @@ impl CollAlgo {
             .unwrap_or_default()
     }
 
-    /// Resolve the algorithm for one collective. `bytes` is the message
-    /// size when every rank knows it before the op (all_reduce), `None`
-    /// when only some ranks do (broadcast — non-roots learn the size on
-    /// the wire; all_gather — contributions may differ per rank).
-    pub fn use_ring(self, world_size: usize, bytes: Option<usize>) -> bool {
-        if world_size < 2 || world_size > Self::RING_MAX_WORLD {
-            return false;
-        }
-        match self {
-            CollAlgo::Flat => false,
-            CollAlgo::Ring => true,
-            CollAlgo::Auto => {
-                world_size >= Self::RING_MIN_WORLD
-                    && match bytes {
-                        Some(b) => b >= Self::RING_MIN_BYTES,
-                        None => true,
-                    }
-            }
-        }
-    }
 }
 
 /// One AOT-compiled pipeline stage.
@@ -312,21 +496,60 @@ mod tests {
     }
 
     #[test]
-    fn coll_algo_auto_crossover() {
-        let a = CollAlgo::Auto;
-        // Small worlds always flat, whatever the size.
-        assert!(!a.use_ring(2, Some(64 << 20)));
-        assert!(!a.use_ring(3, None));
-        // Big world + big (or unknown) message rings.
-        assert!(a.use_ring(4, Some(CollAlgo::RING_MIN_BYTES)));
-        assert!(a.use_ring(8, None));
-        // Big world + known-small message stays flat.
-        assert!(!a.use_ring(8, Some(1024)));
-        // Forced choices ignore the heuristics.
-        assert!(CollAlgo::Ring.use_ring(2, Some(1)));
-        assert!(!CollAlgo::Flat.use_ring(64, Some(1 << 30)));
-        // Degenerate and oversized worlds never ring.
-        assert!(!CollAlgo::Ring.use_ring(1, None));
-        assert!(!CollAlgo::Ring.use_ring(1000, None));
+    fn coll_policy_decides_per_op() {
+        let p = CollPolicy::default();
+        // Known-size ops decide locally on every rank.
+        assert_eq!(p.decide(CollOp::AllReduce, 8, Some(4 << 20)), AlgoDecision::Ring);
+        assert_eq!(p.decide(CollOp::AllReduce, 8, Some(1024)), AlgoDecision::Flat);
+        assert_eq!(p.decide(CollOp::Reduce, 4, Some(CollAlgo::RING_MIN_BYTES)), AlgoDecision::Ring);
+        // Root-only-size ops negotiate once the world is ring-eligible…
+        assert_eq!(p.decide(CollOp::Broadcast, 4, None), AlgoDecision::Negotiate);
+        assert_eq!(p.decide(CollOp::AllGather, 8, None), AlgoDecision::Negotiate);
+        assert_eq!(p.decide(CollOp::Scatter, 8, None), AlgoDecision::Negotiate);
+        // …and stay flat below the world threshold with no prologue.
+        assert_eq!(p.decide(CollOp::Broadcast, 3, None), AlgoDecision::Flat);
+        // Forced selectors never negotiate.
+        let ring = CollPolicy::new(CollAlgo::Ring);
+        let flat = CollPolicy::new(CollAlgo::Flat);
+        assert_eq!(ring.decide(CollOp::Gather, 8, None), AlgoDecision::Ring);
+        assert_eq!(flat.decide(CollOp::Gather, 8, None), AlgoDecision::Flat);
+        // Degenerate / oversized worlds are always flat.
+        assert_eq!(ring.decide(CollOp::Broadcast, 1, None), AlgoDecision::Flat);
+        assert_eq!(ring.decide(CollOp::Broadcast, 1000, None), AlgoDecision::Flat);
+        // Root-side resolution of Negotiate.
+        assert!(p.ring_for_bytes(CollOp::Broadcast, 4, CollAlgo::RING_MIN_BYTES));
+        assert!(!p.ring_for_bytes(CollOp::Broadcast, 4, 1024));
     }
+
+    #[test]
+    fn coll_policy_env_overrides() {
+        let env = |k: &str| -> Option<String> {
+            match k {
+                "MW_COLL_ALGO" => Some("auto".into()),
+                "MW_RING_MIN_BYTES" => Some("2048".into()),
+                "MW_RING_MIN_WORLD_SCATTER" => Some("16".into()),
+                "MW_RING_MIN_BYTES_ALL_REDUCE" => Some("65536".into()),
+                _ => None,
+            }
+        };
+        let p = CollPolicy::from_lookup(env);
+        assert_eq!(p.algo, CollAlgo::Auto);
+        // Global byte override applies to every op without its own row…
+        assert_eq!(p.threshold(CollOp::Broadcast).min_bytes, 2048);
+        assert_eq!(p.threshold(CollOp::Broadcast).min_world, CollAlgo::RING_MIN_WORLD);
+        // …and per-op rows override the global default.
+        assert_eq!(p.threshold(CollOp::AllReduce).min_bytes, 65536);
+        assert_eq!(p.threshold(CollOp::Scatter).min_world, 16);
+        assert_eq!(p.decide(CollOp::Scatter, 8, None), AlgoDecision::Flat);
+        assert_eq!(p.decide(CollOp::AllReduce, 8, Some(65536)), AlgoDecision::Ring);
+    }
+
+    #[test]
+    fn coll_op_table_order_is_stable() {
+        for (i, op) in CollOp::ALL.iter().enumerate() {
+            assert_eq!(op.index(), i);
+        }
+        assert_eq!(CollOp::AllReduce.name(), "all_reduce");
+    }
+
 }

@@ -1,8 +1,12 @@
 //! Lightweight metrics: counters, gauges, histograms and a timestamped
 //! timeline recorder used to regenerate the paper's time-series figures
-//! (Figs 4 and 5).
+//! (Figs 4 and 5). Also hosts the process-wide [`global`] registry and
+//! the [`log_event`] structured log line, so daemons without an
+//! injected registry (e.g. the MultiWorld watchdog) stay observable in
+//! benches and CI logs.
 
 use crate::util::time::since_epoch;
+use once_cell::sync::Lazy;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -179,6 +183,32 @@ impl Registry {
     }
 }
 
+/// The process-wide registry, for components that outlive or predate
+/// any injected one (the watchdog daemon, transports, CLI tools).
+/// Renderable alongside per-experiment registries via
+/// [`Registry::render`].
+pub fn global() -> &'static Registry {
+    static GLOBAL: Lazy<Registry> = Lazy::new(Registry::default);
+    &GLOBAL
+}
+
+/// Emit one structured event line to stderr:
+/// `[mw] event=<name> key=value …` — greppable in bench output and CI
+/// logs (values containing whitespace are quoted). This is the logging
+/// half of an observable event; pair it with a [`global`] counter for
+/// the countable half.
+pub fn log_event(event: &str, fields: &[(&str, &str)]) {
+    let mut line = format!("[mw] event={event}");
+    for (k, v) in fields {
+        if v.chars().any(|c| c.is_whitespace()) {
+            line.push_str(&format!(" {k}={v:?}"));
+        } else {
+            line.push_str(&format!(" {k}={v}"));
+        }
+    }
+    eprintln!("{line}");
+}
+
 /// One timestamped event in an experiment timeline.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TimelinePoint {
@@ -305,6 +335,18 @@ mod tests {
         assert!(csv.starts_with("t_sec,series,value,label\n"));
         assert!(csv.contains("W2-R1"));
         assert!(csv.contains("join"));
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let before = global().counter("test.global_shared").get();
+        global().counter("test.global_shared").inc();
+        assert_eq!(global().counter("test.global_shared").get(), before + 1);
+    }
+
+    #[test]
+    fn log_event_does_not_panic() {
+        log_event("test.event", &[("plain", "v"), ("spaced", "a b")]);
     }
 
     #[test]

@@ -165,9 +165,14 @@ impl Watchdog {
             }
         }
         for (world, reason) in broken {
-            if std::env::var("MW_DEBUG").is_ok() {
-                eprintln!("[watchdog] alert {world}: {reason}");
-            }
+            // Broken-world events must be observable without MW_DEBUG:
+            // a counter for dashboards/assertions plus one structured
+            // line that benches and CI logs can grep.
+            crate::metrics::global().counter("watchdog.worlds_broken").inc();
+            crate::metrics::log_event(
+                "watchdog.world_broken",
+                &[("world", world.as_str()), ("reason", reason.as_str())],
+            );
             (self.on_broken)(&world, &reason);
         }
     }
@@ -260,6 +265,8 @@ mod tests {
         let fx = fixture();
         let clock = Clock::manual();
         let wd = watchdog_with(&fx, clock.clone());
+        let broken_counter = crate::metrics::global().counter("watchdog.worlds_broken");
+        let broken_before = broken_counter.get();
         // heartbeat period is effectively ∞ for the daemon; we drive ticks.
         wd.watch("w1", 0, 2, fx.store.clone());
         fx.store
@@ -274,6 +281,10 @@ mod tests {
         assert_eq!(broken.len(), 1);
         assert_eq!(broken[0].0, "w1");
         assert!(broken[0].1.contains("rank 1"), "{}", broken[0].1);
+        assert!(
+            broken_counter.get() > broken_before,
+            "alert must increment the global watchdog.worlds_broken counter"
+        );
     }
 
     #[test]

@@ -7,10 +7,11 @@
 //!
 //! ## Algorithm selector
 //!
-//! The bandwidth-bound collectives (`all_reduce`, `broadcast`,
-//! `all_gather`) run one of two algorithms, chosen per op by the world's
-//! [`crate::config::CollAlgo`] policy (`WorldOptions::coll_algo`, env
-//! `MW_COLL_ALGO`):
+//! Every collective with an algorithm choice (all six: `broadcast`,
+//! `reduce`, `all_reduce`, `gather`, `all_gather`, `scatter`) runs one
+//! of two algorithms, chosen per op by the world's
+//! [`crate::config::CollPolicy`] (`WorldOptions::coll_policy`, env
+//! `MW_COLL_ALGO` + `MW_RING_MIN_*` threshold table):
 //!
 //! * **Flat** — a star through the root: the root performs `size − 1`
 //!   sequential full-size transfers. Optimal for the paper's 2–3 rank
@@ -21,40 +22,59 @@
 //!   NIC instead of the root moving `(N−1)×` the tensor through one,
 //!   and chunk `k+1` is on the wire while chunk `k` is being reduced
 //!   (the receiver threads drain into unbounded inboxes, so sends never
-//!   wait for the reducer). Broadcast forwards chunks hop-by-hop down
-//!   the ring — a non-root forwards chunk `k` *before* folding it into
-//!   its buffer, so the pipeline depth is one chunk, not one tensor.
-//!   All-gather circulates each rank's serialized contribution `N−1`
-//!   hops.
-//! * **Auto** — ring for worlds of ≥ `CollAlgo::RING_MIN_WORLD` ranks
-//!   (and, for all_reduce where every rank knows the size up front,
-//!   messages ≥ `CollAlgo::RING_MIN_BYTES`); flat otherwise. The
-//!   thresholds match the crossover measured by
-//!   `benches/ablation_collectives.rs`.
+//!   wait for the reducer). Reduce runs the *same* reduce-scatter, then
+//!   every rank ships its fully-reduced slice straight to the root, so
+//!   the root's NIC ingests ~S instead of (N−1)·S. Broadcast forwards
+//!   chunks hop-by-hop down the ring — a non-root forwards chunk `k`
+//!   *before* folding it into its buffer, so the pipeline depth is one
+//!   chunk, not one tensor. All-gather circulates each rank's
+//!   serialized contribution `N−1` hops; gather circulates
+//!   contributions hop-by-hop *toward* the root, and scatter streams
+//!   the root's parts hop-by-hop away from it (each rank peels off its
+//!   own part and forwards the rest), replacing `N−1` separate root
+//!   streams with one pipelined neighbour stream per rank.
+//! * **Auto** — ring once both the world and the payload clear the
+//!   per-op [`crate::config::RingThreshold`] row. For ops where every
+//!   rank knows the payload size up front (`all_reduce`, `reduce` — the
+//!   CCL contract makes contributions identically shaped) the choice is
+//!   computed locally and identically everywhere. For ops where only
+//!   the root can know (`broadcast`, `gather`, `all_gather`, `scatter`)
+//!   the policy returns `Negotiate`: the root resolves flat-vs-ring
+//!   from the real (or root-estimated) byte count and announces the
+//!   verdict in a one-byte *prologue* frame fanned out flat on the op
+//!   tag's prologue lane (see [`crate::mwccl::wire::FLAG_PROLOGUE`]),
+//!   so tiny control messages keep the flat fast path instead of paying
+//!   `N−1` sequential hops. Thresholds match the crossover measured by
+//!   `benches/ablation_collectives.rs` (re-checked by CI's
+//!   `crossover-matrix` job).
 //!
-//! Both algorithms produce identical bytes for broadcast/all_gather; for
-//! all_reduce they fold in different orders, so f32 rounding may differ
-//! in the last ulp (exactly like NCCL's tree vs ring). The algorithm
-//! choice is deterministic from (policy, world size, message size), so
-//! every rank of a world picks the same one — required, because the two
-//! use different wire tags (ring ops tag each (step, chunk), see
-//! [`make_chunk_tag`]).
+//! Both algorithms produce identical bytes for the data-movement ops
+//! (broadcast, gather, all_gather, scatter); for all_reduce/reduce the
+//! two fold in different orders, so f32 rounding may differ in the last
+//! ulp (exactly like NCCL's tree vs ring). The algorithm choice is
+//! rank-consistent by construction — computed from inputs all ranks
+//! share, or received from the root's prologue — which is required
+//! because the two algorithms use different wire tags (ring ops tag
+//! each (step, chunk), see [`make_chunk_tag`]). The choice each op
+//! actually ran is observable via `World::last_algo`.
 //!
-//! Root-centric ops stay flat but are arrival-order: `reduce` posts all
-//! peer receives up front and folds contributions as they land rather
-//! than blocking peer-by-peer, so one slow peer no longer serializes the
-//! fold behind it.
+//! Flat `reduce` stays arrival-order: the root posts all peer receives
+//! up front and folds contributions as they land rather than blocking
+//! peer-by-peer, so one slow peer no longer serializes the fold behind
+//! it.
 //!
 //! Deadlock-freedom: receiver threads always drain transports into
 //! unbounded inboxes, so a send never blocks on the peer's op order —
 //! within one world, ops still execute in submission order on the
 //! progress thread (CCL contract: all ranks issue collectives in the
-//! same order).
+//! same order). The prologue negotiation obeys the same ordering: it
+//! runs on the progress thread as the first phase of its op.
 
 use super::error::{CclError, CclResult};
 use super::wire::{make_chunk_tag, make_tag, TagKind, SEG_MAX};
 use super::work::Work;
 use super::world::{ReduceOp, World, WorldCore};
+use crate::config::{AlgoDecision, CollOp};
 use crate::tensor::serialize::encode_header;
 use crate::tensor::{read_tensor, write_tensor, DType, Tensor};
 
@@ -130,15 +150,26 @@ impl World {
             return Work::done(desc, t);
         }
         let seq = self.core().next_seq();
-        // Message size is unknown on non-roots, so Auto decides from the
-        // world size alone (the choice must match on every rank).
-        if self.core().coll_algo.use_ring(self.size(), None) {
-            return self.submit(desc, move |core| {
+        // Only the root knows the size, so under Auto the policy asks
+        // for a prologue negotiation (resolved on the progress thread).
+        let decision = self.core().coll_policy.decide(CollOp::Broadcast, self.size(), None);
+        let root_bytes = t.as_ref().map(|t| t.byte_len());
+        self.submit(desc, move |core| {
+            let ring = resolve_algo(
+                core,
+                CollOp::Broadcast,
+                TagKind::Broadcast,
+                seq,
+                root,
+                decision,
+                root_bytes,
+            )?;
+            if ring {
                 ring_broadcast(core, t, root, seq).map(Some)
-            });
-        }
-        let wire = make_tag(TagKind::Broadcast, seq);
-        self.submit(desc, move |core| broadcast_impl(core, t, root, wire).map(Some))
+            } else {
+                broadcast_impl(core, t, root, make_tag(TagKind::Broadcast, seq)).map(Some)
+            }
+        })
     }
 
     /// Blocking broadcast.
@@ -151,8 +182,11 @@ impl World {
     // ------------------------------------------------------------ reduce
 
     /// Async reduce: every rank contributes `t`; the root's Work
-    /// resolves to the reduction, other ranks' resolve to `None`.
-    /// Contributions fold in arrival order.
+    /// resolves to the reduction, other ranks' resolve to `None`. Flat =
+    /// star into the root, folding in arrival order; ring = the
+    /// all-reduce's chunked reduce-scatter, then each rank ships its
+    /// fully-reduced slice to the root (the root's NIC ingests ~S
+    /// instead of (N−1)·S).
     pub fn ireduce(&self, t: Tensor, root: usize, op: ReduceOp) -> Work {
         let desc = format!("reduce root={root} {op:?} world={}", self.name());
         if root >= self.size() {
@@ -162,8 +196,28 @@ impl World {
             return Work::done(desc, Some(t));
         }
         let seq = self.core().next_seq();
-        let wire = make_tag(TagKind::Reduce, seq);
-        self.submit(desc, move |core| reduce_impl(core, t, root, op, wire))
+        // Contributions are identically shaped (CCL contract), so every
+        // rank computes the same size-aware choice locally.
+        let decision =
+            self.core()
+                .coll_policy
+                .decide(CollOp::Reduce, self.size(), Some(t.byte_len()));
+        self.submit(desc, move |core| {
+            let ring = resolve_algo(
+                core,
+                CollOp::Reduce,
+                TagKind::Reduce,
+                seq,
+                root,
+                decision,
+                None,
+            )?;
+            if ring {
+                ring_reduce(core, t, root, op, seq)
+            } else {
+                reduce_impl(core, t, root, op, make_tag(TagKind::Reduce, seq))
+            }
+        })
     }
 
     /// Blocking reduce (returns the reduction at root, `None` elsewhere).
@@ -192,18 +246,25 @@ impl World {
         // All ranks must supply identically-shaped tensors (CCL
         // contract), so byte_len is the same everywhere and Auto's
         // choice is consistent across the world.
-        if self
-            .core()
-            .coll_algo
-            .use_ring(self.size(), Some(t.byte_len()))
-        {
-            return self.submit(desc, move |core| {
-                ring_all_reduce(core, t, op, seq).map(Some)
-            });
-        }
-        let rtag = make_tag(TagKind::AllReduce, seq * 2);
-        let btag = make_tag(TagKind::AllReduce, seq * 2 + 1);
+        let decision =
+            self.core()
+                .coll_policy
+                .decide(CollOp::AllReduce, self.size(), Some(t.byte_len()));
         self.submit(desc, move |core| {
+            let ring = resolve_algo(
+                core,
+                CollOp::AllReduce,
+                TagKind::AllReduce,
+                seq,
+                0,
+                decision,
+                None,
+            )?;
+            if ring {
+                return ring_all_reduce(core, t, op, seq).map(Some);
+            }
+            let rtag = make_tag(TagKind::AllReduce, seq * 2);
+            let btag = make_tag(TagKind::AllReduce, seq * 2 + 1);
             let reduced = reduce_impl(core, t, 0, op, rtag)?;
             broadcast_impl(core, reduced, 0, btag).map(Some)
         })
@@ -219,7 +280,9 @@ impl World {
     // ------------------------------------------------------------ gather
 
     /// Async gather: root's Work resolves to the rank-order concatenation
-    /// along axis 0; contributions must share trailing dims.
+    /// along axis 0; contributions must share trailing dims. Flat =
+    /// `N−1` streams into the root; ring = contributions circulate
+    /// hop-by-hop toward the root.
     pub fn igather(&self, t: Tensor, root: usize) -> Work {
         let desc = format!("gather root={root} world={}", self.name());
         if root >= self.size() {
@@ -229,8 +292,27 @@ impl World {
             return Work::done(desc, Some(t));
         }
         let seq = self.core().next_seq();
-        let wire = make_tag(TagKind::Gather, seq);
-        self.submit(desc, move |core| gather_impl(core, t, root, wire))
+        // Contributions may differ per rank, so no rank can compute a
+        // size-aware choice alone; the root estimates the gathered total
+        // from its own contribution and negotiates.
+        let decision = self.core().coll_policy.decide(CollOp::Gather, self.size(), None);
+        let root_bytes = Some(t.byte_len().saturating_mul(self.size()));
+        self.submit(desc, move |core| {
+            let ring = resolve_algo(
+                core,
+                CollOp::Gather,
+                TagKind::Gather,
+                seq,
+                root,
+                decision,
+                root_bytes,
+            )?;
+            if ring {
+                ring_gather(core, t, root, seq)
+            } else {
+                gather_impl(core, t, root, make_tag(TagKind::Gather, seq))
+            }
+        })
     }
 
     /// Blocking gather.
@@ -249,16 +331,26 @@ impl World {
             return Work::done(desc, Some(t));
         }
         let seq = self.core().next_seq();
-        // Contributions may differ in size per rank, so Auto decides
-        // from the world size alone (the choice must match everywhere).
-        if self.core().coll_algo.use_ring(self.size(), None) {
-            return self.submit(desc, move |core| {
-                ring_all_gather(core, t, seq).map(Some)
-            });
-        }
-        let gtag = make_tag(TagKind::AllGather, seq * 2);
-        let btag = make_tag(TagKind::AllGather, seq * 2 + 1);
+        // Contributions may differ in size per rank; rank 0 acts as the
+        // negotiation root, estimating the gathered total from its own
+        // contribution.
+        let decision = self.core().coll_policy.decide(CollOp::AllGather, self.size(), None);
+        let root_bytes = Some(t.byte_len().saturating_mul(self.size()));
         self.submit(desc, move |core| {
+            let ring = resolve_algo(
+                core,
+                CollOp::AllGather,
+                TagKind::AllGather,
+                seq,
+                0,
+                decision,
+                root_bytes,
+            )?;
+            if ring {
+                return ring_all_gather(core, t, seq).map(Some);
+            }
+            let gtag = make_tag(TagKind::AllGather, seq * 2);
+            let btag = make_tag(TagKind::AllGather, seq * 2 + 1);
             let gathered = gather_impl(core, t, 0, gtag)?;
             broadcast_impl(core, gathered, 0, btag).map(Some)
         })
@@ -306,8 +398,28 @@ impl World {
             return Work::done(desc, parts.map(|mut p| p.remove(0)));
         }
         let seq = self.core().next_seq();
-        let wire = make_tag(TagKind::Scatter, seq);
-        self.submit(desc, move |core| scatter_impl(core, parts, root, wire).map(Some))
+        // Only the root holds the parts, so it resolves the size-aware
+        // choice from the real total and announces it in the prologue.
+        let decision = self.core().coll_policy.decide(CollOp::Scatter, self.size(), None);
+        let root_bytes = parts
+            .as_ref()
+            .map(|p| p.iter().map(|t| t.byte_len()).sum::<usize>());
+        self.submit(desc, move |core| {
+            let ring = resolve_algo(
+                core,
+                CollOp::Scatter,
+                TagKind::Scatter,
+                seq,
+                root,
+                decision,
+                root_bytes,
+            )?;
+            if ring {
+                ring_scatter(core, parts, root, seq).map(Some)
+            } else {
+                scatter_impl(core, parts, root, make_tag(TagKind::Scatter, seq)).map(Some)
+            }
+        })
     }
 
     /// Blocking scatter.
@@ -316,6 +428,52 @@ impl World {
             .wait()?
             .ok_or_else(|| CclError::Transport("scatter returned no tensor".into()))
     }
+}
+
+// ------------------------------------------------------- algo negotiation
+
+/// Turn a policy decision into the concrete flat-vs-ring choice for one
+/// invocation, and record it for `World::last_algo`.
+///
+/// `Flat`/`Ring` pass straight through (every rank computed the same
+/// decision from shared inputs). `Negotiate` means only the root can
+/// size the payload: the root resolves flat-vs-ring from `root_bytes`
+/// (its real or estimated byte count) and fans the one-byte verdict out
+/// flat on the op tag's *prologue* lane — `size − 1` 18-byte frames,
+/// cheap even when the verdict is "stay flat" — and every other rank
+/// blocks for it (under `op_timeout`) before touching the data path.
+fn resolve_algo(
+    core: &WorldCore,
+    op: CollOp,
+    kind: TagKind,
+    seq: u64,
+    root: usize,
+    decision: AlgoDecision,
+    root_bytes: Option<usize>,
+) -> CclResult<bool> {
+    let ring = match decision {
+        AlgoDecision::Flat => false,
+        AlgoDecision::Ring => true,
+        AlgoDecision::Negotiate => {
+            let tag = make_tag(kind, seq);
+            if core.rank == root {
+                let bytes = root_bytes.ok_or_else(|| {
+                    CclError::InvalidUsage("negotiated op missing root payload size".into())
+                })?;
+                let ring = core.coll_policy.ring_for_bytes(op, core.size, bytes);
+                for peer in 0..core.size {
+                    if peer != root {
+                        core.send_algo_prologue(peer, tag, ring)?;
+                    }
+                }
+                ring
+            } else {
+                core.recv_algo_prologue(root, tag)?
+            }
+        }
+    };
+    core.note_algo(op, ring);
+    Ok(ring)
 }
 
 // ------------------------------------------------------------- flat impls
@@ -516,6 +674,103 @@ fn fold_f32(dst: &mut [u8], src: &[u8], op: ReduceOp) {
     }
 }
 
+/// Byte bounds `(offset, len)` of per-rank slice `i` when `elems` f32
+/// elements are cut into `n` contiguous slices: the first `elems % n`
+/// slices get one extra element, so any size divides cleanly.
+#[inline]
+fn rank_slice_bytes(elems: usize, n: usize, i: usize) -> (usize, usize) {
+    let (base, extra) = (elems / n, elems % n);
+    let start = i * base + i.min(extra);
+    let len = base + usize::from(i < extra);
+    (start * 4, len * 4)
+}
+
+/// One ring step: send the outgoing byte slice to the ring successor as
+/// a [`RING_CHUNK`] train, then receive the incoming slice's chunks in
+/// order — folding them when `fold` is set (reduce-scatter) or
+/// overwriting (all-gather). The sends never block on the peer's op
+/// order (its reader thread always drains), so chunk c+1 is in flight
+/// while chunk c is applied.
+#[allow(clippy::too_many_arguments)]
+fn ring_step(
+    core: &WorldCore,
+    t: &mut Tensor,
+    kind: TagKind,
+    seq: u64,
+    step: usize,
+    send_slice: (usize, usize),
+    recv_slice: (usize, usize),
+    fold: Option<ReduceOp>,
+) -> CclResult<()> {
+    let next = ring_next(core);
+    let prev = ring_prev(core);
+    let (so, sl) = send_slice;
+    let (ro, rl) = recv_slice;
+    for c in 0..chunks_of(sl) {
+        let (lo, hi) = chunk_bounds(so, sl, c);
+        let tag = make_chunk_tag(kind, seq, step, c);
+        core.send_bytes(next, tag, &[&t.bytes()[lo..hi]])?;
+    }
+    for c in 0..chunks_of(rl) {
+        let tag = make_chunk_tag(kind, seq, step, c);
+        let buf = core.recv_bytes(prev, tag)?;
+        let (lo, hi) = chunk_bounds(ro, rl, c);
+        if buf.len() != hi - lo {
+            return Err(CclError::InvalidUsage(format!(
+                "ring chunk length mismatch from rank {prev}: {} vs {} \
+                 (peers must pass identically-shaped tensors)",
+                buf.len(),
+                hi - lo
+            )));
+        }
+        match fold {
+            Some(op) => fold_f32(&mut t.bytes_mut()[lo..hi], &buf, op),
+            None => t.bytes_mut()[lo..hi].copy_from_slice(&buf),
+        }
+        core.recycle(prev, buf);
+    }
+    Ok(())
+}
+
+/// The chunked reduce-scatter phase shared by ring all-reduce and ring
+/// reduce: `N−1` steps, each folding one incoming per-rank slice. On
+/// return, rank `r` holds the fully-reduced slice `(r+1) mod N` (Avg
+/// scaling still pending — see [`scale_slice`]).
+fn ring_reduce_scatter(
+    core: &WorldCore,
+    t: &mut Tensor,
+    op: ReduceOp,
+    kind: TagKind,
+    seq: u64,
+) -> CclResult<()> {
+    let n = core.size;
+    let elems = t.elems();
+    for s in 0..n - 1 {
+        let send_slice = (core.rank + n - s) % n;
+        let recv_slice = (core.rank + n - s - 1) % n;
+        ring_step(
+            core,
+            t,
+            kind,
+            seq,
+            s,
+            rank_slice_bytes(elems, n, send_slice),
+            rank_slice_bytes(elems, n, recv_slice),
+            Some(op),
+        )?;
+    }
+    Ok(())
+}
+
+/// Scale the f32 words in `t.bytes_mut()[off..off+len]` by `factor`
+/// (Avg's divide-by-N, applied to the owned slice only).
+fn scale_slice(t: &mut Tensor, off: usize, len: usize, factor: f32) {
+    for d in t.bytes_mut()[off..off + len].chunks_exact_mut(4) {
+        let v = f32::from_le_bytes(d.try_into().unwrap()) * factor;
+        d.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
 /// Bandwidth-optimal ring all-reduce: reduce-scatter then all-gather,
 /// `2·(N−1)` steps, each moving one per-rank slice as a train of
 /// [`RING_CHUNK`] messages. Receives fold chunk `k` while chunk `k+1`
@@ -529,83 +784,95 @@ fn ring_all_reduce(core: &WorldCore, mut t: Tensor, op: ReduceOp, seq: u64) -> C
         return Err(CclError::InvalidUsage("all_reduce requires f32 tensors".into()));
     }
     let n = core.size;
-    let next = ring_next(core);
-    let prev = ring_prev(core);
     let elems = t.elems();
-    let (base, extra) = (elems / n, elems % n);
-    // Slice i covers elements [start, start+len): first `extra` slices
-    // get one extra element, so any size divides cleanly.
-    let slice_bytes = |i: usize| -> (usize, usize) {
-        let start = i * base + i.min(extra);
-        let len = base + usize::from(i < extra);
-        (start * 4, len * 4)
-    };
-
-    // One ring step: send the outgoing slice as a chunk train, then
-    // receive the incoming slice's chunks in order — folding them when
-    // `fold` is set (reduce-scatter) or overwriting (all-gather). The
-    // sends never block on the peer's op order (its reader thread always
-    // drains), so chunk c+1 is in flight while chunk c is applied.
-    let ring_step = |t: &mut Tensor,
-                     step: usize,
-                     send_slice: usize,
-                     recv_slice: usize,
-                     fold: Option<ReduceOp>|
-     -> CclResult<()> {
-        let (so, sl) = slice_bytes(send_slice);
-        let (ro, rl) = slice_bytes(recv_slice);
-        for c in 0..chunks_of(sl) {
-            let (lo, hi) = chunk_bounds(so, sl, c);
-            let tag = make_chunk_tag(TagKind::AllReduce, seq, step, c);
-            core.send_bytes(next, tag, &[&t.bytes()[lo..hi]])?;
-        }
-        for c in 0..chunks_of(rl) {
-            let tag = make_chunk_tag(TagKind::AllReduce, seq, step, c);
-            let buf = core.recv_bytes(prev, tag)?;
-            let (lo, hi) = chunk_bounds(ro, rl, c);
-            if buf.len() != hi - lo {
-                return Err(CclError::InvalidUsage(format!(
-                    "all_reduce chunk length mismatch from rank {prev}: {} vs {} \
-                     (peers must pass identically-shaped tensors)",
-                    buf.len(),
-                    hi - lo
-                )));
-            }
-            match fold {
-                Some(op) => fold_f32(&mut t.bytes_mut()[lo..hi], &buf, op),
-                None => t.bytes_mut()[lo..hi].copy_from_slice(&buf),
-            }
-            core.recycle(prev, buf);
-        }
-        Ok(())
-    };
 
     // ---- phase 1: reduce-scatter (steps 0 .. N-1) ----
-    for s in 0..n - 1 {
-        let send_slice = (core.rank + n - s) % n;
-        let recv_slice = (core.rank + n - s - 1) % n;
-        ring_step(&mut t, s, send_slice, recv_slice, Some(op))?;
-    }
+    ring_reduce_scatter(core, &mut t, op, TagKind::AllReduce, seq)?;
 
     // Averaging divides the owned (fully-reduced) slice only — the other
     // slices are overwritten by already-averaged data in phase 2.
     if op == ReduceOp::Avg {
         let owned = (core.rank + 1) % n;
-        let (oo, ol) = slice_bytes(owned);
-        let inv = 1.0 / n as f32;
-        for d in t.bytes_mut()[oo..oo + ol].chunks_exact_mut(4) {
-            let v = f32::from_le_bytes(d.try_into().unwrap()) * inv;
-            d.copy_from_slice(&v.to_le_bytes());
-        }
+        let (oo, ol) = rank_slice_bytes(elems, n, owned);
+        scale_slice(&mut t, oo, ol, 1.0 / n as f32);
     }
 
     // ---- phase 2: all-gather (steps N-1 .. 2N-3) ----
     for s in 0..n - 1 {
         let send_slice = (core.rank + 1 + n - s) % n;
         let recv_slice = (core.rank + n - s) % n;
-        ring_step(&mut t, (n - 1) + s, send_slice, recv_slice, None)?;
+        ring_step(
+            core,
+            &mut t,
+            TagKind::AllReduce,
+            seq,
+            (n - 1) + s,
+            rank_slice_bytes(elems, n, send_slice),
+            rank_slice_bytes(elems, n, recv_slice),
+            None,
+        )?;
     }
     Ok(t)
+}
+
+/// Ring reduce: the same chunked reduce-scatter as ring all-reduce —
+/// fold work and bytes spread across every NIC — then each rank ships
+/// its fully-reduced slice straight to the root (step `N−1`, reusing
+/// the chunk-tag scheme), so the root's NIC ingests `~S/N` from each of
+/// `N−1` peers concurrently (≈ S total) instead of the flat star's
+/// `(N−1)·S`.
+fn ring_reduce(
+    core: &WorldCore,
+    mut t: Tensor,
+    root: usize,
+    op: ReduceOp,
+    seq: u64,
+) -> CclResult<Option<Tensor>> {
+    if t.dtype() != DType::F32 {
+        return Err(CclError::InvalidUsage("reduce requires f32 tensors".into()));
+    }
+    let n = core.size;
+    let elems = t.elems();
+    ring_reduce_scatter(core, &mut t, op, TagKind::Reduce, seq)?;
+    let owned = (core.rank + 1) % n;
+    let (oo, ol) = rank_slice_bytes(elems, n, owned);
+    if op == ReduceOp::Avg {
+        scale_slice(&mut t, oo, ol, 1.0 / n as f32);
+    }
+    // Slice hand-off to the root: a step index past the reduce-scatter's
+    // 0..N-2 keeps the tags disjoint; per-link inboxes keep the same tag
+    // distinct across peers.
+    let handoff = n - 1;
+    if core.rank != root {
+        for c in 0..chunks_of(ol) {
+            let (lo, hi) = chunk_bounds(oo, ol, c);
+            let tag = make_chunk_tag(TagKind::Reduce, seq, handoff, c);
+            core.send_bytes(root, tag, &[&t.bytes()[lo..hi]])?;
+        }
+        return Ok(None);
+    }
+    for peer in 0..n {
+        if peer == root {
+            continue;
+        }
+        let (ro, rl) = rank_slice_bytes(elems, n, (peer + 1) % n);
+        for c in 0..chunks_of(rl) {
+            let tag = make_chunk_tag(TagKind::Reduce, seq, handoff, c);
+            let buf = core.recv_bytes(peer, tag)?;
+            let (lo, hi) = chunk_bounds(ro, rl, c);
+            if buf.len() != hi - lo {
+                return Err(CclError::InvalidUsage(format!(
+                    "reduce slice length mismatch from rank {peer}: {} vs {} \
+                     (peers must pass identically-shaped tensors)",
+                    buf.len(),
+                    hi - lo
+                )));
+            }
+            t.bytes_mut()[lo..hi].copy_from_slice(&buf);
+            core.recycle(peer, buf);
+        }
+    }
+    Ok(Some(t))
 }
 
 /// Pipelined ring broadcast: the serialized tensor travels the ring
@@ -727,6 +994,115 @@ fn ring_all_gather(core: &WorldCore, t: Tensor, seq: u64) -> CclResult<Tensor> {
     Ok(cat)
 }
 
+/// Ring gather: serialized contributions hop rank → rank *toward* the
+/// root (every non-root sends to its ring predecessor and relays what
+/// its successor hands it), so the root drains one pipelined stream
+/// from its successor — every hop transferring concurrently each step —
+/// instead of `N−1` separate root streams. Per-rank contributions may
+/// differ in size (same contract as flat gather); transports segment
+/// each hop into [`SEG_MAX`] frames.
+///
+/// Step schedule: the rank at ring position `p` (distance from the
+/// root) relays the contributions of positions `p..N-1`, own first; its
+/// step-`s` send carries position `p+s`, so the root's step-`s` receive
+/// is position `1+s`.
+fn ring_gather(core: &WorldCore, t: Tensor, root: usize, seq: u64) -> CclResult<Option<Tensor>> {
+    let n = core.size;
+    let next = ring_next(core);
+    let prev = ring_prev(core);
+    let pos = (core.rank + n - root) % n;
+    let tag = |s: usize| make_chunk_tag(TagKind::Gather, seq, s, 0);
+
+    if core.rank == root {
+        let mut parts: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        parts[root] = Some(t);
+        for s in 0..n - 1 {
+            let from_rank = (root + 1 + s) % n;
+            let bytes = core.recv_bytes(next, tag(s))?;
+            let part = read_tensor(&mut bytes.as_slice()).map_err(|e| {
+                CclError::Transport(format!("bad gather tensor from rank {from_rank}: {e}"))
+            })?;
+            core.recycle(next, bytes);
+            parts[from_rank] = Some(part);
+        }
+        let parts: Vec<Tensor> = parts.into_iter().map(|p| p.unwrap()).collect();
+        let cat = Tensor::concat(&parts)
+            .map_err(|e| CclError::InvalidUsage(format!("gather concat: {e}")))?;
+        return Ok(Some(cat));
+    }
+
+    let mut mine = Vec::with_capacity(crate::tensor::HEADER_LEN + t.byte_len());
+    write_tensor(&mut mine, &t)
+        .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
+    let sends = n - pos; // own contribution + everything upstream of us
+    let mut carry = mine;
+    for s in 0..sends {
+        core.send_bytes(prev, tag(s), &[&carry])?;
+        let spent = std::mem::take(&mut carry);
+        if s > 0 {
+            // Everything after our own serialization came off the wire;
+            // give it back to the inbound link's pool.
+            core.recycle(next, spent);
+        }
+        if s + 1 < sends {
+            carry = core.recv_bytes(next, tag(s))?;
+        }
+    }
+    Ok(None)
+}
+
+/// Ring scatter: the root streams its serialized parts into the ring —
+/// furthest destination first — and each rank peels off its own part
+/// and forwards the rest (forward-before-parse, so downstream hops
+/// overlap), replacing the flat star's `N−1` separate root streams with
+/// one pipelined neighbour stream per rank.
+///
+/// Step schedule mirrors [`ring_gather`] in reverse: the root's step-`s`
+/// send carries the part for ring position `N−1−s`; the rank at
+/// position `p` receives `N−p` messages, keeps the last (its own part),
+/// and forwards the rest under its own step counter.
+fn ring_scatter(
+    core: &WorldCore,
+    parts: Option<Vec<Tensor>>,
+    root: usize,
+    seq: u64,
+) -> CclResult<Tensor> {
+    let n = core.size;
+    let next = ring_next(core);
+    let prev = ring_prev(core);
+    let pos = (core.rank + n - root) % n;
+    let tag = |s: usize| make_chunk_tag(TagKind::Scatter, seq, s, 0);
+
+    if core.rank == root {
+        let mut parts = parts.unwrap(); // validated at submit
+        for s in 0..n - 1 {
+            let dest = (root + (n - 1 - s)) % n;
+            let hdr = encode_header(&parts[dest])
+                .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
+            core.send_bytes(next, tag(s), &[&hdr, parts[dest].bytes()])?;
+        }
+        // Take the root's part out of the vec — no tensor clone.
+        return Ok(parts.swap_remove(root));
+    }
+
+    let recvs = n - pos;
+    for s in 0..recvs {
+        let buf = core.recv_bytes(prev, tag(s))?;
+        if s + 1 < recvs {
+            // Not ours: forward first so downstream starts immediately.
+            core.send_bytes(next, tag(s), &[&buf])?;
+            core.recycle(prev, buf);
+        } else {
+            let part = read_tensor(&mut buf.as_slice()).map_err(|e| {
+                CclError::Transport(format!("bad scatter tensor from rank {prev}: {e}"))
+            })?;
+            core.recycle(prev, buf);
+            return Ok(part);
+        }
+    }
+    unreachable!("non-root ring position receives at least one part")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -740,6 +1116,19 @@ mod tests {
         let (lo, hi) = chunk_bounds(100, RING_CHUNK + 7, 1);
         assert_eq!(lo, 100 + RING_CHUNK);
         assert_eq!(hi, 100 + RING_CHUNK + 7);
+    }
+
+    #[test]
+    fn rank_slices_partition_exactly() {
+        for (elems, n) in [(10usize, 4usize), (7, 3), (3, 4), (0, 2), (100_003, 8)] {
+            let mut covered = 0usize;
+            for i in 0..n {
+                let (off, len) = rank_slice_bytes(elems, n, i);
+                assert_eq!(off, covered, "slices must be contiguous");
+                covered += len;
+            }
+            assert_eq!(covered, elems * 4, "slices must cover the tensor");
+        }
     }
 
     #[test]

@@ -23,10 +23,12 @@
 //! worlds proceed concurrently — which is what lets MultiWorld's
 //! communicator poll many worlds without deadlock.
 //!
-//! Bandwidth-bound collectives select between a flat star and pipelined
-//! ring algorithms per op (see [`collectives`] and
-//! [`crate::config::CollAlgo`]); the receive path reassembles into
-//! pooled, size-hinted buffers (see [`transport::inbox::Inbox`]).
+//! All six collectives select between a flat star and pipelined ring
+//! algorithms per op, governed by a per-op threshold table with a
+//! root-negotiated prologue where only the root can size the payload
+//! (see [`collectives`] and [`crate::config::CollPolicy`]); the receive
+//! path reassembles into pooled, size-hinted buffers (see
+//! [`transport::inbox::Inbox`]).
 
 pub mod collectives;
 pub mod error;
@@ -36,7 +38,7 @@ pub mod wire;
 pub mod work;
 pub mod world;
 
-pub use crate::config::CollAlgo;
+pub use crate::config::{AlgoDecision, CollAlgo, CollOp, CollPolicy, RingThreshold};
 pub use error::{CclError, CclResult};
 pub use rendezvous::{Rendezvous, TransportKind, WorldOptions};
 pub use work::{Work, WorkState};

@@ -14,7 +14,7 @@ use super::transport::shm::{shm_dir, ShmLink, DEFAULT_RING_BYTES};
 use super::transport::tcp::TcpLink;
 use super::transport::Link;
 use super::world::World;
-use crate::config::CollAlgo;
+use crate::config::{CollAlgo, CollPolicy};
 use crate::store::{StoreClient, StoreServer};
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -64,10 +64,15 @@ pub struct WorldOptions {
     /// Per-collective blocking-wait deadline; `None` waits until the
     /// link errors or is aborted (NCCL default behaviour).
     pub op_timeout: Option<Duration>,
-    /// Collective algorithm policy. Must be identical on every rank
-    /// (ring and flat use different wire tags). Defaults to
-    /// [`CollAlgo::Auto`], overridable via `MW_COLL_ALGO`.
-    pub coll_algo: CollAlgo,
+    /// Collective algorithm policy (selector + per-op ring threshold
+    /// table). Must be identical on every rank: ring and flat use
+    /// different wire tags, and both the selector and the `min_world`
+    /// rows are evaluated locally on each rank — a divergent row makes
+    /// ranks disagree on whether a prologue is even sent and the op
+    /// stalls until `op_timeout`. (Only the `min_bytes` row of a
+    /// negotiated op is root-decided.) Defaults to
+    /// [`CollPolicy::from_env`] (`MW_COLL_ALGO`, `MW_RING_MIN_*`).
+    pub coll_policy: CollPolicy,
 }
 
 impl Default for WorldOptions {
@@ -76,7 +81,7 @@ impl Default for WorldOptions {
             transport: TransportKind::Shm { ring_bytes: DEFAULT_RING_BYTES },
             init_timeout: Duration::from_secs(30),
             op_timeout: None,
-            coll_algo: CollAlgo::from_env(),
+            coll_policy: CollPolicy::from_env(),
         }
     }
 }
@@ -99,9 +104,16 @@ impl WorldOptions {
         }
     }
 
-    /// Select the collective algorithm policy for this world.
+    /// Force the collective algorithm selector, keeping the threshold
+    /// table (env-derived) as-is.
     pub fn with_coll_algo(mut self, algo: CollAlgo) -> Self {
-        self.coll_algo = algo;
+        self.coll_policy.algo = algo;
+        self
+    }
+
+    /// Replace the whole per-op collective policy.
+    pub fn with_coll_policy(mut self, policy: CollPolicy) -> Self {
+        self.coll_policy = policy;
         self
     }
 
@@ -174,7 +186,7 @@ impl World {
                 Some(store),
                 server,
                 opts.op_timeout,
-                opts.coll_algo,
+                opts.coll_policy,
             ));
         }
 
@@ -205,7 +217,7 @@ impl World {
             Some(store),
             server,
             opts.op_timeout,
-            opts.coll_algo,
+            opts.coll_policy,
         ))
     }
 }

@@ -14,6 +14,7 @@
 //! same few buffers instead of exercising the allocator per message.
 
 use crate::mwccl::error::{CclError, CclResult};
+use crate::mwccl::wire::{FLAG_LAST, FLAG_PROLOGUE};
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -71,6 +72,10 @@ struct State {
     ready: HashMap<u64, VecDeque<Vec<u8>>>,
     /// Partially reassembled message per tag.
     partial: HashMap<u64, Vec<u8>>,
+    /// Complete *prologue* (control) messages, FIFO per tag — a lane
+    /// separate from `ready` so a negotiation byte and the data message
+    /// that follows can share one wire tag without racing each other.
+    prologue: HashMap<u64, VecDeque<Vec<u8>>>,
     /// Terminal error (RemoteError from TCP reader, or Aborted).
     error: Option<CclError>,
 }
@@ -94,20 +99,29 @@ impl Inbox {
     /// make us allocate gigabytes before a single payload byte lands.
     const MAX_SIZE_HINT: usize = 64 << 20;
 
-    /// Append one frame; completes the message when `last` is set.
-    /// `msg_len` is the total payload length of the whole message (from
-    /// the frame header) — used to preallocate the reassembly buffer
-    /// exactly once, on the first frame (clamped to
-    /// [`Self::MAX_SIZE_HINT`]).
-    pub fn push_frame(&self, tag: u64, payload: &[u8], msg_len: usize, last: bool) {
-        let hint = msg_len.min(Self::MAX_SIZE_HINT);
+    /// Append one frame; completes the message when the `LAST` flag is
+    /// set. `msg_len` is the total payload length of the whole message
+    /// (from the frame header) — used to preallocate the reassembly
+    /// buffer exactly once, on the first frame (clamped to
+    /// [`Self::MAX_SIZE_HINT`]). Frames flagged `PROLOGUE` are
+    /// single-frame control messages dispatched to their own lane (see
+    /// [`Inbox::recv_prologue`]).
+    pub fn push_frame(&self, tag: u64, payload: &[u8], msg_len: usize, flags: u8) {
         let mut st = self.state.lock().unwrap();
+        if flags & FLAG_PROLOGUE != 0 {
+            // Prologues are complete by construction (senders emit them
+            // as one LAST-flagged frame); no reassembly state needed.
+            st.prologue.entry(tag).or_default().push_back(payload.to_vec());
+            self.cv.notify_all();
+            return;
+        }
+        let hint = msg_len.min(Self::MAX_SIZE_HINT);
         let buf = st
             .partial
             .entry(tag)
             .or_insert_with(|| self.pool.take(hint));
         buf.extend_from_slice(payload);
-        if last {
+        if flags & FLAG_LAST != 0 {
             let msg = st.partial.remove(&tag).unwrap_or_default();
             st.ready.entry(tag).or_default().push_back(msg);
             self.cv.notify_all();
@@ -175,6 +189,39 @@ impl Inbox {
         }
     }
 
+    /// Blocking receive of one *prologue* (control) message with `tag`.
+    /// Prologues never mix with data messages of the same tag — each
+    /// lane has its own FIFO — so a root can send `algo byte` then
+    /// `payload` under one tag and the receiver reads them in type
+    /// order, not arrival order.
+    pub fn recv_prologue(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(q) = st.prologue.get_mut(&tag) {
+                if let Some(msg) = q.pop_front() {
+                    if q.is_empty() {
+                        st.prologue.remove(&tag);
+                    }
+                    return Ok(msg);
+                }
+            }
+            if let Some(e) = &st.error {
+                return Err(e.clone());
+            }
+            st = match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(CclError::Timeout(format!("recv_prologue tag {tag:#x}")));
+                    }
+                    self.cv.wait_timeout(st, d - now).unwrap().0
+                }
+                None => self.cv.wait(st).unwrap(),
+            };
+        }
+    }
+
     /// Non-blocking poll.
     pub fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>> {
         let mut st = self.state.lock().unwrap();
@@ -212,26 +259,26 @@ mod tests {
     #[test]
     fn single_frame_message() {
         let ib = Inbox::new();
-        ib.push_frame(7, b"hello", 5, true);
+        ib.push_frame(7, b"hello", 5, FLAG_LAST);
         assert_eq!(ib.recv(7, None).unwrap(), b"hello");
     }
 
     #[test]
     fn multi_frame_reassembly() {
         let ib = Inbox::new();
-        ib.push_frame(1, b"ab", 6, false);
-        ib.push_frame(1, b"cd", 6, false);
+        ib.push_frame(1, b"ab", 6, 0);
+        ib.push_frame(1, b"cd", 6, 0);
         assert_eq!(ib.try_recv(1).unwrap(), None, "incomplete stays hidden");
-        ib.push_frame(1, b"ef", 6, true);
+        ib.push_frame(1, b"ef", 6, FLAG_LAST);
         assert_eq!(ib.recv(1, None).unwrap(), b"abcdef");
     }
 
     #[test]
     fn size_hint_preallocates_once() {
         let ib = Inbox::new();
-        ib.push_frame(4, &[0u8; 100], 300, false);
-        ib.push_frame(4, &[1u8; 100], 300, false);
-        ib.push_frame(4, &[2u8; 100], 300, true);
+        ib.push_frame(4, &[0u8; 100], 300, 0);
+        ib.push_frame(4, &[1u8; 100], 300, 0);
+        ib.push_frame(4, &[2u8; 100], 300, FLAG_LAST);
         let msg = ib.recv(4, None).unwrap();
         assert_eq!(msg.len(), 300);
         assert!(
@@ -243,12 +290,12 @@ mod tests {
     #[test]
     fn recycled_buffers_are_reused() {
         let ib = Inbox::new();
-        ib.push_frame(1, &[7u8; 64], 64, true);
+        ib.push_frame(1, &[7u8; 64], 64, FLAG_LAST);
         let msg = ib.recv(1, None).unwrap();
         let cap = msg.capacity();
         ib.recycle(msg);
         assert_eq!(ib.pool_len(), 1);
-        ib.push_frame(1, &[8u8; 32], 32, true);
+        ib.push_frame(1, &[8u8; 32], 32, FLAG_LAST);
         let again = ib.recv(1, None).unwrap();
         assert_eq!(again, vec![8u8; 32]);
         assert_eq!(ib.pool_len(), 0, "pooled buffer was taken");
@@ -258,9 +305,9 @@ mod tests {
     #[test]
     fn tags_are_independent_fifo() {
         let ib = Inbox::new();
-        ib.push_frame(1, b"x1", 2, true);
-        ib.push_frame(2, b"y", 1, true);
-        ib.push_frame(1, b"x2", 2, true);
+        ib.push_frame(1, b"x1", 2, FLAG_LAST);
+        ib.push_frame(2, b"y", 1, FLAG_LAST);
+        ib.push_frame(1, b"x2", 2, FLAG_LAST);
         assert_eq!(ib.recv(2, None).unwrap(), b"y");
         assert_eq!(ib.recv(1, None).unwrap(), b"x1");
         assert_eq!(ib.recv(1, None).unwrap(), b"x2");
@@ -283,7 +330,7 @@ mod tests {
         let t = std::thread::spawn(move || ib2.recv(11, None));
         std::thread::sleep(Duration::from_millis(20));
         let t0 = Instant::now();
-        ib.push_frame(11, b"wake", 4, true);
+        ib.push_frame(11, b"wake", 4, FLAG_LAST);
         let got = t.join().unwrap().unwrap();
         assert_eq!(got, b"wake");
         assert!(
@@ -314,12 +361,47 @@ mod tests {
     #[test]
     fn messages_delivered_before_error_are_not_lost() {
         let ib = Inbox::new();
-        ib.push_frame(3, b"data", 4, true);
+        ib.push_frame(3, b"data", 4, FLAG_LAST);
         ib.fail(CclError::Aborted("shutdown".into()));
         // Already-complete message still deliverable…
         assert_eq!(ib.recv(3, None).unwrap(), b"data");
         // …then the error surfaces.
         assert!(ib.recv(3, Some(Duration::from_millis(10))).is_err());
+    }
+
+    #[test]
+    fn prologue_lane_is_separate_from_data() {
+        let ib = Inbox::new();
+        // Data message arrives FIRST, then the prologue, same tag: the
+        // prologue lane must still deliver the control byte, and the
+        // data recv must still see the data, regardless of order.
+        ib.push_frame(9, b"payload", 7, FLAG_LAST);
+        ib.push_frame(9, &[1u8], 1, FLAG_LAST | FLAG_PROLOGUE);
+        assert_eq!(ib.recv_prologue(9, None).unwrap(), vec![1u8]);
+        assert_eq!(ib.recv(9, None).unwrap(), b"payload");
+        assert_eq!(ib.backlog(), 0);
+    }
+
+    #[test]
+    fn prologue_does_not_disturb_partial_reassembly() {
+        let ib = Inbox::new();
+        ib.push_frame(3, b"ab", 4, 0); // partial data under tag 3
+        ib.push_frame(3, &[0u8], 1, FLAG_LAST | FLAG_PROLOGUE);
+        ib.push_frame(3, b"cd", 4, FLAG_LAST);
+        assert_eq!(ib.recv_prologue(3, None).unwrap(), vec![0u8]);
+        assert_eq!(ib.recv(3, None).unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn prologue_recv_times_out_and_sees_errors() {
+        let ib = Inbox::new();
+        let err = ib
+            .recv_prologue(5, Some(Duration::from_millis(30)))
+            .unwrap_err();
+        assert!(matches!(err, CclError::Timeout(_)));
+        ib.fail(CclError::Aborted("shutdown".into()));
+        let err = ib.recv_prologue(5, None).unwrap_err();
+        assert!(matches!(err, CclError::Aborted(_)));
     }
 
     #[test]
@@ -330,7 +412,7 @@ mod tests {
                 let ib = ib.clone();
                 std::thread::spawn(move || {
                     for i in 0..50u32 {
-                        ib.push_frame(tag, &i.to_le_bytes(), 4, true);
+                        ib.push_frame(tag, &i.to_le_bytes(), 4, FLAG_LAST);
                     }
                 })
             })

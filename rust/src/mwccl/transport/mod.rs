@@ -30,6 +30,18 @@ pub trait Link: Send + Sync {
     /// Blocks only on transport backpressure.
     fn send(&self, tag: u64, parts: &[&[u8]]) -> CclResult<()>;
 
+    /// Send a small control *prologue* under `tag`: one wire frame
+    /// flagged `PROLOGUE`, delivered on the receiver's prologue lane so
+    /// it can never be confused with a data message of the same tag
+    /// (collectives negotiate e.g. the root's flat-vs-ring algorithm
+    /// byte this way before the payload moves). `payload` must fit one
+    /// frame.
+    fn send_prologue(&self, tag: u64, payload: &[u8]) -> CclResult<()>;
+
+    /// Block until a prologue with `tag` arrives (see
+    /// [`Link::send_prologue`]).
+    fn recv_prologue(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>>;
+
     /// Block until a message with `tag` arrives; `timeout=None` waits
     /// until the link errors or is aborted.
     fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>>;

@@ -17,7 +17,9 @@
 use super::inbox::Inbox;
 use super::Link;
 use crate::mwccl::error::{CclError, CclResult};
-use crate::mwccl::wire::{decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FRAME_HDR, SEG_MAX};
+use crate::mwccl::wire::{
+    decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FLAG_PROLOGUE, FRAME_HDR, SEG_MAX,
+};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -325,7 +327,7 @@ fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>) {
         }
         rx.read_at(tail + FRAME_HDR as u64, &mut payload[..len]);
         rx.tail().store(tail + need as u64, Ordering::Release);
-        inbox.push_frame(tag, &payload[..len], msg_len as usize, flags & FLAG_LAST != 0);
+        inbox.push_frame(tag, &payload[..len], msg_len as usize, flags);
     }
 }
 
@@ -397,6 +399,54 @@ impl Link for ShmLink {
                 return Ok(());
             }
         }
+    }
+
+    fn send_prologue(&self, tag: u64, payload: &[u8]) -> CclResult<()> {
+        if self.aborted.load(Ordering::Acquire) {
+            return Err(CclError::Aborted("shm link aborted".into()));
+        }
+        let _guard = self.send_lock.lock().unwrap();
+        // One frame only: it must fit the ring alongside at least one
+        // other in-flight frame (same bound `send` applies per segment).
+        let max_seg = SEG_MAX
+            .min((self.tx.capacity.saturating_sub(2 * FRAME_HDR)) / 2)
+            .max(1024);
+        if payload.len() > max_seg {
+            return Err(CclError::InvalidUsage(format!(
+                "prologue of {} bytes exceeds one frame (max {max_seg})",
+                payload.len()
+            )));
+        }
+        let need = FRAME_HDR + payload.len();
+        let mut spins = 0u32;
+        while self.tx_free() < need {
+            if self.aborted.load(Ordering::Acquire) {
+                return Err(CclError::Aborted("shm link aborted".into()));
+            }
+            spins += 1;
+            if spins < 256 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        let head = self.tx.head().load(Ordering::Relaxed);
+        let mut hdr = [0u8; FRAME_HDR];
+        encode_frame_hdr(
+            &mut hdr,
+            tag,
+            payload.len() as u32,
+            payload.len() as u32,
+            FLAG_LAST | FLAG_PROLOGUE,
+        );
+        self.tx.write_at(head, &hdr);
+        self.tx.write_at(head + FRAME_HDR as u64, payload);
+        self.tx.head().store(head + need as u64, Ordering::Release);
+        Ok(())
+    }
+
+    fn recv_prologue(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        self.inbox.recv_prologue(tag, timeout)
     }
 
     fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
@@ -505,6 +555,18 @@ mod tests {
         sender.join().unwrap();
         let back = read_tensor(&mut got.as_slice()).unwrap();
         assert_eq!(back.checksum(), checksum);
+    }
+
+    #[test]
+    fn prologue_rides_its_own_lane() {
+        let (a, b) = link_pair("prologue", 64 * 1024);
+        a.send(6, &[b"data"]).unwrap();
+        a.send_prologue(6, &[1]).unwrap();
+        assert_eq!(
+            b.recv_prologue(6, Some(Duration::from_secs(2))).unwrap(),
+            vec![1]
+        );
+        assert_eq!(b.recv(6, Some(Duration::from_secs(2))).unwrap(), b"data");
     }
 
     #[test]

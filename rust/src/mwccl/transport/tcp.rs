@@ -9,7 +9,9 @@ use super::inbox::Inbox;
 use super::ratelimit::RateLimiter;
 use super::Link;
 use crate::mwccl::error::{CclError, CclResult};
-use crate::mwccl::wire::{decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FRAME_HDR, SEG_MAX};
+use crate::mwccl::wire::{
+    decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FLAG_PROLOGUE, FRAME_HDR, SEG_MAX,
+};
 use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -89,7 +91,7 @@ fn reader_loop(mut stream: TcpStream, inbox: Arc<Inbox>, peer: usize) {
             inbox.fail(CclError::RemoteError { peer, detail: e.to_string() });
             return;
         }
-        inbox.push_frame(tag, &payload[..len], msg_len as usize, flags & FLAG_LAST != 0);
+        inbox.push_frame(tag, &payload[..len], msg_len as usize, flags);
     }
 }
 
@@ -191,6 +193,33 @@ impl Link for TcpLink {
         Ok(())
     }
 
+    fn send_prologue(&self, tag: u64, payload: &[u8]) -> CclResult<()> {
+        self.check_aborted()?;
+        if payload.len() > SEG_MAX {
+            return Err(CclError::InvalidUsage(format!(
+                "prologue of {} bytes exceeds one frame",
+                payload.len()
+            )));
+        }
+        let mut w = self.writer.lock().unwrap();
+        if let Some(rl) = &self.limiter {
+            rl.acquire(payload.len() + FRAME_HDR);
+        }
+        let mut hdr = [0u8; FRAME_HDR];
+        encode_frame_hdr(
+            &mut hdr,
+            tag,
+            payload.len() as u32,
+            payload.len() as u32,
+            FLAG_LAST | FLAG_PROLOGUE,
+        );
+        write_all_vectored(&mut w, &[&hdr, payload], self.peer)
+    }
+
+    fn recv_prologue(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        self.inbox.recv_prologue(tag, timeout)
+    }
+
     fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
         self.inbox.recv(tag, timeout)
     }
@@ -266,6 +295,20 @@ mod tests {
         let got = b.recv(7, Some(Duration::from_secs(10))).unwrap();
         let back = read_tensor(&mut got.as_slice()).unwrap();
         assert_eq!(back.checksum(), t.checksum());
+    }
+
+    #[test]
+    fn prologue_rides_its_own_lane() {
+        let (a, b) = link_pair(None);
+        // Data first, prologue second, same tag: both must be readable
+        // from their own lanes in either order.
+        a.send(6, &[b"data"]).unwrap();
+        a.send_prologue(6, &[1]).unwrap();
+        assert_eq!(
+            b.recv_prologue(6, Some(Duration::from_secs(2))).unwrap(),
+            vec![1]
+        );
+        assert_eq!(b.recv(6, Some(Duration::from_secs(2))).unwrap(), b"data");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! ```text
 //! frame := tag:u64  seg_len:u32  msg_len:u32  flags:u8  payload[seg_len]
 //! flags bit0 = LAST segment of this message
+//! flags bit1 = PROLOGUE (control) frame — own inbox lane, single frame
 //! ```
 //!
 //! `msg_len` is the total payload length of the whole logical message;
@@ -28,6 +29,14 @@ pub const FRAME_HDR: usize = 17;
 
 /// Flag: final segment of the message.
 pub const FLAG_LAST: u8 = 1;
+
+/// Flag: control prologue frame. Prologue frames are single-frame
+/// messages (always sent with [`FLAG_LAST`] too) delivered on a lane of
+/// the inbox *separate* from data messages of the same tag, so a
+/// collective can negotiate (e.g. the root's flat-vs-ring algorithm
+/// byte for size-aware `Auto`) under its own wire tag without the
+/// verdict ever being confused with the payload that follows.
+pub const FLAG_PROLOGUE: u8 = 2;
 
 /// Encode a frame header into `out[0..FRAME_HDR]`.
 #[inline]

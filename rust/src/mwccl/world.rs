@@ -15,10 +15,10 @@
 use super::error::{CclError, CclResult};
 use super::transport::Link;
 use super::work::Work;
-use crate::config::CollAlgo;
+use crate::config::{CollOp, CollPolicy};
 use crate::tensor::{read_tensor, serialize::encode_header, Tensor};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -52,8 +52,13 @@ pub struct WorldCore {
     seq: AtomicU64,
     /// Default timeout applied to blocking waits inside collectives.
     pub op_timeout: Option<Duration>,
-    /// Collective algorithm policy (flat star / pipelined ring / auto).
-    pub coll_algo: CollAlgo,
+    /// Collective algorithm policy: flat star / pipelined ring / auto,
+    /// plus the per-op ring threshold table.
+    pub coll_policy: CollPolicy,
+    /// Last algorithm actually run per collective (0 = none yet,
+    /// 1 = flat, 2 = ring) — observability for tests, benches and the
+    /// CI quick-ablation step; negotiated `Auto` choices land here too.
+    algo_trace: [AtomicU8; 6],
     /// Point-to-point receives pending on the p2p poller thread.
     /// Unlike collectives (strictly ordered on the progress thread),
     /// `irecv`s from *different peers* complete concurrently — the
@@ -121,6 +126,31 @@ impl WorldCore {
         if let Ok(link) = self.link(peer) {
             link.recycle(buf);
         }
+    }
+
+    /// Send the root's one-byte flat-vs-ring verdict for a negotiated
+    /// `Auto` collective (prologue lane of `tag`; see `wire.rs`).
+    pub(crate) fn send_algo_prologue(&self, peer: usize, tag: u64, ring: bool) -> CclResult<()> {
+        self.link(peer)?.send_prologue(tag, &[u8::from(ring)])
+    }
+
+    /// Receive the root's flat-vs-ring verdict (counterpart of
+    /// [`WorldCore::send_algo_prologue`]).
+    pub(crate) fn recv_algo_prologue(&self, peer: usize, tag: u64) -> CclResult<bool> {
+        let b = self.link(peer)?.recv_prologue(tag, self.op_timeout)?;
+        match b.as_slice() {
+            [0] => Ok(false),
+            [1] => Ok(true),
+            other => Err(CclError::Transport(format!(
+                "bad algo prologue from rank {peer}: {other:?}"
+            ))),
+        }
+    }
+
+    /// Record the algorithm a collective actually ran (see
+    /// [`World::last_algo`]).
+    pub(crate) fn note_algo(&self, op: CollOp, ring: bool) {
+        self.algo_trace[op.index()].store(if ring { 2 } else { 1 }, Ordering::Relaxed);
     }
 
     /// Queue a p2p receive for the poller.
@@ -198,7 +228,7 @@ impl World {
         store: Option<Arc<crate::store::StoreClient>>,
         store_server: Option<Arc<crate::store::StoreServer>>,
         op_timeout: Option<Duration>,
-        coll_algo: CollAlgo,
+        coll_policy: CollPolicy,
     ) -> World {
         debug_assert_eq!(links.len(), size - 1, "need a link to every peer");
         let core = Arc::new(WorldCore {
@@ -210,7 +240,8 @@ impl World {
             broken_reason: Mutex::new(None),
             seq: AtomicU64::new(0),
             op_timeout,
-            coll_algo,
+            coll_policy,
+            algo_trace: Default::default(),
             pending_recvs: Mutex::new(Vec::new()),
         });
         let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();
@@ -256,6 +287,19 @@ impl World {
 
     pub fn is_broken(&self) -> bool {
         self.core.broken.load(Ordering::Acquire)
+    }
+
+    /// The algorithm the last completed `op` on this world actually ran
+    /// (`"flat"` / `"ring"`), `None` if the op never ran. For negotiated
+    /// `Auto` collectives this reflects the root's prologue verdict —
+    /// the observable proof that e.g. a sub-threshold broadcast kept the
+    /// flat fast path.
+    pub fn last_algo(&self, op: CollOp) -> Option<&'static str> {
+        match self.core.algo_trace[op.index()].load(Ordering::Relaxed) {
+            1 => Some("flat"),
+            2 => Some("ring"),
+            _ => None,
+        }
     }
 
     /// Why the world broke, once broken.

@@ -1,12 +1,14 @@
 //! Collectives at production-ish world sizes (4 and 8) over both
-//! transports, proving the ring algorithms agree bit-for-bit with the
-//! flat star the seed shipped with.
+//! transports, proving the ring algorithms — now for all six
+//! collectives — agree bit-for-bit with the flat star the seed shipped
+//! with, and that size-aware `Auto` resolves root-only-size ops through
+//! the prologue negotiation.
 //!
 //! Reduction test data is integer-valued f32, so sums are exact and
 //! order-independent — flat (rank-order fold at the root) and ring
 //! (neighbour-order fold) must then produce identical checksums.
 
-use multiworld::config::CollAlgo;
+use multiworld::config::{CollAlgo, CollOp};
 use multiworld::mwccl::{Rendezvous, ReduceOp, WorldOptions};
 use multiworld::tensor::Tensor;
 use std::time::Duration;
@@ -209,6 +211,222 @@ fn all_gather_flat_ring_equivalence_unequal_parts() {
     assert_eq!(results[0], results[1], "flat and ring all_gather differ");
 }
 
+/// Run `reduce(Sum)` to `root` over a fresh world and return the root's
+/// result checksum (asserting non-roots get `None`).
+fn reduce_checksum(
+    transport: &str,
+    size: usize,
+    elems: usize,
+    algo: CollAlgo,
+    root: usize,
+) -> u64 {
+    let worlds =
+        Rendezvous::single_process(&uniq("rd"), size, opts(transport, algo)).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let t = int_tensor(elems, w.rank());
+            std::thread::spawn(move || (w.rank(), w.reduce(t, root, ReduceOp::Sum).unwrap()))
+        })
+        .collect();
+    let mut cs = None;
+    for h in handles {
+        let (rank, res) = h.join().unwrap();
+        if rank == root {
+            cs = Some(res.expect("root must get the reduction").checksum());
+        } else {
+            assert!(res.is_none(), "non-root rank {rank} must get None");
+        }
+    }
+    cs.unwrap()
+}
+
+#[test]
+fn reduce_flat_ring_equivalence_sizes_4_and_8() {
+    // Non-zero root exercises the ring's wrapped slice hand-off.
+    for transport in ["shm", "tcp"] {
+        for size in [4usize, 8] {
+            let elems = 100_000; // 400 KB — multi-chunk per ring slice
+            let want = expected_sum(elems, size).checksum();
+            let flat = reduce_checksum(transport, size, elems, CollAlgo::Flat, 2);
+            let ring = reduce_checksum(transport, size, elems, CollAlgo::Ring, 2);
+            assert_eq!(flat, want, "{transport} size={size}: flat != reference");
+            assert_eq!(ring, want, "{transport} size={size}: ring != reference");
+        }
+    }
+}
+
+#[test]
+fn ring_reduce_odd_sizes_and_tiny_tensors() {
+    // Non-divisible element counts (uneven ring slices) and tensors
+    // smaller than the world (empty slices on some ranks).
+    for elems in [100_003usize, 7, 3, 1] {
+        let want = expected_sum(elems, 4).checksum();
+        let ring = reduce_checksum("shm", 4, elems, CollAlgo::Ring, 1);
+        assert_eq!(ring, want, "elems={elems}");
+    }
+}
+
+#[test]
+fn ring_reduce_avg_divides_once() {
+    // Avg must scale exactly once (each owner scales its slice before
+    // the hand-off; the root must not rescale).
+    let size = 4;
+    let elems = 10_000;
+    let worlds =
+        Rendezvous::single_process(&uniq("rdavg"), size, opts("shm", CollAlgo::Ring)).unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let t = int_tensor(elems, w.rank());
+            std::thread::spawn(move || (w.rank(), w.reduce(t, 0, ReduceOp::Avg).unwrap()))
+        })
+        .collect();
+    let mut expect = expected_sum(elems, size).as_f32().to_vec();
+    for a in expect.iter_mut() {
+        *a /= size as f32; // size 4: exact for integer sums
+    }
+    for h in handles {
+        let (rank, res) = h.join().unwrap();
+        if rank == 0 {
+            assert_eq!(res.unwrap().as_f32(), expect.as_slice());
+        }
+    }
+}
+
+#[test]
+fn gather_flat_ring_equivalence_unequal_parts() {
+    // Per-rank contributions of different axis-0 lengths must concat in
+    // rank order identically under both algorithms, from a non-zero
+    // root, at both tested world sizes over both transports.
+    for transport in ["shm", "tcp"] {
+        for size in [4usize, 8] {
+            let mut results = Vec::new();
+            for algo in [CollAlgo::Flat, CollAlgo::Ring] {
+                let worlds =
+                    Rendezvous::single_process(&uniq("ga"), size, opts(transport, algo))
+                        .unwrap();
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .map(|w| {
+                        let rows = w.rank() + 1;
+                        let vals: Vec<f32> = (0..rows * 3)
+                            .map(|i| (w.rank() * 100 + i) as f32)
+                            .collect();
+                        let t = Tensor::from_f32(&[rows, 3], &vals);
+                        std::thread::spawn(move || (w.rank(), w.gather(t, 1).unwrap()))
+                    })
+                    .collect();
+                for h in handles {
+                    let (rank, res) = h.join().unwrap();
+                    if rank == 1 {
+                        let cat = res.expect("root must get the concatenation");
+                        let total_rows: usize = (1..=size).sum();
+                        assert_eq!(cat.shape(), &[total_rows, 3], "{transport} {algo:?}");
+                        results.push(cat.checksum());
+                    } else {
+                        assert!(res.is_none());
+                    }
+                }
+            }
+            assert_eq!(
+                results[0], results[1],
+                "{transport} size={size}: flat and ring gather differ"
+            );
+        }
+    }
+}
+
+#[test]
+fn scatter_flat_ring_equivalence_sizes_4_and_8() {
+    // Parts of differing sizes, non-zero root: every rank must receive
+    // exactly its part under both algorithms.
+    for transport in ["shm", "tcp"] {
+        for size in [4usize, 8] {
+            for algo in [CollAlgo::Flat, CollAlgo::Ring] {
+                let root = 1;
+                let part_elems = |i: usize| 80_000 + 5_000 * i; // multi-frame, uneven
+                let worlds =
+                    Rendezvous::single_process(&uniq("sc8"), size, opts(transport, algo))
+                        .unwrap();
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .map(|w| {
+                        let parts = if w.rank() == root {
+                            Some(
+                                (0..size)
+                                    .map(|i| int_tensor(part_elems(i), i))
+                                    .collect::<Vec<_>>(),
+                            )
+                        } else {
+                            None
+                        };
+                        std::thread::spawn(move || (w.rank(), w.scatter(parts, root).unwrap()))
+                    })
+                    .collect();
+                for h in handles {
+                    let (rank, t) = h.join().unwrap();
+                    assert_eq!(
+                        t.checksum(),
+                        int_tensor(part_elems(rank), rank).checksum(),
+                        "{transport} size={size} {algo:?} rank={rank}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_prologue_keeps_small_root_sized_ops_flat() {
+    // World 4 is ring-eligible under Auto, but the payload size is only
+    // known at the root for broadcast/all_gather — the root's prologue
+    // byte must keep sub-threshold ops on the flat fast path and switch
+    // outsized ones to the ring, consistently on every rank.
+    let size = 4;
+    for transport in ["shm", "tcp"] {
+        let worlds = Rendezvous::single_process(
+            &uniq("autoplg"),
+            size,
+            opts(transport, CollAlgo::Auto),
+        )
+        .unwrap();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                std::thread::spawn(move || {
+                    let t = if w.rank() == 1 { Some(int_tensor(256, 1)) } else { None };
+                    let small = w.broadcast(t, 1).unwrap();
+                    assert_eq!(small.checksum(), int_tensor(256, 1).checksum());
+                    let small_pick = w.last_algo(CollOp::Broadcast).unwrap();
+                    w.all_gather(int_tensor(64, w.rank())).unwrap();
+                    let ag_pick = w.last_algo(CollOp::AllGather).unwrap();
+                    let t = if w.rank() == 1 {
+                        Some(int_tensor(1 << 20, 1)) // 4 MB ≥ RING_MIN_BYTES
+                    } else {
+                        None
+                    };
+                    w.broadcast(t, 1).unwrap();
+                    let big_pick = w.last_algo(CollOp::Broadcast).unwrap();
+                    (small_pick, ag_pick, big_pick)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (small_pick, ag_pick, big_pick) = h.join().unwrap();
+            assert_eq!(
+                small_pick, "flat",
+                "{transport}: sub-threshold broadcast must stay flat"
+            );
+            assert_eq!(
+                ag_pick, "flat",
+                "{transport}: sub-threshold all_gather must stay flat"
+            );
+            assert_eq!(big_pick, "ring", "{transport}: 4 MB broadcast must ring");
+        }
+    }
+}
+
 #[test]
 fn reduce_arrival_order_folds_stragglers() {
     // Peers contribute with staggered delays; the root folds whichever
@@ -272,9 +490,9 @@ fn scatter_size_4_distributes_without_root_clone() {
 
 #[test]
 fn mixed_async_ops_in_flight_ring() {
-    // Issue broadcast + all_reduce + all_gather back-to-back (all three
-    // in flight) before waiting on any — submission order is the CCL
-    // contract; the ring tags must never cross-match between ops.
+    // Issue all six collectives back-to-back (all in flight) before
+    // waiting on any — submission order is the CCL contract; the ring
+    // tags must never cross-match between ops.
     for transport in ["shm", "tcp"] {
         let size = 4;
         let elems = 20_000;
@@ -287,28 +505,61 @@ fn mixed_async_ops_in_flight_ring() {
         let src = int_tensor(elems, 99);
         let bc_want = src.checksum();
         let ar_want = expected_sum(elems, size).checksum();
+        let rd_want = ar_want;
         let handles: Vec<_> = worlds
             .into_iter()
             .map(|w| {
                 let bct = if w.rank() == 0 { Some(src.clone()) } else { None };
                 let art = int_tensor(elems, w.rank());
                 let agt = Tensor::from_f32(&[1], &[w.rank() as f32]);
+                let rdt = int_tensor(elems, w.rank());
+                let gat = Tensor::from_f32(&[1], &[10.0 + w.rank() as f32]);
+                let sct = if w.rank() == 3 {
+                    Some(
+                        (0..size)
+                            .map(|i| Tensor::from_f32(&[1], &[20.0 + i as f32]))
+                            .collect::<Vec<_>>(),
+                    )
+                } else {
+                    None
+                };
                 std::thread::spawn(move || {
                     let bc = w.ibroadcast(bct, 0);
                     let ar = w.iall_reduce(art, ReduceOp::Sum);
                     let ag = w.iall_gather(agt);
+                    let rd = w.ireduce(rdt, 1, ReduceOp::Sum);
+                    let ga = w.igather(gat, 2);
+                    let sc = w.iscatter(sct, 3);
                     let bc = bc.wait().unwrap().unwrap();
                     let ar = ar.wait().unwrap().unwrap();
                     let ag = ag.wait().unwrap().unwrap();
-                    (bc.checksum(), ar.checksum(), ag)
+                    let rd = rd.wait().unwrap();
+                    let ga = ga.wait().unwrap();
+                    let sc = sc.wait().unwrap().unwrap();
+                    (w.rank(), bc.checksum(), ar.checksum(), ag, rd, ga, sc)
                 })
             })
             .collect();
         for h in handles {
-            let (bc, ar, ag) = h.join().unwrap();
+            let (rank, bc, ar, ag, rd, ga, sc) = h.join().unwrap();
             assert_eq!(bc, bc_want, "{transport} broadcast");
             assert_eq!(ar, ar_want, "{transport} all_reduce");
             assert_eq!(ag.as_f32(), &[0.0, 1.0, 2.0, 3.0], "{transport} all_gather");
+            if rank == 1 {
+                assert_eq!(rd.unwrap().checksum(), rd_want, "{transport} reduce");
+            } else {
+                assert!(rd.is_none(), "{transport} reduce non-root");
+            }
+            if rank == 2 {
+                assert_eq!(
+                    ga.unwrap().as_f32(),
+                    &[10.0, 11.0, 12.0, 13.0],
+                    "{transport} gather"
+                );
+            } else {
+                assert!(ga.is_none(), "{transport} gather non-root");
+            }
+            assert_eq!(sc.as_f32(), &[20.0 + rank as f32], "{transport} scatter");
         }
     }
 }

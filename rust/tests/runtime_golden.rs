@@ -8,8 +8,8 @@ use multiworld::runtime::{artifacts_dir, ModelRuntime};
 use multiworld::tensor::{DType, Tensor};
 
 fn runtime_or_skip() -> Option<ModelRuntime> {
-    if cfg!(not(feature = "pjrt")) {
-        eprintln!("SKIP: built without the 'pjrt' feature (PJRT engine stubbed)");
+    if cfg!(not(all(feature = "pjrt", feature = "xla-backend"))) {
+        eprintln!("SKIP: PJRT engine stubbed (needs --features pjrt,xla-backend)");
         return None;
     }
     let dir = artifacts_dir();

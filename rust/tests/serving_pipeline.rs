@@ -28,8 +28,8 @@ fn opts_tcp() -> WorldOptions {
 }
 
 fn have_artifacts() -> bool {
-    if cfg!(not(feature = "pjrt")) {
-        eprintln!("SKIP: built without the 'pjrt' feature (PJRT engine stubbed)");
+    if cfg!(not(all(feature = "pjrt", feature = "xla-backend"))) {
+        eprintln!("SKIP: PJRT engine stubbed (needs --features pjrt,xla-backend)");
         return false;
     }
     let ok = artifacts_dir().join("model.json").exists();

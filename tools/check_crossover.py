@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Compare the measured flat->ring crossover against the configured
+policy defaults.
+
+Reads the CSV emitted by `cargo bench --bench ablation_collectives`
+(columns: op,world,bytes,flat_ms,ring_ms,speedup,auto) and checks, per
+collective:
+
+  * the byte knee — the smallest payload where the ring beats the flat
+    star at ring-eligible world sizes — against RING_MIN_BYTES;
+  * the world knee — whether the ring already wins below RING_MIN_WORLD,
+    or still loses at it, on the largest measured payload.
+
+Disagreements are *soft* failures: the script prints GitHub Actions
+`::warning::` annotations (so the knee drift is visible on every push
+without blocking merges — CI hardware is noisy) and always exits 0.
+Tune the configured side via --min-world/--min-bytes, which should
+mirror `CollAlgo::RING_MIN_WORLD`/`RING_MIN_BYTES` (or the MW_RING_MIN_*
+env overrides the bench ran under).
+"""
+
+import argparse
+import csv
+import sys
+from collections import defaultdict
+
+# Ring must beat flat by this factor before we call it a win (CI noise).
+WIN = 1.10
+
+
+def warn(msg: str) -> None:
+    print(f"::warning title=collective crossover::{msg}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("csv", help="path to ablation_collectives.csv")
+    ap.add_argument("--min-world", type=int, default=4,
+                    help="configured RING_MIN_WORLD (default 4)")
+    ap.add_argument("--min-bytes", type=int, default=1 << 20,
+                    help="configured RING_MIN_BYTES (default 1 MiB)")
+    ap.add_argument("--tolerance", type=float, default=4.0,
+                    help="acceptable knee drift factor (default 4x)")
+    args = ap.parse_args()
+
+    # rows[op][world] = sorted list of (bytes, flat_ms, ring_ms)
+    rows = defaultdict(lambda: defaultdict(list))
+    with open(args.csv, newline="") as f:
+        for r in csv.DictReader(f):
+            rows[r["op"]][int(r["world"])].append(
+                (int(r["bytes"]), float(r["flat_ms"]), float(r["ring_ms"]))
+            )
+    if not rows:
+        warn(f"{args.csv} contained no measurements")
+        return 0
+
+    warnings = 0
+    for op, by_world in sorted(rows.items()):
+        for world, cells in sorted(by_world.items()):
+            cells.sort()
+            wins = [b for b, flat, ring in cells if flat > ring * WIN]
+            knee = wins[0] if wins else None
+            if world >= args.min_world:
+                if knee is None:
+                    biggest = cells[-1][0]
+                    if biggest >= args.min_bytes:
+                        warnings += 1
+                        warn(
+                            f"{op} world={world}: ring never beat flat up to "
+                            f"{biggest} B, but RING_MIN_BYTES={args.min_bytes} "
+                            f"would ring there — consider raising the "
+                            f"{op.upper()} row of the policy table"
+                        )
+                elif knee > args.min_bytes * args.tolerance:
+                    warnings += 1
+                    warn(
+                        f"{op} world={world}: measured knee {knee} B is "
+                        f">{args.tolerance:g}x the configured "
+                        f"RING_MIN_BYTES={args.min_bytes} — Auto rings too early"
+                    )
+                elif knee * args.tolerance < args.min_bytes:
+                    warnings += 1
+                    warn(
+                        f"{op} world={world}: measured knee {knee} B is "
+                        f"<1/{args.tolerance:g} of the configured "
+                        f"RING_MIN_BYTES={args.min_bytes} — Auto rings too late"
+                    )
+            else:
+                # Below the world threshold Auto always goes flat; flag it
+                # if the ring decisively wins big payloads here anyway.
+                big = [c for c in cells if c[0] >= args.min_bytes]
+                if big and all(flat > ring * WIN for _, flat, ring in big):
+                    warnings += 1
+                    warn(
+                        f"{op} world={world}: ring already wins every "
+                        f">= {args.min_bytes} B cell below "
+                        f"RING_MIN_WORLD={args.min_world} — consider lowering "
+                        f"the {op.upper()} row of the policy table"
+                    )
+
+    print(
+        f"crossover check: {sum(len(w) for w in rows.values())} (op, world) "
+        f"series, {warnings} disagreement(s) with "
+        f"RING_MIN_WORLD={args.min_world} RING_MIN_BYTES={args.min_bytes}"
+    )
+    # Fail-soft by design: the knee depends on CI hardware of the day.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
