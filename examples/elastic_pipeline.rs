@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
 
     // Phase 2: SIGKILL the replicated middle stage's second replica.
     println!("SIGKILLing worker s1r1…");
-    cluster.kill(NodeId::Worker { stage: 1, replica: 1 })?;
+    cluster.kill(NodeId::worker(1, 1))?;
     let r2 = leader.serve(gen.take(64), Some(200.0), Duration::from_secs(120));
     println!(
         "[degraded] {}/{} answered, p50 {:.1} ms, retries {} (traffic rerouted through s1r0)",

@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
         std::thread::scope(|s| {
             let h = s.spawn(move || {
                 std::thread::sleep(Duration::from_millis(300));
-                let killed = c.kill(NodeId::Worker { stage: 1, replica: 1 });
+                let killed = c.kill(NodeId::worker(1, 1));
                 println!("  [failure injector] killed s1r1: {killed}");
             });
             let r = c

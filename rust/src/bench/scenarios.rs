@@ -7,8 +7,13 @@
 //! throughput in bytes/sec, timed from first to last tensor.
 
 use crate::baselines::multiproc::MpEndpoint;
+use crate::config::ServingConfig;
+use crate::launch::InProcCluster;
 use crate::multiworld::{PollStrategy, StatePolicy, WatchdogConfig, WorldManager};
 use crate::mwccl::{Rendezvous, WorldOptions};
+use crate::serving::controller::ScalingPolicy;
+use crate::serving::topology::Topology;
+use crate::serving::{LeaderReport, RequestGen};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
 use crate::util::time::Clock;
@@ -193,6 +198,52 @@ pub fn mp_p2p_throughput(elems: usize, msgs: usize, transport: &str) -> anyhow::
     Ok(bytes / dt)
 }
 
+/// TP×replica serving scenario: a forward-only pipeline of `stages`
+/// stages, each with `replicas` replicas of `tp` shards, serving
+/// `n_requests` end to end through the leader (dynamic batching,
+/// least-inflight routing, and — for `tp > 1` — the intra-replica
+/// broadcast/all_reduce inner loop on every batch). Returns the
+/// leader's report; `report.completed == n_requests` on success.
+///
+/// `base_port` seeds the store ports (the caller spaces ranges like the
+/// integration tests do). Forward-only workers echo activations, so
+/// the measurement isolates transport + collective + elasticity
+/// machinery from PJRT compute.
+pub fn tp_pipeline_serve(
+    stages: usize,
+    replicas: usize,
+    tp: usize,
+    n_requests: usize,
+    opts: WorldOptions,
+    base_port: u16,
+) -> anyhow::Result<LeaderReport> {
+    const BATCH: usize = 4;
+    const SEQ_LEN: usize = 8;
+    const VOCAB: usize = 32;
+    let topo = Topology::pipeline_tp(
+        &uniq("tpbench"),
+        &vec![replicas; stages],
+        &vec![tp; stages],
+        base_port,
+    );
+    let cfg = ServingConfig { batch_timeout_ms: 2, ..Default::default() };
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        opts,
+        ScalingPolicy { recover: false, ..Default::default() },
+        &cfg,
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )?;
+    let mut gen = RequestGen::new(0xBEEF, SEQ_LEN, VOCAB, None);
+    let report = cluster
+        .leader
+        .serve(gen.take(n_requests), None, std::time::Duration::from_secs(120));
+    cluster.shutdown();
+    Ok(report)
+}
+
 /// Run a throughput measurement `reps` times and keep the best — the
 /// standard way to strip scheduler noise from a saturation benchmark on
 /// a small shared box.
@@ -238,5 +289,23 @@ mod tests {
         let one = sw_fanin_throughput(1, 10_000, 32, WorldOptions::shm());
         let three = sw_fanin_throughput(3, 10_000, 32, WorldOptions::shm());
         assert!(three > 0.0 && one > 0.0);
+    }
+
+    #[test]
+    fn tp_pipeline_scenario_completes() {
+        // 2 stages × 1 replica × 2 shards: the smallest topology whose
+        // hot path runs the TP inner loop on every batch.
+        let base = 58_000 + (std::process::id() % 89) as u16 * 20;
+        let report = tp_pipeline_serve(
+            2,
+            1,
+            2,
+            8,
+            WorldOptions::shm().with_init_timeout(std::time::Duration::from_secs(120)),
+            base,
+        )
+        .unwrap();
+        assert_eq!(report.completed, 8);
+        assert!(report.throughput_rps > 0.0);
     }
 }

@@ -205,7 +205,12 @@ impl CollPolicy {
     /// (broadcast, gather, all_gather, scatter) — in which case an
     /// `Auto` world big enough to ring returns
     /// [`AlgoDecision::Negotiate`] and the root settles it over a
-    /// prologue frame.
+    /// prologue frame. Broadcast/scatter roots resolve from the *real*
+    /// byte count; gather/all_gather roots estimate it as their own
+    /// contribution × N, clamped from below by the largest contribution
+    /// observed on any earlier invocation of the same op on the world,
+    /// so skewed per-rank sizes can mis-pick flat at most once per
+    /// world (the clamp warms up on the first round).
     pub fn decide(&self, op: CollOp, world_size: usize, bytes: Option<usize>) -> AlgoDecision {
         if world_size < 2 || world_size > CollAlgo::RING_MAX_WORLD {
             return AlgoDecision::Flat;
@@ -363,6 +368,41 @@ impl ModelManifest {
             stages,
             base_dir,
         })
+    }
+
+    /// A synthetic manifest for forward-only deployments (no PJRT, no
+    /// artifacts on disk): every stage echoes `[batch, seq_len]` i32
+    /// activations through, which is exactly what forward-only workers
+    /// do. Used by the artifact-less serving tests, the TP bench
+    /// scenario and `examples/tensor_parallel.rs`.
+    pub fn synthetic(
+        n_stages: usize,
+        batch: usize,
+        seq_len: usize,
+        vocab: usize,
+    ) -> ModelManifest {
+        assert!(n_stages >= 1);
+        let stages = (0..n_stages)
+            .map(|i| StageSpec {
+                name: format!("echo_stage_{i}"),
+                hlo: PathBuf::from(format!("echo_stage_{i}.hlo.txt")),
+                in_shape: vec![batch, seq_len],
+                out_shape: vec![batch, seq_len],
+                in_dtype: DType::I32,
+                out_dtype: DType::I32,
+                params: 0,
+            })
+            .collect();
+        ModelManifest {
+            model: "forward-only".into(),
+            d_model: 1,
+            n_layers: n_stages,
+            vocab,
+            seq_len,
+            batch,
+            stages,
+            base_dir: PathBuf::new(),
+        }
     }
 
     /// Absolute path of a stage's HLO artifact.

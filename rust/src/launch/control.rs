@@ -35,14 +35,12 @@ impl ControlPlane {
     }
 
     /// Publish a world-add update (online instantiation). Every node
-    /// sees it; nodes that aren't members ignore it.
+    /// sees it; nodes that aren't members ignore it. The world def
+    /// (edge or multi-member TP world) rides in the shared JSON form.
     pub fn publish_add_world(&self, def: &WorldDef) -> anyhow::Result<()> {
         let j = Json::obj(vec![
             ("kind", Json::str("add_world")),
-            ("name", Json::str(def.name.clone())),
-            ("up", Json::str(def.members[0].to_string())),
-            ("down", Json::str(def.members[1].to_string())),
-            ("store_port", Json::num(def.store_port as f64)),
+            ("world", def.to_json()),
         ]);
         self.publish(&j.to_string())
     }
@@ -64,10 +62,26 @@ impl ControlPlane {
     }
 
     /// Report a broken world (workers call this so the controller can
-    /// see mid-pipeline failures it isn't a member of).
-    pub fn report_broken(&self, world: &str, reason: &str) -> anyhow::Result<()> {
+    /// see mid-pipeline failures it isn't a member of). `culprit` is
+    /// the attributed rank from `WorldEvent::Broken` — without it a
+    /// controller can only strike-infer, which by design never convicts
+    /// on TP-world-only evidence, so dropping it here would make
+    /// non-head shard deaths unrecoverable across processes.
+    pub fn report_broken(
+        &self,
+        world: &str,
+        reason: &str,
+        culprit: Option<usize>,
+    ) -> anyhow::Result<()> {
+        let j = Json::obj(vec![
+            ("reason", Json::str(reason)),
+            (
+                "culprit",
+                culprit.map(|c| Json::num(c as f64)).unwrap_or(Json::Null),
+            ),
+        ]);
         self.store
-            .set(&format!("ctl/broken/{world}"), reason.as_bytes())?;
+            .set(&format!("ctl/broken/{world}"), j.to_string().as_bytes())?;
         Ok(())
     }
 
@@ -79,6 +93,23 @@ impl ControlPlane {
             .into_iter()
             .filter_map(|k| k.strip_prefix("ctl/broken/").map(|s| s.to_string()))
             .collect())
+    }
+
+    /// The (reason, attributed culprit rank) of a reported broken
+    /// world, if any report landed.
+    pub fn broken_report(&self, world: &str) -> anyhow::Result<Option<(String, Option<usize>)>> {
+        let Some(bytes) = self.store.get(&format!("ctl/broken/{world}"))? else {
+            return Ok(None);
+        };
+        let text = String::from_utf8(bytes)?;
+        let j = Json::parse(&text)?;
+        let reason = j
+            .get("reason")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string();
+        let culprit = j.get("culprit").and_then(|v| v.as_usize());
+        Ok(Some((reason, culprit)))
     }
 
     /// Spawn a listener thread translating published updates into
@@ -134,14 +165,7 @@ impl ControlPlane {
 }
 
 fn parse_world(j: &Json) -> Option<WorldDef> {
-    Some(WorldDef {
-        name: j.get("name")?.as_str()?.to_string(),
-        members: [
-            NodeId::parse(j.get("up")?.as_str()?).ok()?,
-            NodeId::parse(j.get("down")?.as_str()?).ok()?,
-        ],
-        store_port: j.get("store_port")?.as_usize()? as u16,
-    })
+    WorldDef::from_json(j.get("world")?).ok()
 }
 
 #[cfg(test)]
@@ -158,19 +182,15 @@ mod tests {
     #[test]
     fn add_world_reaches_member_only() {
         let (server, cp) = plane();
-        let member = NodeId::Worker { stage: 1, replica: 0 };
-        let outsider = NodeId::Worker { stage: 2, replica: 5 };
+        let member = NodeId::worker(1, 0);
+        let outsider = NodeId::worker(2, 5);
         let (tx_m, rx_m) = std::sync::mpsc::channel();
         let (tx_o, rx_o) = std::sync::mpsc::channel();
         let cp_m = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
         let cp_o = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
         let stop_m = cp_m.listen(member, tx_m);
         let stop_o = cp_o.listen(outsider, tx_o);
-        let def = WorldDef {
-            name: "w-new".into(),
-            members: [NodeId::Leader, member],
-            store_port: 12345,
-        };
+        let def = WorldDef::edge("w-new".into(), NodeId::Leader, member, 12345);
         cp.publish_add_world(&def).unwrap();
         match rx_m.recv_timeout(Duration::from_secs(2)).unwrap() {
             TopoUpdate::AddWorld(got) => assert_eq!(got, def),
@@ -184,12 +204,11 @@ mod tests {
     #[test]
     fn shutdown_targets_node_or_all() {
         let (server, cp) = plane();
-        let a = NodeId::Worker { stage: 0, replica: 0 };
+        let a = NodeId::worker(0, 0);
         let (tx, rx) = std::sync::mpsc::channel();
         let cp_a = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
         let _stop = cp_a.listen(a, tx);
-        cp.publish_shutdown(Some(NodeId::Worker { stage: 9, replica: 9 }))
-            .unwrap();
+        cp.publish_shutdown(Some(NodeId::worker(9, 9))).unwrap();
         cp.publish_shutdown(Some(a)).unwrap();
         // The targeted shutdown must arrive (the other is ignored).
         match rx.recv_timeout(Duration::from_secs(2)).unwrap() {
@@ -199,12 +218,42 @@ mod tests {
     }
 
     #[test]
-    fn broken_world_reports_accumulate() {
+    fn broken_world_reports_accumulate_with_culprits() {
         let (_server, cp) = plane();
-        cp.report_broken("w1", "remote error").unwrap();
-        cp.report_broken("w2", "watchdog").unwrap();
+        cp.report_broken("w1", "remote error", Some(1)).unwrap();
+        cp.report_broken("w2", "watchdog", None).unwrap();
         let mut got = cp.broken_worlds().unwrap();
         got.sort();
         assert_eq!(got, vec!["w1".to_string(), "w2".to_string()]);
+        assert_eq!(
+            cp.broken_report("w1").unwrap(),
+            Some(("remote error".to_string(), Some(1)))
+        );
+        assert_eq!(
+            cp.broken_report("w2").unwrap(),
+            Some(("watchdog".to_string(), None))
+        );
+        assert_eq!(cp.broken_report("w3").unwrap(), None);
+    }
+
+    #[test]
+    fn tp_world_defs_travel_the_control_plane() {
+        use crate::serving::topology::{WorldDef, WorldKind};
+        let (server, cp) = plane();
+        let shard1 = NodeId::Worker { stage: 1, replica: 0, shard: 1 };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cp_s = ControlPlane::connect(server.addr(), Duration::from_secs(2)).unwrap();
+        let _stop = cp_s.listen(shard1, tx);
+        let def = WorldDef {
+            name: "tp-s1r0#g1".into(),
+            members: vec![NodeId::worker(1, 0), shard1],
+            store_port: 23456,
+            kind: WorldKind::Tp,
+        };
+        cp.publish_add_world(&def).unwrap();
+        match rx.recv_timeout(Duration::from_secs(2)).unwrap() {
+            TopoUpdate::AddWorld(got) => assert_eq!(got, def),
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -1,10 +1,20 @@
-//! In-process cluster: every pipeline node is a thread with its own
-//! `WorldManager` (its own watchdog, store clients and links) and its
-//! own PJRT engine — the xla wrapper types are not `Send`, so each
-//! worker thread compiles its stage executable itself, exactly as a
-//! worker process would. Faithful down to the transport: killing a
-//! worker drops its sockets and rings exactly like process death (TCP
-//! peers see resets; shm peers see silence until the watchdog fires).
+//! In-process cluster: every pipeline node (every *shard*) is a thread
+//! with its own `WorldManager` (its own watchdog, store clients and
+//! links) and its own PJRT engine — the xla wrapper types are not
+//! `Send`, so each worker thread compiles its stage executable itself,
+//! exactly as a worker process would. Faithful down to the transport:
+//! killing a worker drops its sockets and rings exactly like process
+//! death (TCP peers see resets; shm peers see silence until the
+//! watchdog fires).
+//!
+//! Two construction modes share all wiring:
+//!
+//! * [`InProcCluster::start`] — PJRT-backed: loads the AOT manifest and
+//!   compiles one stage executable per worker thread.
+//! * [`InProcCluster::start_forward_only`] — no artifacts, no engine:
+//!   workers echo activations through (and still drive the TP
+//!   broadcast/all_reduce inner loop on sharded replicas), so the full
+//!   serving + elasticity stack is testable in CI without a PJRT build.
 
 use crate::config::{ModelManifest, ServingConfig};
 use crate::multiworld::{StatePolicy, WatchdogConfig, WorldEvent, WorldManager};
@@ -42,35 +52,45 @@ pub struct InProcCluster {
 struct SpawnerInner {
     artifacts: PathBuf,
     manifest: ModelManifest,
+    /// No PJRT engine, no artifacts: workers run stage-less.
+    forward_only: bool,
     opts: WorldOptions,
     wd_cfg: WatchdogConfig,
     workers: Arc<Mutex<HashMap<NodeId, WorkerHandle>>>,
     controller: Mutex<Option<Arc<Controller>>>,
     topology_template: Topology,
-    /// Broken-world reports from every node, drained into the
-    /// controller once it exists (workers spawn before the controller).
-    broken_tx: Sender<String>,
+    /// Broken-world reports (name + attributed culprit rank) from every
+    /// node, drained into the controller once it exists (workers spawn
+    /// before the controller).
+    broken_tx: Sender<(String, Option<usize>)>,
 }
 
 impl SpawnerInner {
-    /// Start one worker thread that joins exactly `worlds`. The PJRT
-    /// engine and stage executable are created *inside* the thread.
+    /// Start one worker thread that joins exactly the worlds in
+    /// `worlds` it is a member of. The PJRT engine and stage executable
+    /// are created *inside* the thread.
     fn spawn_node(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()> {
         let NodeId::Worker { stage, .. } = node else {
             anyhow::bail!("can only spawn workers");
         };
-        let spec = self
-            .manifest
-            .stages
-            .get(stage)
-            .cloned()
-            .ok_or_else(|| anyhow::anyhow!("no stage {stage} in manifest"))?;
-        let hlo_path = self.manifest.hlo_path(&spec);
+        let stage_src = if self.forward_only {
+            None
+        } else {
+            let spec = self
+                .manifest
+                .stages
+                .get(stage)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("no stage {stage} in manifest"))?;
+            let hlo_path = self.manifest.hlo_path(&spec);
+            Some((hlo_path, spec))
+        };
         let stop = Arc::new(AtomicBool::new(false));
         let (ctrl_tx, ctrl_rx) = std::sync::mpsc::channel();
         // A private topology containing only this node's worlds.
         let mut topo = Topology {
             replicas: self.topology_template.replicas.clone(),
+            tp: self.topology_template.tp.clone(),
             worlds,
             prefix: self.topology_template.prefix.clone(),
             generation: 0,
@@ -83,9 +103,15 @@ impl SpawnerInner {
         let thread = std::thread::Builder::new()
             .name(format!("worker-{node}"))
             .spawn(move || -> anyhow::Result<WorkerStats> {
-                // Per-worker PJRT client, like a real worker process.
-                let engine = Engine::cpu()?;
-                let stage_runner = Arc::new(engine.load_stage(&hlo_path, &spec)?);
+                // Per-worker PJRT client, like a real worker process
+                // (skipped entirely in forward-only mode).
+                let stage_runner = match stage_src {
+                    Some((hlo_path, spec)) => {
+                        let engine = Engine::cpu()?;
+                        Some(Arc::new(engine.load_stage(&hlo_path, &spec)?))
+                    }
+                    None => None,
+                };
                 let mgr =
                     WorldManager::with_options(StatePolicy::Kv, wd_cfg, Clock::system());
                 // Forward this worker's broken-world events to the shared
@@ -98,8 +124,8 @@ impl SpawnerInner {
                         .name(format!("evt-fwd-{node}"))
                         .spawn(move || {
                             while let Ok(evt) = events.recv() {
-                                if let WorldEvent::Broken { world, .. } = evt {
-                                    if broken_tx.send(world).is_err() {
+                                if let WorldEvent::Broken { world, culprit, .. } = evt {
+                                    if broken_tx.send((world, culprit)).is_err() {
                                         return;
                                     }
                                 }
@@ -112,7 +138,7 @@ impl SpawnerInner {
                     StageWorkerConfig {
                         node,
                         topology: topo,
-                        stage: Some(stage_runner),
+                        stage: stage_runner,
                         opts,
                         control: Some(ctrl_rx),
                         stop: stop2,
@@ -146,8 +172,9 @@ impl Spawner for ThreadSpawner {
 }
 
 impl InProcCluster {
-    /// Bring up leader + all workers of `topo`, wire the controller, and
-    /// wait until every world is established.
+    /// Bring up leader + all workers of `topo` with PJRT-compiled stage
+    /// executables, wire the controller, and wait until every world is
+    /// established.
     pub fn start(
         topo: Topology,
         artifacts: PathBuf,
@@ -156,15 +183,46 @@ impl InProcCluster {
         serving_cfg: &ServingConfig,
     ) -> anyhow::Result<InProcCluster> {
         let manifest = ModelManifest::load(artifacts.join("model.json"))?;
+        Self::start_inner(topo, artifacts, manifest, false, opts, policy, serving_cfg)
+    }
+
+    /// Bring up a forward-only cluster: no artifacts, no PJRT — workers
+    /// echo activations (sharded replicas still run the TP
+    /// broadcast/all_reduce inner loop). `batch`/`seq_len`/`vocab`
+    /// shape the leader's synthetic request tensors.
+    pub fn start_forward_only(
+        topo: Topology,
+        opts: WorldOptions,
+        policy: ScalingPolicy,
+        serving_cfg: &ServingConfig,
+        batch: usize,
+        seq_len: usize,
+        vocab: usize,
+    ) -> anyhow::Result<InProcCluster> {
+        let manifest = ModelManifest::synthetic(topo.n_stages(), batch, seq_len, vocab);
+        Self::start_inner(topo, PathBuf::new(), manifest, true, opts, policy, serving_cfg)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_inner(
+        topo: Topology,
+        artifacts: PathBuf,
+        manifest: ModelManifest,
+        forward_only: bool,
+        opts: WorldOptions,
+        policy: ScalingPolicy,
+        serving_cfg: &ServingConfig,
+    ) -> anyhow::Result<InProcCluster> {
         let wd_cfg = WatchdogConfig {
             heartbeat: Duration::from_millis(serving_cfg.heartbeat_ms),
             miss_threshold: serving_cfg.miss_threshold,
         };
         let workers = Arc::new(Mutex::new(HashMap::new()));
-        let (broken_tx, broken_rx) = std::sync::mpsc::channel::<String>();
+        let (broken_tx, broken_rx) = std::sync::mpsc::channel::<(String, Option<usize>)>();
         let spawner_inner = Arc::new(SpawnerInner {
             artifacts: artifacts.clone(),
             manifest: manifest.clone(),
+            forward_only,
             opts: opts.clone(),
             wd_cfg: wd_cfg.clone(),
             workers: workers.clone(),
@@ -215,22 +273,27 @@ impl InProcCluster {
         let leader_tx = broken_tx.clone();
         let fwd = std::thread::spawn(move || {
             while let Ok(evt) = events.recv() {
-                if let WorldEvent::Broken { world, .. } = evt {
-                    if leader_tx.send(world).is_err() {
+                if let WorldEvent::Broken { world, culprit, .. } = evt {
+                    if leader_tx.send((world, culprit)).is_err() {
                         return;
                     }
                 }
             }
         });
         // …and one drainer routes every report into the controller
-        // (reports queued before the controller existed included).
+        // (reports queued before the controller existed included; the
+        // controller's own metrics/log_event make each report visible).
         let ctl2 = controller.clone();
         let drainer = std::thread::spawn(move || {
-            while let Ok(world) = broken_rx.recv() {
-                if std::env::var("MW_DEBUG").is_ok() {
-                    eprintln!("[cluster] draining broken report: {world}");
+            while let Ok((world, culprit)) = broken_rx.recv() {
+                if let Err(e) = ctl2.on_world_broken(&world, culprit) {
+                    // Recovery failures must be visible, not swallowed —
+                    // the controller already counted/logged specifics.
+                    crate::metrics::log_event(
+                        "cluster.recovery_error",
+                        &[("world", world.as_str()), ("error", e.to_string().as_str())],
+                    );
                 }
-                let _ = ctl2.on_world_broken(&world);
             }
         });
         let _ = &spawner_inner.artifacts; // reserved for worlds-override spawns
@@ -262,19 +325,26 @@ impl InProcCluster {
         }
     }
 
-    /// Graceful scale-in of a worker (drain + retire).
+    /// Graceful scale-in of a worker's replica (drain + retire).
     pub fn retire(&self, node: NodeId) -> anyhow::Result<()> {
         self.controller.scale_in(node)?;
-        if let Some(h) = self.workers.lock().unwrap().remove(&node) {
-            h.stop.store(true, Ordering::Relaxed);
-            if let Some(t) = h.thread {
-                let _ = t.join();
-            }
+        let NodeId::Worker { stage, replica, .. } = node else {
+            return Ok(());
+        };
+        let shards: Vec<NodeId> = {
+            let ws = self.workers.lock().unwrap();
+            ws.keys()
+                .filter(|n| n.in_replica(stage, replica))
+                .copied()
+                .collect()
+        };
+        for shard in shards {
+            self.kill(shard);
         }
         Ok(())
     }
 
-    /// Living worker nodes.
+    /// Living worker nodes (every shard).
     pub fn live_workers(&self) -> Vec<NodeId> {
         let mut v: Vec<NodeId> = self.workers.lock().unwrap().keys().copied().collect();
         v.sort();

@@ -85,6 +85,7 @@ impl ProcessCluster {
             // through a dedicated file.
             let mut t = Topology {
                 replicas: self.topology.replicas.clone(),
+                tp: self.topology.tp.clone(),
                 worlds: worlds.to_vec(),
                 prefix: self.topology.prefix.clone(),
                 generation: self.topology.generation,

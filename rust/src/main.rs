@@ -116,8 +116,8 @@ fn cmd_worker(m: &multiworld::util::args::Matches) -> anyhow::Result<()> {
         let events = mgr.subscribe();
         std::thread::spawn(move || {
             while let Ok(evt) = events.recv() {
-                if let WorldEvent::Broken { world, reason } = evt {
-                    let _ = cp2.report_broken(&world, &reason);
+                if let WorldEvent::Broken { world, reason, culprit } = evt {
+                    let _ = cp2.report_broken(&world, &reason, culprit);
                 }
             }
         });

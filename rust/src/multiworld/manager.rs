@@ -21,7 +21,12 @@ const COMM_BLOB_BYTES: usize = 16 * 1024;
 pub enum WorldEvent {
     Added(String),
     /// World broke (watchdog alert or remote error) and was cleaned up.
-    Broken { world: String, reason: String },
+    /// `culprit` is the rank whose death broke it, when the failure
+    /// signal attributes one (watchdog missed-heartbeat alerts and TCP
+    /// `RemoteError`s do; local aborts don't) — the serving controller
+    /// uses it for shard-granularity recovery inside multi-member TP
+    /// worlds.
+    Broken { world: String, reason: String, culprit: Option<usize> },
     Removed(String),
 }
 
@@ -80,8 +85,16 @@ impl WorldManager {
         let watchdog = Watchdog::start(
             wd_cfg,
             clock,
-            Arc::new(move |world: &str, reason: &str| {
-                Self::break_world_impl(&cb_worlds, &cb_subs, &cb_tombs, cb_state.as_ref(), world, reason);
+            Arc::new(move |world: &str, reason: &str, culprit: Option<usize>| {
+                Self::break_world_impl(
+                    &cb_worlds,
+                    &cb_subs,
+                    &cb_tombs,
+                    cb_state.as_ref(),
+                    world,
+                    reason,
+                    culprit,
+                );
             }),
         );
 
@@ -232,8 +245,24 @@ impl WorldManager {
     }
 
     /// Declare a world broken (watchdog path calls the impl directly;
-    /// this is for the remote-error path and tests).
+    /// this is for the remote-error path and tests). The culprit rank is
+    /// recovered from the world's broken reason when the transport
+    /// attributed one (`CclError::RemoteError { peer, .. }`) — but only
+    /// on two-member worlds, where the erroring peer *is* the other
+    /// member. On larger worlds a local abort cascade closes every
+    /// link, so a survivor's `RemoteError` may name an innocent peer
+    /// that merely aborted first; those worlds rely on the watchdog's
+    /// per-rank heartbeat attribution instead.
     pub fn break_world(&self, name: &str, reason: &str) {
+        let culprit = {
+            let map = self.worlds.read().unwrap();
+            map.get(name).and_then(|w| match w.broken_reason() {
+                Some(crate::mwccl::CclError::RemoteError { peer, .. }) if w.size() == 2 => {
+                    Some(peer)
+                }
+                _ => None,
+            })
+        };
         Self::break_world_impl(
             &self.worlds,
             &self.subscribers,
@@ -241,9 +270,11 @@ impl WorldManager {
             self.state.as_ref(),
             name,
             reason,
+            culprit,
         );
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn break_world_impl(
         worlds: &WorldMap,
         subscribers: &Subscribers,
@@ -251,6 +282,7 @@ impl WorldManager {
         state: &dyn StateManager,
         name: &str,
         reason: &str,
+        culprit: Option<usize>,
     ) {
         let world = {
             let mut map = worlds.write().unwrap();
@@ -259,9 +291,19 @@ impl WorldManager {
         let Some(world) = world else {
             return; // already cleaned up
         };
-        if std::env::var("MW_DEBUG").is_ok() {
-            eprintln!("[manager] break_world {name}: {reason}");
-        }
+        // Observable without MW_DEBUG: a global counter plus one
+        // structured line greppable in bench output and CI logs
+        // (mirrors the watchdog's own alert instrumentation).
+        crate::metrics::global().counter("manager.worlds_broken").inc();
+        let culprit_s = culprit.map(|c| c.to_string()).unwrap_or_else(|| "-".into());
+        crate::metrics::log_event(
+            "manager.world_broken",
+            &[
+                ("world", name),
+                ("reason", reason),
+                ("culprit_rank", culprit_s.as_str()),
+            ],
+        );
         // Abort pending collective ops so the application unblocks with
         // an exception it can handle (§3.3).
         world.abort(reason);
@@ -270,7 +312,11 @@ impl WorldManager {
             .lock()
             .unwrap()
             .insert(name.to_string(), reason.to_string());
-        let event = WorldEvent::Broken { world: name.to_string(), reason: reason.to_string() };
+        let event = WorldEvent::Broken {
+            world: name.to_string(),
+            reason: reason.to_string(),
+            culprit,
+        };
         let mut subs = subscribers.lock().unwrap();
         subs.retain(|tx| tx.send(event.clone()).is_ok());
     }

@@ -44,8 +44,15 @@ struct Watched {
     started_at: u64,
 }
 
-/// Callback invoked when a watched world is declared broken.
-pub type BrokenCallback = Arc<dyn Fn(&str, &str) + Send + Sync>;
+/// Callback invoked when a watched world is declared broken:
+/// `(world, reason, culprit rank)`. The culprit is the peer whose
+/// heartbeats went missing — `None` when the *store* died (the world
+/// leader's fault, but indistinguishable from a network partition
+/// here). Rank-level attribution is what lets the serving controller
+/// recover exactly the dead shard of a multi-member TP world instead
+/// of inferring (and possibly misattributing) from world-level
+/// evidence.
+pub type BrokenCallback = Arc<dyn Fn(&str, &str, Option<usize>) + Send + Sync>;
 
 /// See module docs.
 pub struct Watchdog {
@@ -109,7 +116,7 @@ impl Watchdog {
     pub fn tick(&self) {
         let now = self.clock.now_millis();
         let deadline_ms = self.cfg.heartbeat.as_millis() as u64 * self.cfg.miss_threshold as u64;
-        let mut broken: Vec<(String, String)> = Vec::new();
+        let mut broken: Vec<(String, String, Option<usize>)> = Vec::new();
         {
             let mut watched = self.watched.lock().unwrap();
             for w in watched.values_mut() {
@@ -118,7 +125,7 @@ impl Watchdog {
                 if let Err(e) = w.store.set(&my_key, now.to_string().as_bytes()) {
                     // The store is gone — its host (the world leader) is
                     // dead. That breaks the world for everyone.
-                    broken.push((w.world.clone(), format!("store unreachable: {e}")));
+                    broken.push((w.world.clone(), format!("store unreachable: {e}"), None));
                     continue;
                 }
                 // 2. Check the peers.
@@ -131,7 +138,7 @@ impl Watchdog {
                         Ok(Some(v)) => String::from_utf8(v).ok().and_then(|s| s.parse::<u64>().ok()),
                         Ok(None) => None,
                         Err(e) => {
-                            broken.push((w.world.clone(), format!("store unreachable: {e}")));
+                            broken.push((w.world.clone(), format!("store unreachable: {e}"), None));
                             break;
                         }
                     };
@@ -155,25 +162,31 @@ impl Watchdog {
                                 "rank {peer} missed heartbeats for {} ms (> {deadline_ms} ms)",
                                 now.saturating_sub(last)
                             ),
+                            Some(peer),
                         ));
                         break;
                     }
                 }
             }
-            for (world, _) in &broken {
+            for (world, _, _) in &broken {
                 watched.remove(world);
             }
         }
-        for (world, reason) in broken {
+        for (world, reason, culprit) in broken {
             // Broken-world events must be observable without MW_DEBUG:
             // a counter for dashboards/assertions plus one structured
             // line that benches and CI logs can grep.
             crate::metrics::global().counter("watchdog.worlds_broken").inc();
+            let culprit_s = culprit.map(|c| c.to_string()).unwrap_or_else(|| "-".into());
             crate::metrics::log_event(
                 "watchdog.world_broken",
-                &[("world", world.as_str()), ("reason", reason.as_str())],
+                &[
+                    ("world", world.as_str()),
+                    ("reason", reason.as_str()),
+                    ("culprit_rank", culprit_s.as_str()),
+                ],
             );
-            (self.on_broken)(&world, &reason);
+            (self.on_broken)(&world, &reason, culprit);
         }
     }
 
@@ -213,7 +226,7 @@ mod tests {
     struct Fixture {
         _server: StoreServer,
         store: Arc<StoreClient>,
-        broken: Arc<Mutex<Vec<(String, String)>>>,
+        broken: Arc<Mutex<Vec<(String, String, Option<usize>)>>>,
         calls: Arc<AtomicUsize>,
     }
 
@@ -235,8 +248,8 @@ mod tests {
         Watchdog::start(
             WatchdogConfig { heartbeat: Duration::from_millis(3600_000), miss_threshold: 3 },
             clock,
-            Arc::new(move |w, r| {
-                broken.lock().unwrap().push((w.to_string(), r.to_string()));
+            Arc::new(move |w, r, c| {
+                broken.lock().unwrap().push((w.to_string(), r.to_string(), c));
                 calls.fetch_add(1, Ordering::SeqCst);
             }),
         )
@@ -281,6 +294,7 @@ mod tests {
         assert_eq!(broken.len(), 1);
         assert_eq!(broken[0].0, "w1");
         assert!(broken[0].1.contains("rank 1"), "{}", broken[0].1);
+        assert_eq!(broken[0].2, Some(1), "alert attributes the silent rank");
         assert!(
             broken_counter.get() > broken_before,
             "alert must increment the global watchdog.worlds_broken counter"
@@ -326,8 +340,8 @@ mod tests {
         let wd = Watchdog::start(
             WatchdogConfig { heartbeat: Duration::from_millis(3600_000), miss_threshold: 3 },
             clock.clone(),
-            Arc::new(move |w: &str, r: &str| {
-                b2.lock().unwrap().push((w.to_string(), r.to_string()))
+            Arc::new(move |w: &str, r: &str, c: Option<usize>| {
+                b2.lock().unwrap().push((w.to_string(), r.to_string(), c))
             }),
         );
         wd.watch("w9", 1, 2, store);

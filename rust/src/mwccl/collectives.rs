@@ -44,7 +44,13 @@
 //!   verdict in a one-byte *prologue* frame fanned out flat on the op
 //!   tag's prologue lane (see [`crate::mwccl::wire::FLAG_PROLOGUE`]),
 //!   so tiny control messages keep the flat fast path instead of paying
-//!   `N−1` sequential hops. Thresholds match the crossover measured by
+//!   `N−1` sequential hops. Gather/all_gather roots can only *estimate*
+//!   (contributions may differ per rank): the estimate is own
+//!   contribution × N, clamped from below by the largest contribution
+//!   observed on any earlier invocation of the same op on this world
+//!   (`WorldCore::max_contrib`), so a small-contribution root stops
+//!   under-picking flat under skewed per-rank sizes after the first
+//!   round. Thresholds match the crossover measured by
 //!   `benches/ablation_collectives.rs` (re-checked by CI's
 //!   `crossover-matrix` job).
 //!
@@ -294,10 +300,18 @@ impl World {
         let seq = self.core().next_seq();
         // Contributions may differ per rank, so no rank can compute a
         // size-aware choice alone; the root estimates the gathered total
-        // from its own contribution and negotiates.
+        // from its own contribution — clamped by the largest
+        // contribution seen on a previous gather of this world, so a
+        // small-contribution root stops under-estimating skewed loads
+        // after the first invocation — and negotiates.
         let decision = self.core().coll_policy.decide(CollOp::Gather, self.size(), None);
-        let root_bytes = Some(t.byte_len().saturating_mul(self.size()));
+        let root_bytes = Some(
+            t.byte_len()
+                .max(self.core().max_contrib(CollOp::Gather))
+                .saturating_mul(self.size()),
+        );
         self.submit(desc, move |core| {
+            core.note_contrib(CollOp::Gather, t.byte_len());
             let ring = resolve_algo(
                 core,
                 CollOp::Gather,
@@ -310,7 +324,7 @@ impl World {
             if ring {
                 ring_gather(core, t, root, seq)
             } else {
-                gather_impl(core, t, root, make_tag(TagKind::Gather, seq))
+                gather_impl(core, t, root, make_tag(TagKind::Gather, seq), CollOp::Gather)
             }
         })
     }
@@ -333,10 +347,17 @@ impl World {
         let seq = self.core().next_seq();
         // Contributions may differ in size per rank; rank 0 acts as the
         // negotiation root, estimating the gathered total from its own
-        // contribution.
+        // contribution clamped by the largest contribution seen on a
+        // previous all_gather of this world (skewed-size protection,
+        // same as gather).
         let decision = self.core().coll_policy.decide(CollOp::AllGather, self.size(), None);
-        let root_bytes = Some(t.byte_len().saturating_mul(self.size()));
+        let root_bytes = Some(
+            t.byte_len()
+                .max(self.core().max_contrib(CollOp::AllGather))
+                .saturating_mul(self.size()),
+        );
         self.submit(desc, move |core| {
+            core.note_contrib(CollOp::AllGather, t.byte_len());
             let ring = resolve_algo(
                 core,
                 CollOp::AllGather,
@@ -351,7 +372,7 @@ impl World {
             }
             let gtag = make_tag(TagKind::AllGather, seq * 2);
             let btag = make_tag(TagKind::AllGather, seq * 2 + 1);
-            let gathered = gather_impl(core, t, 0, gtag)?;
+            let gathered = gather_impl(core, t, 0, gtag, CollOp::AllGather)?;
             broadcast_impl(core, gathered, 0, btag).map(Some)
         })
     }
@@ -584,11 +605,15 @@ fn reduce_impl(
     Ok(Some(acc))
 }
 
+/// `op` names the collective this gather serves (gather itself, or the
+/// flat all_gather's gather phase) so the root can record the observed
+/// per-rank contribution sizes for the next invocation's Auto estimate.
 fn gather_impl(
     core: &WorldCore,
     t: Tensor,
     root: usize,
     wire: u64,
+    op: CollOp,
 ) -> CclResult<Option<Tensor>> {
     if core.rank == root {
         let mut parts: Vec<Option<Tensor>> = (0..core.size).map(|_| None).collect();
@@ -597,7 +622,9 @@ fn gather_impl(
             if peer == root {
                 continue;
             }
-            parts[peer] = Some(core.recv_tensor(peer, wire)?);
+            let part = core.recv_tensor(peer, wire)?;
+            core.note_contrib(op, part.byte_len());
+            parts[peer] = Some(part);
         }
         let parts: Vec<Tensor> = parts.into_iter().map(|p| p.unwrap()).collect();
         let cat = Tensor::concat(&parts)
@@ -975,9 +1002,11 @@ fn ring_all_gather(core: &WorldCore, t: Tensor, seq: u64) -> CclResult<Tensor> {
     let mut tensors = Vec::with_capacity(n);
     for (i, p) in parts.iter().enumerate() {
         let bytes = p.as_deref().unwrap();
-        tensors.push(read_tensor(&mut &*bytes).map_err(|e| {
+        let t = read_tensor(&mut &*bytes).map_err(|e| {
             CclError::Transport(format!("bad all_gather tensor from rank {i}: {e}"))
-        })?);
+        })?;
+        core.note_contrib(CollOp::AllGather, t.byte_len());
+        tensors.push(t);
     }
     let cat = Tensor::concat(&tensors)
         .map_err(|e| CclError::InvalidUsage(format!("all_gather concat: {e}")))?;
@@ -1023,6 +1052,7 @@ fn ring_gather(core: &WorldCore, t: Tensor, root: usize, seq: u64) -> CclResult<
                 CclError::Transport(format!("bad gather tensor from rank {from_rank}: {e}"))
             })?;
             core.recycle(next, bytes);
+            core.note_contrib(CollOp::Gather, part.byte_len());
             parts[from_rank] = Some(part);
         }
         let parts: Vec<Tensor> = parts.into_iter().map(|p| p.unwrap()).collect();

@@ -59,6 +59,13 @@ pub struct WorldCore {
     /// 1 = flat, 2 = ring) — observability for tests, benches and the
     /// CI quick-ablation step; negotiated `Auto` choices land here too.
     algo_trace: [AtomicU8; 6],
+    /// Largest single contribution (bytes) ever observed per collective
+    /// on this world. Roots of size-negotiated ops whose payload they
+    /// cannot fully know (`gather`, `all_gather`) clamp their
+    /// own-contribution-×-N estimate with this, so skewed per-rank
+    /// sizes stop mis-picking flat after the first invocation on the
+    /// tag lane (see `CollPolicy::decide`).
+    max_contrib: [AtomicU64; 6],
     /// Point-to-point receives pending on the p2p poller thread.
     /// Unlike collectives (strictly ordered on the progress thread),
     /// `irecv`s from *different peers* complete concurrently — the
@@ -153,6 +160,17 @@ impl WorldCore {
         self.algo_trace[op.index()].store(if ring { 2 } else { 1 }, Ordering::Relaxed);
     }
 
+    /// Record one rank's observed contribution size for `op` (the
+    /// estimate clamp for negotiated gather/all_gather roots).
+    pub(crate) fn note_contrib(&self, op: CollOp, bytes: usize) {
+        self.max_contrib[op.index()].fetch_max(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Largest contribution seen so far for `op` (0 before the first).
+    pub(crate) fn max_contrib(&self, op: CollOp) -> usize {
+        self.max_contrib[op.index()].load(Ordering::Relaxed) as usize
+    }
+
     /// Queue a p2p receive for the poller.
     pub(crate) fn register_recv(&self, peer: usize, wire_tag: u64, work: Work) {
         self.pending_recvs
@@ -242,6 +260,7 @@ impl World {
             op_timeout,
             coll_policy,
             algo_trace: Default::default(),
+            max_contrib: Default::default(),
             pending_recvs: Mutex::new(Vec::new()),
         });
         let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();

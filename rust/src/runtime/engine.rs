@@ -137,6 +137,28 @@ impl StageRunner {
         Ok(tensor)
     }
 
+    /// Tensor-parallel execution: shard `shard` of `tp` computes its
+    /// slice of the stage; the partial outputs of all shards sum
+    /// (all_reduce) to the full stage output — the row-parallel combine
+    /// contract. The AOT artifact is a fused whole-stage executable, so
+    /// the reproduction runs it whole and scales the output by `1/tp`:
+    /// `Σ_shards out/tp == out` holds exactly for power-of-two `tp`, and
+    /// the communication volume per combine matches real weight-sharded
+    /// execution even though compute is replicated per shard.
+    pub fn run_sharded(&self, input: &Tensor, shard: usize, tp: usize) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(tp >= 1 && shard < tp, "shard {shard} out of range for tp {tp}");
+        let mut out = self.run(input)?;
+        if tp > 1 {
+            anyhow::ensure!(
+                out.dtype() == DType::F32,
+                "stage {}: sharded execution needs f32 outputs",
+                self.spec.name
+            );
+            out.scale(1.0 / tp as f32);
+        }
+        Ok(out)
+    }
+
     /// Mean execution latency so far.
     pub fn mean_exec(&self) -> Duration {
         Duration::from_micros(self.exec_time.mean_us() as u64)

@@ -51,6 +51,14 @@ impl StageRunner {
         anyhow::bail!(NO_PJRT)
     }
 
+    /// Stub of the tensor-parallel execution path (see the engine's
+    /// `run_sharded`): validates the shard coordinates, then reports the
+    /// missing backend like every other entry point.
+    pub fn run_sharded(&self, _input: &Tensor, shard: usize, tp: usize) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(tp >= 1 && shard < tp, "shard {shard} out of range for tp {tp}");
+        anyhow::bail!(NO_PJRT)
+    }
+
     pub fn mean_exec(&self) -> Duration {
         Duration::from_micros(self.exec_time.mean_us() as u64)
     }

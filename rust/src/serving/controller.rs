@@ -4,16 +4,36 @@
 //!
 //! Responsibilities:
 //!
-//! * **Recovery**: when a worker dies (reported through broken edge
-//!   worlds), mint a replacement replica with *fresh* worlds — broken
-//!   world names are never reused — and orchestrate the join: existing
-//!   members get [`TopoUpdate::AddWorld`] on their control channels, the
-//!   new worker is spawned via the [`Spawner`].
+//! * **Recovery**: when a worker dies (reported through broken worlds),
+//!   restore service with *fresh* worlds — broken world names are never
+//!   reused — and orchestrate the join: existing members get
+//!   [`TopoUpdate::AddWorld`] on their control channels, replacements
+//!   are spawned via the [`Spawner`]. Fault domains are
+//!   **shard-granular**: a dead shard of a tensor-parallel replica
+//!   breaks its replica's TP world (plus the head's edge worlds when
+//!   the head died); recovery re-mints the replica's broken world set
+//!   under the same replica/shard ids and respawns *only the dead
+//!   shard* — its TP neighbors and edge peers rejoin over their control
+//!   channels. Unsharded (`tp = 1`) replicas keep the original
+//!   behavior: the replica id is burned and a whole new replica is
+//!   minted.
 //! * **Scale-out**: when the leader's queue depth per replica exceeds
-//!   the policy threshold, add a replica to the bottleneck stage the
-//!   same way (Fig. 2c).
+//!   the policy threshold, add a replica (all `tp` shards of it) to the
+//!   bottleneck stage the same way (Fig. 2c).
 //! * **Scale-in**: drain and retire a replica when utilization stays
 //!   below the low-water mark.
+//!
+//! **Who died?** Failure signals arrive per *world*. When the signal
+//! carries a culprit rank (watchdog missed-heartbeat alerts, TCP
+//! `RemoteError`s — see [`crate::multiworld::WorldEvent::Broken`]) the
+//! dead worker is `members[culprit]`, directly. Without attribution the
+//! controller falls back to strike inference: a worker is declared dead
+//! only when *every* world it belongs to has been reported broken *and*
+//! at least one of those is an edge world. The edge-evidence clause is
+//! what keeps TP neighbors alive: when a head dies, a non-head shard's
+//! only world (the TP world) breaks too, so TP-world-only evidence is
+//! never enough to convict — exactly one of the replica's shards is at
+//! fault, and only the attributed signal can say which.
 
 use super::stage_worker::TopoUpdate;
 use super::topology::{NodeId, Topology, WorldDef};
@@ -42,13 +62,16 @@ impl Default for ScalingPolicy {
 /// How the controller materializes a new worker (thread in-process,
 /// `multiworld worker` subprocess via the launcher).
 pub trait Spawner: Send + Sync {
-    /// Bring up `node`; it must join exactly `worlds`.
+    /// Bring up `node`; it must join exactly the worlds in `worlds` it
+    /// is a member of.
     fn spawn(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()>;
 }
 
 /// Decisions the controller took (test/bench introspection).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Action {
+    /// `replacement == dead` for shard-granularity recovery (the shard
+    /// id survives; only its worlds are fresh).
     Recovered { dead: NodeId, replacement: NodeId },
     ScaledOut { stage: usize, node: NodeId },
     ScaledIn { node: NodeId },
@@ -63,11 +86,11 @@ pub struct Controller {
     worker_ctrl: Mutex<HashMap<NodeId, Sender<TopoUpdate>>>,
     /// Callback to join the leader's side of fresh worlds.
     leader_join: Box<dyn Fn(&WorldDef) -> anyhow::Result<()> + Send + Sync>,
-    /// Nodes already declared dead (dedupe repeated reports).
+    /// Nodes already declared dead (dedupe repeated reports). Shard ids
+    /// revived by shard recovery are removed again once respawned.
     dead: Mutex<HashSet<NodeId>>,
-    /// Broken-world strikes per worker: a node is declared dead only
-    /// when *every* world it belongs to has been reported broken (its
-    /// neighbors keep at least one healthy world, so they never qualify).
+    /// Broken-world strikes per worker, for unattributed reports (see
+    /// module docs for the conviction rule).
     strikes: Mutex<HashMap<NodeId, HashSet<String>>>,
     actions: Mutex<Vec<Action>>,
 }
@@ -104,33 +127,52 @@ impl Controller {
         self.actions.lock().unwrap().clone()
     }
 
-    /// A world broke somewhere in the pipeline. Both worker members get
-    /// a strike; the worker whose *every* world is now reported broken
-    /// is the dead one (its neighbors keep ≥1 healthy world). Dead
-    /// workers are recovered once.
-    pub fn on_world_broken(&self, world: &str) -> anyhow::Result<Option<Action>> {
-        if std::env::var("MW_DEBUG").is_ok() {
-            eprintln!("[controller] broken world reported: {world}");
-        }
+    /// A world broke somewhere in the pipeline. `culprit` is the rank
+    /// the failure signal blamed, when it could (see module docs); with
+    /// it the dead worker is identified directly, without it the report
+    /// lands as a strike and the conviction rule decides. Dead workers
+    /// are recovered once per incident.
+    pub fn on_world_broken(
+        &self,
+        world: &str,
+        culprit: Option<usize>,
+    ) -> anyhow::Result<Option<Action>> {
+        crate::metrics::global().counter("controller.broken_reports").inc();
+        let culprit_s = culprit.map(|c| c.to_string()).unwrap_or_else(|| "-".into());
+        crate::metrics::log_event(
+            "controller.world_broken",
+            &[("world", world), ("culprit_rank", culprit_s.as_str())],
+        );
         let dead_node = {
             let topo = self.topo.lock().unwrap();
             let Some(def) = topo.worlds.iter().find(|w| w.name == world) else {
                 return Ok(None); // already cleaned up
             };
-            let members = def.members;
-            let mut strikes = self.strikes.lock().unwrap();
-            let mut verdict = None;
-            for m in members {
-                if let NodeId::Worker { .. } = m {
-                    let set = strikes.entry(m).or_default();
-                    set.insert(world.to_string());
-                    let total = topo.worlds_of(m).len();
-                    if total > 0 && set.len() >= total {
-                        verdict = Some(m);
+            if let Some(rank) = culprit {
+                match def.members.get(rank).copied() {
+                    Some(m @ NodeId::Worker { .. }) => Some(m),
+                    // The leader (or a bogus rank) — nothing to recover.
+                    _ => return Ok(None),
+                }
+            } else {
+                let mut strikes = self.strikes.lock().unwrap();
+                let mut verdict = None;
+                for &m in &def.members {
+                    if let NodeId::Worker { .. } = m {
+                        let set = strikes.entry(m).or_default();
+                        set.insert(world.to_string());
+                        let worlds = topo.worlds_of(m);
+                        let all_broken =
+                            !worlds.is_empty() && worlds.iter().all(|w| set.contains(&w.name));
+                        let edge_evidence =
+                            worlds.iter().any(|w| !w.is_tp() && set.contains(&w.name));
+                        if all_broken && edge_evidence {
+                            verdict = Some(m);
+                        }
                     }
                 }
+                verdict
             }
-            verdict
         };
         let Some(dead_node) = dead_node else { return Ok(None) };
         self.strikes.lock().unwrap().remove(&dead_node);
@@ -149,16 +191,29 @@ impl Controller {
         let NodeId::Worker { stage, .. } = dead_node else {
             return Ok(None);
         };
-        // Remove the corpse's worlds from the map.
-        {
-            let mut topo = self.topo.lock().unwrap();
-            topo.remove_node(dead_node);
-        }
         self.worker_ctrl.lock().unwrap().remove(&dead_node);
+        let sharded = self.topo.lock().unwrap().tp_of(stage) > 1;
         if !self.policy.recover {
+            // Still remove the corpse's broken worlds from the map.
+            let removed = self.topo.lock().unwrap().remove_node(dead_node);
+            self.purge_strikes(&removed);
             return Ok(None);
         }
-        let replacement = self.add_replica(stage)?;
+        let replacement = if sharded {
+            self.recover_shard(dead_node)?
+        } else {
+            let removed = self.topo.lock().unwrap().remove_node(dead_node);
+            self.purge_strikes(&removed);
+            self.mint_replica(stage)?
+        };
+        crate::metrics::global().counter("controller.recoveries").inc();
+        crate::metrics::log_event(
+            "controller.recovered",
+            &[
+                ("dead", dead_node.to_string().as_str()),
+                ("replacement", replacement.to_string().as_str()),
+            ],
+        );
         let action = Action::Recovered { dead: dead_node, replacement };
         self.actions.lock().unwrap().push(action.clone());
         Ok(Some(action))
@@ -176,59 +231,146 @@ impl Controller {
                 return Ok(None);
             }
         }
-        let node = self.add_replica(stage)?;
+        let node = self.mint_replica(stage)?;
         let action = Action::ScaledOut { stage, node };
         self.actions.lock().unwrap().push(action.clone());
         Ok(Some(action))
     }
 
     /// The shared mint-and-join path (Fig. 2c online instantiation):
-    /// 1. extend the topology with a new replica and fresh worlds;
+    /// 1. extend the topology with a new replica (all `tp` shards of
+    ///    it) and fresh worlds;
     /// 2. tell every *existing* member to join its side (non-blocking
     ///    for their data planes — they init on their control threads);
-    /// 3. spawn the new worker, which joins all its worlds.
-    fn add_replica(&self, stage: usize) -> anyhow::Result<NodeId> {
-        let (node, fresh) = {
+    /// 3. spawn the new replica's shards, which join all their worlds.
+    fn mint_replica(&self, stage: usize) -> anyhow::Result<NodeId> {
+        let (node, fresh, tp) = {
             let mut topo = self.topo.lock().unwrap();
             let base = free_port();
-            topo.add_replica(stage, base)
+            let (node, fresh) = topo.add_replica(stage, base);
+            (node, fresh, topo.tp_of(stage))
         };
-        // Existing members first, so their rendezvous is already waiting
-        // when the new worker arrives (paper: join takes ~20 ms).
-        let ctrl = self.worker_ctrl.lock().unwrap();
-        for def in &fresh {
-            for member in def.members {
-                if member == node {
-                    continue;
-                }
-                match member {
-                    NodeId::Leader => (self.leader_join)(def)?,
-                    w => {
-                        if let Some(tx) = ctrl.get(&w) {
-                            let _ = tx.send(TopoUpdate::AddWorld(def.clone()));
-                        }
-                    }
-                }
-            }
+        let NodeId::Worker { replica, .. } = node else { unreachable!("worker minted") };
+        // Existing workers first, so their rendezvous is already waiting
+        // when the new workers arrive (paper: join takes ~20 ms). The
+        // new replica's shards are excluded — they are spawned below.
+        self.notify_workers(&fresh, |m| m.in_replica(stage, replica));
+        for shard in 0..tp {
+            self.spawner
+                .spawn(NodeId::Worker { stage, replica, shard }, fresh.clone())?;
         }
-        drop(ctrl);
-        self.spawner.spawn(node, fresh)?;
+        // The leader last: its join blocks until the world forms, so the
+        // counterpart worker must already be spawning (first/last-stage
+        // edges would deadlock otherwise).
+        self.join_leader(&fresh)?;
         Ok(node)
     }
 
-    /// Retire a replica (scale-in): drain via Shutdown on its control
-    /// channel and drop its worlds from the topology.
-    pub fn scale_in(&self, node: NodeId) -> anyhow::Result<Option<Action>> {
-        let removed = {
+    /// Shard-granularity recovery: the replica and shard ids survive;
+    /// only the replica's *broken* worlds (the TP world, plus the
+    /// head's edges when the head died) are re-minted with fresh
+    /// generation-tagged names. Surviving shards and edge peers rejoin
+    /// over their control channels; only the dead shard is respawned.
+    fn recover_shard(&self, dead_shard: NodeId) -> anyhow::Result<NodeId> {
+        let (removed, fresh) = {
             let mut topo = self.topo.lock().unwrap();
-            topo.remove_node(node)
+            let base = free_port();
+            topo.remint_replica(dead_shard, base)
+        };
+        self.purge_strikes(&removed);
+        self.notify_workers(&fresh, |m| m == dead_shard);
+        let result = self
+            .spawner
+            .spawn(dead_shard, fresh.clone())
+            .and_then(|()| self.join_leader(&fresh));
+        // The shard id lives again (or may legitimately die/fail again):
+        // clear the dedupe entry even when the respawn failed, so a later
+        // report can retry recovery instead of hitting the
+        // "already handled" early-return forever. (Duplicate reports of
+        // *this* incident reference the removed world names and are
+        // dropped as "already cleaned up".)
+        self.dead.lock().unwrap().remove(&dead_shard);
+        if let Err(e) = result {
+            crate::metrics::global().counter("controller.recovery_failures").inc();
+            crate::metrics::log_event(
+                "controller.recovery_failed",
+                &[
+                    ("dead", dead_shard.to_string().as_str()),
+                    ("error", e.to_string().as_str()),
+                ],
+            );
+            return Err(e);
+        }
+        Ok(dead_shard)
+    }
+
+    /// Ask every existing *worker* member of `fresh` to join its side
+    /// (a non-blocking channel send — they init on their control
+    /// paths), skipping members matched by `exclude` (the ones being
+    /// spawned, which join at startup).
+    fn notify_workers(&self, fresh: &[WorldDef], exclude: impl Fn(NodeId) -> bool) {
+        let ctrl = self.worker_ctrl.lock().unwrap();
+        for def in fresh {
+            for &member in &def.members {
+                if exclude(member) || member == NodeId::Leader {
+                    continue;
+                }
+                if let Some(tx) = ctrl.get(&member) {
+                    let _ = tx.send(TopoUpdate::AddWorld(def.clone()));
+                }
+            }
+        }
+    }
+
+    /// Join the leader's side of any `fresh` world it belongs to. The
+    /// call blocks until the world forms, so it must run *after* the
+    /// replacement workers were spawned.
+    fn join_leader(&self, fresh: &[WorldDef]) -> anyhow::Result<()> {
+        for def in fresh {
+            if def.members.contains(&NodeId::Leader) {
+                (self.leader_join)(def)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop removed world names from every strike set, so stale
+    /// evidence from a cleaned-up incident can never help convict a
+    /// live worker later.
+    fn purge_strikes(&self, removed: &[String]) {
+        if removed.is_empty() {
+            return;
+        }
+        let mut strikes = self.strikes.lock().unwrap();
+        for set in strikes.values_mut() {
+            set.retain(|w| !removed.iter().any(|r| r == w));
+        }
+        strikes.retain(|_, s| !s.is_empty());
+    }
+
+    /// Retire a whole replica (scale-in): drain via Shutdown on every
+    /// shard's control channel and drop the replica's worlds from the
+    /// topology.
+    pub fn scale_in(&self, node: NodeId) -> anyhow::Result<Option<Action>> {
+        let NodeId::Worker { stage, replica, .. } = node else {
+            return Ok(None);
+        };
+        let (removed, shards) = {
+            let mut topo = self.topo.lock().unwrap();
+            let shards = topo.shards_of(stage, replica);
+            (topo.remove_replica(stage, replica), shards)
         };
         if removed.is_empty() {
             return Ok(None);
         }
-        if let Some(tx) = self.worker_ctrl.lock().unwrap().remove(&node) {
-            let _ = tx.send(TopoUpdate::Shutdown);
+        self.purge_strikes(&removed);
+        let mut ctrl = self.worker_ctrl.lock().unwrap();
+        for shard in shards {
+            if let Some(tx) = ctrl.remove(&shard) {
+                let _ = tx.send(TopoUpdate::Shutdown);
+            }
         }
+        drop(ctrl);
         let action = Action::ScaledIn { node };
         self.actions.lock().unwrap().push(action.clone());
         Ok(Some(action))
@@ -238,38 +380,55 @@ impl Controller {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::topology::WorldKind;
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Arc;
+    use std::sync::{Arc, Mutex};
 
-    struct CountingSpawner(Arc<AtomicUsize>);
+    struct CountingSpawner {
+        count: Arc<AtomicUsize>,
+        nodes: Arc<Mutex<Vec<NodeId>>>,
+    }
 
     impl Spawner for CountingSpawner {
-        fn spawn(&self, _node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()> {
+        fn spawn(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()> {
             assert!(!worlds.is_empty());
-            self.0.fetch_add(1, Ordering::SeqCst);
+            assert!(
+                worlds.iter().any(|w| w.rank_of(node).is_some()),
+                "spawned node must be a member of at least one fresh world"
+            );
+            self.count.fetch_add(1, Ordering::SeqCst);
+            self.nodes.lock().unwrap().push(node);
             Ok(())
         }
     }
 
-    fn controller(policy: ScalingPolicy) -> (Controller, Arc<AtomicUsize>) {
+    type Spawned = (Controller, Arc<AtomicUsize>, Arc<Mutex<Vec<NodeId>>>);
+
+    fn controller_for(topo: Topology, policy: ScalingPolicy) -> Spawned {
         let spawned = Arc::new(AtomicUsize::new(0));
-        let topo = Topology::pipeline("t", &[1, 2, 1], 31_000);
+        let nodes = Arc::new(Mutex::new(Vec::new()));
         let c = Controller::new(
             topo,
             policy,
-            Box::new(CountingSpawner(spawned.clone())),
+            Box::new(CountingSpawner { count: spawned.clone(), nodes: nodes.clone() }),
             |_def| Ok(()),
         );
+        (c, spawned, nodes)
+    }
+
+    fn controller(policy: ScalingPolicy) -> (Controller, Arc<AtomicUsize>) {
+        let (c, spawned, _) =
+            controller_for(Topology::pipeline("t", &[1, 2, 1], 31_000), policy);
         (c, spawned)
     }
 
     #[test]
     fn recovery_replaces_dead_worker_once() {
         let (c, spawned) = controller(ScalingPolicy::default());
-        let p3 = NodeId::Worker { stage: 1, replica: 1 };
+        let p3 = NodeId::worker(1, 1);
         // When P3 dies, BOTH of its edge worlds break (Fig. 2b). The
-        // first report only strikes; the second proves P3 dead (its
-        // neighbors still have healthy worlds elsewhere).
+        // first unattributed report only strikes; the second proves P3
+        // dead (its neighbors still have healthy worlds elsewhere).
         let worlds: Vec<String> = c
             .topology()
             .worlds_of(p3)
@@ -277,12 +436,12 @@ mod tests {
             .map(|w| w.name.clone())
             .collect();
         assert_eq!(worlds.len(), 2);
-        assert!(c.on_world_broken(&worlds[0]).unwrap().is_none());
-        let action = c.on_world_broken(&worlds[1]).unwrap().unwrap();
+        assert!(c.on_world_broken(&worlds[0], None).unwrap().is_none());
+        let action = c.on_world_broken(&worlds[1], None).unwrap().unwrap();
         match action {
             Action::Recovered { dead, replacement } => {
                 assert_eq!(dead, p3);
-                assert_eq!(replacement, NodeId::Worker { stage: 1, replica: 2 });
+                assert_eq!(replacement, NodeId::worker(1, 2));
             }
             other => panic!("{other:?}"),
         }
@@ -296,15 +455,36 @@ mod tests {
         assert_eq!(topo.replicas, vec![1, 3, 1]);
         assert_eq!(topo.live_replicas(1), vec![0, 2]);
         assert!(topo.worlds_of(p3).is_empty());
-        let repl = NodeId::Worker { stage: 1, replica: 2 };
+        let repl = NodeId::worker(1, 2);
         assert_eq!(topo.worlds_of(repl).len(), 2);
+    }
+
+    #[test]
+    fn culprit_attribution_convicts_on_first_report() {
+        let (c, spawned) = controller(ScalingPolicy::default());
+        let p3 = NodeId::worker(1, 1);
+        let world = c.topology().worlds_of(p3)[0].name.clone();
+        let rank = c.topology().worlds_of(p3)[0].rank_of(p3).unwrap();
+        let action = c.on_world_broken(&world, Some(rank)).unwrap().unwrap();
+        assert!(matches!(action, Action::Recovered { dead, .. } if dead == p3));
+        assert_eq!(spawned.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn leader_culprit_is_not_recovered() {
+        let (c, spawned) = controller(ScalingPolicy::default());
+        let topo = c.topology();
+        let in_world = topo.in_edges(NodeId::worker(0, 0))[0].name.clone();
+        // Rank 0 of an in-world is the leader.
+        assert!(c.on_world_broken(&in_world, Some(0)).unwrap().is_none());
+        assert_eq!(spawned.load(Ordering::SeqCst), 0);
     }
 
     #[test]
     fn no_recovery_when_disabled() {
         let (c, spawned) =
             controller(ScalingPolicy { recover: false, ..Default::default() });
-        let p2 = NodeId::Worker { stage: 1, replica: 0 };
+        let p2 = NodeId::worker(1, 0);
         assert!(c.declare_dead(p2).unwrap().is_none());
         assert_eq!(spawned.load(Ordering::SeqCst), 0);
         assert!(c.topology().worlds_of(p2).is_empty(), "corpse still removed");
@@ -329,7 +509,7 @@ mod tests {
     #[test]
     fn scale_in_retires_node() {
         let (c, _) = controller(ScalingPolicy::default());
-        let node = NodeId::Worker { stage: 1, replica: 1 };
+        let node = NodeId::worker(1, 1);
         let (tx, rx) = std::sync::mpsc::channel();
         c.register_worker(node, tx);
         let action = c.scale_in(node).unwrap().unwrap();
@@ -343,8 +523,8 @@ mod tests {
     #[test]
     fn existing_members_receive_add_world() {
         let (c, _) = controller(ScalingPolicy::default());
-        let p1 = NodeId::Worker { stage: 0, replica: 0 };
-        let p4 = NodeId::Worker { stage: 2, replica: 0 };
+        let p1 = NodeId::worker(0, 0);
+        let p4 = NodeId::worker(2, 0);
         let (tx1, rx1) = std::sync::mpsc::channel();
         let (tx4, rx4) = std::sync::mpsc::channel();
         c.register_worker(p1, tx1);
@@ -353,5 +533,146 @@ mod tests {
         // P1 gets the upstream edge, P4 the downstream edge.
         assert!(matches!(rx1.try_recv(), Ok(TopoUpdate::AddWorld(_))));
         assert!(matches!(rx4.try_recv(), Ok(TopoUpdate::AddWorld(_))));
+    }
+
+    // ------------------------------------------ sharded (tp > 1) cases
+
+    fn tp_topology() -> Topology {
+        // 2 stages; stage 1 has 2 replicas of 2 shards each.
+        Topology::pipeline_tp("t", &[1, 2], &[1, 2], 35_000)
+    }
+
+    #[test]
+    fn dead_nonhead_shard_is_respawned_under_its_own_id() {
+        let (c, spawned, nodes) = controller_for(tp_topology(), ScalingPolicy::default());
+        let shard1 = NodeId::Worker { stage: 1, replica: 0, shard: 1 };
+        let head = NodeId::worker(1, 0);
+        let (tx_head, rx_head) = std::sync::mpsc::channel();
+        c.register_worker(head, tx_head);
+        let tp_world = c.topology().tp_world_of(shard1).unwrap().name.clone();
+        let old_edges: Vec<String> = c
+            .topology()
+            .worlds_of(head)
+            .iter()
+            .filter(|w| !w.is_tp())
+            .map(|w| w.name.clone())
+            .collect();
+
+        // The watchdog attributes the TP-world break to rank 1 == shard 1.
+        let action = c.on_world_broken(&tp_world, Some(1)).unwrap().unwrap();
+        assert_eq!(
+            action,
+            Action::Recovered { dead: shard1, replacement: shard1 },
+            "shard id survives; only its worlds are fresh"
+        );
+        assert_eq!(spawned.load(Ordering::SeqCst), 1, "only the dead shard respawns");
+        assert_eq!(nodes.lock().unwrap().as_slice(), &[shard1]);
+        // The surviving head rejoins the fresh TP world over control.
+        match rx_head.try_recv() {
+            Ok(TopoUpdate::AddWorld(def)) => {
+                assert_eq!(def.kind, WorldKind::Tp);
+                assert!(def.name.contains("#g1"), "fresh generation-tagged name: {}", def.name);
+                assert_ne!(def.name, tp_world, "broken names are never reused");
+            }
+            other => panic!("{other:?}"),
+        }
+        // The head's healthy edges were not re-minted.
+        let topo = c.topology();
+        let new_edges: Vec<String> =
+            topo.worlds_of(head).iter().filter(|w| !w.is_tp()).map(|w| w.name.clone()).collect();
+        assert_eq!(old_edges, new_edges);
+        // Duplicate reports of the old world are ignored…
+        assert!(c.on_world_broken(&tp_world, Some(1)).unwrap().is_none());
+        // …but the revived shard dying *again* is a new incident.
+        let fresh_tp = topo.tp_world_of(shard1).unwrap().name.clone();
+        let again = c.on_world_broken(&fresh_tp, Some(1)).unwrap().unwrap();
+        assert!(matches!(again, Action::Recovered { dead, .. } if dead == shard1));
+    }
+
+    #[test]
+    fn dead_head_shard_reminted_with_edges() {
+        let (c, spawned, nodes) = controller_for(tp_topology(), ScalingPolicy::default());
+        let head = NodeId::worker(1, 1);
+        let shard1 = NodeId::Worker { stage: 1, replica: 1, shard: 1 };
+        let (tx_s1, rx_s1) = std::sync::mpsc::channel();
+        c.register_worker(shard1, tx_s1);
+        let tp_world = c.topology().tp_world_of(head).unwrap().name.clone();
+        let action = c.on_world_broken(&tp_world, Some(0)).unwrap().unwrap();
+        assert_eq!(action, Action::Recovered { dead: head, replacement: head });
+        assert_eq!(spawned.load(Ordering::SeqCst), 1);
+        assert_eq!(nodes.lock().unwrap().as_slice(), &[head]);
+        // The surviving shard rejoins the fresh TP world; the head's
+        // fresh edges went to its neighbors (here: the leader callback
+        // and the upstream head, not registered — no panic).
+        assert!(matches!(rx_s1.try_recv(), Ok(TopoUpdate::AddWorld(_))));
+        let topo = c.topology();
+        assert!(topo.tp_world_of(head).unwrap().name.contains("#g1"));
+        assert_eq!(topo.in_edges(head).len(), 1);
+        assert!(topo.in_edges(head)[0].name.contains("#g1"));
+    }
+
+    #[test]
+    fn tp_neighbors_are_never_convicted_by_strikes() {
+        // Unattributed TP-world evidence alone must not convict the
+        // non-head shard (its only world broke, but when a head dies its
+        // shards' TP world breaks too — only attribution can tell).
+        let (c, spawned, _) = controller_for(tp_topology(), ScalingPolicy::default());
+        let shard1 = NodeId::Worker { stage: 1, replica: 0, shard: 1 };
+        let tp_world = c.topology().tp_world_of(shard1).unwrap().name.clone();
+        assert!(c.on_world_broken(&tp_world, None).unwrap().is_none());
+        assert_eq!(spawned.load(Ordering::SeqCst), 0);
+        // Edge evidence then convicts the head, not the shard.
+        let head = NodeId::worker(1, 0);
+        let edges: Vec<String> = c
+            .topology()
+            .worlds_of(head)
+            .iter()
+            .filter(|w| !w.is_tp())
+            .map(|w| w.name.clone())
+            .collect();
+        let mut last = None;
+        for e in &edges {
+            last = c.on_world_broken(e, None).unwrap();
+        }
+        let action = last.expect("head convicted once all its worlds are broken");
+        assert!(matches!(action, Action::Recovered { dead, .. } if dead == head));
+    }
+
+    #[test]
+    fn scale_out_of_sharded_stage_spawns_all_shards() {
+        let (c, spawned, nodes) = controller_for(
+            tp_topology(),
+            ScalingPolicy { scale_up_depth: 1.0, max_replicas: 3, recover: true },
+        );
+        let action = c.maybe_scale_out(1, 100.0).unwrap().unwrap();
+        assert!(matches!(action, Action::ScaledOut { stage: 1, .. }));
+        assert_eq!(spawned.load(Ordering::SeqCst), 2, "both shards spawned");
+        let got = nodes.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![
+                NodeId::Worker { stage: 1, replica: 2, shard: 0 },
+                NodeId::Worker { stage: 1, replica: 2, shard: 1 },
+            ]
+        );
+        let topo = c.topology();
+        assert!(topo.tp_world_of(NodeId::worker(1, 2)).is_some());
+    }
+
+    #[test]
+    fn scale_in_retires_every_shard_of_the_replica() {
+        let (c, _, _) = controller_for(tp_topology(), ScalingPolicy::default());
+        let head = NodeId::worker(1, 0);
+        let shard1 = NodeId::Worker { stage: 1, replica: 0, shard: 1 };
+        let (tx0, rx0) = std::sync::mpsc::channel();
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        c.register_worker(head, tx0);
+        c.register_worker(shard1, tx1);
+        let action = c.scale_in(head).unwrap().unwrap();
+        assert_eq!(action, Action::ScaledIn { node: head });
+        assert!(matches!(rx0.try_recv(), Ok(TopoUpdate::Shutdown)));
+        assert!(matches!(rx1.try_recv(), Ok(TopoUpdate::Shutdown)));
+        assert!(c.topology().worlds_of(head).is_empty());
+        assert!(c.topology().worlds_of(shard1).is_empty());
     }
 }

@@ -16,7 +16,7 @@ use super::topology::{NodeId, Topology, WorldDef};
 use crate::metrics::{Histogram, Timeline};
 use crate::multiworld::{WorldCommunicator, WorldEvent, WorldManager};
 use crate::mwccl::{Work, WorldOptions};
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use crate::util::time::since_epoch;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -119,7 +119,7 @@ impl Leader {
         let addr: std::net::SocketAddr =
             format!("127.0.0.1:{}", def.store_port).parse().unwrap();
         self.mgr
-            .initialize_world(&def.name, rank, 2, addr, opts.clone())?;
+            .initialize_world(&def.name, rank, def.size(), addr, opts.clone())?;
         if rank == 0 {
             self.in_router.add_replica(&def.name);
         } else {
@@ -180,10 +180,18 @@ impl Leader {
             return; // duplicate (retry raced with the original) — dedupe
         };
         let logits = env.tensor; // [B, S, V]
+        // Forward-only pipelines echo the (i32) input instead of
+        // producing logits; answer with token 0 rather than decoding.
+        let decodable = logits.dtype() == DType::F32
+            && logits.elems() >= self.batch_size * self.seq_len * self.vocab;
         let now = since_epoch();
         let mut responses = self.responses.lock().unwrap();
         for (row, req) in out.requests.iter().enumerate() {
-            let next_token = argmax_last(&logits, row, self.seq_len, self.vocab);
+            let next_token = if decodable {
+                argmax_last(&logits, row, self.seq_len, self.vocab)
+            } else {
+                0
+            };
             let latency = now - req.arrival;
             self.latency
                 .observe(Duration::from_secs_f64(latency.max(0.0)));

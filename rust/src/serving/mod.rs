@@ -2,11 +2,36 @@
 //!
 //! This is the "full-fledged model serving system" the paper's
 //! conclusion names as future work, built here as a first-class part of
-//! the reproduction: a leader process batches and routes requests into a
-//! stage-partitioned pipeline whose workers execute AOT-compiled model
-//! stages (see [`crate::runtime`]) and forward activations through
-//! MultiWorld worlds — one small world per pipeline edge, exactly the
-//! Fig. 2 rhombus.
+//! the reproduction: a leader process batches and routes requests into
+//! a stage-partitioned pipeline whose workers execute AOT-compiled
+//! model stages (see [`crate::runtime`]) and forward activations
+//! through MultiWorld worlds — one small world per pipeline edge,
+//! exactly the Fig. 2 rhombus.
+//!
+//! **Serving parallelism.** Two axes compose:
+//!
+//! * *Pipeline/replica parallelism*: stages are partitioned across
+//!   workers; each stage may be replicated, with one two-member edge
+//!   world per (upstream replica, downstream replica) pair and
+//!   least-inflight routing between them.
+//! * *Tensor parallelism*: each replica of a stage may be split into
+//!   `tp` **shards** — workers named `s{stage}r{replica}t{shard}`
+//!   (shard 0, the *head*, omits the suffix and is the only shard on
+//!   edge worlds) — joined by one multi-member `tp-s{stage}r{replica}`
+//!   world per replica. Per batch, the head `broadcast`s the activation
+//!   across the TP world, every shard computes its weight slice, and
+//!   the partial outputs combine with `all_reduce(Sum)` before the head
+//!   forwards downstream — the first worlds in the system with more
+//!   than two members, driving the flat/ring collective selector in
+//!   the serving hot path. A `tp = 1` deployment is byte-identical
+//!   (world names and members) to the pre-sharding scheme.
+//!
+//! Fault domains are shard-granular: a dead shard breaks its replica's
+//! TP world (plus the head's edge worlds when the head died) and the
+//! controller re-mints exactly those worlds under fresh
+//! generation-tagged names, respawning only the dead shard; TP
+//! neighbors rejoin over their control channels and are never declared
+//! dead on TP-world evidence alone (see [`controller`]).
 //!
 //! Pieces (each independently testable):
 //!
@@ -16,12 +41,15 @@
 //! * [`router`] — replica selection with least-inflight routing,
 //!   backpressure and replica death handling.
 //! * [`topology`] — names and members of every world in a pipeline
-//!   deployment (leader↔stage0, stageᵢ↔stageᵢ₊₁ bipartite, last↔leader).
+//!   deployment (leader↔stage0, stageᵢ↔stageᵢ₊₁ bipartite, last↔leader,
+//!   plus one intra-replica TP world per sharded replica).
 //! * [`stage_worker`] — the worker loop: receive activation from any
-//!   in-edge, run the stage, route downstream.
+//!   in-edge, run the TP inner loop (or the stage directly), route
+//!   downstream; non-head shards run the TP follower loop.
 //! * [`leader`] — the leader loop: batch, inject, collect, measure.
 //! * [`controller`] — elasticity: watches load and failures, decides
-//!   scale-out/in and recovery, and drives online instantiation.
+//!   scale-out/in and shard-granularity recovery, and drives online
+//!   instantiation.
 
 pub mod batcher;
 pub mod controller;
@@ -37,4 +65,4 @@ pub use leader::{Leader, LeaderReport};
 pub use request::{Request, RequestGen, Response};
 pub use router::ReplicaRouter;
 pub use stage_worker::{run_stage_worker, StageWorkerConfig, WorkerStats};
-pub use topology::{NodeId, Topology, WorldDef};
+pub use topology::{NodeId, Topology, WorldDef, WorldKind};

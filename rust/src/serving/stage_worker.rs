@@ -1,26 +1,41 @@
 //! The stage worker: the compute node of the serving pipeline.
 //!
-//! A worker owns one model stage (an AOT PJRT executable), is the
-//! downstream member of a world per upstream neighbor and the upstream
-//! member of a world per downstream neighbor, and loops:
+//! A worker owns one *shard* of one model stage. The replica's **head**
+//! (shard 0) is the downstream member of a world per upstream neighbor
+//! and the upstream member of a world per downstream neighbor, and
+//! loops:
 //!
 //! ```text
 //!   wait_any(pending irecv over in-edges)        ← non-blocking CCL +
-//!      → unpack envelope → stage.run             busy-wait poller
+//!      → unpack envelope                           busy-wait poller
+//!      → [tp > 1] broadcast activation over the
+//!        intra-replica TP world, run own weight
+//!        slice, all_reduce(Sum) partial outputs  ← the TP inner loop
+//!      → [tp = 1] stage.run                      ← unsharded fast path
 //!      → pick out-edge (least-inflight router)   ← stage-level routing
 //!      → send envelope downstream
 //! ```
 //!
+//! Non-head shards sit on no edge worlds at all: they loop on the TP
+//! world only — `broadcast` (receive the activation from the head),
+//! compute their weight slice, `all_reduce` — so the first multi-member
+//! worlds in the system drive the ring/flat collective selector in the
+//! serving hot path, not just in benches.
+//!
 //! Fault tolerance: a broken in-edge is dropped (the worker keeps
 //! serving its other edges — Fig. 2b); a broken out-edge is marked dead
-//! in the router and the batch is re-routed to a surviving replica.
-//! Online instantiation: the control channel delivers fresh
-//! [`WorldDef`]s; the worker joins them with `initialize_world_async`,
-//! so existing traffic never stalls (Fig. 5).
+//! in the router and the batch is re-routed to a surviving replica; a
+//! broken TP world drops the replica out of the compute path (in-flight
+//! batches are abandoned for the leader to retry) until the controller
+//! re-mints a fresh TP world and the surviving shards rejoin it over
+//! their control channels. Online instantiation: the control channel
+//! delivers fresh [`WorldDef`]s; the worker joins them with blocking
+//! init on the control path, so existing traffic never stalls (Fig. 5).
 
 use super::topology::{NodeId, Topology, WorldDef};
-use crate::multiworld::{MwError, WorldEvent, WorldManager};
-use crate::mwccl::{CclError, Work, WorldOptions};
+use crate::config::CollOp;
+use crate::multiworld::{MwError, WorldCommunicator, WorldEvent, WorldManager};
+use crate::mwccl::{CclError, ReduceOp, Work, WorldOptions};
 use crate::runtime::StageRunner;
 use crate::serving::router::ReplicaRouter;
 use crate::tensor::{read_tensor, DType, Tensor};
@@ -65,17 +80,19 @@ impl Envelope {
 /// Control-plane messages to a running worker.
 #[derive(Debug)]
 pub enum TopoUpdate {
-    /// Join a fresh world (online instantiation / scale-out).
+    /// Join a fresh world (online instantiation / scale-out / shard
+    /// recovery — edge and TP worlds alike).
     AddWorld(WorldDef),
     /// Drain and exit.
     Shutdown,
 }
 
-/// Configuration for one worker node.
+/// Configuration for one worker node (one shard).
 pub struct StageWorkerConfig {
     pub node: NodeId,
     pub topology: Topology,
-    /// Stage executable; `None` = forward-only (transport benches).
+    /// Stage executable; `None` = forward-only (transport benches and
+    /// the artifact-less serving tests).
     pub stage: Option<Arc<StageRunner>>,
     pub opts: WorldOptions,
     /// Control channel (None = static topology).
@@ -88,13 +105,69 @@ pub struct StageWorkerConfig {
 pub struct WorkerStats {
     pub processed: u64,
     pub forwarded: u64,
+    /// TP rounds (broadcast + all_reduce) this shard took part in.
+    pub tp_batches: u64,
     pub in_edge_failures: u64,
     pub out_edge_failures: u64,
+    /// TP worlds this shard saw break underneath it.
+    pub tp_failures: u64,
     pub joined_worlds: u64,
 }
 
+/// This shard's live membership in its replica's TP world.
+#[derive(Clone)]
+struct TpState {
+    world: String,
+    /// Rank == shard index (the head is rank 0 and drives the rounds).
+    rank: usize,
+    size: usize,
+    /// Cached world handle for `last_algo` reads (skips the manager's
+    /// registry lock on the per-batch path).
+    handle: crate::mwccl::World,
+    /// Pre-resolved `serving.tp.<op>.<algo>` counters (broadcast then
+    /// all_reduce, flat then ring) — the per-batch observability is two
+    /// atomic increments, no allocation, no registry lookup.
+    algo_counters: [Arc<crate::metrics::Counter>; 4],
+}
+
+const TP_BCAST_FLAT: usize = 0;
+const TP_AR_FLAT: usize = 2;
+
+impl TpState {
+    /// Resolve the TP state for a freshly joined (or startup-time) TP
+    /// world; `None` when the world already vanished from the manager.
+    fn resolve(mgr: &WorldManager, name: &str, rank: usize, size: usize) -> Option<TpState> {
+        let handle = mgr.world(name).ok()?;
+        let g = crate::metrics::global();
+        Some(TpState {
+            world: name.to_string(),
+            rank,
+            size,
+            handle,
+            algo_counters: [
+                g.counter("serving.tp.broadcast.flat"),
+                g.counter("serving.tp.broadcast.ring"),
+                g.counter("serving.tp.all_reduce.flat"),
+                g.counter("serving.tp.all_reduce.ring"),
+            ],
+        })
+    }
+
+    /// Record the algorithms the round's broadcast/all_reduce actually
+    /// ran (from [`crate::mwccl::World::last_algo`]) — the observable
+    /// proof that the serving hot path drives the collective selector.
+    fn note_round_algos(&self) {
+        if let Some(algo) = self.handle.last_algo(CollOp::Broadcast) {
+            self.algo_counters[TP_BCAST_FLAT + usize::from(algo == "ring")].inc();
+        }
+        if let Some(algo) = self.handle.last_algo(CollOp::AllReduce) {
+            self.algo_counters[TP_AR_FLAT + usize::from(algo == "ring")].inc();
+        }
+    }
+}
+
 /// Initialize this node's side of every world it belongs to, in
-/// parallel (each `World::init` blocks until the peer arrives).
+/// parallel (each `World::init` blocks until all members arrive).
 pub fn init_node_worlds(
     mgr: &WorldManager,
     topo: &Topology,
@@ -107,7 +180,7 @@ pub fn init_node_worlds(
         .map(|def| {
             let rank = def.rank_of(node).expect("member");
             let addr: SocketAddr = format!("127.0.0.1:{}", def.store_port).parse().unwrap();
-            mgr_init_async(mgr.clone(), def.name.clone(), rank, 2, addr, opts.clone())
+            mgr_init_async(mgr.clone(), def.name.clone(), rank, def.size(), addr, opts.clone())
         })
         .collect();
     for h in handles {
@@ -131,14 +204,108 @@ fn mgr_init_async(
         .expect("spawn world init")
 }
 
-/// Run the worker loop until `stop` or until every in-edge is gone and
-/// no control channel can bring more.
+/// This shard's contribution to the TP combine: its weight slice's
+/// partial output when a stage executable is loaded; in forward-only
+/// mode, an f32 view of the activation scaled by `1/tp` (so the
+/// all_reduce still moves real activation-sized payloads and sums to
+/// the broadcast value for power-of-two `tp`).
+fn shard_partial(
+    stage: Option<&Arc<StageRunner>>,
+    input: &Tensor,
+    shard: usize,
+    tp: usize,
+) -> anyhow::Result<Tensor> {
+    match stage {
+        Some(s) => s.run_sharded(input, shard, tp),
+        None => {
+            let mut t = tensor_as_f32(input);
+            t.scale(1.0 / tp as f32);
+            Ok(t)
+        }
+    }
+}
+
+/// Flat f32 view of any tensor (forward-only TP combine input).
+fn tensor_as_f32(t: &Tensor) -> Tensor {
+    match t.dtype() {
+        DType::F32 => t.clone(),
+        DType::I32 => {
+            let vals: Vec<f32> = t.as_i32().iter().map(|&v| v as f32).collect();
+            Tensor::from_f32(&[vals.len()], &vals)
+        }
+        _ => {
+            let vals: Vec<f32> = t.bytes().iter().map(|&b| b as f32).collect();
+            Tensor::from_f32(&[vals.len()], &vals)
+        }
+    }
+}
+
+/// Wait for `work` with bounded polls so `stop` stays live. Returns
+/// `None` when stopped before completion.
+fn wait_work(
+    comm: &WorldCommunicator,
+    work: &Work,
+    stop: &AtomicBool,
+) -> Option<Result<Option<Tensor>, CclError>> {
+    loop {
+        if comm
+            .wait_any_deadline(std::slice::from_ref(work), Some(Duration::from_millis(20)))
+            .is_some()
+        {
+            return Some(work.wait());
+        }
+        if stop.load(Ordering::Relaxed) {
+            return None;
+        }
+    }
+}
+
+/// One head-side TP round: broadcast the activation to the shards,
+/// compute the head's own partial, all_reduce the partials. Returns the
+/// combined output (or the original activation in forward-only mode,
+/// where the combine payload is a cast — see [`shard_partial`]).
+fn tp_head_round(
+    comm: &WorldCommunicator,
+    stage: Option<&Arc<StageRunner>>,
+    tp: &TpState,
+    input: &Tensor,
+    stop: &AtomicBool,
+) -> anyhow::Result<Option<Tensor>> {
+    let bcast = comm
+        .broadcast(&tp.world, Some(input.clone()), 0)
+        .map_err(|e| anyhow::anyhow!("tp broadcast: {e}"))?;
+    match wait_work(comm, &bcast, stop) {
+        Some(Ok(_)) => {}
+        Some(Err(e)) => anyhow::bail!("tp broadcast: {e}"),
+        None => return Ok(None), // stopping
+    }
+    let partial = shard_partial(stage, input, tp.rank, tp.size)?;
+    let reduce = comm
+        .all_reduce(&tp.world, partial, ReduceOp::Sum)
+        .map_err(|e| anyhow::anyhow!("tp all_reduce: {e}"))?;
+    let reduced = match wait_work(comm, &reduce, stop) {
+        Some(Ok(Some(t))) => t,
+        Some(Ok(None)) => anyhow::bail!("tp all_reduce returned no tensor"),
+        Some(Err(e)) => anyhow::bail!("tp all_reduce: {e}"),
+        None => return Ok(None),
+    };
+    tp.note_round_algos();
+    Ok(Some(match stage {
+        Some(_) => reduced,
+        // Forward-only: the combine moved a cast; forward the original
+        // payload byte-exactly whatever its dtype.
+        None => input.clone(),
+    }))
+}
+
+/// Run the worker loop until `stop`, or until every data source (in-edge
+/// or TP world) is gone and no control channel can bring more.
 pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Result<WorkerStats> {
     let comm = mgr.communicator();
     let events = mgr.subscribe();
     let mut stats = WorkerStats::default();
 
-    // Live edge sets.
+    // Live edge sets (heads only — non-head shards sit on no edges).
     let mut in_edges: Vec<String> = cfg
         .topology
         .in_edges(cfg.node)
@@ -149,6 +316,18 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
     for w in cfg.topology.out_edges(cfg.node) {
         out_router.add_replica(&w.name);
     }
+    // This shard's TP world, if its replica is sharded (joined by
+    // init_node_worlds before this loop starts, so the handle resolves).
+    let mut tp: Option<TpState> = cfg.topology.tp_world_of(cfg.node).and_then(|w| {
+        TpState::resolve(&mgr, &w.name, w.rank_of(cfg.node)?, w.size())
+    });
+    // A sharded replica must never compute without its shards: while the
+    // TP world is down (shard death, awaiting the controller's fresh
+    // worlds) the head drops incoming batches instead of serving solo.
+    let sharded = match cfg.node {
+        NodeId::Worker { stage, .. } => cfg.topology.tp_of(stage) > 1,
+        NodeId::Leader => false,
+    };
 
     // One posted irecv per live in-edge.
     let mut pending: HashMap<String, Work> = HashMap::new();
@@ -157,6 +336,8 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
             pending.insert(e.clone(), w);
         }
     }
+    // Non-head shards: the pending broadcast of the next TP round.
+    let mut tp_pending: Option<Work> = None;
 
     let debug = std::env::var("MW_DEBUG").is_ok();
     let mut last_dbg = std::time::Instant::now();
@@ -164,11 +345,12 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
         if debug && last_dbg.elapsed() > Duration::from_secs(1) {
             last_dbg = std::time::Instant::now();
             eprintln!(
-                "[worker {}] alive: in={:?} pending={} out={:?}",
+                "[worker {}] alive: in={:?} pending={} out={:?} tp={:?}",
                 cfg.node,
                 in_edges,
                 pending.len(),
-                out_router.alive_replicas()
+                out_router.alive_replicas(),
+                tp.as_ref().map(|t| &t.world),
             );
         }
         if cfg.stop.load(Ordering::Relaxed) {
@@ -185,12 +367,38 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
                         };
                         let addr: SocketAddr =
                             format!("127.0.0.1:{}", def.store_port).parse().unwrap();
-                        // Blocking init is fine *here*: the joiner is new
-                        // and has no traffic yet. Existing members join
-                        // via their own control threads concurrently.
-                        mgr.initialize_world(&def.name, rank, 2, addr, cfg.opts.clone())?;
+                        // Blocking init is fine *here*: either the joiner
+                        // is new and has no traffic yet, or (shard
+                        // recovery) its TP world just broke and its data
+                        // path is idle anyway. Existing members join via
+                        // their own control threads concurrently. A
+                        // failed join (the counterpart never came up)
+                        // must not kill this worker — drop the world and
+                        // keep serving whatever is still healthy.
+                        let joined = mgr.initialize_world(
+                            &def.name,
+                            rank,
+                            def.size(),
+                            addr,
+                            cfg.opts.clone(),
+                        );
+                        if let Err(e) = joined {
+                            crate::metrics::global().counter("worker.join_failures").inc();
+                            crate::metrics::log_event(
+                                "worker.join_failed",
+                                &[
+                                    ("node", cfg.node.to_string().as_str()),
+                                    ("world", def.name.as_str()),
+                                    ("reason", e.to_string().as_str()),
+                                ],
+                            );
+                            continue;
+                        }
                         stats.joined_worlds += 1;
-                        if rank == 1 {
+                        if def.is_tp() {
+                            tp = TpState::resolve(&mgr, &def.name, rank, def.size());
+                            tp_pending = None;
+                        } else if rank == 1 {
                             in_edges.push(def.name.clone());
                             if let Ok(w) = comm.recv(&def.name, 0, TAG_DATA) {
                                 pending.insert(def.name.clone(), w);
@@ -205,10 +413,14 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
                 }
             }
         }
-        // Fault events: drop broken edges.
+        // Fault events: drop broken edges / the broken TP world.
         while let Ok(evt) = events.try_recv() {
             if let WorldEvent::Broken { world, .. } = evt {
-                if in_edges.contains(&world) {
+                if tp.as_ref().is_some_and(|t| t.world == world) {
+                    tp = None;
+                    tp_pending = None;
+                    stats.tp_failures += 1;
+                } else if in_edges.contains(&world) {
                     in_edges.retain(|e| e != &world);
                     pending.remove(&world);
                     stats.in_edge_failures += 1;
@@ -218,6 +430,93 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
                 }
             }
         }
+
+        if !cfg.node.is_head() {
+            // ---------------- non-head shard: TP follower loop ----------
+            // (Cloned so the broken-world paths can clear `tp` freely.)
+            let Some(tps) = tp.clone() else {
+                if cfg.control.is_none() {
+                    break; // no TP world and no way to get a fresh one
+                }
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            };
+            if tp_pending.is_none() {
+                match comm.broadcast(&tps.world, None, 0) {
+                    Ok(w) => tp_pending = Some(w),
+                    Err(_) => {
+                        // World vanished between the event drain and now.
+                        tp = None;
+                        continue;
+                    }
+                }
+            }
+            let work = tp_pending.as_ref().unwrap().clone();
+            if comm
+                .wait_any_deadline(&[work.clone()], Some(Duration::from_millis(20)))
+                .is_none()
+            {
+                continue; // nothing yet; loop to keep stop/control live
+            }
+            tp_pending = None;
+            match work.wait() {
+                Ok(Some(activation)) => {
+                    // A failed sharded execution is a TP failure, not a
+                    // worker death: break the world so peers unblock and
+                    // the controller can re-mint it.
+                    let partial = match shard_partial(
+                        cfg.stage.as_ref(),
+                        &activation,
+                        tps.rank,
+                        tps.size,
+                    ) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            mgr.break_world(&tps.world, &e.to_string());
+                            tp = None;
+                            stats.tp_failures += 1;
+                            continue;
+                        }
+                    };
+                    let reduce = match comm.all_reduce(&tps.world, partial, ReduceOp::Sum) {
+                        Ok(w) => w,
+                        Err(_) => {
+                            tp = None;
+                            stats.tp_failures += 1;
+                            continue;
+                        }
+                    };
+                    match wait_work(&comm, &reduce, &cfg.stop) {
+                        Some(Ok(_)) => {
+                            stats.processed += 1;
+                            stats.tp_batches += 1;
+                        }
+                        Some(Err(e)) => {
+                            if e.is_fatal_to_world() {
+                                mgr.break_world(&tps.world, &e.to_string());
+                            }
+                            tp = None;
+                            stats.tp_failures += 1;
+                        }
+                        None => {}
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    if debug {
+                        eprintln!("[worker {}] tp broadcast failed: {e}", cfg.node);
+                    }
+                    if e.is_fatal_to_world() {
+                        mgr.break_world(&tps.world, &e.to_string());
+                    }
+                    tp = None;
+                    stats.tp_failures += 1;
+                }
+            }
+            continue;
+        }
+
+        // ------------------------- head: edge-driven pipeline loop ------
         if pending.is_empty() {
             if cfg.control.is_none() && in_edges.is_empty() {
                 break; // nothing will ever arrive again
@@ -241,9 +540,41 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
                     pending.insert(edge.clone(), w);
                 }
                 let env = Envelope::unpack(&packed)?;
-                let result = match &cfg.stage {
-                    Some(stage) => stage.run(&env.tensor)?,
-                    None => env.tensor, // forward-only mode
+                let result = if let Some(tps) = tp.clone() {
+                    // TP inner loop: fan the activation out across the
+                    // replica's shards, combine partial outputs.
+                    match tp_head_round(&comm, cfg.stage.as_ref(), &tps, &env.tensor, &cfg.stop) {
+                        Ok(Some(t)) => {
+                            stats.tp_batches += 1;
+                            t
+                        }
+                        Ok(None) => continue, // stopping mid-round
+                        Err(e) => {
+                            if debug {
+                                eprintln!("[worker {}] tp round failed: {e}", cfg.node);
+                            }
+                            // The replica can't compute without its
+                            // shards: break the TP world, abandon the
+                            // batch (the leader re-dispatches it to a
+                            // surviving replica after its retry timeout)
+                            // and wait for the controller's fresh worlds.
+                            mgr.break_world(&tps.world, &e.to_string());
+                            tp = None;
+                            stats.tp_failures += 1;
+                            continue;
+                        }
+                    }
+                } else if sharded {
+                    // TP world down: the head alone holds only its own
+                    // weight slice. Drop the batch; the leader retries
+                    // it on a surviving replica, and the controller's
+                    // fresh TP world restores this one.
+                    continue;
+                } else {
+                    match &cfg.stage {
+                        Some(stage) => stage.run(&env.tensor)?,
+                        None => env.tensor, // forward-only mode
+                    }
                 };
                 stats.processed += 1;
                 // Route downstream, retrying across replicas on failure.
@@ -319,5 +650,25 @@ mod tests {
         let back = Envelope::unpack(&env.pack()).unwrap();
         assert_eq!(back.id, 7);
         assert_eq!(back.tensor.elems(), 0);
+    }
+
+    #[test]
+    fn forward_only_partials_sum_back_to_the_activation() {
+        // Power-of-two tp: Σ shard partials == the f32 activation, exactly.
+        let t = Tensor::from_f32(&[8], &[1.0, -2.0, 3.5, 0.0, 7.25, 9.0, -4.5, 2.0]);
+        let tp = 4;
+        let mut acc = Tensor::zeros(DType::F32, &[8]);
+        for shard in 0..tp {
+            acc.add_assign(&shard_partial(None, &t, shard, tp).unwrap());
+        }
+        assert_eq!(acc.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn forward_only_partial_casts_non_f32() {
+        let t = Tensor::from_i32(&[4], &[3, -1, 200, 0]);
+        let p = shard_partial(None, &t, 0, 2).unwrap();
+        assert_eq!(p.dtype(), DType::F32);
+        assert_eq!(p.as_f32(), &[1.5, -0.5, 100.0, 0.0]);
     }
 }

@@ -2,22 +2,38 @@
 //! store port each rendezvouses.
 //!
 //! Per the paper (§3.1, Fig. 2) every pipeline *edge* is its own
-//! two-member world:
+//! two-member world; since the sharding refactor every replica may
+//! additionally be split into `tp` tensor-parallel **shards** joined by
+//! one multi-member intra-replica world:
 //!
 //! ```text
-//!   leader → stage0 replicas          world  in-{0}r{r}
-//!   stageᵢ replica a → stageᵢ₊₁ b     world  e{i}r{a}-{i+1}r{b}   (bipartite)
-//!   last-stage replica r → leader     world  out-{N-1}r{r}
+//!   leader → stage0 replicas          world  in-s0r{r}
+//!   stageᵢ replica a → stageᵢ₊₁ b     world  e-s{i}r{a}-s{i+1}r{b}   (bipartite)
+//!   last-stage replica r → leader     world  out-s{N-1}r{r}
+//!   shards of stageᵢ replica r        world  tp-s{i}r{r}             (tp members)
 //! ```
 //!
-//! The upstream member is always rank 0 (and hosts the per-world store);
-//! the downstream member is rank 1. Worlds never span more than one
-//! edge, so a worker failure breaks exactly the edges it touches.
+//! **Naming scheme.** A worker node is `s{stage}r{replica}t{shard}`;
+//! shard 0 — the replica's *head*, the only shard that sits on edge
+//! worlds — omits the `t` suffix, so a `tp = 1` deployment is spelled
+//! exactly like the pre-sharding `s{stage}r{replica}` scheme and its
+//! world names and members are byte-identical to it. Edge worlds always
+//! terminate at heads; the upstream member is rank 0 (and hosts the
+//! per-world store), the downstream member is rank 1. A TP world
+//! `tp-s{stage}r{replica}` contains the replica's shards in shard order
+//! (rank == shard), so the head hosts its store.
+//!
+//! Worlds never span more than one edge or one replica, so a worker
+//! failure breaks exactly the worlds it touches: a dead head breaks its
+//! replica's TP world and its edge worlds; a dead non-head shard breaks
+//! only the TP world (shard-granularity fault domains).
 //!
 //! A topology serializes to JSON so the launcher can hand it to worker
 //! processes; generation numbers let online instantiation mint fresh
 //! world names for replacement workers (a broken world's name is never
-//! reused — CCL worlds are unrecoverable by design).
+//! reused — CCL worlds are unrecoverable by design). Shard recovery
+//! keeps the replica and shard ids and re-mints only the *worlds*
+//! (see [`Topology::remint_replica`]).
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -27,19 +43,48 @@ use std::fmt;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum NodeId {
     Leader,
-    Worker { stage: usize, replica: usize },
+    Worker { stage: usize, replica: usize, shard: usize },
 }
 
 impl fmt::Display for NodeId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             NodeId::Leader => write!(f, "leader"),
-            NodeId::Worker { stage, replica } => write!(f, "s{stage}r{replica}"),
+            NodeId::Worker { stage, replica, shard: 0 } => write!(f, "s{stage}r{replica}"),
+            NodeId::Worker { stage, replica, shard } => {
+                write!(f, "s{stage}r{replica}t{shard}")
+            }
         }
     }
 }
 
 impl NodeId {
+    /// A replica's head (shard 0) — the only shard on edge worlds.
+    pub fn worker(stage: usize, replica: usize) -> NodeId {
+        NodeId::Worker { stage, replica, shard: 0 }
+    }
+
+    /// The head shard of this worker's replica (identity for heads).
+    pub fn head(self) -> NodeId {
+        match self {
+            NodeId::Leader => NodeId::Leader,
+            NodeId::Worker { stage, replica, .. } => NodeId::Worker { stage, replica, shard: 0 },
+        }
+    }
+
+    /// True for shard 0 of a replica (and for the leader).
+    pub fn is_head(self) -> bool {
+        !matches!(self, NodeId::Worker { shard, .. } if shard != 0)
+    }
+
+    /// True when this is a worker shard of `(stage, replica)` — the
+    /// single definition of replica membership (kill/shutdown/world
+    /// removal all filter with it).
+    pub fn in_replica(self, stage: usize, replica: usize) -> bool {
+        matches!(self, NodeId::Worker { stage: s, replica: r, .. }
+            if s == stage && r == replica)
+    }
+
     pub fn parse(s: &str) -> anyhow::Result<NodeId> {
         if s == "leader" {
             return Ok(NodeId::Leader);
@@ -47,33 +92,89 @@ impl NodeId {
         let rest = s
             .strip_prefix('s')
             .ok_or_else(|| anyhow::anyhow!("bad node id {s:?}"))?;
-        let (stage, replica) = rest
+        let (stage, rest) = rest
             .split_once('r')
             .ok_or_else(|| anyhow::anyhow!("bad node id {s:?}"))?;
-        Ok(NodeId::Worker { stage: stage.parse()?, replica: replica.parse()? })
+        let (replica, shard) = match rest.split_once('t') {
+            Some((r, t)) => (r, t.parse()?),
+            None => (rest, 0),
+        };
+        Ok(NodeId::Worker { stage: stage.parse()?, replica: replica.parse()?, shard })
     }
 }
 
-/// One two-member world (a pipeline edge).
+/// What a world is for: a pipeline edge (always two members) or an
+/// intra-replica tensor-parallel group (`tp` members, rank == shard).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorldKind {
+    Edge,
+    Tp,
+}
+
+impl WorldKind {
+    fn name(self) -> &'static str {
+        match self {
+            WorldKind::Edge => "edge",
+            WorldKind::Tp => "tp",
+        }
+    }
+
+    fn parse(s: &str) -> anyhow::Result<WorldKind> {
+        match s {
+            "edge" => Ok(WorldKind::Edge),
+            "tp" => Ok(WorldKind::Tp),
+            other => anyhow::bail!("bad world kind {other:?}"),
+        }
+    }
+}
+
+/// One world: a two-member pipeline edge or a multi-member TP group.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorldDef {
     pub name: String,
-    /// members[0] is rank 0 (upstream, hosts the store), members[1] is
-    /// rank 1 (downstream).
-    pub members: [NodeId; 2],
+    /// Rank `i` is `members[i]`. Edges: `[upstream, downstream]` (rank 0
+    /// hosts the store). TP worlds: the replica's shards in shard order.
+    pub members: Vec<NodeId>,
     pub store_port: u16,
+    pub kind: WorldKind,
 }
 
 impl WorldDef {
+    /// A two-member edge world (upstream hosts the store).
+    pub fn edge(name: String, up: NodeId, down: NodeId, store_port: u16) -> WorldDef {
+        WorldDef { name, members: vec![up, down], store_port, kind: WorldKind::Edge }
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_tp(&self) -> bool {
+        self.kind == WorldKind::Tp
+    }
+
     pub fn rank_of(&self, node: NodeId) -> Option<usize> {
         self.members.iter().position(|m| *m == node)
     }
 
+    /// The other member of a two-member world (`None` on TP worlds with
+    /// more than two members — there is no single peer).
     pub fn peer_of(&self, node: NodeId) -> Option<NodeId> {
+        if self.members.len() != 2 {
+            return None;
+        }
         match self.rank_of(node)? {
             0 => Some(self.members[1]),
             _ => Some(self.members[0]),
         }
+    }
+
+    pub fn to_json(&self) -> Json {
+        world_to_json(self)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<WorldDef> {
+        world_from_json(j)
     }
 }
 
@@ -82,6 +183,8 @@ impl WorldDef {
 pub struct Topology {
     /// Replicas per stage, e.g. `[1, 2, 1]` is the paper's rhombus.
     pub replicas: Vec<usize>,
+    /// Tensor-parallel shards per replica, per stage (`1` = unsharded).
+    pub tp: Vec<usize>,
     pub worlds: Vec<WorldDef>,
     /// Prefix for world names (namespacing parallel experiments).
     pub prefix: String,
@@ -90,15 +193,31 @@ pub struct Topology {
 }
 
 impl Topology {
-    /// Build the standard pipeline topology. `base_port` seeds store
-    /// ports (world *k* uses `base_port + k`).
+    /// Build the standard (unsharded) pipeline topology. `base_port`
+    /// seeds store ports (world *k* uses `base_port + k`).
     pub fn pipeline(prefix: &str, replicas: &[usize], base_port: u16) -> Topology {
+        Self::pipeline_tp(prefix, replicas, &vec![1; replicas.len()], base_port)
+    }
+
+    /// Build a pipeline whose stage-`i` replicas are split into `tp[i]`
+    /// tensor-parallel shards each. Edge worlds (and their names, member
+    /// lists and port order) are identical to [`Topology::pipeline`] —
+    /// they terminate at replica heads — and one `tp-s{i}r{r}` world per
+    /// sharded replica is appended after them.
+    pub fn pipeline_tp(
+        prefix: &str,
+        replicas: &[usize],
+        tp: &[usize],
+        base_port: u16,
+    ) -> Topology {
         assert!(!replicas.is_empty());
+        assert_eq!(replicas.len(), tp.len(), "one tp degree per stage");
         assert!(replicas.iter().all(|&r| r >= 1));
+        assert!(tp.iter().all(|&t| t >= 1));
         let mut worlds = Vec::new();
         let mut port = base_port;
         let mut push = |name: String, up: NodeId, down: NodeId, port: &mut u16| {
-            worlds.push(WorldDef { name, members: [up, down], store_port: *port });
+            worlds.push(WorldDef::edge(name, up, down, *port));
             *port += 1;
         };
         let n = replicas.len();
@@ -107,7 +226,7 @@ impl Topology {
             push(
                 format!("{prefix}-in-s0r{r}"),
                 NodeId::Leader,
-                NodeId::Worker { stage: 0, replica: r },
+                NodeId::worker(0, r),
                 &mut port,
             );
         }
@@ -117,8 +236,8 @@ impl Topology {
                 for b in 0..replicas[i + 1] {
                     push(
                         format!("{prefix}-e-s{i}r{a}-s{}r{b}", i + 1),
-                        NodeId::Worker { stage: i, replica: a },
-                        NodeId::Worker { stage: i + 1, replica: b },
+                        NodeId::worker(i, a),
+                        NodeId::worker(i + 1, b),
                         &mut port,
                     );
                 }
@@ -128,13 +247,25 @@ impl Topology {
         for r in 0..replicas[n - 1] {
             push(
                 format!("{prefix}-out-s{}r{r}", n - 1),
-                NodeId::Worker { stage: n - 1, replica: r },
+                NodeId::worker(n - 1, r),
                 NodeId::Leader,
                 &mut port,
             );
         }
+        // Intra-replica TP worlds (after the edges so a tp = 1 topology
+        // is byte-identical to the pre-sharding one, ports included).
+        for (i, (&reps, &t)) in replicas.iter().zip(tp).enumerate() {
+            if t < 2 {
+                continue;
+            }
+            for r in 0..reps {
+                worlds.push(tp_world_def(prefix, i, r, t, port, None));
+                port += 1;
+            }
+        }
         Topology {
             replicas: replicas.to_vec(),
+            tp: tp.to_vec(),
             worlds,
             prefix: prefix.to_string(),
             generation: 0,
@@ -145,6 +276,12 @@ impl Topology {
         self.replicas.len()
     }
 
+    /// Shards per replica of `stage` (1 when the stage is unsharded or
+    /// the topology predates sharding).
+    pub fn tp_of(&self, stage: usize) -> usize {
+        self.tp.get(stage).copied().unwrap_or(1)
+    }
+
     /// Worlds `node` participates in.
     pub fn worlds_of(&self, node: NodeId) -> Vec<&WorldDef> {
         self.worlds
@@ -153,27 +290,35 @@ impl Topology {
             .collect()
     }
 
-    /// Worlds where `node` is the downstream member (its inputs).
+    /// Edge worlds where `node` is the downstream member (its inputs).
     pub fn in_edges(&self, node: NodeId) -> Vec<&WorldDef> {
         self.worlds
             .iter()
-            .filter(|w| w.members[1] == node)
+            .filter(|w| w.kind == WorldKind::Edge && w.members[1] == node)
             .collect()
     }
 
-    /// Worlds where `node` is the upstream member (its outputs).
+    /// Edge worlds where `node` is the upstream member (its outputs).
     pub fn out_edges(&self, node: NodeId) -> Vec<&WorldDef> {
         self.worlds
             .iter()
-            .filter(|w| w.members[0] == node)
+            .filter(|w| w.kind == WorldKind::Edge && w.members[0] == node)
             .collect()
+    }
+
+    /// The intra-replica TP world `node` belongs to, if its replica is
+    /// sharded.
+    pub fn tp_world_of(&self, node: NodeId) -> Option<&WorldDef> {
+        self.worlds
+            .iter()
+            .find(|w| w.kind == WorldKind::Tp && w.members.contains(&node))
     }
 
     /// All nodes mentioned in the topology.
     pub fn nodes(&self) -> Vec<NodeId> {
         let mut set: Vec<NodeId> = Vec::new();
         for w in &self.worlds {
-            for m in w.members {
+            for &m in &w.members {
                 if !set.contains(&m) {
                     set.push(m);
                 }
@@ -183,7 +328,7 @@ impl Topology {
         set
     }
 
-    /// Worker nodes only.
+    /// Worker nodes only (every shard of every replica).
     pub fn workers(&self) -> Vec<NodeId> {
         self.nodes()
             .into_iter()
@@ -199,7 +344,7 @@ impl Topology {
             .workers()
             .into_iter()
             .filter_map(|n| match n {
-                NodeId::Worker { stage: s, replica } if s == stage => Some(replica),
+                NodeId::Worker { stage: s, replica, .. } if s == stage => Some(replica),
                 _ => None,
             })
             .collect();
@@ -208,10 +353,12 @@ impl Topology {
         ids
     }
 
-    /// Add a replacement/scale-out replica of `stage` with fresh worlds
-    /// to every neighbor (the online-instantiation step: "configuring P5
-    /// to inherit the exact role of P3"). Returns the new node and the
-    /// world definitions that must be initialized.
+    /// Add a replacement/scale-out replica of `stage` — `tp[stage]`
+    /// shards joined by a fresh TP world, with fresh edge worlds from
+    /// the head to every live neighbor head (the online-instantiation
+    /// step: "configuring P5 to inherit the exact role of P3"). Returns
+    /// the new head node and the world definitions that must be
+    /// initialized.
     pub fn add_replica(
         &mut self,
         stage: usize,
@@ -222,58 +369,132 @@ impl Topology {
         let gen = self.generation;
         let replica = self.replicas[stage];
         self.replicas[stage] += 1;
-        let node = NodeId::Worker { stage, replica };
-        let prefix = self.prefix.clone();
+        let node = NodeId::worker(stage, replica);
         let mut port = base_port;
-        let mut fresh = Vec::new();
-        let mut push = |name: String, up: NodeId, down: NodeId, port: &mut u16| {
-            let def = WorldDef { name, members: [up, down], store_port: *port };
-            *port += 1;
-            fresh.push(def);
-        };
-        // Upstream edges — wire to *live* neighbors only (dead replica
-        // ids stay burned).
-        if stage == 0 {
-            push(
-                format!("{prefix}-in-s0r{replica}#g{gen}"),
-                NodeId::Leader,
-                node,
-                &mut port,
-            );
-        } else {
-            for a in self.live_replicas(stage - 1) {
-                push(
-                    format!("{prefix}-e-s{}r{a}-s{stage}r{replica}#g{gen}", stage - 1),
-                    NodeId::Worker { stage: stage - 1, replica: a },
-                    node,
-                    &mut port,
-                );
-            }
-        }
-        // Downstream edges.
-        if stage == self.replicas.len() - 1 {
-            push(format!("{prefix}-out-s{stage}r{replica}#g{gen}"), node, NodeId::Leader, &mut port);
-        } else {
-            for b in self.live_replicas(stage + 1) {
-                push(
-                    format!("{prefix}-e-s{stage}r{replica}-s{}r{b}#g{gen}", stage + 1),
-                    node,
-                    NodeId::Worker { stage: stage + 1, replica: b },
-                    &mut port,
-                );
-            }
+        let mut fresh = self.replica_edges(stage, replica, gen, &mut port);
+        let tp = self.tp_of(stage);
+        if tp > 1 {
+            fresh.push(tp_world_def(&self.prefix, stage, replica, tp, port, Some(gen)));
         }
         self.worlds.extend(fresh.clone());
         (node, fresh)
     }
 
-    /// Drop every world touching `node` (it died). Returns the removed
-    /// world names.
+    /// Shard-granularity recovery: drop every world of replica
+    /// `(stage, replica)` that `dead_shard`'s death broke — the TP world
+    /// always, the head's edge worlds when the head died — and mint
+    /// fresh, generation-tagged replacements with the same members.
+    /// Healthy worlds (a surviving head's edges) are left untouched.
+    /// Returns `(removed world names, fresh world defs)`.
+    pub fn remint_replica(
+        &mut self,
+        dead_shard: NodeId,
+        base_port: u16,
+    ) -> (Vec<String>, Vec<WorldDef>) {
+        let NodeId::Worker { stage, replica, shard } = dead_shard else {
+            return (Vec::new(), Vec::new());
+        };
+        self.generation += 1;
+        let gen = self.generation;
+        let head = dead_shard.head();
+        let tp = self.tp_of(stage);
+        // Broken set: the TP world, plus the head's edges if it died.
+        let (dead, keep): (Vec<WorldDef>, Vec<WorldDef>) =
+            self.worlds.drain(..).partition(|w| {
+                (w.kind == WorldKind::Tp && w.members.contains(&head))
+                    || (shard == 0 && w.members.contains(&head))
+            });
+        self.worlds = keep;
+        let mut port = base_port;
+        let mut fresh = Vec::new();
+        if shard == 0 {
+            fresh = self.replica_edges(stage, replica, gen, &mut port);
+        }
+        if tp > 1 {
+            fresh.push(tp_world_def(&self.prefix, stage, replica, tp, port, Some(gen)));
+        }
+        self.worlds.extend(fresh.clone());
+        (dead.into_iter().map(|w| w.name).collect(), fresh)
+    }
+
+    /// Fresh generation-tagged edge worlds wiring `(stage, replica)`'s
+    /// head to every *live* neighbor head (dead replica ids stay
+    /// burned).
+    fn replica_edges(
+        &self,
+        stage: usize,
+        replica: usize,
+        gen: u64,
+        port: &mut u16,
+    ) -> Vec<WorldDef> {
+        let node = NodeId::worker(stage, replica);
+        let prefix = &self.prefix;
+        let mut fresh = Vec::new();
+        let mut push = |name: String, up: NodeId, down: NodeId, port: &mut u16| {
+            fresh.push(WorldDef::edge(name, up, down, *port));
+            *port += 1;
+        };
+        // Upstream edges.
+        if stage == 0 {
+            push(
+                format!("{prefix}-in-s0r{replica}#g{gen}"),
+                NodeId::Leader,
+                node,
+                port,
+            );
+        } else {
+            for a in self.live_replicas(stage - 1) {
+                push(
+                    format!("{prefix}-e-s{}r{a}-s{stage}r{replica}#g{gen}", stage - 1),
+                    NodeId::worker(stage - 1, a),
+                    node,
+                    port,
+                );
+            }
+        }
+        // Downstream edges.
+        if stage == self.replicas.len() - 1 {
+            push(format!("{prefix}-out-s{stage}r{replica}#g{gen}"), node, NodeId::Leader, port);
+        } else {
+            for b in self.live_replicas(stage + 1) {
+                push(
+                    format!("{prefix}-e-s{stage}r{replica}-s{}r{b}#g{gen}", stage + 1),
+                    node,
+                    NodeId::worker(stage + 1, b),
+                    port,
+                );
+            }
+        }
+        fresh
+    }
+
+    /// Drop every world touching `node` (it died). For a head this is
+    /// its edge worlds and its replica's TP world; for a non-head shard
+    /// only the TP world. Returns the removed world names.
     pub fn remove_node(&mut self, node: NodeId) -> Vec<String> {
         let (dead, keep): (Vec<WorldDef>, Vec<WorldDef>) = self
             .worlds
             .drain(..)
             .partition(|w| w.members.contains(&node));
+        self.worlds = keep;
+        dead.into_iter().map(|w| w.name).collect()
+    }
+
+    /// Worker shards of `(stage, replica)` present in the topology.
+    pub fn shards_of(&self, stage: usize, replica: usize) -> Vec<NodeId> {
+        self.workers()
+            .into_iter()
+            .filter(|n| n.in_replica(stage, replica))
+            .collect()
+    }
+
+    /// Drop every world of every shard of `(stage, replica)`. Returns
+    /// the removed world names.
+    pub fn remove_replica(&mut self, stage: usize, replica: usize) -> Vec<String> {
+        let (dead, keep): (Vec<WorldDef>, Vec<WorldDef>) =
+            self.worlds.drain(..).partition(|w| {
+                w.members.iter().any(|m| m.in_replica(stage, replica))
+            });
         self.worlds = keep;
         dead.into_iter().map(|w| w.name).collect()
     }
@@ -289,20 +510,12 @@ impl Topology {
                 Json::arr(self.replicas.iter().map(|&r| Json::num(r as f64)).collect()),
             ),
             (
+                "tp",
+                Json::arr(self.tp.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            (
                 "worlds",
-                Json::arr(
-                    self.worlds
-                        .iter()
-                        .map(|w| {
-                            Json::obj(vec![
-                                ("name", Json::str(w.name.clone())),
-                                ("up", Json::str(w.members[0].to_string())),
-                                ("down", Json::str(w.members[1].to_string())),
-                                ("store_port", Json::num(w.store_port as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Json::arr(self.worlds.iter().map(world_to_json).collect()),
             ),
         ])
     }
@@ -314,31 +527,25 @@ impl Topology {
             .unwrap_or("mw")
             .to_string();
         let generation = j.get("generation").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
-        let replicas = j
+        let replicas: Vec<usize> = j
             .get("replicas")
             .and_then(|v| v.as_arr())
             .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
             .unwrap_or_default();
+        let tp: Vec<usize> = j
+            .get("tp")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_else(|| vec![1; replicas.len()]);
         let mut worlds = Vec::new();
         for w in j
             .get("worlds")
             .and_then(|v| v.as_arr())
             .ok_or_else(|| anyhow::anyhow!("topology missing worlds"))?
         {
-            let name = w
-                .get("name")
-                .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow::anyhow!("world missing name"))?
-                .to_string();
-            let up = NodeId::parse(w.get("up").and_then(|v| v.as_str()).unwrap_or(""))?;
-            let down = NodeId::parse(w.get("down").and_then(|v| v.as_str()).unwrap_or(""))?;
-            let store_port = w
-                .get("store_port")
-                .and_then(|v| v.as_usize())
-                .ok_or_else(|| anyhow::anyhow!("world missing store_port"))? as u16;
-            worlds.push(WorldDef { name, members: [up, down], store_port });
+            worlds.push(world_from_json(w)?);
         }
-        Ok(Topology { replicas, worlds, prefix, generation })
+        Ok(Topology { replicas, tp, worlds, prefix, generation })
     }
 
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
@@ -351,11 +558,20 @@ impl Topology {
         Self::from_json(&Json::parse(&text)?)
     }
 
-    /// Map stage→replica-count as a compact string ("1x2x1").
+    /// Map stage→replica-count as a compact string ("1x2x1"; a sharded
+    /// stage is annotated with its tp degree, e.g. "1x2:t2x1").
     pub fn shape(&self) -> String {
         self.replicas
             .iter()
-            .map(|r| r.to_string())
+            .enumerate()
+            .map(|(i, r)| {
+                let tp = self.tp_of(i);
+                if tp > 1 {
+                    format!("{r}:t{tp}")
+                } else {
+                    r.to_string()
+                }
+            })
             .collect::<Vec<_>>()
             .join("x")
     }
@@ -364,12 +580,80 @@ impl Topology {
     pub fn edge_counts(&self) -> BTreeMap<usize, usize> {
         let mut m = BTreeMap::new();
         for w in &self.worlds {
+            if w.kind != WorldKind::Edge {
+                continue;
+            }
             if let NodeId::Worker { stage, .. } = w.members[0] {
                 *m.entry(stage).or_insert(0) += 1;
             }
         }
         m
     }
+}
+
+/// The intra-replica TP world of `(stage, replica)`: members are the
+/// replica's shards in shard order (rank == shard, head hosts the
+/// store). `gen` tags replacement worlds minted after a shard death.
+fn tp_world_def(
+    prefix: &str,
+    stage: usize,
+    replica: usize,
+    tp: usize,
+    store_port: u16,
+    gen: Option<u64>,
+) -> WorldDef {
+    let suffix = gen.map(|g| format!("#g{g}")).unwrap_or_default();
+    WorldDef {
+        name: format!("{prefix}-tp-s{stage}r{replica}{suffix}"),
+        members: (0..tp)
+            .map(|shard| NodeId::Worker { stage, replica, shard })
+            .collect(),
+        store_port,
+        kind: WorldKind::Tp,
+    }
+}
+
+fn world_to_json(w: &WorldDef) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(w.name.clone())),
+        ("kind", Json::str(w.kind.name().to_string())),
+        (
+            "members",
+            Json::arr(w.members.iter().map(|m| Json::str(m.to_string())).collect()),
+        ),
+        ("store_port", Json::num(w.store_port as f64)),
+    ])
+}
+
+fn world_from_json(w: &Json) -> anyhow::Result<WorldDef> {
+    let name = w
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("world missing name"))?
+        .to_string();
+    let kind = match w.get("kind").and_then(|v| v.as_str()) {
+        Some(k) => WorldKind::parse(k)?,
+        None => WorldKind::Edge,
+    };
+    let members: Vec<NodeId> = match w.get("members").and_then(|v| v.as_arr()) {
+        Some(a) => a
+            .iter()
+            .map(|m| {
+                NodeId::parse(m.as_str().ok_or_else(|| anyhow::anyhow!("bad member"))?)
+            })
+            .collect::<anyhow::Result<_>>()?,
+        // Pre-sharding format: separate up/down fields.
+        None => vec![
+            NodeId::parse(w.get("up").and_then(|v| v.as_str()).unwrap_or(""))?,
+            NodeId::parse(w.get("down").and_then(|v| v.as_str()).unwrap_or(""))?,
+        ],
+    };
+    anyhow::ensure!(members.len() >= 2, "world {name} needs ≥2 members");
+    let store_port = w
+        .get("store_port")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("world missing store_port"))? as u16;
+    Ok(WorldDef { name, members, store_port, kind })
 }
 
 #[cfg(test)]
@@ -382,8 +666,8 @@ mod tests {
         let t = Topology::pipeline("mw", &[1, 2, 1], 20_000);
         // Worlds: 1 in + (1×2) + (2×1) + 1 out = 6.
         assert_eq!(t.worlds.len(), 6);
-        let p1 = NodeId::Worker { stage: 0, replica: 0 };
-        let p4 = NodeId::Worker { stage: 2, replica: 0 };
+        let p1 = NodeId::worker(0, 0);
+        let p4 = NodeId::worker(2, 0);
         assert_eq!(t.out_edges(p1).len(), 2, "P1 feeds both middle replicas");
         assert_eq!(t.in_edges(p4).len(), 2, "P4 hears from both middle replicas");
         assert_eq!(t.in_edges(NodeId::Leader).len(), 1);
@@ -392,15 +676,22 @@ mod tests {
 
     #[test]
     fn node_id_roundtrip() {
-        for n in [NodeId::Leader, NodeId::Worker { stage: 3, replica: 7 }] {
+        for n in [
+            NodeId::Leader,
+            NodeId::worker(3, 7),
+            NodeId::Worker { stage: 1, replica: 2, shard: 3 },
+        ] {
             assert_eq!(NodeId::parse(&n.to_string()).unwrap(), n);
         }
+        // Shard 0 omits the t suffix but the explicit form still parses.
+        assert_eq!(NodeId::worker(1, 2).to_string(), "s1r2");
+        assert_eq!(NodeId::parse("s1r2t0").unwrap(), NodeId::worker(1, 2));
         assert!(NodeId::parse("bogus").is_err());
     }
 
     #[test]
     fn store_ports_unique() {
-        let t = Topology::pipeline("mw", &[2, 3, 2], 21_000);
+        let t = Topology::pipeline_tp("mw", &[2, 3, 2], &[2, 1, 3], 21_000);
         let mut ports: Vec<u16> = t.worlds.iter().map(|w| w.store_port).collect();
         ports.sort_unstable();
         ports.dedup();
@@ -419,10 +710,46 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let t = Topology::pipeline("exp1", &[1, 2, 1], 23_000);
-        let j = t.to_json();
-        let back = Topology::from_json(&j).unwrap();
-        assert_eq!(back, t);
+        for t in [
+            Topology::pipeline("exp1", &[1, 2, 1], 23_000),
+            Topology::pipeline_tp("exp2", &[1, 2], &[2, 3], 23_100),
+        ] {
+            let back = Topology::from_json(&t.to_json()).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn tp1_topology_is_byte_identical_to_unsharded() {
+        let plain = Topology::pipeline("mw", &[1, 2, 1], 20_500);
+        let tp1 = Topology::pipeline_tp("mw", &[1, 2, 1], &[1, 1, 1], 20_500);
+        assert_eq!(plain, tp1);
+        for (a, b) in plain.worlds.iter().zip(&tp1.worlds) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.members, b.members);
+            assert_eq!(a.store_port, b.store_port);
+        }
+    }
+
+    #[test]
+    fn tp_worlds_join_shards_in_rank_order() {
+        let t = Topology::pipeline_tp("mw", &[1, 2], &[2, 3], 24_500);
+        // Edges unchanged: 1 in + 1×2 bipartite + 2 out = 5; TP worlds:
+        // 1 (stage 0) + 2 (stage 1) = 3.
+        assert_eq!(t.worlds.len(), 5 + 3);
+        let tp0 = t.tp_world_of(NodeId::worker(0, 0)).unwrap();
+        assert_eq!(tp0.name, "mw-tp-s0r0");
+        assert_eq!(tp0.size(), 2);
+        assert_eq!(tp0.members[0], NodeId::worker(0, 0), "head is rank 0");
+        let s1r1t2 = NodeId::Worker { stage: 1, replica: 1, shard: 2 };
+        let tp11 = t.tp_world_of(s1r1t2).unwrap();
+        assert_eq!(tp11.name, "mw-tp-s1r1");
+        assert_eq!(tp11.rank_of(s1r1t2), Some(2), "rank == shard");
+        // Non-head shards sit on no edges; every edge terminates at heads.
+        assert!(t.in_edges(s1r1t2).is_empty() && t.out_edges(s1r1t2).is_empty());
+        assert_eq!(t.workers().len(), 2 + 2 * 3);
+        // Shape annotates sharded stages.
+        assert_eq!(t.shape(), "1:t2x2:t3");
     }
 
     #[test]
@@ -430,12 +757,24 @@ mod tests {
         let mut t = Topology::pipeline("mw", &[1, 2, 1], 24_000);
         let before = t.worlds.len();
         let (node, fresh) = t.add_replica(1, 25_000);
-        assert_eq!(node, NodeId::Worker { stage: 1, replica: 2 });
+        assert_eq!(node, NodeId::worker(1, 2));
         // New middle replica: 1 upstream (from s0r0) + 1 downstream (to s2r0).
         assert_eq!(fresh.len(), 2);
         assert!(fresh.iter().all(|w| w.name.contains("#g1")), "generation-tagged");
         assert_eq!(t.worlds.len(), before + 2);
         assert_eq!(t.replicas, vec![1, 3, 1]);
+    }
+
+    #[test]
+    fn add_replica_of_sharded_stage_mints_tp_world() {
+        let mut t = Topology::pipeline_tp("mw", &[1, 1], &[1, 2], 26_500);
+        let (node, fresh) = t.add_replica(1, 27_500);
+        assert_eq!(node, NodeId::worker(1, 1));
+        // 1 upstream edge + 1 downstream edge + 1 TP world.
+        assert_eq!(fresh.len(), 3);
+        let tp = fresh.iter().find(|w| w.is_tp()).unwrap();
+        assert_eq!(tp.name, "mw-tp-s1r1#g1");
+        assert_eq!(tp.size(), 2);
     }
 
     #[test]
@@ -450,15 +789,56 @@ mod tests {
     #[test]
     fn remove_node_drops_exactly_its_worlds() {
         let mut t = Topology::pipeline("mw", &[1, 2, 1], 29_000);
-        let p3 = NodeId::Worker { stage: 1, replica: 1 };
+        let p3 = NodeId::worker(1, 1);
         let dead = t.remove_node(p3);
         // P3 touched two worlds (from P1, to P4) — Fig. 2b.
         assert_eq!(dead.len(), 2);
         assert_eq!(t.worlds.len(), 4);
         assert!(t.worlds_of(p3).is_empty());
         // P2's worlds intact.
-        let p2 = NodeId::Worker { stage: 1, replica: 0 };
+        let p2 = NodeId::worker(1, 0);
         assert_eq!(t.worlds_of(p2).len(), 2);
+    }
+
+    #[test]
+    fn remint_replica_after_nonhead_death_refreshes_tp_world_only() {
+        let mut t = Topology::pipeline_tp("mw", &[1, 1], &[1, 2], 30_500);
+        let shard1 = NodeId::Worker { stage: 1, replica: 0, shard: 1 };
+        let edges_before: Vec<String> = t
+            .worlds_of(NodeId::worker(1, 0))
+            .iter()
+            .filter(|w| !w.is_tp())
+            .map(|w| w.name.clone())
+            .collect();
+        let (removed, fresh) = t.remint_replica(shard1, 31_500);
+        assert_eq!(removed, vec!["mw-tp-s1r0".to_string()]);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].name, "mw-tp-s1r0#g1");
+        assert_eq!(fresh[0].members, t.tp_world_of(shard1).unwrap().members);
+        // The head's healthy edges are untouched.
+        let edges_after: Vec<String> = t
+            .worlds_of(NodeId::worker(1, 0))
+            .iter()
+            .filter(|w| !w.is_tp())
+            .map(|w| w.name.clone())
+            .collect();
+        assert_eq!(edges_before, edges_after);
+    }
+
+    #[test]
+    fn remint_replica_after_head_death_refreshes_edges_too() {
+        let mut t = Topology::pipeline_tp("mw", &[1, 1], &[1, 2], 32_500);
+        let head = NodeId::worker(1, 0);
+        let (removed, fresh) = t.remint_replica(head, 33_500);
+        // Broken: upstream edge + out edge + TP world.
+        assert_eq!(removed.len(), 3);
+        assert_eq!(fresh.len(), 3);
+        assert!(fresh.iter().all(|w| w.name.contains("#g1")));
+        assert_eq!(fresh.iter().filter(|w| w.is_tp()).count(), 1);
+        // Same member sets, fresh names: the replica id survives.
+        assert_eq!(t.tp_world_of(head).unwrap().name, "mw-tp-s1r0#g1");
+        assert_eq!(t.in_edges(head).len(), 1);
+        assert_eq!(t.out_edges(head).len(), 1);
     }
 
     #[test]

@@ -428,6 +428,70 @@ fn auto_prologue_keeps_small_root_sized_ops_flat() {
 }
 
 #[test]
+fn auto_gather_estimate_clamps_to_observed_contributions() {
+    // Skewed per-rank sizes: the negotiation root contributes 400 B
+    // while every other rank contributes 400 KB. The root's first
+    // own-contribution × N estimate under-picks flat; from the second
+    // invocation on, the estimate is clamped by the largest
+    // contribution observed in round one and the op rings. Results must
+    // be identical either way.
+    use multiworld::config::{CollPolicy, RingThreshold};
+    let size = 4;
+    let row = RingThreshold { min_world: 4, min_bytes: 600_000 };
+    let policy = CollPolicy::new(CollAlgo::Auto)
+        .with_threshold(CollOp::Gather, row)
+        .with_threshold(CollOp::AllGather, row);
+    for op in ["gather", "all_gather"] {
+        let worlds = Rendezvous::single_process(
+            &uniq("clamp"),
+            size,
+            opts("tcp", CollAlgo::Auto).with_coll_policy(policy),
+        )
+        .unwrap();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                let op = op.to_string();
+                std::thread::spawn(move || {
+                    // Root (rank 0) is tiny; everyone else is large.
+                    let elems = if w.rank() == 0 { 100 } else { 100_000 };
+                    let contrib = || int_tensor(elems, w.rank());
+                    let run = |w: &multiworld::mwccl::World| match op.as_str() {
+                        "gather" => {
+                            let res = w.gather(contrib(), 0).unwrap();
+                            (res.map(|t| t.checksum()), w.last_algo(CollOp::Gather))
+                        }
+                        _ => {
+                            let t = w.all_gather(contrib()).unwrap();
+                            (Some(t.checksum()), w.last_algo(CollOp::AllGather))
+                        }
+                    };
+                    let first = run(&w);
+                    let second = run(&w);
+                    (w.rank(), first, second)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, (cs1, algo1), (cs2, algo2)) = h.join().unwrap();
+            if rank == 0 {
+                assert_eq!(
+                    algo1,
+                    Some("flat"),
+                    "{op}: first round under-estimates from the tiny root contribution"
+                );
+                assert_eq!(
+                    algo2,
+                    Some("ring"),
+                    "{op}: clamp from round-one contributions must flip the pick"
+                );
+                assert_eq!(cs1, cs2, "{op}: flat and ring results must agree");
+            }
+        }
+    }
+}
+
+#[test]
 fn reduce_arrival_order_folds_stragglers() {
     // Peers contribute with staggered delays; the root folds whichever
     // arrives first. Result must equal the rank-order reference.

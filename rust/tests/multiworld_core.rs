@@ -145,9 +145,10 @@ fn watchdog_breaks_silent_shm_world_and_isolates_the_other() {
     // Added events from adoption).
     loop {
         match events.recv_timeout(Duration::from_secs(5)).unwrap() {
-            WorldEvent::Broken { world, reason } => {
+            WorldEvent::Broken { world, reason, culprit } => {
                 assert_eq!(world, w_dead);
                 assert!(reason.contains("missed heartbeats"), "{reason}");
+                assert_eq!(culprit, Some(1), "watchdog attributes the dead rank");
                 break;
             }
             WorldEvent::Added(_) => continue,

@@ -158,7 +158,7 @@ fn prop_topology_remove_then_add_replica_keeps_connectivity() {
         let mut replicas = vec![1usize; stages];
         replicas[stages / 2] = mid + 1;
         let mut t = Topology::pipeline("h", &replicas, 11_000);
-        let victim = NodeId::Worker { stage: stages / 2, replica: 0 };
+        let victim = NodeId::worker(stages / 2, 0);
         t.remove_node(victim);
         let (node, fresh) = t.add_replica(stages / 2, 12_000);
         if fresh.is_empty() {

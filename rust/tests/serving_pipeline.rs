@@ -144,7 +144,7 @@ fn replica_death_degrades_but_does_not_stop_service() {
     let killer = std::thread::scope(|s| {
         let h = s.spawn(move || {
             std::thread::sleep(Duration::from_millis(150));
-            assert!(cluster_ref.kill(NodeId::Worker { stage: 1, replica: 1 }));
+            assert!(cluster_ref.kill(NodeId::worker(1, 1)));
         });
         let report = cluster_ref
             .leader
@@ -176,7 +176,7 @@ fn controller_recovers_dead_replica() {
         &fast_cfg(),
     )
     .unwrap();
-    let dead = NodeId::Worker { stage: 1, replica: 1 };
+    let dead = NodeId::worker(1, 1);
     assert!(cluster.kill(dead));
     // The workers' event forwarders report the broken edges; the
     // controller declares the node dead and spawns a replacement.
@@ -198,7 +198,7 @@ fn controller_recovers_dead_replica() {
     let deadline = std::time::Instant::now() + Duration::from_secs(30);
     while !cluster
         .live_workers()
-        .contains(&NodeId::Worker { stage: 1, replica: 2 })
+        .contains(&NodeId::worker(1, 2))
     {
         assert!(std::time::Instant::now() < deadline);
         std::thread::sleep(Duration::from_millis(50));
