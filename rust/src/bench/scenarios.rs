@@ -11,14 +11,15 @@ use crate::config::ServingConfig;
 use crate::launch::InProcCluster;
 use crate::multiworld::{PollStrategy, StatePolicy, WatchdogConfig, WorldManager};
 use crate::mwccl::{Rendezvous, WorldOptions};
-use crate::serving::controller::ScalingPolicy;
+use crate::serving::autoscaler::AutoscalePolicy;
+use crate::serving::controller::{Action, ScalingPolicy};
 use crate::serving::topology::Topology;
-use crate::serving::{LeaderReport, RequestGen};
+use crate::serving::{LeaderReport, Outcome, RequestGen};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
 use crate::util::time::Clock;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn uniq(prefix: &str) -> String {
     static N: AtomicU64 = AtomicU64::new(0);
@@ -244,6 +245,133 @@ pub fn tp_pipeline_serve(
     Ok(report)
 }
 
+/// Open-loop arrival-rate curve for the autoscale scenario.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalCurve {
+    /// `high_rps` for the first `burst_frac` of the run, `low_rps`
+    /// afterwards — the scale-out-then-idle shape.
+    Burst { high_rps: f64, low_rps: f64, burst_frac: f64 },
+    /// Sinusoidal day/night curve: `cycles` full periods between
+    /// `trough_rps` and `peak_rps` across the run.
+    Diurnal { peak_rps: f64, trough_rps: f64, cycles: f64 },
+}
+
+impl ArrivalCurve {
+    /// Instantaneous request rate at run progress `x` ∈ [0, 1].
+    pub fn rate_at(&self, x: f64) -> f64 {
+        match *self {
+            ArrivalCurve::Burst { high_rps, low_rps, burst_frac } => {
+                if x < burst_frac {
+                    high_rps
+                } else {
+                    low_rps
+                }
+            }
+            ArrivalCurve::Diurnal { peak_rps, trough_rps, cycles } => {
+                let mid = (peak_rps + trough_rps) / 2.0;
+                let amp = (peak_rps - trough_rps) / 2.0;
+                mid + amp * (x * cycles * std::f64::consts::TAU).sin()
+            }
+        }
+    }
+}
+
+/// What an [`autoscale_serve`] run did.
+#[derive(Clone, Debug)]
+pub struct AutoscaleReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub dropped: usize,
+    /// `ScaledOut` / `ScaledIn` actions the controller logged.
+    pub scaled_out: usize,
+    pub scaled_in: usize,
+    pub p99_ms: f64,
+}
+
+/// Open-loop autoscaling scenario: a forward-only single-stage pipeline
+/// starting at one replica, requests submitted through the always-on
+/// `Leader::submit` ingress at the instantaneous rate of `curve`, and
+/// the cluster's [`Autoscaler`](crate::serving::Autoscaler) making real
+/// scale-out/in decisions from live queue-depth signals — no hand-fed
+/// depths anywhere. Returns per-outcome counts plus the controller's
+/// scaling action totals.
+pub fn autoscale_serve(
+    curve: ArrivalCurve,
+    duration: Duration,
+    opts: WorldOptions,
+    base_port: u16,
+) -> anyhow::Result<AutoscaleReport> {
+    const BATCH: usize = 4;
+    const SEQ_LEN: usize = 8;
+    const VOCAB: usize = 32;
+    let topo = Topology::pipeline(&uniq("autoscale"), &[1], base_port);
+    let cfg = ServingConfig {
+        batch_timeout_ms: 2,
+        admission_depth: 512,
+        ..Default::default()
+    };
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        opts,
+        ScalingPolicy { scale_up_depth: 8.0, max_replicas: 3, recover: true },
+        &cfg,
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )?;
+    cluster.start_autoscaler(AutoscalePolicy {
+        high_depth: 8.0,
+        high_samples: 2,
+        low_samples: 8,
+        interval: Duration::from_millis(25),
+        cooldown: Duration::from_millis(500),
+        min_replicas: 1,
+        drain_timeout: Duration::from_secs(2),
+        ..Default::default()
+    });
+    let mut gen = RequestGen::new(0xA5CA1E, SEQ_LEN, VOCAB, None);
+    let mut rng = Rng::new(0x0DD5);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    while t0.elapsed() < duration {
+        let x = t0.elapsed().as_secs_f64() / duration.as_secs_f64();
+        let rate = curve.rate_at(x).max(1.0);
+        let (req, _) = gen.next();
+        handles.push(cluster.leader.submit(req));
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
+    }
+    let grace = Instant::now() + Duration::from_secs(60);
+    let (mut completed, mut rejected, mut dropped) = (0usize, 0usize, 0usize);
+    for h in &handles {
+        match h.wait_deadline(grace) {
+            Some(Outcome::Response(_)) => completed += 1,
+            Some(Outcome::Rejected(_)) => rejected += 1,
+            Some(Outcome::Dropped(_)) | None => dropped += 1,
+        }
+    }
+    let actions = cluster.controller.actions();
+    let scaled_out = actions
+        .iter()
+        .filter(|a| matches!(a, Action::ScaledOut { .. }))
+        .count();
+    let scaled_in = actions
+        .iter()
+        .filter(|a| matches!(a, Action::ScaledIn { .. }))
+        .count();
+    let p99_ms = cluster.leader.latency.quantile_us(0.99) as f64 / 1e3;
+    cluster.shutdown();
+    Ok(AutoscaleReport {
+        submitted: handles.len(),
+        completed,
+        rejected,
+        dropped,
+        scaled_out,
+        scaled_in,
+        p99_ms,
+    })
+}
+
 /// Run a throughput measurement `reps` times and keep the best — the
 /// standard way to strip scheduler noise from a saturation benchmark on
 /// a small shared box.
@@ -289,6 +417,40 @@ mod tests {
         let one = sw_fanin_throughput(1, 10_000, 32, WorldOptions::shm());
         let three = sw_fanin_throughput(3, 10_000, 32, WorldOptions::shm());
         assert!(three > 0.0 && one > 0.0);
+    }
+
+    #[test]
+    fn arrival_curves_shape() {
+        let b = ArrivalCurve::Burst { high_rps: 100.0, low_rps: 10.0, burst_frac: 0.3 };
+        assert_eq!(b.rate_at(0.0), 100.0);
+        assert_eq!(b.rate_at(0.29), 100.0);
+        assert_eq!(b.rate_at(0.31), 10.0);
+        let d = ArrivalCurve::Diurnal { peak_rps: 100.0, trough_rps: 20.0, cycles: 1.0 };
+        assert!((d.rate_at(0.25) - 100.0).abs() < 1e-6, "peak at quarter cycle");
+        assert!((d.rate_at(0.75) - 20.0).abs() < 1e-6, "trough at three quarters");
+        for x in [0.0, 0.1, 0.5, 0.9, 1.0] {
+            let r = d.rate_at(x);
+            assert!((20.0..=100.0).contains(&r), "rate {r} in band");
+        }
+    }
+
+    #[test]
+    fn autoscale_scenario_accounts_for_every_request() {
+        let base = 55_000 + (std::process::id() % 83) as u16 * 24;
+        let report = autoscale_serve(
+            ArrivalCurve::Burst { high_rps: 300.0, low_rps: 20.0, burst_frac: 0.5 },
+            Duration::from_millis(1_500),
+            WorldOptions::shm().with_init_timeout(Duration::from_secs(120)),
+            base,
+        )
+        .unwrap();
+        assert!(report.submitted > 0);
+        assert_eq!(
+            report.completed + report.rejected + report.dropped,
+            report.submitted,
+            "every submitted request resolves to exactly one outcome"
+        );
+        assert!(report.completed > 0);
     }
 
     #[test]

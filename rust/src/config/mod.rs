@@ -438,7 +438,25 @@ pub struct ServingConfig {
     pub scale_up_queue_depth: usize,
     /// Scale-in trigger: utilization below this for `scale_window_ms`.
     pub scale_down_util: f64,
+    /// Sliding window (ms) for the autoscaler's recent-latency signal
+    /// and the scale-in idle observation.
     pub scale_window_ms: u64,
+    /// Per-request SLO deadline (ms) stamped at admission; requests
+    /// still queued past it are dropped before dispatch. 0 = no SLO.
+    pub slo_ms: u64,
+    /// Admission queue bound: `submit` load-sheds once this many
+    /// requests are queued. 0 = unbounded (legacy behavior).
+    pub admission_depth: usize,
+    /// How long a dispatched batch may stay unanswered before the
+    /// leader re-dispatches it (lost to a dead worker).
+    pub retry_timeout_ms: u64,
+    /// Dispatch attempts per batch before its requests are dropped as
+    /// failed.
+    pub retry_max_attempts: u32,
+    /// Autoscaler sampling period (ms).
+    pub autoscale_interval_ms: u64,
+    /// Minimum quiet time (ms) between autoscaler actions.
+    pub autoscale_cooldown_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -452,6 +470,12 @@ impl Default for ServingConfig {
             scale_up_queue_depth: 16,
             scale_down_util: 0.2,
             scale_window_ms: 2_000,
+            slo_ms: 0,
+            admission_depth: 0,
+            retry_timeout_ms: 2_000,
+            retry_max_attempts: 5,
+            autoscale_interval_ms: 100,
+            autoscale_cooldown_ms: 2_000,
         }
     }
 }
@@ -472,6 +496,24 @@ impl ServingConfig {
         }
         if let Some(v) = get("MW_MISS_THRESHOLD").and_then(|s| s.parse().ok()) {
             c.miss_threshold = v;
+        }
+        if let Some(v) = get("MW_SLO_MS").and_then(|s| s.parse().ok()) {
+            c.slo_ms = v;
+        }
+        if let Some(v) = get("MW_ADMISSION_DEPTH").and_then(|s| s.parse().ok()) {
+            c.admission_depth = v;
+        }
+        if let Some(v) = get("MW_RETRY_TIMEOUT_MS").and_then(|s| s.parse().ok()) {
+            c.retry_timeout_ms = v;
+        }
+        if let Some(v) = get("MW_RETRY_MAX_ATTEMPTS").and_then(|s| s.parse().ok()) {
+            c.retry_max_attempts = v;
+        }
+        if let Some(v) = get("MW_AUTOSCALE_INTERVAL_MS").and_then(|s| s.parse().ok()) {
+            c.autoscale_interval_ms = v;
+        }
+        if let Some(v) = get("MW_AUTOSCALE_COOLDOWN_MS").and_then(|s| s.parse().ok()) {
+            c.autoscale_cooldown_ms = v;
         }
         c
     }
@@ -525,6 +567,13 @@ mod tests {
         let c = ServingConfig::default();
         assert_eq!(c.miss_threshold, 3);
         assert!(c.max_batch >= 1);
+        // New runtime knobs default to legacy behavior: no SLO, an
+        // unbounded admission queue, and the historical retry policy.
+        assert_eq!(c.slo_ms, 0);
+        assert_eq!(c.admission_depth, 0);
+        assert_eq!(c.retry_timeout_ms, 2_000);
+        assert_eq!(c.retry_max_attempts, 5);
+        assert!(c.autoscale_interval_ms > 0);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!   ctl/seq                  counter of published updates
 //!   ctl/update/<n>           JSON: {"kind":"add_world"|"shutdown", world def…}
 //!   ctl/broken/<world>       failure report (world name → reason)
+//!   ctl/load/<stage>         live load sample (queue depth, p99, liveness)
 //! ```
 
 use crate::serving::stage_worker::TopoUpdate;
@@ -19,6 +20,15 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
+
+/// One live load sample published by the leader (see
+/// [`ControlPlane::publish_load`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadSample {
+    pub queue_depth: usize,
+    pub p99_ms: f64,
+    pub alive_replicas: usize,
+}
 
 /// Publisher/subscriber over the cluster store.
 pub struct ControlPlane {
@@ -83,6 +93,41 @@ impl ControlPlane {
         self.store
             .set(&format!("ctl/broken/{world}"), j.to_string().as_bytes())?;
         Ok(())
+    }
+
+    /// Publish the leader's live load sample for `stage` (queue depth,
+    /// recent p99 latency, alive replicas). A process-mode autoscaler
+    /// polls this instead of sharing the leader's address space — the
+    /// cross-process twin of `serving::autoscaler::LoadSignals`.
+    pub fn publish_load(&self, stage: usize, sample: &LoadSample) -> anyhow::Result<()> {
+        let j = Json::obj(vec![
+            ("queue_depth", Json::num(sample.queue_depth as f64)),
+            ("p99_ms", Json::num(sample.p99_ms)),
+            ("alive_replicas", Json::num(sample.alive_replicas as f64)),
+        ]);
+        self.store
+            .set(&format!("ctl/load/{stage}"), j.to_string().as_bytes())?;
+        Ok(())
+    }
+
+    /// The latest published load sample for `stage`, if any.
+    pub fn load_report(&self, stage: usize) -> anyhow::Result<Option<LoadSample>> {
+        let Some(bytes) = self.store.get(&format!("ctl/load/{stage}"))? else {
+            return Ok(None);
+        };
+        let text = String::from_utf8(bytes)?;
+        let j = Json::parse(&text)?;
+        Ok(Some(LoadSample {
+            queue_depth: j.get("queue_depth").and_then(|v| v.as_usize()).unwrap_or(0),
+            p99_ms: j
+                .get("p99_ms")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            alive_replicas: j
+                .get("alive_replicas")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+        }))
     }
 
     /// Broken worlds reported so far.
@@ -234,6 +279,20 @@ mod tests {
             Some(("watchdog".to_string(), None))
         );
         assert_eq!(cp.broken_report("w3").unwrap(), None);
+    }
+
+    #[test]
+    fn load_samples_roundtrip_and_overwrite() {
+        let (_server, cp) = plane();
+        assert_eq!(cp.load_report(0).unwrap(), None);
+        let s1 = LoadSample { queue_depth: 12, p99_ms: 8.5, alive_replicas: 2 };
+        cp.publish_load(0, &s1).unwrap();
+        assert_eq!(cp.load_report(0).unwrap(), Some(s1));
+        // Latest sample wins (the autoscaler polls current state).
+        let s2 = LoadSample { queue_depth: 0, p99_ms: 1.0, alive_replicas: 3 };
+        cp.publish_load(0, &s2).unwrap();
+        assert_eq!(cp.load_report(0).unwrap(), Some(s2));
+        assert_eq!(cp.load_report(1).unwrap(), None, "per-stage keys");
     }
 
     #[test]

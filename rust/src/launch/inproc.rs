@@ -20,6 +20,7 @@ use crate::config::{ModelManifest, ServingConfig};
 use crate::multiworld::{StatePolicy, WatchdogConfig, WorldEvent, WorldManager};
 use crate::mwccl::WorldOptions;
 use crate::runtime::Engine;
+use crate::serving::autoscaler::{AutoscalePolicy, Autoscaler, AutoscalerHandle, LoadSignals};
 use crate::serving::controller::{Controller, ScalingPolicy, Spawner};
 use crate::serving::stage_worker::{run_stage_worker, StageWorkerConfig, TopoUpdate};
 use crate::serving::topology::{NodeId, Topology, WorldDef};
@@ -45,8 +46,10 @@ pub struct InProcCluster {
     pub controller: Arc<Controller>,
     pub manifest: ModelManifest,
     opts: WorldOptions,
+    serving_cfg: ServingConfig,
     workers: Arc<Mutex<HashMap<NodeId, WorkerHandle>>>,
     forwarders: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    autoscaler: Mutex<Option<AutoscalerHandle>>,
 }
 
 struct SpawnerInner {
@@ -303,9 +306,30 @@ impl InProcCluster {
             controller,
             manifest,
             opts,
+            serving_cfg: serving_cfg.clone(),
             workers,
             forwarders: Mutex::new(vec![fwd, drainer]),
+            autoscaler: Mutex::new(None),
         })
+    }
+
+    /// Start the closed-loop autoscaler: samples the leader's live load
+    /// signals (queue depth, recent p99, replica liveness) and drives
+    /// the controller's scale-out/in with hysteresis + cooldown.
+    /// Idempotent per cluster: a second call replaces the loop.
+    pub fn start_autoscaler(&self, policy: AutoscalePolicy) {
+        self.leader.start_runtime();
+        let signals: Arc<dyn LoadSignals> = self.leader.clone();
+        let scaler = Autoscaler::new(self.controller.clone(), signals, policy);
+        *self.autoscaler.lock().unwrap() = Some(scaler.start());
+    }
+
+    /// [`Self::start_autoscaler`] with the policy derived from the
+    /// cluster's `ServingConfig` (so the `MW_SLO_MS` /
+    /// `MW_AUTOSCALE_{INTERVAL,COOLDOWN}_MS` env knobs apply when the
+    /// config came from `ServingConfig::from_env`).
+    pub fn start_autoscaler_default(&self) {
+        self.start_autoscaler(AutoscalePolicy::from_config(&self.serving_cfg));
     }
 
     /// Abruptly kill a worker: its thread exits without any goodbye, its
@@ -344,9 +368,26 @@ impl InProcCluster {
         Ok(())
     }
 
-    /// Living worker nodes (every shard).
+    /// Living worker nodes (every shard). Workers whose threads exited
+    /// (graceful scale-in retirement) are reaped here.
     pub fn live_workers(&self) -> Vec<NodeId> {
-        let mut v: Vec<NodeId> = self.workers.lock().unwrap().keys().copied().collect();
+        let mut ws = self.workers.lock().unwrap();
+        let done: Vec<NodeId> = ws
+            .iter()
+            .filter(|(_, h)| match &h.thread {
+                None => true,
+                Some(t) => t.is_finished(),
+            })
+            .map(|(n, _)| *n)
+            .collect();
+        for n in done {
+            if let Some(mut h) = ws.remove(&n) {
+                if let Some(t) = h.thread.take() {
+                    let _ = t.join();
+                }
+            }
+        }
+        let mut v: Vec<NodeId> = ws.keys().copied().collect();
         v.sort();
         v
     }
@@ -355,8 +396,14 @@ impl InProcCluster {
         &self.opts
     }
 
-    /// Stop everything (leader worlds drop with the Leader).
+    /// Stop everything (leader worlds drop with the Leader): autoscaler
+    /// first (no scaling decisions against a dying cluster), then the
+    /// leader's runtime threads, then the workers.
     pub fn shutdown(&self) {
+        if let Some(h) = self.autoscaler.lock().unwrap().take() {
+            h.stop();
+        }
+        self.leader.stop_runtime();
         let mut ws = self.workers.lock().unwrap();
         for (_, h) in ws.iter_mut() {
             h.stop.store(true, Ordering::Relaxed);

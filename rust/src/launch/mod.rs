@@ -20,6 +20,6 @@ pub mod control;
 pub mod inproc;
 pub mod process;
 
-pub use control::ControlPlane;
+pub use control::{ControlPlane, LoadSample};
 pub use inproc::InProcCluster;
 pub use process::ProcessCluster;

@@ -1,9 +1,10 @@
-//! Lightweight metrics: counters, gauges, histograms and a timestamped
-//! timeline recorder used to regenerate the paper's time-series figures
-//! (Figs 4 and 5). Also hosts the process-wide [`global`] registry and
-//! the [`log_event`] structured log line, so daemons without an
-//! injected registry (e.g. the MultiWorld watchdog) stay observable in
-//! benches and CI logs.
+//! Lightweight metrics: counters, gauges, histograms, a sliding-window
+//! quantile tracker (the serving autoscaler's recent-latency signal)
+//! and a timestamped timeline recorder used to regenerate the paper's
+//! time-series figures (Figs 4 and 5). Also hosts the process-wide
+//! [`global`] registry and the [`log_event`] structured log line, so
+//! daemons without an injected registry (e.g. the MultiWorld watchdog)
+//! stay observable in benches and CI logs.
 
 use crate::util::time::since_epoch;
 use once_cell::sync::Lazy;
@@ -117,6 +118,73 @@ impl Histogram {
             }
         }
         self.max_us()
+    }
+}
+
+/// Latency samples over a sliding wall-clock window — the autoscaler's
+/// *recent* p99 signal. The cumulative [`Histogram`] never forgets, so
+/// a long-healthy run would mask a fresh SLO breach (and a past breach
+/// would mask recovery); this window does not. Samples are pruned on
+/// every observe/read, so memory is bounded by the arrival rate times
+/// the window.
+#[derive(Debug)]
+pub struct SlidingWindow {
+    window: std::time::Duration,
+    samples: Mutex<std::collections::VecDeque<(std::time::Instant, u64)>>,
+}
+
+impl SlidingWindow {
+    pub fn new(window: std::time::Duration) -> Self {
+        SlidingWindow {
+            window,
+            samples: Mutex::new(std::collections::VecDeque::new()),
+        }
+    }
+
+    fn prune(
+        &self,
+        samples: &mut std::collections::VecDeque<(std::time::Instant, u64)>,
+    ) {
+        let now = std::time::Instant::now();
+        while let Some(&(t, _)) = samples.front() {
+            if now.duration_since(t) > self.window {
+                samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        let mut s = self.samples.lock().unwrap();
+        self.prune(&mut s);
+        s.push_back((std::time::Instant::now(), us));
+    }
+
+    pub fn observe(&self, dur: std::time::Duration) {
+        self.observe_us(dur.as_micros() as u64);
+    }
+
+    /// Samples currently inside the window.
+    pub fn count(&self) -> usize {
+        let mut s = self.samples.lock().unwrap();
+        self.prune(&mut s);
+        s.len()
+    }
+
+    /// Exact quantile over the window (0 when empty).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let mut s = self.samples.lock().unwrap();
+        self.prune(&mut s);
+        if s.is_empty() {
+            return 0;
+        }
+        let mut vals: Vec<u64> = s.iter().map(|&(_, v)| v).collect();
+        vals.sort_unstable();
+        let idx = ((vals.len() as f64 * q).ceil() as usize)
+            .saturating_sub(1)
+            .min(vals.len() - 1);
+        vals[idx]
     }
 }
 
@@ -335,6 +403,22 @@ mod tests {
         assert!(csv.starts_with("t_sec,series,value,label\n"));
         assert!(csv.contains("W2-R1"));
         assert!(csv.contains("join"));
+    }
+
+    #[test]
+    fn sliding_window_quantiles_and_expiry() {
+        let w = SlidingWindow::new(Duration::from_millis(60));
+        for us in [100u64, 200, 300, 400] {
+            w.observe_us(us);
+        }
+        assert_eq!(w.count(), 4);
+        assert_eq!(w.quantile_us(0.5), 200);
+        assert_eq!(w.quantile_us(0.99), 400);
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(w.count(), 0, "samples age out of the window");
+        assert_eq!(w.quantile_us(0.99), 0);
+        w.observe(Duration::from_millis(1));
+        assert_eq!(w.quantile_us(0.99), 1_000);
     }
 
     #[test]

@@ -1,48 +1,173 @@
-//! Dynamic batching: fuse queued requests into model-batch-sized groups,
-//! dispatching when the batch fills or a deadline expires (vLLM-style
-//! continuous batching simplified to the fixed-batch AOT executable).
+//! Deadline-aware admission queue + dynamic batcher: fuse queued
+//! requests into model-batch-sized groups, dispatching when the batch
+//! fills or a deadline expires (vLLM-style continuous batching
+//! simplified to the fixed-batch AOT executable).
+//!
+//! Admission control:
+//!
+//! * **Bounded depth** — with a non-zero `capacity`, [`try_push`]
+//!   load-sheds (returns the request to the caller) once the queue is
+//!   full; [`push_wait`] blocks for space instead (closed-loop callers
+//!   like the compatibility `serve`).
+//! * **SLO expiry** — requests carry an optional deadline
+//!   ([`crate::serving::Request::deadline`]); [`next_batch`] drops
+//!   expired requests *before* they consume a dispatch slot (never after
+//!   a wasted forward pass), handing each to the drop hook so the
+//!   runtime can resolve its handle.
+//!
+//! Observability: queue depth and its high-water mark ride the global
+//! registry (`serving.queue.depth` gauge, `serving.queue.high_water`
+//! gauge, `serving.batcher.expired` counter) — the signals the
+//! autoscaler samples.
+//!
+//! [`try_push`]: DynamicBatcher::try_push
+//! [`push_wait`]: DynamicBatcher::push_wait
+//! [`next_batch`]: DynamicBatcher::next_batch
 
 use super::request::Request;
+use crate::metrics::{Counter, Gauge};
+use crate::util::time::since_epoch;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Called with each request dropped in the queue (SLO expiry, purge on
+/// close) so its handle can be resolved.
+pub type DropHook = Box<dyn Fn(Request) + Send + Sync>;
 
 struct Queue {
     items: VecDeque<Request>,
     closed: bool,
 }
 
-/// See module docs. Thread-safe: producers `push`, one consumer loops on
-/// `next_batch`.
+/// See module docs. Thread-safe: producers `push`/`try_push`/`push_wait`,
+/// one consumer loops on `next_batch`.
 pub struct DynamicBatcher {
     q: Mutex<Queue>,
     cv: Condvar,
     pub max_batch: usize,
     pub timeout: Duration,
-    depth_high_water: AtomicBool,
+    /// Admission bound (0 = unbounded).
+    pub capacity: usize,
+    high_water: AtomicUsize,
+    drop_hook: Mutex<Option<DropHook>>,
+    /// Pre-resolved global metrics (the push/drain paths are hot).
+    depth_gauge: Arc<Gauge>,
+    hw_gauge: Arc<Gauge>,
+    expired_counter: Arc<Counter>,
 }
 
 impl DynamicBatcher {
     pub fn new(max_batch: usize, timeout: Duration) -> Arc<Self> {
+        Self::with_capacity(max_batch, timeout, 0)
+    }
+
+    /// Batcher with a bounded admission queue (`capacity` requests;
+    /// 0 = unbounded).
+    pub fn with_capacity(max_batch: usize, timeout: Duration, capacity: usize) -> Arc<Self> {
         assert!(max_batch >= 1);
+        let g = crate::metrics::global();
         Arc::new(DynamicBatcher {
             q: Mutex::new(Queue { items: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
             max_batch,
             timeout,
-            depth_high_water: AtomicBool::new(false),
+            capacity,
+            high_water: AtomicUsize::new(0),
+            drop_hook: Mutex::new(None),
+            depth_gauge: g.gauge("serving.queue.depth"),
+            hw_gauge: g.gauge("serving.queue.high_water"),
+            expired_counter: g.counter("serving.batcher.expired"),
         })
     }
 
-    /// Enqueue a request. Returns current queue depth (for the
-    /// controller's scaling signal).
+    /// Install the hook invoked (outside the queue lock) for every
+    /// request the batcher drops instead of dispatching.
+    pub fn set_drop_hook(&self, hook: DropHook) {
+        *self.drop_hook.lock().unwrap() = Some(hook);
+    }
+
+    fn note_depth(&self, depth: usize) {
+        self.depth_gauge.set(depth as i64);
+        let mut hw = self.high_water.load(Ordering::Relaxed);
+        while depth > hw {
+            match self.high_water.compare_exchange_weak(
+                hw,
+                depth,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.hw_gauge.set(depth as i64);
+                    break;
+                }
+                Err(cur) => hw = cur,
+            }
+        }
+    }
+
+    fn run_drop_hook(&self, dropped: Vec<Request>) {
+        if dropped.is_empty() {
+            return;
+        }
+        self.expired_counter.add(dropped.len() as u64);
+        let hook = self.drop_hook.lock().unwrap();
+        if let Some(h) = hook.as_ref() {
+            for r in dropped {
+                h(r);
+            }
+        }
+    }
+
+    /// Enqueue a request unconditionally — bypasses the capacity bound
+    /// and the closed flag (legacy/test path; a request pushed after
+    /// `close` may never be drained). Production ingress goes through
+    /// [`try_push`](Self::try_push) / [`push_wait`](Self::push_wait).
+    /// Returns current queue depth (the controller's scaling signal).
     pub fn push(&self, r: Request) -> usize {
         let mut q = self.q.lock().unwrap();
         q.items.push_back(r);
         let depth = q.items.len();
-        self.cv.notify_one();
+        drop(q);
+        self.note_depth(depth);
+        self.cv.notify_all();
         depth
+    }
+
+    /// Admission-controlled enqueue: load-sheds (returns `Err` with the
+    /// request) when the bounded queue is full or the batcher is closed.
+    /// `Ok` carries the queue depth after the push.
+    pub fn try_push(&self, r: Request) -> Result<usize, Request> {
+        let mut q = self.q.lock().unwrap();
+        if q.closed || (self.capacity > 0 && q.items.len() >= self.capacity) {
+            return Err(r);
+        }
+        q.items.push_back(r);
+        let depth = q.items.len();
+        drop(q);
+        self.note_depth(depth);
+        self.cv.notify_all();
+        Ok(depth)
+    }
+
+    /// Blocking enqueue: waits for queue space instead of shedding
+    /// (closed-loop callers). `Err` returns the request if the batcher
+    /// closed while waiting.
+    pub fn push_wait(&self, r: Request) -> Result<usize, Request> {
+        let mut q = self.q.lock().unwrap();
+        while !q.closed && self.capacity > 0 && q.items.len() >= self.capacity {
+            q = self.cv.wait(q).unwrap();
+        }
+        if q.closed {
+            return Err(r);
+        }
+        q.items.push_back(r);
+        let depth = q.items.len();
+        drop(q);
+        self.note_depth(depth);
+        self.cv.notify_all();
+        Ok(depth)
     }
 
     /// Queue depth right now.
@@ -50,43 +175,98 @@ impl DynamicBatcher {
         self.q.lock().unwrap().items.len()
     }
 
-    /// No more requests will arrive; wake the consumer to drain.
+    /// Highest queue depth ever observed (surfaced as the
+    /// `serving.queue.high_water` gauge).
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// No more requests will arrive; wake the consumer to drain and any
+    /// blocked producers to bail.
     pub fn close(&self) {
         self.q.lock().unwrap().closed = true;
         self.cv.notify_all();
     }
 
-    /// Blocking: wait for the first request, then fill up to `max_batch`
-    /// until `timeout` elapses. `None` once closed and drained.
-    pub fn next_batch(&self) -> Option<Vec<Request>> {
+    /// Remove queued (not yet dispatched) requests whose ids are in
+    /// `ids`, returning them (compatibility `serve` abandoning a timed
+    /// out run; the drop hook is *not* invoked — the caller already
+    /// resolved these).
+    pub fn purge(&self, ids: &[u64]) -> Vec<Request> {
         let mut q = self.q.lock().unwrap();
-        // Phase 1: wait for anything.
-        loop {
-            if !q.items.is_empty() {
-                break;
+        let mut purged = Vec::new();
+        q.items.retain(|r| {
+            if ids.contains(&r.id) {
+                purged.push(r.clone());
+                false
+            } else {
+                true
             }
-            if q.closed {
-                return None;
-            }
-            q = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        });
+        let depth = q.items.len();
+        drop(q);
+        if !purged.is_empty() {
+            self.note_depth(depth);
+            self.cv.notify_all();
         }
-        // Phase 2: batch-fill window.
-        let deadline = Instant::now() + self.timeout;
+        purged
+    }
+
+    /// Blocking: wait for the first request, then fill up to `max_batch`
+    /// until `timeout` elapses. Expired requests are dropped (drop hook)
+    /// before dispatch and never consume a batch slot. `None` once
+    /// closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
         loop {
-            if q.items.len() >= self.max_batch || q.closed {
-                break;
+            let mut q = self.q.lock().unwrap();
+            // Phase 1: wait for anything. The condvar is notified by
+            // push/close, so no poll cap is needed.
+            loop {
+                if !q.items.is_empty() {
+                    break;
+                }
+                if q.closed {
+                    return None;
+                }
+                q = self.cv.wait(q).unwrap();
             }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+            // Phase 2: batch-fill window.
+            let deadline = Instant::now() + self.timeout;
+            loop {
+                if q.items.len() >= self.max_batch || q.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                q = self.cv.wait_timeout(q, deadline - now).unwrap().0;
             }
-            q = self.cv.wait_timeout(q, deadline - now).unwrap().0;
+            // Drain: fill the batch from the front, shedding expired
+            // requests so they never occupy a dispatch slot.
+            let now = since_epoch();
+            let mut batch = Vec::new();
+            let mut expired = Vec::new();
+            while batch.len() < self.max_batch {
+                let Some(r) = q.items.pop_front() else { break };
+                if r.expired_at(now) {
+                    expired.push(r);
+                } else {
+                    batch.push(r);
+                }
+            }
+            let depth = q.items.len();
+            drop(q);
+            self.note_depth(depth);
+            if self.capacity > 0 {
+                self.cv.notify_all(); // space freed for push_wait
+            }
+            self.run_drop_hook(expired);
+            if !batch.is_empty() {
+                return Some(batch);
+            }
+            // Everything drained was expired — wait for fresh work.
         }
-        let n = q.items.len().min(self.max_batch);
-        let batch: Vec<Request> = q.items.drain(..n).collect();
-        self.depth_high_water
-            .fetch_or(q.items.len() > self.max_batch, Ordering::Relaxed);
-        Some(batch)
     }
 }
 
@@ -169,12 +349,112 @@ mod tests {
     }
 
     #[test]
-    fn depth_reporting() {
+    fn push_wakes_blocked_consumer_without_poll_cap() {
+        // Regression for the old 50 ms phase-1 poll: a push must wake
+        // the consumer promptly via the condvar alone.
+        let b = DynamicBatcher::new(1, Duration::from_millis(1));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        b.push(req(0));
+        let batch = t.join().unwrap().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(40),
+            "woken by notify, not a 50 ms poll"
+        );
+    }
+
+    #[test]
+    fn depth_reporting_and_high_water() {
         let b = DynamicBatcher::new(4, Duration::from_millis(5));
         assert_eq!(b.push(req(0)), 1);
         assert_eq!(b.push(req(1)), 2);
         assert_eq!(b.depth(), 2);
         let _ = b.next_batch();
         assert_eq!(b.depth(), 0);
+        assert_eq!(b.high_water(), 2, "high water survives the drain");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_then_admits_after_drain() {
+        let b = DynamicBatcher::with_capacity(2, Duration::from_millis(5), 3);
+        for i in 0..3 {
+            assert!(b.try_push(req(i)).is_ok());
+        }
+        let back = b.try_push(req(3)).unwrap_err();
+        assert_eq!(back.id, 3, "shed request returned to the caller");
+        let _ = b.next_batch().unwrap(); // drains 2
+        assert!(b.try_push(req(4)).is_ok(), "space after drain");
+    }
+
+    #[test]
+    fn push_wait_blocks_for_space() {
+        let b = DynamicBatcher::with_capacity(1, Duration::from_millis(1), 1);
+        assert!(b.try_push(req(0)).is_ok());
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.push_wait(req(1)));
+        std::thread::sleep(Duration::from_millis(20));
+        let _ = b.next_batch().unwrap(); // frees the slot
+        assert!(t.join().unwrap().is_ok());
+        assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn push_wait_bails_on_close() {
+        let b = DynamicBatcher::with_capacity(1, Duration::from_millis(1), 1);
+        assert!(b.try_push(req(0)).is_ok());
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.push_wait(req(1)));
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        let back = t.join().unwrap().unwrap_err();
+        assert_eq!(back.id, 1);
+    }
+
+    #[test]
+    fn expired_requests_dropped_before_dispatch() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        let dropped: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let d2 = dropped.clone();
+        b.set_drop_hook(Box::new(move |r| d2.lock().unwrap().push(r.id)));
+        let mut dead = req(0);
+        dead.deadline = Some(since_epoch() - 1.0); // already expired
+        let live = req(1);
+        b.push(dead);
+        b.push(live);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1, "expired request never reaches dispatch");
+        assert_eq!(dropped.lock().unwrap().as_slice(), &[0]);
+    }
+
+    #[test]
+    fn all_expired_waits_for_fresh_work() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        let mut dead = req(0);
+        dead.deadline = Some(since_epoch() - 1.0);
+        b.push(dead);
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(30));
+        b.push(req(1)); // fresh work arrives after the expired drain
+        let batch = t.join().unwrap().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn purge_removes_queued_ids() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let purged = b.purge(&[1, 3]);
+        assert_eq!(purged.len(), 2);
+        assert_eq!(b.depth(), 2);
+        let ids: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2]);
     }
 }

@@ -232,6 +232,15 @@ impl Controller {
             }
         }
         let node = self.mint_replica(stage)?;
+        crate::metrics::global().counter("controller.scale_outs").inc();
+        crate::metrics::log_event(
+            "controller.scaled_out",
+            &[
+                ("stage", stage.to_string().as_str()),
+                ("node", node.to_string().as_str()),
+                ("depth_per_replica", format!("{depth_per_replica:.1}").as_str()),
+            ],
+        );
         let action = Action::ScaledOut { stage, node };
         self.actions.lock().unwrap().push(action.clone());
         Ok(Some(action))
@@ -371,6 +380,11 @@ impl Controller {
             }
         }
         drop(ctrl);
+        crate::metrics::global().counter("controller.scale_ins").inc();
+        crate::metrics::log_event(
+            "controller.scaled_in",
+            &[("node", node.to_string().as_str())],
+        );
         let action = Action::ScaledIn { node };
         self.actions.lock().unwrap().push(action.clone());
         Ok(Some(action))

@@ -1,5 +1,28 @@
-//! The leader: request ingestion, dynamic batching, dispatch into the
-//! pipeline, response collection, retry on loss, and SLO accounting.
+//! The leader: the always-on serving runtime. Request ingress with
+//! SLO-aware admission, dynamic batching, dispatch into the pipeline,
+//! response collection, retry on loss, and latency accounting.
+//!
+//! ## Runtime architecture
+//!
+//! The leader runs two persistent threads (started lazily by
+//! [`Leader::start_runtime`], or by the first `submit`/`serve` call):
+//!
+//! * **dispatcher** — loops on the admission queue's `next_batch`,
+//!   packs each batch and routes it to a live stage-0 replica
+//!   (least-inflight). Expired requests never reach it: the
+//!   [`DynamicBatcher`] drops them at the queue head.
+//! * **collector** — posts irecvs on every `out-*` edge, harvests
+//!   responses, resolves request handles, reacts to broken-world
+//!   events, and sweeps outstanding batches (redispatch after
+//!   `retry_timeout`, give up after `retry_max_attempts`).
+//!
+//! Clients call [`Leader::submit`] (load-shedding admission) or
+//! [`Leader::submit_blocking`] (backpressure admission) and hold a
+//! [`RequestHandle`] that resolves to exactly one
+//! [`Outcome`](crate::serving::request::Outcome): a response, an SLO
+//! drop, or an admission rejection. The run-to-completion
+//! [`Leader::serve`] from earlier revisions survives as a thin
+//! compatibility wrapper: submit-all, wait-all, report.
 //!
 //! The leader is rank 0 of each `in-*` world (feeding stage-0 replicas)
 //! and rank 1 of each `out-*` world (hearing from last-stage replicas).
@@ -9,24 +32,36 @@
 //! `retry_timeout` — at-least-once with response dedupe.
 
 use super::batcher::DynamicBatcher;
-use super::request::{Request, Response};
+use super::request::{
+    DropReason, Outcome, OutcomeSlot, RejectReason, Request, RequestHandle, Response,
+};
 use super::router::ReplicaRouter;
 use super::stage_worker::{Envelope, TAG_DATA};
 use super::topology::{NodeId, Topology, WorldDef};
-use crate::metrics::{Histogram, Timeline};
+use crate::metrics::{Histogram, SlidingWindow, Timeline};
 use crate::multiworld::{WorldCommunicator, WorldEvent, WorldManager};
 use crate::mwccl::{Work, WorldOptions};
 use crate::tensor::{DType, Tensor};
 use crate::util::time::since_epoch;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Cap on the cumulative response-introspection buffer (the runtime is
+/// always-on; clients receive responses through their handles).
+const RESPONSES_KEEP: usize = 65_536;
 
 struct Outstanding {
     requests: Vec<Request>,
     sent_at: Instant,
     attempts: u32,
+}
+
+struct RuntimeThreads {
+    dispatcher: std::thread::JoinHandle<()>,
+    collector: std::thread::JoinHandle<()>,
 }
 
 /// See module docs.
@@ -39,12 +74,24 @@ pub struct Leader {
     batch_size: usize,
     seq_len: usize,
     vocab: usize,
+    /// Per-request SLO budget stamped at admission (None = no SLO).
+    slo: Option<Duration>,
     next_batch_id: AtomicU64,
     outstanding: Mutex<HashMap<u64, Outstanding>>,
-    responses: Mutex<Vec<Response>>,
+    /// Unresolved request handles by request id.
+    handles: Mutex<HashMap<u64, Arc<OutcomeSlot>>>,
+    /// Most recent responses, bounded at `RESPONSES_KEEP`
+    /// (introspection only — clients get theirs through the handle).
+    responses: Mutex<VecDeque<Response>>,
+    /// Cumulative latency distribution (reports).
     pub latency: Histogram,
+    /// Recent-latency window (the autoscaler's SLO signal).
+    recent: SlidingWindow,
     pub timeline: Timeline,
     retry_timeout: Duration,
+    retry_max_attempts: u32,
+    retries: AtomicU64,
+    runtime: Mutex<Option<RuntimeThreads>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -52,6 +99,11 @@ pub struct Leader {
 #[derive(Clone, Debug)]
 pub struct LeaderReport {
     pub completed: usize,
+    /// Admission rejections (queue full / malformed / duplicate id).
+    pub rejected: usize,
+    /// Admitted but never answered (SLO expiry, retry exhaustion,
+    /// shutdown, or the run deadline passing first).
+    pub dropped: usize,
     pub duration: f64,
     pub throughput_rps: f64,
     pub p50_ms: f64,
@@ -83,26 +135,43 @@ impl Leader {
             .iter()
             .map(|w| w.name.clone())
             .collect();
-        Ok(Arc::new(Leader {
+        let leader = Arc::new(Leader {
             mgr,
             comm,
-            batcher: DynamicBatcher::new(
+            batcher: DynamicBatcher::with_capacity(
                 batch_size,
                 Duration::from_millis(cfg.batch_timeout_ms),
+                cfg.admission_depth,
             ),
             in_router,
             out_edges: Mutex::new(out_edges),
             batch_size,
             seq_len,
             vocab,
+            slo: (cfg.slo_ms > 0).then(|| Duration::from_millis(cfg.slo_ms)),
             next_batch_id: AtomicU64::new(1),
             outstanding: Mutex::new(HashMap::new()),
-            responses: Mutex::new(Vec::new()),
+            handles: Mutex::new(HashMap::new()),
+            responses: Mutex::new(VecDeque::new()),
             latency: Histogram::default(),
+            recent: SlidingWindow::new(Duration::from_millis(cfg.scale_window_ms.max(1))),
             timeline: Timeline::new(),
-            retry_timeout: Duration::from_secs(2),
+            retry_timeout: Duration::from_millis(cfg.retry_timeout_ms),
+            retry_max_attempts: cfg.retry_max_attempts,
+            retries: AtomicU64::new(0),
+            runtime: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
-        }))
+        });
+        // The admission queue resolves the handle of every request it
+        // expires (SLO deadline passed before dispatch).
+        let weak = Arc::downgrade(&leader);
+        leader.batcher.set_drop_hook(Box::new(move |r: Request| {
+            if let Some(me) = weak.upgrade() {
+                crate::metrics::global().counter("serving.dropped.deadline").inc();
+                me.resolve(r.id, Outcome::Dropped(DropReason::Deadline));
+            }
+        }));
+        Ok(leader)
     }
 
     /// The manager (for event wiring by the controller).
@@ -128,48 +197,345 @@ impl Leader {
         Ok(())
     }
 
+    // ------------------------------------------------------------------
+    // Ingress: admission + the client-facing submit API.
+    // ------------------------------------------------------------------
+
+    /// Submit one request to the always-on runtime with load-shedding
+    /// admission: a full bounded queue rejects instead of blocking.
+    /// Starts the runtime threads on first use.
+    pub fn submit(self: &Arc<Self>, r: Request) -> RequestHandle {
+        self.start_runtime();
+        self.admit(r, false)
+    }
+
+    /// Submit with backpressure admission: blocks for queue space
+    /// instead of shedding (closed-loop callers).
+    pub fn submit_blocking(self: &Arc<Self>, r: Request) -> RequestHandle {
+        self.start_runtime();
+        self.admit(r, true)
+    }
+
+    fn admit(&self, mut r: Request, block: bool) -> RequestHandle {
+        let g = crate::metrics::global();
+        if r.tokens.len() != self.seq_len {
+            // Malformed requests die at admission — never inside the
+            // dispatcher (where they used to panic the thread).
+            g.counter("serving.rejected.malformed").inc();
+            return RequestHandle::resolved(
+                r.id,
+                Outcome::Rejected(RejectReason::Malformed {
+                    got: r.tokens.len(),
+                    want: self.seq_len,
+                }),
+            );
+        }
+        r.arrival = since_epoch();
+        r.deadline = self.slo.map(|slo| r.arrival + slo.as_secs_f64());
+        let id = r.id;
+        let slot = Arc::new(OutcomeSlot::default());
+        {
+            let mut handles = self.handles.lock().unwrap();
+            match handles.entry(id) {
+                std::collections::hash_map::Entry::Occupied(_) => {
+                    drop(handles);
+                    g.counter("serving.rejected.duplicate").inc();
+                    return RequestHandle::resolved(
+                        id,
+                        Outcome::Rejected(RejectReason::DuplicateId),
+                    );
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(slot.clone());
+                }
+            }
+        }
+        let pushed = if block {
+            self.batcher.push_wait(r)
+        } else {
+            self.batcher.try_push(r)
+        };
+        match pushed {
+            Ok(_) => {
+                g.counter("serving.admitted").inc();
+                RequestHandle::new(id, slot)
+            }
+            Err(_) => {
+                self.handles.lock().unwrap().remove(&id);
+                let outcome = if self.stop.load(Ordering::Relaxed) {
+                    Outcome::Dropped(DropReason::Shutdown)
+                } else {
+                    g.counter("serving.rejected.queue_full").inc();
+                    Outcome::Rejected(RejectReason::QueueFull)
+                };
+                RequestHandle::resolved(id, outcome)
+            }
+        }
+    }
+
+    /// Resolve a request's handle (first outcome wins; later calls for
+    /// the same id are no-ops).
+    fn resolve(&self, id: u64, outcome: Outcome) {
+        if let Some(slot) = self.handles.lock().unwrap().remove(&id) {
+            slot.resolve(outcome);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Runtime threads.
+    // ------------------------------------------------------------------
+
+    /// Start the persistent dispatcher + collector threads (idempotent).
+    /// The threads hold only `Weak` references, so dropping the last
+    /// external `Arc<Leader>` shuts them down.
+    pub fn start_runtime(self: &Arc<Self>) {
+        let mut rt = self.runtime.lock().unwrap();
+        if rt.is_some() {
+            return;
+        }
+        let batcher = self.batcher.clone();
+        let weak = Arc::downgrade(self);
+        let dispatcher = std::thread::Builder::new()
+            .name("leader-dispatch".into())
+            .spawn(move || {
+                while let Some(batch) = batcher.next_batch() {
+                    let Some(me) = weak.upgrade() else { break };
+                    if me.stop.load(Ordering::Relaxed) {
+                        for r in batch {
+                            me.resolve(r.id, Outcome::Dropped(DropReason::Shutdown));
+                        }
+                        continue;
+                    }
+                    me.dispatch_batch(batch);
+                }
+            })
+            .expect("spawn leader dispatcher");
+        let weak = Arc::downgrade(self);
+        let events = self.mgr.subscribe();
+        let collector = std::thread::Builder::new()
+            .name("leader-collect".into())
+            .spawn(move || {
+                let mut pending: HashMap<String, Work> = HashMap::new();
+                loop {
+                    let Some(me) = weak.upgrade() else { break };
+                    if me.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    me.collect_tick(&events, &mut pending);
+                }
+            })
+            .expect("spawn leader collector");
+        *rt = Some(RuntimeThreads { dispatcher, collector });
+    }
+
+    /// Stop the runtime: close admission, join the threads, resolve
+    /// everything still in flight as shutdown-dropped. Terminal — the
+    /// leader cannot serve afterwards.
+    pub fn stop_runtime(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        let rt = self.runtime.lock().unwrap().take();
+        if let Some(rt) = rt {
+            let _ = rt.dispatcher.join();
+            let _ = rt.collector.join();
+        }
+        let unresolved: Vec<u64> = self.handles.lock().unwrap().keys().copied().collect();
+        for id in unresolved {
+            self.resolve(id, Outcome::Dropped(DropReason::Shutdown));
+        }
+        self.outstanding.lock().unwrap().clear();
+    }
+
     /// Pack up to `batch_size` requests into the model input tensor,
-    /// padding by repeating the first row.
-    fn pack_batch(&self, reqs: &[Request]) -> Tensor {
+    /// padding by repeating the first row. Malformed batches are an
+    /// error (admission rejects them long before this).
+    fn pack_batch(&self, reqs: &[Request]) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(!reqs.is_empty(), "empty batch");
+        anyhow::ensure!(reqs.len() <= self.batch_size, "batch exceeds model batch");
         let mut tokens = Vec::with_capacity(self.batch_size * self.seq_len);
         for r in reqs {
-            assert_eq!(r.tokens.len(), self.seq_len, "request seq len");
+            anyhow::ensure!(
+                r.tokens.len() == self.seq_len,
+                "request {} seq len {} != {}",
+                r.id,
+                r.tokens.len(),
+                self.seq_len
+            );
             tokens.extend_from_slice(&r.tokens);
         }
         for _ in reqs.len()..self.batch_size {
             let row = reqs[0].tokens.clone();
             tokens.extend_from_slice(&row);
         }
-        Tensor::from_i32(&[self.batch_size, self.seq_len], &tokens)
+        Ok(Tensor::from_i32(&[self.batch_size, self.seq_len], &tokens))
     }
 
-    fn dispatch(&self, id: u64, reqs: Vec<Request>) -> bool {
-        let tensor = self.pack_batch(&reqs);
+    /// Dispatcher: assign a batch id, register the outstanding entry
+    /// (so the collector's sweep owns the batch even if every replica
+    /// is down right now), then try to send.
+    fn dispatch_batch(&self, batch: Vec<Request>) {
+        // Defense in depth, kept cheap (no throwaway tensor pack):
+        // admission already rejects malformed requests, so this path
+        // should be unreachable.
+        let malformed = batch.is_empty()
+            || batch.len() > self.batch_size
+            || batch.iter().any(|r| r.tokens.len() != self.seq_len);
+        if malformed {
+            crate::metrics::global().counter("serving.pack_failures").inc();
+            for r in batch {
+                let got = r.tokens.len();
+                self.resolve(
+                    r.id,
+                    Outcome::Rejected(RejectReason::Malformed { got, want: self.seq_len }),
+                );
+            }
+            return;
+        }
+        let id = self.next_batch_id.fetch_add(1, Ordering::Relaxed);
+        let reqs = batch.clone();
+        self.outstanding.lock().unwrap().insert(
+            id,
+            Outstanding { requests: batch, sent_at: Instant::now(), attempts: 0 },
+        );
+        if !self.send_batch(id, &reqs) {
+            // No live replica: the entry stays outstanding; the sweep
+            // redispatches once a replica recovers or scales out.
+            self.timeline.record_labeled("stall", 1.0, "no live replica");
+        }
+    }
+
+    /// Pack and send batch `id` to a live replica, updating the
+    /// outstanding entry's clock and attempt count. `false` when every
+    /// replica is dead or saturated.
+    fn send_batch(&self, id: u64, reqs: &[Request]) -> bool {
+        let Ok(tensor) = self.pack_batch(reqs) else { return false };
         let env = Envelope { id, tensor }.pack();
         loop {
             let Some(edge) = self.in_router.pick() else {
-                return false; // everything dead/saturated
+                return false;
             };
             match self.comm.send_blocking(&edge, env.clone(), 1, TAG_DATA) {
                 Ok(()) => {
                     self.in_router.complete(&edge);
-                    let attempts = {
-                        let mut out = self.outstanding.lock().unwrap();
-                        let entry = out.entry(id).or_insert(Outstanding {
-                            requests: reqs.clone(),
-                            sent_at: Instant::now(),
-                            attempts: 0,
-                        });
+                    if let Some(entry) = self.outstanding.lock().unwrap().get_mut(&id) {
                         entry.sent_at = Instant::now();
                         entry.attempts += 1;
-                        entry.attempts
-                    };
-                    let _ = attempts;
+                    }
                     return true;
                 }
                 Err(_) => {
                     self.in_router.mark_dead(&edge);
                 }
+            }
+        }
+    }
+
+    /// One collector iteration: fault events, receive posting, harvest,
+    /// outstanding sweep. Bounded waits keep the stop flag live.
+    fn collect_tick(
+        &self,
+        events: &Receiver<WorldEvent>,
+        pending: &mut HashMap<String, Work>,
+    ) {
+        // Fault events: drop broken edges from the router/collection.
+        while let Ok(evt) = events.try_recv() {
+            if let WorldEvent::Broken { world, .. } = evt {
+                self.in_router.mark_dead(&world);
+                self.out_edges.lock().unwrap().retain(|e| e != &world);
+                pending.remove(&world);
+                self.timeline.record_labeled("failure", 1.0, &world);
+            }
+        }
+        // (Re-)post receives on the current out-edge set; prune edges
+        // that were retired (scale-in) or broke.
+        {
+            let edges = self.out_edges.lock().unwrap().clone();
+            pending.retain(|e, _| edges.contains(e));
+            for e in edges {
+                if !pending.contains_key(&e) {
+                    if let Ok(w) = self.comm.recv(&e, 0, TAG_DATA) {
+                        pending.insert(e, w);
+                    }
+                }
+            }
+        }
+        if pending.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+        } else {
+            let names: Vec<String> = pending.keys().cloned().collect();
+            let works: Vec<Work> = names.iter().map(|n| pending[n].clone()).collect();
+            if let Some(idx) =
+                self.comm.wait_any_deadline(&works, Some(Duration::from_millis(20)))
+            {
+                let edge = names[idx].clone();
+                let work = pending.remove(&edge).unwrap();
+                match work.wait() {
+                    Ok(Some(packed)) => {
+                        if let Ok(env) = Envelope::unpack(&packed) {
+                            self.harvest_response(env);
+                        }
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        self.mgr.break_world(&edge, &e.to_string());
+                    }
+                }
+            }
+        }
+        self.sweep_outstanding();
+    }
+
+    /// Redispatch stale batches (lost to a dead worker), drop fully
+    /// expired ones, give up after `retry_max_attempts`.
+    fn sweep_outstanding(&self) {
+        let now = since_epoch();
+        let mut stale: Vec<(u64, Vec<Request>)> = Vec::new();
+        let mut failed: Vec<(u64, Vec<Request>)> = Vec::new();
+        let mut expired: Vec<(u64, Vec<Request>)> = Vec::new();
+        {
+            let out = self.outstanding.lock().unwrap();
+            for (id, o) in out.iter() {
+                let overdue = o.sent_at.elapsed() > self.retry_timeout
+                    || (o.attempts == 0 && o.sent_at.elapsed() > Duration::from_millis(50));
+                if !overdue {
+                    continue;
+                }
+                if o.requests.iter().all(|r| r.expired_at(now))
+                    && o.requests.iter().any(|r| r.deadline.is_some())
+                {
+                    expired.push((*id, o.requests.clone()));
+                } else if o.attempts >= self.retry_max_attempts {
+                    failed.push((*id, o.requests.clone()));
+                } else {
+                    stale.push((*id, o.requests.clone()));
+                }
+            }
+        }
+        for (id, reqs) in expired {
+            self.outstanding.lock().unwrap().remove(&id);
+            crate::metrics::global()
+                .counter("serving.dropped.deadline")
+                .add(reqs.len() as u64);
+            self.timeline.record_labeled("expired", 1.0, &format!("batch {id}"));
+            for r in reqs {
+                self.resolve(r.id, Outcome::Dropped(DropReason::Deadline));
+            }
+        }
+        for (id, reqs) in failed {
+            self.outstanding.lock().unwrap().remove(&id);
+            crate::metrics::global()
+                .counter("serving.dropped.failed")
+                .add(reqs.len() as u64);
+            self.timeline.record_labeled("gave_up", 1.0, &format!("batch {id}"));
+            for r in reqs {
+                self.resolve(r.id, Outcome::Dropped(DropReason::Failed));
+            }
+        }
+        for (id, reqs) in stale {
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            self.timeline.record_labeled("retry", 1.0, &format!("batch {id}"));
+            if !self.send_batch(id, &reqs) {
+                break; // nothing alive; the next sweep retries
             }
         }
     }
@@ -185,149 +551,132 @@ impl Leader {
         let decodable = logits.dtype() == DType::F32
             && logits.elems() >= self.batch_size * self.seq_len * self.vocab;
         let now = since_epoch();
-        let mut responses = self.responses.lock().unwrap();
-        for (row, req) in out.requests.iter().enumerate() {
-            let next_token = if decodable {
-                argmax_last(&logits, row, self.seq_len, self.vocab)
-            } else {
-                0
-            };
-            let latency = now - req.arrival;
-            self.latency
-                .observe(Duration::from_secs_f64(latency.max(0.0)));
-            responses.push(Response { id: req.id, latency, next_token });
-        }
-        self.timeline
-            .record("completed", responses.len() as f64);
+        let n_done = {
+            let mut responses = self.responses.lock().unwrap();
+            for (row, req) in out.requests.iter().enumerate() {
+                let next_token = if decodable {
+                    argmax_last(&logits, row, self.seq_len, self.vocab)
+                } else {
+                    0
+                };
+                let latency = now - req.arrival;
+                let dur = Duration::from_secs_f64(latency.max(0.0));
+                self.latency.observe(dur);
+                self.recent.observe(dur);
+                let resp = Response { id: req.id, latency, next_token };
+                responses.push_back(resp.clone());
+                self.resolve(req.id, Outcome::Response(resp));
+            }
+            // The runtime is always-on: bound the introspection buffer
+            // (O(excess) on a deque, not a front-shift of the whole
+            // buffer on every harvest once the cap is reached).
+            while responses.len() > RESPONSES_KEEP {
+                responses.pop_front();
+            }
+            responses.len()
+        };
+        // (The serving.recent_p99_ms gauge is refreshed by the
+        // autoscaler tick, which computes the window quantile anyway —
+        // not here, where it would cost a sort per harvested batch.)
+        crate::metrics::global()
+            .counter("serving.completed")
+            .add(out.requests.len() as u64);
+        self.timeline.record("completed", n_done as f64);
     }
 
+    // ------------------------------------------------------------------
+    // Compatibility serve: submit-all, wait-all, report.
+    // ------------------------------------------------------------------
+
     /// Serve `requests` (arriving at `rate` rps, or open-loop) and block
-    /// until all responses are in or `deadline` passes.
+    /// until every one resolved or `deadline` passes. Built entirely on
+    /// the submit API; admission blocks for queue space (no shedding),
+    /// so a bounded queue backpressures this closed loop instead of
+    /// rejecting it.
     pub fn serve(
         self: &Arc<Self>,
         requests: Vec<Request>,
         rate: Option<f64>,
         deadline: Duration,
     ) -> LeaderReport {
+        self.start_runtime();
         let t_start = Instant::now();
-        let total = requests.len();
-        let mut retries = 0u64;
-
-        // Ingest thread: requests → batcher at the given rate.
-        let batcher = self.batcher.clone();
-        let ingest = {
-            let mut rng = crate::util::prng::Rng::new(0xFEED);
-            std::thread::spawn(move || {
-                for mut r in requests {
-                    if let Some(rate) = rate {
-                        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
-                    }
-                    r.arrival = since_epoch();
-                    batcher.push(r);
-                }
-                batcher.close();
-            })
-        };
-
-        // Dispatch thread: batches → pipeline.
-        let me = self.clone();
-        let dispatcher = std::thread::spawn(move || {
-            while let Some(batch) = me.batcher.next_batch() {
-                let id = me.next_batch_id.fetch_add(1, Ordering::Relaxed);
-                if !me.dispatch(id, batch) {
-                    break; // pipeline dead
-                }
+        let hard_deadline = t_start + deadline;
+        let retries_before = self.retries.load(Ordering::Relaxed);
+        let mut rng = crate::util::prng::Rng::new(0xFEED);
+        let mut handles = Vec::with_capacity(requests.len());
+        for r in requests {
+            if let Some(rate) = rate {
+                std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
             }
-        });
-
-        // Collect loop (this thread): post irecv on every out-edge, poll.
-        let hard_deadline = Instant::now() + deadline;
-        let mut pending: HashMap<String, Work> = HashMap::new();
-        let events = self.mgr.subscribe();
-        while self.responses.lock().unwrap().len() < total {
-            if Instant::now() >= hard_deadline {
-                break;
-            }
-            // Fault events: drop broken edges from the router/collection.
-            while let Ok(evt) = events.try_recv() {
-                if let WorldEvent::Broken { world, .. } = evt {
-                    self.in_router.mark_dead(&world);
-                    self.out_edges.lock().unwrap().retain(|e| e != &world);
-                    pending.remove(&world);
-                    self.timeline.record_labeled("failure", 1.0, &world);
+            handles.push(self.admit(r, true));
+        }
+        let mut completed = 0usize;
+        let mut rejected = 0usize;
+        let mut dropped = 0usize;
+        let mut unresolved: Vec<u64> = Vec::new();
+        // Per-run latency distribution from this run's own responses —
+        // the cumulative `self.latency` would pollute a second serve()
+        // call's report with the first call's samples.
+        let run_latency = Histogram::default();
+        for h in &handles {
+            match h.wait_deadline(hard_deadline) {
+                Some(Outcome::Response(resp)) => {
+                    completed += 1;
+                    run_latency
+                        .observe(Duration::from_secs_f64(resp.latency.max(0.0)));
                 }
-            }
-            // (Re-)post receives.
-            {
-                let edges = self.out_edges.lock().unwrap().clone();
-                for e in edges {
-                    if !pending.contains_key(&e) {
-                        if let Ok(w) = self.comm.recv(&e, 0, TAG_DATA) {
-                            pending.insert(e, w);
-                        }
-                    }
-                }
-            }
-            if pending.is_empty() {
-                std::thread::sleep(Duration::from_millis(5));
-            } else {
-                let names: Vec<String> = pending.keys().cloned().collect();
-                let works: Vec<Work> = names.iter().map(|n| pending[n].clone()).collect();
-                if let Some(idx) =
-                    self.comm.wait_any_deadline(&works, Some(Duration::from_millis(20)))
-                {
-                    let edge = names[idx].clone();
-                    let work = pending.remove(&edge).unwrap();
-                    match work.wait() {
-                        Ok(Some(packed)) => {
-                            if let Ok(env) = Envelope::unpack(&packed) {
-                                self.harvest_response(env);
-                            }
-                        }
-                        Ok(None) => {}
-                        Err(e) => {
-                            self.mgr.break_world(&edge, &e.to_string());
-                        }
-                    }
-                }
-            }
-            // Retry stale outstanding batches (lost to a dead worker).
-            let stale: Vec<(u64, Vec<Request>)> = {
-                let out = self.outstanding.lock().unwrap();
-                out.iter()
-                    .filter(|(_, o)| o.sent_at.elapsed() > self.retry_timeout && o.attempts < 5)
-                    .map(|(id, o)| (*id, o.requests.clone()))
-                    .collect()
-            };
-            for (id, reqs) in stale {
-                retries += 1;
-                self.timeline.record_labeled("retry", 1.0, &format!("batch {id}"));
-                if !self.dispatch(id, reqs) {
-                    break;
-                }
+                Some(Outcome::Rejected(_)) => rejected += 1,
+                Some(Outcome::Dropped(_)) => dropped += 1,
+                None => unresolved.push(h.id()),
             }
         }
-        self.stop.store(true, Ordering::Relaxed);
-        let _ = ingest.join();
-        self.batcher.close();
-        let _ = dispatcher.join();
-
-        let completed = self.responses.lock().unwrap().len();
+        if !unresolved.is_empty() {
+            // Run deadline passed: abandon what never resolved so a
+            // later run reusing ids cannot collide with this one.
+            dropped += unresolved.len();
+            self.abandon(&unresolved);
+        }
         let duration = t_start.elapsed().as_secs_f64();
         LeaderReport {
             completed,
+            rejected,
+            dropped,
             duration,
-            throughput_rps: completed as f64 / duration,
-            p50_ms: self.latency.quantile_us(0.50) as f64 / 1e3,
-            p99_ms: self.latency.quantile_us(0.99) as f64 / 1e3,
-            mean_ms: self.latency.mean_us() / 1e3,
-            retries,
+            throughput_rps: completed as f64 / duration.max(1e-9),
+            p50_ms: run_latency.quantile_us(0.50) as f64 / 1e3,
+            p99_ms: run_latency.quantile_us(0.99) as f64 / 1e3,
+            mean_ms: run_latency.mean_us() / 1e3,
+            retries: self.retries.load(Ordering::Relaxed) - retries_before,
         }
     }
 
-    /// Responses collected so far (test introspection).
+    /// Walk away from requests the caller stopped waiting for: purge
+    /// them from the admission queue, drop outstanding batches made up
+    /// *entirely* of them, resolve their handles as abandoned. Mixed
+    /// batches (a concurrent submitter's requests packed alongside
+    /// abandoned ones) stay outstanding so the foreign requests still
+    /// complete; the abandoned members' late responses hit the resolve
+    /// no-op path.
+    fn abandon(&self, ids: &[u64]) {
+        let _ = self.batcher.purge(ids);
+        self.outstanding
+            .lock()
+            .unwrap()
+            .retain(|_, o| !o.requests.iter().all(|r| ids.contains(&r.id)));
+        for &id in ids {
+            self.resolve(id, Outcome::Dropped(DropReason::Abandoned));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection + autoscaler signals.
+    // ------------------------------------------------------------------
+
+    /// Responses collected so far (test introspection; bounded to the
+    /// most recent `RESPONSES_KEEP`).
     pub fn responses(&self) -> Vec<Response> {
-        self.responses.lock().unwrap().clone()
+        self.responses.lock().unwrap().iter().cloned().collect()
     }
 
     /// Current queue depth per alive stage-0 replica (scaling signal).
@@ -337,6 +686,74 @@ impl Leader {
             f64::INFINITY
         } else {
             self.batcher.depth() as f64 / alive as f64
+        }
+    }
+
+    /// Admission queue depth right now.
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Alive stage-0 replicas (router liveness).
+    pub fn alive_replicas(&self) -> usize {
+        self.in_router.counts().0
+    }
+
+    /// Dispatched batches not yet answered.
+    pub fn outstanding_batches(&self) -> usize {
+        self.outstanding.lock().unwrap().len()
+    }
+
+    /// p99 latency (ms) over the recent sliding window (0 when idle).
+    pub fn recent_p99_ms(&self) -> f64 {
+        self.recent.quantile_us(0.99) as f64 / 1e3
+    }
+
+    /// Per-in-edge dispatch totals (router introspection).
+    pub fn dispatch_counts(&self) -> BTreeMap<String, u64> {
+        self.in_router.dispatch_counts()
+    }
+
+    /// Stop routing new batches to these in-edges (graceful scale-in
+    /// drain; in-flight batches still complete over the out-edges).
+    pub fn quiesce_edges(&self, edges: &[String]) {
+        for e in edges {
+            self.in_router.remove_replica(e);
+        }
+    }
+
+    /// Undo a quiesce (the retirement failed): route to these in-edges
+    /// again.
+    pub fn restore_edges(&self, edges: &[String]) {
+        for e in edges {
+            self.in_router.add_replica(e);
+        }
+    }
+
+    /// Forget retired edges entirely (drain complete): stop collecting
+    /// on the out-edges too.
+    pub fn release_edges(&self, edges: &[String]) {
+        for e in edges {
+            self.in_router.remove_replica(e);
+        }
+        self.out_edges.lock().unwrap().retain(|e| !edges.contains(e));
+    }
+}
+
+impl Drop for Leader {
+    fn drop(&mut self) {
+        // Signal the runtime threads (they hold only Weak refs and the
+        // batcher) and detach them — joining here could deadlock when
+        // the last Arc is dropped by one of them.
+        self.stop.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        let _ = self.runtime.lock().unwrap().take();
+        // Clients may outlive the leader (handles own only the slot):
+        // resolve everything still pending so no wait() hangs forever.
+        let unresolved: Vec<Arc<OutcomeSlot>> =
+            self.handles.lock().unwrap().drain().map(|(_, s)| s).collect();
+        for slot in unresolved {
+            slot.resolve(Outcome::Dropped(DropReason::Shutdown));
         }
     }
 }

@@ -2,11 +2,28 @@
 //!
 //! This is the "full-fledged model serving system" the paper's
 //! conclusion names as future work, built here as a first-class part of
-//! the reproduction: a leader process batches and routes requests into
-//! a stage-partitioned pipeline whose workers execute AOT-compiled
-//! model stages (see [`crate::runtime`]) and forward activations
-//! through MultiWorld worlds — one small world per pipeline edge,
-//! exactly the Fig. 2 rhombus.
+//! the reproduction — an **always-on serving runtime**: clients submit
+//! requests through an open ingress and get back handles; a
+//! deadline-aware admission queue feeds a stage-partitioned pipeline
+//! whose workers execute AOT-compiled model stages (see
+//! [`crate::runtime`]) and forward activations through MultiWorld
+//! worlds — one small world per pipeline edge, exactly the Fig. 2
+//! rhombus — while a closed-loop autoscaler grows and shrinks the
+//! topology under live traffic.
+//!
+//! **Request lifecycle.** [`Leader::submit`] runs admission control
+//! (sequence-length validation, bounded queue depth with load-shedding,
+//! per-request SLO deadline stamping) and returns a [`RequestHandle`]
+//! that resolves to exactly one outcome: a [`Response`], an SLO-deadline
+//! drop, or an admission rejection. Two persistent leader threads do
+//! the rest: a *dispatcher* batches admitted requests (expired ones are
+//! dropped at the queue head, before any forward pass) and routes each
+//! batch to a live replica; a *collector* harvests responses, resolves
+//! handles, and re-dispatches batches lost to dead workers
+//! (at-least-once with response dedupe). The run-to-completion
+//! [`Leader::serve`] survives as a compatibility wrapper over the same
+//! machinery: submit-all (with backpressure instead of shedding),
+//! wait-all, report.
 //!
 //! **Serving parallelism.** Two axes compose:
 //!
@@ -21,23 +38,36 @@
 //!   world per replica. Per batch, the head `broadcast`s the activation
 //!   across the TP world, every shard computes its weight slice, and
 //!   the partial outputs combine with `all_reduce(Sum)` before the head
-//!   forwards downstream — the first worlds in the system with more
-//!   than two members, driving the flat/ring collective selector in
-//!   the serving hot path. A `tp = 1` deployment is byte-identical
+//!   forwards downstream. A `tp = 1` deployment is byte-identical
 //!   (world names and members) to the pre-sharding scheme.
 //!
-//! Fault domains are shard-granular: a dead shard breaks its replica's
-//! TP world (plus the head's edge worlds when the head died) and the
-//! controller re-mints exactly those worlds under fresh
-//! generation-tagged names, respawning only the dead shard; TP
-//! neighbors rejoin over their control channels and are never declared
-//! dead on TP-world evidence alone (see [`controller`]).
+//! **Elasticity, closed loop.** The [`Autoscaler`] samples live signals
+//! every tick — admission-queue depth per alive replica, recent p99
+//! latency vs. the SLO target, replica liveness — and drives
+//! [`Controller::maybe_scale_out`] / [`Controller::scale_in`] with
+//! hysteresis and cooldown. Scale-in is graceful: the victim's
+//! leader-facing edges are quiesced, outstanding batches drain, then
+//! the replica is retired. Decisions are observable through the
+//! controller's `Action` log, the `serving.autoscale.{out,in}`
+//! counters, and `autoscale.*` log events.
+//!
+//! Fault domains are shard-granular and compose with scaling: a dead
+//! shard breaks its replica's TP world (plus the head's edge worlds
+//! when the head died) and the controller re-mints exactly those worlds
+//! under fresh generation-tagged names, respawning only the dead shard;
+//! TP neighbors rejoin over their control channels and are never
+//! declared dead on TP-world evidence alone (see [`controller`]). A
+//! replica can be killed, recovered, and a fresh replica scaled out in
+//! the same run.
 //!
 //! Pieces (each independently testable):
 //!
-//! * [`request`] — request/response types and the Poisson workload
+//! * [`request`] — request/response types, the per-request
+//!   [`RequestHandle`]/outcome machinery, and the Poisson workload
 //!   generator.
-//! * [`batcher`] — the dynamic batcher (max batch / timeout fill).
+//! * [`batcher`] — the deadline-aware admission queue + dynamic batcher
+//!   (bounded depth, load-shedding, SLO expiry before dispatch,
+//!   max-batch/timeout fill).
 //! * [`router`] — replica selection with least-inflight routing,
 //!   backpressure and replica death handling.
 //! * [`topology`] — names and members of every world in a pipeline
@@ -46,11 +76,15 @@
 //! * [`stage_worker`] — the worker loop: receive activation from any
 //!   in-edge, run the TP inner loop (or the stage directly), route
 //!   downstream; non-head shards run the TP follower loop.
-//! * [`leader`] — the leader loop: batch, inject, collect, measure.
-//! * [`controller`] — elasticity: watches load and failures, decides
-//!   scale-out/in and shard-granularity recovery, and drives online
-//!   instantiation.
+//! * [`leader`] — the always-on runtime: ingress/admission, the
+//!   dispatcher and collector threads, retry, SLO accounting.
+//! * [`controller`] — elasticity mechanisms: online instantiation for
+//!   scale-out, drain-and-retire for scale-in, shard-granularity
+//!   recovery for failures.
+//! * [`autoscaler`] — the elasticity *policy* loop: samples load
+//!   signals and drives the controller under live traffic.
 
+pub mod autoscaler;
 pub mod batcher;
 pub mod controller;
 pub mod leader;
@@ -59,10 +93,13 @@ pub mod router;
 pub mod stage_worker;
 pub mod topology;
 
+pub use autoscaler::{AutoscalePolicy, Autoscaler, AutoscalerHandle, LoadSignals};
 pub use batcher::DynamicBatcher;
 pub use controller::{Controller, ScalingPolicy};
 pub use leader::{Leader, LeaderReport};
-pub use request::{Request, RequestGen, Response};
+pub use request::{
+    DropReason, Outcome, RejectReason, Request, RequestGen, RequestHandle, Response,
+};
 pub use router::ReplicaRouter;
 pub use stage_worker::{run_stage_worker, StageWorkerConfig, WorkerStats};
 pub use topology::{NodeId, Topology, WorldDef, WorldKind};

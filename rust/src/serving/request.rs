@@ -1,25 +1,48 @@
-//! Inference requests, responses and the synthetic workload generator.
+//! Inference requests, responses, the client-facing request handle and
+//! the synthetic workload generator.
+//!
+//! A request submitted to the always-on serving runtime resolves to one
+//! [`Outcome`] exactly once: a [`Response`] when logits came back, a
+//! [`DropReason`] when the runtime gave up on it (SLO deadline expiry in
+//! the admission queue, too many redispatch attempts, shutdown), or a
+//! [`RejectReason`] when admission control refused it up front (queue
+//! full under load-shedding, malformed sequence length, duplicate
+//! in-flight id). Callers hold a [`RequestHandle`] and block on
+//! [`RequestHandle::wait`] (or poll [`RequestHandle::try_outcome`]).
 
 use crate::util::prng::Rng;
 use crate::util::time::since_epoch;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// One inference request: a token sequence for the model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
-    /// Arrival time (seconds since experiment epoch).
+    /// Arrival time (seconds since experiment epoch); re-stamped at
+    /// admission.
     pub arrival: f64,
+    /// SLO deadline (seconds since experiment epoch); `None` = no SLO.
+    /// Stamped at admission from `ServingConfig::slo_ms`. Requests past
+    /// their deadline are dropped in the admission queue *before*
+    /// dispatch — never after a wasted forward pass.
+    pub deadline: Option<f64>,
 }
 
 impl Request {
     pub fn new(id: u64, tokens: Vec<i32>) -> Self {
-        Request { id, tokens, arrival: since_epoch() }
+        Request { id, tokens, arrival: since_epoch(), deadline: None }
+    }
+
+    /// Past its SLO deadline at time `now` (seconds since epoch)?
+    pub fn expired_at(&self, now: f64) -> bool {
+        self.deadline.is_some_and(|d| now > d)
     }
 }
 
 /// The serving result for one request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Response {
     pub id: u64,
     /// Seconds from arrival to completion.
@@ -27,6 +50,137 @@ pub struct Response {
     /// Argmax token at the last position (the "answer"; enough to prove
     /// real logits flowed back).
     pub next_token: i32,
+}
+
+/// Why the runtime dropped an admitted request without a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// SLO deadline expired while queued (dropped before dispatch).
+    Deadline,
+    /// Redispatch attempts exhausted (the pipeline kept losing it).
+    Failed,
+    /// The runtime shut down while the request was still queued.
+    Shutdown,
+    /// The caller stopped waiting (compatibility `serve` past its run
+    /// deadline).
+    Abandoned,
+}
+
+/// Why admission control refused a request up front.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue is at `ServingConfig::admission_depth` and
+    /// the runtime is load-shedding.
+    QueueFull,
+    /// The token sequence does not match the model's sequence length.
+    Malformed { got: usize, want: usize },
+    /// Another in-flight request already uses this id.
+    DuplicateId,
+}
+
+/// What a submitted request resolved to. Exactly one outcome per
+/// request, delivered through its [`RequestHandle`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    Response(Response),
+    Dropped(DropReason),
+    Rejected(RejectReason),
+}
+
+impl Outcome {
+    pub fn response(&self) -> Option<&Response> {
+        match self {
+            Outcome::Response(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn is_response(&self) -> bool {
+        matches!(self, Outcome::Response(_))
+    }
+}
+
+/// Shared once-only outcome slot between the runtime and the handle.
+#[derive(Default)]
+pub(crate) struct OutcomeSlot {
+    state: Mutex<Option<Outcome>>,
+    cv: Condvar,
+}
+
+impl OutcomeSlot {
+    /// First resolution wins; later calls are no-ops (e.g. a retry's
+    /// duplicate response racing a deadline drop).
+    pub(crate) fn resolve(&self, outcome: Outcome) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.is_some() {
+            return false;
+        }
+        *st = Some(outcome);
+        self.cv.notify_all();
+        true
+    }
+}
+
+/// The client's side of a submitted request. See module docs.
+pub struct RequestHandle {
+    id: u64,
+    slot: Arc<OutcomeSlot>,
+}
+
+impl RequestHandle {
+    pub(crate) fn new(id: u64, slot: Arc<OutcomeSlot>) -> Self {
+        RequestHandle { id, slot }
+    }
+
+    /// Handle whose outcome is already known (admission rejection).
+    pub(crate) fn resolved(id: u64, outcome: Outcome) -> Self {
+        let slot = Arc::new(OutcomeSlot::default());
+        slot.resolve(outcome);
+        RequestHandle { id, slot }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The outcome if already resolved (non-blocking).
+    pub fn try_outcome(&self) -> Option<Outcome> {
+        self.slot.state.lock().unwrap().clone()
+    }
+
+    /// Block until the request resolves.
+    pub fn wait(&self) -> Outcome {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(o) = st.as_ref() {
+                return o.clone();
+            }
+            st = self.slot.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Block until the request resolves or `deadline` passes.
+    pub fn wait_deadline(&self, deadline: Instant) -> Option<Outcome> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(o) = st.as_ref() {
+                return Some(o.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, timeout) = self
+                .slot
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = g;
+            if timeout.timed_out() && st.is_none() {
+                return None;
+            }
+        }
+    }
 }
 
 /// Poisson-arrival synthetic workload: fixed-length uniform-random token
@@ -70,6 +224,7 @@ impl RequestGen {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn ids_are_sequential_and_tokens_in_range() {
@@ -104,5 +259,70 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.tokens, y.tokens);
         }
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let mut r = Request::new(1, vec![0; 4]);
+        assert!(!r.expired_at(r.arrival + 1e9), "no deadline, never expires");
+        r.deadline = Some(r.arrival + 0.5);
+        assert!(!r.expired_at(r.arrival + 0.4));
+        assert!(r.expired_at(r.arrival + 0.6));
+    }
+
+    #[test]
+    fn handle_resolves_once() {
+        let slot = Arc::new(OutcomeSlot::default());
+        let h = RequestHandle::new(7, slot.clone());
+        assert!(h.try_outcome().is_none());
+        assert!(slot.resolve(Outcome::Dropped(DropReason::Deadline)));
+        assert!(
+            !slot.resolve(Outcome::Response(Response {
+                id: 7,
+                latency: 0.0,
+                next_token: 0
+            })),
+            "second resolution is a no-op"
+        );
+        assert_eq!(h.wait(), Outcome::Dropped(DropReason::Deadline));
+        assert_eq!(h.id(), 7);
+    }
+
+    #[test]
+    fn handle_wait_crosses_threads() {
+        let slot = Arc::new(OutcomeSlot::default());
+        let h = RequestHandle::new(1, slot.clone());
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            slot.resolve(Outcome::Response(Response {
+                id: 1,
+                latency: 0.02,
+                next_token: 3
+            }));
+        });
+        let got = h.wait();
+        t.join().unwrap();
+        assert!(got.is_response());
+        assert_eq!(got.response().unwrap().next_token, 3);
+    }
+
+    #[test]
+    fn handle_wait_deadline_times_out_then_resolves() {
+        let slot = Arc::new(OutcomeSlot::default());
+        let h = RequestHandle::new(1, slot.clone());
+        assert!(h
+            .wait_deadline(Instant::now() + Duration::from_millis(20))
+            .is_none());
+        slot.resolve(Outcome::Dropped(DropReason::Shutdown));
+        assert_eq!(
+            h.wait_deadline(Instant::now() + Duration::from_millis(20)),
+            Some(Outcome::Dropped(DropReason::Shutdown))
+        );
+    }
+
+    #[test]
+    fn pre_resolved_handle() {
+        let h = RequestHandle::resolved(9, Outcome::Rejected(RejectReason::QueueFull));
+        assert_eq!(h.try_outcome(), Some(Outcome::Rejected(RejectReason::QueueFull)));
     }
 }
