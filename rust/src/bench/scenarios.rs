@@ -10,7 +10,7 @@ use crate::baselines::multiproc::MpEndpoint;
 use crate::config::ServingConfig;
 use crate::launch::InProcCluster;
 use crate::multiworld::{PollStrategy, StatePolicy, WatchdogConfig, WorldManager};
-use crate::mwccl::{Rendezvous, WorldOptions};
+use crate::mwccl::{EdgePattern, FaultKind, FaultPlan, FaultRule, Rendezvous, WorldOptions};
 use crate::serving::autoscaler::AutoscalePolicy;
 use crate::serving::controller::{Action, ScalingPolicy};
 use crate::serving::topology::Topology;
@@ -372,6 +372,109 @@ pub fn autoscale_serve(
     })
 }
 
+/// What a [`chaos_serve`] run did.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub completed: usize,
+    pub retries: u64,
+    /// `Recovered` actions the controller logged.
+    pub recovered: usize,
+    /// `fault.injected.<kind>` counter deltas over the run (kinds with
+    /// at least one injection).
+    pub injected: Vec<(String, u64)>,
+}
+
+/// Chaos-serving scenario: a forward-only single-stage pipeline with
+/// two replicas serving a closed loop of requests while a scripted
+/// chaos driver composes **gray network faults** with the existing
+/// kill/recovery machinery — the timeline is: a one-way partition of
+/// replica 0's forward edge (silent loss, no error anywhere), then a
+/// hard kill of replica 1 mid-traffic (detectable death → exactly one
+/// recovery), then the partition heals. Static faults ride `plan`
+/// (seeded, replayable); the scripted partition is injected through the
+/// runtime [`crate::mwccl::fault_registry`]. A correct run completes
+/// every request: silent losses are re-dispatched on retry timeout,
+/// the kill is re-minted by the controller, and the healed edge serves
+/// again — `report.completed == n_requests` is the zero-loss proof.
+pub fn chaos_serve(
+    plan: FaultPlan,
+    n_requests: usize,
+    opts: WorldOptions,
+    base_port: u16,
+) -> anyhow::Result<ChaosReport> {
+    const BATCH: usize = 4;
+    const SEQ_LEN: usize = 8;
+    const VOCAB: usize = 32;
+    const KINDS: [&str; 6] =
+        ["delay", "drop", "truncate", "stall", "partition", "bandwidth"];
+    let g = crate::metrics::global();
+    let before: Vec<u64> = KINDS
+        .iter()
+        .map(|k| g.counter(&format!("fault.injected.{k}")).get())
+        .collect();
+    let topo = Topology::pipeline(&uniq("chaos"), &[2], base_port);
+    let cfg = ServingConfig {
+        batch_timeout_ms: 2,
+        retry_timeout_ms: 300,
+        retry_max_attempts: 50,
+        ..Default::default()
+    };
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        opts.with_fault_plan(plan),
+        ScalingPolicy { recover: true, ..Default::default() },
+        &cfg,
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )?;
+    let victim = crate::serving::topology::NodeId::worker(0, 1);
+    let cluster_ref = &cluster;
+    let report = std::thread::scope(|s| {
+        s.spawn(move || {
+            // Phase 1 (gray): one-way partition of replica 0's forward
+            // edge — the leader's sends vanish silently.
+            std::thread::sleep(Duration::from_millis(50));
+            let id = cluster_ref.faults().inject(FaultRule::always(
+                EdgePattern::new("*-in-s0r0*", Some(0), Some(1)),
+                FaultKind::Partition,
+            ));
+            // Phase 2 (hard): kill replica 1 mid-traffic — the clean
+            // death path the gray faults must compose with.
+            std::thread::sleep(Duration::from_millis(100));
+            cluster_ref.kill(victim);
+            // Phase 3: the partition heals.
+            std::thread::sleep(Duration::from_millis(200));
+            cluster_ref.faults().heal(id);
+        });
+        let mut gen = RequestGen::new(0xC8A05, SEQ_LEN, VOCAB, None);
+        cluster_ref
+            .leader
+            .serve(gen.take(n_requests), Some(80.0), Duration::from_secs(120))
+    });
+    let recovered = cluster
+        .controller
+        .actions()
+        .iter()
+        .filter(|a| matches!(a, Action::Recovered { .. }))
+        .count();
+    let injected = KINDS
+        .iter()
+        .zip(before)
+        .filter_map(|(k, b)| {
+            let d = g.counter(&format!("fault.injected.{k}")).get() - b;
+            (d > 0).then(|| (k.to_string(), d))
+        })
+        .collect();
+    cluster.shutdown();
+    Ok(ChaosReport {
+        completed: report.completed,
+        retries: report.retries,
+        recovered,
+        injected,
+    })
+}
+
 /// Run a throughput measurement `reps` times and keep the best — the
 /// standard way to strip scheduler noise from a saturation benchmark on
 /// a small shared box.
@@ -451,6 +554,32 @@ mod tests {
             "every submitted request resolves to exactly one outcome"
         );
         assert!(report.completed > 0);
+    }
+
+    #[test]
+    fn chaos_serve_scenario_survives_partition_and_kill() {
+        // The fault registry is process-global: hold its test lock so
+        // the fault.rs unit tests can't reset our dynamic rules mid-run.
+        let _serial = crate::mwccl::transport::fault::TEST_SERIAL
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let base = 52_000 + (std::process::id() % 80) as u16 * 24;
+        let report = chaos_serve(
+            FaultPlan::empty(7),
+            24,
+            WorldOptions::tcp().with_init_timeout(Duration::from_secs(120)),
+            base,
+        )
+        .unwrap();
+        assert_eq!(
+            report.completed, 24,
+            "zero request loss through partition + kill: {report:?}"
+        );
+        assert!(
+            report.injected.iter().any(|(k, n)| k == "partition" && *n > 0),
+            "the partition must demonstrably fire: {report:?}"
+        );
+        assert!(report.recovered >= 1, "the killed replica recovers: {report:?}");
     }
 
     #[test]

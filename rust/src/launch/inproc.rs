@@ -396,6 +396,19 @@ impl InProcCluster {
         &self.opts
     }
 
+    /// The runtime fault handle: inject/heal network faults on the
+    /// cluster's **live** links mid-traffic (stalls, partitions, drops,
+    /// truncations — see [`crate::mwccl::transport::fault`]). Links are
+    /// only fault-controllable when the cluster's [`WorldOptions`]
+    /// carry a [`crate::mwccl::FaultPlan`]
+    /// (`WorldOptions::with_fault_plan`, or the `MW_FAULT_PLAN` /
+    /// `MW_FAULT_SEED` env knobs); the registry itself is process-wide,
+    /// exposed here so chaos drivers reach it through the cluster they
+    /// are attacking.
+    pub fn faults(&self) -> &'static crate::mwccl::FaultRegistry {
+        crate::mwccl::fault_registry()
+    }
+
     /// Stop everything (leader worlds drop with the Leader): autoscaler
     /// first (no scaling decisions against a dying cluster), then the
     /// leader's runtime threads, then the workers.

@@ -305,8 +305,13 @@ impl WorldManager {
             ],
         );
         // Abort pending collective ops so the application unblocks with
-        // an exception it can handle (§3.3).
-        world.abort(reason);
+        // an exception it can handle (§3.3). Announced: this break is a
+        // *decision* (watchdog verdict, timeout, explicit report), so
+        // peers get a GOODBYE and see `Aborted` — never a `RemoteError`
+        // that would convict this still-alive rank as dead. Process
+        // death skips this path entirely (nothing announces), keeping
+        // crash semantics intact.
+        world.abort_announced(reason);
         state.remove(name);
         tombstones
             .lock()

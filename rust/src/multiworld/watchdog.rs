@@ -354,6 +354,127 @@ mod tests {
     }
 
     #[test]
+    fn simultaneous_missed_heartbeats_convict_lowest_rank_once() {
+        // Two ranks go silent in the same tick (e.g. a rack partition):
+        // the world breaks exactly once, and the attribution is
+        // *deterministic* — the lowest silent rank — never a
+        // timing-dependent coin flip between the two. (The controller
+        // re-mints the world either way; what matters is that repeated
+        // runs blame the same rank and that no second alert fires for
+        // the same world.)
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 0, 4, fx.store.clone());
+        // All three peers heartbeat once…
+        for peer in 1..4 {
+            fx.store
+                .set(&format!("mw/w1/hb/{peer}"), clock.now_millis().to_string().as_bytes())
+                .unwrap();
+        }
+        wd.tick();
+        assert!(fx.broken.lock().unwrap().is_empty());
+        // …then ranks 2 and 3 both go silent while rank 1 stays fresh.
+        clock.advance(Duration::from_secs(4 * 3600));
+        fx.store
+            .set("mw/w1/hb/1", clock.now_millis().to_string().as_bytes())
+            .unwrap();
+        wd.tick();
+        wd.tick();
+        let broken = fx.broken.lock().unwrap();
+        assert_eq!(broken.len(), 1, "one alert per world, not one per silent rank");
+        assert_eq!(
+            broken[0].2,
+            Some(2),
+            "deterministic attribution: the lowest silent rank"
+        );
+        assert!(wd.watched_worlds().is_empty(), "broken world unwatched");
+    }
+
+    #[test]
+    fn heartbeat_resuming_at_the_threshold_boundary_is_not_convicted() {
+        // A peer that misses heartbeats for *exactly* the deadline (3 ×
+        // period) and then resumes must never be declared dead: the rule
+        // is strictly-greater-than, so gray slowness right at the
+        // boundary stays alive.
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 0, 2, fx.store.clone());
+        fx.store
+            .set("mw/w1/hb/1", clock.now_millis().to_string().as_bytes())
+            .unwrap();
+        wd.tick();
+        // Silent for exactly deadline_ms = 3 × 3600s — not beyond.
+        clock.advance(Duration::from_secs(3 * 3600));
+        wd.tick();
+        assert!(
+            fx.broken.lock().unwrap().is_empty(),
+            "exactly-at-threshold must not convict"
+        );
+        // The peer resumes; later ticks stay healthy.
+        fx.store
+            .set("mw/w1/hb/1", clock.now_millis().to_string().as_bytes())
+            .unwrap();
+        clock.advance(Duration::from_secs(3600));
+        wd.tick();
+        assert!(fx.broken.lock().unwrap().is_empty());
+        assert_eq!(wd.watched_worlds(), vec!["w1".to_string()]);
+    }
+
+    #[test]
+    fn heartbeat_resuming_just_after_conviction_does_not_unbreak() {
+        // The inverse boundary: the peer resumes one tick *after* the
+        // threshold passed. The conviction stands (the world is already
+        // broken and unwatched) and no duplicate or contradictory alert
+        // fires — a resurrection is the controller's business (fresh
+        // worlds), never the watchdog's.
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 0, 2, fx.store.clone());
+        fx.store
+            .set("mw/w1/hb/1", clock.now_millis().to_string().as_bytes())
+            .unwrap();
+        wd.tick();
+        clock.advance(Duration::from_secs(3 * 3600 + 1));
+        wd.tick();
+        assert_eq!(fx.broken.lock().unwrap().len(), 1, "just past threshold convicts");
+        // Heartbeat returns — too late.
+        fx.store
+            .set("mw/w1/hb/1", clock.now_millis().to_string().as_bytes())
+            .unwrap();
+        wd.tick();
+        wd.tick();
+        assert_eq!(
+            fx.calls.load(Ordering::SeqCst),
+            1,
+            "late resumption must not produce further alerts"
+        );
+        assert!(wd.watched_worlds().is_empty());
+    }
+
+    #[test]
+    fn store_death_attributes_no_culprit() {
+        // `Broken { culprit: None }` path: losing the store (the world
+        // leader's host died — indistinguishable from a partition to
+        // it) must alert with *no* culprit rank, so the layer above
+        // falls back to strike inference instead of convicting an
+        // arbitrary member.
+        let fx = fixture();
+        let clock = Clock::manual();
+        let wd = watchdog_with(&fx, clock.clone());
+        wd.watch("w1", 1, 3, fx.store.clone());
+        drop(fx._server);
+        std::thread::sleep(Duration::from_millis(50));
+        wd.tick();
+        let broken = fx.broken.lock().unwrap();
+        assert_eq!(broken.len(), 1);
+        assert!(broken[0].1.contains("store unreachable"), "{}", broken[0].1);
+        assert_eq!(broken[0].2, None, "store loss must not be attributed to a rank");
+    }
+
+    #[test]
     fn unwatch_stops_monitoring() {
         let fx = fixture();
         let clock = Clock::manual();

@@ -64,10 +64,16 @@
 //! each (step, chunk), see [`make_chunk_tag`]). The choice each op
 //! actually ran is observable via `World::last_algo`.
 //!
-//! Flat `reduce` stays arrival-order: the root posts all peer receives
-//! up front and folds contributions as they land rather than blocking
-//! peer-by-peer, so one slow peer no longer serializes the fold behind
-//! it.
+//! Flat `reduce` receives in arrival order but folds in **rank order**:
+//! contributions land in a rank-indexed slot table as they arrive (one
+//! slow peer never serializes the receives behind it), and the fold
+//! pointer advances through ranks `0, 1, …, N−1` as its next slot
+//! fills. The f32 result is therefore bitwise-deterministic for a given
+//! input set, however adversarially the network reorders arrivals —
+//! non-commutative-in-float ops (Sum/Avg) no longer round differently
+//! run to run. The price is holding up to `N−1` undelivered tensors
+//! when arrivals are exactly reversed; worlds large enough to care
+//! cross the ring threshold anyway.
 //!
 //! Deadlock-freedom: receiver threads always drain transports into
 //! unbounded inboxes, so a send never blocks on the peer's op order —
@@ -189,7 +195,8 @@ impl World {
 
     /// Async reduce: every rank contributes `t`; the root's Work
     /// resolves to the reduction, other ranks' resolve to `None`. Flat =
-    /// star into the root, folding in arrival order; ring = the
+    /// star into the root — received in arrival order, folded in rank
+    /// order (bitwise-deterministic; see [`reduce_impl`]); ring = the
     /// all-reduce's chunked reduce-scatter, then each rank ships its
     /// fully-reduced slice to the root (the root's NIC ingests ~S
     /// instead of (N−1)·S).
@@ -518,15 +525,21 @@ fn broadcast_impl(
     }
 }
 
-/// Root-side fold is arrival-order: all peer receives are outstanding at
-/// once (the receiver threads are always draining into the per-link
-/// inboxes) and whichever contribution lands next is folded next, so a
-/// straggler delays only itself, not every peer queued behind it.
+/// Root-side receives are arrival-order, the fold is **rank-order**:
+/// all peer receives are outstanding at once (the receiver threads are
+/// always draining into the per-link inboxes) and whichever
+/// contribution lands next is parked in its rank's slot, so a straggler
+/// delays only itself — but the accumulator only ever advances through
+/// ranks `0, 1, …, N−1` as the next-in-order slot fills. Floating-point
+/// reduction order is thus a function of the *inputs*, never of network
+/// timing: the flat result is bitwise-reproducible run to run (the
+/// regression in `tests/collectives_scale.rs` pins this under
+/// adversarial, fault-injected arrival orders).
 ///
 /// Idle waiting parks on one pending link's inbox condvar (rotating
 /// through them with a short timeout) rather than busy-polling — an
-/// arrival on the parked link wakes the fold immediately; arrivals
-/// elsewhere are picked up on the next rotation sweep.
+/// arrival on the parked link wakes the sweep immediately; arrivals
+/// elsewhere are picked up on the next rotation.
 fn reduce_impl(
     core: &WorldCore,
     t: Tensor,
@@ -538,47 +551,65 @@ fn reduce_impl(
         core.send_tensor(root, wire, &t)?;
         return Ok(None);
     }
-    let mut acc = t;
-    if acc.dtype() != DType::F32 {
+    if t.dtype() != DType::F32 {
         return Err(CclError::InvalidUsage("reduce requires f32 tensors".into()));
     }
-    let fold = |peer: usize, bytes: Vec<u8>, acc: &mut Tensor| -> CclResult<()> {
+    let n = core.size;
+    let (shape, dtype) = (t.shape().to_vec(), t.dtype());
+    // Rank-indexed slot table; the root's own contribution pre-fills its
+    // slot so the fold order is plain rank order, root included.
+    let mut slots: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+    slots[root] = Some(t);
+    let mut acc: Option<Tensor> = None;
+    let mut next_fold = 0usize;
+    let mut fold_ready = |slots: &mut [Option<Tensor>], acc: &mut Option<Tensor>| {
+        while next_fold < n {
+            let Some(part) = slots[next_fold].take() else { break };
+            match acc {
+                None => *acc = Some(part),
+                Some(a) => match op {
+                    ReduceOp::Sum | ReduceOp::Avg => a.add_assign(&part),
+                    ReduceOp::Max => a.max_assign(&part),
+                },
+            }
+            next_fold += 1;
+        }
+    };
+    fold_ready(&mut slots, &mut acc);
+    let park = |peer: usize, bytes: Vec<u8>| -> CclResult<Tensor> {
         let part = read_tensor(&mut bytes.as_slice()).map_err(|e| {
             CclError::Transport(format!("bad tensor frame from {peer}: {e}"))
         })?;
         core.recycle(peer, bytes);
-        if part.shape() != acc.shape() || part.dtype() != acc.dtype() {
+        if part.shape() != shape.as_slice() || part.dtype() != dtype {
             return Err(CclError::InvalidUsage(format!(
                 "reduce shape mismatch: {:?} vs {:?} from rank {peer}",
-                acc.shape(),
+                shape,
                 part.shape()
             )));
         }
-        match op {
-            ReduceOp::Sum | ReduceOp::Avg => acc.add_assign(&part),
-            ReduceOp::Max => acc.max_assign(&part),
-        }
-        Ok(())
+        Ok(part)
     };
     const PARK: std::time::Duration = std::time::Duration::from_millis(1);
-    let mut pending: Vec<usize> = (0..core.size).filter(|&p| p != root).collect();
+    let mut pending: Vec<usize> = (0..n).filter(|&p| p != root).collect();
     let deadline = core.op_timeout.map(|d| std::time::Instant::now() + d);
     while !pending.is_empty() {
-        // Sweep: fold everything that has already arrived, any order.
+        // Sweep: slot everything that has already arrived, any order.
         let mut progressed = false;
         let mut i = 0;
         while i < pending.len() {
             let peer = pending[i];
             match core.link(peer)?.try_recv(wire)? {
                 Some(bytes) => {
-                    fold(peer, bytes, &mut acc)?;
+                    slots[peer] = Some(park(peer, bytes)?);
                     pending.swap_remove(i);
                     progressed = true;
                 }
                 None => i += 1,
             }
         }
-        if progressed || pending.is_empty() {
+        if progressed {
+            fold_ready(&mut slots, &mut acc);
             continue;
         }
         if let Some(d) = deadline {
@@ -592,15 +623,18 @@ fn reduce_impl(
         let peer = pending[0];
         match core.link(peer)?.recv(wire, Some(PARK)) {
             Ok(bytes) => {
-                fold(peer, bytes, &mut acc)?;
+                slots[peer] = Some(park(peer, bytes)?);
                 pending.remove(0);
+                fold_ready(&mut slots, &mut acc);
             }
             Err(CclError::Timeout(_)) => pending.rotate_left(1),
             Err(e) => return Err(e),
         }
     }
+    fold_ready(&mut slots, &mut acc);
+    let mut acc = acc.expect("every slot folded");
     if op == ReduceOp::Avg {
-        acc.scale(1.0 / core.size as f32);
+        acc.scale(1.0 / n as f32);
     }
     Ok(Some(acc))
 }

@@ -41,5 +41,8 @@ pub mod world;
 pub use crate::config::{AlgoDecision, CollAlgo, CollOp, CollPolicy, RingThreshold};
 pub use error::{CclError, CclResult};
 pub use rendezvous::{Rendezvous, TransportKind, WorldOptions};
+pub use transport::fault::{
+    registry as fault_registry, EdgePattern, FaultKind, FaultPlan, FaultRegistry, FaultRule,
+};
 pub use work::{Work, WorkState};
 pub use world::{ReduceOp, World};

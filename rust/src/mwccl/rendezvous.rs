@@ -9,6 +9,7 @@
 //! associated with one world").
 
 use super::error::{CclError, CclResult};
+use super::transport::fault::{self, FaultPlan};
 use super::transport::ratelimit::RateLimiter;
 use super::transport::shm::{shm_dir, ShmLink, DEFAULT_RING_BYTES};
 use super::transport::tcp::TcpLink;
@@ -73,6 +74,15 @@ pub struct WorldOptions {
     /// negotiated op is root-decided.) Defaults to
     /// [`CollPolicy::from_env`] (`MW_COLL_ALGO`, `MW_RING_MIN_*`).
     pub coll_policy: CollPolicy,
+    /// Deterministic fault-injection plan. When present, every link of
+    /// the world is wrapped in a
+    /// [`fault::FaultLink`](crate::mwccl::transport::fault::FaultLink)
+    /// driven by the plan's seeded per-edge RNG, and the process
+    /// [`fault::registry`](crate::mwccl::transport::fault::registry)
+    /// can flip faults on the live links mid-traffic. `None` (the
+    /// default unless `MW_FAULT_PLAN` / `MW_FAULT_SEED` are set) leaves
+    /// the transport stack untouched.
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl Default for WorldOptions {
@@ -82,6 +92,7 @@ impl Default for WorldOptions {
             init_timeout: Duration::from_secs(30),
             op_timeout: None,
             coll_policy: CollPolicy::from_env(),
+            fault_plan: FaultPlan::from_env().map(Arc::new),
         }
     }
 }
@@ -137,6 +148,16 @@ impl WorldOptions {
     /// PJRT executables before joining worlds).
     pub fn with_init_timeout(mut self, t: Duration) -> Self {
         self.init_timeout = t;
+        self
+    }
+
+    /// Install a deterministic fault-injection plan: every link of
+    /// worlds built with these options is wrapped in a `FaultLink`
+    /// (chaos tests; see [`crate::mwccl::transport::fault`]). Pass
+    /// [`FaultPlan::empty`] to enable runtime-only fault flipping with
+    /// no static rules.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(Arc::new(plan));
         self
     }
 }
@@ -204,6 +225,12 @@ impl World {
             TransportKind::Shm { ring_bytes } => {
                 shm_links(name, rank, size, *ring_bytes, opts.init_timeout)?
             }
+        };
+        // 2b. Chaos: wrap every link in the deterministic fault injector
+        // when a plan is installed (no-op otherwise).
+        let links = match &opts.fault_plan {
+            Some(plan) => fault::wrap_links(plan, name, rank, links),
+            None => links,
         };
 
         // 3. Barrier: the world exists only when everyone is wired.

@@ -1,0 +1,1089 @@
+//! Deterministic network fault injection: the [`FaultLink`] transport
+//! wrapper and its seeded chaos plan.
+//!
+//! The existing chaos tests kill workers *cleanly* — sockets close,
+//! `RemoteError` fires, the watchdog converges. The failures that break
+//! serving systems in practice are **gray**: a link that stalls but
+//! does not die, a frame that vanishes, a sender that crashes
+//! mid-message, a one-way partition. This module makes those failures
+//! first-class and — crucially — *replayable*: every injection decision
+//! is drawn from a [`crate::util::prng::Rng`] seeded by
+//! `MW_FAULT_SEED` and the edge's rank pair, so the same seed + plan
+//! reproduces the identical injection sequence on every run, regardless
+//! of thread scheduling.
+//!
+//! ## Pieces
+//!
+//! * [`FaultPlan`] — a list of per-edge [`FaultRule`]s plus the seed.
+//!   Installed via [`crate::mwccl::WorldOptions::with_fault_plan`] or
+//!   the `MW_FAULT_PLAN` / `MW_FAULT_SEED` environment knobs (grammar
+//!   below). When a plan is present, world init wraps every link in a
+//!   [`FaultLink`]; without one, the transport stack is untouched (zero
+//!   overhead in non-chaos runs).
+//! * [`FaultLink`] — implements [`Link`] around any inner link (tcp and
+//!   shm alike). Faults apply on the *send* path: what leaves a wrapped
+//!   link is delayed, dropped, truncated mid-message, held (stall), or
+//!   bandwidth-capped; receivers observe the consequences through the
+//!   ordinary transport machinery (timeouts, corrupt-frame detection,
+//!   silence).
+//! * [`FaultRegistry`] (one per process, [`registry`]) — the runtime
+//!   handle: inject/heal rules on **live** links mid-traffic, release
+//!   stalls, and read the structured injection event log that tests
+//!   assert against (`fault.injected.<kind>` counters carry the same
+//!   information as metrics).
+//!
+//! ## Plan grammar (`MW_FAULT_PLAN`)
+//!
+//! ```text
+//! plan  := rule (';' rule)*
+//! rule  := 'edge=' world ':' src '->' dst  item*
+//! item  := 'kind=' (delay|drop|truncate|stall|partition|bandwidth)
+//!        | 'ms=' u64 | 'bytes=' usize | 'bps=' f64
+//!        | 'prob=' f64 | 'after=' u64 | 'count=' u64
+//! world := exact name, or glob with leading/trailing '*'
+//! src, dst := rank number or '*'
+//! ```
+//!
+//! Example: `edge=*tp-s1r1*:0->1 kind=stall; edge=*:*->* kind=delay
+//! ms=2 prob=0.1` — stall the head→shard-1 direction of replica (1,1)'s
+//! TP world, and delay 10% of all other sends by 2 ms.
+//!
+//! ## Determinism contract
+//!
+//! Per-edge decisions depend only on `(seed, src, dst, send index)`:
+//! the per-edge RNG is seeded without the world name (so renamed worlds
+//! replay identically) and the static rule pass runs **unconditionally
+//! on every send** — probability draws are consumed in rule order
+//! whether or not a runtime-injected rule overrides the verdict, so
+//! dynamic injection can never desynchronize the static stream. Two
+//! runs with the same seed and the same *static* plan produce identical
+//! per-edge static event sequences — the repeatability the gray-failure
+//! suite asserts by comparing two runs' event logs. Dynamic rules fire
+//! unconditionally (their `prob` is ignored; no RNG involved).
+//!
+//! One deliberate modeling choice: [`Link::farewell`] passes through
+//! even on stalled/partitioned edges. The farewell stands in for the
+//! out-of-band control plane (the per-world store), which stays healthy
+//! in these scenarios — suppressing it would conflate data-plane and
+//! control-plane failure domains.
+
+use super::Link;
+use crate::mwccl::error::{CclError, CclResult};
+use crate::mwccl::wire::{FLAG_LAST, SEG_MAX};
+use crate::util::prng::{splitmix64, Rng};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+/// What to do to a matching send.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Hold the message for `ms` before forwarding it (slow link).
+    Delay { ms: u64 },
+    /// Silently discard the message (lost frame: the receiver sees
+    /// nothing — no error, no data).
+    Drop,
+    /// Put a *truncated* message on the wire: `keep` payload bytes
+    /// under headers claiming the full length, LAST flag set (a sender
+    /// crashing mid-message). `keep == 0` keeps half. The receiver's
+    /// inbox detects the contradiction and raises an edge-attributed
+    /// `RemoteError`.
+    Truncate { keep: usize },
+    /// Hold this and every subsequent message on the edge (FIFO) until
+    /// the stall is released ([`FaultRegistry::release_stalls`] or the
+    /// rule is healed) — a wedged-but-alive link.
+    Stall,
+    /// Silently discard everything while the rule is active (one-way
+    /// partition; configure both directions for a full partition).
+    Partition,
+    /// Sleep `bytes / bps` seconds per message before forwarding
+    /// (bandwidth cap).
+    Bandwidth { bps: f64 },
+}
+
+impl FaultKind {
+    /// Counter/event suffix.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Delay { .. } => "delay",
+            FaultKind::Drop => "drop",
+            FaultKind::Truncate { .. } => "truncate",
+            FaultKind::Stall => "stall",
+            FaultKind::Partition => "partition",
+            FaultKind::Bandwidth { .. } => "bandwidth",
+        }
+    }
+}
+
+/// Which directed edges a rule applies to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EdgePattern {
+    /// World name: exact, or a glob with leading and/or trailing `*`.
+    pub world: String,
+    /// Sender rank (`None` = any).
+    pub src: Option<usize>,
+    /// Receiver rank (`None` = any).
+    pub dst: Option<usize>,
+}
+
+impl EdgePattern {
+    pub fn new(world: &str, src: Option<usize>, dst: Option<usize>) -> EdgePattern {
+        EdgePattern { world: world.to_string(), src, dst }
+    }
+
+    /// Does this pattern cover the directed edge `src -> dst` of `world`?
+    pub fn matches(&self, world: &str, src: usize, dst: usize) -> bool {
+        if self.src.is_some_and(|s| s != src) || self.dst.is_some_and(|d| d != dst) {
+            return false;
+        }
+        let p = self.world.as_str();
+        if p == "*" {
+            return true;
+        }
+        let (starts, ends) = (p.starts_with('*'), p.ends_with('*'));
+        let core = p.trim_start_matches('*').trim_end_matches('*');
+        match (starts, ends) {
+            (true, true) => world.contains(core),
+            (true, false) => world.ends_with(core),
+            (false, true) => world.starts_with(core),
+            (false, false) => world == core,
+        }
+    }
+}
+
+/// One fault rule: edge pattern + kind + applicability knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultRule {
+    pub pattern: EdgePattern,
+    pub kind: FaultKind,
+    /// Probability a matching send is hit (static rules only; dynamic
+    /// rules always fire — see module docs).
+    pub prob: f64,
+    /// Skip the first `after` sends on the edge.
+    pub after: u64,
+    /// At most this many injections (ignored by `Stall`, where the
+    /// held-queue FIFO governs).
+    pub count: u64,
+}
+
+impl FaultRule {
+    /// A rule that always fires on every matching send.
+    pub fn always(pattern: EdgePattern, kind: FaultKind) -> FaultRule {
+        FaultRule { pattern, kind, prob: 1.0, after: 0, count: u64::MAX }
+    }
+
+    pub fn with_prob(mut self, p: f64) -> FaultRule {
+        self.prob = p;
+        self
+    }
+
+    pub fn with_after(mut self, n: u64) -> FaultRule {
+        self.after = n;
+        self
+    }
+
+    pub fn with_count(mut self, n: u64) -> FaultRule {
+        self.count = n;
+        self
+    }
+}
+
+/// The full plan: rules + the seed every per-edge RNG derives from.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(rules: Vec<FaultRule>, seed: u64) -> FaultPlan {
+        FaultPlan { rules, seed }
+    }
+
+    /// No static rules, but link wrapping *enabled* — the hook for
+    /// purely runtime-driven chaos via [`registry`].
+    pub fn empty(seed: u64) -> FaultPlan {
+        FaultPlan { rules: Vec::new(), seed }
+    }
+
+    /// Parse the `MW_FAULT_PLAN` grammar (see module docs).
+    pub fn parse(text: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for rule_s in text.split(';') {
+            let rule_s = rule_s.trim();
+            if rule_s.is_empty() {
+                continue;
+            }
+            rules.push(Self::parse_rule(rule_s)?);
+        }
+        Ok(FaultPlan { rules, seed })
+    }
+
+    fn parse_rule(s: &str) -> Result<FaultRule, String> {
+        let mut pattern: Option<EdgePattern> = None;
+        let mut kind_s: Option<String> = None;
+        let (mut ms, mut bytes, mut bps) = (10u64, 0usize, 1.0e6f64);
+        let (mut prob, mut after, mut count) = (1.0f64, 0u64, u64::MAX);
+        for item in s.split_whitespace() {
+            let (key, value) = item
+                .split_once('=')
+                .ok_or_else(|| format!("bad item '{item}' (want key=value)"))?;
+            match key {
+                "edge" => {
+                    let (world, ranks) = value
+                        .rsplit_once(':')
+                        .ok_or_else(|| format!("bad edge '{value}' (want world:src->dst)"))?;
+                    let (src_s, dst_s) = ranks
+                        .split_once("->")
+                        .ok_or_else(|| format!("bad edge ranks '{ranks}' (want src->dst)"))?;
+                    let rank = |t: &str| -> Result<Option<usize>, String> {
+                        if t == "*" {
+                            Ok(None)
+                        } else {
+                            t.parse().map(Some).map_err(|_| format!("bad rank '{t}'"))
+                        }
+                    };
+                    pattern = Some(EdgePattern::new(world, rank(src_s)?, rank(dst_s)?));
+                }
+                "kind" => kind_s = Some(value.to_string()),
+                "ms" => ms = value.parse().map_err(|_| format!("bad ms '{value}'"))?,
+                "bytes" => bytes = value.parse().map_err(|_| format!("bad bytes '{value}'"))?,
+                "bps" => bps = value.parse().map_err(|_| format!("bad bps '{value}'"))?,
+                "prob" => prob = value.parse().map_err(|_| format!("bad prob '{value}'"))?,
+                "after" => after = value.parse().map_err(|_| format!("bad after '{value}'"))?,
+                "count" => count = value.parse().map_err(|_| format!("bad count '{value}'"))?,
+                other => return Err(format!("unknown key '{other}'")),
+            }
+        }
+        let pattern = pattern.ok_or_else(|| format!("rule '{s}' missing edge="))?;
+        let kind = match kind_s.as_deref() {
+            Some("delay") => FaultKind::Delay { ms },
+            Some("drop") => FaultKind::Drop,
+            Some("truncate") => FaultKind::Truncate { keep: bytes },
+            Some("stall") => FaultKind::Stall,
+            Some("partition") => FaultKind::Partition,
+            Some("bandwidth") => FaultKind::Bandwidth { bps },
+            Some(other) => return Err(format!("unknown kind '{other}'")),
+            None => return Err(format!("rule '{s}' missing kind=")),
+        };
+        Ok(FaultRule { pattern, kind, prob, after, count })
+    }
+
+    /// Plan from `MW_FAULT_PLAN` + `MW_FAULT_SEED`. `None` when neither
+    /// variable is set (no wrapping, zero overhead). A present-but-empty
+    /// or unparsable plan still enables wrapping (runtime injection
+    /// stays available); parse errors are logged, never fatal.
+    pub fn from_env() -> Option<FaultPlan> {
+        let plan_s = std::env::var("MW_FAULT_PLAN").ok();
+        let seed_s = std::env::var("MW_FAULT_SEED").ok();
+        if plan_s.is_none() && seed_s.is_none() {
+            return None;
+        }
+        let seed = seed_s.and_then(|s| s.parse().ok()).unwrap_or(0x5EED);
+        match FaultPlan::parse(plan_s.as_deref().unwrap_or(""), seed) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                crate::metrics::log_event("fault.plan_error", &[("error", e.as_str())]);
+                Some(FaultPlan::empty(seed))
+            }
+        }
+    }
+}
+
+/// One recorded injection. `op` is the edge-local send index the fault
+/// hit — the unit of the determinism contract.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub world: String,
+    pub src: usize,
+    pub dst: usize,
+    pub op: u64,
+    pub kind: &'static str,
+}
+
+impl FaultEvent {
+    /// World-agnostic identity, for comparing runs whose worlds were
+    /// named differently (the RNG is world-agnostic too).
+    pub fn canon(&self) -> (usize, usize, u64, &'static str) {
+        (self.src, self.dst, self.op, self.kind)
+    }
+}
+
+impl std::fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "world={} src={} dst={} op={} kind={}",
+            self.world, self.src, self.dst, self.op, self.kind
+        )
+    }
+}
+
+/// A message held by a stall, in FIFO order.
+enum Held {
+    Data { tag: u64, bytes: Vec<u8> },
+    Prologue { tag: u64, bytes: Vec<u8> },
+}
+
+/// Per-edge deterministic decision state.
+struct EdgeRand {
+    /// Sends issued on this edge so far (the `op` index).
+    sends: u64,
+    rng: Rng,
+    /// Injections per *static* rule index (enforces `count`).
+    injected: Vec<u64>,
+}
+
+/// The shared core of one wrapped link (the registry holds a `Weak` so
+/// it can flush stalls on live links).
+struct FaultLinkShared {
+    world: String,
+    src: usize,
+    dst: usize,
+    plan: Arc<FaultPlan>,
+    inner: Box<dyn Link>,
+    rand: Mutex<EdgeRand>,
+    held: Mutex<Vec<Held>>,
+    aborted: AtomicBool,
+}
+
+/// What `decide` told the send path to do.
+enum Verdict {
+    Forward,
+    Suppress(&'static str),
+    Delay(u64),
+    Throttle(f64),
+    Truncate(usize),
+    Hold,
+}
+
+impl FaultLinkShared {
+    /// Resolve the fault verdict for send `n` of `len` bytes.
+    ///
+    /// The **static pass runs first and unconditionally**: every
+    /// matching static rule's probability draw is consumed on every
+    /// send, whether or not a dynamic rule later overrides the verdict
+    /// — so the static RNG stream is a pure function of
+    /// `(seed, src, dst, n)` and runtime injection can never
+    /// desynchronize it (the determinism contract). Dynamic rules then
+    /// override: a stall wedges the edge outright; any other kind
+    /// replaces the static verdict for this send.
+    fn decide(&self, len: usize) -> (u64, Verdict) {
+        let reg = registry();
+        let (dynamic, stalls_released) = reg.snapshot();
+        let mut rand = self.rand.lock().unwrap();
+        if rand.injected.len() < self.plan.rules.len() {
+            rand.injected.resize(self.plan.rules.len(), 0);
+        }
+        let n = rand.sends;
+        rand.sends += 1;
+
+        let matches =
+            |r: &FaultRule| r.pattern.matches(&self.world, self.src, self.dst) && n >= r.after;
+
+        let verdict_of = |kind: FaultKind| match kind {
+            FaultKind::Delay { ms } => Verdict::Delay(ms),
+            FaultKind::Drop => Verdict::Suppress("drop"),
+            FaultKind::Partition => Verdict::Suppress("partition"),
+            FaultKind::Bandwidth { bps } => Verdict::Throttle(bps),
+            FaultKind::Truncate { keep } => {
+                let keep = if keep == 0 { len / 2 } else { keep };
+                Verdict::Truncate(keep.min(len.saturating_sub(1)))
+            }
+            FaultKind::Stall => Verdict::Hold,
+        };
+
+        // 1. Static pass — every matching rule is evaluated (and every
+        //    probability draw consumed) on every send; the first
+        //    non-stall rule that fires supplies the static verdict and
+        //    its `count` bookkeeping, identical whether or not dynamic
+        //    rules exist. Stall is tracked separately because it wins
+        //    categorically below (matching `stall_active`, the flush
+        //    predicate — FIFO would invert otherwise).
+        let mut static_stall = false;
+        let mut static_verdict: Option<Verdict> = None;
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            if !matches(rule) {
+                continue;
+            }
+            if rule.kind == FaultKind::Stall {
+                static_stall |= !stalls_released;
+                continue;
+            }
+            if rand.injected[i] >= rule.count {
+                continue;
+            }
+            if rule.prob < 1.0 && !rand.rng.chance(rule.prob) {
+                continue;
+            }
+            if static_verdict.is_none() {
+                rand.injected[i] += 1;
+                static_verdict = Some(verdict_of(rule.kind));
+            }
+        }
+
+        // 2. A stall (static or dynamic) wins over everything: a wedged
+        //    link is wedged.
+        let dynamic_stall = !stalls_released
+            && dynamic
+                .iter()
+                .any(|(_, r)| r.kind == FaultKind::Stall && matches(r));
+        if static_stall || dynamic_stall {
+            return (n, Verdict::Hold);
+        }
+        // 3. Dynamic (runtime-injected) rules override the static
+        //    verdict for this send.
+        for (id, rule) in &dynamic {
+            if rule.kind != FaultKind::Stall && matches(rule) && reg.try_consume(*id) {
+                return (n, verdict_of(rule.kind));
+            }
+        }
+        (n, static_verdict.unwrap_or(Verdict::Forward))
+    }
+
+    /// Is a stall currently pinning this edge's held queue?
+    fn stall_active(&self) -> bool {
+        let reg = registry();
+        let (dynamic, stalls_released) = reg.snapshot();
+        if stalls_released {
+            return false;
+        }
+        let sends = self.rand.lock().unwrap().sends;
+        dynamic
+            .iter()
+            .map(|(_, r)| r)
+            .chain(self.plan.rules.iter())
+            .any(|r| {
+                r.kind == FaultKind::Stall
+                    && r.pattern.matches(&self.world, self.src, self.dst)
+                    && sends >= r.after
+            })
+    }
+
+    /// Deliver held messages in order once no stall pins the edge.
+    ///
+    /// The queue lock is held across drain *and* forward: a concurrent
+    /// sender's backlog check serializes on the same lock, so fresh
+    /// traffic can never slip onto the wire between a drained held
+    /// message and its actual send (same-tag FIFO would hand the wrong
+    /// payload to the wrong receive otherwise). The held forwards may
+    /// block on transport backpressure while holding the lock — that is
+    /// the point: everything behind them must wait.
+    fn flush_if_unstalled(&self) {
+        if self.aborted.load(Ordering::Acquire) || self.stall_active() {
+            return;
+        }
+        let mut held = self.held.lock().unwrap();
+        for msg in held.drain(..) {
+            let _ = match msg {
+                Held::Data { tag, bytes } => self.inner.send(tag, &[&bytes]),
+                Held::Prologue { tag, bytes } => self.inner.send_prologue(tag, &bytes),
+            };
+        }
+    }
+
+    fn record(&self, op: u64, kind: &'static str) {
+        registry().record(FaultEvent {
+            world: self.world.clone(),
+            src: self.src,
+            dst: self.dst,
+            op,
+            kind,
+        });
+    }
+
+    /// Shared verdict dispatch for both send paths ([`Link::send`] and
+    /// [`Link::send_prologue`] differ only in their forward / hold /
+    /// truncate leaves). Keeping this in one place also keeps the
+    /// stall-FIFO and race-closing rules identical for data and control
+    /// traffic.
+    fn dispatch(
+        &self,
+        len: usize,
+        forward: impl FnOnce() -> CclResult<()>,
+        hold: impl FnOnce() -> Held,
+        truncate: impl FnOnce(usize) -> CclResult<()>,
+    ) -> CclResult<()> {
+        if self.aborted.load(Ordering::Acquire) {
+            return Err(CclError::Aborted("fault link aborted".into()));
+        }
+        let (n, verdict) = self.decide(len);
+        // FIFO: traffic behind a stall queues behind it (head-of-line),
+        // and a cleared stall flushes before fresh traffic moves.
+        let backlog = !self.held.lock().unwrap().is_empty();
+        if backlog && !matches!(verdict, Verdict::Hold) {
+            self.flush_if_unstalled();
+        }
+        match verdict {
+            Verdict::Forward => forward(),
+            Verdict::Suppress(kind) => {
+                self.record(n, kind);
+                Ok(())
+            }
+            Verdict::Delay(ms) => {
+                self.record(n, "delay");
+                std::thread::sleep(Duration::from_millis(ms));
+                forward()
+            }
+            Verdict::Throttle(bps) => {
+                self.record(n, "bandwidth");
+                std::thread::sleep(Duration::from_secs_f64(len as f64 / bps.max(1.0)));
+                forward()
+            }
+            Verdict::Truncate(keep) => {
+                self.record(n, "truncate");
+                truncate(keep)
+            }
+            Verdict::Hold => {
+                self.record(n, "stall");
+                self.held.lock().unwrap().push(hold());
+                // Close the decide→push window against a concurrent
+                // heal()/release_stalls(): their flush may have drained
+                // an *empty* queue just before this push, and nothing
+                // else would ever deliver the message. Re-checking here
+                // guarantees a healed edge cannot strand traffic
+                // (flush_if_unstalled no-ops while the stall holds).
+                self.flush_if_unstalled();
+                Ok(())
+            }
+        }
+    }
+
+    /// Put a truncated rendition of `parts` on the wire: `keep` payload
+    /// bytes under headers claiming the full length, final frame
+    /// LAST-flagged — indistinguishable on the wire from a sender that
+    /// died mid-message. Falls back to a silent drop on transports
+    /// without raw-frame support.
+    fn send_truncated(&self, tag: u64, parts: &[&[u8]], keep: usize) -> CclResult<()> {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut prefix = Vec::with_capacity(keep);
+        for part in parts {
+            if prefix.len() >= keep {
+                break;
+            }
+            let take = (keep - prefix.len()).min(part.len());
+            prefix.extend_from_slice(&part[..take]);
+        }
+        let mut off = 0usize;
+        while off < prefix.len() || (prefix.is_empty() && off == 0) {
+            let hi = (off + SEG_MAX).min(prefix.len());
+            let last = hi == prefix.len();
+            let flags = if last { FLAG_LAST } else { 0 };
+            let sent =
+                self.inner
+                    .send_raw_frame(tag, &prefix[off..hi], total as u32, flags);
+            match sent {
+                Ok(()) => {}
+                // Transport without raw frames: degrade to a drop (the
+                // message is still lost; only the detectability differs).
+                Err(CclError::InvalidUsage(_)) => return Ok(()),
+                Err(e) => return Err(e),
+            }
+            if last {
+                break;
+            }
+            off = hi;
+        }
+        Ok(())
+    }
+}
+
+/// See module docs.
+pub struct FaultLink {
+    shared: Arc<FaultLinkShared>,
+}
+
+impl FaultLink {
+    /// Wrap `inner` as the `src -> dst` direction of `world`'s link and
+    /// register it with the process [`registry`] for runtime control.
+    pub fn wrap(
+        plan: Arc<FaultPlan>,
+        world: &str,
+        src: usize,
+        dst: usize,
+        inner: Box<dyn Link>,
+    ) -> FaultLink {
+        // World-agnostic seeding: decisions replay across runs whose
+        // worlds are named differently (see module docs).
+        let mut mix = plan
+            .seed
+            .wrapping_add((src as u64) << 32)
+            .wrapping_add(dst as u64);
+        let rng = Rng::new(splitmix64(&mut mix));
+        let shared = Arc::new(FaultLinkShared {
+            world: world.to_string(),
+            src,
+            dst,
+            plan,
+            inner,
+            rand: Mutex::new(EdgeRand { sends: 0, rng, injected: Vec::new() }),
+            held: Mutex::new(Vec::new()),
+            aborted: AtomicBool::new(false),
+        });
+        registry().register_link(Arc::downgrade(&shared));
+        FaultLink { shared }
+    }
+}
+
+/// Wrap every link of a freshly initialized world (rendezvous calls
+/// this when the options carry a plan). `my_rank` is the local rank —
+/// each wrapped link covers the outgoing `my_rank -> peer` direction.
+pub fn wrap_links(
+    plan: &Arc<FaultPlan>,
+    world: &str,
+    my_rank: usize,
+    links: HashMap<usize, Box<dyn Link>>,
+) -> HashMap<usize, Box<dyn Link>> {
+    links
+        .into_iter()
+        .map(|(peer, inner)| {
+            let wrapped = FaultLink::wrap(plan.clone(), world, my_rank, peer, inner);
+            (peer, Box::new(wrapped) as Box<dyn Link>)
+        })
+        .collect()
+}
+
+impl Link for FaultLink {
+    fn send(&self, tag: u64, parts: &[&[u8]]) -> CclResult<()> {
+        let sh = &self.shared;
+        let len: usize = parts.iter().map(|p| p.len()).sum();
+        sh.dispatch(
+            len,
+            || sh.inner.send(tag, parts),
+            || {
+                let mut bytes = Vec::with_capacity(len);
+                for p in parts {
+                    bytes.extend_from_slice(p);
+                }
+                Held::Data { tag, bytes }
+            },
+            |keep| sh.send_truncated(tag, parts, keep),
+        )
+    }
+
+    fn send_prologue(&self, tag: u64, payload: &[u8]) -> CclResult<()> {
+        let sh = &self.shared;
+        sh.dispatch(
+            payload.len(),
+            || sh.inner.send_prologue(tag, payload),
+            || Held::Prologue { tag, bytes: payload.to_vec() },
+            // A prologue cannot be meaningfully truncated (single
+            // frame); losing it is the equivalent failure.
+            |_keep| Ok(()),
+        )
+    }
+
+    fn recv_prologue(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        self.shared.inner.recv_prologue(tag, timeout)
+    }
+
+    fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        self.shared.inner.recv(tag, timeout)
+    }
+
+    fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>> {
+        self.shared.inner.try_recv(tag)
+    }
+
+    fn recycle(&self, buf: Vec<u8>) {
+        self.shared.inner.recycle(buf);
+    }
+
+    fn send_raw_frame(&self, tag: u64, payload: &[u8], msg_len: u32, flags: u8) -> CclResult<()> {
+        self.shared.inner.send_raw_frame(tag, payload, msg_len, flags)
+    }
+
+    fn farewell(&self, reason: &str) {
+        // Control-plane signal: passes through even on stalled or
+        // partitioned edges (see module docs).
+        self.shared.inner.farewell(reason);
+    }
+
+    fn abort(&self, reason: &str) {
+        if self.shared.aborted.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.shared.held.lock().unwrap().clear();
+        self.shared.inner.abort(reason);
+    }
+
+    fn kind(&self) -> &'static str {
+        self.shared.inner.kind()
+    }
+
+    fn peer(&self) -> usize {
+        self.shared.inner.peer()
+    }
+}
+
+/// Upper bound on retained events (counters keep exact totals past it).
+const MAX_EVENTS: usize = 1 << 16;
+
+struct RegistryInner {
+    /// Runtime-injected rules: (id, rule, remaining budget).
+    dynamic: Vec<(u64, FaultRule, u64)>,
+    next_id: u64,
+    /// `release_stalls` disables every Stall rule process-wide.
+    stalls_released: bool,
+    links: Vec<Weak<FaultLinkShared>>,
+    events: Vec<FaultEvent>,
+}
+
+/// The process-wide runtime fault handle — see module docs and
+/// [`registry`]. All operations act on every *wrapped* live link
+/// (worlds initialized with a [`FaultPlan`] in their options).
+pub struct FaultRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+/// Serialization lock for tests that mutate the process-global registry
+/// (reset, dynamic rules, stall release): cargo runs tests of one
+/// binary in parallel, and two registry-mutating tests interleaving
+/// would clear each other's rules mid-run. Production code never takes
+/// this.
+#[doc(hidden)]
+pub static TEST_SERIAL: Mutex<()> = Mutex::new(());
+
+/// The process-wide registry.
+pub fn registry() -> &'static FaultRegistry {
+    static REGISTRY: Lazy<FaultRegistry> = Lazy::new(|| FaultRegistry {
+        inner: Mutex::new(RegistryInner {
+            dynamic: Vec::new(),
+            next_id: 1,
+            stalls_released: false,
+            links: Vec::new(),
+            events: Vec::new(),
+        }),
+    });
+    &REGISTRY
+}
+
+impl FaultRegistry {
+    /// Install a rule on live links mid-traffic. Dynamic rules fire
+    /// unconditionally on matching sends (prob ignored — determinism of
+    /// the static stream, see module docs). Returns an id for
+    /// [`FaultRegistry::heal`].
+    pub fn inject(&self, rule: FaultRule) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let budget = rule.count;
+        crate::metrics::log_event(
+            "fault.rule_injected",
+            &[
+                ("edge", rule.pattern.world.as_str()),
+                ("kind", rule.kind.name()),
+            ],
+        );
+        inner.dynamic.push((id, rule, budget));
+        drop(inner);
+        self.flush_links();
+        id
+    }
+
+    /// Remove a dynamic rule (the fault heals); stalled traffic it was
+    /// pinning flushes in order.
+    pub fn heal(&self, id: u64) {
+        self.inner.lock().unwrap().dynamic.retain(|(i, _, _)| *i != id);
+        self.flush_links();
+    }
+
+    /// Remove every dynamic rule.
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().dynamic.clear();
+        self.flush_links();
+    }
+
+    /// Release every stall (static and dynamic): held traffic flushes
+    /// in order and Stall rules stop matching until [`Self::reset`].
+    pub fn release_stalls(&self) {
+        self.inner.lock().unwrap().stalls_released = true;
+        self.flush_links();
+    }
+
+    /// Test-run hygiene: drop dynamic rules, the stall release latch and
+    /// the event log (live links and their static plans are untouched).
+    pub fn reset(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.dynamic.clear();
+        inner.stalls_released = false;
+        inner.events.clear();
+    }
+
+    /// Events recorded so far (clone; see [`FaultEvent`]).
+    pub fn events(&self) -> Vec<FaultEvent> {
+        self.inner.lock().unwrap().events.clone()
+    }
+
+    /// Drain the event log.
+    pub fn take_events(&self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.inner.lock().unwrap().events)
+    }
+
+    /// One event per line — what the chaos CI job uploads on failure.
+    pub fn render_events(&self) -> String {
+        let mut out = String::new();
+        for e in self.inner.lock().unwrap().events.iter() {
+            out.push_str(&format!("{e}\n"));
+        }
+        out
+    }
+
+    fn snapshot(&self) -> (Vec<(u64, FaultRule)>, bool) {
+        let inner = self.inner.lock().unwrap();
+        let rules = inner
+            .dynamic
+            .iter()
+            .filter(|(_, _, remaining)| *remaining > 0)
+            .map(|(id, r, _)| (*id, r.clone()))
+            .collect();
+        (rules, inner.stalls_released)
+    }
+
+    /// Spend one unit of a dynamic rule's budget.
+    fn try_consume(&self, id: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.dynamic.iter_mut().find(|(i, _, _)| *i == id) {
+            Some((_, _, remaining)) if *remaining == u64::MAX => true,
+            Some((_, _, remaining)) if *remaining > 0 => {
+                *remaining -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn register_link(&self, link: Weak<FaultLinkShared>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.links.retain(|w| w.strong_count() > 0);
+        inner.links.push(link);
+    }
+
+    fn flush_links(&self) {
+        let links: Vec<Arc<FaultLinkShared>> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.links.retain(|w| w.strong_count() > 0);
+            inner.links.iter().filter_map(|w| w.upgrade()).collect()
+        };
+        for l in links {
+            l.flush_if_unstalled();
+        }
+    }
+
+    fn record(&self, event: FaultEvent) {
+        crate::metrics::global()
+            .counter(&format!("fault.injected.{}", event.kind))
+            .inc();
+        crate::metrics::log_event(
+            "fault.injected",
+            &[
+                ("world", event.world.as_str()),
+                ("src", event.src.to_string().as_str()),
+                ("dst", event.dst.to_string().as_str()),
+                ("op", event.op.to_string().as_str()),
+                ("kind", event.kind),
+            ],
+        );
+        let mut inner = self.inner.lock().unwrap();
+        if inner.events.len() < MAX_EVENTS {
+            inner.events.push(event);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mwccl::transport::tcp::TcpLink;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Registry state is process-global: serialize the tests that use it.
+    use super::TEST_SERIAL as SERIAL;
+
+    fn tcp_pair() -> (TcpLink, TcpLink) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || listener.accept().unwrap().0);
+        let a_stream = TcpStream::connect(addr).unwrap();
+        let b_stream = t.join().unwrap();
+        (
+            TcpLink::new(1, a_stream, None).unwrap(),
+            TcpLink::new(0, b_stream, None).unwrap(),
+        )
+    }
+
+    fn wrapped(world: &str, plan: FaultPlan) -> (FaultLink, TcpLink) {
+        let (a, b) = tcp_pair();
+        let fl = FaultLink::wrap(Arc::new(plan), world, 0, 1, Box::new(a));
+        (fl, b)
+    }
+
+    #[test]
+    fn plan_grammar_parses() {
+        let p = FaultPlan::parse(
+            "edge=*tp-s1r1*:0->1 kind=stall; \
+             edge=w:*->* kind=delay ms=7 prob=0.25 after=2 count=9; \
+             edge=*:3->* kind=truncate bytes=16; \
+             edge=x*:0->2 kind=bandwidth bps=1000",
+            42,
+        )
+        .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.rules.len(), 4);
+        assert_eq!(p.rules[0].kind, FaultKind::Stall);
+        assert_eq!(p.rules[0].pattern.src, Some(0));
+        assert_eq!(p.rules[1].kind, FaultKind::Delay { ms: 7 });
+        assert_eq!(p.rules[1].prob, 0.25);
+        assert_eq!(p.rules[1].after, 2);
+        assert_eq!(p.rules[1].count, 9);
+        assert_eq!(p.rules[2].kind, FaultKind::Truncate { keep: 16 });
+        assert_eq!(p.rules[2].pattern.dst, None);
+        assert_eq!(p.rules[3].kind, FaultKind::Bandwidth { bps: 1000.0 });
+        assert!(FaultPlan::parse("edge=w:0->1", 0).is_err(), "missing kind");
+        assert!(FaultPlan::parse("kind=drop", 0).is_err(), "missing edge");
+        assert!(FaultPlan::parse("edge=w:0->1 kind=meteor", 0).is_err());
+        assert_eq!(FaultPlan::parse("", 9).unwrap().rules.len(), 0);
+    }
+
+    #[test]
+    fn edge_pattern_globs() {
+        let contains = EdgePattern::new("*tp-s1r1*", None, None);
+        assert!(contains.matches("px-tp-s1r1#g2", 0, 1));
+        assert!(!contains.matches("px-tp-s1r0", 0, 1));
+        let prefix = EdgePattern::new("in-*", None, None);
+        assert!(prefix.matches("in-s0r0", 4, 2));
+        assert!(!prefix.matches("x-in-s0r0", 4, 2));
+        let suffix = EdgePattern::new("*-out", None, None);
+        assert!(suffix.matches("w-out", 0, 0));
+        let exact = EdgePattern::new("w1", Some(0), Some(1));
+        assert!(exact.matches("w1", 0, 1));
+        assert!(!exact.matches("w1", 1, 0), "direction respected");
+        assert!(EdgePattern::new("*", None, None).matches("anything", 9, 9));
+    }
+
+    #[test]
+    fn drop_suppresses_and_counts() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        let before = crate::metrics::global().counter("fault.injected.drop").get();
+        let plan = FaultPlan::new(
+            vec![FaultRule::always(EdgePattern::new("dropw", None, None), FaultKind::Drop)
+                .with_count(1)],
+            7,
+        );
+        let (a, b) = wrapped("dropw", plan);
+        a.send(1, &[b"lost"]).unwrap(); // dropped
+        a.send(2, &[b"kept"]).unwrap(); // count exhausted
+        assert_eq!(
+            b.recv(2, Some(Duration::from_secs(2))).unwrap(),
+            b"kept",
+            "later sends pass once the budget is spent"
+        );
+        assert!(matches!(
+            b.recv(1, Some(Duration::from_millis(80))),
+            Err(CclError::Timeout(_))
+        ));
+        assert_eq!(
+            crate::metrics::global().counter("fault.injected.drop").get(),
+            before + 1
+        );
+        let events = registry().events();
+        assert!(events.iter().any(|e| e.world == "dropw" && e.kind == "drop" && e.op == 0));
+    }
+
+    #[test]
+    fn truncate_is_detected_by_the_receiver() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        let plan = FaultPlan::new(
+            vec![FaultRule::always(
+                EdgePattern::new("truncw", None, None),
+                FaultKind::Truncate { keep: 8 },
+            )
+            .with_count(1)],
+            7,
+        );
+        let (a, b) = wrapped("truncw", plan);
+        a.send(5, &[&[3u8; 64]]).unwrap();
+        let err = b.recv(5, Some(Duration::from_secs(2))).unwrap_err();
+        assert!(
+            matches!(err, CclError::RemoteError { peer: 0, .. }),
+            "truncation must surface as an edge-attributed RemoteError, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn stall_holds_until_released_then_flushes_in_order() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        let (a, b) = wrapped("stallw", FaultPlan::empty(7));
+        let id = registry().inject(FaultRule::always(
+            EdgePattern::new("stallw", Some(0), Some(1)),
+            FaultKind::Stall,
+        ));
+        a.send(1, &[b"first"]).unwrap();
+        a.send(1, &[b"second"]).unwrap();
+        assert!(matches!(
+            b.recv(1, Some(Duration::from_millis(100))),
+            Err(CclError::Timeout(_))
+        ), "stalled traffic must not arrive");
+        registry().heal(id);
+        assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"first");
+        assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"second");
+        let stalls: Vec<_> =
+            registry().events().into_iter().filter(|e| e.kind == "stall").collect();
+        assert_eq!(stalls.len(), 2, "one stall event per held message");
+    }
+
+    #[test]
+    fn same_seed_same_decisions_regardless_of_world_name() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        let plan_for = |_run: &str| {
+            FaultPlan::new(
+                vec![
+                    FaultRule::always(EdgePattern::new("*", None, None), FaultKind::Drop)
+                        .with_prob(0.3),
+                ],
+                1234,
+            )
+        };
+        let run = |world: &str| -> Vec<(usize, usize, u64, &'static str)> {
+            registry().take_events();
+            let (a, _b) = wrapped(world, plan_for(world));
+            for k in 0..40u64 {
+                a.send(k, &[b"x"]).unwrap();
+            }
+            registry()
+                .take_events()
+                .into_iter()
+                .map(|e| e.canon())
+                .collect()
+        };
+        let first = run("det-a");
+        let second = run("det-b");
+        assert!(!first.is_empty(), "prob 0.3 over 40 sends must fire");
+        assert_eq!(first, second, "same seed + plan ⇒ identical injection sequence");
+    }
+
+    #[test]
+    fn delay_slows_but_delivers() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        let plan = FaultPlan::new(
+            vec![FaultRule::always(
+                EdgePattern::new("delayw", None, None),
+                FaultKind::Delay { ms: 40 },
+            )
+            .with_count(1)],
+            7,
+        );
+        let (a, b) = wrapped("delayw", plan);
+        let t0 = std::time::Instant::now();
+        a.send(1, &[b"late"]).unwrap();
+        assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"late");
+        assert!(t0.elapsed() >= Duration::from_millis(35), "delay applied");
+    }
+}

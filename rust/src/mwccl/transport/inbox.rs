@@ -66,12 +66,21 @@ impl BufferPool {
     }
 }
 
+/// A message mid-reassembly: the accumulating buffer plus the total
+/// length every frame of the message claimed in its header, so the
+/// `LAST` frame can be cross-checked against the bytes that actually
+/// arrived (truncation / corruption detection).
+struct Partial {
+    buf: Vec<u8>,
+    expect: usize,
+}
+
 #[derive(Default)]
 struct State {
     /// Complete messages, FIFO per tag.
     ready: HashMap<u64, VecDeque<Vec<u8>>>,
     /// Partially reassembled message per tag.
-    partial: HashMap<u64, Vec<u8>>,
+    partial: HashMap<u64, Partial>,
     /// Complete *prologue* (control) messages, FIFO per tag — a lane
     /// separate from `ready` so a negotiation byte and the data message
     /// that follows can share one wire tag without racing each other.
@@ -86,11 +95,22 @@ pub struct Inbox {
     state: Mutex<State>,
     cv: Condvar,
     pool: BufferPool,
+    /// Peer rank this inbox receives from, when known — corrupt-frame
+    /// errors are then attributed as `RemoteError {{ peer }}` (the edge
+    /// is named), not an anonymous transport error.
+    peer: Option<usize>,
 }
 
 impl Inbox {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An inbox whose corrupt-frame errors are attributed to `peer`
+    /// (what the real links use; [`Inbox::new`] keeps the anonymous
+    /// form for tests).
+    pub fn for_peer(peer: usize) -> Self {
+        Inbox { peer: Some(peer), ..Default::default() }
     }
 
     /// Largest up-front reservation honored from a frame's `msg_len`
@@ -103,29 +123,86 @@ impl Inbox {
     /// set. `msg_len` is the total payload length of the whole message
     /// (from the frame header) — used to preallocate the reassembly
     /// buffer exactly once, on the first frame (clamped to
-    /// [`Self::MAX_SIZE_HINT`]). Frames flagged `PROLOGUE` are
-    /// single-frame control messages dispatched to their own lane (see
+    /// [`Self::MAX_SIZE_HINT`]), and cross-checked on the `LAST` frame:
+    /// a message whose bytes don't add up to what every frame claimed
+    /// (a sender that died mid-message, a chaos-injected truncation) is
+    /// *never* delivered short — the partial buffer is recycled and the
+    /// inbox fails with an edge-attributed `RemoteError` (see
+    /// [`Inbox::for_peer`]). Frames flagged `PROLOGUE` are single-frame
+    /// control messages dispatched to their own lane (see
     /// [`Inbox::recv_prologue`]).
     pub fn push_frame(&self, tag: u64, payload: &[u8], msg_len: usize, flags: u8) {
-        let mut st = self.state.lock().unwrap();
-        if flags & FLAG_PROLOGUE != 0 {
-            // Prologues are complete by construction (senders emit them
-            // as one LAST-flagged frame); no reassembly state needed.
-            st.prologue.entry(tag).or_default().push_back(payload.to_vec());
-            self.cv.notify_all();
-            return;
+        let corrupt_detail: Option<String> = {
+            let mut st = self.state.lock().unwrap();
+            if flags & FLAG_PROLOGUE != 0 {
+                // Prologues are complete by construction (senders emit
+                // them as one LAST-flagged frame); no reassembly state.
+                st.prologue.entry(tag).or_default().push_back(payload.to_vec());
+                self.cv.notify_all();
+                return;
+            }
+            let hint = msg_len.min(Self::MAX_SIZE_HINT);
+            let entry = st
+                .partial
+                .entry(tag)
+                .or_insert_with(|| Partial { buf: self.pool.take(hint), expect: msg_len });
+            if entry.expect != msg_len {
+                Some(format!(
+                    "message length changed mid-reassembly ({} then {msg_len})",
+                    entry.expect
+                ))
+            } else {
+                entry.buf.extend_from_slice(payload);
+                let (got, expect) = (entry.buf.len(), entry.expect);
+                if got > expect {
+                    Some(format!("message overflows its header: {got} > {expect} bytes"))
+                } else if flags & FLAG_LAST == 0 {
+                    None
+                } else if got != expect {
+                    Some(format!("truncated message: {got} of {expect} bytes"))
+                } else {
+                    let msg = st.partial.remove(&tag).map(|p| p.buf).unwrap_or_default();
+                    st.ready.entry(tag).or_default().push_back(msg);
+                    self.cv.notify_all();
+                    None
+                }
+            }
+        };
+        if let Some(detail) = corrupt_detail {
+            self.corrupt(tag, &detail);
         }
-        let hint = msg_len.min(Self::MAX_SIZE_HINT);
-        let buf = st
-            .partial
-            .entry(tag)
-            .or_insert_with(|| self.pool.take(hint));
-        buf.extend_from_slice(payload);
-        if flags & FLAG_LAST != 0 {
-            let msg = st.partial.remove(&tag).unwrap_or_default();
-            st.ready.entry(tag).or_default().push_back(msg);
-            self.cv.notify_all();
+    }
+
+    /// A frame contradicted its message's own headers (truncation,
+    /// overflow, length flip-flop): recycle the partial buffer, count
+    /// and log the corruption, and fail the inbox with the edge
+    /// attributed — the reader thread above must keep running (or exit
+    /// cleanly), never unwind.
+    fn corrupt(&self, tag: u64, detail: &str) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(p) = st.partial.remove(&tag) {
+                self.pool.put(p.buf);
+            }
         }
+        crate::metrics::global().counter("transport.corrupt_frames").inc();
+        let peer_s = self.peer.map(|p| p.to_string()).unwrap_or_else(|| "-".into());
+        crate::metrics::log_event(
+            "transport.corrupt_frame",
+            &[
+                ("peer", peer_s.as_str()),
+                ("tag", format!("{tag:#x}").as_str()),
+                ("detail", detail),
+            ],
+        );
+        let err = match self.peer {
+            Some(peer) => CclError::RemoteError {
+                peer,
+                detail: format!("corrupt frame on tag {tag:#x}: {detail}"),
+            },
+            None => CclError::Transport(format!("corrupt frame on tag {tag:#x}: {detail}")),
+        };
+        self.fail(err);
     }
 
     /// Terminal failure: every current and future `recv` gets `err`.
@@ -402,6 +479,55 @@ mod tests {
         ib.fail(CclError::Aborted("shutdown".into()));
         let err = ib.recv_prologue(5, None).unwrap_err();
         assert!(matches!(err, CclError::Aborted(_)));
+    }
+
+    #[test]
+    fn truncated_message_errors_and_recycles_buffer() {
+        // A LAST frame arriving before the header-claimed byte count is
+        // in (sender crashed mid-message / chaos truncation) must never
+        // deliver a short message: the partial buffer goes back to the
+        // pool and the inbox fails with the peer attributed.
+        let ib = Inbox::for_peer(3);
+        ib.push_frame(9, &[1u8; 100], 300, 0);
+        ib.push_frame(9, &[2u8; 50], 300, FLAG_LAST); // 150 of 300 bytes
+        let err = ib.recv(9, Some(Duration::from_millis(50))).unwrap_err();
+        assert!(
+            matches!(err, CclError::RemoteError { peer: 3, .. }),
+            "truncation must raise an edge-attributed RemoteError, got {err:?}"
+        );
+        assert_eq!(ib.pool_len(), 1, "partial buffer recycled, not leaked");
+    }
+
+    #[test]
+    fn message_overflowing_its_header_errors() {
+        let ib = Inbox::for_peer(1);
+        ib.push_frame(2, &[0u8; 80], 100, 0);
+        ib.push_frame(2, &[0u8; 80], 100, 0); // 160 > 100 claimed
+        assert!(matches!(
+            ib.recv(2, Some(Duration::from_millis(50))),
+            Err(CclError::RemoteError { peer: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn msg_len_flip_flop_mid_reassembly_errors() {
+        let ib = Inbox::for_peer(2);
+        ib.push_frame(5, &[0u8; 10], 40, 0);
+        ib.push_frame(5, &[0u8; 10], 99, 0); // header disagrees with itself
+        assert!(matches!(
+            ib.recv(5, Some(Duration::from_millis(50))),
+            Err(CclError::RemoteError { peer: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn truncation_without_peer_is_a_transport_error() {
+        let ib = Inbox::new();
+        ib.push_frame(1, &[0u8; 4], 8, FLAG_LAST);
+        assert!(matches!(
+            ib.recv(1, Some(Duration::from_millis(50))),
+            Err(CclError::Transport(_))
+        ));
     }
 
     #[test]

@@ -16,12 +16,13 @@
 //! tag, so `recv` order is decoupled from arrival order (needed for the
 //! paper's "P4 must receive from P2 and P3 in arbitrary order" case).
 
+pub mod fault;
 pub mod inbox;
 pub mod ratelimit;
 pub mod shm;
 pub mod tcp;
 
-use super::error::CclResult;
+use super::error::{CclError, CclResult};
 use std::time::Duration;
 
 /// A bidirectional point-to-point channel to one peer rank.
@@ -53,6 +54,31 @@ pub trait Link: Send + Sync {
     /// receive pool once its payload has been parsed, so the next
     /// message reuses the allocation. Optional — the default drops it.
     fn recycle(&self, _buf: Vec<u8>) {}
+
+    /// Emit exactly one wire frame with caller-controlled header fields
+    /// (`msg_len` and `flags` are written verbatim). This is the
+    /// chaos-injection hook: [`fault::FaultLink`]'s truncate rule uses
+    /// it to put a message on the wire whose `LAST` frame arrives short
+    /// of the length every header claimed — the receiver's inbox must
+    /// detect the contradiction (see [`inbox::Inbox::push_frame`]).
+    /// Optional; transports without it refuse.
+    fn send_raw_frame(
+        &self,
+        _tag: u64,
+        _payload: &[u8],
+        _msg_len: u32,
+        _flags: u8,
+    ) -> CclResult<()> {
+        Err(CclError::InvalidUsage("raw frames unsupported on this transport".into()))
+    }
+
+    /// Best-effort *deliberate-teardown* announcement: write one
+    /// `GOODBYE` frame so the peer's reader fails pending receives with
+    /// [`CclError::Aborted`] (an alive rank said goodbye) instead of
+    /// [`CclError::RemoteError`] (the rank died). Called by the world
+    /// layer right before an announced break; must never block on a
+    /// congested link (skip instead) and never error. Default: no-op.
+    fn farewell(&self, _reason: &str) {}
 
     /// Abort everything pending on this link (local decision — watchdog
     /// or world teardown). Idempotent.

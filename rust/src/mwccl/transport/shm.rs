@@ -18,7 +18,8 @@ use super::inbox::Inbox;
 use super::Link;
 use crate::mwccl::error::{CclError, CclResult};
 use crate::mwccl::wire::{
-    decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FLAG_PROLOGUE, FRAME_HDR, SEG_MAX,
+    decode_frame_hdr, encode_frame_hdr, FLAG_GOODBYE, FLAG_LAST, FLAG_PROLOGUE, FRAME_HDR,
+    SEG_MAX,
 };
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -256,7 +257,7 @@ impl ShmLink {
         };
         let tx = Arc::new(tx);
         let rx = Arc::new(rx);
-        let inbox = Arc::new(Inbox::new());
+        let inbox = Arc::new(Inbox::for_peer(peer));
         let aborted = Arc::new(AtomicBool::new(false));
         let reader = {
             let rx = rx.clone();
@@ -264,7 +265,7 @@ impl ShmLink {
             let aborted = aborted.clone();
             std::thread::Builder::new()
                 .name(format!("shm-rx-peer{peer}"))
-                .spawn(move || reader_loop(rx, inbox, aborted))
+                .spawn(move || reader_loop(rx, inbox, aborted, peer))
                 .map_err(|e| CclError::Transport(format!("spawn: {e}")))?
         };
         Ok(ShmLink {
@@ -284,13 +285,66 @@ impl ShmLink {
         let tail = self.tx.tail().load(Ordering::Acquire);
         self.tx.capacity - (head - tail) as usize
     }
+
+    /// Largest single-frame payload this ring accepts: segments must fit
+    /// with room for ≥2 frames in flight, or a message bigger than the
+    /// ring would wait forever for space that can never exist. The one
+    /// definition every send path (send, prologue, raw frame) shares.
+    fn max_seg(&self) -> usize {
+        SEG_MAX
+            .min((self.tx.capacity.saturating_sub(2 * FRAME_HDR)) / 2)
+            .max(1024)
+    }
+
+    /// Write one frame with caller-controlled header fields. Caller
+    /// holds the send lock. `may_block` waits for ring space (aborting
+    /// breaks the wait); otherwise a full ring skips the frame.
+    fn ring_frame(
+        &self,
+        tag: u64,
+        payload: &[u8],
+        msg_len: u32,
+        flags: u8,
+        may_block: bool,
+    ) -> CclResult<()> {
+        let max_seg = self.max_seg();
+        if payload.len() > max_seg {
+            return Err(CclError::InvalidUsage(format!(
+                "raw frame of {} bytes exceeds one segment (max {max_seg})",
+                payload.len()
+            )));
+        }
+        let need = FRAME_HDR + payload.len();
+        let mut spins = 0u32;
+        while self.tx_free() < need {
+            if !may_block {
+                return Err(CclError::Transport("shm ring full".into()));
+            }
+            if self.aborted.load(Ordering::Acquire) {
+                return Err(CclError::Aborted("shm link aborted".into()));
+            }
+            spins += 1;
+            if spins < 256 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        let head = self.tx.head().load(Ordering::Relaxed);
+        let mut hdr = [0u8; FRAME_HDR];
+        encode_frame_hdr(&mut hdr, tag, payload.len() as u32, msg_len, flags);
+        self.tx.write_at(head, &hdr);
+        self.tx.write_at(head + FRAME_HDR as u64, payload);
+        self.tx.head().store(head + need as u64, Ordering::Release);
+        Ok(())
+    }
 }
 
 /// Consumer loop: drain frames from the RX ring into the inbox.
 ///
 /// Spin-then-yield: busy-poll briefly (latency), then sleep 50 µs bites
 /// (CPU). **No peer-liveness check on purpose** — see module docs.
-fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>) {
+fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>, peer: usize) {
     let mut hdr = [0u8; FRAME_HDR];
     let mut payload = vec![0u8; SEG_MAX];
     let mut idle_spins = 0u32;
@@ -314,7 +368,29 @@ fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>) {
         rx.read_at(tail, &mut hdr);
         let (tag, len, msg_len, flags) = decode_frame_hdr(&hdr);
         let len = len as usize;
-        debug_assert!(len <= SEG_MAX);
+        if len > SEG_MAX {
+            // A corrupt header must error the link, never index past the
+            // reader's segment buffer (release builds used to rely on a
+            // debug_assert here — an unwinding reader thread is exactly
+            // the failure mode the gray-failure work hardens against).
+            // Same observability as every other corruption class: the
+            // transport.corrupt_frames counter is THE signal dashboards
+            // and the chaos tests key on.
+            crate::metrics::global().counter("transport.corrupt_frames").inc();
+            crate::metrics::log_event(
+                "transport.corrupt_frame",
+                &[
+                    ("peer", peer.to_string().as_str()),
+                    ("tag", format!("{tag:#x}").as_str()),
+                    ("detail", format!("oversized frame {len} on shm ring").as_str()),
+                ],
+            );
+            inbox.fail(CclError::RemoteError {
+                peer,
+                detail: format!("oversized frame {len} on shm ring"),
+            });
+            return;
+        }
         let need = FRAME_HDR + len;
         // The producer publishes head only after the whole frame is
         // in the ring, so avail >= FRAME_HDR implies we must wait for
@@ -327,6 +403,14 @@ fn reader_loop(rx: Arc<Ring>, inbox: Arc<Inbox>, aborted: Arc<AtomicBool>) {
         }
         rx.read_at(tail + FRAME_HDR as u64, &mut payload[..len]);
         rx.tail().store(tail + need as u64, Ordering::Release);
+        if flags & FLAG_GOODBYE != 0 {
+            // Deliberate teardown announced by a live peer (see tcp.rs):
+            // surface Aborted. Silent *death* stays silent — nothing
+            // writes a goodbye when a process just dies.
+            let reason = String::from_utf8_lossy(&payload[..len]).into_owned();
+            inbox.fail(CclError::Aborted(format!("peer {peer} closed: {reason}")));
+            return;
+        }
         inbox.push_frame(tag, &payload[..len], msg_len as usize, flags);
     }
 }
@@ -347,12 +431,7 @@ impl Link for ShmLink {
         let mut remaining = total;
         let mut part_idx = 0usize;
         let mut part_off = 0usize;
-        // Segments must fit the ring with room for ≥2 frames in flight,
-        // or a message bigger than the ring would wait forever for space
-        // that can never exist.
-        let max_seg = SEG_MAX
-            .min((self.tx.capacity.saturating_sub(2 * FRAME_HDR)) / 2)
-            .max(1024);
+        let max_seg = self.max_seg();
         loop {
             let seg = remaining.min(max_seg);
             let need = FRAME_HDR + seg;
@@ -406,43 +485,16 @@ impl Link for ShmLink {
             return Err(CclError::Aborted("shm link aborted".into()));
         }
         let _guard = self.send_lock.lock().unwrap();
-        // One frame only: it must fit the ring alongside at least one
-        // other in-flight frame (same bound `send` applies per segment).
-        let max_seg = SEG_MAX
-            .min((self.tx.capacity.saturating_sub(2 * FRAME_HDR)) / 2)
-            .max(1024);
-        if payload.len() > max_seg {
-            return Err(CclError::InvalidUsage(format!(
-                "prologue of {} bytes exceeds one frame (max {max_seg})",
-                payload.len()
-            )));
-        }
-        let need = FRAME_HDR + payload.len();
-        let mut spins = 0u32;
-        while self.tx_free() < need {
-            if self.aborted.load(Ordering::Acquire) {
-                return Err(CclError::Aborted("shm link aborted".into()));
-            }
-            spins += 1;
-            if spins < 256 {
-                std::hint::spin_loop();
-            } else {
-                std::thread::sleep(Duration::from_micros(50));
-            }
-        }
-        let head = self.tx.head().load(Ordering::Relaxed);
-        let mut hdr = [0u8; FRAME_HDR];
-        encode_frame_hdr(
-            &mut hdr,
+        // One frame only (it must fit the ring alongside at least one
+        // other in-flight frame) — exactly the contract `ring_frame`
+        // enforces.
+        self.ring_frame(
             tag,
-            payload.len() as u32,
+            payload,
             payload.len() as u32,
             FLAG_LAST | FLAG_PROLOGUE,
-        );
-        self.tx.write_at(head, &hdr);
-        self.tx.write_at(head + FRAME_HDR as u64, payload);
-        self.tx.head().store(head + need as u64, Ordering::Release);
-        Ok(())
+            /*may_block=*/ true,
+        )
     }
 
     fn recv_prologue(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
@@ -459,6 +511,32 @@ impl Link for ShmLink {
 
     fn recycle(&self, buf: Vec<u8>) {
         self.inbox.recycle(buf);
+    }
+
+    fn send_raw_frame(&self, tag: u64, payload: &[u8], msg_len: u32, flags: u8) -> CclResult<()> {
+        if self.aborted.load(Ordering::Acquire) {
+            return Err(CclError::Aborted("shm link aborted".into()));
+        }
+        let _guard = self.send_lock.lock().unwrap();
+        self.ring_frame(tag, payload, msg_len, flags, /*may_block=*/ true)
+    }
+
+    fn farewell(&self, reason: &str) {
+        if self.aborted.load(Ordering::Acquire) {
+            return;
+        }
+        // Best-effort, never blocking: skip the goodbye when the send
+        // lock is held (a stuck send) or the ring has no room.
+        let Ok(_guard) = self.send_lock.try_lock() else { return };
+        let bytes = reason.as_bytes();
+        let n = bytes.len().min(1024);
+        let _ = self.ring_frame(
+            0,
+            &bytes[..n],
+            n as u32,
+            FLAG_LAST | FLAG_GOODBYE,
+            /*may_block=*/ false,
+        );
     }
 
     fn abort(&self, reason: &str) {
@@ -579,6 +657,28 @@ mod tests {
             assert_eq!(got.len(), 3000);
             assert!(got.iter().all(|&x| x == 0xAB));
         }
+    }
+
+    #[test]
+    fn farewell_announces_deliberate_teardown() {
+        // An *announced* break is the one exception to shm silence: the
+        // aborter is alive and says so. Plain drop (process death) stays
+        // silent — see `peer_death_is_silent` below.
+        let (a, b) = link_pair("farewell", 64 * 1024);
+        a.farewell("watchdog verdict");
+        let err = b.recv(5, Some(Duration::from_secs(2))).unwrap_err();
+        assert!(matches!(err, CclError::Aborted(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn truncated_raw_frame_is_detected() {
+        let (a, b) = link_pair("trunc", 64 * 1024);
+        a.send_raw_frame(3, &[7u8; 8], 32, FLAG_LAST).unwrap();
+        let err = b.recv(3, Some(Duration::from_secs(2))).unwrap_err();
+        assert!(
+            matches!(err, CclError::RemoteError { peer: 0, .. }),
+            "truncation must be edge-attributed, got {err:?}"
+        );
     }
 
     #[test]

@@ -10,7 +10,8 @@ use super::ratelimit::RateLimiter;
 use super::Link;
 use crate::mwccl::error::{CclError, CclResult};
 use crate::mwccl::wire::{
-    decode_frame_hdr, encode_frame_hdr, FLAG_LAST, FLAG_PROLOGUE, FRAME_HDR, SEG_MAX,
+    decode_frame_hdr, encode_frame_hdr, FLAG_GOODBYE, FLAG_LAST, FLAG_PROLOGUE, FRAME_HDR,
+    SEG_MAX,
 };
 use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, TcpStream};
@@ -45,7 +46,7 @@ impl TcpLink {
         let read_half = stream
             .try_clone()
             .map_err(|e| CclError::Transport(format!("clone: {e}")))?;
-        let inbox = Arc::new(Inbox::new());
+        let inbox = Arc::new(Inbox::for_peer(peer));
         let inbox2 = inbox.clone();
         let reader = std::thread::Builder::new()
             .name(format!("tcp-rx-peer{peer}"))
@@ -84,11 +85,41 @@ fn reader_loop(mut stream: TcpStream, inbox: Arc<Inbox>, peer: usize) {
         let (tag, len, msg_len, flags) = decode_frame_hdr(&hdr);
         let len = len as usize;
         if len > SEG_MAX {
-            inbox.fail(CclError::Transport(format!("oversized frame {len}")));
+            // Corrupt header: same edge attribution and observability as
+            // every other corruption class (transport.corrupt_frames is
+            // THE signal dashboards and the chaos tests key on).
+            crate::metrics::global().counter("transport.corrupt_frames").inc();
+            crate::metrics::log_event(
+                "transport.corrupt_frame",
+                &[
+                    ("peer", peer.to_string().as_str()),
+                    ("tag", format!("{tag:#x}").as_str()),
+                    ("detail", format!("oversized frame {len}").as_str()),
+                ],
+            );
+            inbox.fail(CclError::RemoteError {
+                peer,
+                detail: format!("oversized frame {len}"),
+            });
             return;
         }
         if let Err(e) = stream.read_exact(&mut payload[..len]) {
             inbox.fail(CclError::RemoteError { peer, detail: e.to_string() });
+            return;
+        }
+        if flags & FLAG_GOODBYE != 0 {
+            // The peer announced a deliberate teardown: it is alive and
+            // chose to break the world (timeout, watchdog verdict).
+            // Surface `Aborted`, not the death-implying `RemoteError`,
+            // so failure attribution upstairs never convicts a live
+            // rank on teardown evidence. (TCP goodbyes carry no reason
+            // payload — tear-proofing; see `TcpLink::farewell`.)
+            let reason = if len == 0 {
+                "announced teardown".to_string()
+            } else {
+                String::from_utf8_lossy(&payload[..len]).into_owned()
+            };
+            inbox.fail(CclError::Aborted(format!("peer {peer} closed: {reason}")));
             return;
         }
         inbox.push_frame(tag, &payload[..len], msg_len as usize, flags);
@@ -230,6 +261,48 @@ impl Link for TcpLink {
 
     fn recycle(&self, buf: Vec<u8>) {
         self.inbox.recycle(buf);
+    }
+
+    fn send_raw_frame(&self, tag: u64, payload: &[u8], msg_len: u32, flags: u8) -> CclResult<()> {
+        self.check_aborted()?;
+        if payload.len() > SEG_MAX {
+            return Err(CclError::InvalidUsage(format!(
+                "raw frame of {} bytes exceeds one segment",
+                payload.len()
+            )));
+        }
+        let mut w = self.writer.lock().unwrap();
+        if let Some(rl) = &self.limiter {
+            rl.acquire(payload.len() + FRAME_HDR);
+        }
+        let mut hdr = [0u8; FRAME_HDR];
+        encode_frame_hdr(&mut hdr, tag, payload.len() as u32, msg_len, flags);
+        write_all_vectored(&mut w, &[&hdr, payload], self.peer)
+    }
+
+    fn farewell(&self, _reason: &str) {
+        if self.aborted.load(Ordering::Acquire) {
+            return;
+        }
+        // Best-effort only: a writer held by a stuck send must not make
+        // the teardown path block — skip the goodbye and let the peer
+        // see the socket close instead.
+        let Ok(mut w) = self.writer.try_lock() else { return };
+        // And a *wedged* peer must not either: earlier sends may have
+        // filled the kernel send buffer and completed (releasing the
+        // writer lock), so an unbounded write here could park the break
+        // path forever — exactly the thread that was about to unblock
+        // the application. Bound the write, keep the frame to a bare
+        // header (no reason payload — it lives in the breaker's logs),
+        // and make exactly ONE write attempt: a retry loop after a
+        // partial write would widen the window for a torn frame, and a
+        // torn goodbye followed by the close reads as peer death — the
+        // misattribution this frame exists to prevent.
+        let _ = w.set_write_timeout(Some(Duration::from_millis(50)));
+        let mut hdr = [0u8; FRAME_HDR];
+        encode_frame_hdr(&mut hdr, 0, 0, 0, FLAG_LAST | FLAG_GOODBYE);
+        let _ = w.write(&hdr);
+        let _ = w.set_write_timeout(None);
     }
 
     fn abort(&self, reason: &str) {
@@ -391,6 +464,30 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         b.abort("watchdog");
         assert!(matches!(t.join().unwrap(), Err(CclError::Aborted(_))));
+    }
+
+    #[test]
+    fn farewell_turns_teardown_into_aborted_not_remote_error() {
+        let (a, b) = link_pair(None);
+        a.farewell("op timeout, breaking world");
+        a.abort("breaking world");
+        let err = b.recv(4, Some(Duration::from_secs(2))).unwrap_err();
+        assert!(
+            matches!(err, CclError::Aborted(_)),
+            "announced teardown must not read as peer death, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn truncated_raw_frame_is_detected_not_delivered() {
+        let (a, b) = link_pair(None);
+        // Claim 64 bytes, deliver 16 with LAST — a crash mid-message.
+        a.send_raw_frame(7, &[9u8; 16], 64, FLAG_LAST).unwrap();
+        let err = b.recv(7, Some(Duration::from_secs(2))).unwrap_err();
+        assert!(
+            matches!(err, CclError::RemoteError { peer: 0, .. }),
+            "truncation must be edge-attributed, got {err:?}"
+        );
     }
 
     #[test]

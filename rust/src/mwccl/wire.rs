@@ -38,6 +38,19 @@ pub const FLAG_LAST: u8 = 1;
 /// verdict ever being confused with the payload that follows.
 pub const FLAG_PROLOGUE: u8 = 2;
 
+/// Flag: goodbye frame — a *deliberate* teardown announcement. Written
+/// best-effort by [`super::transport::Link::farewell`] when a world is
+/// broken on purpose (watchdog verdict, op timeout, explicit
+/// `break_world`), so the peer's reader fails its inbox with
+/// [`crate::mwccl::error::CclError::Aborted`] instead of mistaking the
+/// subsequent socket close for peer *death* (`RemoteError`). That
+/// distinction is what keeps failure attribution honest under gray
+/// failures: a rank that aborts a stuck collective must not be convicted
+/// as dead by its surviving neighbors. The payload may carry the reason
+/// string (shm, where ring publication is atomic) or be empty (tcp,
+/// where a bare header minimizes the torn-frame window).
+pub const FLAG_GOODBYE: u8 = 4;
+
 /// Encode a frame header into `out[0..FRAME_HDR]`.
 #[inline]
 pub fn encode_frame_hdr(out: &mut [u8], tag: u64, seg_len: u32, msg_len: u32, flags: u8) {

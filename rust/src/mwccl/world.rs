@@ -188,6 +188,25 @@ impl WorldCore {
             link.abort(&format!("world {} broken: {err}", self.name));
         }
     }
+
+    /// Break the world *and announce it first*: a best-effort GOODBYE
+    /// frame on every link tells still-alive peers this is a deliberate
+    /// teardown (watchdog verdict, op timeout, explicit `break_world`),
+    /// so their transports surface [`CclError::Aborted`] instead of the
+    /// death-implying `RemoteError` — the failure-attribution layer must
+    /// never convict a live rank on teardown evidence. The plain drop
+    /// path keeps the silent [`WorldCore::break_world`]: process death
+    /// announces nothing, exactly like a real crash.
+    fn break_world_announced(&self, err: &CclError) {
+        if self.broken.load(Ordering::Acquire) {
+            return; // already broken; links are gone — nothing to announce
+        }
+        let reason = format!("world {} broken: {err}", self.name);
+        for link in self.links.values() {
+            link.farewell(&reason);
+        }
+        self.break_world(err);
+    }
 }
 
 /// Handle to one world. Clone freely; dropping the last handle shuts the
@@ -331,6 +350,15 @@ impl World {
     pub fn abort(&self, reason: &str) {
         self.core
             .break_world(&CclError::Aborted(reason.to_string()));
+    }
+
+    /// [`World::abort`] preceded by a farewell to every peer (see
+    /// [`WorldCore::break_world_announced`]): the manager's deliberate
+    /// break path, so surviving peers observe `Aborted`, not a
+    /// misattributable `RemoteError`.
+    pub fn abort_announced(&self, reason: &str) {
+        self.core
+            .break_world_announced(&CclError::Aborted(reason.to_string()));
     }
 
     /// Submit an op closure to the progress thread.

@@ -446,6 +446,102 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_pushers_consumer_purger_account_for_every_request() {
+        // Brute-force concurrency coverage for the condvar paths PR 4
+        // added: three producers race seeded mixes of `try_push` (shed)
+        // and `push_wait` (backpressure) — some requests pre-expired so
+        // the drop hook fires concurrently with the drain — while one
+        // consumer loops `next_batch` and a purger rips queued ids out
+        // from under everyone. Three seeds give three interleaving
+        // families. The invariant: every request resolves to exactly ONE
+        // fate (dispatched, hook-dropped, shed, or purged) — no loss, no
+        // duplication, queue empty at the end.
+        use crate::util::prng::Rng;
+        const PRODUCERS: u64 = 3;
+        const PER_PRODUCER: u64 = 120;
+        for seed in [1u64, 7, 42] {
+            let b = DynamicBatcher::with_capacity(4, Duration::from_millis(1), 8);
+            let dropped: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+            let d2 = dropped.clone();
+            b.set_drop_hook(Box::new(move |r| d2.lock().unwrap().push(r.id)));
+            let shed: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+            let producers: Vec<_> = (0..PRODUCERS)
+                .map(|p| {
+                    let b = b.clone();
+                    let shed = shed.clone();
+                    std::thread::spawn(move || {
+                        let mut rng = Rng::new(seed * 1000 + p);
+                        for k in 0..PER_PRODUCER {
+                            let mut r = req(p * PER_PRODUCER + k);
+                            if rng.chance(0.2) {
+                                r.deadline = Some(since_epoch() - 1.0); // pre-expired
+                            }
+                            let res = if rng.chance(0.5) {
+                                b.try_push(r)
+                            } else {
+                                b.push_wait(r)
+                            };
+                            if let Err(back) = res {
+                                shed.lock().unwrap().push(back.id);
+                            }
+                            if rng.chance(0.1) {
+                                std::thread::yield_now();
+                            }
+                        }
+                    })
+                })
+                .collect();
+            let stop_purge = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let purger = {
+                let b = b.clone();
+                let stop = stop_purge.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed ^ 0xBADC0FFE);
+                    let mut purged = Vec::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        let id = rng.below(PRODUCERS * PER_PRODUCER);
+                        purged.extend(b.purge(&[id]).into_iter().map(|r| r.id));
+                        std::thread::yield_now();
+                    }
+                    purged
+                })
+            };
+            let consumer = {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(batch) = b.next_batch() {
+                        got.extend(batch.into_iter().map(|r| r.id));
+                    }
+                    got
+                })
+            };
+            for p in producers {
+                p.join().unwrap();
+            }
+            stop_purge.store(true, Ordering::Relaxed);
+            let purged = purger.join().unwrap();
+            b.close();
+            let dispatched = consumer.join().unwrap();
+
+            let total = (PRODUCERS * PER_PRODUCER) as usize;
+            let mut all: Vec<u64> = dispatched;
+            all.extend(dropped.lock().unwrap().iter().copied());
+            all.extend(shed.lock().unwrap().iter().copied());
+            all.extend(purged.iter().copied());
+            all.sort_unstable();
+            assert_eq!(
+                all.len(),
+                total,
+                "seed {seed}: every request must resolve to exactly one fate"
+            );
+            all.dedup();
+            assert_eq!(all.len(), total, "seed {seed}: no id resolved twice");
+            assert_eq!(b.depth(), 0, "seed {seed}: queue drained");
+        }
+    }
+
+    #[test]
     fn purge_removes_queued_ids() {
         let b = DynamicBatcher::new(4, Duration::from_millis(1));
         for i in 0..4 {

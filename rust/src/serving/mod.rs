@@ -60,6 +60,19 @@
 //! replica can be killed, recovered, and a fresh replica scaled out in
 //! the same run.
 //!
+//! The fault model goes beyond clean kills: the transport layer can
+//! deterministically inject *gray* failures — stalled links, dropped
+//! or truncated frames, one-way partitions, bandwidth caps — via
+//! [`crate::mwccl::transport::fault`] (`WorldOptions::with_fault_plan`,
+//! env `MW_FAULT_PLAN`/`MW_FAULT_SEED`, runtime handle
+//! `InProcCluster::faults()`). Injections are observable as
+//! `fault.injected.<kind>` counters plus `fault.injected` log events,
+//! and detected wire corruption rides `transport.corrupt_frames` — the
+//! signals `tests/serving_gray_failure.rs` asserts on. Deliberate world
+//! breaks announce themselves on the wire (`Link::farewell`), so
+//! failure attribution never convicts a live rank that aborted a wedged
+//! collective.
+//!
 //! Pieces (each independently testable):
 //!
 //! * [`request`] — request/response types, the per-request

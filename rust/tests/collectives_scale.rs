@@ -526,6 +526,143 @@ fn reduce_arrival_order_folds_stragglers() {
     }
 }
 
+/// Per-rank values chosen so f32 summation is *order-sensitive*: rank 0
+/// contributes ~+3e7, rank 2 ~−3e7, ranks 1/3 small values that vanish
+/// into the big magnitudes unless folded in the right order. Any change
+/// of fold order moves the result by whole units, not ulps.
+fn sensitive_tensor(elems: usize, rank: usize) -> Tensor {
+    let vals: Vec<f32> = (0..elems)
+        .map(|i| match rank {
+            0 => 3.0e7 + (i % 13) as f32,
+            1 => 1.0 + (i % 7) as f32 * 0.25,
+            2 => -3.0e7 - (i % 11) as f32,
+            _ => 0.125 + (i % 3) as f32,
+        })
+        .collect();
+    Tensor::from_f32(&[elems], &vals)
+}
+
+/// The exact fold `reduce_impl` promises: rank order 0, 1, …, N−1,
+/// elementwise, root's own contribution in its rank slot.
+fn rank_order_reference(elems: usize, size: usize) -> Tensor {
+    let mut acc = sensitive_tensor(elems, 0).as_f32().to_vec();
+    for r in 1..size {
+        for (a, b) in acc.iter_mut().zip(sensitive_tensor(elems, r).as_f32()) {
+            *a += *b;
+        }
+    }
+    Tensor::from_f32(&[elems], &acc)
+}
+
+#[test]
+fn flat_reduce_bitwise_deterministic_under_adversarial_arrival() {
+    // Regression for the arrival-order fold the seed shipped with: the
+    // flat reduce must produce the *bitwise-identical* rank-order result
+    // no matter how the network reorders contributions. FaultLink delay
+    // rules force three different arrival orders at the root; every run
+    // must match the rank-order reference exactly.
+    use multiworld::mwccl::{EdgePattern, FaultKind, FaultPlan, FaultRule};
+    let (size, elems, root) = (4usize, 2_000usize, 2usize);
+    let want = rank_order_reference(elems, size);
+
+    // Guard: the inputs really are order-sensitive — folding rank 3
+    // before ranks 1 and 2 must give a *different* f32 result, or this
+    // test would pass vacuously.
+    let mut reordered = sensitive_tensor(elems, 0).as_f32().to_vec();
+    for r in [3usize, 1, 2] {
+        for (a, b) in reordered.iter_mut().zip(sensitive_tensor(elems, r).as_f32()) {
+            *a += *b;
+        }
+    }
+    assert_ne!(
+        Tensor::from_f32(&[elems], &reordered).checksum(),
+        want.checksum(),
+        "test inputs must be fold-order sensitive"
+    );
+
+    // Three arrival orders: undelayed, rank 1 straggling, rank 3
+    // straggling (delays land on the straggler's send to the root).
+    let plans: Vec<Option<FaultPlan>> = vec![
+        None,
+        Some(FaultPlan::new(
+            vec![FaultRule::always(
+                EdgePattern::new("*", Some(1), Some(root)),
+                FaultKind::Delay { ms: 60 },
+            )],
+            1,
+        )),
+        Some(FaultPlan::new(
+            vec![FaultRule::always(
+                EdgePattern::new("*", Some(3), Some(root)),
+                FaultKind::Delay { ms: 60 },
+            )],
+            1,
+        )),
+    ];
+    for plan in plans {
+        let mut o = opts("tcp", CollAlgo::Flat);
+        if let Some(p) = plan.clone() {
+            o = o.with_fault_plan(p);
+        }
+        let worlds = Rendezvous::single_process(&uniq("detred"), 4, o).unwrap();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                let t = sensitive_tensor(elems, w.rank());
+                std::thread::spawn(move || {
+                    (w.rank(), w.reduce(t, root, ReduceOp::Sum).unwrap())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, res) = h.join().unwrap();
+            if rank == root {
+                assert_eq!(
+                    res.unwrap().as_f32(),
+                    want.as_f32(),
+                    "flat reduce must be bitwise rank-order deterministic \
+                     (plan: {plan:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_and_ring_reduce_agree_bitwise_on_exact_inputs() {
+    // With integer-valued (exactly representable) contributions the fold
+    // order cannot round: flat and ring must agree bit for bit, not just
+    // to a tolerance — pinned via the raw f32 words, at both roots'
+    // parities, over tcp.
+    let (size, elems) = (4usize, 10_000usize);
+    for root in [0usize, 2] {
+        let mut results: Vec<Vec<f32>> = Vec::new();
+        for algo in [CollAlgo::Flat, CollAlgo::Ring] {
+            let worlds =
+                Rendezvous::single_process(&uniq("bitred"), size, opts("tcp", algo)).unwrap();
+            let handles: Vec<_> = worlds
+                .into_iter()
+                .map(|w| {
+                    let t = int_tensor(elems, w.rank());
+                    std::thread::spawn(move || {
+                        (w.rank(), w.reduce(t, root, ReduceOp::Sum).unwrap())
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (rank, res) = h.join().unwrap();
+                if rank == root {
+                    results.push(res.unwrap().as_f32().to_vec());
+                }
+            }
+        }
+        assert_eq!(
+            results[0], results[1],
+            "root={root}: flat and ring reduce must agree bitwise on exact inputs"
+        );
+    }
+}
+
 #[test]
 fn scatter_size_4_distributes_without_root_clone() {
     let size = 4;

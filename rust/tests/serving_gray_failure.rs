@@ -1,0 +1,703 @@
+//! Gray-failure chaos suite: composed scenarios where the network
+//! *degrades* instead of dying — stalled links, silently dropped
+//! frames, truncation mid-message, one-way partitions, slow links under
+//! scale-out — driven by the deterministic `FaultLink` injector
+//! (`mwccl::transport::fault`). Every scenario asserts on the
+//! `fault.injected.*` counters (the injection demonstrably happened,
+//! not hoped-for timing), on failure attribution (no healthy rank is
+//! ever convicted on gray evidence), and on zero request loss wherever
+//! recovery is expected.
+//!
+//! Runs in the default CI build and under the `MW_COLL_ALGO`
+//! {flat,ring,auto} matrix; the `chaos` CI job additionally runs it
+//! under three fixed `MW_FAULT_SEED`s and uploads
+//! `target/chaos/*.log` (the injection event logs written by
+//! [`EventDump`]) when a scenario fails.
+
+use multiworld::config::ServingConfig;
+use multiworld::launch::InProcCluster;
+use multiworld::metrics;
+use multiworld::mwccl::{
+    fault_registry, EdgePattern, FaultKind, FaultPlan, FaultRule, Rendezvous, WorldOptions,
+};
+use multiworld::serving::autoscaler::AutoscalePolicy;
+use multiworld::serving::controller::{Action, ScalingPolicy};
+use multiworld::serving::topology::{NodeId, Topology};
+use multiworld::serving::{Outcome, RequestGen};
+use multiworld::tensor::Tensor;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Serialize: clusters spawn many threads and the fault registry is
+/// process-global.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const BATCH: usize = 4;
+const SEQ_LEN: usize = 8;
+const VOCAB: usize = 32;
+
+fn uniq(prefix: &str) -> String {
+    static N: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "{prefix}{}-{}",
+        std::process::id() % 1000,
+        N.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+fn base_port() -> u16 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    49_000 + (NEXT.fetch_add(1, Ordering::Relaxed) as u16 % 120) * 110
+        + (std::process::id() % 83) as u16
+}
+
+/// The chaos seed: `MW_FAULT_SEED` (the CI chaos matrix) or a fixed
+/// default, so plain `cargo test` is deterministic too.
+fn seed() -> u64 {
+    std::env::var("MW_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42)
+}
+
+fn counter(name: &str) -> u64 {
+    metrics::global().counter(name).get()
+}
+
+fn injected(kind: &str) -> u64 {
+    counter(&format!("fault.injected.{kind}"))
+}
+
+/// Gray scenarios assert that *nothing* breaks spuriously, so the
+/// watchdog is deliberately relaxed (2 s deadline): a loaded CI box
+/// stalling a worker thread briefly must never register as a failure —
+/// detection in these tests comes from transport evidence and op
+/// timeouts, not heartbeats. Retries are quick so silently lost batches
+/// re-dispatch well inside each scenario's budget.
+fn gray_cfg() -> ServingConfig {
+    ServingConfig {
+        heartbeat_ms: 250,
+        miss_threshold: 8,
+        batch_timeout_ms: 3,
+        retry_timeout_ms: 400,
+        retry_max_attempts: 50,
+        ..Default::default()
+    }
+}
+
+fn recoveries(cluster: &InProcCluster) -> Vec<Action> {
+    cluster
+        .controller
+        .actions()
+        .into_iter()
+        .filter(|a| matches!(a, Action::Recovered { .. }))
+        .collect()
+}
+
+/// Writes the fault-injection event log to `target/chaos/<name>.log` on
+/// scope exit — including panic unwinds, so a failing scenario leaves
+/// its injection evidence behind for the CI artifact upload.
+struct EventDump(&'static str);
+
+impl Drop for EventDump {
+    fn drop(&mut self) {
+        let dir = std::path::Path::new("target/chaos");
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(
+            dir.join(format!("{}.log", self.0)),
+            fault_registry().render_events(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario 1: a frame truncated mid-message (sender "crashes
+// mid-frame") on one replica's forward edge. The receiver's pooled
+// inbox must detect the short message (never deliver it, never unwind
+// the reader), attribute the edge, and the batch must be re-dispatched
+// to the surviving replica with zero request loss — and *nobody* gets
+// convicted: the RemoteError names the leader's rank, which the
+// controller correctly refuses to "recover".
+// ---------------------------------------------------------------------
+#[test]
+fn truncated_frame_redispatches_without_loss_or_spurious_recovery() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+    let _dump = EventDump("truncated_frame");
+    let trunc_before = injected("truncate");
+    let corrupt_before = counter("transport.corrupt_frames");
+
+    let topo = Topology::pipeline(&uniq("gtrunc"), &[2], base_port());
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        WorldOptions::tcp()
+            .with_init_timeout(Duration::from_secs(120))
+            .with_fault_plan(FaultPlan::empty(seed())),
+        ScalingPolicy { recover: true, ..Default::default() },
+        &gray_cfg(),
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap();
+    // Exactly one message on the leader → replica-1 forward edge is cut
+    // short mid-stream.
+    cluster.faults().inject(
+        FaultRule::always(
+            EdgePattern::new("*-in-s0r1*", Some(0), Some(1)),
+            FaultKind::Truncate { keep: 9 },
+        )
+        .with_count(1),
+    );
+
+    let total = BATCH * 6;
+    let mut gen = RequestGen::new(3, SEQ_LEN, VOCAB, None);
+    let report = cluster
+        .leader
+        .serve(gen.take(total), None, Duration::from_secs(90));
+
+    assert_eq!(
+        injected("truncate") - trunc_before,
+        1,
+        "the truncation must demonstrably fire"
+    );
+    assert!(
+        counter("transport.corrupt_frames") > corrupt_before,
+        "the receiver must detect the short message"
+    );
+    assert_eq!(
+        report.completed, total,
+        "zero request loss via redispatch (retries: {})",
+        report.retries
+    );
+    assert!(
+        recoveries(&cluster).is_empty(),
+        "a corrupt frame from the leader's edge must convict nobody: {:?}",
+        cluster.controller.actions()
+    );
+    assert_eq!(
+        cluster.live_workers().len(),
+        2,
+        "both replicas stay alive through the gray failure"
+    );
+    cluster.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Scenario 2: a silently dropped frame — no error anywhere, the batch
+// just never arrives. Nothing breaks, nothing is convicted; the
+// leader's retry sweep re-dispatches and every request completes.
+// ---------------------------------------------------------------------
+#[test]
+fn dropped_frame_is_redispatched_with_zero_loss_and_no_broken_world() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+    let _dump = EventDump("dropped_frame");
+    let drop_before = injected("drop");
+    let broken_before = counter("manager.worlds_broken");
+
+    let topo = Topology::pipeline(&uniq("gdrop"), &[2], base_port());
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        WorldOptions::tcp()
+            .with_init_timeout(Duration::from_secs(120))
+            .with_fault_plan(FaultPlan::empty(seed())),
+        ScalingPolicy { recover: true, ..Default::default() },
+        &gray_cfg(),
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap();
+    cluster.faults().inject(
+        FaultRule::always(
+            EdgePattern::new("*-in-s0r0*", Some(0), Some(1)),
+            FaultKind::Drop,
+        )
+        .with_count(1),
+    );
+
+    let total = BATCH * 6;
+    let mut gen = RequestGen::new(5, SEQ_LEN, VOCAB, None);
+    let report = cluster
+        .leader
+        .serve(gen.take(total), None, Duration::from_secs(90));
+
+    assert_eq!(injected("drop") - drop_before, 1, "the drop must demonstrably fire");
+    assert_eq!(report.completed, total, "zero request loss via retry");
+    assert!(
+        report.retries >= 1,
+        "the silently lost batch is only recoverable through the sweep"
+    );
+    assert_eq!(
+        counter("manager.worlds_broken"),
+        broken_before,
+        "a lost frame is gray: no world may break over it"
+    );
+    assert!(recoveries(&cluster).is_empty());
+    cluster.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Scenario 3: one-way partition of a forward edge mid-batch — sends
+// vanish while the reverse path stays healthy. Requests re-dispatch
+// with zero loss; when the partition heals, the same worlds serve
+// again: no world was re-minted, no generation tag appeared, nobody was
+// recovered.
+// ---------------------------------------------------------------------
+#[test]
+fn one_way_partition_mid_batch_heals_without_remint() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+    let _dump = EventDump("partition_heals");
+    let part_before = injected("partition");
+    let broken_before = counter("manager.worlds_broken");
+
+    let topo = Topology::pipeline(&uniq("gpart"), &[2], base_port());
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        WorldOptions::tcp()
+            .with_init_timeout(Duration::from_secs(120))
+            .with_fault_plan(FaultPlan::empty(seed())),
+        ScalingPolicy { recover: true, ..Default::default() },
+        &ServingConfig { retry_timeout_ms: 300, ..gray_cfg() },
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap();
+    let worlds_before: HashSet<String> = cluster
+        .controller
+        .topology()
+        .worlds
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+
+    let total = BATCH * 8;
+    let mut gen = RequestGen::new(7, SEQ_LEN, VOCAB, None);
+    let requests = gen.take(total);
+    let cluster_ref = &cluster;
+    let report = std::thread::scope(|s| {
+        s.spawn(move || {
+            // Partition replica 0's forward edge mid-traffic…
+            std::thread::sleep(Duration::from_millis(100));
+            let id = cluster_ref.faults().inject(FaultRule::always(
+                EdgePattern::new("*-in-s0r0*", Some(0), Some(1)),
+                FaultKind::Partition,
+            ));
+            // …and heal it while requests are still in flight.
+            std::thread::sleep(Duration::from_millis(700));
+            cluster_ref.faults().heal(id);
+        });
+        cluster_ref
+            .leader
+            .serve(requests, Some(60.0), Duration::from_secs(90))
+    });
+
+    assert!(
+        injected("partition") - part_before >= 1,
+        "the partition must demonstrably swallow traffic"
+    );
+    assert_eq!(
+        report.completed, total,
+        "zero request loss across the partition window (retries: {})",
+        report.retries
+    );
+    let worlds_after: HashSet<String> = cluster
+        .controller
+        .topology()
+        .worlds
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    assert_eq!(
+        worlds_before, worlds_after,
+        "a healed partition must not re-mint any world"
+    );
+    assert!(
+        worlds_after.iter().all(|w| !w.contains("#g")),
+        "no generation-tagged (re-minted) names may appear"
+    );
+    assert_eq!(
+        counter("manager.worlds_broken"),
+        broken_before,
+        "a one-way partition that heals must not break worlds"
+    );
+    assert!(recoveries(&cluster).is_empty(), "no spurious recovery");
+    cluster.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Scenario 4: a stalled TP link — the hardest attribution case. The
+// head's sends into its replica's TP world are held (the link is
+// wedged, both ends alive); the head's collective times out, it breaks
+// the TP world *deliberately* and announces the teardown, so its
+// healthy shard neighbor observes `Aborted` — not peer death — and the
+// controller, with culprit-less TP-only evidence, convicts NOBODY.
+// Traffic re-routes to the healthy replica with zero loss. (Before the
+// farewell mechanism, the neighbor's RemoteError on the 2-member TP
+// world convicted the *head* — a live rank — and respawned it over a
+// running worker.)
+// ---------------------------------------------------------------------
+#[test]
+fn stalled_tp_link_convicts_nobody_and_serves_through_the_other_replica() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+    let _dump = EventDump("stalled_tp_link");
+    let stall_before = injected("stall");
+    let broken_before = counter("manager.worlds_broken");
+
+    // Stage 1: two replicas of two shards each; stage 0 unsharded.
+    let topo = Topology::pipeline_tp(&uniq("gstall"), &[1, 2], &[1, 2], base_port());
+    let n_workers = topo.workers().len();
+    assert_eq!(n_workers, 5);
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        WorldOptions::tcp()
+            .with_init_timeout(Duration::from_secs(120))
+            // The only way out of a wedged collective on a live link:
+            // the op deadline.
+            .with_op_timeout(Duration::from_secs(3))
+            .with_fault_plan(FaultPlan::empty(seed())),
+        ScalingPolicy { recover: true, ..Default::default() },
+        &gray_cfg(),
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap();
+    // Wedge the head → shard-1 direction of replica (1,1)'s TP world.
+    cluster.faults().inject(FaultRule::always(
+        EdgePattern::new("*-tp-s1r1*", Some(0), Some(1)),
+        FaultKind::Stall,
+    ));
+
+    let total = BATCH * 6;
+    let mut gen = RequestGen::new(11, SEQ_LEN, VOCAB, None);
+    let report = cluster
+        .leader
+        .serve(gen.take(total), None, Duration::from_secs(90));
+
+    assert!(
+        injected("stall") - stall_before >= 1,
+        "the stall must demonstrably hold TP traffic"
+    );
+    assert_eq!(
+        report.completed, total,
+        "zero request loss: the healthy replica serves everything (retries: {})",
+        report.retries
+    );
+    // Wait for the op timeout to fire and the teardown reports to
+    // drain: the TP world demonstrably breaks…
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while counter("manager.worlds_broken") == broken_before {
+        assert!(
+            Instant::now() < deadline,
+            "the stalled TP world never broke (op timeout did not fire?)"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    // …and still, nobody is convicted: TP-only, culprit-less evidence
+    // (the farewell made the neighbor see Aborted, not RemoteError).
+    assert!(
+        recoveries(&cluster).is_empty(),
+        "a stalled link must convict no one — both ranks are alive: {:?}",
+        cluster.controller.actions()
+    );
+    assert_eq!(
+        cluster.live_workers().len(),
+        n_workers,
+        "every worker (stalled replica included) is still alive"
+    );
+    fault_registry().release_stalls();
+    cluster.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Scenario 5: a slow link during scale-out. A static (seeded,
+// replayable) delay plan throttles the only replica's forward edge;
+// the queue backs up under a burst, the autoscaler scales out, and the
+// *fresh* replica — whose edge is not matched by the plan — is
+// verified actually serving. Every submitted request resolves to a
+// response.
+// ---------------------------------------------------------------------
+#[test]
+fn slow_link_during_scale_out_fresh_replica_verified_serving() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+    let _dump = EventDump("slow_link_scale_out");
+    let delay_before = injected("delay");
+
+    let topo = Topology::pipeline(&uniq("gslow"), &[1], base_port());
+    let plan = FaultPlan::new(
+        vec![FaultRule::always(
+            EdgePattern::new("*-in-s0r0*", Some(0), Some(1)),
+            FaultKind::Delay { ms: 25 },
+        )],
+        seed(),
+    );
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        WorldOptions::shm()
+            .with_init_timeout(Duration::from_secs(120))
+            .with_fault_plan(plan),
+        ScalingPolicy { scale_up_depth: 8.0, max_replicas: 2, recover: true },
+        &ServingConfig {
+            heartbeat_ms: 100,
+            miss_threshold: 5,
+            batch_timeout_ms: 3,
+            ..Default::default()
+        },
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap();
+    let edges_before: HashSet<String> =
+        cluster.leader.dispatch_counts().keys().cloned().collect();
+    cluster.start_autoscaler(AutoscalePolicy {
+        stage: 0,
+        interval: Duration::from_millis(15),
+        cooldown: Duration::from_millis(300),
+        high_depth: 8.0,
+        slo_p99_ms: 0.0,
+        high_samples: 1,
+        low_samples: 6,
+        min_replicas: 1,
+        drain_timeout: Duration::from_secs(5),
+    });
+
+    let mut gen = RequestGen::new(13, SEQ_LEN, VOCAB, None);
+    let mut handles = Vec::new();
+    let scaled_out = |c: &InProcCluster| {
+        c.controller
+            .actions()
+            .iter()
+            .filter(|a| matches!(a, Action::ScaledOut { .. }))
+            .count()
+    };
+    // Burst until the throttled replica's backlog triggers scale-out.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while scaled_out(&cluster) == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "slow link never drove a scale-out; actions: {:?}",
+            cluster.controller.actions()
+        );
+        for r in gen.take(50) {
+            handles.push(cluster.leader.submit(r));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // The fresh replica demonstrably serves traffic on its own (fast)
+    // edge.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let counts = cluster.leader.dispatch_counts();
+        if counts.iter().any(|(e, &c)| !edges_before.contains(e) && c > 0) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fresh replica took no traffic: {counts:?}"
+        );
+        for r in gen.take(50) {
+            handles.push(cluster.leader.submit(r));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        injected("delay") - delay_before >= 1,
+        "the slow link must demonstrably delay traffic"
+    );
+    // Zero request loss: every submitted request resolves to a response
+    // (no SLO, unbounded admission).
+    let grace = Instant::now() + Duration::from_secs(120);
+    for h in &handles {
+        match h.wait_deadline(grace) {
+            Some(Outcome::Response(_)) => {}
+            other => panic!("request {} lost: {other:?}", h.id()),
+        }
+    }
+    assert!(recoveries(&cluster).is_empty(), "nothing to recover — the link was slow, not dead");
+    cluster.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Scenario 6: replayability — the acceptance criterion itself. The same
+// `MW_FAULT_SEED` + plan must reproduce the identical injection
+// sequence, asserted by comparing the fault-event logs of two runs
+// (worlds named differently on purpose: decisions are a function of
+// seed, edge ranks and send index — never of names or thread timing).
+// ---------------------------------------------------------------------
+#[test]
+fn same_seed_and_plan_reproduce_identical_injection_sequence() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let _dump = EventDump("determinism");
+    let plan = FaultPlan::parse(
+        "edge=*:0->1 kind=delay ms=1 prob=0.35; edge=*:0->1 kind=drop prob=0.2 count=4",
+        seed(),
+    )
+    .unwrap();
+
+    let run = |world: &str| -> Vec<(usize, usize, u64, &'static str)> {
+        fault_registry().reset();
+        let worlds = Rendezvous::single_process(
+            world,
+            2,
+            WorldOptions::tcp()
+                .with_init_timeout(Duration::from_secs(120))
+                .with_fault_plan(plan.clone()),
+        )
+        .unwrap();
+        let mut it = worlds.into_iter();
+        let w0 = it.next().unwrap();
+        let keep_peer_alive = it.next().unwrap();
+        let t = Tensor::from_f32(&[4], &[1.0, 2.0, 3.0, 4.0]);
+        for k in 0..60u64 {
+            w0.send(t.clone(), 1, k).unwrap();
+        }
+        drop(keep_peer_alive);
+        fault_registry()
+            .take_events()
+            .into_iter()
+            .map(|e| e.canon())
+            .collect()
+    };
+
+    let first = run(&uniq("gdet"));
+    let second = run(&uniq("gdet"));
+    assert!(
+        !first.is_empty(),
+        "prob 0.35 + 0.2 over 60 sends must inject something"
+    );
+    assert_eq!(
+        first, second,
+        "same MW_FAULT_SEED + plan must reproduce the identical injection sequence"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Soak: nightly-style randomized gray-fault rounds (kept out of the
+// default run; the CI chaos job runs it fail-soft with a single seed
+// and a longer duration via MW_CHAOS_SOAK_MS).
+// ---------------------------------------------------------------------
+#[test]
+#[ignore = "chaos soak — run explicitly (CI nightly-style fail-soft step)"]
+fn soak_randomized_gray_faults_never_lose_requests() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+    let _dump = EventDump("soak");
+    let soak_ms: u64 = std::env::var("MW_CHAOS_SOAK_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5_000);
+
+    let topo = Topology::pipeline(&uniq("gsoak"), &[2], base_port());
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        WorldOptions::tcp()
+            .with_init_timeout(Duration::from_secs(120))
+            .with_fault_plan(FaultPlan::empty(seed())),
+        ScalingPolicy { recover: true, ..Default::default() },
+        &ServingConfig { retry_timeout_ms: 300, ..gray_cfg() },
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap();
+    let mut rng = multiworld::util::prng::Rng::new(seed());
+    let mut gen = RequestGen::new(17, SEQ_LEN, VOCAB, None);
+    let t0 = Instant::now();
+    let mut round = 0u64;
+    while t0.elapsed() < Duration::from_millis(soak_ms) {
+        round += 1;
+        let replica = rng.below(2);
+        let pattern = EdgePattern::new(&format!("*-in-s0r{replica}*"), Some(0), Some(1));
+        let rule = match rng.below(3) {
+            0 => FaultRule::always(pattern, FaultKind::Delay { ms: 10 }).with_count(20),
+            1 => FaultRule::always(pattern, FaultKind::Drop).with_count(2),
+            _ => FaultRule::always(pattern, FaultKind::Partition),
+        };
+        let kind = rule.kind;
+        let id = cluster.faults().inject(rule);
+        let total = BATCH * 4;
+        let report = cluster
+            .leader
+            .serve(gen.take(total), None, Duration::from_secs(60));
+        cluster.faults().heal(id);
+        assert_eq!(
+            report.completed, total,
+            "soak round {round} ({kind:?}) lost requests (retries: {})",
+            report.retries
+        );
+    }
+    assert!(round >= 1, "soak must run at least one round");
+    cluster.shutdown();
+}
+
+/// The dead-shard path still works with the chaos layer wrapped around
+/// every link (the injector must be transparent to clean kills): kill a
+/// shard mid-traffic under an installed-but-empty plan and require the
+/// classic exactly-one-recovery outcome.
+#[test]
+fn clean_kill_still_recovers_exactly_once_under_wrapped_links() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+    let _dump = EventDump("clean_kill_wrapped");
+
+    let topo = Topology::pipeline_tp(&uniq("gkill"), &[1, 2], &[1, 2], base_port());
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        WorldOptions::tcp()
+            .with_init_timeout(Duration::from_secs(120))
+            .with_fault_plan(FaultPlan::empty(seed())),
+        ScalingPolicy { recover: true, ..Default::default() },
+        &gray_cfg(),
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap();
+    let victim = NodeId::Worker { stage: 1, replica: 1, shard: 1 };
+
+    let total = BATCH * 8;
+    let mut gen = RequestGen::new(19, SEQ_LEN, VOCAB, None);
+    let requests = gen.take(total);
+    let cluster_ref = &cluster;
+    let report = std::thread::scope(|s| {
+        let killer = s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            assert!(cluster_ref.kill(victim), "victim shard must be alive to kill");
+        });
+        let report = cluster_ref
+            .leader
+            .serve(requests, Some(300.0), Duration::from_secs(90));
+        killer.join().unwrap();
+        report
+    });
+    assert_eq!(report.completed, total, "no request loss (retries: {})", report.retries);
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let rec = recoveries(&cluster);
+        if !rec.is_empty() {
+            assert_eq!(
+                rec,
+                vec![Action::Recovered { dead: victim, replacement: victim }],
+                "exactly one recovery, of the dead shard itself"
+            );
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "controller never recovered the shard under wrapped links"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    cluster.shutdown();
+}
