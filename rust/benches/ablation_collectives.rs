@@ -1,32 +1,49 @@
-//! Ablation — flat (root star) vs ring (pipelined) algorithms for all
-//! six collectives, across world sizes and payload sizes, on the
-//! multi-host topology: TCP with a **per-rank** 10 Gbps NIC
-//! (`WorldOptions::tcp_per_rank_limited`), so the flat root's NIC is the
-//! bottleneck the rings remove or shrink.
+//! Ablation — flat (root star) vs ring (pipelined) vs hier (two-level
+//! topology-aware) algorithms for the collectives.
 //!
-//! Expected shape: at world size 2 the two algorithms are within noise
-//! (rings degenerate to one exchange); from world size 4 upward the
-//! bandwidth-bound rings (all_reduce, broadcast, reduce) win on large
-//! payloads (flat moves ~N×S through the root's NIC, the rings ~S–2S
-//! through every NIC concurrently), while the circulation rings
-//! (gather, all_gather, scatter) trade root-NIC serialization for hop
-//! pipelining. `Auto` follows the measured crossover per op.
+//! Two grids:
 //!
-//! Checksums of both paths are asserted identical per cell
+//! * **Single-host grid** — all six collectives, flat vs ring, TCP with
+//!   a **per-rank** 10 Gbps NIC (`WorldOptions::tcp_per_rank_limited`),
+//!   so the flat root's NIC is the bottleneck the rings remove or
+//!   shrink. This is the historical flat↔ring crossover surface the
+//!   `RING_MIN_WORLD`/`RING_MIN_BYTES` policy defaults are tuned
+//!   against (hier is not selectable on one host; its column is blank).
+//! * **Multi-host scale sweep** — the bandwidth-bound hier ops at
+//!   64–256-rank worlds placed on simulated hosts via a blocked
+//!   `MW_HOSTMAP` layout, every rank's traffic riding the per-host-pair
+//!   mux (`with_intra_over_mux`, so the sweep also measures the shared
+//!   connections, not per-world sockets), cross-host bytes squeezed
+//!   through one shared 10 Gbps NIC per host. The ring column goes
+//!   blank past `RING_MAX_WORLD` (128) — the whole-world ring is not
+//!   selectable there and hier is the only non-flat option.
+//!
+//! Expected shape: parity at world 2; from world 4 the bandwidth-bound
+//! rings win large payloads on the single-host grid; on the sweep the
+//! hier algorithm beats the flat star everywhere and beats the
+//! whole-world ring from ~16 ranks × 2 hosts upward (2(H-1) leader
+//! steps instead of 2(N-1) full-ring steps, intra-host hops off the
+//! NIC), which is the knee `Auto` encodes as "hier once the world
+//! spans hosts and clears the byte threshold".
+//!
+//! Checksums of all measured paths are asserted identical per cell
 //! (integer-valued tensors make f32 summation order-independent).
 //!
 //! The CSV (`target/bench-results/ablation_collectives.csv`) is
-//! machine-readable — `op,world,bytes,flat_ms,ring_ms,speedup,auto` —
-//! and consumed by CI's `crossover-matrix` job via
-//! `tools/check_crossover.py`, which warns when the measured knee
-//! disagrees with the configured `RING_MIN_WORLD`/`RING_MIN_BYTES`
-//! defaults.
+//! machine-readable — `op,world,hosts,bytes,flat_ms,ring_ms,hier_ms,
+//! speedup_ring,speedup_hier,auto` (blank cell = algorithm not
+//! selectable there) — and consumed by CI's `crossover-matrix` job via
+//! `tools/check_crossover.py`, which warns when a measured knee
+//! disagrees with the configured policy-table defaults. A compact
+//! trajectory artifact (`BENCH_collectives.json`) rides along for
+//! cross-commit comparison.
 
-use multiworld::bench::Table;
-use multiworld::config::{CollAlgo, CollOp, CollPolicy};
+use multiworld::bench::{write_json, Table};
+use multiworld::config::{AlgoDecision, CollAlgo, CollOp, CollPolicy};
 use multiworld::mwccl::transport::ratelimit::RATE_10GBPS;
 use multiworld::mwccl::{Rendezvous, ReduceOp, World, WorldOptions};
 use multiworld::tensor::Tensor;
+use multiworld::util::json::Json;
 use std::time::{Duration, Instant};
 
 fn uniq(name: &str) -> String {
@@ -49,7 +66,7 @@ fn int_tensor(elems: usize, rank: usize) -> Tensor {
 
 /// Prebuilt per-rank input for one op — constructed once per world,
 /// *outside* the timed loop, so the O(elems) tensor fill never pollutes
-/// the flat/ring columns (iterations only pay a memcpy clone, like the
+/// the timing columns (iterations only pay a memcpy clone, like the
 /// tensor the caller would already hold).
 enum OpInput {
     /// Every-rank contribution (all_reduce, reduce, gather, all_gather).
@@ -102,11 +119,25 @@ fn run_once(op: CollOp, w: &World, input: &OpInput) -> u64 {
     }
 }
 
-/// Mean seconds per op (slowest rank) plus the combined result checksum.
-fn time_op(op: CollOp, size: usize, elems: usize, iters: usize, algo: CollAlgo) -> (f64, u64) {
-    let opts = WorldOptions::tcp_per_rank_limited(RATE_10GBPS)
+/// Mean seconds per op (slowest rank) plus the combined result
+/// checksum. `layout = None` is the single-host grid (plain per-rank
+/// NICs); `Some(spec)` places the world on simulated hosts, with all
+/// traffic — intra-host included — over the shared host-pair mux and
+/// cross-host bytes through one 10 Gbps NIC per host.
+fn time_op(
+    op: CollOp,
+    size: usize,
+    elems: usize,
+    iters: usize,
+    algo: CollAlgo,
+    layout: Option<&str>,
+) -> (f64, u64) {
+    let mut opts = WorldOptions::tcp_per_rank_limited(RATE_10GBPS)
         .with_coll_algo(algo)
-        .with_op_timeout(Duration::from_secs(120));
+        .with_op_timeout(Duration::from_secs(300));
+    if let Some(spec) = layout {
+        opts = opts.with_hostmap(spec).with_intra_over_mux();
+    }
     let worlds = Rendezvous::single_process(&uniq(op.name()), size, opts).unwrap();
     let handles: Vec<_> = worlds
         .into_iter()
@@ -134,6 +165,23 @@ fn time_op(op: CollOp, size: usize, elems: usize, iters: usize, algo: CollAlgo) 
         checksum = checksum.wrapping_add(cs);
     }
     (worst / iters as f64, checksum)
+}
+
+fn decision_name(d: AlgoDecision) -> &'static str {
+    match d {
+        AlgoDecision::Flat => "flat",
+        AlgoDecision::Ring => "ring",
+        AlgoDecision::Hier => "hier",
+        AlgoDecision::Negotiate => "negotiate",
+    }
+}
+
+fn ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+fn speedup(base: f64, other: Option<f64>) -> String {
+    other.map(|o| format!("{:.2}", base / o)).unwrap_or_default()
 }
 
 /// The negotiated small-message fast path, printed so the CI quick
@@ -171,9 +219,53 @@ fn main() {
     let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
     let policy = CollPolicy::from_env();
     let mut table = Table::new(
-        "Ablation — flat vs ring, all six collectives, tcp with per-rank 10 Gbps NICs",
-        &["op", "world", "bytes", "flat_ms", "ring_ms", "speedup", "auto"],
+        "Ablation — flat vs ring vs hier, tcp, 10 Gbps NICs (per rank on \
+         the single-host grid, per host on the multi-host sweep)",
+        &[
+            "op", "world", "hosts", "bytes", "flat_ms", "ring_ms", "hier_ms", "speedup_ring",
+            "speedup_hier", "auto",
+        ],
     );
+    let mut traj: Vec<Json> = Vec::new();
+    let mut cell = |table: &mut Table,
+                    op: CollOp,
+                    world: usize,
+                    hosts: usize,
+                    bytes: usize,
+                    flat: f64,
+                    ring: Option<f64>,
+                    hier: Option<f64>| {
+        let auto = decision_name(policy.decide(op, world, hosts, Some(bytes)));
+        table.row(&[
+            op.name().to_string(),
+            world.to_string(),
+            hosts.to_string(),
+            bytes.to_string(),
+            ms(flat),
+            ring.map(ms).unwrap_or_default(),
+            hier.map(ms).unwrap_or_default(),
+            speedup(flat, ring),
+            speedup(flat, hier),
+            auto.to_string(),
+        ]);
+        let mut pairs = vec![
+            ("op", Json::str(op.name())),
+            ("world", Json::num(world as f64)),
+            ("hosts", Json::num(hosts as f64)),
+            ("bytes", Json::num(bytes as f64)),
+            ("flat_ms", Json::num(flat * 1e3)),
+        ];
+        if let Some(r) = ring {
+            pairs.push(("ring_ms", Json::num(r * 1e3)));
+        }
+        if let Some(h) = hier {
+            pairs.push(("hier_ms", Json::num(h * 1e3)));
+        }
+        pairs.push(("auto", Json::str(auto)));
+        traj.push(Json::obj(pairs));
+    };
+
+    // ---- single-host grid: the flat <-> ring crossover surface ----
     let sizes: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
     let elem_counts: &[usize] = if quick {
         &[65_536, 1_048_576]
@@ -184,33 +276,85 @@ fn main() {
         for &world in sizes {
             for &elems in elem_counts {
                 let iters = if elems >= 1_048_576 { 3 } else { 5 };
-                let (flat_s, flat_cs) = time_op(op, world, elems, iters, CollAlgo::Flat);
-                let (ring_s, ring_cs) = time_op(op, world, elems, iters, CollAlgo::Ring);
+                let (flat_s, flat_cs) = time_op(op, world, elems, iters, CollAlgo::Flat, None);
+                let (ring_s, ring_cs) = time_op(op, world, elems, iters, CollAlgo::Ring, None);
                 assert_eq!(
                     flat_cs,
                     ring_cs,
                     "flat and ring {} disagree at world={world} elems={elems}",
                     op.name()
                 );
-                let bytes = elems * 4;
-                let auto = if policy.ring_for_bytes(op, world, bytes) { "ring" } else { "flat" };
-                table.row(&[
-                    op.name().to_string(),
-                    world.to_string(),
-                    bytes.to_string(),
-                    format!("{:.3}", flat_s * 1e3),
-                    format!("{:.3}", ring_s * 1e3),
-                    format!("{:.2}", flat_s / ring_s),
-                    auto.to_string(),
-                ]);
+                cell(&mut table, op, world, 1, elems * 4, flat_s, Some(ring_s), None);
             }
         }
     }
+
+    // ---- multi-host scale sweep: the ring <-> hier crossover ----
+    // Blocked layouts (`<H>x<L>`) keep ring neighbours mostly
+    // intra-host, so the whole-world ring gets its best case and the
+    // hier win measured here is the honest one. Past RING_MAX_WORLD the
+    // ring cell is blank: the policy cannot select it there.
+    let sweep_worlds: &[usize] = if quick { &[16, 64] } else { &[16, 64, 128, 256] };
+    let sweep_elems: &[usize] = if quick {
+        &[262_144]
+    } else {
+        &[262_144, 1_048_576]
+    };
+    let sweep_ops: &[CollOp] = if quick {
+        &[CollOp::AllReduce]
+    } else {
+        &[CollOp::AllReduce, CollOp::Broadcast]
+    };
+    for &op in sweep_ops {
+        for &world in sweep_worlds {
+            let hosts = (world / 16).max(2);
+            let layout = format!("{hosts}x{}", world / hosts);
+            for &elems in sweep_elems {
+                let iters = 2;
+                let (flat_s, flat_cs) =
+                    time_op(op, world, elems, iters, CollAlgo::Flat, Some(&layout));
+                let (hier_s, hier_cs) =
+                    time_op(op, world, elems, iters, CollAlgo::Hier, Some(&layout));
+                assert_eq!(
+                    flat_cs,
+                    hier_cs,
+                    "flat and hier {} disagree at world={world} layout={layout}",
+                    op.name()
+                );
+                let ring = if world <= CollAlgo::RING_MAX_WORLD {
+                    let (ring_s, ring_cs) =
+                        time_op(op, world, elems, iters, CollAlgo::Ring, Some(&layout));
+                    assert_eq!(
+                        flat_cs,
+                        ring_cs,
+                        "flat and ring {} disagree at world={world} layout={layout}",
+                        op.name()
+                    );
+                    Some(ring_s)
+                } else {
+                    None
+                };
+                cell(&mut table, op, world, hosts, elems * 4, flat_s, ring, Some(hier_s));
+            }
+        }
+    }
+
     table.emit("ablation_collectives");
+    write_json(
+        "BENCH_collectives",
+        &Json::obj(vec![
+            ("bench", Json::str("ablation_collectives")),
+            ("quick", Json::num(if quick { 1.0 } else { 0.0 })),
+            ("cells", Json::arr(traj)),
+        ]),
+    );
     show_auto_prologue();
     println!(
         "paper shape: parity at world 2; bandwidth-bound rings (all_reduce, \
          broadcast, reduce) win on >=4MB payloads at world >=4 (root NIC is \
-         the flat bottleneck); Auto crossover per the MW_RING_MIN_* policy table"
+         the flat bottleneck); hier beats the whole-world ring from ~16 ranks \
+         x 2 hosts and is the only non-flat choice past {} ranks; Auto \
+         crossovers per the MW_RING_MIN_* policy table",
+        CollAlgo::RING_MAX_WORLD
     );
 }

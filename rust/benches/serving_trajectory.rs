@@ -1,0 +1,112 @@
+//! Serving trajectory artifact (`BENCH_serving.json`): the headline
+//! serving numbers CI uploads on every push so regressions in
+//! throughput, tail latency, or recovery time are visible across
+//! commits — built from the same `bench::scenarios` the paper-figure
+//! benches and integration tests use:
+//!
+//! * `tp_pipeline` — 2-stage × tp=2 forward-only pipeline, closed-loop:
+//!   end-to-end throughput and p99 through the full leader/batching/
+//!   collective stack;
+//! * `autoscale` — open-loop burst curve through the always-on ingress
+//!   with the closed-loop autoscaler live: completion accounting, p99,
+//!   and the scale-out/in action counts;
+//! * `chaos` — gray partition + hard replica kill under traffic:
+//!   zero-loss completion, retry count, and MTTR (kill → controller's
+//!   `Recovered` action).
+
+use multiworld::bench::scenarios::{
+    autoscale_serve, chaos_serve, tp_pipeline_serve, ArrivalCurve,
+};
+use multiworld::bench::write_json;
+use multiworld::mwccl::{FaultPlan, WorldOptions};
+use multiworld::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
+    let opts = || WorldOptions::shm().with_init_timeout(Duration::from_secs(120));
+    // Port ranges spaced the same way the integration tests space
+    // theirs, so a bench run and a test run on one box don't collide.
+    let jitter = (std::process::id() % 80) as u16 * 24;
+
+    let n_requests = if quick { 32 } else { 128 };
+    let tp = tp_pipeline_serve(2, 1, 2, n_requests, opts(), 46_000 + jitter)
+        .expect("tp_pipeline_serve");
+    assert_eq!(tp.completed, n_requests, "tp pipeline must answer every request");
+    println!(
+        "tp_pipeline: {} reqs, {:.1} req/s, p99 {:.2} ms",
+        tp.completed, tp.throughput_rps, tp.p99_ms
+    );
+
+    let duration = Duration::from_millis(if quick { 1_500 } else { 6_000 });
+    let auto = autoscale_serve(
+        ArrivalCurve::Burst { high_rps: 300.0, low_rps: 20.0, burst_frac: 0.5 },
+        duration,
+        opts(),
+        48_200 + jitter,
+    )
+    .expect("autoscale_serve");
+    assert_eq!(
+        auto.completed + auto.rejected + auto.dropped,
+        auto.submitted,
+        "every submitted request resolves to exactly one outcome"
+    );
+    println!(
+        "autoscale: {}/{} completed, p99 {:.2} ms, {} scale-outs / {} scale-ins",
+        auto.completed, auto.submitted, auto.p99_ms, auto.scaled_out, auto.scaled_in
+    );
+
+    // The chaos scenario uses tcp (FaultLink wraps every link kind, but
+    // the partition under test is the leader's forward edge).
+    let n_chaos = if quick { 24 } else { 64 };
+    let chaos = chaos_serve(
+        FaultPlan::empty(7),
+        n_chaos,
+        WorldOptions::tcp().with_init_timeout(Duration::from_secs(120)),
+        50_400 + jitter,
+    )
+    .expect("chaos_serve");
+    assert_eq!(chaos.completed, n_chaos, "zero request loss through partition + kill");
+    println!(
+        "chaos: {} reqs, {} retries, {} recovered, MTTR {:.1} ms",
+        chaos.completed, chaos.retries, chaos.recovered, chaos.mttr_ms
+    );
+
+    write_json(
+        "BENCH_serving",
+        &Json::obj(vec![
+            ("bench", Json::str("serving_trajectory")),
+            ("quick", Json::num(if quick { 1.0 } else { 0.0 })),
+            (
+                "tp_pipeline",
+                Json::obj(vec![
+                    ("requests", Json::num(tp.completed as f64)),
+                    ("throughput_rps", Json::num(tp.throughput_rps)),
+                    ("p50_ms", Json::num(tp.p50_ms)),
+                    ("p99_ms", Json::num(tp.p99_ms)),
+                ]),
+            ),
+            (
+                "autoscale",
+                Json::obj(vec![
+                    ("submitted", Json::num(auto.submitted as f64)),
+                    ("completed", Json::num(auto.completed as f64)),
+                    ("rejected", Json::num(auto.rejected as f64)),
+                    ("dropped", Json::num(auto.dropped as f64)),
+                    ("p99_ms", Json::num(auto.p99_ms)),
+                    ("scaled_out", Json::num(auto.scaled_out as f64)),
+                    ("scaled_in", Json::num(auto.scaled_in as f64)),
+                ]),
+            ),
+            (
+                "chaos",
+                Json::obj(vec![
+                    ("requests", Json::num(chaos.completed as f64)),
+                    ("retries", Json::num(chaos.retries as f64)),
+                    ("recovered", Json::num(chaos.recovered as f64)),
+                    ("mttr_ms", Json::num(chaos.mttr_ms)),
+                ]),
+            ),
+        ]),
+    );
+}

@@ -133,6 +133,18 @@ pub fn results_dir() -> PathBuf {
     PathBuf::from("target/bench-results")
 }
 
+/// Persist a machine-readable trajectory artifact (the `BENCH_*.json`
+/// files CI uploads so collective/serving numbers are comparable
+/// across commits).
+pub fn write_json(name: &str, json: &crate::util::json::Json) {
+    let dir = results_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, json.to_string()).is_ok() {
+        println!("[json] {}", path.display());
+    }
+}
+
 /// Persist an arbitrary CSV (used by the timeline figures).
 pub fn write_csv(name: &str, content: &str) {
     let dir = results_dir();

@@ -379,6 +379,10 @@ pub struct ChaosReport {
     pub retries: u64,
     /// `Recovered` actions the controller logged.
     pub recovered: usize,
+    /// Mean time to repair: wall-clock ms from the scripted replica
+    /// kill to the controller's first `Recovered` action (0 when the
+    /// run never recovered — `recovered == 0` flags that case).
+    pub mttr_ms: f64,
     /// `fault.injected.<kind>` counter deltas over the run (kinds with
     /// at least one injection).
     pub injected: Vec<(String, u64)>,
@@ -430,8 +434,8 @@ pub fn chaos_serve(
     )?;
     let victim = crate::serving::topology::NodeId::worker(0, 1);
     let cluster_ref = &cluster;
-    let report = std::thread::scope(|s| {
-        s.spawn(move || {
+    let (report, mttr_ms) = std::thread::scope(|s| {
+        let chaos = s.spawn(move || {
             // Phase 1 (gray): one-way partition of replica 0's forward
             // edge — the leader's sends vanish silently.
             std::thread::sleep(Duration::from_millis(50));
@@ -442,15 +446,44 @@ pub fn chaos_serve(
             // Phase 2 (hard): kill replica 1 mid-traffic — the clean
             // death path the gray faults must compose with.
             std::thread::sleep(Duration::from_millis(100));
+            let recovered_count = || {
+                cluster_ref
+                    .controller
+                    .actions()
+                    .iter()
+                    .filter(|a| matches!(a, Action::Recovered { .. }))
+                    .count()
+            };
+            let recovered_before = recovered_count();
+            let killed_at = Instant::now();
             cluster_ref.kill(victim);
-            // Phase 3: the partition heals.
-            std::thread::sleep(Duration::from_millis(200));
-            cluster_ref.faults().heal(id);
+            // Phase 3: the partition heals 200 ms after the kill. The
+            // same loop watches for the controller's Recovered action so
+            // MTTR is sampled at ~2 ms resolution without perturbing the
+            // scripted heal timing.
+            let deadline = killed_at + Duration::from_secs(60);
+            let mut mttr_ms = 0.0f64;
+            let mut healed = false;
+            while Instant::now() < deadline && (mttr_ms == 0.0 || !healed) {
+                if !healed && killed_at.elapsed() >= Duration::from_millis(200) {
+                    cluster_ref.faults().heal(id);
+                    healed = true;
+                }
+                if mttr_ms == 0.0 && recovered_count() > recovered_before {
+                    mttr_ms = killed_at.elapsed().as_secs_f64() * 1e3;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            if !healed {
+                cluster_ref.faults().heal(id);
+            }
+            mttr_ms
         });
         let mut gen = RequestGen::new(0xC8A05, SEQ_LEN, VOCAB, None);
-        cluster_ref
+        let report = cluster_ref
             .leader
-            .serve(gen.take(n_requests), Some(80.0), Duration::from_secs(120))
+            .serve(gen.take(n_requests), Some(80.0), Duration::from_secs(120));
+        (report, chaos.join().unwrap())
     });
     let recovered = cluster
         .controller
@@ -471,6 +504,7 @@ pub fn chaos_serve(
         completed: report.completed,
         retries: report.retries,
         recovered,
+        mttr_ms,
         injected,
     })
 }
@@ -580,6 +614,7 @@ mod tests {
             "the partition must demonstrably fire: {report:?}"
         );
         assert!(report.recovered >= 1, "the killed replica recovers: {report:?}");
+        assert!(report.mttr_ms > 0.0, "MTTR is measured when recovery happens: {report:?}");
     }
 
     #[test]

@@ -16,11 +16,20 @@ use std::path::{Path, PathBuf};
 /// * `Ring` — bandwidth-optimal pipelined ring: each rank sends
 ///   `O(size / world)` bytes per NIC instead of the root sending
 ///   `(world-1) × size`, so large tensors in large worlds scale.
+/// * `Hier` — two-level hierarchical family for multi-host worlds
+///   (`MW_HOSTMAP` / `WorldOptions::with_hostmap`): intra-host
+///   fan-in/fan-out to a per-host leader over the cheap local path,
+///   plus a leader-only inter-host exchange reusing the ring machinery,
+///   so each host's NIC carries `O(size)` bytes instead of
+///   `O(local_ranks × size)`. Exists for `broadcast`, `reduce`,
+///   `all_reduce` and `all_gather`; forced `Hier` on the other ops (or
+///   on a single-host world, where there is no hierarchy) degenerates
+///   to the ring, and past [`CollAlgo::RING_MAX_WORLD`] *hosts* to flat.
 /// * `Auto` — per-op choice driven by the [`CollPolicy`] threshold
-///   table: ring once the world is big enough *and* the message is big
-///   enough to amortize the extra hops, flat otherwise. Where only the
-///   root knows the payload size, the root resolves the choice and
-///   announces it in a flat-sent prologue frame (see
+///   table: hier once the world spans multiple hosts and clears the
+///   thresholds, ring when big enough on one host, flat otherwise.
+///   Where only the root knows the payload size, the root resolves the
+///   choice and announces it in a flat-sent prologue frame (see
 ///   [`CollPolicy::decide`] returning [`AlgoDecision::Negotiate`]).
 ///
 /// The choice must be identical on every rank of a world (the wire tags
@@ -31,6 +40,7 @@ use std::path::{Path, PathBuf};
 pub enum CollAlgo {
     Flat,
     Ring,
+    Hier,
     #[default]
     Auto,
 }
@@ -76,6 +86,14 @@ impl CollOp {
         }
     }
 
+    /// Whether a hierarchical (intra-host star + leader-ring) variant of
+    /// this op exists. Gather and scatter keep flat/ring only: their
+    /// payloads are per-rank-distinct, so a leader relay saves no
+    /// cross-host bytes over the plain ring.
+    pub fn has_hier(self) -> bool {
+        !matches!(self, CollOp::Gather | CollOp::Scatter)
+    }
+
     /// Environment-variable suffix for per-op overrides
     /// (`MW_RING_MIN_BYTES_ALL_REDUCE`, …).
     fn env_suffix(self) -> &'static str {
@@ -113,10 +131,15 @@ impl Default for RingThreshold {
 pub enum AlgoDecision {
     Flat,
     Ring,
+    /// Two-level hierarchical algorithm: intra-host star to a per-host
+    /// leader, leader-only inter-host ring (see [`CollAlgo::Hier`]).
+    Hier,
     /// The size needed for an `Auto` choice is only known at the op's
-    /// root: the root must resolve flat-vs-ring from the real byte count
-    /// and announce the verdict in a flat-sent prologue frame before the
-    /// data moves.
+    /// root: the root must resolve the algorithm from the real byte
+    /// count and announce the verdict in a flat-sent prologue frame
+    /// before the data moves. Only returned when a non-flat algorithm
+    /// is actually selectable for *some* byte count — a row that can
+    /// only ever pick flat skips the prologue round entirely.
     Negotiate,
 }
 
@@ -198,33 +221,82 @@ impl CollPolicy {
 
     /// Resolve the algorithm for one collective invocation.
     ///
-    /// `bytes` is the payload size when the caller's rank knows it *and*
-    /// every rank is guaranteed to compute the same value (all_reduce and
-    /// reduce, where the CCL contract makes all contributions
-    /// identically shaped); `None` when only the op's root can know
-    /// (broadcast, gather, all_gather, scatter) — in which case an
-    /// `Auto` world big enough to ring returns
-    /// [`AlgoDecision::Negotiate`] and the root settles it over a
-    /// prologue frame. Broadcast/scatter roots resolve from the *real*
-    /// byte count; gather/all_gather roots estimate it as their own
-    /// contribution × N, clamped from below by the largest contribution
-    /// observed on any earlier invocation of the same op on the world,
-    /// so skewed per-rank sizes can mis-pick flat at most once per
-    /// world (the clamp warms up on the first round).
-    pub fn decide(&self, op: CollOp, world_size: usize, bytes: Option<usize>) -> AlgoDecision {
-        if world_size < 2 || world_size > CollAlgo::RING_MAX_WORLD {
+    /// `n_hosts` is the number of distinct hosts the world's ranks are
+    /// placed on ([`crate::mwccl::hostmap::HostMap::n_hosts`]; 1 when no
+    /// host map is configured). `bytes` is the payload size when the
+    /// caller's rank knows it *and* every rank is guaranteed to compute
+    /// the same value (all_reduce and reduce, where the CCL contract
+    /// makes all contributions identically shaped); `None` when only
+    /// the op's root can know (broadcast, gather, all_gather, scatter)
+    /// — in which case an `Auto` world whose row can select a non-flat
+    /// algorithm returns [`AlgoDecision::Negotiate`] and the root
+    /// settles it over a prologue frame. Broadcast/scatter roots
+    /// resolve from the *real* byte count; gather/all_gather roots
+    /// estimate it as their own contribution × N, clamped from below by
+    /// the largest contribution observed on any earlier invocation of
+    /// the same op on the world, so skewed per-rank sizes can mis-pick
+    /// flat at most once per world (the clamp warms up on the first
+    /// round).
+    ///
+    /// `Auto` picks `Hier` only when the world actually spans multiple
+    /// hosts (and the op has a hierarchical variant); the thresholds
+    /// gating ring-vs-flat gate hier identically. The ring's
+    /// [`CollAlgo::RING_MAX_WORLD`] rank cap applies to the *leader*
+    /// ring only under hier, so multi-host worlds stay non-flat past
+    /// 128 ranks as long as the host count fits.
+    pub fn decide(
+        &self,
+        op: CollOp,
+        world_size: usize,
+        n_hosts: usize,
+        bytes: Option<usize>,
+    ) -> AlgoDecision {
+        if world_size < 2 {
             return AlgoDecision::Flat;
         }
+        let ring_ok = world_size <= CollAlgo::RING_MAX_WORLD;
+        let hier_ok = op.has_hier() && n_hosts > 1 && n_hosts <= CollAlgo::RING_MAX_WORLD;
         match self.algo {
             CollAlgo::Flat => AlgoDecision::Flat,
-            CollAlgo::Ring => AlgoDecision::Ring,
+            CollAlgo::Ring => {
+                if ring_ok {
+                    AlgoDecision::Ring
+                } else {
+                    AlgoDecision::Flat
+                }
+            }
+            CollAlgo::Hier => {
+                // Forced hier degenerates gracefully: single-host worlds
+                // and ops without a hierarchical variant fall back to the
+                // ring (then to flat past the ring's rank cap).
+                if hier_ok {
+                    AlgoDecision::Hier
+                } else if ring_ok {
+                    AlgoDecision::Ring
+                } else {
+                    AlgoDecision::Flat
+                }
+            }
             CollAlgo::Auto => {
                 let th = self.threshold(op);
                 if world_size < th.min_world {
                     return AlgoDecision::Flat;
                 }
+                if !ring_ok && !hier_ok {
+                    // No non-flat algorithm is selectable for any byte
+                    // count: never negotiate (the prologue round would
+                    // be pure overhead — see the regression test in
+                    // tests/collectives_scale.rs).
+                    return AlgoDecision::Flat;
+                }
                 match bytes {
-                    Some(b) if b >= th.min_bytes => AlgoDecision::Ring,
+                    Some(b) if b >= th.min_bytes => {
+                        if hier_ok {
+                            AlgoDecision::Hier
+                        } else {
+                            AlgoDecision::Ring
+                        }
+                    }
                     Some(_) => AlgoDecision::Flat,
                     None => AlgoDecision::Negotiate,
                 }
@@ -233,10 +305,16 @@ impl CollPolicy {
     }
 
     /// Root-side resolution of [`AlgoDecision::Negotiate`]: the final
-    /// flat-vs-ring verdict once the real (or root-estimated) byte count
-    /// is in hand. `true` means ring.
-    pub fn ring_for_bytes(&self, op: CollOp, world_size: usize, bytes: usize) -> bool {
-        matches!(self.decide(op, world_size, Some(bytes)), AlgoDecision::Ring)
+    /// verdict once the real (or root-estimated) byte count is in hand.
+    /// Never returns `Negotiate`.
+    pub fn resolve_bytes(
+        &self,
+        op: CollOp,
+        world_size: usize,
+        n_hosts: usize,
+        bytes: usize,
+    ) -> AlgoDecision {
+        self.decide(op, world_size, n_hosts, Some(bytes))
     }
 }
 
@@ -258,6 +336,7 @@ impl CollAlgo {
         match s.to_ascii_lowercase().as_str() {
             "flat" => Some(CollAlgo::Flat),
             "ring" => Some(CollAlgo::Ring),
+            "hier" => Some(CollAlgo::Hier),
             "auto" => Some(CollAlgo::Auto),
             _ => None,
         }
@@ -580,6 +659,7 @@ mod tests {
     fn coll_algo_parse() {
         assert_eq!(CollAlgo::from_name("ring"), Some(CollAlgo::Ring));
         assert_eq!(CollAlgo::from_name("FLAT"), Some(CollAlgo::Flat));
+        assert_eq!(CollAlgo::from_name("hier"), Some(CollAlgo::Hier));
         assert_eq!(CollAlgo::from_name("auto"), Some(CollAlgo::Auto));
         assert_eq!(CollAlgo::from_name("star"), None);
     }
@@ -588,26 +668,56 @@ mod tests {
     fn coll_policy_decides_per_op() {
         let p = CollPolicy::default();
         // Known-size ops decide locally on every rank.
-        assert_eq!(p.decide(CollOp::AllReduce, 8, Some(4 << 20)), AlgoDecision::Ring);
-        assert_eq!(p.decide(CollOp::AllReduce, 8, Some(1024)), AlgoDecision::Flat);
-        assert_eq!(p.decide(CollOp::Reduce, 4, Some(CollAlgo::RING_MIN_BYTES)), AlgoDecision::Ring);
+        assert_eq!(p.decide(CollOp::AllReduce, 8, 1, Some(4 << 20)), AlgoDecision::Ring);
+        assert_eq!(p.decide(CollOp::AllReduce, 8, 1, Some(1024)), AlgoDecision::Flat);
+        assert_eq!(
+            p.decide(CollOp::Reduce, 4, 1, Some(CollAlgo::RING_MIN_BYTES)),
+            AlgoDecision::Ring
+        );
+        // Multi-host placement upgrades the big-payload pick to hier…
+        assert_eq!(p.decide(CollOp::AllReduce, 8, 2, Some(4 << 20)), AlgoDecision::Hier);
+        // …but never below the byte threshold, and never for ops without
+        // a hierarchical variant.
+        assert_eq!(p.decide(CollOp::AllReduce, 8, 2, Some(1024)), AlgoDecision::Flat);
+        assert_eq!(p.decide(CollOp::Gather, 8, 2, None), AlgoDecision::Negotiate);
         // Root-only-size ops negotiate once the world is ring-eligible…
-        assert_eq!(p.decide(CollOp::Broadcast, 4, None), AlgoDecision::Negotiate);
-        assert_eq!(p.decide(CollOp::AllGather, 8, None), AlgoDecision::Negotiate);
-        assert_eq!(p.decide(CollOp::Scatter, 8, None), AlgoDecision::Negotiate);
+        assert_eq!(p.decide(CollOp::Broadcast, 4, 1, None), AlgoDecision::Negotiate);
+        assert_eq!(p.decide(CollOp::AllGather, 8, 1, None), AlgoDecision::Negotiate);
+        assert_eq!(p.decide(CollOp::Scatter, 8, 1, None), AlgoDecision::Negotiate);
         // …and stay flat below the world threshold with no prologue.
-        assert_eq!(p.decide(CollOp::Broadcast, 3, None), AlgoDecision::Flat);
+        assert_eq!(p.decide(CollOp::Broadcast, 3, 1, None), AlgoDecision::Flat);
+        // Past the ring rank cap, a multi-host world still negotiates
+        // (hier is selectable); a single-host one cannot pick anything
+        // but flat, so it must not pay the prologue round.
+        assert_eq!(p.decide(CollOp::Broadcast, 200, 4, None), AlgoDecision::Negotiate);
+        assert_eq!(p.decide(CollOp::Broadcast, 200, 1, None), AlgoDecision::Flat);
+        assert_eq!(p.decide(CollOp::Gather, 200, 4, None), AlgoDecision::Flat);
         // Forced selectors never negotiate.
         let ring = CollPolicy::new(CollAlgo::Ring);
         let flat = CollPolicy::new(CollAlgo::Flat);
-        assert_eq!(ring.decide(CollOp::Gather, 8, None), AlgoDecision::Ring);
-        assert_eq!(flat.decide(CollOp::Gather, 8, None), AlgoDecision::Flat);
+        let hier = CollPolicy::new(CollAlgo::Hier);
+        assert_eq!(ring.decide(CollOp::Gather, 8, 1, None), AlgoDecision::Ring);
+        assert_eq!(flat.decide(CollOp::Gather, 8, 1, None), AlgoDecision::Flat);
+        assert_eq!(hier.decide(CollOp::AllReduce, 8, 2, None), AlgoDecision::Hier);
+        // Forced hier degenerates: single host → ring; no hier variant →
+        // ring; past the ring cap on one host → flat.
+        assert_eq!(hier.decide(CollOp::AllReduce, 8, 1, None), AlgoDecision::Ring);
+        assert_eq!(hier.decide(CollOp::Scatter, 8, 4, None), AlgoDecision::Ring);
+        assert_eq!(hier.decide(CollOp::AllReduce, 1000, 1, None), AlgoDecision::Flat);
+        assert_eq!(hier.decide(CollOp::AllReduce, 1000, 4, None), AlgoDecision::Hier);
         // Degenerate / oversized worlds are always flat.
-        assert_eq!(ring.decide(CollOp::Broadcast, 1, None), AlgoDecision::Flat);
-        assert_eq!(ring.decide(CollOp::Broadcast, 1000, None), AlgoDecision::Flat);
-        // Root-side resolution of Negotiate.
-        assert!(p.ring_for_bytes(CollOp::Broadcast, 4, CollAlgo::RING_MIN_BYTES));
-        assert!(!p.ring_for_bytes(CollOp::Broadcast, 4, 1024));
+        assert_eq!(ring.decide(CollOp::Broadcast, 1, 1, None), AlgoDecision::Flat);
+        assert_eq!(ring.decide(CollOp::Broadcast, 1000, 1, None), AlgoDecision::Flat);
+        // Root-side resolution of Negotiate never itself negotiates.
+        assert_eq!(
+            p.resolve_bytes(CollOp::Broadcast, 4, 1, CollAlgo::RING_MIN_BYTES),
+            AlgoDecision::Ring
+        );
+        assert_eq!(p.resolve_bytes(CollOp::Broadcast, 4, 1, 1024), AlgoDecision::Flat);
+        assert_eq!(
+            p.resolve_bytes(CollOp::Broadcast, 8, 2, CollAlgo::RING_MIN_BYTES),
+            AlgoDecision::Hier
+        );
     }
 
     #[test]
@@ -629,8 +739,8 @@ mod tests {
         // …and per-op rows override the global default.
         assert_eq!(p.threshold(CollOp::AllReduce).min_bytes, 65536);
         assert_eq!(p.threshold(CollOp::Scatter).min_world, 16);
-        assert_eq!(p.decide(CollOp::Scatter, 8, None), AlgoDecision::Flat);
-        assert_eq!(p.decide(CollOp::AllReduce, 8, Some(65536)), AlgoDecision::Ring);
+        assert_eq!(p.decide(CollOp::Scatter, 8, 1, None), AlgoDecision::Flat);
+        assert_eq!(p.decide(CollOp::AllReduce, 8, 1, Some(65536)), AlgoDecision::Ring);
     }
 
     #[test]

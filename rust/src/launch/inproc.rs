@@ -97,6 +97,7 @@ impl SpawnerInner {
             worlds,
             prefix: self.topology_template.prefix.clone(),
             generation: 0,
+            hosts: self.topology_template.hosts.clone(),
         };
         topo.worlds.retain(|w| w.rank_of(node).is_some());
         let opts = self.opts.clone();

@@ -89,6 +89,7 @@ impl ProcessCluster {
                 worlds: worlds.to_vec(),
                 prefix: self.topology.prefix.clone(),
                 generation: self.topology.generation,
+                hosts: self.topology.hosts.clone(),
             };
             t.worlds.retain(|w| w.rank_of(node).is_some());
             let path = std::env::temp_dir().join(format!(

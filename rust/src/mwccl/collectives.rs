@@ -9,9 +9,11 @@
 //!
 //! Every collective with an algorithm choice (all six: `broadcast`,
 //! `reduce`, `all_reduce`, `gather`, `all_gather`, `scatter`) runs one
-//! of two algorithms, chosen per op by the world's
+//! of up to three algorithms, chosen per op by the world's
 //! [`crate::config::CollPolicy`] (`WorldOptions::coll_policy`, env
-//! `MW_COLL_ALGO` + `MW_RING_MIN_*` threshold table):
+//! `MW_COLL_ALGO` + `MW_RING_MIN_*` threshold table) and the world's
+//! host placement ([`crate::mwccl::hostmap::HostMap`], env
+//! `MW_HOSTMAP`):
 //!
 //! * **Flat** — a star through the root: the root performs `size − 1`
 //!   sequential full-size transfers. Optimal for the paper's 2–3 rank
@@ -33,13 +35,29 @@
 //!   the root's parts hop-by-hop away from it (each rank peels off its
 //!   own part and forwards the rest), replacing `N−1` separate root
 //!   streams with one pipelined neighbour stream per rank.
+//! * **Hier** — two-level, for worlds spanning multiple hosts:
+//!   `broadcast`, `reduce`, `all_reduce`, and `all_gather` first fan in
+//!   over the cheap intra-host links to one *leader* rank per host
+//!   (lowest rank on the host; reserved tag steps [`STEP_UP`] /
+//!   [`STEP_DOWN`]), then the leaders alone run the pipelined ring
+//!   between hosts (the same ring machinery, instantiated over the
+//!   leader list via [`RingCtx`]), then each leader fans the result
+//!   back out — so each payload crosses every host boundary once,
+//!   instead of once per rank on the remote host. `gather`/`scatter`
+//!   have no hier variant: their payloads are per-rank-distinct, so a
+//!   leader relay saves no cross-host bytes over the plain ring
+//!   ([`CollOp::has_hier`]). The leader ring is capped at
+//!   `CollAlgo::RING_MAX_WORLD` *hosts*; the world itself may exceed
+//!   the flat ring's rank cap (hier is how >128-rank worlds stay
+//!   non-flat).
 //! * **Auto** — ring once both the world and the payload clear the
-//!   per-op [`crate::config::RingThreshold`] row. For ops where every
+//!   per-op [`crate::config::RingThreshold`] row, upgraded to hier when
+//!   the world additionally spans more than one host. For ops where every
 //!   rank knows the payload size up front (`all_reduce`, `reduce` — the
 //!   CCL contract makes contributions identically shaped) the choice is
 //!   computed locally and identically everywhere. For ops where only
 //!   the root can know (`broadcast`, `gather`, `all_gather`, `scatter`)
-//!   the policy returns `Negotiate`: the root resolves flat-vs-ring
+//!   the policy returns `Negotiate`: the root resolves the algorithm
 //!   from the real (or root-estimated) byte count and announces the
 //!   verdict in a one-byte *prologue* frame fanned out flat on the op
 //!   tag's prologue lane (see [`crate::mwccl::wire::FLAG_PROLOGUE`]),
@@ -54,15 +72,20 @@
 //!   `benches/ablation_collectives.rs` (re-checked by CI's
 //!   `crossover-matrix` job).
 //!
-//! Both algorithms produce identical bytes for the data-movement ops
-//! (broadcast, gather, all_gather, scatter); for all_reduce/reduce the
-//! two fold in different orders, so f32 rounding may differ in the last
+//! All algorithms produce identical bytes for the data-movement ops
+//! (broadcast, gather, all_gather, scatter); for all_reduce/reduce they
+//! fold in different orders, so f32 rounding may differ in the last
 //! ulp (exactly like NCCL's tree vs ring). The algorithm choice is
 //! rank-consistent by construction — computed from inputs all ranks
-//! share, or received from the root's prologue — which is required
-//! because the two algorithms use different wire tags (ring ops tag
-//! each (step, chunk), see [`make_chunk_tag`]). The choice each op
-//! actually ran is observable via `World::last_algo`.
+//! share (size, bytes, host map), or received from the root's prologue
+//! — which is required because the algorithms use different wire tags
+//! (ring ops tag each (step, chunk), see [`make_chunk_tag`]; hier
+//! reserves steps [`STEP_UP`]/[`STEP_DOWN`] for its intra-host phases).
+//! The choice each op actually ran is observable via
+//! `World::last_algo`. A `Negotiate` prologue is only ever requested
+//! when the policy row could actually pick a non-flat algorithm — a
+//! world that can only ever go flat (e.g. 2 ranks under `Auto`) skips
+//! the prologue round entirely.
 //!
 //! Flat `reduce` receives in arrival order but folds in **rank order**:
 //! contributions land in a rank-indexed slot table as they arrive (one
@@ -85,7 +108,7 @@
 use super::error::{CclError, CclResult};
 use super::wire::{make_chunk_tag, make_tag, TagKind, SEG_MAX};
 use super::work::Work;
-use super::world::{ReduceOp, World, WorldCore};
+use super::world::{ReduceOp, World, WorldCore, ALGO_FLAT, ALGO_HIER, ALGO_RING};
 use crate::config::{AlgoDecision, CollOp};
 use crate::tensor::serialize::encode_header;
 use crate::tensor::{read_tensor, write_tensor, DType, Tensor};
@@ -93,6 +116,16 @@ use crate::tensor::{read_tensor, write_tensor, DType, Tensor};
 /// Payload bytes per ring chunk message — one transport segment, so a
 /// chunk is the unit of both pipelining and cut-through.
 const RING_CHUNK: usize = SEG_MAX;
+
+/// Reserved chunk-tag *step* for the hierarchical intra-host fan-in
+/// (member → host leader; the chunk field carries the sender's rank).
+/// Leader rings use steps `0..=2·(H−1)−1 ≤ 253`, so 255/254 can never
+/// collide with a ring step.
+pub(crate) const STEP_UP: usize = 255;
+
+/// Reserved chunk-tag *step* for the hierarchical intra-host fan-out
+/// (host leader → member; the chunk field carries the receiver's rank).
+pub(crate) const STEP_DOWN: usize = 254;
 
 impl World {
     // ---------------------------------------------------------------- p2p
@@ -164,10 +197,15 @@ impl World {
         let seq = self.core().next_seq();
         // Only the root knows the size, so under Auto the policy asks
         // for a prologue negotiation (resolved on the progress thread).
-        let decision = self.core().coll_policy.decide(CollOp::Broadcast, self.size(), None);
+        let decision = self.core().coll_policy.decide(
+            CollOp::Broadcast,
+            self.size(),
+            self.core().hosts.n_hosts(),
+            None,
+        );
         let root_bytes = t.as_ref().map(|t| t.byte_len());
         self.submit(desc, move |core| {
-            let ring = resolve_algo(
+            let algo = resolve_algo(
                 core,
                 CollOp::Broadcast,
                 TagKind::Broadcast,
@@ -176,10 +214,10 @@ impl World {
                 decision,
                 root_bytes,
             )?;
-            if ring {
-                ring_broadcast(core, t, root, seq).map(Some)
-            } else {
-                broadcast_impl(core, t, root, make_tag(TagKind::Broadcast, seq)).map(Some)
+            match algo {
+                ALGO_HIER => hier_broadcast(core, t, root, seq).map(Some),
+                ALGO_RING => ring_broadcast(core, t, root, seq).map(Some),
+                _ => broadcast_impl(core, t, root, make_tag(TagKind::Broadcast, seq)).map(Some),
             }
         })
     }
@@ -211,12 +249,14 @@ impl World {
         let seq = self.core().next_seq();
         // Contributions are identically shaped (CCL contract), so every
         // rank computes the same size-aware choice locally.
-        let decision =
-            self.core()
-                .coll_policy
-                .decide(CollOp::Reduce, self.size(), Some(t.byte_len()));
+        let decision = self.core().coll_policy.decide(
+            CollOp::Reduce,
+            self.size(),
+            self.core().hosts.n_hosts(),
+            Some(t.byte_len()),
+        );
         self.submit(desc, move |core| {
-            let ring = resolve_algo(
+            let algo = resolve_algo(
                 core,
                 CollOp::Reduce,
                 TagKind::Reduce,
@@ -225,10 +265,10 @@ impl World {
                 decision,
                 None,
             )?;
-            if ring {
-                ring_reduce(core, t, root, op, seq)
-            } else {
-                reduce_impl(core, t, root, op, make_tag(TagKind::Reduce, seq))
+            match algo {
+                ALGO_HIER => hier_reduce(core, t, root, op, seq),
+                ALGO_RING => ring_reduce(core, t, root, op, seq),
+                _ => reduce_impl(core, t, root, op, make_tag(TagKind::Reduce, seq)),
             }
         })
     }
@@ -259,12 +299,14 @@ impl World {
         // All ranks must supply identically-shaped tensors (CCL
         // contract), so byte_len is the same everywhere and Auto's
         // choice is consistent across the world.
-        let decision =
-            self.core()
-                .coll_policy
-                .decide(CollOp::AllReduce, self.size(), Some(t.byte_len()));
+        let decision = self.core().coll_policy.decide(
+            CollOp::AllReduce,
+            self.size(),
+            self.core().hosts.n_hosts(),
+            Some(t.byte_len()),
+        );
         self.submit(desc, move |core| {
-            let ring = resolve_algo(
+            let algo = resolve_algo(
                 core,
                 CollOp::AllReduce,
                 TagKind::AllReduce,
@@ -273,8 +315,10 @@ impl World {
                 decision,
                 None,
             )?;
-            if ring {
-                return ring_all_reduce(core, t, op, seq).map(Some);
+            match algo {
+                ALGO_HIER => return hier_all_reduce(core, t, op, seq).map(Some),
+                ALGO_RING => return ring_all_reduce(core, t, op, seq).map(Some),
+                _ => {}
             }
             let rtag = make_tag(TagKind::AllReduce, seq * 2);
             let btag = make_tag(TagKind::AllReduce, seq * 2 + 1);
@@ -311,7 +355,12 @@ impl World {
         // contribution seen on a previous gather of this world, so a
         // small-contribution root stops under-estimating skewed loads
         // after the first invocation — and negotiates.
-        let decision = self.core().coll_policy.decide(CollOp::Gather, self.size(), None);
+        let decision = self.core().coll_policy.decide(
+            CollOp::Gather,
+            self.size(),
+            self.core().hosts.n_hosts(),
+            None,
+        );
         let root_bytes = Some(
             t.byte_len()
                 .max(self.core().max_contrib(CollOp::Gather))
@@ -319,7 +368,7 @@ impl World {
         );
         self.submit(desc, move |core| {
             core.note_contrib(CollOp::Gather, t.byte_len());
-            let ring = resolve_algo(
+            let algo = resolve_algo(
                 core,
                 CollOp::Gather,
                 TagKind::Gather,
@@ -328,7 +377,7 @@ impl World {
                 decision,
                 root_bytes,
             )?;
-            if ring {
+            if algo == ALGO_RING {
                 ring_gather(core, t, root, seq)
             } else {
                 gather_impl(core, t, root, make_tag(TagKind::Gather, seq), CollOp::Gather)
@@ -357,7 +406,12 @@ impl World {
         // contribution clamped by the largest contribution seen on a
         // previous all_gather of this world (skewed-size protection,
         // same as gather).
-        let decision = self.core().coll_policy.decide(CollOp::AllGather, self.size(), None);
+        let decision = self.core().coll_policy.decide(
+            CollOp::AllGather,
+            self.size(),
+            self.core().hosts.n_hosts(),
+            None,
+        );
         let root_bytes = Some(
             t.byte_len()
                 .max(self.core().max_contrib(CollOp::AllGather))
@@ -365,7 +419,7 @@ impl World {
         );
         self.submit(desc, move |core| {
             core.note_contrib(CollOp::AllGather, t.byte_len());
-            let ring = resolve_algo(
+            let algo = resolve_algo(
                 core,
                 CollOp::AllGather,
                 TagKind::AllGather,
@@ -374,8 +428,10 @@ impl World {
                 decision,
                 root_bytes,
             )?;
-            if ring {
-                return ring_all_gather(core, t, seq).map(Some);
+            match algo {
+                ALGO_HIER => return hier_all_gather(core, t, seq).map(Some),
+                ALGO_RING => return ring_all_gather(core, t, seq).map(Some),
+                _ => {}
             }
             let gtag = make_tag(TagKind::AllGather, seq * 2);
             let btag = make_tag(TagKind::AllGather, seq * 2 + 1);
@@ -428,12 +484,17 @@ impl World {
         let seq = self.core().next_seq();
         // Only the root holds the parts, so it resolves the size-aware
         // choice from the real total and announces it in the prologue.
-        let decision = self.core().coll_policy.decide(CollOp::Scatter, self.size(), None);
+        let decision = self.core().coll_policy.decide(
+            CollOp::Scatter,
+            self.size(),
+            self.core().hosts.n_hosts(),
+            None,
+        );
         let root_bytes = parts
             .as_ref()
             .map(|p| p.iter().map(|t| t.byte_len()).sum::<usize>());
         self.submit(desc, move |core| {
-            let ring = resolve_algo(
+            let algo = resolve_algo(
                 core,
                 CollOp::Scatter,
                 TagKind::Scatter,
@@ -442,7 +503,7 @@ impl World {
                 decision,
                 root_bytes,
             )?;
-            if ring {
+            if algo == ALGO_RING {
                 ring_scatter(core, parts, root, seq).map(Some)
             } else {
                 scatter_impl(core, parts, root, make_tag(TagKind::Scatter, seq)).map(Some)
@@ -460,16 +521,20 @@ impl World {
 
 // ------------------------------------------------------- algo negotiation
 
-/// Turn a policy decision into the concrete flat-vs-ring choice for one
-/// invocation, and record it for `World::last_algo`.
+/// Turn a policy decision into the concrete algorithm code
+/// (`ALGO_FLAT` / `ALGO_RING` / `ALGO_HIER`) for one invocation, and
+/// record it for `World::last_algo`.
 ///
-/// `Flat`/`Ring` pass straight through (every rank computed the same
-/// decision from shared inputs). `Negotiate` means only the root can
-/// size the payload: the root resolves flat-vs-ring from `root_bytes`
-/// (its real or estimated byte count) and fans the one-byte verdict out
-/// flat on the op tag's *prologue* lane — `size − 1` 18-byte frames,
-/// cheap even when the verdict is "stay flat" — and every other rank
-/// blocks for it (under `op_timeout`) before touching the data path.
+/// `Flat`/`Ring`/`Hier` pass straight through (every rank computed the
+/// same decision from shared inputs). `Negotiate` means only the root
+/// can size the payload: the root resolves the algorithm from
+/// `root_bytes` (its real or estimated byte count) and fans the
+/// one-byte verdict out flat on the op tag's *prologue* lane —
+/// `size − 1` 18-byte frames, cheap even when the verdict is "stay
+/// flat" — and every other rank blocks for it (under `op_timeout`)
+/// before touching the data path. `Negotiate` is only produced when a
+/// non-flat pick is actually possible, so worlds that can only go flat
+/// never pay the round (see `CollPolicy::decide`).
 fn resolve_algo(
     core: &WorldCore,
     op: CollOp,
@@ -478,30 +543,40 @@ fn resolve_algo(
     root: usize,
     decision: AlgoDecision,
     root_bytes: Option<usize>,
-) -> CclResult<bool> {
-    let ring = match decision {
-        AlgoDecision::Flat => false,
-        AlgoDecision::Ring => true,
+) -> CclResult<u8> {
+    let algo = match decision {
+        AlgoDecision::Flat => ALGO_FLAT,
+        AlgoDecision::Ring => ALGO_RING,
+        AlgoDecision::Hier => ALGO_HIER,
         AlgoDecision::Negotiate => {
             let tag = make_tag(kind, seq);
             if core.rank == root {
                 let bytes = root_bytes.ok_or_else(|| {
                     CclError::InvalidUsage("negotiated op missing root payload size".into())
                 })?;
-                let ring = core.coll_policy.ring_for_bytes(op, core.size, bytes);
+                let algo = match core.coll_policy.resolve_bytes(
+                    op,
+                    core.size,
+                    core.hosts.n_hosts(),
+                    bytes,
+                ) {
+                    AlgoDecision::Hier => ALGO_HIER,
+                    AlgoDecision::Ring => ALGO_RING,
+                    _ => ALGO_FLAT,
+                };
                 for peer in 0..core.size {
                     if peer != root {
-                        core.send_algo_prologue(peer, tag, ring)?;
+                        core.send_algo_prologue(peer, tag, algo)?;
                     }
                 }
-                ring
+                algo
             } else {
                 core.recv_algo_prologue(root, tag)?
             }
         }
     };
-    core.note_algo(op, ring);
-    Ok(ring)
+    core.note_algo(op, algo);
+    Ok(algo)
 }
 
 // ------------------------------------------------------------- flat impls
@@ -693,13 +768,59 @@ fn scatter_impl(
 
 // ------------------------------------------------------------- ring impls
 
-/// Successor on the ring.
+/// A pipelined ring over an arbitrary subset of the world's ranks: the
+/// whole world for the classic single-level algorithms, or the per-host
+/// leader set for the hierarchical family's inter-host exchange. Slice
+/// and step schedules are computed over ring *positions* (indices into
+/// `members`), which coincide with ranks when the ring is the whole
+/// world.
+struct RingCtx<'a> {
+    core: &'a WorldCore,
+    /// Participating ranks; ring order is list order.
+    members: &'a [usize],
+    /// Our position in `members`.
+    me: usize,
+}
+
+impl<'a> RingCtx<'a> {
+    fn new(core: &'a WorldCore, members: &'a [usize]) -> RingCtx<'a> {
+        let me = members
+            .iter()
+            .position(|&r| r == core.rank)
+            .expect("caller must be a ring member");
+        RingCtx { core, members, me }
+    }
+
+    #[inline]
+    fn n(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Rank of our ring successor.
+    #[inline]
+    fn next(&self) -> usize {
+        self.members[(self.me + 1) % self.n()]
+    }
+
+    /// Rank of our ring predecessor.
+    #[inline]
+    fn prev(&self) -> usize {
+        self.members[(self.me + self.n() - 1) % self.n()]
+    }
+}
+
+/// The full-world member list for the single-level ring entry points.
+fn all_ranks(core: &WorldCore) -> Vec<usize> {
+    (0..core.size).collect()
+}
+
+/// Successor on the full-world ring.
 #[inline]
 fn ring_next(core: &WorldCore) -> usize {
     (core.rank + 1) % core.size
 }
 
-/// Predecessor on the ring.
+/// Predecessor on the full-world ring.
 #[inline]
 fn ring_prev(core: &WorldCore) -> usize {
     (core.rank + core.size - 1) % core.size
@@ -754,7 +875,7 @@ fn rank_slice_bytes(elems: usize, n: usize, i: usize) -> (usize, usize) {
 /// while chunk c is applied.
 #[allow(clippy::too_many_arguments)]
 fn ring_step(
-    core: &WorldCore,
+    ctx: &RingCtx,
     t: &mut Tensor,
     kind: TagKind,
     seq: u64,
@@ -763,8 +884,9 @@ fn ring_step(
     recv_slice: (usize, usize),
     fold: Option<ReduceOp>,
 ) -> CclResult<()> {
-    let next = ring_next(core);
-    let prev = ring_prev(core);
+    let core = ctx.core;
+    let next = ctx.next();
+    let prev = ctx.prev();
     let (so, sl) = send_slice;
     let (ro, rl) = recv_slice;
     for c in 0..chunks_of(sl) {
@@ -794,23 +916,24 @@ fn ring_step(
 }
 
 /// The chunked reduce-scatter phase shared by ring all-reduce and ring
-/// reduce: `N−1` steps, each folding one incoming per-rank slice. On
-/// return, rank `r` holds the fully-reduced slice `(r+1) mod N` (Avg
-/// scaling still pending — see [`scale_slice`]).
+/// reduce: `N−1` steps, each folding one incoming per-position slice.
+/// On return, the member at ring position `p` holds the fully-reduced
+/// slice `(p+1) mod N` (Avg scaling still pending — see
+/// [`scale_slice`]).
 fn ring_reduce_scatter(
-    core: &WorldCore,
+    ctx: &RingCtx,
     t: &mut Tensor,
     op: ReduceOp,
     kind: TagKind,
     seq: u64,
 ) -> CclResult<()> {
-    let n = core.size;
+    let n = ctx.n();
     let elems = t.elems();
     for s in 0..n - 1 {
-        let send_slice = (core.rank + n - s) % n;
-        let recv_slice = (core.rank + n - s - 1) % n;
+        let send_slice = (ctx.me + n - s) % n;
+        let recv_slice = (ctx.me + n - s - 1) % n;
         ring_step(
-            core,
+            ctx,
             t,
             kind,
             seq,
@@ -840,32 +963,47 @@ fn scale_slice(t: &mut Tensor, off: usize, len: usize, factor: f32) {
 /// After the reduce-scatter, rank `r` owns the fully-reduced slice
 /// `(r+1) mod N`; the all-gather circulates the owned slices until every
 /// rank has the whole tensor.
-fn ring_all_reduce(core: &WorldCore, mut t: Tensor, op: ReduceOp, seq: u64) -> CclResult<Tensor> {
+fn ring_all_reduce(core: &WorldCore, t: Tensor, op: ReduceOp, seq: u64) -> CclResult<Tensor> {
+    let members = all_ranks(core);
+    ring_all_reduce_ctx(&RingCtx::new(core, &members), t, op, TagKind::AllReduce, seq)
+}
+
+/// Ring all-reduce over an arbitrary member ring (see
+/// [`ring_all_reduce`]; the hierarchical family runs this over the host
+/// leaders). `Avg` divides by the *ring* size — hier callers pass `Sum`
+/// and scale by the world size themselves.
+fn ring_all_reduce_ctx(
+    ctx: &RingCtx,
+    mut t: Tensor,
+    op: ReduceOp,
+    kind: TagKind,
+    seq: u64,
+) -> CclResult<Tensor> {
     if t.dtype() != DType::F32 {
         return Err(CclError::InvalidUsage("all_reduce requires f32 tensors".into()));
     }
-    let n = core.size;
+    let n = ctx.n();
     let elems = t.elems();
 
     // ---- phase 1: reduce-scatter (steps 0 .. N-1) ----
-    ring_reduce_scatter(core, &mut t, op, TagKind::AllReduce, seq)?;
+    ring_reduce_scatter(ctx, &mut t, op, kind, seq)?;
 
     // Averaging divides the owned (fully-reduced) slice only — the other
     // slices are overwritten by already-averaged data in phase 2.
     if op == ReduceOp::Avg {
-        let owned = (core.rank + 1) % n;
+        let owned = (ctx.me + 1) % n;
         let (oo, ol) = rank_slice_bytes(elems, n, owned);
         scale_slice(&mut t, oo, ol, 1.0 / n as f32);
     }
 
     // ---- phase 2: all-gather (steps N-1 .. 2N-3) ----
     for s in 0..n - 1 {
-        let send_slice = (core.rank + 1 + n - s) % n;
-        let recv_slice = (core.rank + n - s) % n;
+        let send_slice = (ctx.me + 1 + n - s) % n;
+        let recv_slice = (ctx.me + n - s) % n;
         ring_step(
-            core,
+            ctx,
             &mut t,
-            TagKind::AllReduce,
+            kind,
             seq,
             (n - 1) + s,
             rank_slice_bytes(elems, n, send_slice),
@@ -884,18 +1022,36 @@ fn ring_all_reduce(core: &WorldCore, mut t: Tensor, op: ReduceOp, seq: u64) -> C
 /// `(N−1)·S`.
 fn ring_reduce(
     core: &WorldCore,
-    mut t: Tensor,
+    t: Tensor,
     root: usize,
     op: ReduceOp,
+    seq: u64,
+) -> CclResult<Option<Tensor>> {
+    let members = all_ranks(core);
+    // Full-world ring: rank == ring position, so `root` is its index.
+    ring_reduce_ctx(&RingCtx::new(core, &members), t, root, op, TagKind::Reduce, seq)
+}
+
+/// Ring reduce over an arbitrary member ring (see [`ring_reduce`]).
+/// `root_idx` is the root's ring *position*. `Avg` divides by the ring
+/// size — hier callers pass `Sum` and scale by the world size
+/// themselves.
+fn ring_reduce_ctx(
+    ctx: &RingCtx,
+    mut t: Tensor,
+    root_idx: usize,
+    op: ReduceOp,
+    kind: TagKind,
     seq: u64,
 ) -> CclResult<Option<Tensor>> {
     if t.dtype() != DType::F32 {
         return Err(CclError::InvalidUsage("reduce requires f32 tensors".into()));
     }
-    let n = core.size;
+    let core = ctx.core;
+    let n = ctx.n();
     let elems = t.elems();
-    ring_reduce_scatter(core, &mut t, op, TagKind::Reduce, seq)?;
-    let owned = (core.rank + 1) % n;
+    ring_reduce_scatter(ctx, &mut t, op, kind, seq)?;
+    let owned = (ctx.me + 1) % n;
     let (oo, ol) = rank_slice_bytes(elems, n, owned);
     if op == ReduceOp::Avg {
         scale_slice(&mut t, oo, ol, 1.0 / n as f32);
@@ -904,21 +1060,23 @@ fn ring_reduce(
     // 0..N-2 keeps the tags disjoint; per-link inboxes keep the same tag
     // distinct across peers.
     let handoff = n - 1;
-    if core.rank != root {
+    if ctx.me != root_idx {
+        let root_rank = ctx.members[root_idx];
         for c in 0..chunks_of(ol) {
             let (lo, hi) = chunk_bounds(oo, ol, c);
-            let tag = make_chunk_tag(TagKind::Reduce, seq, handoff, c);
-            core.send_bytes(root, tag, &[&t.bytes()[lo..hi]])?;
+            let tag = make_chunk_tag(kind, seq, handoff, c);
+            core.send_bytes(root_rank, tag, &[&t.bytes()[lo..hi]])?;
         }
         return Ok(None);
     }
-    for peer in 0..n {
-        if peer == root {
+    for pos in 0..n {
+        if pos == root_idx {
             continue;
         }
-        let (ro, rl) = rank_slice_bytes(elems, n, (peer + 1) % n);
+        let peer = ctx.members[pos];
+        let (ro, rl) = rank_slice_bytes(elems, n, (pos + 1) % n);
         for c in 0..chunks_of(rl) {
-            let tag = make_chunk_tag(TagKind::Reduce, seq, handoff, c);
+            let tag = make_chunk_tag(kind, seq, handoff, c);
             let buf = core.recv_bytes(peer, tag)?;
             let (lo, hi) = chunk_bounds(ro, rl, c);
             if buf.len() != hi - lo {
@@ -949,15 +1107,31 @@ fn ring_broadcast(
     root: usize,
     seq: u64,
 ) -> CclResult<Tensor> {
-    let n = core.size;
-    let next = ring_next(core);
-    let prev = ring_prev(core);
-    // Position along the chain measured from the root; the last rank
-    // (pos == n-1) must not forward back into the root.
-    let pos = (core.rank + n - root) % n;
-    let tag = |c: usize| make_chunk_tag(TagKind::Broadcast, seq, 0, c);
+    let members = all_ranks(core);
+    // Full-world ring: rank == ring position, so `root` is its index.
+    ring_broadcast_ctx(&RingCtx::new(core, &members), t, root, TagKind::Broadcast, seq)
+}
 
-    if core.rank == root {
+/// Ring broadcast over an arbitrary member ring (see [`ring_broadcast`];
+/// the hierarchical family runs this over the host leaders). `root_idx`
+/// is the sending member's ring *position*.
+fn ring_broadcast_ctx(
+    ctx: &RingCtx,
+    t: Option<Tensor>,
+    root_idx: usize,
+    kind: TagKind,
+    seq: u64,
+) -> CclResult<Tensor> {
+    let core = ctx.core;
+    let n = ctx.n();
+    let next = ctx.next();
+    let prev = ctx.prev();
+    // Position along the chain measured from the root; the last member
+    // (pos == n-1) must not forward back into the root.
+    let pos = (ctx.me + n - root_idx) % n;
+    let tag = |c: usize| make_chunk_tag(kind, seq, 0, c);
+
+    if ctx.me == root_idx {
         let t = t.ok_or_else(|| CclError::InvalidUsage("root must supply tensor".into()))?;
         let hdr = encode_header(&t)
             .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
@@ -1165,6 +1339,328 @@ fn ring_scatter(
         }
     }
     unreachable!("non-root ring position receives at least one part")
+}
+
+// ------------------------------------------------------------- hier impls
+//
+// Two-level algorithms for multi-host worlds: an intra-host phase over
+// the cheap local links between each host's members and its leader
+// (lowest rank on the host), and an inter-host phase restricted to the
+// leaders, which reuse the pipelined ring machinery over a `RingCtx`
+// whose member list is the leader set. Intra-host traffic rides the
+// reserved tag steps `STEP_UP` (member → leader, chunk = sender rank)
+// and `STEP_DOWN` (leader → member, chunk = receiver rank); leader-ring
+// steps stay ≤ 253, so the tag spaces never collide within one seq.
+
+/// Member → leader fan-in tag.
+#[inline]
+fn up_tag(kind: TagKind, seq: u64, rank: usize) -> u64 {
+    make_chunk_tag(kind, seq, STEP_UP, rank)
+}
+
+/// Leader → member fan-out tag.
+#[inline]
+fn down_tag(kind: TagKind, seq: u64, rank: usize) -> u64 {
+    make_chunk_tag(kind, seq, STEP_DOWN, rank)
+}
+
+/// Hierarchical all-reduce: rank-order intra-host fold at each leader,
+/// ring all-reduce among the leaders, intra-host fan-out. `Avg` runs as
+/// `Sum` end to end and divides once by the world size, so the result
+/// matches the flat/ring semantics (mean over *ranks*, not hosts).
+fn hier_all_reduce(core: &WorldCore, mut t: Tensor, op: ReduceOp, seq: u64) -> CclResult<Tensor> {
+    if t.dtype() != DType::F32 {
+        return Err(CclError::InvalidUsage("all_reduce requires f32 tensors".into()));
+    }
+    let kind = TagKind::AllReduce;
+    let hosts = &core.hosts;
+    let me = core.rank;
+    let leader = hosts.leader(hosts.host(me));
+    let fold_op = if op == ReduceOp::Avg { ReduceOp::Sum } else { op };
+
+    if me != leader {
+        core.send_bytes(leader, up_tag(kind, seq, me), &[t.bytes()])?;
+        let buf = core.recv_bytes(leader, down_tag(kind, seq, me))?;
+        if buf.len() != t.byte_len() {
+            return Err(CclError::Transport(format!(
+                "all_reduce fan-out length mismatch from leader {leader}: {} vs {}",
+                buf.len(),
+                t.byte_len()
+            )));
+        }
+        t.bytes_mut().copy_from_slice(&buf);
+        core.recycle(leader, buf);
+        return Ok(t);
+    }
+
+    // Leader: fold host members in rank order (we are the lowest rank on
+    // the host, so our own contribution seeds the fold) — deterministic
+    // for a fixed host map, like the flat root's rank-order fold.
+    for m in hosts.members(hosts.host(me)) {
+        if m == me {
+            continue;
+        }
+        let buf = core.recv_bytes(m, up_tag(kind, seq, m))?;
+        if buf.len() != t.byte_len() {
+            return Err(CclError::InvalidUsage(format!(
+                "all_reduce length mismatch from rank {m}: {} vs {} \
+                 (peers must pass identically-shaped tensors)",
+                buf.len(),
+                t.byte_len()
+            )));
+        }
+        fold_f32(t.bytes_mut(), &buf, fold_op);
+        core.recycle(m, buf);
+    }
+
+    let leaders = hosts.leaders();
+    t = ring_all_reduce_ctx(&RingCtx::new(core, &leaders), t, fold_op, kind, seq)?;
+    if op == ReduceOp::Avg {
+        let len = t.byte_len();
+        scale_slice(&mut t, 0, len, 1.0 / core.size as f32);
+    }
+    for m in hosts.members(hosts.host(me)) {
+        if m != me {
+            core.send_bytes(m, down_tag(kind, seq, m), &[t.bytes()])?;
+        }
+    }
+    Ok(t)
+}
+
+/// Hierarchical broadcast: the root hands its tensor to its host's
+/// leader, the leaders ring-broadcast it between hosts, and each leader
+/// fans it out to its members (skipping the root, which already holds
+/// it).
+fn hier_broadcast(
+    core: &WorldCore,
+    t: Option<Tensor>,
+    root: usize,
+    seq: u64,
+) -> CclResult<Tensor> {
+    let kind = TagKind::Broadcast;
+    let hosts = &core.hosts;
+    let me = core.rank;
+    let my_leader = hosts.leader(hosts.host(me));
+    let origin_leader = hosts.leader(hosts.host(root));
+
+    if me != my_leader {
+        if me == root {
+            let t = t.ok_or_else(|| CclError::InvalidUsage("root must supply tensor".into()))?;
+            core.send_tensor(my_leader, up_tag(kind, seq, me), &t)?;
+            return Ok(t);
+        }
+        return core.recv_tensor(my_leader, down_tag(kind, seq, me));
+    }
+
+    // Leader. Source the tensor: our own if we are the root, pulled from
+    // the root if it lives on our host, or from the leader ring.
+    let seed = if me == root {
+        t
+    } else if me == origin_leader {
+        Some(core.recv_tensor(root, up_tag(kind, seq, root))?)
+    } else {
+        None
+    };
+    let leaders = hosts.leaders();
+    let root_idx = leaders
+        .iter()
+        .position(|&l| l == origin_leader)
+        .expect("origin leader is in the leader list");
+    let result = ring_broadcast_ctx(&RingCtx::new(core, &leaders), seed, root_idx, kind, seq)?;
+    for m in hosts.members(hosts.host(me)) {
+        if m != me && m != root {
+            core.send_tensor(m, down_tag(kind, seq, m), &result)?;
+        }
+    }
+    Ok(result)
+}
+
+/// Hierarchical reduce: rank-order intra-host fold at each leader, ring
+/// reduce among the leaders toward the root's host leader, then a final
+/// intra-host hand-off to the root. `Avg` runs as `Sum` and divides
+/// once by the world size at the origin leader.
+fn hier_reduce(
+    core: &WorldCore,
+    mut t: Tensor,
+    root: usize,
+    op: ReduceOp,
+    seq: u64,
+) -> CclResult<Option<Tensor>> {
+    if t.dtype() != DType::F32 {
+        return Err(CclError::InvalidUsage("reduce requires f32 tensors".into()));
+    }
+    let kind = TagKind::Reduce;
+    let hosts = &core.hosts;
+    let me = core.rank;
+    let my_leader = hosts.leader(hosts.host(me));
+    let fold_op = if op == ReduceOp::Avg { ReduceOp::Sum } else { op };
+
+    if me != my_leader {
+        core.send_bytes(my_leader, up_tag(kind, seq, me), &[t.bytes()])?;
+        if me != root {
+            return Ok(None);
+        }
+        // Non-leader root: the origin leader (our host's leader) hands
+        // the finished reduction back down.
+        let buf = core.recv_bytes(my_leader, down_tag(kind, seq, me))?;
+        if buf.len() != t.byte_len() {
+            return Err(CclError::Transport(format!(
+                "reduce hand-off length mismatch from leader {my_leader}: {} vs {}",
+                buf.len(),
+                t.byte_len()
+            )));
+        }
+        t.bytes_mut().copy_from_slice(&buf);
+        core.recycle(my_leader, buf);
+        return Ok(Some(t));
+    }
+
+    for m in hosts.members(hosts.host(me)) {
+        if m == me {
+            continue;
+        }
+        let buf = core.recv_bytes(m, up_tag(kind, seq, m))?;
+        if buf.len() != t.byte_len() {
+            return Err(CclError::InvalidUsage(format!(
+                "reduce length mismatch from rank {m}: {} vs {} \
+                 (peers must pass identically-shaped tensors)",
+                buf.len(),
+                t.byte_len()
+            )));
+        }
+        fold_f32(t.bytes_mut(), &buf, fold_op);
+        core.recycle(m, buf);
+    }
+
+    let leaders = hosts.leaders();
+    let origin_leader = hosts.leader(hosts.host(root));
+    let root_idx = leaders
+        .iter()
+        .position(|&l| l == origin_leader)
+        .expect("origin leader is in the leader list");
+    let reduced =
+        ring_reduce_ctx(&RingCtx::new(core, &leaders), t, root_idx, fold_op, kind, seq)?;
+    let Some(mut t) = reduced else {
+        return Ok(None); // non-origin leader: slice shipped, nothing to hold
+    };
+    if op == ReduceOp::Avg {
+        let len = t.byte_len();
+        scale_slice(&mut t, 0, len, 1.0 / core.size as f32);
+    }
+    if me == root {
+        return Ok(Some(t));
+    }
+    core.send_bytes(root, down_tag(kind, seq, root), &[t.bytes()])?;
+    Ok(None)
+}
+
+/// Hierarchical all-gather: members ship their serialized contributions
+/// to their leader, leaders ring-exchange per-host *blobs* (rank-tagged
+/// entry lists, so asymmetric hosts and per-rank sizes survive), each
+/// leader assembles the world-rank-order concatenation, and fans it
+/// out. Cross-host traffic is one blob per host pair instead of one
+/// message per remote rank.
+fn hier_all_gather(core: &WorldCore, t: Tensor, seq: u64) -> CclResult<Tensor> {
+    let kind = TagKind::AllGather;
+    let hosts = &core.hosts;
+    let me = core.rank;
+    let leader = hosts.leader(hosts.host(me));
+    core.note_contrib(CollOp::AllGather, t.byte_len());
+
+    if me != leader {
+        let mut mine = Vec::with_capacity(crate::tensor::HEADER_LEN + t.byte_len());
+        write_tensor(&mut mine, &t)
+            .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
+        core.send_bytes(leader, up_tag(kind, seq, me), &[&mine])?;
+        return core.recv_tensor(leader, down_tag(kind, seq, me));
+    }
+
+    // Leader: build this host's blob — `rank:u64 len:u64 bytes` entries
+    // in ascending rank order.
+    let members = hosts.members(hosts.host(me));
+    let mut blob = Vec::new();
+    for &m in &members {
+        let bytes = if m == me {
+            let mut mine = Vec::with_capacity(crate::tensor::HEADER_LEN + t.byte_len());
+            write_tensor(&mut mine, &t)
+                .map_err(|e| CclError::InvalidUsage(format!("unserializable tensor: {e}")))?;
+            mine
+        } else {
+            core.recv_bytes(m, up_tag(kind, seq, m))?
+        };
+        blob.extend_from_slice(&(m as u64).to_le_bytes());
+        blob.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+        blob.extend_from_slice(&bytes);
+        if m != me {
+            core.recycle(m, bytes);
+        }
+    }
+
+    // Ring-exchange blobs among the leaders (store-and-forward per hop,
+    // same schedule as the single-level ring all-gather).
+    let leaders = hosts.leaders();
+    let nl = leaders.len();
+    let my_idx = leaders
+        .iter()
+        .position(|&l| l == me)
+        .expect("we are a leader");
+    let next = leaders[(my_idx + 1) % nl];
+    let prev = leaders[(my_idx + nl - 1) % nl];
+    let mut blobs: Vec<Option<Vec<u8>>> = (0..nl).map(|_| None).collect();
+    blobs[my_idx] = Some(blob);
+    for s in 0..nl - 1 {
+        let send_idx = (my_idx + nl - s) % nl;
+        let recv_idx = (my_idx + nl - s - 1) % nl;
+        let tag = make_chunk_tag(kind, seq, s, 0);
+        core.send_bytes(next, tag, &[blobs[send_idx].as_deref().unwrap()])?;
+        blobs[recv_idx] = Some(core.recv_bytes(prev, tag)?);
+    }
+
+    // Parse every blob into world-rank slots and concatenate in order.
+    let mut parts: Vec<Option<Tensor>> = (0..core.size).map(|_| None).collect();
+    for (idx, b) in blobs.iter().enumerate() {
+        let mut sl: &[u8] = b.as_deref().unwrap();
+        while !sl.is_empty() {
+            if sl.len() < 16 {
+                return Err(CclError::Transport(format!(
+                    "all_gather blob from host {idx} truncated"
+                )));
+            }
+            let rank = u64::from_le_bytes(sl[0..8].try_into().unwrap()) as usize;
+            let len = u64::from_le_bytes(sl[8..16].try_into().unwrap()) as usize;
+            if sl.len() < 16 + len || rank >= core.size {
+                return Err(CclError::Transport(format!(
+                    "all_gather blob from host {idx}: bad entry (rank {rank}, len {len})"
+                )));
+            }
+            let part = read_tensor(&mut &sl[16..16 + len]).map_err(|e| {
+                CclError::Transport(format!("bad all_gather tensor from rank {rank}: {e}"))
+            })?;
+            core.note_contrib(CollOp::AllGather, part.byte_len());
+            parts[rank] = Some(part);
+            sl = &sl[16 + len..];
+        }
+    }
+    for b in blobs.into_iter().flatten() {
+        core.recycle(prev, b);
+    }
+    let parts: Vec<Tensor> = parts
+        .into_iter()
+        .enumerate()
+        .map(|(r, p)| {
+            p.ok_or_else(|| {
+                CclError::Transport(format!("all_gather: no contribution for rank {r}"))
+            })
+        })
+        .collect::<CclResult<_>>()?;
+    let cat = Tensor::concat(&parts)
+        .map_err(|e| CclError::InvalidUsage(format!("all_gather concat: {e}")))?;
+    for &m in &members {
+        if m != me {
+            core.send_tensor(m, down_tag(kind, seq, m), &cat)?;
+        }
+    }
+    Ok(cat)
 }
 
 #[cfg(test)]

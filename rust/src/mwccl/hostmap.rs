@@ -1,0 +1,231 @@
+//! Per-rank host placement for topology-aware collectives.
+//!
+//! A [`HostMap`] assigns every rank of a world to a *host* — the unit of
+//! shared-memory locality. The hierarchical collective family
+//! ([`crate::config::CollAlgo::Hier`]) uses it to split each op into an
+//! intra-host phase (cheap, shm-backed links) and an inter-host phase
+//! restricted to one *leader* rank per host, and the rendezvous layer
+//! uses it to route cross-host links over the shared per-host-pair
+//! multiplexed connection ([`crate::mwccl::transport::mux`]).
+//!
+//! Placement comes from the `MW_HOSTMAP` env var (or
+//! `WorldOptions::with_hostmap`). Three spec forms are accepted:
+//!
+//! * a comma list of per-rank host ids — `"0,0,1,1"` puts ranks 0–1 on
+//!   host 0 and ranks 2–3 on host 1; ids are renumbered densely in
+//!   order of first appearance, so `"7,7,3"` is the same as `"0,0,1"`;
+//! * `"<H>x<L>"` — `H` hosts of `L` consecutive ranks each (blocked),
+//!   e.g. `"2x4"` for an 8-rank world split 4+4; the last host may be
+//!   short when `H·L` exceeds the world size;
+//! * `"rr:<H>"` — round-robin over `H` hosts, rank `r` on host `r % H`.
+//!
+//! An absent/empty spec means all ranks share one host — the historical
+//! single-host behavior, under which `Auto` never picks `Hier` and link
+//! construction is unchanged.
+
+use super::error::{CclError, CclResult};
+
+/// Dense per-rank host assignment. Host ids are `0..n_hosts`, renumbered
+/// from the spec in order of first appearance; each host's *leader* is
+/// its lowest-numbered rank.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostMap {
+    /// `host_of[rank]` — always dense (every id in `0..n_hosts` occurs).
+    host_of: Vec<u16>,
+    n_hosts: usize,
+}
+
+impl HostMap {
+    /// All `size` ranks on one host (the no-`MW_HOSTMAP` default).
+    pub fn single_host(size: usize) -> HostMap {
+        HostMap { host_of: vec![0; size.max(1)], n_hosts: 1 }
+    }
+
+    /// Parse a placement spec (see the module docs for the grammar) for
+    /// a world of `size` ranks.
+    pub fn parse(spec: &str, size: usize) -> CclResult<HostMap> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(HostMap::single_host(size));
+        }
+        let raw: Vec<usize> = if let Some(h) = spec.strip_prefix("rr:") {
+            let hosts: usize = h
+                .trim()
+                .parse()
+                .map_err(|_| bad_spec(spec, "rr:<H> needs an integer host count"))?;
+            if hosts == 0 {
+                return Err(bad_spec(spec, "host count must be >= 1"));
+            }
+            (0..size).map(|r| r % hosts).collect()
+        } else if let Some((h, l)) = spec.split_once('x') {
+            let hosts: usize =
+                h.trim().parse().map_err(|_| bad_spec(spec, "<H>x<L> needs integers"))?;
+            let per: usize =
+                l.trim().parse().map_err(|_| bad_spec(spec, "<H>x<L> needs integers"))?;
+            if hosts == 0 || per == 0 {
+                return Err(bad_spec(spec, "<H>x<L> terms must be >= 1"));
+            }
+            if hosts * per < size {
+                return Err(bad_spec(spec, "HxL covers fewer ranks than the world"));
+            }
+            (0..size).map(|r| r / per).collect()
+        } else {
+            let ids: CclResult<Vec<usize>> = spec
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .map_err(|_| bad_spec(spec, "comma list entries must be integers"))
+                })
+                .collect();
+            let ids = ids?;
+            if ids.len() != size {
+                return Err(bad_spec(
+                    spec,
+                    &format!("comma list has {} entries for a {}-rank world", ids.len(), size),
+                ));
+            }
+            ids
+        };
+        // Renumber densely in order of first appearance.
+        let mut dense: Vec<usize> = Vec::new();
+        let mut host_of = Vec::with_capacity(size.max(1));
+        for id in raw {
+            let h = match dense.iter().position(|&d| d == id) {
+                Some(h) => h,
+                None => {
+                    dense.push(id);
+                    dense.len() - 1
+                }
+            };
+            host_of.push(h as u16);
+        }
+        if host_of.is_empty() {
+            host_of.push(0);
+            dense.push(0);
+        }
+        Ok(HostMap { host_of, n_hosts: dense.len() })
+    }
+
+    /// Resolve from `MW_HOSTMAP`; missing or empty means single-host.
+    pub fn from_env(size: usize) -> CclResult<HostMap> {
+        match std::env::var("MW_HOSTMAP") {
+            Ok(s) => HostMap::parse(&s, size),
+            Err(_) => Ok(HostMap::single_host(size)),
+        }
+    }
+
+    /// Number of distinct hosts (>= 1).
+    pub fn n_hosts(&self) -> usize {
+        self.n_hosts
+    }
+
+    /// World size this map covers.
+    pub fn size(&self) -> usize {
+        self.host_of.len()
+    }
+
+    /// Host id of `rank`.
+    pub fn host(&self, rank: usize) -> usize {
+        self.host_of[rank] as usize
+    }
+
+    /// Leader (lowest rank) of `host`.
+    pub fn leader(&self, host: usize) -> usize {
+        self.host_of
+            .iter()
+            .position(|&h| h as usize == host)
+            .expect("dense host ids: every id in 0..n_hosts occurs")
+    }
+
+    /// Whether `rank` is its host's leader.
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.leader(self.host(rank)) == rank
+    }
+
+    /// Ranks on `host`, ascending.
+    pub fn members(&self, host: usize) -> Vec<usize> {
+        (0..self.host_of.len()).filter(|&r| self.host_of[r] as usize == host).collect()
+    }
+
+    /// One leader rank per host, ordered by host id.
+    pub fn leaders(&self) -> Vec<usize> {
+        (0..self.n_hosts).map(|h| self.leader(h)).collect()
+    }
+
+    /// Whether two ranks share a host.
+    pub fn same_host(&self, a: usize, b: usize) -> bool {
+        self.host_of[a] == self.host_of[b]
+    }
+}
+
+fn bad_spec(spec: &str, why: &str) -> CclError {
+    CclError::InvalidUsage(format!("bad MW_HOSTMAP spec {spec:?}: {why}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_host_default() {
+        let m = HostMap::single_host(4);
+        assert_eq!(m.n_hosts(), 1);
+        assert!(m.is_leader(0));
+        assert!(!m.is_leader(3));
+        assert_eq!(m.leaders(), vec![0]);
+        assert_eq!(m.members(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn comma_list_renumbers_densely() {
+        let m = HostMap::parse("7,7,3,3", 4).unwrap();
+        assert_eq!(m.n_hosts(), 2);
+        assert_eq!(m.host(0), 0);
+        assert_eq!(m.host(2), 1);
+        assert_eq!(m.leader(1), 2);
+        assert_eq!(m.leaders(), vec![0, 2]);
+        assert!(m.same_host(0, 1));
+        assert!(!m.same_host(1, 2));
+    }
+
+    #[test]
+    fn blocked_shorthand() {
+        let m = HostMap::parse("2x4", 8).unwrap();
+        assert_eq!(m.n_hosts(), 2);
+        assert_eq!(m.members(0), vec![0, 1, 2, 3]);
+        assert_eq!(m.members(1), vec![4, 5, 6, 7]);
+        // Ragged tail: 3x3 over 7 ranks -> 3+3+1.
+        let m = HostMap::parse("3x3", 7).unwrap();
+        assert_eq!(m.n_hosts(), 3);
+        assert_eq!(m.members(2), vec![6]);
+    }
+
+    #[test]
+    fn round_robin() {
+        let m = HostMap::parse("rr:3", 7).unwrap();
+        assert_eq!(m.n_hosts(), 3);
+        assert_eq!(m.members(0), vec![0, 3, 6]);
+        assert_eq!(m.members(1), vec![1, 4]);
+        assert_eq!(m.leaders(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn asymmetric_layout() {
+        let m = HostMap::parse("0,0,0,1", 4).unwrap();
+        assert_eq!(m.n_hosts(), 2);
+        assert_eq!(m.members(0), vec![0, 1, 2]);
+        assert_eq!(m.members(1), vec![3]);
+        assert!(m.is_leader(3));
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(HostMap::parse("0,1", 3).is_err());
+        assert!(HostMap::parse("0x4", 4).is_err());
+        assert!(HostMap::parse("1x2", 4).is_err());
+        assert!(HostMap::parse("rr:0", 4).is_err());
+        assert!(HostMap::parse("zebra", 4).is_err());
+        assert!(HostMap::parse("", 4).unwrap().n_hosts() == 1);
+    }
+}

@@ -23,15 +23,42 @@
 //! worlds proceed concurrently — which is what lets MultiWorld's
 //! communicator poll many worlds without deadlock.
 //!
-//! All six collectives select between a flat star and pipelined ring
-//! algorithms per op, governed by a per-op threshold table with a
-//! root-negotiated prologue where only the root can size the payload
-//! (see [`collectives`] and [`crate::config::CollPolicy`]); the receive
-//! path reassembles into pooled, size-hinted buffers (see
-//! [`transport::inbox::Inbox`]).
+//! All six collectives select between a flat star, a pipelined ring,
+//! and a hierarchical two-level family per op, governed by a per-op
+//! threshold table with a root-negotiated prologue where only the root
+//! can size the payload (see [`collectives`] and
+//! [`crate::config::CollPolicy`]); the receive path reassembles into
+//! pooled, size-hinted buffers (see [`transport::inbox::Inbox`]).
+//!
+//! # Topology awareness: `MW_HOSTMAP` and the `Hier` family
+//!
+//! Setting `MW_HOSTMAP` (or `WorldOptions::with_hostmap`) places each
+//! rank on a host (see [`hostmap::HostMap`] for the spec grammar).
+//! When a world spans more than one host, `broadcast`, `reduce`,
+//! `all_reduce`, and `all_gather` gain hierarchical variants
+//! ([`CollAlgo::Hier`]): an intra-host fan-in over the cheap local
+//! links to one *leader* rank per host, a leader-only inter-host
+//! exchange that reuses the pipelined-ring machinery among leaders,
+//! then an intra-host fan-out — so each payload crosses the host
+//! boundary once per host pair instead of once per rank pair. `Auto`
+//! picks hier only when host count > 1 and the payload clears the same
+//! byte threshold that gates the ring; `gather`/`scatter` keep
+//! flat/ring (their payloads are per-rank-distinct, so a leader relay
+//! saves no cross-host bytes).
+//!
+//! # Connection multiplexing
+//!
+//! With a multi-host map, cross-host links ride a single multiplexed
+//! TCP connection per host pair ([`transport::mux`]): each world edge
+//! is a *lane*, framed on the shared socket as an 8-byte lane id
+//! followed by the standard wire frame, with per-lane credit-based flow
+//! control so one stalled world cannot head-of-line-block siblings.
+//! Minting N worlds between two hosts therefore costs O(1) sockets,
+//! not O(N) (see [`transport::mux::stats`]).
 
 pub mod collectives;
 pub mod error;
+pub mod hostmap;
 pub mod rendezvous;
 pub mod transport;
 pub mod wire;
@@ -40,6 +67,7 @@ pub mod world;
 
 pub use crate::config::{AlgoDecision, CollAlgo, CollOp, CollPolicy, RingThreshold};
 pub use error::{CclError, CclResult};
+pub use hostmap::HostMap;
 pub use rendezvous::{Rendezvous, TransportKind, WorldOptions};
 pub use transport::fault::{
     registry as fault_registry, EdgePattern, FaultKind, FaultPlan, FaultRegistry, FaultRule,

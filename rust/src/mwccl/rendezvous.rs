@@ -9,7 +9,9 @@
 //! associated with one world").
 
 use super::error::{CclError, CclResult};
+use super::hostmap::HostMap;
 use super::transport::fault::{self, FaultPlan};
+use super::transport::mux;
 use super::transport::ratelimit::RateLimiter;
 use super::transport::shm::{shm_dir, ShmLink, DEFAULT_RING_BYTES};
 use super::transport::tcp::TcpLink;
@@ -83,6 +85,24 @@ pub struct WorldOptions {
     /// default unless `MW_FAULT_PLAN` / `MW_FAULT_SEED` are set) leaves
     /// the transport stack untouched.
     pub fault_plan: Option<Arc<FaultPlan>>,
+    /// Per-rank host placement spec (see [`HostMap`] for the grammar).
+    /// `None` falls back to `MW_HOSTMAP`, and an absent/empty spec
+    /// means single-host: every existing configuration behaves exactly
+    /// as before. With more than one host, a tcp-family transport
+    /// routes cross-host edges over the shared per-host-pair mux
+    /// connection and same-host edges over shm, and `Auto` may select
+    /// the hierarchical collective family. Must be identical on every
+    /// rank (like `coll_policy`).
+    pub hostmap: Option<String>,
+    /// Mux connection namespace: worlds sharing a domain share per-host-
+    /// pair sockets. Defaults to `"mw"` — one set of host-pair
+    /// connections per process, the production shape.
+    pub mux_domain: Option<String>,
+    /// Route *same-host* edges of a multi-host tcp-family world over a
+    /// loopback mux self-connection instead of pairwise shm rings. For
+    /// very wide hosts (a 256-rank bench split 8 ways is ~500 shm ring
+    /// pairs per host) this keeps the file/thread count O(hosts).
+    pub intra_over_mux: bool,
 }
 
 impl Default for WorldOptions {
@@ -93,6 +113,9 @@ impl Default for WorldOptions {
             op_timeout: None,
             coll_policy: CollPolicy::from_env(),
             fault_plan: FaultPlan::from_env().map(Arc::new),
+            hostmap: None,
+            mux_domain: None,
+            intra_over_mux: false,
         }
     }
 }
@@ -160,6 +183,30 @@ impl WorldOptions {
         self.fault_plan = Some(Arc::new(plan));
         self
     }
+
+    /// Place the world's ranks on hosts (overrides `MW_HOSTMAP`; see
+    /// [`HostMap`] for the spec grammar). More than one host enables
+    /// the hierarchical collective family and, on tcp-family
+    /// transports, the per-host-pair mux connection for cross-host
+    /// edges.
+    pub fn with_hostmap(mut self, spec: &str) -> Self {
+        self.hostmap = Some(spec.to_string());
+        self
+    }
+
+    /// Namespace the mux connections (tests isolating their socket
+    /// counts; production leaves the shared default).
+    pub fn with_mux_domain(mut self, domain: &str) -> Self {
+        self.mux_domain = Some(domain.to_string());
+        self
+    }
+
+    /// Carry same-host edges over a loopback mux self-connection
+    /// instead of pairwise shm rings (see [`WorldOptions::intra_over_mux`]).
+    pub fn with_intra_over_mux(mut self) -> Self {
+        self.intra_over_mux = true;
+        self
+    }
 }
 
 /// Namespace helper for store keys of one world.
@@ -185,6 +232,12 @@ impl World {
         if size == 0 || rank >= size {
             return Err(CclError::InvalidUsage(format!("bad rank {rank} of {size}")));
         }
+        // 0. Host placement: explicit spec wins, else `MW_HOSTMAP`,
+        // else everything on one host (the historical behavior).
+        let hosts = match &opts.hostmap {
+            Some(spec) => HostMap::parse(spec, size)?,
+            None => HostMap::from_env(size)?,
+        };
         // 1. Store: leader hosts, members connect.
         let server = if rank == 0 {
             Some(Arc::new(StoreServer::bind(&store_addr.to_string()).map_err(
@@ -208,11 +261,27 @@ impl World {
                 server,
                 opts.op_timeout,
                 opts.coll_policy,
+                hosts,
             ));
         }
 
-        // 2. Links.
+        // 2. Links. A multi-host placement reroutes tcp-family worlds:
+        // cross-host edges share the per-host-pair mux connection
+        // (per-host NIC modeling included), same-host edges take shm —
+        // the paper's intra-host NVLink / inter-host TCP split. A
+        // single-host map (the default) leaves every transport exactly
+        // as before. Shm-transport worlds keep their full shm mesh even
+        // under a hostmap: placement then only steers algorithm choice,
+        // which is what the hier correctness tests exercise.
+        let multi_host = hosts.n_hosts() > 1;
         let links: HashMap<usize, Box<dyn Link>> = match &opts.transport {
+            TransportKind::Tcp { limiter } if multi_host => {
+                let egress = limiter.as_ref().map(|l| l.rate_bps());
+                mux_links(name, rank, &hosts, &opts, egress)?
+            }
+            TransportKind::TcpNic { rate_bps } if multi_host => {
+                mux_links(name, rank, &hosts, &opts, Some(*rate_bps))?
+            }
             TransportKind::Tcp { limiter } => {
                 tcp_links(name, rank, size, &store, limiter.clone(), opts.init_timeout)?
             }
@@ -245,8 +314,63 @@ impl World {
             server,
             opts.op_timeout,
             opts.coll_policy,
+            hosts,
         ))
     }
+}
+
+/// Build a multi-host world's links: shared mux connections across
+/// hosts, shm within a host (or the loopback self-connection when
+/// `intra_over_mux` is set).
+///
+/// Connection establishment walks the needed host pairs in ascending
+/// `(lo, hi)` order on **every** rank before any per-peer link work, so
+/// the accept/dial dependency graph is acyclic: the smallest
+/// outstanding pair always has both its listener and its dialer
+/// actively working on it (see [`mux`] module docs).
+fn mux_links(
+    world: &str,
+    rank: usize,
+    hosts: &HostMap,
+    opts: &WorldOptions,
+    egress_bps: Option<f64>,
+) -> CclResult<HashMap<usize, Box<dyn Link>>> {
+    let size = hosts.size();
+    let my_host = hosts.host(rank);
+    let domain = opts.mux_domain.as_deref().unwrap_or("mw");
+
+    // Establishment pre-pass, globally sorted.
+    let mut pairs: Vec<(usize, usize, usize)> = (0..hosts.n_hosts())
+        .filter(|&h| h != my_host || opts.intra_over_mux)
+        .map(|h| (my_host.min(h), my_host.max(h), h))
+        .collect();
+    pairs.sort_unstable();
+    let mut conns = HashMap::new();
+    for (_, _, h) in pairs {
+        conns.insert(h, mux::ensure_conn(domain, my_host, h, egress_bps, opts.init_timeout)?);
+    }
+
+    let mut links: HashMap<usize, Box<dyn Link>> = HashMap::new();
+    for peer in 0..size {
+        if peer == rank {
+            continue;
+        }
+        let peer_host = hosts.host(peer);
+        if peer_host == my_host && !opts.intra_over_mux {
+            let link = ShmLink::connect(
+                &shm_dir(),
+                world,
+                rank,
+                peer,
+                DEFAULT_RING_BYTES,
+                opts.init_timeout,
+            )?;
+            links.insert(peer, Box::new(link));
+        } else {
+            links.insert(peer, mux::lane_link(&conns[&peer_host], world, rank, peer)?);
+        }
+    }
+    Ok(links)
 }
 
 /// Store-based barrier: increment a counter; the last arriver publishes

@@ -15,9 +15,16 @@
 //! Both push received frames into a shared [`inbox::Inbox`] keyed by
 //! tag, so `recv` order is decoupled from arrival order (needed for the
 //! paper's "P4 must receive from P2 and P3 in arbitrary order" case).
+//!
+//! With a multi-host placement ([`crate::mwccl::HostMap`]), cross-host
+//! edges do not get sockets of their own: they ride one shared
+//! per-host-pair connection as independently flow-controlled *lanes*
+//! ([`mux::LaneLink`]) — O(1) sockets per host pair no matter how many
+//! worlds are minted.
 
 pub mod fault;
 pub mod inbox;
+pub mod mux;
 pub mod ratelimit;
 pub mod shm;
 pub mod tcp;

@@ -1,0 +1,862 @@
+//! Per-host-pair connection multiplexing: many world edges, one socket.
+//!
+//! Without this layer every cross-host world edge is its own TCP
+//! connection, so minting N small worlds between two hosts (the
+//! `fig5_online_instantiation` pattern — one edge world per new
+//! replica) costs O(N) sockets and O(N) reader threads per host pair.
+//! A [`MuxConn`] instead carries **all** worlds' edges between one pair
+//! of hosts over a single shared socket:
+//!
+//! ```text
+//! mux frame := lane:u64  ||  tag:u64 seg_len:u32 msg_len:u32 flags:u8 payload
+//!              └ LANE_HDR ┘  └──────────── standard wire frame ──────────────┘
+//! ```
+//!
+//! * A **lane** is one direction of one world edge: `lane =
+//!   fnv1a(world, src_rank, dst_rank)` (remapped away from 0). Both
+//!   directions of an edge get distinct ids, which is what lets an
+//!   *intra-host* self-connection (`intra_over_mux`) share one loopback
+//!   socket among all local pairs without cross-talk.
+//! * Lane `0` is the **control lane**: credit-return records
+//!   `[lane:u64, bytes:u64]`, nothing else.
+//! * **Per-lane credit flow control**: each sending lane starts with
+//!   [`LANE_WINDOW`] bytes of credit, spends payload bytes per frame
+//!   *before* taking the shared writer lock, and earns them back when
+//!   the receiver's consumer actually `recv`s the message. A world
+//!   whose consumer wedges therefore stops *its own lane* after one
+//!   window — the shared socket, and every sibling world on it, keeps
+//!   flowing (no head-of-line blocking; asserted by the gray-failure
+//!   suite).
+//! * One reader thread per connection demultiplexes frames into
+//!   per-lane [`Inbox`]es. Frames for a lane that has not registered
+//!   yet (world init racing in the two processes) are parked and
+//!   replayed on registration; the sender's credit window bounds the
+//!   parked bytes per lane.
+//!
+//! Connections are process-global, keyed `(domain, my_host,
+//! peer_host)` — the first world that needs a host pair establishes the
+//! socket (lower host id listens, higher dials; the listen address is
+//! announced through an in-process rendezvous map, mirroring how the
+//! per-world store publishes per-rank addresses) and every later world
+//! reuses it: socket count per host pair is O(1) in the number of
+//! worlds (see [`stats`]). Establishment during world init walks host
+//! pairs in ascending `(lo, hi)` order on every rank, which makes the
+//! accept/dial graph acyclic — the smallest outstanding pair always has
+//! both sides working on it.
+//!
+//! Failure semantics match [`super::tcp::TcpLink`] per lane: a
+//! `GOODBYE` frame fails that lane with [`CclError::Aborted`]
+//! (deliberate teardown), connection death fails **every** lane with
+//! [`CclError::RemoteError`] — the whole host is the fault domain, which
+//! is exactly the blast radius a real NIC/host failure has.
+
+use super::inbox::Inbox;
+use super::ratelimit::RateLimiter;
+use super::Link;
+use crate::mwccl::error::{CclError, CclResult};
+use crate::mwccl::wire::{
+    decode_frame_hdr, encode_frame_hdr, FLAG_GOODBYE, FLAG_LAST, FLAG_PROLOGUE, FRAME_HDR,
+    LANE_HDR, SEG_MAX,
+};
+use once_cell::sync::{Lazy, OnceCell};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outer framing prefix: the 8-byte lane id before each wire frame.
+pub const MUX_LANE_HDR: usize = LANE_HDR;
+
+/// Reserved control lane carrying credit returns.
+pub const CONTROL_LANE: u64 = 0;
+
+/// Per-lane send window: payload bytes that may be in flight (sent but
+/// not yet consumed by the receiver's `recv`).
+pub const LANE_WINDOW: usize = 4 << 20;
+
+/// Directional lane id for the `src -> dst` edge of `world`. FNV-1a,
+/// remapped off the control lane.
+pub fn lane_id(world: &str, src: usize, dst: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for b in world.as_bytes() {
+        eat(*b);
+    }
+    for b in (src as u64).to_le_bytes() {
+        eat(b);
+    }
+    for b in (dst as u64).to_le_bytes() {
+        eat(b);
+    }
+    if h == CONTROL_LANE {
+        1
+    } else {
+        h
+    }
+}
+
+/// Sender-side credit window of one lane. The abort flag lives here —
+/// shared by every [`LaneLink`] handle of the lane — so aborting through
+/// any handle releases a sender blocked in `acquire`.
+struct Credit {
+    avail: Mutex<usize>,
+    cv: Condvar,
+    aborted: AtomicBool,
+}
+
+impl Credit {
+    fn new() -> Credit {
+        Credit {
+            avail: Mutex::new(LANE_WINDOW),
+            cv: Condvar::new(),
+            aborted: AtomicBool::new(false),
+        }
+    }
+
+    /// Spend `n` bytes of window, blocking until available. Gives up
+    /// when the connection dies or the lane is aborted.
+    fn acquire(&self, n: usize, dead: &AtomicBool) -> CclResult<()> {
+        if n == 0 {
+            return Ok(());
+        }
+        debug_assert!(n <= LANE_WINDOW, "frame larger than the lane window");
+        let mut avail = self.avail.lock().unwrap();
+        loop {
+            if dead.load(Ordering::Acquire) {
+                return Err(CclError::Transport("mux connection lost".into()));
+            }
+            if self.aborted.load(Ordering::Acquire) {
+                return Err(CclError::Aborted("mux lane aborted".into()));
+            }
+            if *avail >= n {
+                *avail -= n;
+                return Ok(());
+            }
+            // Woken by credit returns; the timeout only bounds how long
+            // a death/abort can go unnoticed.
+            avail = self.cv.wait_timeout(avail, Duration::from_millis(50)).unwrap().0;
+        }
+    }
+
+    fn release(&self, n: usize) {
+        *self.avail.lock().unwrap() += n;
+        self.cv.notify_all();
+    }
+
+    fn kick(&self) {
+        self.cv.notify_all();
+    }
+}
+
+/// A frame that arrived before its lane registered.
+struct Parked {
+    tag: u64,
+    payload: Vec<u8>,
+    msg_len: usize,
+    flags: u8,
+}
+
+/// One endpoint of a shared per-host-pair connection (see module docs).
+pub struct MuxConn {
+    peer_host: usize,
+    writer: Mutex<TcpStream>,
+    /// Receiving lanes: lane id -> (peer rank, inbox).
+    recv_lanes: Mutex<HashMap<u64, (usize, Arc<Inbox>)>>,
+    /// Sending lanes' credit windows.
+    send_credits: Mutex<HashMap<u64, Arc<Credit>>>,
+    /// Frames for lanes not yet registered (bounded per lane by the
+    /// sender's credit window).
+    parked: Mutex<HashMap<u64, Vec<Parked>>>,
+    /// Per-host egress NIC model (cross-host connections only).
+    limiter: Option<Arc<RateLimiter>>,
+    dead: AtomicBool,
+    dead_detail: Mutex<Option<String>>,
+}
+
+impl MuxConn {
+    /// Wrap an established stream pair (`writer` and `reader` are the
+    /// two directions — the same socket for a host pair, the two ends
+    /// of a loopback socket for an intra-host self-connection) and
+    /// start the demux reader thread.
+    fn spawn(
+        peer_host: usize,
+        writer: TcpStream,
+        reader: TcpStream,
+        limiter: Option<Arc<RateLimiter>>,
+    ) -> CclResult<Arc<MuxConn>> {
+        let _ = writer.set_nodelay(true);
+        let conn = Arc::new(MuxConn {
+            peer_host,
+            writer: Mutex::new(writer),
+            recv_lanes: Mutex::new(HashMap::new()),
+            send_credits: Mutex::new(HashMap::new()),
+            parked: Mutex::new(HashMap::new()),
+            limiter,
+            dead: AtomicBool::new(false),
+            dead_detail: Mutex::new(None),
+        });
+        let c = conn.clone();
+        std::thread::Builder::new()
+            .name(format!("mux-rx-h{peer_host}"))
+            .spawn(move || c.reader_loop(reader))
+            .map_err(|e| CclError::InitFailure(format!("mux reader spawn: {e}")))?;
+        Ok(conn)
+    }
+
+    /// Demultiplex frames into per-lane inboxes until the socket dies.
+    fn reader_loop(&self, mut stream: TcpStream) {
+        let mut hdr = [0u8; LANE_HDR + FRAME_HDR];
+        loop {
+            if stream.read_exact(&mut hdr).is_err() {
+                self.fail("mux connection closed");
+                return;
+            }
+            let lane = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+            let (tag, seg, msg_len, flags) = decode_frame_hdr(&hdr[LANE_HDR..]);
+            if seg as usize > SEG_MAX {
+                crate::metrics::global().counter("transport.corrupt_frames").inc();
+                self.fail(&format!("mux frame oversize: {seg} bytes"));
+                return;
+            }
+            let mut payload = vec![0u8; seg as usize];
+            if stream.read_exact(&mut payload).is_err() {
+                self.fail("mux connection died mid-frame");
+                return;
+            }
+            if lane == CONTROL_LANE {
+                // Credit return: [lane:u64, bytes:u64].
+                if payload.len() == 16 {
+                    let l = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+                    let b = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+                    let credit = self.send_credits.lock().unwrap().get(&l).cloned();
+                    if let Some(c) = credit {
+                        c.release(b as usize);
+                    }
+                }
+                continue;
+            }
+            // The parked lock serializes this check-and-park against
+            // `lane_link`'s register-and-drain (lock order: parked, then
+            // recv_lanes) — without it a frame could slip between a
+            // failed lookup and a racing registration's drain.
+            let mut parked = self.parked.lock().unwrap();
+            let entry = self.recv_lanes.lock().unwrap().get(&lane).cloned();
+            match entry {
+                Some((_, inbox)) => {
+                    drop(parked);
+                    deliver(&inbox, tag, &payload, msg_len as usize, flags);
+                }
+                None => parked.entry(lane).or_default().push(Parked {
+                    tag,
+                    payload,
+                    msg_len: msg_len as usize,
+                    flags,
+                }),
+            }
+        }
+    }
+
+    /// Terminal connection failure: every lane (current and future) sees
+    /// `RemoteError` — host death takes every world on the pair down.
+    fn fail(&self, detail: &str) {
+        if self.dead.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        *self.dead_detail.lock().unwrap() = Some(detail.to_string());
+        crate::metrics::log_event(
+            "mux.conn_failed",
+            &[("peer_host", self.peer_host.to_string().as_str()), ("detail", detail)],
+        );
+        for (peer, inbox) in self.recv_lanes.lock().unwrap().values() {
+            inbox.fail(CclError::RemoteError { peer: *peer, detail: detail.to_string() });
+        }
+        for credit in self.send_credits.lock().unwrap().values() {
+            credit.kick();
+        }
+        self.parked.lock().unwrap().clear();
+    }
+
+    fn dead_error(&self) -> CclError {
+        let detail = self
+            .dead_detail
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| "mux connection lost".into());
+        CclError::Transport(detail)
+    }
+
+    /// Write one mux frame. Credit (when given) is spent *before* the
+    /// writer lock, so a window-starved lane blocks outside the shared
+    /// socket and never holds siblings up.
+    fn write_frame(
+        &self,
+        lane: u64,
+        tag: u64,
+        payload: &[u8],
+        msg_len: u32,
+        flags: u8,
+        credit: Option<&Credit>,
+    ) -> CclResult<()> {
+        if self.dead.load(Ordering::Acquire) {
+            return Err(self.dead_error());
+        }
+        if let Some(c) = credit {
+            c.acquire(payload.len(), &self.dead)?;
+        }
+        if let Some(rl) = &self.limiter {
+            rl.acquire(LANE_HDR + FRAME_HDR + payload.len());
+        }
+        let mut hdr = [0u8; LANE_HDR + FRAME_HDR];
+        hdr[0..8].copy_from_slice(&lane.to_le_bytes());
+        encode_frame_hdr(&mut hdr[LANE_HDR..], tag, payload.len() as u32, msg_len, flags);
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&hdr)
+            .and_then(|_| w.write_all(payload))
+            .map_err(|e| CclError::Transport(format!("mux write: {e}")))
+    }
+
+    /// Return `bytes` of credit for `lane` to the peer (consumption
+    /// notification on the control lane).
+    fn return_credit(&self, lane: u64, bytes: usize) {
+        if bytes == 0 || self.dead.load(Ordering::Acquire) {
+            return;
+        }
+        let mut payload = [0u8; 16];
+        payload[0..8].copy_from_slice(&lane.to_le_bytes());
+        payload[8..16].copy_from_slice(&(bytes as u64).to_le_bytes());
+        let _ = self.write_frame(CONTROL_LANE, 0, &payload, 16, FLAG_LAST, None);
+    }
+}
+
+/// Dispatch one frame into a lane's inbox (goodbye = deliberate
+/// teardown of that lane only).
+fn deliver(inbox: &Inbox, tag: u64, payload: &[u8], msg_len: usize, flags: u8) {
+    if flags & FLAG_GOODBYE != 0 {
+        let reason = String::from_utf8_lossy(payload).to_string();
+        let detail = if reason.is_empty() { "peer said goodbye".to_string() } else { reason };
+        inbox.fail(CclError::Aborted(detail));
+    } else {
+        inbox.push_frame(tag, payload, msg_len, flags);
+    }
+}
+
+/// One world edge riding a shared [`MuxConn`] — the mux counterpart of
+/// [`super::tcp::TcpLink`], implementing [`Link`] 1:1.
+pub struct LaneLink {
+    conn: Arc<MuxConn>,
+    peer: usize,
+    send_lane: u64,
+    recv_lane: u64,
+    inbox: Arc<Inbox>,
+    credit: Arc<Credit>,
+    /// Serializes whole logical messages on this lane (frames of two
+    /// same-tag messages must not interleave); frames of *different*
+    /// lanes interleave freely on the shared socket.
+    msg_lock: Mutex<()>,
+}
+
+/// Open the `my_rank <-> peer_rank` edge of `world` over `conn`:
+/// registers the receive lane (replaying any parked frames) and creates
+/// the send-side credit window.
+pub fn lane_link(
+    conn: &Arc<MuxConn>,
+    world: &str,
+    my_rank: usize,
+    peer_rank: usize,
+) -> CclResult<Box<dyn Link>> {
+    let send_lane = lane_id(world, my_rank, peer_rank);
+    let recv_lane = lane_id(world, peer_rank, my_rank);
+    let inbox = Arc::new(Inbox::for_peer(peer_rank));
+    // Register, then drain anything that raced ahead — all under the
+    // parked lock (same order as the reader: parked, then recv_lanes),
+    // so no frame can land between the lookup miss and our drain.
+    let parked = {
+        let mut parked = conn.parked.lock().unwrap();
+        conn.recv_lanes.lock().unwrap().insert(recv_lane, (peer_rank, inbox.clone()));
+        parked.remove(&recv_lane)
+    };
+    if let Some(frames) = parked {
+        for p in frames {
+            deliver(&inbox, p.tag, &p.payload, p.msg_len, p.flags);
+        }
+    }
+    if conn.dead.load(Ordering::Acquire) {
+        inbox.fail(conn.dead_error());
+    }
+    let credit = conn
+        .send_credits
+        .lock()
+        .unwrap()
+        .entry(send_lane)
+        .or_insert_with(|| Arc::new(Credit::new()))
+        .clone();
+    Ok(Box::new(LaneLink {
+        conn: conn.clone(),
+        peer: peer_rank,
+        send_lane,
+        recv_lane,
+        inbox,
+        credit,
+        msg_lock: Mutex::new(()),
+    }))
+}
+
+impl Link for LaneLink {
+    fn send(&self, tag: u64, parts: &[&[u8]]) -> CclResult<()> {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total > u32::MAX as usize {
+            return Err(CclError::InvalidUsage(format!("message too large: {total}")));
+        }
+        let _msg = self.msg_lock.lock().unwrap();
+        if total == 0 {
+            return self.conn.write_frame(
+                self.send_lane,
+                tag,
+                &[],
+                0,
+                FLAG_LAST,
+                Some(&self.credit),
+            );
+        }
+        // Gather `parts` into SEG_MAX segments (one copy per segment —
+        // the frame needs contiguous payload behind the shared socket).
+        let mut seg = Vec::with_capacity(SEG_MAX.min(total));
+        let mut sent = 0usize;
+        for part in parts {
+            let mut off = 0usize;
+            while off < part.len() {
+                let take = (SEG_MAX - seg.len()).min(part.len() - off);
+                seg.extend_from_slice(&part[off..off + take]);
+                off += take;
+                sent += take;
+                if seg.len() == SEG_MAX || sent == total {
+                    let flags = if sent == total { FLAG_LAST } else { 0 };
+                    self.conn.write_frame(
+                        self.send_lane,
+                        tag,
+                        &seg,
+                        total as u32,
+                        flags,
+                        Some(&self.credit),
+                    )?;
+                    seg.clear();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn send_prologue(&self, tag: u64, payload: &[u8]) -> CclResult<()> {
+        if payload.len() > SEG_MAX {
+            return Err(CclError::InvalidUsage("prologue exceeds one frame".into()));
+        }
+        let _msg = self.msg_lock.lock().unwrap();
+        self.conn.write_frame(
+            self.send_lane,
+            tag,
+            payload,
+            payload.len() as u32,
+            FLAG_LAST | FLAG_PROLOGUE,
+            Some(&self.credit),
+        )
+    }
+
+    fn recv_prologue(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        let buf = self.inbox.recv_prologue(tag, timeout)?;
+        self.conn.return_credit(self.recv_lane, buf.len());
+        Ok(buf)
+    }
+
+    fn recv(&self, tag: u64, timeout: Option<Duration>) -> CclResult<Vec<u8>> {
+        let buf = self.inbox.recv(tag, timeout)?;
+        self.conn.return_credit(self.recv_lane, buf.len());
+        Ok(buf)
+    }
+
+    fn try_recv(&self, tag: u64) -> CclResult<Option<Vec<u8>>> {
+        match self.inbox.try_recv(tag)? {
+            Some(buf) => {
+                self.conn.return_credit(self.recv_lane, buf.len());
+                Ok(Some(buf))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn recycle(&self, buf: Vec<u8>) {
+        self.inbox.recycle(buf);
+    }
+
+    fn send_raw_frame(&self, tag: u64, payload: &[u8], msg_len: u32, flags: u8) -> CclResult<()> {
+        // Chaos hook (truncate injection): header fields pass verbatim.
+        self.conn.write_frame(
+            self.send_lane,
+            tag,
+            payload,
+            msg_len,
+            flags,
+            Some(&self.credit),
+        )
+    }
+
+    fn farewell(&self, reason: &str) {
+        // Best-effort, never blocking behind a congested lane: skip if
+        // the shared writer is busy (the store-side teardown signal
+        // still lands). Bare GOODBYE header + short reason; no credit
+        // spend (the peer fails the lane instead of consuming).
+        if self.conn.dead.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(w) = self.conn.writer.try_lock() else {
+            return;
+        };
+        let reason = &reason.as_bytes()[..reason.len().min(128)];
+        let mut hdr = [0u8; LANE_HDR + FRAME_HDR];
+        hdr[0..8].copy_from_slice(&self.send_lane.to_le_bytes());
+        encode_frame_hdr(
+            &mut hdr[LANE_HDR..],
+            0,
+            reason.len() as u32,
+            reason.len() as u32,
+            FLAG_LAST | FLAG_GOODBYE,
+        );
+        let mut w = w;
+        let _ = w.set_write_timeout(Some(Duration::from_millis(50)));
+        let _ = w.write_all(&hdr).and_then(|_| w.write_all(reason));
+        let _ = w.set_write_timeout(None);
+    }
+
+    fn abort(&self, reason: &str) {
+        if self.credit.aborted.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.inbox.fail(CclError::Aborted(reason.to_string()));
+        self.credit.kick();
+    }
+
+    fn kind(&self) -> &'static str {
+        "mux"
+    }
+
+    fn peer(&self) -> usize {
+        self.peer
+    }
+}
+
+impl Drop for LaneLink {
+    fn drop(&mut self) {
+        // The connection outlives the world; only this edge's lane state
+        // is retired.
+        self.conn.recv_lanes.lock().unwrap().remove(&self.recv_lane);
+        self.conn.send_credits.lock().unwrap().remove(&self.send_lane);
+        self.conn.parked.lock().unwrap().remove(&self.recv_lane);
+    }
+}
+
+type ConnKey = (String, usize, usize);
+
+/// Established (or establishing) connections, one per `(domain,
+/// my_host, peer_host)` endpoint. The `OnceCell` serializes racing
+/// establishers: one rank does the socket work, siblings block until
+/// the connection exists.
+static CONNS: Lazy<Mutex<HashMap<ConnKey, Arc<OnceCell<Arc<MuxConn>>>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// In-process rendezvous for listen addresses, keyed `(domain, lo, hi)`.
+static ADDRS: Lazy<Mutex<HashMap<ConnKey, SocketAddr>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Per-host egress NIC limiters, keyed `(domain, host)` — every
+/// cross-host connection of one host shares its NIC.
+static LIMITERS: Lazy<Mutex<HashMap<(String, usize), Arc<RateLimiter>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Get (establishing on first use) the shared connection from `my_host`
+/// to `peer_host` in `domain`. `egress_bps`, when set, models each
+/// host's NIC: all of `my_host`'s *cross-host* connections in the
+/// domain share one rate limiter (the first rate given wins).
+pub fn ensure_conn(
+    domain: &str,
+    my_host: usize,
+    peer_host: usize,
+    egress_bps: Option<f64>,
+    timeout: Duration,
+) -> CclResult<Arc<MuxConn>> {
+    let cell = CONNS
+        .lock()
+        .unwrap()
+        .entry((domain.to_string(), my_host, peer_host))
+        .or_default()
+        .clone();
+    cell.get_or_try_init(|| establish(domain, my_host, peer_host, egress_bps, timeout))
+        .cloned()
+}
+
+fn establish(
+    domain: &str,
+    my_host: usize,
+    peer_host: usize,
+    egress_bps: Option<f64>,
+    timeout: Duration,
+) -> CclResult<Arc<MuxConn>> {
+    let limiter = match egress_bps {
+        Some(bps) if my_host != peer_host => Some(
+            LIMITERS
+                .lock()
+                .unwrap()
+                .entry((domain.to_string(), my_host))
+                .or_insert_with(|| Arc::new(RateLimiter::new(bps)))
+                .clone(),
+        ),
+        _ => None,
+    };
+    crate::metrics::log_event(
+        "mux.conn_established",
+        &[
+            ("domain", domain),
+            ("host", my_host.to_string().as_str()),
+            ("peer_host", peer_host.to_string().as_str()),
+        ],
+    );
+    if my_host == peer_host {
+        // Intra-host self-connection (`intra_over_mux`): one loopback
+        // socket whose two ends are this endpoint's writer and reader —
+        // directional lane ids keep local pairs apart.
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| CclError::InitFailure(format!("mux self bind: {e}")))?;
+        let addr = listener.local_addr().map_err(|e| CclError::InitFailure(e.to_string()))?;
+        let writer = TcpStream::connect(addr)
+            .map_err(|e| CclError::InitFailure(format!("mux self dial: {e}")))?;
+        let (reader, _) = listener
+            .accept()
+            .map_err(|e| CclError::InitFailure(format!("mux self accept: {e}")))?;
+        return MuxConn::spawn(peer_host, writer, reader, limiter);
+    }
+    let pair = (domain.to_string(), my_host.min(peer_host), my_host.max(peer_host));
+    let stream = if my_host < peer_host {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| CclError::InitFailure(format!("mux bind: {e}")))?;
+        let addr = listener.local_addr().map_err(|e| CclError::InitFailure(e.to_string()))?;
+        ADDRS.lock().unwrap().insert(pair, addr);
+        accept_deadline(&listener, timeout)?
+    } else {
+        let deadline = Instant::now() + timeout;
+        let addr = loop {
+            if let Some(a) = ADDRS.lock().unwrap().get(&pair).copied() {
+                break a;
+            }
+            if Instant::now() >= deadline {
+                return Err(CclError::InitFailure(format!(
+                    "mux: no listener for host pair {}-{} in domain {domain:?}",
+                    pair.1, pair.2
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        TcpStream::connect_timeout(&addr, timeout)
+            .map_err(|e| CclError::InitFailure(format!("mux dial host {peer_host}: {e}")))?
+    };
+    let reader = stream
+        .try_clone()
+        .map_err(|e| CclError::InitFailure(format!("mux clone: {e}")))?;
+    MuxConn::spawn(peer_host, stream, reader, limiter)
+}
+
+fn accept_deadline(listener: &TcpListener, timeout: Duration) -> CclResult<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| CclError::InitFailure(e.to_string()))?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false).map_err(|e| CclError::InitFailure(e.to_string()))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(CclError::InitFailure("mux accept timeout".into()));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(CclError::InitFailure(format!("mux accept: {e}"))),
+        }
+    }
+}
+
+/// Socket-scaling observability for one mux domain.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MuxStats {
+    /// Established connection *endpoints* in the domain (each host pair
+    /// within one process contributes two — one per side).
+    pub conns: usize,
+    /// Currently registered receive lanes across those connections.
+    pub lanes: usize,
+}
+
+/// Count the domain's established connections and live lanes — the
+/// world-mint scaling assertion (`conns` must stay flat while worlds,
+/// and therefore `lanes`, grow).
+pub fn stats(domain: &str) -> MuxStats {
+    let conns: Vec<Arc<MuxConn>> = CONNS
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|((d, _, _), _)| d == domain)
+        .filter_map(|(_, cell)| cell.get().cloned())
+        .collect();
+    MuxStats {
+        conns: conns.len(),
+        lanes: conns.iter().map(|c| c.recv_lanes.lock().unwrap().len()).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(domain: &str) -> (Arc<MuxConn>, Arc<MuxConn>) {
+        let d = domain.to_string();
+        let t = {
+            let d = d.clone();
+            std::thread::spawn(move || ensure_conn(&d, 0, 1, None, Duration::from_secs(5)))
+        };
+        let b = ensure_conn(&d, 1, 0, None, Duration::from_secs(5)).unwrap();
+        (t.join().unwrap().unwrap(), b)
+    }
+
+    #[test]
+    fn lane_ids_directional_and_nonzero() {
+        let ab = lane_id("w", 0, 1);
+        let ba = lane_id("w", 1, 0);
+        assert_ne!(ab, ba, "directions must not share a lane");
+        assert_ne!(ab, CONTROL_LANE);
+        assert_ne!(lane_id("w", 0, 1), lane_id("w2", 0, 1), "worlds must not share a lane");
+    }
+
+    #[test]
+    fn roundtrip_and_sibling_isolation() {
+        let (a, b) = pair("mux-test-rt");
+        let a1 = lane_link(&a, "w1", 0, 1).unwrap();
+        let b1 = lane_link(&b, "w1", 1, 0).unwrap();
+        let a2 = lane_link(&a, "w2", 0, 1).unwrap();
+        let b2 = lane_link(&b, "w2", 1, 0).unwrap();
+        a1.send(7, &[b"hello ", b"world"]).unwrap();
+        a2.send(7, &[b"other"]).unwrap();
+        b2.send(9, &[b"back"]).unwrap();
+        assert_eq!(b1.recv(7, Some(Duration::from_secs(2))).unwrap(), b"hello world");
+        assert_eq!(b2.recv(7, Some(Duration::from_secs(2))).unwrap(), b"other");
+        assert_eq!(a2.recv(9, Some(Duration::from_secs(2))).unwrap(), b"back");
+        let s = stats("mux-test-rt");
+        assert_eq!(s.conns, 2, "one endpoint per side, shared by both worlds");
+        assert_eq!(s.lanes, 4);
+    }
+
+    #[test]
+    fn large_message_segments() {
+        let (a, b) = pair("mux-test-large");
+        let tx = lane_link(&a, "big", 0, 1).unwrap();
+        let rx = lane_link(&b, "big", 1, 0).unwrap();
+        let payload: Vec<u8> = (0..3 * SEG_MAX + 123).map(|i| (i % 251) as u8).collect();
+        let p = payload.clone();
+        let t = std::thread::spawn(move || tx.send(42, &[&p]));
+        let got = rx.recv(42, Some(Duration::from_secs(5))).unwrap();
+        t.join().unwrap().unwrap();
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn parked_frames_replay_on_late_registration() {
+        let (a, b) = pair("mux-test-park");
+        let tx = lane_link(&a, "early", 0, 1).unwrap();
+        tx.send(3, &[b"raced ahead"]).unwrap();
+        tx.send_prologue(4, &[9]).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let rx = lane_link(&b, "early", 1, 0).unwrap();
+        assert_eq!(rx.recv(3, Some(Duration::from_secs(2))).unwrap(), b"raced ahead");
+        assert_eq!(rx.recv_prologue(4, Some(Duration::from_secs(2))).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn credit_starved_lane_does_not_block_siblings() {
+        let (a, b) = pair("mux-test-credit");
+        let slow_tx = lane_link(&a, "slow", 0, 1).unwrap();
+        let _slow_rx = lane_link(&b, "slow", 1, 0).unwrap(); // never recvs
+        let fast_tx = lane_link(&a, "fast", 0, 1).unwrap();
+        let fast_rx = lane_link(&b, "fast", 1, 0).unwrap();
+        // Exhaust the slow lane's window from a background thread; it
+        // must block in credit acquisition, not on the shared socket.
+        let blocked = Arc::new(AtomicBool::new(false));
+        let flag = blocked.clone();
+        let t = std::thread::spawn(move || {
+            let chunk = vec![0u8; 1 << 20];
+            for _ in 0..(LANE_WINDOW / (1 << 20)) {
+                slow_tx.send(1, &[&chunk]).unwrap();
+            }
+            flag.store(true, Ordering::Release);
+            // One past the window: parks in Credit::acquire until abort.
+            let _ = slow_tx.send(2, &[&chunk]);
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !blocked.load(Ordering::Acquire) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(blocked.load(Ordering::Acquire), "window never filled");
+        std::thread::sleep(Duration::from_millis(50)); // let the extra send hit the wall
+        // The sibling lane flows while the slow lane is starved.
+        fast_tx.send(5, &[b"unblocked"]).unwrap();
+        assert_eq!(
+            fast_rx.recv(5, Some(Duration::from_secs(2))).unwrap(),
+            b"unblocked",
+            "sibling lane must not be head-of-line blocked"
+        );
+        // Cleanup: abort the starved sender so its thread exits.
+        // (abort is on the Link impl; reach it through a fresh handle's
+        // credit — the lane's credit object is shared.)
+        let again = lane_link(&a, "slow", 0, 1).unwrap();
+        again.abort("test cleanup");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn goodbye_aborts_one_lane_conn_death_fails_all() {
+        let (a, b) = pair("mux-test-bye");
+        let a1 = lane_link(&a, "bye1", 0, 1).unwrap();
+        let b1 = lane_link(&b, "bye1", 1, 0).unwrap();
+        let b2 = lane_link(&b, "bye2", 1, 0).unwrap();
+        a1.farewell("done here");
+        let err = b1.recv(1, Some(Duration::from_secs(2))).unwrap_err();
+        assert!(matches!(err, CclError::Aborted(_)), "goodbye => Aborted, got {err:?}");
+        // Sibling lane is untouched by the goodbye.
+        assert!(matches!(
+            b2.recv(1, Some(Duration::from_millis(50))),
+            Err(CclError::Timeout(_))
+        ));
+        // Now kill the whole connection: every lane sees RemoteError.
+        a.fail("host down");
+        // a's writer is dead from b's perspective once the socket drops;
+        // emulate by failing b's endpoint directly too (single-process
+        // registry shares no kernel-level teardown ordering guarantee).
+        b.fail("host down");
+        assert!(matches!(
+            b2.recv(1, Some(Duration::from_secs(2))),
+            Err(CclError::RemoteError { peer: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn self_connection_multiplexes_local_pairs() {
+        let conn = ensure_conn("mux-test-self", 3, 3, None, Duration::from_secs(5)).unwrap();
+        let l01 = lane_link(&conn, "lw", 0, 1).unwrap();
+        let l10 = lane_link(&conn, "lw", 1, 0).unwrap();
+        l01.send(2, &[b"down"]).unwrap();
+        l10.send(2, &[b"up"]).unwrap();
+        assert_eq!(l10.recv(2, Some(Duration::from_secs(2))).unwrap(), b"down");
+        assert_eq!(l01.recv(2, Some(Duration::from_secs(2))).unwrap(), b"up");
+    }
+}

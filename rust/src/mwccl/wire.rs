@@ -27,6 +27,13 @@ pub const SEG_MAX: usize = 256 * 1024;
 /// Frame header length: tag(8) + seg_len(4) + msg_len(4) + flags(1).
 pub const FRAME_HDR: usize = 17;
 
+/// Outer lane-id prefix on multiplexed connections: frames on a shared
+/// per-host-pair socket are `lane:u64 || frame` (see
+/// [`super::transport::mux`]); the lane routes the standard frame to
+/// its world edge's inbox. Point-to-point transports (one socket per
+/// edge) omit it.
+pub const LANE_HDR: usize = 8;
+
 /// Flag: final segment of the message.
 pub const FLAG_LAST: u8 = 1;
 

@@ -13,6 +13,7 @@
 //! is expected to clean up (`WorldManager::remove_world`).
 
 use super::error::{CclError, CclResult};
+use super::hostmap::HostMap;
 use super::transport::Link;
 use super::work::Work;
 use crate::config::{CollOp, CollPolicy};
@@ -22,6 +23,11 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Algorithm trace / prologue codes (0 in the trace means "never ran").
+pub(crate) const ALGO_FLAT: u8 = 1;
+pub(crate) const ALGO_RING: u8 = 2;
+pub(crate) const ALGO_HIER: u8 = 3;
 
 /// Reduction operator for `reduce`/`all_reduce`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,12 +58,17 @@ pub struct WorldCore {
     seq: AtomicU64,
     /// Default timeout applied to blocking waits inside collectives.
     pub op_timeout: Option<Duration>,
-    /// Collective algorithm policy: flat star / pipelined ring / auto,
-    /// plus the per-op ring threshold table.
+    /// Collective algorithm policy: flat star / pipelined ring /
+    /// hierarchical / auto, plus the per-op ring threshold table.
     pub coll_policy: CollPolicy,
+    /// Per-rank host placement (from `MW_HOSTMAP` or
+    /// `WorldOptions::with_hostmap`; single-host when unset). Drives the
+    /// hierarchical collectives and `Auto`'s host-count input.
+    pub hosts: HostMap,
     /// Last algorithm actually run per collective (0 = none yet,
-    /// 1 = flat, 2 = ring) — observability for tests, benches and the
-    /// CI quick-ablation step; negotiated `Auto` choices land here too.
+    /// 1 = flat, 2 = ring, 3 = hier) — observability for tests, benches
+    /// and the CI quick-ablation step; negotiated `Auto` choices land
+    /// here too.
     algo_trace: [AtomicU8; 6],
     /// Largest single contribution (bytes) ever observed per collective
     /// on this world. Roots of size-negotiated ops whose payload they
@@ -135,29 +146,31 @@ impl WorldCore {
         }
     }
 
-    /// Send the root's one-byte flat-vs-ring verdict for a negotiated
-    /// `Auto` collective (prologue lane of `tag`; see `wire.rs`).
-    pub(crate) fn send_algo_prologue(&self, peer: usize, tag: u64, ring: bool) -> CclResult<()> {
-        self.link(peer)?.send_prologue(tag, &[u8::from(ring)])
+    /// Send the root's one-byte algorithm verdict for a negotiated
+    /// `Auto` collective (prologue lane of `tag`; see `wire.rs`). The
+    /// wire byte is `code - 1`: 0 = flat, 1 = ring, 2 = hier.
+    pub(crate) fn send_algo_prologue(&self, peer: usize, tag: u64, code: u8) -> CclResult<()> {
+        debug_assert!((ALGO_FLAT..=ALGO_HIER).contains(&code));
+        crate::metrics::global().counter("coll_prologue_rounds").inc();
+        self.link(peer)?.send_prologue(tag, &[code - 1])
     }
 
-    /// Receive the root's flat-vs-ring verdict (counterpart of
-    /// [`WorldCore::send_algo_prologue`]).
-    pub(crate) fn recv_algo_prologue(&self, peer: usize, tag: u64) -> CclResult<bool> {
+    /// Receive the root's algorithm verdict (counterpart of
+    /// [`WorldCore::send_algo_prologue`]); returns an `ALGO_*` code.
+    pub(crate) fn recv_algo_prologue(&self, peer: usize, tag: u64) -> CclResult<u8> {
         let b = self.link(peer)?.recv_prologue(tag, self.op_timeout)?;
         match b.as_slice() {
-            [0] => Ok(false),
-            [1] => Ok(true),
+            [w @ 0..=2] => Ok(w + 1),
             other => Err(CclError::Transport(format!(
                 "bad algo prologue from rank {peer}: {other:?}"
             ))),
         }
     }
 
-    /// Record the algorithm a collective actually ran (see
-    /// [`World::last_algo`]).
-    pub(crate) fn note_algo(&self, op: CollOp, ring: bool) {
-        self.algo_trace[op.index()].store(if ring { 2 } else { 1 }, Ordering::Relaxed);
+    /// Record the algorithm a collective actually ran, as an `ALGO_*`
+    /// code (see [`World::last_algo`]).
+    pub(crate) fn note_algo(&self, op: CollOp, code: u8) {
+        self.algo_trace[op.index()].store(code, Ordering::Relaxed);
     }
 
     /// Record one rank's observed contribution size for `op` (the
@@ -266,8 +279,10 @@ impl World {
         store_server: Option<Arc<crate::store::StoreServer>>,
         op_timeout: Option<Duration>,
         coll_policy: CollPolicy,
+        hosts: HostMap,
     ) -> World {
         debug_assert_eq!(links.len(), size - 1, "need a link to every peer");
+        debug_assert_eq!(hosts.size(), size.max(1), "host map must cover the world");
         let core = Arc::new(WorldCore {
             name: name.clone(),
             rank,
@@ -278,6 +293,7 @@ impl World {
             seq: AtomicU64::new(0),
             op_timeout,
             coll_policy,
+            hosts,
             algo_trace: Default::default(),
             max_contrib: Default::default(),
             pending_recvs: Mutex::new(Vec::new()),
@@ -328,14 +344,16 @@ impl World {
     }
 
     /// The algorithm the last completed `op` on this world actually ran
-    /// (`"flat"` / `"ring"`), `None` if the op never ran. For negotiated
-    /// `Auto` collectives this reflects the root's prologue verdict —
-    /// the observable proof that e.g. a sub-threshold broadcast kept the
-    /// flat fast path.
+    /// (`"flat"` / `"ring"` / `"hier"`), `None` if the op never ran. For
+    /// negotiated `Auto` collectives this reflects the root's prologue
+    /// verdict — the observable proof that e.g. a sub-threshold
+    /// broadcast kept the flat fast path, or that a multi-host world
+    /// went hierarchical.
     pub fn last_algo(&self, op: CollOp) -> Option<&'static str> {
         match self.core.algo_trace[op.index()].load(Ordering::Relaxed) {
-            1 => Some("flat"),
-            2 => Some("ring"),
+            ALGO_FLAT => Some("flat"),
+            ALGO_RING => Some("ring"),
+            ALGO_HIER => Some("hier"),
             _ => None,
         }
     }

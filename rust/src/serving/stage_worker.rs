@@ -180,7 +180,14 @@ pub fn init_node_worlds(
         .map(|def| {
             let rank = def.rank_of(node).expect("member");
             let addr: SocketAddr = format!("127.0.0.1:{}", def.store_port).parse().unwrap();
-            mgr_init_async(mgr.clone(), def.name.clone(), rank, def.size(), addr, opts.clone())
+            // A placed topology pins each world's rank→host picture so
+            // the collective selector and the mux transport see the
+            // same locality the deployment has.
+            let opts = match topo.world_hostmap(&def) {
+                Some(spec) => opts.clone().with_hostmap(&spec),
+                None => opts.clone(),
+            };
+            mgr_init_async(mgr.clone(), def.name.clone(), rank, def.size(), addr, opts)
         })
         .collect();
     for h in handles {

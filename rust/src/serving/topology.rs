@@ -190,6 +190,13 @@ pub struct Topology {
     pub prefix: String,
     /// Monotone counter for replacement-world names.
     pub generation: u64,
+    /// Host placement: node → host id. Empty (the default) means
+    /// everything is co-located — the historical single-host behavior.
+    /// A placed topology derives a per-world `MW_HOSTMAP` spec from it
+    /// (see [`Topology::world_hostmap`]) so every world a node joins
+    /// carries the same locality picture into the collective selector
+    /// and the mux transport. Nodes absent from the map sit on host 0.
+    pub hosts: BTreeMap<NodeId, usize>,
 }
 
 impl Topology {
@@ -269,7 +276,58 @@ impl Topology {
             worlds,
             prefix: prefix.to_string(),
             generation: 0,
+            hosts: BTreeMap::new(),
         }
+    }
+
+    // ------------------------------------------------------- placement
+
+    /// Place `node` on `host`. Raw host ids are free-form; each world's
+    /// derived spec renumbers them densely (see
+    /// [`crate::mwccl::HostMap`]).
+    pub fn assign_host(&mut self, node: NodeId, host: usize) {
+        self.hosts.insert(node, host);
+    }
+
+    /// Bulk placement: the leader on host 0 and every replica — all its
+    /// shards together — round-robin over `n_hosts` hosts in `(stage,
+    /// replica)` order. Models the common "one replica per machine"
+    /// deployment, under which TP worlds stay intra-host while pipeline
+    /// edges cross hosts.
+    pub fn place_replicas(&mut self, n_hosts: usize) {
+        assert!(n_hosts >= 1);
+        self.hosts.insert(NodeId::Leader, 0);
+        let mut group = 0usize;
+        for stage in 0..self.n_stages() {
+            for replica in self.live_replicas(stage) {
+                let host = group % n_hosts;
+                for shard in self.shards_of(stage, replica) {
+                    self.hosts.insert(shard, host);
+                }
+                group += 1;
+            }
+        }
+    }
+
+    /// Host of `node` (0 when unplaced — co-located by default).
+    pub fn host_of(&self, node: NodeId) -> usize {
+        self.hosts.get(&node).copied().unwrap_or(0)
+    }
+
+    /// The `MW_HOSTMAP` comma-list spec for `w`, aligned with its rank
+    /// order (`spec[i]` is `members[i]`'s host). `None` when the
+    /// topology is unplaced or all members share a host — the world
+    /// then runs with the plain single-host default and no entry needs
+    /// to be threaded into its `WorldOptions`.
+    pub fn world_hostmap(&self, w: &WorldDef) -> Option<String> {
+        if self.hosts.is_empty() {
+            return None;
+        }
+        let ids: Vec<usize> = w.members.iter().map(|&m| self.host_of(m)).collect();
+        if ids.iter().all(|&h| h == ids[0]) {
+            return None;
+        }
+        Some(ids.iter().map(|h| h.to_string()).collect::<Vec<_>>().join(","))
     }
 
     pub fn n_stages(&self) -> usize {
@@ -477,6 +535,7 @@ impl Topology {
             .drain(..)
             .partition(|w| w.members.contains(&node));
         self.worlds = keep;
+        self.hosts.remove(&node);
         dead.into_iter().map(|w| w.name).collect()
     }
 
@@ -496,13 +555,14 @@ impl Topology {
                 w.members.iter().any(|m| m.in_replica(stage, replica))
             });
         self.worlds = keep;
+        self.hosts.retain(|n, _| !n.in_replica(stage, replica));
         dead.into_iter().map(|w| w.name).collect()
     }
 
     // ------------------------------------------------------------- JSON
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("prefix", Json::str(self.prefix.clone())),
             ("generation", Json::num(self.generation as f64)),
             (
@@ -517,7 +577,20 @@ impl Topology {
                 "worlds",
                 Json::arr(self.worlds.iter().map(world_to_json).collect()),
             ),
-        ])
+        ];
+        // Omitted when unplaced, so pre-placement dumps stay byte-identical.
+        if !self.hosts.is_empty() {
+            pairs.push((
+                "hosts",
+                Json::Obj(
+                    self.hosts
+                        .iter()
+                        .map(|(n, &h)| (n.to_string(), Json::num(h as f64)))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Topology> {
@@ -545,7 +618,16 @@ impl Topology {
         {
             worlds.push(world_from_json(w)?);
         }
-        Ok(Topology { replicas, tp, worlds, prefix, generation })
+        let mut hosts = BTreeMap::new();
+        if let Some(m) = j.get("hosts").and_then(|v| v.as_obj()) {
+            for (k, v) in m {
+                let host = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad host id for node {k}"))?;
+                hosts.insert(NodeId::parse(k)?, host);
+            }
+        }
+        Ok(Topology { replicas, tp, worlds, prefix, generation, hosts })
     }
 
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
@@ -844,5 +926,55 @@ mod tests {
     #[test]
     fn shape_string() {
         assert_eq!(Topology::pipeline("x", &[1, 2, 1], 30_000).shape(), "1x2x1");
+    }
+
+    #[test]
+    fn unplaced_topology_derives_no_hostmaps() {
+        let t = Topology::pipeline("mw", &[1, 2, 1], 34_000);
+        assert!(t.hosts.is_empty());
+        for w in &t.worlds {
+            assert_eq!(t.world_hostmap(w), None);
+        }
+    }
+
+    #[test]
+    fn place_replicas_keeps_shards_together_and_splits_edges() {
+        let mut t = Topology::pipeline_tp("mw", &[1, 2], &[1, 2], 35_000);
+        t.place_replicas(3);
+        // Leader + s0r0 share host 0; s1r0 → host 1, s1r1 → host 2.
+        assert_eq!(t.host_of(NodeId::Leader), 0);
+        assert_eq!(t.host_of(NodeId::worker(0, 0)), 0);
+        assert_eq!(t.host_of(NodeId::worker(1, 0)), 1);
+        assert_eq!(t.host_of(NodeId::Worker { stage: 1, replica: 1, shard: 1 }), 2);
+        // TP worlds stay intra-host → no spec needed.
+        let tp = t.tp_world_of(NodeId::worker(1, 0)).unwrap();
+        assert_eq!(t.world_hostmap(tp), None);
+        // The in edge is co-located too (leader and s0r0 on host 0).
+        let in_edge = t.in_edges(NodeId::worker(0, 0))[0];
+        assert_eq!(t.world_hostmap(in_edge), None);
+        // Cross-host pipeline edges get a rank-aligned comma list.
+        let e = t.out_edges(NodeId::worker(0, 0));
+        let specs: Vec<Option<String>> = e.iter().map(|w| t.world_hostmap(w)).collect();
+        assert_eq!(specs, vec![Some("0,1".into()), Some("0,2".into())]);
+        let out = t.in_edges(NodeId::Leader)[0];
+        assert_eq!(t.world_hostmap(out), Some("1,0".into()));
+    }
+
+    #[test]
+    fn host_placement_survives_json_and_node_removal() {
+        let mut t = Topology::pipeline("mw", &[1, 2, 1], 36_000);
+        t.place_replicas(2);
+        let back = Topology::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.host_of(NodeId::worker(1, 0)), 1);
+        assert_eq!(back.host_of(NodeId::worker(1, 1)), 0, "round-robin wraps");
+        // Unplaced topologies serialize without a hosts key at all.
+        let plain = Topology::pipeline("mw", &[1, 1], 37_000);
+        assert!(!plain.to_json().to_string().contains("hosts"));
+        // Removing a node forgets its placement.
+        let p3 = NodeId::worker(1, 1);
+        t.remove_node(p3);
+        assert!(!t.hosts.contains_key(&p3));
+        assert_eq!(t.host_of(p3), 0, "unplaced falls back to host 0");
     }
 }

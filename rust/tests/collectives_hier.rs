@@ -1,0 +1,266 @@
+//! Hierarchical (topology-aware) collectives: checksum equivalence with
+//! the flat and ring algorithms across `MW_HOSTMAP` layouts and both
+//! transports, `Auto`'s host-count gate, and the prologue-skip
+//! invariant (negotiation rounds only happen when a non-flat algorithm
+//! is actually selectable).
+//!
+//! Reduction test data is integer-valued f32, so sums are exact and
+//! order-independent — any fold order (flat rank-order, ring
+//! neighbour-order, hier host-then-leader order) must produce identical
+//! checksums.
+
+use multiworld::config::{CollAlgo, CollOp};
+use multiworld::mwccl::{Rendezvous, ReduceOp, WorldOptions};
+use multiworld::tensor::Tensor;
+use std::time::Duration;
+
+fn uniq(name: &str) -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "ch-{name}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// World options for one (transport, algorithm, placement) cell. An
+/// empty layout leaves the world single-host (the historical default).
+fn opts(transport: &str, algo: CollAlgo, layout: &str) -> WorldOptions {
+    let base = match transport {
+        "shm" => WorldOptions::shm(),
+        "tcp" => WorldOptions::tcp(),
+        other => panic!("unknown transport {other}"),
+    };
+    let base = base
+        .with_coll_algo(algo)
+        .with_op_timeout(Duration::from_secs(60));
+    if layout.is_empty() {
+        base
+    } else {
+        base.with_hostmap(layout)
+    }
+}
+
+fn int_tensor(elems: usize, rank: usize) -> Tensor {
+    let vals: Vec<f32> = (0..elems)
+        .map(|i| ((i as u64 * 31 + rank as u64 * 7 + 3) % 101) as f32)
+        .collect();
+    Tensor::from_f32(&[elems], &vals)
+}
+
+fn expected_sum(elems: usize, size: usize) -> Tensor {
+    let mut acc = vec![0.0f32; elems];
+    for r in 0..size {
+        for (a, b) in acc.iter_mut().zip(int_tensor(elems, r).as_f32()) {
+            *a += *b;
+        }
+    }
+    Tensor::from_f32(&[elems], &acc)
+}
+
+/// The placement grid the equivalence tests sweep: single host (forced
+/// `Hier` must degrade), symmetric blocks both ways, and an asymmetric
+/// layout with a single-rank host.
+const LAYOUTS: [(&str, usize); 4] = [("", 8), ("2x4", 8), ("4x2", 8), ("0,0,0,1", 4)];
+
+#[test]
+fn hier_matches_flat_and_ring_for_all_four_ops_across_layouts() {
+    for transport in ["shm", "tcp"] {
+        for (layout, size) in LAYOUTS {
+            // Non-leader root on a non-zero host (layout "2x4" puts rank
+            // 5 on host 1; "0,0,0,1" puts rank 1 mid-host-0) — exercises
+            // the hier origin-relay paths, not just the easy leader-root
+            // case.
+            let root = if size == 8 { 5 } else { 1 };
+            let ar_want = expected_sum(100_000, size).checksum();
+            let rd_want = expected_sum(60_000, size).checksum();
+            let bc_src = int_tensor(75_000, 42); // 300 KB, multi-chunk
+            let bc_want = bc_src.checksum();
+            let mut ag_per_algo = Vec::new();
+            for algo in [CollAlgo::Flat, CollAlgo::Ring, CollAlgo::Hier] {
+                let worlds =
+                    Rendezvous::single_process(&uniq("hq"), size, opts(transport, algo, layout))
+                        .unwrap();
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .map(|w| {
+                        let src = bc_src.clone();
+                        std::thread::spawn(move || {
+                            let ar = w
+                                .all_reduce(int_tensor(100_000, w.rank()), ReduceOp::Sum)
+                                .unwrap()
+                                .checksum();
+                            let picked =
+                                w.last_algo(CollOp::AllReduce).unwrap_or("?").to_string();
+                            let bt = (w.rank() == root).then(|| src);
+                            let bc = w.broadcast(bt, root).unwrap().checksum();
+                            let rd = w
+                                .reduce(int_tensor(60_000, w.rank()), root, ReduceOp::Sum)
+                                .unwrap();
+                            let rd = match rd {
+                                Some(t) => {
+                                    assert_eq!(w.rank(), root, "only the root gets the reduction");
+                                    Some(t.checksum())
+                                }
+                                None => None,
+                            };
+                            let rows = w.rank() + 1; // unequal parts, width 3
+                            let vals: Vec<f32> = (0..rows * 3)
+                                .map(|i| (w.rank() * 100 + i) as f32)
+                                .collect();
+                            let ag = w.all_gather(Tensor::from_f32(&[rows, 3], &vals)).unwrap();
+                            let total_rows: usize = (1..=w.size()).sum();
+                            assert_eq!(ag.shape(), &[total_rows, 3]);
+                            (w.rank(), ar, picked, bc, rd, ag.checksum())
+                        })
+                    })
+                    .collect();
+                let mut ag_cs = None;
+                for h in handles {
+                    let (rank, ar, picked, bc, rd, ag) = h.join().unwrap();
+                    let ctx = format!("{transport} layout={layout:?} {algo:?} rank={rank}");
+                    assert_eq!(ar, ar_want, "{ctx}: all_reduce");
+                    assert_eq!(bc, bc_want, "{ctx}: broadcast");
+                    if rank == root {
+                        assert_eq!(rd, Some(rd_want), "{ctx}: reduce");
+                    }
+                    if let Some(prev) = ag_cs {
+                        assert_eq!(ag, prev, "{ctx}: ranks disagree on all_gather");
+                    }
+                    ag_cs = Some(ag);
+                    if algo == CollAlgo::Hier {
+                        // Forced hier runs hierarchically whenever more
+                        // than one host exists, and degrades to the ring
+                        // on a single host — never silently to flat.
+                        let want = if layout.is_empty() { "ring" } else { "hier" };
+                        assert_eq!(picked, want, "{ctx}: forced-hier selection");
+                    }
+                }
+                ag_per_algo.push(ag_cs.unwrap());
+            }
+            assert_eq!(ag_per_algo[0], ag_per_algo[1], "flat vs ring all_gather");
+            assert_eq!(ag_per_algo[0], ag_per_algo[2], "flat vs hier all_gather");
+        }
+    }
+}
+
+#[test]
+fn hier_all_reduce_avg_scales_exactly_once() {
+    // Avg rides the hier fan-in/ring/fan-out as a Sum and is scaled by
+    // the world size exactly once; size 8 keeps integer sums exact
+    // under the 1/8 scale.
+    let size = 8;
+    let elems = 20_000;
+    let worlds = Rendezvous::single_process(
+        &uniq("havg"),
+        size,
+        opts("shm", CollAlgo::Hier, "2x4"),
+    )
+    .unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            let t = int_tensor(elems, w.rank());
+            std::thread::spawn(move || w.all_reduce(t, ReduceOp::Avg).unwrap())
+        })
+        .collect();
+    let mut expect = expected_sum(elems, size).as_f32().to_vec();
+    for a in expect.iter_mut() {
+        *a /= size as f32;
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap().as_f32(), expect.as_slice());
+    }
+}
+
+#[test]
+fn auto_picks_hier_only_when_hosts_exceed_one() {
+    // The same 1 MiB all_reduce that rings on a single host must go
+    // hierarchical once the world spans hosts — and sub-threshold
+    // payloads stay flat either way.
+    for (layout, want_big) in [("", "ring"), ("2x4", "hier")] {
+        let size = 8;
+        let worlds = Rendezvous::single_process(
+            &uniq("hauto"),
+            size,
+            opts("shm", CollAlgo::Auto, layout),
+        )
+        .unwrap();
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .map(|w| {
+                std::thread::spawn(move || {
+                    w.all_reduce(int_tensor(256, w.rank()), ReduceOp::Sum).unwrap();
+                    let small_pick = w.last_algo(CollOp::AllReduce).unwrap();
+                    // 1 MiB == RING_MIN_BYTES: clears the byte gate.
+                    w.all_reduce(int_tensor(1 << 18, w.rank()), ReduceOp::Sum).unwrap();
+                    let big_pick = w.last_algo(CollOp::AllReduce).unwrap();
+                    (small_pick, big_pick)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (small_pick, big_pick) = h.join().unwrap();
+            assert_eq!(small_pick, "flat", "layout={layout:?}: small payloads stay flat");
+            assert_eq!(big_pick, want_big, "layout={layout:?}: 1 MiB all_reduce");
+        }
+    }
+}
+
+#[test]
+fn auto_skips_prologue_when_only_flat_is_selectable() {
+    // Regression: root-sized ops below the ring's minimum world (and in
+    // any world where neither ring nor hier could be picked) must not
+    // pay the negotiation prologue — `Auto` resolves to flat up front.
+    // Other tests in this binary never negotiate (forced algorithms and
+    // locally-sized ops decide without a prologue), so the process-wide
+    // counter deltas are attributable to these worlds alone.
+    let prologues = || multiworld::metrics::global().counter("coll_prologue_rounds").get();
+    let c0 = prologues();
+    let worlds = Rendezvous::single_process(&uniq("plg2"), 2, opts("tcp", CollAlgo::Auto, ""))
+        .unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            std::thread::spawn(move || {
+                // gather/scatter/broadcast are root-sized: without the
+                // skip they would each negotiate even though a 2-rank
+                // world can only ever run flat.
+                let g = w.gather(int_tensor(64, w.rank()), 0).unwrap();
+                assert_eq!(g.is_some(), w.rank() == 0);
+                let parts = (w.rank() == 1).then(|| {
+                    (0..2).map(|i| int_tensor(32, i)).collect::<Vec<_>>()
+                });
+                w.scatter(parts, 1).unwrap();
+                let bt = (w.rank() == 0).then(|| int_tensor(128, 9));
+                w.broadcast(bt, 0).unwrap();
+                assert_eq!(w.last_algo(CollOp::Broadcast), Some("flat"));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let c1 = prologues();
+    assert_eq!(c1, c0, "flat-only worlds must not pay negotiation rounds");
+
+    // Positive control: a ring-eligible world's root-sized op does
+    // negotiate, so the counter is live and the zero delta above is
+    // meaningful.
+    let worlds = Rendezvous::single_process(&uniq("plg4"), 4, opts("tcp", CollAlgo::Auto, ""))
+        .unwrap();
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            std::thread::spawn(move || {
+                let bt = (w.rank() == 0).then(|| int_tensor(128, 9));
+                w.broadcast(bt, 0).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(prologues() > c1, "ring-eligible negotiation must round-trip the prologue");
+}

@@ -1,15 +1,24 @@
 #!/usr/bin/env python3
-"""Compare the measured flat->ring crossover against the configured
+"""Compare the measured collective crossovers against the configured
 policy defaults.
 
 Reads the CSV emitted by `cargo bench --bench ablation_collectives`
-(columns: op,world,bytes,flat_ms,ring_ms,speedup,auto) and checks, per
-collective:
+(columns: op,world,hosts,bytes,flat_ms,ring_ms,hier_ms,speedup_ring,
+speedup_hier,auto — a blank timing cell means the algorithm is not
+selectable there, e.g. ring past RING_MAX_WORLD ranks or hier on a
+single host) and checks:
 
-  * the byte knee — the smallest payload where the ring beats the flat
-    star at ring-eligible world sizes — against RING_MIN_BYTES;
-  * the world knee — whether the ring already wins below RING_MIN_WORLD,
-    or still loses at it, on the largest measured payload.
+  * flat->ring, single-host rows: the byte knee — the smallest payload
+    where the ring beats the flat star at ring-eligible world sizes —
+    against RING_MIN_BYTES; and the world knee — whether the ring
+    already wins below RING_MIN_WORLD, or still loses at it, on the
+    largest measured payload;
+  * ring->hier, multi-host rows: from --hier-min-world ranks across
+    >= 2 simulated hosts the hierarchical algorithm must beat whichever
+    of ring/flat is its best alternative on the largest payload (this is
+    the knee `Auto` encodes by going hier whenever the world spans
+    hosts); past RING_MAX_WORLD, where the ring cell is blank, hier
+    must beat flat outright.
 
 Disagreements are *soft* failures: the script prints GitHub Actions
 `::warning::` annotations (so the knee drift is visible on every push
@@ -24,12 +33,19 @@ import csv
 import sys
 from collections import defaultdict
 
-# Ring must beat flat by this factor before we call it a win (CI noise).
+# One algorithm must beat another by this factor before we call it a
+# win (CI noise).
 WIN = 1.10
 
 
 def warn(msg: str) -> None:
     print(f"::warning title=collective crossover::{msg}")
+
+
+def fcell(row, key):
+    """A timing cell: float ms, or None when blank (not selectable)."""
+    v = (row.get(key) or "").strip()
+    return float(v) if v else None
 
 
 def main() -> int:
@@ -39,23 +55,36 @@ def main() -> int:
                     help="configured RING_MIN_WORLD (default 4)")
     ap.add_argument("--min-bytes", type=int, default=1 << 20,
                     help="configured RING_MIN_BYTES (default 1 MiB)")
+    ap.add_argument("--hier-min-world", type=int, default=16,
+                    help="world size from which hier must win multi-host "
+                         "rows (default 16)")
     ap.add_argument("--tolerance", type=float, default=4.0,
                     help="acceptable knee drift factor (default 4x)")
     args = ap.parse_args()
 
-    # rows[op][world] = sorted list of (bytes, flat_ms, ring_ms)
-    rows = defaultdict(lambda: defaultdict(list))
+    # single[op][world] = [(bytes, flat_ms, ring_ms)] — hosts == 1 rows.
+    # multi[op][(world, hosts)] = [(bytes, flat_ms, ring_ms|None, hier_ms)]
+    single = defaultdict(lambda: defaultdict(list))
+    multi = defaultdict(lambda: defaultdict(list))
     with open(args.csv, newline="") as f:
         for r in csv.DictReader(f):
-            rows[r["op"]][int(r["world"])].append(
-                (int(r["bytes"]), float(r["flat_ms"]), float(r["ring_ms"]))
-            )
-    if not rows:
+            hosts = int(r.get("hosts") or 1)
+            flat, ring, hier = (fcell(r, k) for k in ("flat_ms", "ring_ms", "hier_ms"))
+            if hosts <= 1:
+                if flat is not None and ring is not None:
+                    single[r["op"]][int(r["world"])].append((int(r["bytes"]), flat, ring))
+            elif flat is not None and hier is not None:
+                multi[r["op"]][(int(r["world"]), hosts)].append(
+                    (int(r["bytes"]), flat, ring, hier)
+                )
+    if not single and not multi:
         warn(f"{args.csv} contained no measurements")
         return 0
 
     warnings = 0
-    for op, by_world in sorted(rows.items()):
+
+    # ---- flat -> ring knee, single host -------------------------------
+    for op, by_world in sorted(single.items()):
         for world, cells in sorted(by_world.items()):
             cells.sort()
             wins = [b for b, flat, ring in cells if flat > ring * WIN]
@@ -98,10 +127,38 @@ def main() -> int:
                         f"the {op.upper()} row of the policy table"
                     )
 
+    # ---- ring -> hier knee, multi host --------------------------------
+    for op, by_shape in sorted(multi.items()):
+        for (world, hosts), cells in sorted(by_shape.items()):
+            cells.sort()
+            bytes_, flat, ring, hier = cells[-1]  # largest payload
+            best_alt, alt_name = (
+                (ring, "ring") if ring is not None and ring < flat else (flat, "flat")
+            )
+            if world >= args.hier_min_world and hosts >= 2:
+                if best_alt < hier * WIN:
+                    warnings += 1
+                    warn(
+                        f"{op} world={world} hosts={hosts}: hier "
+                        f"({hier:.3f} ms) did not beat {alt_name} "
+                        f"({best_alt:.3f} ms) at {bytes_} B — Auto goes hier "
+                        f"on every multi-host world this size, so the "
+                        f"hierarchical path should be winning here"
+                    )
+            if ring is None and world > 128 and hier > flat * args.tolerance:
+                warnings += 1
+                warn(
+                    f"{op} world={world} hosts={hosts}: past RING_MAX_WORLD "
+                    f"hier ({hier:.3f} ms) loses badly to flat "
+                    f"({flat:.3f} ms) — the only non-flat choice is slower "
+                    f"than the fallback"
+                )
+
+    n_series = sum(len(w) for w in single.values()) + sum(len(w) for w in multi.values())
     print(
-        f"crossover check: {sum(len(w) for w in rows.values())} (op, world) "
-        f"series, {warnings} disagreement(s) with "
-        f"RING_MIN_WORLD={args.min_world} RING_MIN_BYTES={args.min_bytes}"
+        f"crossover check: {n_series} (op, world[, hosts]) series, "
+        f"{warnings} disagreement(s) with RING_MIN_WORLD={args.min_world} "
+        f"RING_MIN_BYTES={args.min_bytes} HIER_MIN_WORLD={args.hier_min_world}"
     )
     # Fail-soft by design: the knee depends on CI hardware of the day.
     return 0
