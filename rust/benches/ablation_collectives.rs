@@ -38,7 +38,7 @@
 //! trajectory artifact (`BENCH_collectives.json`) rides along for
 //! cross-commit comparison.
 
-use multiworld::bench::{write_json, Table};
+use multiworld::bench::{bench_meta, write_json, Table};
 use multiworld::config::{AlgoDecision, CollAlgo, CollOp, CollPolicy};
 use multiworld::mwccl::transport::ratelimit::RATE_10GBPS;
 use multiworld::mwccl::{Rendezvous, ReduceOp, World, WorldOptions};
@@ -344,6 +344,7 @@ fn main() {
         "BENCH_collectives",
         &Json::obj(vec![
             ("bench", Json::str("ablation_collectives")),
+            ("meta", bench_meta()),
             ("quick", Json::num(if quick { 1.0 } else { 0.0 })),
             ("cells", Json::arr(traj)),
         ]),

@@ -11,6 +11,7 @@
 //! 1/2 s) so the bench finishes in seconds; the *event order* is the
 //! reproduced result. Output: a printed event log + CSV timeline.
 
+use multiworld::bench::scenarios::recovery_mttr;
 use multiworld::bench::write_csv;
 use multiworld::metrics::Timeline;
 use multiworld::multiworld::{StatePolicy, WatchdogConfig, WorldManager};
@@ -242,4 +243,23 @@ fn main() {
         .count();
     assert_eq!(sw_after, 0, "SW leader must stop receiving after the world broke");
     println!("shape assertions passed ✓");
+
+    // Recovery wall-time, measured with the exact kill→`Recovered` span
+    // the chaos_serve / serving_trajectory artifact uses — so the Fig. 4
+    // story and BENCH_serving.json agree on what "recovery" means
+    // (previously this bench only showed the detection timeline).
+    let base = 45_000 + (std::process::id() % 60) as u16 * 24;
+    let mttr = recovery_mttr(
+        1,
+        0,
+        true,
+        0,
+        WorldOptions::shm().with_init_timeout(Duration::from_secs(120)),
+        base,
+    )
+    .expect("recovery_mttr");
+    println!(
+        "recovery wall-time (kill → controller `Recovered`, chaos_serve span): {:.1} ms",
+        mttr.max_ms
+    );
 }

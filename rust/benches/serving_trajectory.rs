@@ -12,15 +12,34 @@
 //!   and the scale-out/in action counts;
 //! * `chaos` — gray partition + hard replica kill under traffic:
 //!   zero-loss completion, retry count, and MTTR (kill → controller's
-//!   `Recovered` action).
+//!   `Recovered` action);
+//! * `mttr` — the recovery-latency *distribution*: repeated kills on a
+//!   weight-heavy pipeline, spares=0/cache-off vs spares>0/cache-on, so
+//!   `tools/check_mttr.py` can gate recovery-time regressions in CI.
+//!
+//! Every artifact carries a `meta` provenance block
+//! ([`multiworld::bench::bench_meta`]): commit, branch, CI run, knobs.
 
 use multiworld::bench::scenarios::{
-    autoscale_serve, chaos_serve, tp_pipeline_serve, ArrivalCurve,
+    autoscale_serve, chaos_serve, recovery_mttr, tp_pipeline_serve, ArrivalCurve,
+    MttrReport,
 };
-use multiworld::bench::write_json;
+use multiworld::bench::{bench_meta, write_json};
 use multiworld::mwccl::{FaultPlan, WorldOptions};
 use multiworld::util::json::Json;
 use std::time::Duration;
+
+fn mttr_json(r: &MttrReport) -> Json {
+    Json::obj(vec![
+        ("kills", Json::num(r.samples_ms.len() as f64)),
+        ("p50_ms", Json::num(r.p50_ms)),
+        ("p99_ms", Json::num(r.p99_ms)),
+        ("max_ms", Json::num(r.max_ms)),
+        ("promoted", Json::num(r.promoted as f64)),
+        ("backfilled", Json::num(r.backfilled as f64)),
+        ("samples_ms", Json::arr(r.samples_ms.iter().map(|&s| Json::num(s)).collect())),
+    ])
+}
 
 fn main() {
     let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
@@ -72,10 +91,27 @@ fn main() {
         chaos.completed, chaos.retries, chaos.recovered, chaos.mttr_ms
     );
 
+    // Recovery-latency distribution: same kill count both legs, weights
+    // sized so a cold load visibly dominates the re-mint. The cold leg
+    // also disables the weight cache so every respawn pays the full
+    // load — the pre-spares recovery path.
+    let kills = if quick { 4 } else { 8 };
+    let params: u64 = if quick { 4_000_000 } else { 16_000_000 };
+    let cold = recovery_mttr(kills, 0, false, params, opts(), 53_000 + jitter)
+        .expect("recovery_mttr cold");
+    let warm = recovery_mttr(kills, 2, true, params, opts(), 54_200 + jitter)
+        .expect("recovery_mttr warm");
+    assert!(warm.promoted >= 1, "the spares leg must actually promote");
+    println!(
+        "mttr: cold p50 {:.1} / p99 {:.1} ms, spares p50 {:.1} / p99 {:.1} ms ({} promoted)",
+        cold.p50_ms, cold.p99_ms, warm.p50_ms, warm.p99_ms, warm.promoted
+    );
+
     write_json(
         "BENCH_serving",
         &Json::obj(vec![
             ("bench", Json::str("serving_trajectory")),
+            ("meta", bench_meta()),
             ("quick", Json::num(if quick { 1.0 } else { 0.0 })),
             (
                 "tp_pipeline",
@@ -105,6 +141,14 @@ fn main() {
                     ("retries", Json::num(chaos.retries as f64)),
                     ("recovered", Json::num(chaos.recovered as f64)),
                     ("mttr_ms", Json::num(chaos.mttr_ms)),
+                ]),
+            ),
+            (
+                "mttr",
+                Json::obj(vec![
+                    ("stage_params", Json::num(params as f64)),
+                    ("spares0", mttr_json(&cold)),
+                    ("spares2", mttr_json(&warm)),
                 ]),
             ),
         ]),

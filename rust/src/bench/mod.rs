@@ -133,6 +133,48 @@ pub fn results_dir() -> PathBuf {
     PathBuf::from("target/bench-results")
 }
 
+/// `git <args>` → trimmed stdout, or `""` off a checkout/without git.
+fn git_out(args: &[&str]) -> String {
+    std::process::Command::new("git")
+        .args(args)
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_default()
+}
+
+/// Provenance block stamped into every `BENCH_*.json` artifact under
+/// the `"meta"` key: which commit/branch/CI run produced the numbers,
+/// and the knob settings (collective algorithm, host map, spare pool,
+/// quick mode) that shaped them. Tools that trend artifacts across
+/// commits (`tools/check_crossover.py`, `tools/check_mttr.py`) read the
+/// identity fields and skip the key when comparing sections. Prefers
+/// the GitHub Actions envs; falls back to asking `git` directly so
+/// local runs are attributable too.
+pub fn bench_meta() -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let env_or = |name: &str, fallback: &dyn Fn() -> String| {
+        std::env::var(name).ok().filter(|v| !v.is_empty()).unwrap_or_else(|| fallback())
+    };
+    let sha = env_or("GITHUB_SHA", &|| git_out(&["rev-parse", "HEAD"]));
+    let branch =
+        env_or("GITHUB_REF_NAME", &|| git_out(&["rev-parse", "--abbrev-ref", "HEAD"]));
+    let run_id = std::env::var("GITHUB_RUN_ID").unwrap_or_default();
+    let envs = ["MW_COLL_ALGO", "MW_HOSTMAP", "MW_SPARES", "MW_WEIGHT_CACHE",
+        "MW_FAULT_SEED", "MW_BENCH_QUICK"];
+    let config = envs
+        .iter()
+        .filter_map(|k| std::env::var(k).ok().map(|v| (*k, Json::str(v))))
+        .collect::<Vec<_>>();
+    Json::obj(vec![
+        ("sha", Json::str(sha)),
+        ("branch", Json::str(branch)),
+        ("run_id", Json::str(run_id)),
+        ("config", Json::obj(config)),
+    ])
+}
+
 /// Persist a machine-readable trajectory artifact (the `BENCH_*.json`
 /// files CI uploads so collective/serving numbers are comparable
 /// across commits).
@@ -179,6 +221,15 @@ mod tests {
         let s = t.render();
         assert!(s.contains("=== Fig X ==="));
         assert!(s.contains("4M"));
+    }
+
+    #[test]
+    fn bench_meta_is_a_well_formed_object() {
+        let m = bench_meta();
+        assert!(m.get("sha").and_then(|s| s.as_str()).is_some());
+        assert!(m.get("branch").and_then(|s| s.as_str()).is_some());
+        assert!(m.get("run_id").and_then(|s| s.as_str()).is_some());
+        assert!(m.get("config").and_then(|c| c.as_obj()).is_some());
     }
 
     #[test]

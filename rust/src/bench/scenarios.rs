@@ -509,6 +509,132 @@ pub fn chaos_serve(
     })
 }
 
+/// What a [`recovery_mttr`] run measured.
+#[derive(Clone, Debug)]
+pub struct MttrReport {
+    /// Kill→`Recovered` wall-time per incident, in kill order (ms).
+    pub samples_ms: Vec<f64>,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Spare promotions / pool backfills over the run (0/0 when
+    /// `spares == 0`).
+    pub promoted: u64,
+    pub backfilled: u64,
+}
+
+/// Exact quantile over a sorted sample set (0 when empty).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Recovery-latency distribution scenario: a forward-only single-stage
+/// pipeline with two replicas is killed `kills` times in sequence (the
+/// newest replica each round, so one survivor anchors the pipeline),
+/// and every incident's kill→`Recovered` wall time is sampled at ~1 ms
+/// resolution. `stage_params` sizes the host→device weight load each
+/// cold spawn pays (the [`crate::serving::WeightCache`] elides it for
+/// promoted spares and cached respawns), so the spares>0 /
+/// weight-cache-on leg isolates exactly the cost the pool exists to
+/// remove. Detection latency (watchdog heartbeat × miss threshold) is
+/// identical across legs; the recovery path is the variable.
+pub fn recovery_mttr(
+    kills: usize,
+    spares: usize,
+    weight_cache: bool,
+    stage_params: u64,
+    opts: WorldOptions,
+    base_port: u16,
+) -> anyhow::Result<MttrReport> {
+    const BATCH: usize = 4;
+    const SEQ_LEN: usize = 8;
+    const VOCAB: usize = 32;
+    let g = crate::metrics::global();
+    let promoted0 = g.counter("serving.spares.promoted").get();
+    let backfilled0 = g.counter("serving.spares.backfilled").get();
+    let topo = Topology::pipeline(&uniq("mttr"), &[2], base_port);
+    let mut manifest =
+        crate::config::ModelManifest::synthetic(1, BATCH, SEQ_LEN, VOCAB);
+    for spec in &mut manifest.stages {
+        spec.params = stage_params;
+    }
+    let cfg = ServingConfig {
+        batch_timeout_ms: 2,
+        heartbeat_ms: 25,
+        miss_threshold: 2,
+        spares,
+        weight_cache,
+        ..Default::default()
+    };
+    let cluster = InProcCluster::start_forward_only_with_manifest(
+        topo,
+        manifest,
+        opts,
+        ScalingPolicy { recover: true, ..Default::default() },
+        &cfg,
+    )?;
+    let recovered_count = || {
+        cluster
+            .controller
+            .actions()
+            .iter()
+            .filter(|a| matches!(a, Action::Recovered { .. }))
+            .count()
+    };
+    let mut samples_ms = Vec::with_capacity(kills);
+    for _ in 0..kills {
+        // Every incident starts from a warm pool (spares leg) so each
+        // sample measures promotion, not a mid-backfill race.
+        if spares > 0 {
+            let warm_by = Instant::now() + Duration::from_secs(10);
+            while cluster.spare_count() == 0 && Instant::now() < warm_by {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        let victim_replica = *cluster
+            .controller
+            .topology()
+            .live_replicas(0)
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("no live replica to kill"))?;
+        let victim = crate::serving::topology::NodeId::worker(0, victim_replica);
+        let before = recovered_count();
+        let killed_at = Instant::now();
+        cluster.kill(victim);
+        let deadline = killed_at + Duration::from_secs(30);
+        while recovered_count() == before && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        anyhow::ensure!(
+            recovered_count() > before,
+            "kill #{} was never recovered",
+            samples_ms.len()
+        );
+        samples_ms.push(killed_at.elapsed().as_secs_f64() * 1e3);
+        // Let the fresh replica finish joining before the next incident.
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    let promoted = g.counter("serving.spares.promoted").get() - promoted0;
+    let backfilled = g.counter("serving.spares.backfilled").get() - backfilled0;
+    cluster.shutdown();
+    let mut sorted = samples_ms.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    Ok(MttrReport {
+        p50_ms: quantile(&sorted, 0.50),
+        p99_ms: quantile(&sorted, 0.99),
+        max_ms: quantile(&sorted, 1.0),
+        samples_ms,
+        promoted,
+        backfilled,
+    })
+}
+
 /// Run a throughput measurement `reps` times and keep the best — the
 /// standard way to strip scheduler noise from a saturation benchmark on
 /// a small shared box.
@@ -615,6 +741,29 @@ mod tests {
         );
         assert!(report.recovered >= 1, "the killed replica recovers: {report:?}");
         assert!(report.mttr_ms > 0.0, "MTTR is measured when recovery happens: {report:?}");
+    }
+
+    #[test]
+    fn recovery_mttr_scenario_samples_every_kill() {
+        let base = 50_000 + (std::process::id() % 70) as u16 * 24;
+        let report = recovery_mttr(
+            2,
+            1,
+            true,
+            200_000,
+            WorldOptions::shm().with_init_timeout(Duration::from_secs(120)),
+            base,
+        )
+        .unwrap();
+        assert_eq!(report.samples_ms.len(), 2, "one sample per kill: {report:?}");
+        assert!(
+            report.p50_ms <= report.p99_ms && report.p99_ms <= report.max_ms,
+            "quantiles are ordered: {report:?}"
+        );
+        // The pool is re-warmed before each kill, so both recoveries
+        // promote (global counters, so concurrent tests can only
+        // inflate the delta, never shrink it).
+        assert!(report.promoted >= 2, "spare promotion on every kill: {report:?}");
     }
 
     #[test]

@@ -536,6 +536,16 @@ pub struct ServingConfig {
     pub autoscale_interval_ms: u64,
     /// Minimum quiet time (ms) between autoscaler actions.
     pub autoscale_cooldown_ms: u64,
+    /// Pre-warmed spare workers the launcher keeps on standby
+    /// (promoted into a dead worker's identity on recovery, used as
+    /// scale-out headroom by the autoscaler, asynchronously
+    /// backfilled). 0 = no pool; recovery cold-spawns as before.
+    pub spares: usize,
+    /// Host-side weight cache: spares (and respawned workers on the
+    /// same host) reuse already-materialized stage weights instead of
+    /// reloading them. On by default; recovery still works with it off,
+    /// it just pays the full load on every spawn.
+    pub weight_cache: bool,
 }
 
 impl Default for ServingConfig {
@@ -555,6 +565,8 @@ impl Default for ServingConfig {
             retry_max_attempts: 5,
             autoscale_interval_ms: 100,
             autoscale_cooldown_ms: 2_000,
+            spares: 0,
+            weight_cache: true,
         }
     }
 }
@@ -593,6 +605,12 @@ impl ServingConfig {
         }
         if let Some(v) = get("MW_AUTOSCALE_COOLDOWN_MS").and_then(|s| s.parse().ok()) {
             c.autoscale_cooldown_ms = v;
+        }
+        if let Some(v) = get("MW_SPARES").and_then(|s| s.parse().ok()) {
+            c.spares = v;
+        }
+        if let Some(v) = get("MW_WEIGHT_CACHE") {
+            c.weight_cache = v != "0";
         }
         c
     }

@@ -16,20 +16,20 @@
 //!   broadcast/all_reduce inner loop on sharded replicas), so the full
 //!   serving + elasticity stack is testable in CI without a PJRT build.
 
-use crate::config::{ModelManifest, ServingConfig};
+use crate::config::{ModelManifest, ServingConfig, StageSpec};
 use crate::multiworld::{StatePolicy, WatchdogConfig, WorldEvent, WorldManager};
 use crate::mwccl::WorldOptions;
 use crate::runtime::Engine;
 use crate::serving::autoscaler::{AutoscalePolicy, Autoscaler, AutoscalerHandle, LoadSignals};
-use crate::serving::controller::{Controller, ScalingPolicy, Spawner};
+use crate::serving::controller::{Controller, ScalingPolicy, SparePoolView, Spawner};
 use crate::serving::stage_worker::{run_stage_worker, StageWorkerConfig, TopoUpdate};
 use crate::serving::topology::{NodeId, Topology, WorldDef};
 use crate::serving::{Leader, WorkerStats};
 use crate::util::time::Clock;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use std::time::Duration;
@@ -40,6 +40,133 @@ struct WorkerHandle {
     thread: Option<std::thread::JoinHandle<anyhow::Result<WorkerStats>>>,
 }
 
+/// Assignment handed to a waiting spare: become `node`, join `worlds`.
+struct SpareAssign {
+    node: NodeId,
+    worlds: Vec<WorldDef>,
+}
+
+/// A pre-warmed spare worker thread: weights cached, engine hot,
+/// blocked on its assignment channel. Promotion turns it into a
+/// [`WorkerHandle`] (same stop flag, same control channel — the
+/// channels were minted at pre-warm time so nothing is created on the
+/// recovery path).
+struct SpareHandle {
+    stop: Arc<AtomicBool>,
+    assign: Sender<SpareAssign>,
+    ctrl: Sender<TopoUpdate>,
+    thread: Option<std::thread::JoinHandle<anyhow::Result<WorkerStats>>>,
+}
+
+impl SpareHandle {
+    fn is_dead(&self) -> bool {
+        match &self.thread {
+            Some(t) => t.is_finished(),
+            None => true,
+        }
+    }
+}
+
+/// The controller/autoscaler's read-only view of the pool.
+struct PoolView {
+    pool: Arc<Mutex<Vec<SpareHandle>>>,
+}
+
+impl SparePoolView for PoolView {
+    fn available(&self) -> usize {
+        self.pool.lock().unwrap().iter().filter(|s| !s.is_dead()).count()
+    }
+}
+
+/// Everything a worker thread needs to become `node` — shared between
+/// the cold-spawn path and spare promotion, so the two paths are
+/// behaviorally identical after the load step.
+struct WorkerSeed {
+    node: NodeId,
+    /// Private topology already retained to this node's worlds.
+    topology: Topology,
+    /// `(hlo_path, spec)` to compile; `None` in forward-only mode.
+    stage_src: Option<(PathBuf, StageSpec)>,
+    /// Spec for host→device weight-load modeling (forward-only mode;
+    /// zero-sized unless the manifest carries real `params`).
+    load_spec: Option<StageSpec>,
+    deployment: String,
+    use_cache: bool,
+    opts: WorldOptions,
+    wd_cfg: WatchdogConfig,
+    broken_tx: Sender<(String, Option<usize>)>,
+    ctrl_rx: Receiver<TopoUpdate>,
+    stop: Arc<AtomicBool>,
+}
+
+/// The worker thread body: load (through the host weight cache), join
+/// worlds, serve. Runs inside a freshly spawned thread (cold path) or
+/// inside a promoted spare (warm path — the cache hits).
+fn run_worker_seed(seed: WorkerSeed) -> anyhow::Result<WorkerStats> {
+    let WorkerSeed {
+        node,
+        topology,
+        stage_src,
+        load_spec,
+        deployment,
+        use_cache,
+        opts,
+        wd_cfg,
+        broken_tx,
+        ctrl_rx,
+        stop,
+    } = seed;
+    // Host→device weight load for this stage (a warm hit when a spare —
+    // or any earlier spawn on this host — already materialized it).
+    if let (Some(spec), NodeId::Worker { stage, .. }) = (&load_spec, node) {
+        if spec.params > 0 {
+            let _weights = crate::serving::spares::host_cache()
+                .stage_weights(&deployment, stage, spec, use_cache);
+        }
+    }
+    // Per-worker PJRT client, like a real worker process (skipped
+    // entirely in forward-only mode). The artifact's disk read goes
+    // through the host cache first.
+    let stage_runner = match stage_src {
+        Some((hlo_path, spec)) => {
+            let _ = crate::serving::spares::host_cache().hlo_bytes(&hlo_path, use_cache);
+            let engine = Engine::cpu()?;
+            Some(Arc::new(engine.load_stage(&hlo_path, &spec)?))
+        }
+        None => None,
+    };
+    let mgr = WorldManager::with_options(StatePolicy::Kv, wd_cfg, Clock::system());
+    // Forward this worker's broken-world events to the shared report
+    // channel (mid-pipeline failures are invisible to the leader
+    // otherwise); the cluster drains it into the controller.
+    {
+        let events = mgr.subscribe();
+        std::thread::Builder::new()
+            .name(format!("evt-fwd-{node}"))
+            .spawn(move || {
+                while let Ok(evt) = events.recv() {
+                    if let WorldEvent::Broken { world, culprit, .. } = evt {
+                        if broken_tx.send((world, culprit)).is_err() {
+                            return;
+                        }
+                    }
+                }
+            })?;
+    }
+    crate::serving::stage_worker::init_node_worlds(&mgr, &topology, node, &opts)?;
+    run_stage_worker(
+        mgr,
+        StageWorkerConfig {
+            node,
+            topology,
+            stage: stage_runner,
+            opts,
+            control: Some(ctrl_rx),
+            stop,
+        },
+    )
+}
+
 /// A whole pipeline in one process. See module docs.
 pub struct InProcCluster {
     pub leader: Arc<Leader>,
@@ -48,6 +175,9 @@ pub struct InProcCluster {
     opts: WorldOptions,
     serving_cfg: ServingConfig,
     workers: Arc<Mutex<HashMap<NodeId, WorkerHandle>>>,
+    spawner: Arc<SpawnerInner>,
+    /// Spare-pool keeper loop (reap + backfill), when `spares > 0`.
+    keeper: Mutex<Option<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>>,
     forwarders: Mutex<Vec<std::thread::JoinHandle<()>>>,
     autoscaler: Mutex<Option<AutoscalerHandle>>,
 }
@@ -57,9 +187,16 @@ struct SpawnerInner {
     manifest: ModelManifest,
     /// No PJRT engine, no artifacts: workers run stage-less.
     forward_only: bool,
+    /// Spares the keeper maintains (`ServingConfig::spares`).
+    spare_target: usize,
+    /// Route spawns through the host [`crate::serving::WeightCache`].
+    weight_cache: bool,
     opts: WorldOptions,
     wd_cfg: WatchdogConfig,
     workers: Arc<Mutex<HashMap<NodeId, WorkerHandle>>>,
+    /// Pre-warmed spares awaiting promotion (see [`SpareHandle`]).
+    pool: Arc<Mutex<Vec<SpareHandle>>>,
+    spare_seq: AtomicUsize,
     controller: Mutex<Option<Arc<Controller>>>,
     topology_template: Topology,
     /// Broken-world reports (name + attributed culprit rank) from every
@@ -69,91 +206,206 @@ struct SpawnerInner {
 }
 
 impl SpawnerInner {
-    /// Start one worker thread that joins exactly the worlds in
-    /// `worlds` it is a member of. The PJRT engine and stage executable
-    /// are created *inside* the thread.
+    /// The stage's `(hlo_path, spec)` for PJRT compilation (`None` in
+    /// forward-only mode; `Err` when the manifest has no such stage).
+    fn stage_src(&self, stage: usize) -> anyhow::Result<Option<(PathBuf, StageSpec)>> {
+        if self.forward_only {
+            return Ok(None);
+        }
+        let spec = self
+            .manifest
+            .stages
+            .get(stage)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no stage {stage} in manifest"))?;
+        Ok(Some((self.manifest.hlo_path(&spec), spec)))
+    }
+
+    /// A private topology containing only `node`'s worlds.
+    fn private_topology(template: &Topology, node: NodeId, worlds: Vec<WorldDef>) -> Topology {
+        let mut topo = Topology {
+            replicas: template.replicas.clone(),
+            tp: template.tp.clone(),
+            worlds,
+            prefix: template.prefix.clone(),
+            generation: 0,
+            hosts: template.hosts.clone(),
+        };
+        topo.worlds.retain(|w| w.rank_of(node).is_some());
+        topo
+    }
+
+    /// Bring up `node`: promote a warm spare when one is standing by
+    /// (near-zero MTTR — its weights are cached and its thread is hot,
+    /// it only joins the fresh worlds), else start a cold worker
+    /// thread. The pop is atomic under the pool lock, so two
+    /// near-simultaneous spawns racing for one spare get exactly one
+    /// promotion and one cold spawn.
     fn spawn_node(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()> {
         let NodeId::Worker { stage, .. } = node else {
             anyhow::bail!("can only spawn workers");
         };
-        let stage_src = if self.forward_only {
-            None
-        } else {
-            let spec = self
-                .manifest
-                .stages
-                .get(stage)
-                .cloned()
-                .ok_or_else(|| anyhow::anyhow!("no stage {stage} in manifest"))?;
-            let hlo_path = self.manifest.hlo_path(&spec);
-            Some((hlo_path, spec))
-        };
+        loop {
+            let spare = self.pool.lock().unwrap().pop();
+            let Some(mut spare) = spare else { break };
+            if spare
+                .assign
+                .send(SpareAssign { node, worlds: worlds.clone() })
+                .is_ok()
+            {
+                self.workers.lock().unwrap().insert(
+                    node,
+                    WorkerHandle {
+                        stop: spare.stop,
+                        ctrl: spare.ctrl,
+                        thread: spare.thread.take(),
+                    },
+                );
+                let g = crate::metrics::global();
+                g.counter("serving.spares.promoted").inc();
+                g.gauge("serving.spares.pool")
+                    .set(self.pool.lock().unwrap().len() as i64);
+                crate::metrics::log_event(
+                    "spares.promoted",
+                    &[("node", node.to_string().as_str())],
+                );
+                return Ok(());
+            }
+            // This spare died while idle (its assignment receiver is
+            // gone): reap it and try the next; the keeper backfills.
+            if let Some(t) = spare.thread.take() {
+                let _ = t.join();
+            }
+        }
+        let stage_src = self.stage_src(stage)?;
         let stop = Arc::new(AtomicBool::new(false));
         let (ctrl_tx, ctrl_rx) = std::sync::mpsc::channel();
-        // A private topology containing only this node's worlds.
-        let mut topo = Topology {
-            replicas: self.topology_template.replicas.clone(),
-            tp: self.topology_template.tp.clone(),
-            worlds,
-            prefix: self.topology_template.prefix.clone(),
-            generation: 0,
-            hosts: self.topology_template.hosts.clone(),
+        let seed = WorkerSeed {
+            node,
+            topology: Self::private_topology(&self.topology_template, node, worlds),
+            stage_src,
+            load_spec: self.manifest.stages.get(stage).cloned(),
+            deployment: self.topology_template.prefix.clone(),
+            use_cache: self.weight_cache,
+            opts: self.opts.clone(),
+            wd_cfg: self.wd_cfg.clone(),
+            broken_tx: self.broken_tx.clone(),
+            ctrl_rx,
+            stop: stop.clone(),
         };
-        topo.worlds.retain(|w| w.rank_of(node).is_some());
-        let opts = self.opts.clone();
-        let wd_cfg = self.wd_cfg.clone();
-        let stop2 = stop.clone();
-        let broken_tx = self.broken_tx.clone();
         let thread = std::thread::Builder::new()
             .name(format!("worker-{node}"))
-            .spawn(move || -> anyhow::Result<WorkerStats> {
-                // Per-worker PJRT client, like a real worker process
-                // (skipped entirely in forward-only mode).
-                let stage_runner = match stage_src {
-                    Some((hlo_path, spec)) => {
-                        let engine = Engine::cpu()?;
-                        Some(Arc::new(engine.load_stage(&hlo_path, &spec)?))
-                    }
-                    None => None,
-                };
-                let mgr =
-                    WorldManager::with_options(StatePolicy::Kv, wd_cfg, Clock::system());
-                // Forward this worker's broken-world events to the shared
-                // report channel (mid-pipeline failures are invisible to
-                // the leader otherwise); the cluster drains it into the
-                // controller.
-                {
-                    let events = mgr.subscribe();
-                    std::thread::Builder::new()
-                        .name(format!("evt-fwd-{node}"))
-                        .spawn(move || {
-                            while let Ok(evt) = events.recv() {
-                                if let WorldEvent::Broken { world, culprit, .. } = evt {
-                                    if broken_tx.send((world, culprit)).is_err() {
-                                        return;
-                                    }
-                                }
-                            }
-                        })?;
-                }
-                crate::serving::stage_worker::init_node_worlds(&mgr, &topo, node, &opts)?;
-                run_stage_worker(
-                    mgr,
-                    StageWorkerConfig {
-                        node,
-                        topology: topo,
-                        stage: stage_runner,
-                        opts,
-                        control: Some(ctrl_rx),
-                        stop: stop2,
-                    },
-                )
-            })?;
+            .spawn(move || run_worker_seed(seed))?;
         self.workers.lock().unwrap().insert(
             node,
             WorkerHandle { stop, ctrl: ctrl_tx, thread: Some(thread) },
         );
         Ok(())
+    }
+
+    /// Start one pre-warmed spare: its thread warms the host weight
+    /// cache for *every* stage (promotion can land it anywhere in the
+    /// pipeline), then blocks on its assignment channel. Both its
+    /// channels exist from birth, so promotion creates nothing.
+    fn spawn_spare(self: &Arc<Self>) -> anyhow::Result<()> {
+        let id = self.spare_seq.fetch_add(1, Ordering::Relaxed);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (assign_tx, assign_rx) = std::sync::mpsc::channel::<SpareAssign>();
+        let (ctrl_tx, ctrl_rx) = std::sync::mpsc::channel();
+        let inner = self.clone();
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("spare-{id}"))
+            .spawn(move || -> anyhow::Result<WorkerStats> {
+                let cache = crate::serving::spares::host_cache();
+                let deployment = inner.topology_template.prefix.clone();
+                if inner.weight_cache {
+                    cache.warm(&deployment, &inner.manifest);
+                }
+                if !inner.forward_only {
+                    for spec in &inner.manifest.stages {
+                        let _ = cache
+                            .hlo_bytes(&inner.manifest.hlo_path(spec), inner.weight_cache);
+                    }
+                }
+                // Warm and ready: wait for promotion (or teardown).
+                let assign = loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        return Ok(WorkerStats::default());
+                    }
+                    match assign_rx.recv_timeout(Duration::from_millis(20)) {
+                        Ok(a) => break a,
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            return Ok(WorkerStats::default())
+                        }
+                    }
+                };
+                let SpareAssign { node, worlds } = assign;
+                let NodeId::Worker { stage, .. } = node else {
+                    anyhow::bail!("spares can only become workers");
+                };
+                let seed = WorkerSeed {
+                    node,
+                    topology: Self::private_topology(
+                        &inner.topology_template,
+                        node,
+                        worlds,
+                    ),
+                    stage_src: inner.stage_src(stage)?,
+                    load_spec: inner.manifest.stages.get(stage).cloned(),
+                    deployment,
+                    use_cache: inner.weight_cache,
+                    opts: inner.opts.clone(),
+                    wd_cfg: inner.wd_cfg.clone(),
+                    broken_tx: inner.broken_tx.clone(),
+                    ctrl_rx,
+                    stop: stop2,
+                };
+                run_worker_seed(seed)
+            })?;
+        let mut pool = self.pool.lock().unwrap();
+        pool.push(SpareHandle { stop, assign: assign_tx, ctrl: ctrl_tx, thread: Some(thread) });
+        crate::metrics::global()
+            .gauge("serving.spares.pool")
+            .set(pool.len() as i64);
+        Ok(())
+    }
+
+    /// One keeper pass: reap spares that died idle, backfill the pool
+    /// to `spare_target`. Returns how many were backfilled.
+    fn keep_spares(self: &Arc<Self>) -> usize {
+        let deficit = {
+            let mut pool = self.pool.lock().unwrap();
+            pool.retain_mut(|s| {
+                if s.is_dead() {
+                    if let Some(t) = s.thread.take() {
+                        let _ = t.join();
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+            crate::metrics::global()
+                .gauge("serving.spares.pool")
+                .set(pool.len() as i64);
+            self.spare_target.saturating_sub(pool.len())
+        };
+        let mut filled = 0;
+        for _ in 0..deficit {
+            if self.spawn_spare().is_ok() {
+                crate::metrics::global().counter("serving.spares.backfilled").inc();
+                filled += 1;
+            }
+        }
+        if filled > 0 {
+            crate::metrics::log_event(
+                "spares.backfilled",
+                &[("count", filled.to_string().as_str())],
+            );
+        }
+        filled
     }
 }
 
@@ -207,6 +459,20 @@ impl InProcCluster {
         Self::start_inner(topo, PathBuf::new(), manifest, true, opts, policy, serving_cfg)
     }
 
+    /// [`Self::start_forward_only`] with a caller-built manifest —
+    /// benches size `StageSpec::params` to make the host→device weight
+    /// load a real cost, which is what the spare pool + weight cache
+    /// exist to elide (the default synthetic manifest has `params: 0`).
+    pub fn start_forward_only_with_manifest(
+        topo: Topology,
+        manifest: ModelManifest,
+        opts: WorldOptions,
+        policy: ScalingPolicy,
+        serving_cfg: &ServingConfig,
+    ) -> anyhow::Result<InProcCluster> {
+        Self::start_inner(topo, PathBuf::new(), manifest, true, opts, policy, serving_cfg)
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn start_inner(
         topo: Topology,
@@ -227,9 +493,13 @@ impl InProcCluster {
             artifacts: artifacts.clone(),
             manifest: manifest.clone(),
             forward_only,
+            spare_target: serving_cfg.spares,
+            weight_cache: serving_cfg.weight_cache,
             opts: opts.clone(),
             wd_cfg: wd_cfg.clone(),
             workers: workers.clone(),
+            pool: Arc::new(Mutex::new(Vec::new())),
+            spare_seq: AtomicUsize::new(0),
             controller: Mutex::new(None),
             topology_template: topo.clone(),
             broken_tx: broken_tx.clone(),
@@ -302,6 +572,37 @@ impl InProcCluster {
         });
         let _ = &spawner_inner.artifacts; // reserved for worlds-override spawns
 
+        // Spare pool (`MW_SPARES`): pre-warm the configured number of
+        // spares synchronously — callers may kill a worker right after
+        // start and the first promotion must find a warm pool — then
+        // hand the keeper loop the reap/backfill duty and give the
+        // controller its headroom view.
+        let keeper = if serving_cfg.spares > 0 {
+            for _ in 0..serving_cfg.spares {
+                spawner_inner.spawn_spare()?;
+            }
+            controller.set_spare_pool(Arc::new(PoolView {
+                pool: spawner_inner.pool.clone(),
+            }));
+            let keeper_stop = Arc::new(AtomicBool::new(false));
+            let ks = keeper_stop.clone();
+            let inner = spawner_inner.clone();
+            let thread = std::thread::Builder::new()
+                .name("spare-keeper".into())
+                .spawn(move || {
+                    while !ks.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(20));
+                        if ks.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        inner.keep_spares();
+                    }
+                })?;
+            Some((keeper_stop, thread))
+        } else {
+            None
+        };
+
         Ok(InProcCluster {
             leader,
             controller,
@@ -309,6 +610,8 @@ impl InProcCluster {
             opts,
             serving_cfg: serving_cfg.clone(),
             workers,
+            spawner: spawner_inner,
+            keeper: Mutex::new(keeper),
             forwarders: Mutex::new(vec![fwd, drainer]),
             autoscaler: Mutex::new(None),
         })
@@ -410,14 +713,56 @@ impl InProcCluster {
         crate::mwccl::fault_registry()
     }
 
-    /// Stop everything (leader worlds drop with the Leader): autoscaler
-    /// first (no scaling decisions against a dying cluster), then the
-    /// leader's runtime threads, then the workers.
+    /// Spares currently warm in the pool (dead-but-unreaped spares are
+    /// not counted).
+    pub fn spare_count(&self) -> usize {
+        self.spawner.pool.lock().unwrap().iter().filter(|s| !s.is_dead()).count()
+    }
+
+    /// Kill one idle spare (abruptly, like [`Self::kill`]): its thread
+    /// exits without touching any serving replica; the keeper backfills
+    /// the pool. Returns `false` when the pool is empty.
+    pub fn kill_spare(&self) -> bool {
+        let spare = self.spawner.pool.lock().unwrap().pop();
+        match spare {
+            Some(mut s) => {
+                s.stop.store(true, Ordering::Relaxed);
+                drop(s.assign);
+                if let Some(t) = s.thread.take() {
+                    let _ = t.join();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stop everything (leader worlds drop with the Leader): keeper
+    /// first (no backfills against a dying cluster), then the
+    /// autoscaler (no scaling decisions either), then the leader's
+    /// runtime threads, then the spares, then the workers.
     pub fn shutdown(&self) {
+        if let Some((stop, thread)) = self.keeper.lock().unwrap().take() {
+            stop.store(true, Ordering::Relaxed);
+            let _ = thread.join();
+        }
         if let Some(h) = self.autoscaler.lock().unwrap().take() {
             h.stop();
         }
         self.leader.stop_runtime();
+        {
+            let mut pool = self.spawner.pool.lock().unwrap();
+            for s in pool.iter_mut() {
+                s.stop.store(true, Ordering::Relaxed);
+            }
+            for mut s in pool.drain(..) {
+                drop(s.assign);
+                if let Some(t) = s.thread.take() {
+                    let _ = t.join();
+                }
+            }
+        }
+        crate::serving::spares::host_cache().evict(&self.spawner.topology_template.prefix);
         let mut ws = self.workers.lock().unwrap();
         for (_, h) in ws.iter_mut() {
             h.stop.store(true, Ordering::Relaxed);

@@ -2,6 +2,19 @@
 //! `multiworld worker`; failure injection is `SIGKILL`. The leader stays
 //! in the calling process; topology updates reach workers through the
 //! [`super::ControlPlane`] store.
+//!
+//! **Spares.** With `spares > 0` ([`ProcessCluster::start_with_spares`],
+//! or `MW_SPARES` via [`crate::config::ServingConfig`] at the call
+//! site), the cluster also launches that many `multiworld worker
+//! --spare-id N` processes. A spare loads the full model runtime at
+//! startup — every stage AOT-compiled, weights resident, the expensive
+//! half of a cold spawn — then blocks on the cluster store key
+//! `spare/{N}/assign`. [`ProcessCluster::promote_spare`] publishes a
+//! node identity (plus an optional fresh-worlds override file) under
+//! that key, turning the spare into a regular worker without paying the
+//! load again; [`ProcessCluster::backfill_spares`] tops the pool back
+//! up asynchronously. Spares are torn down *before* workers on drop so
+//! a dying pool never publishes half-finished joins into live worlds.
 
 use crate::serving::topology::{NodeId, Topology, WorldDef};
 use crate::store::StoreServer;
@@ -16,6 +29,12 @@ struct ProcHandle {
     child: Child,
 }
 
+/// An idle pre-warmed subprocess, blocked on its assignment key.
+struct SpareProc {
+    id: usize,
+    child: Child,
+}
+
 /// See module docs.
 pub struct ProcessCluster {
     pub topology: Topology,
@@ -25,6 +44,11 @@ pub struct ProcessCluster {
     pub cluster_port: u16,
     topo_file: PathBuf,
     procs: Mutex<HashMap<NodeId, ProcHandle>>,
+    spares: Mutex<Vec<SpareProc>>,
+    /// Pool size to restore on [`Self::backfill_spares`].
+    spare_target: usize,
+    /// Monotonic spare id — assignment keys are never reused.
+    spare_seq: std::sync::atomic::AtomicUsize,
     transport: String,
 }
 
@@ -36,6 +60,17 @@ impl ProcessCluster {
         topo: Topology,
         artifacts: PathBuf,
         transport: &str,
+    ) -> anyhow::Result<ProcessCluster> {
+        Self::start_with_spares(topo, artifacts, transport, 0)
+    }
+
+    /// [`Self::start`] plus a pool of `spares` pre-warmed standby
+    /// processes (see module docs).
+    pub fn start_with_spares(
+        topo: Topology,
+        artifacts: PathBuf,
+        transport: &str,
+        spares: usize,
     ) -> anyhow::Result<ProcessCluster> {
         let cluster_port = free_port();
         let cluster_store =
@@ -50,10 +85,16 @@ impl ProcessCluster {
             cluster_port,
             topo_file,
             procs: Mutex::new(HashMap::new()),
+            spares: Mutex::new(Vec::new()),
+            spare_target: spares,
+            spare_seq: std::sync::atomic::AtomicUsize::new(0),
             transport: transport.to_string(),
         };
         for node in cluster.topology.workers() {
             cluster.spawn_worker(node, None)?;
+        }
+        for _ in 0..spares {
+            cluster.spawn_spare()?;
         }
         Ok(cluster)
     }
@@ -83,25 +124,117 @@ impl ProcessCluster {
         if let Some(worlds) = extra_worlds {
             // Replacement workers join only their fresh worlds, passed
             // through a dedicated file.
-            let mut t = Topology {
-                replicas: self.topology.replicas.clone(),
-                tp: self.topology.tp.clone(),
-                worlds: worlds.to_vec(),
-                prefix: self.topology.prefix.clone(),
-                generation: self.topology.generation,
-                hosts: self.topology.hosts.clone(),
-            };
-            t.worlds.retain(|w| w.rank_of(node).is_some());
-            let path = std::env::temp_dir().join(format!(
-                "mw-worlds-{}-{node}.json",
-                std::process::id()
-            ));
-            t.save(&path)?;
-            cmd.arg("--worlds-override").arg(path);
+            cmd.arg("--worlds-override")
+                .arg(self.write_worlds_override(node, worlds)?);
         }
         let child = cmd.spawn()?;
         self.procs.lock().unwrap().insert(node, ProcHandle { child });
         Ok(())
+    }
+
+    /// World-override file for a replacement worker joining only its
+    /// fresh worlds (shared by [`Self::spawn_worker`] and
+    /// [`Self::promote_spare`]).
+    fn write_worlds_override(
+        &self,
+        node: NodeId,
+        worlds: &[WorldDef],
+    ) -> anyhow::Result<PathBuf> {
+        let mut t = Topology {
+            replicas: self.topology.replicas.clone(),
+            tp: self.topology.tp.clone(),
+            worlds: worlds.to_vec(),
+            prefix: self.topology.prefix.clone(),
+            generation: self.topology.generation,
+            hosts: self.topology.hosts.clone(),
+        };
+        t.worlds.retain(|w| w.rank_of(node).is_some());
+        let path = std::env::temp_dir()
+            .join(format!("mw-worlds-{}-{node}.json", std::process::id()));
+        t.save(&path)?;
+        Ok(path)
+    }
+
+    /// Launch one pre-warmed standby process (no node identity yet).
+    pub fn spawn_spare(&self) -> anyhow::Result<()> {
+        let id = self.spare_seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let exe = std::env::current_exe()?;
+        let child = Command::new(exe)
+            .arg("worker")
+            .arg("--spare-id")
+            .arg(id.to_string())
+            .arg("--topology")
+            .arg(&self.topo_file)
+            .arg("--artifacts")
+            .arg(&self.artifacts)
+            .arg("--cluster-port")
+            .arg(self.cluster_port.to_string())
+            .arg("--transport")
+            .arg(&self.transport)
+            .stdout(Stdio::inherit())
+            .stderr(Stdio::inherit())
+            .spawn()?;
+        let mut pool = self.spares.lock().unwrap();
+        pool.push(SpareProc { id, child });
+        crate::metrics::global().gauge("serving.spares.pool").set(pool.len() as i64);
+        Ok(())
+    }
+
+    /// Hand a dead worker's identity to a pooled spare by publishing it
+    /// under the spare's assignment key. Returns `false` when the pool
+    /// is empty (caller falls back to [`Self::spawn_worker`]).
+    pub fn promote_spare(
+        &self,
+        node: NodeId,
+        extra_worlds: Option<&[WorldDef]>,
+    ) -> anyhow::Result<bool> {
+        let spare = {
+            let mut pool = self.spares.lock().unwrap();
+            let s = pool.pop();
+            crate::metrics::global().gauge("serving.spares.pool").set(pool.len() as i64);
+            s
+        };
+        let Some(spare) = spare else { return Ok(false) };
+        let worlds_path = match extra_worlds {
+            Some(w) => self
+                .write_worlds_override(node, w)?
+                .to_string_lossy()
+                .into_owned(),
+            None => String::new(),
+        };
+        let payload = format!("{node}\n{worlds_path}");
+        let client = crate::store::StoreClient::connect(
+            format!("127.0.0.1:{}", self.cluster_port).parse()?,
+            std::time::Duration::from_secs(5),
+        )?;
+        client.set(&format!("spare/{}/assign", spare.id), payload.as_bytes())?;
+        self.procs.lock().unwrap().insert(node, ProcHandle { child: spare.child });
+        crate::metrics::global().counter("serving.spares.promoted").inc();
+        Ok(true)
+    }
+
+    /// Top the pool back up to the configured size (reaping spares that
+    /// died on their own first). Returns how many were launched.
+    pub fn backfill_spares(&self) -> anyhow::Result<usize> {
+        {
+            let mut pool = self.spares.lock().unwrap();
+            pool.retain_mut(|s| match s.child.try_wait() {
+                Ok(Some(_)) => false,
+                _ => true,
+            });
+        }
+        let mut launched = 0;
+        while self.spare_count() < self.spare_target {
+            self.spawn_spare()?;
+            crate::metrics::global().counter("serving.spares.backfilled").inc();
+            launched += 1;
+        }
+        Ok(launched)
+    }
+
+    /// Idle spares currently pooled.
+    pub fn spare_count(&self) -> usize {
+        self.spares.lock().unwrap().len()
     }
 
     /// SIGKILL a worker — the real failure injector.
@@ -138,6 +271,16 @@ impl ProcessCluster {
 
 impl Drop for ProcessCluster {
     fn drop(&mut self) {
+        // Spares first: an idle spare that outlives the workers could
+        // win an assignment race against teardown and join a world
+        // that's already being dismantled.
+        let mut spares = self.spares.lock().unwrap();
+        for s in spares.iter_mut() {
+            let _ = s.child.kill();
+            let _ = s.child.wait();
+        }
+        spares.clear();
+        drop(spares);
         let mut procs = self.procs.lock().unwrap();
         for (_, h) in procs.iter_mut() {
             let _ = h.child.kill();

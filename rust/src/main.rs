@@ -21,7 +21,8 @@ fn cli() -> Command {
         .sub(
             Command::new("worker", "run one pipeline stage worker")
                 .req("topology", "topology JSON file")
-                .req("node", "node id, e.g. s1r0")
+                .opt("node", "node id, e.g. s1r0", None)
+                .opt("spare-id", "pre-warm, then wait for an assignment", None)
                 .opt("artifacts", "AOT artifacts dir", Some("artifacts"))
                 .opt("cluster-port", "control-plane store port", None)
                 .opt("transport", "shm|tcp", Some("shm"))
@@ -80,17 +81,71 @@ fn world_opts(transport: &str) -> anyhow::Result<WorldOptions> {
     })
 }
 
+/// Spare mode (`--spare-id`): the runtime is already warm; block on the
+/// cluster store until the leader publishes this spare's node identity
+/// (and, for replacement spawns, a fresh-worlds override file) under
+/// `spare/{id}/assign`.
+fn wait_for_assignment(
+    m: &multiworld::util::args::Matches,
+    spare_id: &str,
+    topo_path: &str,
+) -> anyhow::Result<(NodeId, Topology)> {
+    let port = m
+        .get("cluster-port")
+        .ok_or_else(|| anyhow::anyhow!("--spare-id needs --cluster-port"))?;
+    let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse()?;
+    let client = multiworld::store::StoreClient::connect(addr, Duration::from_secs(10))?;
+    let key = format!("spare/{spare_id}/assign");
+    eprintln!("[spare {spare_id}] pre-warmed, waiting for assignment");
+    let payload = loop {
+        match client.wait(&key, Duration::from_secs(5)) {
+            Ok(v) => break v,
+            // Timeouts are routine; exit only when the cluster is gone.
+            Err(_) => {
+                if client.ping().is_err() {
+                    anyhow::bail!("cluster store went away; spare {spare_id} exiting");
+                }
+            }
+        }
+    };
+    let text = String::from_utf8(payload)?;
+    let mut lines = text.lines();
+    let node = NodeId::parse(lines.next().unwrap_or_default())?;
+    let override_path = lines.next().unwrap_or_default().trim();
+    let topo = if override_path.is_empty() {
+        Topology::load(std::path::Path::new(topo_path))?
+    } else {
+        Topology::load(std::path::Path::new(override_path))?
+    };
+    eprintln!("[spare {spare_id}] promoted to {node}");
+    Ok((node, topo))
+}
+
 fn cmd_worker(m: &multiworld::util::args::Matches) -> anyhow::Result<()> {
     let topo_path = m.get("topology").unwrap();
-    let node = NodeId::parse(m.get("node").unwrap())?;
-    let topo = match m.get("worlds-override") {
-        Some(p) => Topology::load(std::path::Path::new(p))?,
-        None => Topology::load(std::path::Path::new(topo_path))?,
-    };
     let opts = world_opts(&m.get_or("transport", "shm"))?;
     let wd = WatchdogConfig {
         heartbeat: Duration::from_millis(m.u64("heartbeat-ms").map_err(anyhow::Error::msg)?),
         miss_threshold: m.usize("miss-threshold").map_err(anyhow::Error::msg)? as u32,
+    };
+
+    // Load the runtime before we have (or wait for) an identity: for a
+    // spare this *is* the pre-warm — every stage AOT-compiled and its
+    // weights host-resident before any assignment arrives, so promotion
+    // pays none of it.
+    let runtime = ModelRuntime::load(m.get_or("artifacts", "artifacts"))?;
+
+    let (node, topo) = match (m.get("node"), m.get("spare-id")) {
+        (Some(n), None) => {
+            let node = NodeId::parse(n)?;
+            let topo = match m.get("worlds-override") {
+                Some(p) => Topology::load(std::path::Path::new(p))?,
+                None => Topology::load(std::path::Path::new(topo_path))?,
+            };
+            (node, topo)
+        }
+        (None, Some(id)) => wait_for_assignment(m, id, topo_path)?,
+        _ => anyhow::bail!("worker needs exactly one of --node / --spare-id"),
     };
     let mgr = WorldManager::with_options(StatePolicy::Kv, wd, Clock::system());
 
@@ -98,7 +153,6 @@ fn cmd_worker(m: &multiworld::util::args::Matches) -> anyhow::Result<()> {
     let NodeId::Worker { stage, .. } = node else {
         anyhow::bail!("worker command needs a worker node id");
     };
-    let runtime = ModelRuntime::load(m.get_or("artifacts", "artifacts"))?;
     let stage_runner = runtime
         .stages
         .get(stage)

@@ -194,6 +194,7 @@ pub struct Registry {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    windows: Mutex<BTreeMap<String, Arc<SlidingWindow>>>,
 }
 
 impl Registry {
@@ -228,6 +229,20 @@ impl Registry {
             .clone()
     }
 
+    /// Named sliding window (samples age out after 60 s) — the recency
+    /// twin of [`Registry::histogram`], for signals where only the
+    /// recent distribution matters (e.g. `serving.mttr_ms`).
+    pub fn window(&self, name: &str) -> Arc<SlidingWindow> {
+        self.windows
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(SlidingWindow::new(std::time::Duration::from_secs(60)))
+            })
+            .clone()
+    }
+
     /// Text dump, one metric per line (sorted, stable for tests).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -245,6 +260,14 @@ impl Registry {
                 v.quantile_us(0.50),
                 v.quantile_us(0.99),
                 v.max_us()
+            ));
+        }
+        for (k, v) in self.windows.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "window {k} count={} p50_us={} p99_us={}\n",
+                v.count(),
+                v.quantile_us(0.50),
+                v.quantile_us(0.99)
             ));
         }
         out

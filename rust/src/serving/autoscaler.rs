@@ -252,11 +252,18 @@ impl Autoscaler {
             None => true,
             Some(t) => t.elapsed() >= self.policy.cooldown,
         };
-        if !cooled {
+        if hot && self.breach_streak >= self.policy.high_samples {
+            // The cooldown exists because a cold spawn is expensive and
+            // slow to show up in the signals. With a warm spare standing
+            // by (`MW_SPARES`), scale-out is promote-then-backfill —
+            // near-free — so pool headroom overrides the cooldown.
+            if cooled || self.controller.spare_headroom() > 0 {
+                return self.try_scale_out(depth, p99, slo_hot);
+            }
             return None;
         }
-        if hot && self.breach_streak >= self.policy.high_samples {
-            return self.try_scale_out(depth, p99, slo_hot);
+        if !cooled {
+            return None;
         }
         if idle && self.idle_streak >= self.policy.low_samples {
             return self.try_scale_in();

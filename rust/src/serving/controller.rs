@@ -67,6 +67,17 @@ pub trait Spawner: Send + Sync {
     fn spawn(&self, node: NodeId, worlds: Vec<WorldDef>) -> anyhow::Result<()>;
 }
 
+/// Read-only view of the launcher's pre-warmed spare pool (`MW_SPARES`).
+/// The controller itself never touches the pool — promotion happens
+/// transparently inside the [`Spawner`] — but the autoscaler asks for
+/// headroom through this view: with a warm spare standing by, scale-out
+/// is promote-then-backfill instead of a cold spawn, so the policy can
+/// afford to act sooner.
+pub trait SparePoolView: Send + Sync {
+    /// Spares currently warm and assignable.
+    fn available(&self) -> usize;
+}
+
 /// Decisions the controller took (test/bench introspection).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Action {
@@ -93,6 +104,8 @@ pub struct Controller {
     /// module docs for the conviction rule).
     strikes: Mutex<HashMap<NodeId, HashSet<String>>>,
     actions: Mutex<Vec<Action>>,
+    /// Launcher's spare pool, when one exists (see [`SparePoolView`]).
+    spare_pool: Mutex<Option<std::sync::Arc<dyn SparePoolView>>>,
 }
 
 impl Controller {
@@ -111,12 +124,29 @@ impl Controller {
             dead: Mutex::new(HashSet::new()),
             strikes: Mutex::new(HashMap::new()),
             actions: Mutex::new(Vec::new()),
+            spare_pool: Mutex::new(None),
         }
     }
 
     /// Register a running worker's control channel.
     pub fn register_worker(&self, node: NodeId, tx: Sender<TopoUpdate>) {
         self.worker_ctrl.lock().unwrap().insert(node, tx);
+    }
+
+    /// Wire up the launcher's spare pool (once, at cluster start).
+    pub fn set_spare_pool(&self, pool: std::sync::Arc<dyn SparePoolView>) {
+        *self.spare_pool.lock().unwrap() = Some(pool);
+    }
+
+    /// Warm spares currently assignable — the autoscaler treats this as
+    /// scale-out headroom (0 when no pool is configured).
+    pub fn spare_headroom(&self) -> usize {
+        self.spare_pool
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|p| p.available())
+            .unwrap_or(0)
     }
 
     pub fn topology(&self) -> Topology {
@@ -199,6 +229,11 @@ impl Controller {
             self.purge_strikes(&removed);
             return Ok(None);
         }
+        // MTTR span: verdict → replacement spawned + leader rejoined.
+        // (The detection latency before the verdict is the watchdog's
+        // budget; this window isolates what the recovery path itself
+        // costs — the part spares + the weight cache drive toward zero.)
+        let recovery_start = std::time::Instant::now();
         let replacement = if sharded {
             self.recover_shard(dead_node)?
         } else {
@@ -206,6 +241,9 @@ impl Controller {
             self.purge_strikes(&removed);
             self.mint_replica(stage)?
         };
+        crate::metrics::global()
+            .window("serving.mttr_ms")
+            .observe(recovery_start.elapsed());
         crate::metrics::global().counter("controller.recoveries").inc();
         crate::metrics::log_event(
             "controller.recovered",

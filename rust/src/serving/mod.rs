@@ -51,6 +51,22 @@
 //! controller's `Action` log, the `serving.autoscale.{out,in}`
 //! counters, and `autoscale.*` log events.
 //!
+//! **Fast recovery.** Recovery latency is a first-class metric, not
+//! just recovery correctness: set `MW_SPARES=N` and the launcher keeps
+//! `N` pre-warmed spare workers on standby — spawned at cluster start,
+//! registered, heartbeating, with every stage's weights pre-loaded from
+//! the per-host [`spares::WeightCache`] — and a `WorldEvent::Broken`
+//! verdict *promotes* a spare into the dead worker's identity instead
+//! of cold-spawning, then asynchronously backfills the pool. The
+//! autoscaler treats pool headroom as license to scale out ahead of its
+//! cooldown (promote-then-backfill is near-free). `MW_WEIGHT_CACHE=0`
+//! disables the host cache (every spawn pays the full weight load
+//! again); `MW_SPARES=0` (the default) keeps the original
+//! respawn-from-scratch recovery byte for byte. The recovery-path
+//! latency distribution rides the `serving.mttr_ms` sliding window and
+//! the pool is observable via `serving.spares.{pool,promoted,
+//! backfilled}`.
+//!
 //! Fault domains are shard-granular and compose with scaling: a dead
 //! shard breaks its replica's TP world (plus the head's edge worlds
 //! when the head died) and the controller re-mints exactly those worlds
@@ -96,6 +112,9 @@
 //!   recovery for failures.
 //! * [`autoscaler`] — the elasticity *policy* loop: samples load
 //!   signals and drives the controller under live traffic.
+//! * [`spares`] — the host-side weight cache behind the pre-warmed
+//!   spare pool (`MW_SPARES` / `MW_WEIGHT_CACHE`, see "Fast recovery"
+//!   above).
 
 pub mod autoscaler;
 pub mod batcher;
@@ -103,6 +122,7 @@ pub mod controller;
 pub mod leader;
 pub mod request;
 pub mod router;
+pub mod spares;
 pub mod stage_worker;
 pub mod topology;
 
@@ -114,5 +134,6 @@ pub use request::{
     DropReason, Outcome, RejectReason, Request, RequestGen, RequestHandle, Response,
 };
 pub use router::ReplicaRouter;
+pub use spares::{host_cache, WeightCache};
 pub use stage_worker::{run_stage_worker, StageWorkerConfig, WorkerStats};
 pub use topology::{NodeId, Topology, WorldDef, WorldKind};

@@ -1,0 +1,197 @@
+//! Host-side weight cache backing the pre-warmed spare pool
+//! (`MW_SPARES` / `MW_WEIGHT_CACHE`).
+//!
+//! The dominant cost of respawn-from-scratch recovery is not the world
+//! re-mint (tens of milliseconds) but re-materializing the dead stage's
+//! weights — FailSafe's observation, reproduced here: keep the weight
+//! bytes resident per *host* so a spare (or a respawned worker on the
+//! same host) skips the load entirely. One process is one host in the
+//! in-proc launcher, so the cache is process-global ([`host_cache`]);
+//! the subprocess launcher gets the same effect from the OS page cache
+//! plus the full-runtime pre-warm each `--spare-id` standby runs at
+//! startup (see [`crate::launch::ProcessCluster`]).
+//!
+//! Two read-through maps:
+//!
+//! * **Stage weights**, keyed `(deployment, stage)`: a deterministic
+//!   materialization of `StageSpec::params` parameters (4 bytes each) —
+//!   the host→device weight-load stand-in for forward-only workers,
+//!   whose synthetic manifests default to `params: 0` (zero cost,
+//!   byte-identical to the pre-cache spawn path) until a bench or test
+//!   opts into a heavy model. A cold fill costs time proportional to
+//!   the stage size; a warm hit is an `Arc` clone.
+//! * **HLO artifact bytes**, keyed by path: the disk-read half of a
+//!   PJRT stage load, pre-read by spares so promotion compiles from
+//!   warm memory.
+//!
+//! Every lookup lands in `serving.weight_cache.{hits,misses}`. Passing
+//! `use_cache: false` (the `MW_WEIGHT_CACHE=0` path) always
+//! re-materializes and never stores — recovery still works, it just
+//! pays the full load on every spawn.
+
+use crate::config::{ModelManifest, StageSpec};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// See module docs.
+#[derive(Default)]
+pub struct WeightCache {
+    weights: Mutex<HashMap<(String, usize), Arc<Vec<u8>>>>,
+    hlo: Mutex<HashMap<PathBuf, Arc<Vec<u8>>>>,
+}
+
+/// The per-host (here: per-process) cache instance.
+pub fn host_cache() -> &'static WeightCache {
+    static CACHE: Lazy<WeightCache> = Lazy::new(WeightCache::default);
+    &CACHE
+}
+
+/// Deterministic stand-in for loading a stage's weights from storage:
+/// touches every byte, so the cost scales with the stage size the way a
+/// real host→device copy does.
+fn materialize(spec: &StageSpec) -> Arc<Vec<u8>> {
+    let n = (spec.params as usize).saturating_mul(4);
+    let mut buf = vec![0u8; n];
+    for (i, b) in buf.iter_mut().enumerate() {
+        *b = (i as u8) ^ 0x5a;
+    }
+    Arc::new(buf)
+}
+
+impl WeightCache {
+    /// The weight bytes for `(deployment, stage)`: a warm hit is an
+    /// `Arc` clone, a miss materializes (and, with `use_cache`, stores
+    /// for the next spawn on this host).
+    pub fn stage_weights(
+        &self,
+        deployment: &str,
+        stage: usize,
+        spec: &StageSpec,
+        use_cache: bool,
+    ) -> Arc<Vec<u8>> {
+        let g = crate::metrics::global();
+        if use_cache {
+            let key = (deployment.to_string(), stage);
+            let mut map = self.weights.lock().unwrap();
+            if let Some(w) = map.get(&key) {
+                g.counter("serving.weight_cache.hits").inc();
+                return w.clone();
+            }
+            g.counter("serving.weight_cache.misses").inc();
+            let w = materialize(spec);
+            map.insert(key, w.clone());
+            w
+        } else {
+            g.counter("serving.weight_cache.misses").inc();
+            materialize(spec)
+        }
+    }
+
+    /// Read-through cache of an HLO text artifact (the disk half of a
+    /// PJRT stage load).
+    pub fn hlo_bytes(&self, path: &Path, use_cache: bool) -> anyhow::Result<Arc<Vec<u8>>> {
+        let g = crate::metrics::global();
+        if use_cache {
+            if let Some(b) = self.hlo.lock().unwrap().get(path) {
+                g.counter("serving.weight_cache.hits").inc();
+                return Ok(b.clone());
+            }
+        }
+        g.counter("serving.weight_cache.misses").inc();
+        let bytes = Arc::new(std::fs::read(path)?);
+        if use_cache {
+            self.hlo.lock().unwrap().insert(path.to_path_buf(), bytes.clone());
+        }
+        Ok(bytes)
+    }
+
+    /// Pre-warm every stage of `manifest` (what a spare does at spawn,
+    /// so promotion into *any* stage needs no load).
+    pub fn warm(&self, deployment: &str, manifest: &ModelManifest) {
+        for (i, spec) in manifest.stages.iter().enumerate() {
+            let _ = self.stage_weights(deployment, i, spec, true);
+        }
+    }
+
+    /// Drop one deployment's weights (cluster teardown in tests — keeps
+    /// concurrent test clusters from seeing each other's entries).
+    pub fn evict(&self, deployment: &str) {
+        self.weights.lock().unwrap().retain(|(d, _), _| d != deployment);
+    }
+
+    /// Cached stage-weight entries for `deployment`.
+    pub fn cached_stages(&self, deployment: &str) -> usize {
+        self.weights.lock().unwrap().keys().filter(|(d, _)| d == deployment).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(params: u64) -> StageSpec {
+        StageSpec {
+            name: "s".into(),
+            hlo: PathBuf::from("s.hlo.txt"),
+            in_shape: vec![1, 4],
+            out_shape: vec![1, 4],
+            in_dtype: crate::tensor::DType::I32,
+            out_dtype: crate::tensor::DType::I32,
+            params,
+        }
+    }
+
+    #[test]
+    fn warm_hit_returns_same_buffer() {
+        let c = WeightCache::default();
+        let a = c.stage_weights("wc-t1", 0, &spec(1_000), true);
+        let b = c.stage_weights("wc-t1", 0, &spec(1_000), true);
+        assert_eq!(a.len(), 4_000);
+        assert!(Arc::ptr_eq(&a, &b), "warm hit is the same host buffer");
+        assert_eq!(c.cached_stages("wc-t1"), 1);
+    }
+
+    #[test]
+    fn disabled_cache_rematerializes_and_never_stores() {
+        let c = WeightCache::default();
+        let a = c.stage_weights("wc-t2", 0, &spec(100), false);
+        let b = c.stage_weights("wc-t2", 0, &spec(100), false);
+        assert_eq!(a, b, "materialization is deterministic");
+        assert!(!Arc::ptr_eq(&a, &b), "no sharing with the cache off");
+        assert_eq!(c.cached_stages("wc-t2"), 0);
+    }
+
+    #[test]
+    fn zero_param_stages_cost_nothing() {
+        let c = WeightCache::default();
+        assert!(c.stage_weights("wc-t3", 0, &spec(0), true).is_empty());
+    }
+
+    #[test]
+    fn warm_covers_every_stage_and_evict_forgets() {
+        let c = WeightCache::default();
+        let m = ModelManifest::synthetic(3, 1, 4, 16);
+        c.warm("wc-t4", &m);
+        assert_eq!(c.cached_stages("wc-t4"), 3);
+        c.evict("wc-t4");
+        assert_eq!(c.cached_stages("wc-t4"), 0);
+    }
+
+    #[test]
+    fn hlo_bytes_reads_through() {
+        let dir = std::env::temp_dir().join(format!("mw-hlo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stage.hlo.txt");
+        std::fs::write(&path, b"HloModule m").unwrap();
+        let c = WeightCache::default();
+        let a = c.hlo_bytes(&path, true).unwrap();
+        // A warm hit survives the file disappearing — it is host memory.
+        std::fs::remove_file(&path).unwrap();
+        let b = c.hlo_bytes(&path, true).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(c.hlo_bytes(&path, false).is_err(), "uncached read goes to disk");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -76,6 +76,11 @@ fn injected(kind: &str) -> u64 {
 /// detection in these tests comes from transport evidence and op
 /// timeouts, not heartbeats. Retries are quick so silently lost batches
 /// re-dispatch well inside each scenario's budget.
+///
+/// Built on `from_env` so CI's chaos matrix reaches in: the
+/// `MW_SPARES=2` leg runs every gray scenario with a warm spare pool,
+/// chaos-testing promotion (the assertions hold either way — recovery
+/// is recovery, pooled or cold).
 fn gray_cfg() -> ServingConfig {
     ServingConfig {
         heartbeat_ms: 250,
@@ -83,7 +88,7 @@ fn gray_cfg() -> ServingConfig {
         batch_timeout_ms: 3,
         retry_timeout_ms: 400,
         retry_max_attempts: 50,
-        ..Default::default()
+        ..ServingConfig::from_env()
     }
 }
 
@@ -450,7 +455,7 @@ fn slow_link_during_scale_out_fresh_replica_verified_serving() {
             heartbeat_ms: 100,
             miss_threshold: 5,
             batch_timeout_ms: 3,
-            ..Default::default()
+            ..ServingConfig::from_env()
         },
         BATCH,
         SEQ_LEN,

@@ -1,0 +1,308 @@
+//! Spare-pool edge cases (`MW_SPARES`): the pre-warmed standby workers
+//! that turn respawn-from-scratch recovery into near-zero-MTTR
+//! promotion. Forward-only clusters — no PJRT, no artifacts — so the
+//! whole suite runs in the default CI build.
+//!
+//! Covered: an idle spare dying is a non-event for the serving plane
+//! (reap + backfill, no replica touched); two near-simultaneous kills
+//! racing for the pool get exactly one spare per pop (promotions and
+//! cold respawns together recover both, zero request loss); promotion
+//! landing in the middle of an autoscale scale-out never double-spawns
+//! an identity; and `MW_SPARES=0` leaves the original recovery path —
+//! counters included — untouched.
+
+use multiworld::config::ServingConfig;
+use multiworld::launch::InProcCluster;
+use multiworld::mwccl::WorldOptions;
+use multiworld::serving::autoscaler::AutoscalePolicy;
+use multiworld::serving::controller::{Action, ScalingPolicy};
+use multiworld::serving::topology::{NodeId, Topology};
+use multiworld::serving::{Outcome, RequestGen};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Serialize cluster tests (they spawn many threads and fixed-range
+/// store ports, and assert on process-global metric deltas).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const BATCH: usize = 4;
+const SEQ_LEN: usize = 8;
+const VOCAB: usize = 32;
+
+fn uniq(prefix: &str) -> String {
+    static N: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "{prefix}{}-{}",
+        std::process::id() % 1000,
+        N.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+fn base_port() -> u16 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    43_000 + (NEXT.fetch_add(1, Ordering::Relaxed) as u16 % 20) * 120
+        + (std::process::id() % 97) as u16
+}
+
+fn counter(name: &str) -> u64 {
+    multiworld::metrics::global().counter(name).get()
+}
+
+fn cfg(spares: usize) -> ServingConfig {
+    ServingConfig {
+        heartbeat_ms: 50,
+        miss_threshold: 3,
+        batch_timeout_ms: 3,
+        retry_timeout_ms: 300,
+        spares,
+        ..Default::default()
+    }
+}
+
+fn start(topo: Topology, opts: WorldOptions, spares: usize) -> InProcCluster {
+    InProcCluster::start_forward_only(
+        topo,
+        opts.with_init_timeout(Duration::from_secs(120)),
+        ScalingPolicy { scale_up_depth: 8.0, max_replicas: 4, recover: true },
+        &cfg(spares),
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )
+    .unwrap()
+}
+
+fn recovered_count(cluster: &InProcCluster) -> usize {
+    cluster
+        .controller
+        .actions()
+        .iter()
+        .filter(|a| matches!(a, Action::Recovered { .. }))
+        .count()
+}
+
+fn wait_for_spares(cluster: &InProcCluster, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while cluster.spare_count() < n {
+        assert!(
+            Instant::now() < deadline,
+            "pool never reached {n} spares (at {})",
+            cluster.spare_count()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn idle_spare_death_backfills_without_touching_replicas() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let backfilled_before = counter("serving.spares.backfilled");
+    let topo = Topology::pipeline(&uniq("spidle"), &[2], base_port());
+    let cluster = start(topo, WorldOptions::shm(), 2);
+    wait_for_spares(&cluster, 2);
+    let live_before = cluster.live_workers();
+    let actions_before = cluster.controller.actions().len();
+
+    assert!(cluster.kill_spare(), "a pooled spare must be killable");
+    // The keeper reaps the corpse and backfills to the target.
+    wait_for_spares(&cluster, 2);
+    assert!(
+        counter("serving.spares.backfilled") > backfilled_before,
+        "backfill must be counted"
+    );
+
+    // A spare dying idle is a non-event for the serving plane: no
+    // replica touched, no recovery, no scaling.
+    assert_eq!(cluster.live_workers(), live_before, "no replica touched");
+    assert_eq!(
+        cluster.controller.actions().len(),
+        actions_before,
+        "no controller action from an idle spare death: {:?}",
+        cluster.controller.actions()
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn simultaneous_kills_race_the_pool_with_zero_request_loss() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let promoted_before = counter("serving.spares.promoted");
+    let topo = Topology::pipeline(&uniq("sprace"), &[3], base_port());
+    // TCP: failures are detectable without waiting out the watchdog.
+    let cluster = start(topo, WorldOptions::tcp(), 1);
+    wait_for_spares(&cluster, 1);
+
+    let mut gen = RequestGen::new(0x5BA2E, SEQ_LEN, VOCAB, None);
+    let mut handles = Vec::new();
+    for r in gen.take(100) {
+        handles.push(cluster.leader.submit(r));
+    }
+    // Two kills back to back: both verdicts race for the single pooled
+    // spare. The pop is atomic, so one recovery promotes it and the
+    // other takes a cold respawn (or a keeper backfill — either way no
+    // spare is ever handed out twice).
+    assert!(cluster.kill(NodeId::worker(0, 1)));
+    assert!(cluster.kill(NodeId::worker(0, 2)));
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while recovered_count(&cluster) < 2 {
+        assert!(
+            Instant::now() < deadline,
+            "wanted 2 recoveries, got: {:?}",
+            cluster.controller.actions()
+        );
+        for r in gen.take(20) {
+            handles.push(cluster.leader.submit(r));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let promoted = counter("serving.spares.promoted") - promoted_before;
+    assert!(promoted >= 1, "the pooled spare must win one of the recoveries");
+
+    // Each recovery minted a distinct replacement identity.
+    let replacements: Vec<NodeId> = cluster
+        .controller
+        .actions()
+        .iter()
+        .filter_map(|a| match a {
+            Action::Recovered { replacement, .. } => Some(*replacement),
+            _ => None,
+        })
+        .collect();
+    let distinct: HashSet<NodeId> = replacements.iter().copied().collect();
+    assert_eq!(distinct.len(), replacements.len(), "no identity spawned twice");
+
+    // Zero request loss through the double kill.
+    for h in &handles {
+        match h.wait_deadline(Instant::now() + Duration::from_secs(90)) {
+            Some(Outcome::Response(_)) => {}
+            other => panic!("request {} lost: {other:?}", h.id()),
+        }
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn promotion_during_inflight_scale_out_never_double_spawns() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let topo = Topology::pipeline(&uniq("spscale"), &[2], base_port());
+    let cluster = start(topo, WorldOptions::tcp(), 1);
+    wait_for_spares(&cluster, 1);
+    // Aggressive scale-out trigger (one caught deep sample), no
+    // scale-in: the recovery below lands while scale-outs are in flight.
+    cluster.start_autoscaler(AutoscalePolicy {
+        stage: 0,
+        interval: Duration::from_millis(15),
+        cooldown: Duration::from_millis(300),
+        high_depth: 8.0,
+        slo_p99_ms: 0.0,
+        high_samples: 1,
+        low_samples: 100_000,
+        min_replicas: 1,
+        drain_timeout: Duration::from_secs(5),
+    });
+
+    let victim = NodeId::worker(0, 1);
+    let mut gen = RequestGen::new(0xD0_5E, SEQ_LEN, VOCAB, None);
+    let mut handles = Vec::new();
+    for r in gen.take(200) {
+        handles.push(cluster.leader.submit(r));
+    }
+    assert!(cluster.kill(victim), "victim must be alive to kill");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let actions = cluster.controller.actions();
+        let recovered = actions
+            .iter()
+            .any(|a| matches!(a, Action::Recovered { dead, .. } if *dead == victim));
+        let scaled = actions.iter().any(|a| matches!(a, Action::ScaledOut { .. }));
+        if recovered && scaled {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "wanted Recovered({victim}) + ScaledOut, got: {actions:?}"
+        );
+        for r in gen.take(50) {
+            handles.push(cluster.leader.submit(r));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // The no-double-spawn invariant: every identity the controller ever
+    // brought up — recovery replacements and scale-outs alike — is
+    // distinct, whether it came from the pool or a cold thread.
+    let spawned: Vec<NodeId> = cluster
+        .controller
+        .actions()
+        .iter()
+        .filter_map(|a| match a {
+            Action::Recovered { replacement, .. } => Some(*replacement),
+            Action::ScaledOut { node, .. } => Some(*node),
+            _ => None,
+        })
+        .collect();
+    let distinct: HashSet<NodeId> = spawned.iter().copied().collect();
+    assert_eq!(distinct.len(), spawned.len(), "identity spawned twice: {spawned:?}");
+
+    for h in &handles {
+        match h.wait_deadline(Instant::now() + Duration::from_secs(90)) {
+            Some(Outcome::Response(_)) => {}
+            other => panic!("request {} lost: {other:?}", h.id()),
+        }
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn spares_zero_keeps_the_original_recovery_path() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let promoted_before = counter("serving.spares.promoted");
+    let backfilled_before = counter("serving.spares.backfilled");
+    let cache_before =
+        counter("serving.weight_cache.hits") + counter("serving.weight_cache.misses");
+    let topo = Topology::pipeline(&uniq("spzero"), &[2], base_port());
+    let cluster = start(topo, WorldOptions::tcp(), 0);
+    assert_eq!(cluster.spare_count(), 0, "MW_SPARES=0 keeps no pool");
+
+    let victim = NodeId::worker(0, 1);
+    let mut gen = RequestGen::new(0x2E20, SEQ_LEN, VOCAB, None);
+    let mut handles = Vec::new();
+    for r in gen.take(100) {
+        handles.push(cluster.leader.submit(r));
+    }
+    assert!(cluster.kill(victim));
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while recovered_count(&cluster) < 1 {
+        assert!(
+            Instant::now() < deadline,
+            "recovery must still work with no pool: {:?}",
+            cluster.controller.actions()
+        );
+        for r in gen.take(20) {
+            handles.push(cluster.leader.submit(r));
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for h in &handles {
+        match h.wait_deadline(Instant::now() + Duration::from_secs(90)) {
+            Some(Outcome::Response(_)) => {}
+            other => panic!("request {} lost: {other:?}", h.id()),
+        }
+    }
+
+    // Byte-identical to the pre-spares world: a forward-only manifest
+    // carries no weights (`params: 0`), so the cold respawn touches
+    // neither the pool nor the weight cache.
+    assert_eq!(cluster.spare_count(), 0);
+    assert_eq!(counter("serving.spares.promoted"), promoted_before);
+    assert_eq!(counter("serving.spares.backfilled"), backfilled_before);
+    assert_eq!(
+        counter("serving.weight_cache.hits") + counter("serving.weight_cache.misses"),
+        cache_before,
+        "spares=0 + zero-param stages must never touch the weight cache"
+    );
+    cluster.shutdown();
+}

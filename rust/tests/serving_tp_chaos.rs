@@ -46,12 +46,14 @@ fn base_port() -> u16 {
         + (std::process::id() % 89) as u16
 }
 
+/// `from_env` base so CI's `MW_SPARES=2` chaos leg runs these kills
+/// against a warm spare pool (promotion instead of cold respawn).
 fn fast_cfg() -> ServingConfig {
     ServingConfig {
         heartbeat_ms: 50,
         miss_threshold: 3,
         batch_timeout_ms: 3,
-        ..Default::default()
+        ..ServingConfig::from_env()
     }
 }
 

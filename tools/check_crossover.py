@@ -26,12 +26,44 @@ without blocking merges — CI hardware is noisy) and always exits 0.
 Tune the configured side via --min-world/--min-bytes, which should
 mirror `CollAlgo::RING_MIN_WORLD`/`RING_MIN_BYTES` (or the MW_RING_MIN_*
 env overrides the bench ran under).
+
+Pass --json BENCH_collectives.json to print the artifact's `meta`
+provenance block (commit / branch / CI run / knob config) alongside the
+check, so a warning in the log is attributable to the exact run that
+produced the numbers. The `meta` key is provenance, not data: any
+scan of the artifact's sections must skip it.
 """
 
 import argparse
 import csv
+import json
 import sys
 from collections import defaultdict
+
+# Artifact keys that describe the run rather than carrying measurements;
+# consumers iterating artifact sections must skip these.
+META_KEYS = {"meta", "bench", "quick"}
+
+
+def print_meta(path: str) -> None:
+    """Best-effort provenance print from a BENCH_*.json artifact."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"(no provenance: {path}: {e})")
+        return
+    meta = doc.get("meta")
+    if not isinstance(meta, dict):
+        print(f"(no provenance: {path} has no meta block)")
+        return
+    sha = meta.get("sha") or "?"
+    branch = meta.get("branch") or "?"
+    run = meta.get("run_id") or "local"
+    cfg = " ".join(f"{k}={v}" for k, v in sorted(meta.get("config", {}).items()))
+    print(f"provenance: {sha[:12]} ({branch}, run {run}) {cfg}".rstrip())
+    sections = [k for k in doc if k not in META_KEYS]
+    print(f"artifact sections (meta skipped): {', '.join(sorted(sections))}")
 
 # One algorithm must beat another by this factor before we call it a
 # win (CI noise).
@@ -60,7 +92,13 @@ def main() -> int:
                          "rows (default 16)")
     ap.add_argument("--tolerance", type=float, default=4.0,
                     help="acceptable knee drift factor (default 4x)")
+    ap.add_argument("--json", default=None,
+                    help="optional BENCH_collectives.json for the meta "
+                         "provenance block (printed, then skipped)")
     args = ap.parse_args()
+
+    if args.json:
+        print_meta(args.json)
 
     # single[op][world] = [(bytes, flat_ms, ring_ms)] — hosts == 1 rows.
     # multi[op][(world, hosts)] = [(bytes, flat_ms, ring_ms|None, hier_ms)]

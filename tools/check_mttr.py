@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Recovery-latency (MTTR) regression gate over BENCH_serving.json.
+
+Reads the `mttr` section the `serving_trajectory` bench emits — the
+kill->Recovered wall-time distribution (p50/p99/max over repeated
+kills) for two legs: `spares0` (cold respawn, weight cache off — the
+pre-pool recovery path) and `spares2` (pre-warmed spare pool + host
+weight cache) — and checks it two ways:
+
+  * **pool efficacy**: the spares leg's p99 must be strictly below the
+    cold leg's p99 (that the pool removes recovery latency is the whole
+    point; a run where it doesn't is either a regression in promotion
+    or a broken bench);
+  * **regression vs baseline**: each leg's p50/p99 is compared against
+    the committed `tools/mttr_baseline.json`; a measurement more than
+    --tolerance-pct worse than baseline (default 25%) is flagged.
+
+Both checks are *soft* failures, matching check_crossover.py: the
+script prints GitHub Actions `::warning::` annotations and always
+exits 0 — CI boxes are noisy and MTTR includes watchdog detection
+time, so a hard gate would flake. The warnings make every drift
+visible on the push that caused it.
+
+The artifact's `meta` block (commit / branch / run / knobs) is printed
+for provenance and skipped as data. Re-baseline by copying the measured
+numbers from a healthy run into tools/mttr_baseline.json.
+"""
+
+import argparse
+import json
+import sys
+
+LEGS = ("spares0", "spares2")
+QUANTILES = ("p50_ms", "p99_ms")
+
+
+def warn(msg: str) -> None:
+    print(f"::warning title=mttr::{msg}")
+
+
+def load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        warn(f"cannot read {path}: {e}")
+        return None
+
+
+def print_meta(doc: dict) -> None:
+    meta = doc.get("meta")
+    if not isinstance(meta, dict):
+        print("(artifact has no meta block)")
+        return
+    sha = meta.get("sha") or "?"
+    branch = meta.get("branch") or "?"
+    run = meta.get("run_id") or "local"
+    cfg = " ".join(f"{k}={v}" for k, v in sorted(meta.get("config", {}).items()))
+    print(f"provenance: {sha[:12]} ({branch}, run {run}) {cfg}".rstrip())
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact", help="path to BENCH_serving.json")
+    ap.add_argument("--baseline", default="tools/mttr_baseline.json",
+                    help="committed MTTR baseline (default "
+                         "tools/mttr_baseline.json)")
+    ap.add_argument("--tolerance-pct", type=float, default=25.0,
+                    help="regression threshold vs baseline, percent "
+                         "(default 25)")
+    args = ap.parse_args()
+
+    doc = load(args.artifact)
+    if doc is None:
+        return 0
+    print_meta(doc)
+    mttr = doc.get("mttr")
+    if not isinstance(mttr, dict):
+        warn(f"{args.artifact} has no mttr section — did the "
+             f"serving_trajectory bench run?")
+        return 0
+
+    warnings = 0
+
+    # ---- pool efficacy: spares must beat cold respawn -----------------
+    cold, warm = (mttr.get(leg) or {} for leg in LEGS)
+    cold_p99, warm_p99 = cold.get("p99_ms"), warm.get("p99_ms")
+    if cold_p99 is None or warm_p99 is None:
+        warnings += 1
+        warn("mttr section is missing a leg (wanted spares0 + spares2)")
+    elif not warm_p99 < cold_p99:
+        warnings += 1
+        warn(f"spare pool did not beat cold respawn: spares2 p99 "
+             f"{warm_p99:.1f} ms >= spares0 p99 {cold_p99:.1f} ms "
+             f"(promotion should be strictly faster than a cold "
+             f"weight load)")
+    if (warm.get("promoted") or 0) < 1:
+        warnings += 1
+        warn("spares2 leg recorded zero promotions — recoveries took the "
+             "cold path, so the leg did not measure the pool at all")
+
+    # ---- regression vs the committed baseline -------------------------
+    base = load(args.baseline)
+    if base is None:
+        warn(f"no baseline at {args.baseline}; skipping regression check")
+    else:
+        factor = 1.0 + args.tolerance_pct / 100.0
+        for leg in LEGS:
+            for q in QUANTILES:
+                measured = (mttr.get(leg) or {}).get(q)
+                allowed = (base.get(leg) or {}).get(q)
+                if measured is None or allowed is None:
+                    continue
+                if measured > allowed * factor:
+                    warnings += 1
+                    warn(f"{leg} {q} regressed: {measured:.1f} ms vs "
+                         f"baseline {allowed:.1f} ms "
+                         f"(>{args.tolerance_pct:g}% worse) — if this "
+                         f"reflects a real change, re-baseline "
+                         f"{args.baseline}")
+                else:
+                    print(f"{leg} {q}: {measured:.1f} ms "
+                          f"(baseline {allowed:.1f} ms, "
+                          f"limit {allowed * factor:.1f} ms) ok")
+
+    kills = (mttr.get("spares0") or {}).get("kills")
+    print(f"mttr check: {kills} kill(s)/leg, {warnings} warning(s), "
+          f"tolerance {args.tolerance_pct:g}%")
+    # Fail-soft by design: MTTR includes detection latency and CI
+    # hardware noise; warnings, not failures, gate this signal.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
