@@ -14,7 +14,7 @@ use crate::mwccl::{EdgePattern, FaultKind, FaultPlan, FaultRule, Rendezvous, Wor
 use crate::serving::autoscaler::AutoscalePolicy;
 use crate::serving::controller::{Action, ScalingPolicy};
 use crate::serving::topology::Topology;
-use crate::serving::{LeaderReport, Outcome, RequestGen};
+use crate::serving::{LeaderReport, Outcome, RequestGen, StreamEvent};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
 use crate::util::time::Clock;
@@ -243,6 +243,130 @@ pub fn tp_pipeline_serve(
         .serve(gen.take(n_requests), None, std::time::Duration::from_secs(120));
     cluster.shutdown();
     Ok(report)
+}
+
+/// What a [`streaming_serve`] run measured. TTFT/ITL are sampled
+/// **client-side** — wall time between `submit` and each
+/// [`StreamEvent::Token`] arrival at the handle — so one report covers
+/// exactly one leg (the leader's `serving.ttft_ms`/`serving.itl_ms`
+/// windows are global and would mix back-to-back legs).
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub completed: usize,
+    pub dropped: usize,
+    pub total_tokens: usize,
+    pub elapsed_s: f64,
+    pub requests_per_s: f64,
+    pub tokens_per_s: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub itl_p50_ms: f64,
+    pub itl_p99_ms: f64,
+}
+
+/// Continuous-batching scenario: a forward-only single-stage pipeline
+/// saturated with multi-token (streaming) requests of mixed decode
+/// budgets — every `heavy_every`-th request generates `heavy_budget`
+/// tokens, the rest `light_budget` — all submitted up front so the
+/// decode loop runs at capacity for the whole measurement.
+///
+/// The budget mix is the whole point: under iteration-level scheduling
+/// a finished light request's slot is re-filled on the very next decode
+/// step, while `gang = true` (`MW_DECODE_GANG`) holds every slot until
+/// the batch's heavy straggler retires — run-to-completion semantics
+/// over the identical streaming wire. The two legs differ only in that
+/// admission rule, so their throughput ratio isolates exactly what
+/// continuous batching buys (structurally ≈ the iteration-count ratio,
+/// robust to box speed: each iteration is one leader↔worker RTT in both
+/// legs).
+pub fn streaming_serve(
+    n_requests: usize,
+    heavy_every: usize,
+    heavy_budget: u32,
+    light_budget: u32,
+    gang: bool,
+    opts: WorldOptions,
+    base_port: u16,
+) -> anyhow::Result<StreamReport> {
+    const BATCH: usize = 4;
+    const SEQ_LEN: usize = 8;
+    const VOCAB: usize = 32;
+    let topo = Topology::pipeline(&uniq("cbatch"), &[1], base_port);
+    let cfg = ServingConfig { batch_timeout_ms: 2, decode_gang: gang, ..Default::default() };
+    let cluster = InProcCluster::start_forward_only(
+        topo,
+        opts,
+        ScalingPolicy { recover: false, ..Default::default() },
+        &cfg,
+        BATCH,
+        SEQ_LEN,
+        VOCAB,
+    )?;
+    let mut gen = RequestGen::new(0x5EED, SEQ_LEN, VOCAB, None);
+    let t0 = Instant::now();
+    let mut consumers = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let (req, _) = gen.next();
+        let budget = if heavy_every > 0 && i % heavy_every == 0 {
+            heavy_budget
+        } else {
+            light_budget
+        };
+        let submitted = Instant::now();
+        let h = cluster.leader.submit_blocking(req.with_max_tokens(budget));
+        consumers.push(std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(120);
+            let mut ttft_ms: Option<f64> = None;
+            let mut gaps_ms: Vec<f64> = Vec::new();
+            let mut last = submitted;
+            let mut tokens = 0usize;
+            loop {
+                match h.next_event(deadline) {
+                    Some(StreamEvent::Token(_)) => {
+                        let now = Instant::now();
+                        let gap = now.duration_since(last).as_secs_f64() * 1e3;
+                        if ttft_ms.is_none() {
+                            ttft_ms = Some(gap);
+                        } else {
+                            gaps_ms.push(gap);
+                        }
+                        last = now;
+                        tokens += 1;
+                    }
+                    Some(StreamEvent::Done(o)) => {
+                        return (ttft_ms, gaps_ms, tokens, matches!(o, Outcome::Response(_)))
+                    }
+                    None => return (ttft_ms, gaps_ms, tokens, false),
+                }
+            }
+        }));
+    }
+    let (mut completed, mut total_tokens) = (0usize, 0usize);
+    let mut ttfts = Vec::new();
+    let mut itls = Vec::new();
+    for c in consumers {
+        let (ttft, gaps, tokens, ok) = c.join().unwrap();
+        completed += ok as usize;
+        total_tokens += tokens;
+        ttfts.extend(ttft);
+        itls.extend(gaps);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    cluster.shutdown();
+    ttfts.sort_by(|a, b| a.total_cmp(b));
+    itls.sort_by(|a, b| a.total_cmp(b));
+    Ok(StreamReport {
+        completed,
+        dropped: n_requests - completed,
+        total_tokens,
+        elapsed_s,
+        requests_per_s: completed as f64 / elapsed_s,
+        tokens_per_s: total_tokens as f64 / elapsed_s,
+        ttft_p50_ms: quantile(&ttfts, 0.50),
+        ttft_p99_ms: quantile(&ttfts, 0.99),
+        itl_p50_ms: quantile(&itls, 0.50),
+        itl_p99_ms: quantile(&itls, 0.99),
+    })
 }
 
 /// Open-loop arrival-rate curve for the autoscale scenario.
@@ -764,6 +888,27 @@ mod tests {
         // promote (global counters, so concurrent tests can only
         // inflate the delta, never shrink it).
         assert!(report.promoted >= 2, "spare promotion on every kill: {report:?}");
+    }
+
+    #[test]
+    fn streaming_scenario_streams_every_token() {
+        let base = 61_000 + (std::process::id() % 80) as u16 * 24;
+        let r = streaming_serve(
+            12,
+            4,
+            6,
+            2,
+            false,
+            WorldOptions::shm().with_init_timeout(Duration::from_secs(120)),
+            base,
+        )
+        .unwrap();
+        assert_eq!(r.completed, 12, "every streaming request finishes: {r:?}");
+        // 3 heavy × 6 tokens + 9 light × 2 — the decode loop emits each
+        // request's full budget, no more, no less.
+        assert_eq!(r.total_tokens, 3 * 6 + 9 * 2, "{r:?}");
+        assert!(r.ttft_p50_ms > 0.0, "client-side TTFT sampled: {r:?}");
+        assert!(r.tokens_per_s > 0.0);
     }
 
     #[test]

@@ -523,6 +523,25 @@ pub struct ServingConfig {
     /// Per-request SLO deadline (ms) stamped at admission; requests
     /// still queued past it are dropped before dispatch. 0 = no SLO.
     pub slo_ms: u64,
+    /// Streaming SLO, first half: time-to-first-token budget (ms) for
+    /// multi-token requests. A request that has not produced its first
+    /// token this long after arrival is evicted from its decode slot.
+    /// 0 = no TTFT SLO.
+    pub slo_ttft_ms: u64,
+    /// Streaming SLO, second half: inter-token gap budget (ms). A
+    /// decoding request whose *next* token is this late after its
+    /// previous one is evicted. 0 = no ITL SLO.
+    pub slo_itl_ms: u64,
+    /// Default decode budget: tokens generated per request when the
+    /// request itself does not carry one. 1 (the default) keeps the
+    /// legacy one-shot path — no decode loop ever starts and the wire
+    /// protocol is byte-identical to the pre-streaming runtime.
+    pub max_tokens: u32,
+    /// Gang scheduling for the decode loop (diagnostics/baseline only):
+    /// admit a fresh batch only when *every* slot has retired, i.e.
+    /// run-to-completion semantics over the streaming wire. Off by
+    /// default — iteration-level admission is the point.
+    pub decode_gang: bool,
     /// Admission queue bound: `submit` load-sheds once this many
     /// requests are queued. 0 = unbounded (legacy behavior).
     pub admission_depth: usize,
@@ -560,6 +579,10 @@ impl Default for ServingConfig {
             scale_down_util: 0.2,
             scale_window_ms: 2_000,
             slo_ms: 0,
+            slo_ttft_ms: 0,
+            slo_itl_ms: 0,
+            max_tokens: 1,
+            decode_gang: false,
             admission_depth: 0,
             retry_timeout_ms: 2_000,
             retry_max_attempts: 5,
@@ -590,6 +613,18 @@ impl ServingConfig {
         }
         if let Some(v) = get("MW_SLO_MS").and_then(|s| s.parse().ok()) {
             c.slo_ms = v;
+        }
+        if let Some(v) = get("MW_SLO_TTFT_MS").and_then(|s| s.parse().ok()) {
+            c.slo_ttft_ms = v;
+        }
+        if let Some(v) = get("MW_SLO_ITL_MS").and_then(|s| s.parse().ok()) {
+            c.slo_itl_ms = v;
+        }
+        if let Some(v) = get("MW_MAX_TOKENS").and_then(|s| s.parse().ok()) {
+            c.max_tokens = v;
+        }
+        if let Some(v) = get("MW_DECODE_GANG") {
+            c.decode_gang = v != "0";
         }
         if let Some(v) = get("MW_ADMISSION_DEPTH").and_then(|s| s.parse().ok()) {
             c.admission_depth = v;
@@ -671,6 +706,13 @@ mod tests {
         assert_eq!(c.retry_timeout_ms, 2_000);
         assert_eq!(c.retry_max_attempts, 5);
         assert!(c.autoscale_interval_ms > 0);
+        // Streaming knobs default to the legacy one-shot path: a single
+        // decode token, no TTFT/ITL SLOs, iteration-level (non-gang)
+        // admission once the loop does run.
+        assert_eq!(c.max_tokens, 1);
+        assert_eq!(c.slo_ttft_ms, 0);
+        assert_eq!(c.slo_itl_ms, 0);
+        assert!(!c.decode_gang);
     }
 
     #[test]

@@ -48,6 +48,20 @@
 //! ms=2 prob=0.1` — stall the head→shard-1 direction of replica (1,1)'s
 //! TP world, and delay 10% of all other sends by 2 ms.
 //!
+//! **Multi-rule semantics: first match wins.** Several rules may match
+//! the same directed edge; per send, rules are evaluated in plan order
+//! and the *first* one whose `after`/`count`/`prob` gates all pass
+//! supplies the verdict — at most one fault applies per message. A
+//! later matching rule is *shadowed* for that send: it does **not**
+//! burn its `count` budget (though its probability draw *is* consumed —
+//! see the determinism contract below), so it takes over intact once
+//! every earlier matching rule's budget is exhausted. The one exception
+//! is `kind=stall`, which wins categorically regardless of plan
+//! position: a wedged link is wedged, whatever else the plan says.
+//! Order therefore encodes priority — `kind=drop count=1; kind=delay
+//! ms=2` on one edge drops the first send and delays the rest, while
+//! the reverse order delays every send and never drops.
+//!
 //! ## Determinism contract
 //!
 //! Per-edge decisions depend only on `(seed, src, dst, send index)`:
@@ -991,6 +1005,72 @@ mod tests {
         );
         let events = registry().events();
         assert!(events.iter().any(|e| e.world == "dropw" && e.kind == "drop" && e.op == 0));
+    }
+
+    #[test]
+    fn first_match_wins_and_shadowed_rules_keep_their_budget() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        // drop(count=1) before delay: the first send burns the drop
+        // budget; the shadowed delay rule takes over on the second send
+        // with its own budget intact.
+        let plan = FaultPlan::new(
+            vec![
+                FaultRule::always(EdgePattern::new("fmw", None, None), FaultKind::Drop)
+                    .with_count(1),
+                FaultRule::always(
+                    EdgePattern::new("fmw", None, None),
+                    FaultKind::Delay { ms: 40 },
+                ),
+            ],
+            7,
+        );
+        let (a, b) = wrapped("fmw", plan);
+        a.send(1, &[b"lost"]).unwrap();
+        let t0 = std::time::Instant::now();
+        a.send(2, &[b"late"]).unwrap();
+        assert_eq!(b.recv(2, Some(Duration::from_secs(2))).unwrap(), b"late");
+        assert!(t0.elapsed() >= Duration::from_millis(35), "second rule's delay applied");
+        assert!(matches!(
+            b.recv(1, Some(Duration::from_millis(80))),
+            Err(CclError::Timeout(_))
+        ), "first rule's drop applied");
+        let kinds: Vec<_> = registry()
+            .events()
+            .into_iter()
+            .filter(|e| e.world == "fmw")
+            .map(|e| e.kind)
+            .collect();
+        assert_eq!(kinds, vec!["drop", "delay"], "exactly one fault per send, in rule order");
+    }
+
+    #[test]
+    fn earlier_always_rule_shadows_later_rules_forever() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        // Reversed order: an unbounded delay rule ahead of drop(count=1)
+        // wins every send, so the drop never fires — order is priority.
+        let plan = FaultPlan::new(
+            vec![
+                FaultRule::always(
+                    EdgePattern::new("fmw2", None, None),
+                    FaultKind::Delay { ms: 5 },
+                ),
+                FaultRule::always(EdgePattern::new("fmw2", None, None), FaultKind::Drop)
+                    .with_count(1),
+            ],
+            7,
+        );
+        let (a, b) = wrapped("fmw2", plan);
+        a.send(1, &[b"one"]).unwrap();
+        a.send(2, &[b"two"]).unwrap();
+        assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"one");
+        assert_eq!(b.recv(2, Some(Duration::from_secs(2))).unwrap(), b"two");
+        let events = registry().events();
+        assert!(
+            events.iter().filter(|e| e.world == "fmw2").all(|e| e.kind == "delay"),
+            "shadowed drop rule never fires"
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@ use super::error::{CclError, CclResult};
 use super::hostmap::HostMap;
 use super::transport::Link;
 use super::work::Work;
-use crate::config::{CollOp, CollPolicy};
+use crate::config::{CollAlgo, CollOp, CollPolicy};
 use crate::tensor::{read_tensor, serialize::encode_header, Tensor};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
@@ -77,6 +77,9 @@ pub struct WorldCore {
     /// sizes stop mis-picking flat after the first invocation on the
     /// tag lane (see `CollPolicy::decide`).
     max_contrib: [AtomicU64; 6],
+    /// One-shot latch: set when a forced-`Hier` world first runs a
+    /// non-hierarchical algorithm (see [`WorldCore::note_algo`]).
+    hier_degraded: AtomicBool,
     /// Point-to-point receives pending on the p2p poller thread.
     /// Unlike collectives (strictly ordered on the progress thread),
     /// `irecv`s from *different peers* complete concurrently — the
@@ -171,6 +174,25 @@ impl WorldCore {
     /// code (see [`World::last_algo`]).
     pub(crate) fn note_algo(&self, op: CollOp, code: u8) {
         self.algo_trace[op.index()].store(code, Ordering::Relaxed);
+        // A forced-`Hier` policy degrades silently in two cases:
+        // gather/scatter have no hierarchical variant (per-rank-distinct
+        // payloads — see `CollOp::has_hier`), and single-host worlds
+        // have no leader ring. `decide` falls back to ring (then flat)
+        // by design, but an operator who pinned `MW_COLL_ALGO=hier`
+        // should learn the pin isn't running — once per world, not once
+        // per op, so steady-state traffic can't flood the log.
+        if code != ALGO_HIER
+            && self.coll_policy.algo == CollAlgo::Hier
+            && self.size >= 2
+            && !self.hier_degraded.swap(true, Ordering::Relaxed)
+        {
+            crate::metrics::global().counter("coll.hier_degraded").inc();
+            let ran = if code == ALGO_RING { "ring" } else { "flat" };
+            crate::metrics::log_event(
+                "coll.hier_degraded",
+                &[("world", self.name.as_str()), ("op", op.name()), ("ran", ran)],
+            );
+        }
     }
 
     /// Record one rank's observed contribution size for `op` (the
@@ -296,6 +318,7 @@ impl World {
             hosts,
             algo_trace: Default::default(),
             max_contrib: Default::default(),
+            hier_degraded: AtomicBool::new(false),
             pending_recvs: Mutex::new(Vec::new()),
         });
         let (job_tx, job_rx) = std::sync::mpsc::channel::<Job>();

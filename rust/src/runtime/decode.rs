@@ -1,0 +1,203 @@
+//! Slot-addressed per-request decode state for the continuous batching
+//! loop — shared by the real PJRT engine and the stub (it is pure
+//! bookkeeping, no backend calls).
+//!
+//! Iteration-level scheduling keeps a *running batch* resident in each
+//! stage worker: every decode step admits new requests into free slots
+//! (prefill) and retires finished ones, instead of gang-scheduling a
+//! fixed batch to completion. The state that must live worker-side for
+//! that to work — which request owns which slot, its decode position,
+//! its remaining token budget, and a handle to its KV-cache allocation
+//! — is exactly what [`DecodeSlots`] tracks.
+//!
+//! Ownership contract: the **leader is the source of truth**. Workers
+//! apply the slot directives carried by each step frame idempotently
+//! (`alloc` twice is fine, `free` of an empty slot is fine, a directive
+//! that disagrees with local state *adopts* the leader's view). That
+//! makes worker state soft: a promoted spare starts from empty slots
+//! and the very next step frame re-prefills whatever the leader still
+//! considers in flight — lost KV state means re-prefill, never lost
+//! requests.
+
+/// Per-slot decode state for one resident request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SlotState {
+    /// Owning request id (leader-assigned).
+    pub req_id: u64,
+    /// Decode position: tokens generated so far for this request.
+    pub pos: u32,
+    /// Remaining token budget (decrements per decode step; the leader
+    /// retires the request when it hits zero).
+    pub budget: u32,
+    /// Opaque KV-cache handle. The reproduction's AOT stages are
+    /// stateless, so this is a synthesized allocation tag rather than a
+    /// device pointer — but it flows through alloc/free exactly where a
+    /// real paged-KV handle would, so the lifecycle is load-bearing.
+    pub kv: u64,
+}
+
+/// A stage worker's running batch: `capacity` slots, each either free or
+/// owned by one in-flight request. Grows on demand if the leader ever
+/// addresses a slot beyond the initial capacity (e.g. after a config
+/// change), so a stale worker can always adopt the leader's view.
+#[derive(Default)]
+pub struct DecodeSlots {
+    slots: Vec<Option<SlotState>>,
+    /// Monotonic KV allocation tag source.
+    next_kv: u64,
+}
+
+impl DecodeSlots {
+    pub fn new(capacity: usize) -> Self {
+        DecodeSlots { slots: vec![None; capacity], next_kv: 1 }
+    }
+
+    fn ensure(&mut self, slot: usize) {
+        if slot >= self.slots.len() {
+            self.slots.resize(slot + 1, None);
+        }
+    }
+
+    /// Idempotent prefill-time allocation: bind `slot` to `req_id` at
+    /// position `pos` with `budget` tokens remaining. If the slot
+    /// already holds this request the call is a no-op (duplicate step
+    /// frame after a retry); if it holds a *different* request the
+    /// leader's view wins and the old occupant's KV is released.
+    /// Returns the slot's KV handle.
+    pub fn alloc(&mut self, slot: usize, req_id: u64, pos: u32, budget: u32) -> u64 {
+        self.ensure(slot);
+        if let Some(st) = &self.slots[slot] {
+            if st.req_id == req_id {
+                return st.kv;
+            }
+        }
+        let kv = self.next_kv;
+        self.next_kv += 1;
+        self.slots[slot] = Some(SlotState { req_id, pos, budget, kv });
+        kv
+    }
+
+    /// Adopt the leader's view of a decoding slot: same request advances
+    /// in place; an unknown or different request (this worker was just
+    /// promoted, or a retry raced a retirement) is treated as a fresh
+    /// allocation.
+    pub fn adopt(&mut self, slot: usize, req_id: u64, pos: u32, budget: u32) {
+        self.ensure(slot);
+        match &mut self.slots[slot] {
+            Some(st) if st.req_id == req_id => {
+                st.pos = pos;
+                st.budget = budget;
+            }
+            _ => {
+                self.alloc(slot, req_id, pos, budget);
+            }
+        }
+    }
+
+    /// Free a slot (request retired). Idempotent: freeing an empty slot
+    /// is a no-op.
+    pub fn free(&mut self, slot: usize) {
+        if slot < self.slots.len() {
+            self.slots[slot] = None;
+        }
+    }
+
+    /// Advance every occupied slot by one decode step: position up,
+    /// budget down (saturating). Called once per executed iteration.
+    pub fn advance(&mut self) {
+        for st in self.slots.iter_mut().flatten() {
+            st.pos += 1;
+            st.budget = st.budget.saturating_sub(1);
+        }
+    }
+
+    /// The state at `slot`, if occupied.
+    pub fn get(&self, slot: usize) -> Option<&SlotState> {
+        self.slots.get(slot).and_then(|s| s.as_ref())
+    }
+
+    /// Number of occupied slots (the running batch size).
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().flatten().count()
+    }
+
+    /// Total slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Drop all state (worker shutdown / world re-mint).
+    pub fn clear(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_lifecycle() {
+        let mut s = DecodeSlots::new(4);
+        assert_eq!(s.capacity(), 4);
+        assert_eq!(s.occupied(), 0);
+        let kv = s.alloc(1, 100, 0, 8);
+        assert_eq!(s.occupied(), 1);
+        assert_eq!(s.get(1).unwrap(), &SlotState { req_id: 100, pos: 0, budget: 8, kv });
+        s.free(1);
+        assert!(s.get(1).is_none());
+        assert_eq!(s.occupied(), 0);
+        s.free(1); // idempotent
+        s.free(99); // out of range is a no-op
+    }
+
+    #[test]
+    fn alloc_is_idempotent_per_request_but_replaces_strangers() {
+        let mut s = DecodeSlots::new(2);
+        let kv1 = s.alloc(0, 7, 0, 4);
+        let kv_again = s.alloc(0, 7, 0, 4);
+        assert_eq!(kv1, kv_again, "duplicate frame reuses the KV handle");
+        let kv2 = s.alloc(0, 8, 0, 4);
+        assert_ne!(kv1, kv2, "leader reassigned the slot: fresh KV");
+        assert_eq!(s.get(0).unwrap().req_id, 8);
+    }
+
+    #[test]
+    fn adopt_advances_own_request_and_takes_over_unknown() {
+        let mut s = DecodeSlots::new(2);
+        let kv = s.alloc(0, 7, 0, 4);
+        s.adopt(0, 7, 2, 2);
+        let st = s.get(0).unwrap();
+        assert_eq!((st.pos, st.budget, st.kv), (2, 2, kv), "in-place advance keeps KV");
+        // A just-promoted worker has nothing at slot 1 — adopting the
+        // leader's decode directive re-prefills it.
+        s.adopt(1, 9, 3, 1);
+        assert_eq!(s.get(1).unwrap().req_id, 9);
+        assert_eq!(s.get(1).unwrap().pos, 3);
+    }
+
+    #[test]
+    fn advance_moves_every_occupant() {
+        let mut s = DecodeSlots::new(3);
+        s.alloc(0, 1, 0, 2);
+        s.alloc(2, 2, 5, 1);
+        s.advance();
+        assert_eq!((s.get(0).unwrap().pos, s.get(0).unwrap().budget), (1, 1));
+        assert_eq!((s.get(2).unwrap().pos, s.get(2).unwrap().budget), (6, 0));
+        s.advance();
+        assert_eq!(s.get(2).unwrap().budget, 0, "budget saturates at zero");
+    }
+
+    #[test]
+    fn grows_on_demand_and_clears() {
+        let mut s = DecodeSlots::new(1);
+        s.alloc(5, 42, 0, 1);
+        assert!(s.capacity() >= 6, "slot addressing beyond capacity grows");
+        assert_eq!(s.get(5).unwrap().req_id, 42);
+        s.clear();
+        assert_eq!(s.occupied(), 0);
+        assert!(s.capacity() >= 6, "clear keeps capacity");
+    }
+}

@@ -159,6 +159,24 @@ impl StageRunner {
         Ok(out)
     }
 
+    /// One decode iteration over the running batch: run the stage on
+    /// the step input (rows = slots, whether occupied or padding) and
+    /// advance every occupied slot's position/budget. The AOT artifact
+    /// is a fixed-shape whole-sequence executable, so a step re-runs it
+    /// on the slot-packed input — compute is not incremental, but the
+    /// slot lifecycle (alloc at prefill, advance per step, free at
+    /// retire) is exactly the paged-KV contract a step-wise kernel
+    /// would see.
+    pub fn decode_step(
+        &self,
+        slots: &mut crate::runtime::decode::DecodeSlots,
+        input: &Tensor,
+    ) -> anyhow::Result<Tensor> {
+        let out = self.run(input)?;
+        slots.advance();
+        Ok(out)
+    }
+
     /// Mean execution latency so far.
     pub fn mean_exec(&self) -> Duration {
         Duration::from_micros(self.exec_time.mean_us() as u64)

@@ -11,6 +11,10 @@
 //! stub on every push, so the feature-gated call sites cannot rot while
 //! the `xla` dependency waits on an artifacts cache (see ROADMAP).
 
+/// Slot-addressed per-request decode state for continuous batching —
+/// pure bookkeeping, shared by the real engine and the stub.
+pub mod decode;
+
 #[cfg(all(feature = "pjrt", feature = "xla-backend"))]
 mod engine;
 #[cfg(all(feature = "pjrt", feature = "xla-backend"))]

@@ -59,6 +59,17 @@ impl StageRunner {
         anyhow::bail!(NO_PJRT)
     }
 
+    /// Stub of the step-wise decode entry point (see the engine's
+    /// `decode_step`): the slot bookkeeping is real and shared, only the
+    /// stage execution is missing.
+    pub fn decode_step(
+        &self,
+        _slots: &mut crate::runtime::decode::DecodeSlots,
+        _input: &Tensor,
+    ) -> anyhow::Result<Tensor> {
+        anyhow::bail!(NO_PJRT)
+    }
+
     pub fn mean_exec(&self) -> Duration {
         Duration::from_micros(self.exec_time.mean_us() as u64)
     }

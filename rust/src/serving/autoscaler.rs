@@ -12,6 +12,12 @@
 //! * **recent p99 latency vs. the SLO target** — from the leader's
 //!   sliding window, so an old breach or an old healthy streak cannot
 //!   mask the present;
+//! * **recent p99 time-to-first-token vs. the TTFT target** — the
+//!   decode loop's admission-side latency signal (`MW_SLO_TTFT_MS`):
+//!   under continuous batching a saturated running batch shows up as
+//!   queue wait before the first token long before whole-request
+//!   latency moves. Decode throughput (tokens/s) rides the
+//!   `serving.tokens_per_s` gauge for observability;
 //! * **replica liveness** — zero alive replicas means an outage in
 //!   progress; scaling decisions wait for the controller's *recovery*
 //!   path instead of stacking new replicas onto a broken pipeline.
@@ -48,6 +54,16 @@ pub trait LoadSignals: Send + Sync {
     fn outstanding_batches(&self) -> usize;
     /// p99 latency (ms) over the recent window (0 when idle).
     fn recent_p99_ms(&self) -> f64;
+    /// p99 time-to-first-token (ms) over the recent window (0 when
+    /// idle or when the deployment serves no streaming traffic).
+    fn recent_ttft_p99_ms(&self) -> f64 {
+        0.0
+    }
+    /// Decoded tokens per second over the recent window (0 without
+    /// streaming traffic). Observability signal, not a trigger.
+    fn tokens_per_s(&self) -> f64 {
+        0.0
+    }
     /// Stop routing new batches to these in-edges (drain start).
     fn quiesce_edges(&self, edges: &[String]);
     /// Undo a quiesce (the retirement failed): route to these in-edges
@@ -69,6 +85,12 @@ impl LoadSignals for super::leader::Leader {
     }
     fn recent_p99_ms(&self) -> f64 {
         Self::recent_p99_ms(self)
+    }
+    fn recent_ttft_p99_ms(&self) -> f64 {
+        Self::recent_ttft_p99_ms(self)
+    }
+    fn tokens_per_s(&self) -> f64 {
+        Self::tokens_per_s(self)
     }
     fn quiesce_edges(&self, edges: &[String]) {
         Self::quiesce_edges(self, edges)
@@ -103,6 +125,11 @@ pub struct AutoscalePolicy {
     /// p99 target (ms); a recent p99 above it counts as a hot sample
     /// even with a shallow queue. 0 = latency is not a trigger.
     pub slo_p99_ms: f64,
+    /// Time-to-first-token p99 target (ms) for streaming traffic; a
+    /// recent TTFT p99 above it counts as a hot sample even with a
+    /// shallow queue (a saturated running batch queues prefills, which
+    /// shows up here first). 0 = TTFT is not a trigger.
+    pub slo_ttft_ms: f64,
     /// Consecutive hot samples before scale-out.
     pub high_samples: u32,
     /// Consecutive idle samples before scale-in.
@@ -121,6 +148,7 @@ impl Default for AutoscalePolicy {
             cooldown: Duration::from_secs(2),
             high_depth: 16.0,
             slo_p99_ms: 0.0,
+            slo_ttft_ms: 0.0,
             high_samples: 3,
             low_samples: 20,
             min_replicas: 1,
@@ -138,6 +166,7 @@ impl AutoscalePolicy {
             cooldown: Duration::from_millis(cfg.autoscale_cooldown_ms),
             high_depth: cfg.scale_up_queue_depth as f64,
             slo_p99_ms: cfg.slo_ms as f64,
+            slo_ttft_ms: cfg.slo_ttft_ms as f64,
             ..Default::default()
         }
     }
@@ -231,9 +260,13 @@ impl Autoscaler {
         }
         let depth = self.signals.queue_depth() as f64 / alive as f64;
         let p99 = self.signals.recent_p99_ms();
+        let ttft = self.signals.recent_ttft_p99_ms();
         g.gauge("serving.autoscale.depth_per_replica").set(depth as i64);
         g.gauge("serving.recent_p99_ms").set(p99 as i64);
-        let slo_hot = self.policy.slo_p99_ms > 0.0 && p99 > self.policy.slo_p99_ms;
+        g.gauge("serving.recent_ttft_p99_ms").set(ttft as i64);
+        g.gauge("serving.tokens_per_s").set(self.signals.tokens_per_s() as i64);
+        let slo_hot = (self.policy.slo_p99_ms > 0.0 && p99 > self.policy.slo_p99_ms)
+            || (self.policy.slo_ttft_ms > 0.0 && ttft > self.policy.slo_ttft_ms);
         let hot = depth >= self.policy.high_depth || slo_hot;
         let idle = self.signals.queue_depth() == 0
             && self.signals.outstanding_batches() == 0
@@ -428,6 +461,7 @@ mod tests {
         alive: AtomicUsize,
         outstanding: AtomicUsize,
         p99: Mutex<f64>,
+        ttft: Mutex<f64>,
         quiesced: Mutex<Vec<String>>,
         restored: Mutex<Vec<String>>,
         released: Mutex<Vec<String>>,
@@ -445,6 +479,9 @@ mod tests {
         }
         fn recent_p99_ms(&self) -> f64 {
             *self.p99.lock().unwrap()
+        }
+        fn recent_ttft_p99_ms(&self) -> f64 {
+            *self.ttft.lock().unwrap()
         }
         fn quiesce_edges(&self, edges: &[String]) {
             self.quiesced.lock().unwrap().extend(edges.iter().cloned());
@@ -524,6 +561,25 @@ mod tests {
         *s.p99.lock().unwrap() = 200.0;
         assert!(a.tick().is_none());
         let action = a.tick().expect("latency breach forces the depth check open");
+        assert!(matches!(action, Action::ScaledOut { stage: 0, .. }));
+        assert_eq!(c.topology().replicas[0], 2);
+    }
+
+    #[test]
+    fn ttft_breach_scales_out_with_shallow_queue() {
+        // Streaming saturation: whole-request p99 stays healthy (tokens
+        // are flowing), but prefills queue behind the running batch and
+        // TTFT breaches. That alone must trigger scale-out.
+        let (mut a, c, s) = setup(
+            &[1],
+            AutoscalePolicy { slo_ttft_ms: 25.0, high_samples: 2, ..hot_policy() },
+            ScalingPolicy { scale_up_depth: 1e9, max_replicas: 2, recover: false },
+        );
+        s.depth.store(1, Ordering::Relaxed);
+        *s.p99.lock().unwrap() = 1.0; // well under any whole-request SLO
+        *s.ttft.lock().unwrap() = 80.0;
+        assert!(a.tick().is_none());
+        let action = a.tick().expect("TTFT breach forces the depth check open");
         assert!(matches!(action, Action::ScaledOut { stage: 0, .. }));
         assert_eq!(c.topology().replicas[0], 2);
     }

@@ -212,6 +212,41 @@ impl DynamicBatcher {
         purged
     }
 
+    /// Non-blocking slot-fill for the continuous decode loop: take up to
+    /// `max` ready requests *right now* — no batch-fill window, no wait.
+    /// Expired requests at the head are shed (drop hook) exactly as in
+    /// [`next_batch`](Self::next_batch) and never consume a slot. The
+    /// decode scheduler calls this once per iteration with however many
+    /// slots its running batch has free; an empty return means the loop
+    /// simply decodes whoever is already resident.
+    pub fn take_ready(&self, max: usize) -> Vec<Request> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let now = since_epoch();
+        let mut q = self.q.lock().unwrap();
+        let mut out = Vec::new();
+        let mut expired = Vec::new();
+        while out.len() < max {
+            let Some(r) = q.items.pop_front() else { break };
+            if r.expired_at(now) {
+                expired.push(r);
+            } else {
+                out.push(r);
+            }
+        }
+        let depth = q.items.len();
+        drop(q);
+        if !out.is_empty() || !expired.is_empty() {
+            self.note_depth(depth);
+            if self.capacity > 0 {
+                self.cv.notify_all(); // space freed for push_wait
+            }
+        }
+        self.run_drop_hook(expired);
+        out
+    }
+
     /// Blocking: wait for the first request, then fill up to `max_batch`
     /// until `timeout` elapses. Expired requests are dropped (drop hook)
     /// before dispatch and never consume a batch slot. `None` once
@@ -539,6 +574,111 @@ mod tests {
             assert_eq!(all.len(), total, "seed {seed}: no id resolved twice");
             assert_eq!(b.depth(), 0, "seed {seed}: queue drained");
         }
+    }
+
+    #[test]
+    fn take_ready_fills_free_slots_without_blocking() {
+        let b = DynamicBatcher::new(8, Duration::from_secs(10));
+        // Empty queue: returns immediately with nothing (the decode loop
+        // just runs the residents) — no batch-fill wait.
+        let t0 = Instant::now();
+        assert!(b.take_ready(4).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(50), "never blocks");
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        // Two free slots → exactly two admitted, FIFO; the third stays.
+        let got: Vec<u64> = b.take_ready(2).iter().map(|r| r.id).collect();
+        assert_eq!(got, vec![0, 1]);
+        assert_eq!(b.depth(), 1);
+        // Zero free slots is a no-op.
+        assert!(b.take_ready(0).is_empty());
+        assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn continuous_admission_joins_and_leaves_across_steps() {
+        // Model the decode loop: a 4-slot running batch where requests
+        // retire at different steps and `take_ready` back-fills exactly
+        // the freed slots each iteration — requests join and leave the
+        // batch mid-flight instead of gang-scheduling.
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let mut resident: Vec<u64> =
+            b.take_ready(4).iter().map(|r| r.id).collect();
+        assert_eq!(resident, vec![0, 1, 2, 3]);
+        // Step 1: requests 1 and 3 finish; two arrivals land mid-step.
+        b.push(req(4));
+        b.push(req(5));
+        resident.retain(|&id| id != 1 && id != 3);
+        let joined: Vec<u64> =
+            b.take_ready(4 - resident.len()).iter().map(|r| r.id).collect();
+        assert_eq!(joined, vec![4, 5], "arrivals fill freed slots same step");
+        resident.extend(joined);
+        assert_eq!(resident.len(), 4, "batch stays full across churn");
+        // Step 2: nothing queued, one retirement — the loop keeps
+        // decoding a partial batch rather than stalling for a fill.
+        resident.retain(|&id| id != 0);
+        assert!(b.take_ready(4 - resident.len()).is_empty());
+        assert_eq!(resident, vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn head_of_queue_slo_drops_race_slot_admission() {
+        // An expired request at the head must be shed by `take_ready`
+        // (drop hook, no slot consumed) even while pushers are racing
+        // admission — the streaming analogue of
+        // `expired_requests_dropped_before_dispatch`.
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        let dropped: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let d2 = dropped.clone();
+        b.set_drop_hook(Box::new(move |r| d2.lock().unwrap().push(r.id)));
+        let mut dead = req(0);
+        dead.deadline = Some(since_epoch() - 1.0);
+        b.push(dead);
+        let b2 = b.clone();
+        let racer = std::thread::spawn(move || {
+            for i in 1..=8 {
+                b2.push(req(i));
+                std::thread::yield_now();
+            }
+        });
+        // Keep taking one slot at a time while the racer pushes: the
+        // dead head must surface in the drop hook, never in a slot.
+        let mut admitted = Vec::new();
+        while admitted.len() < 8 {
+            admitted.extend(b.take_ready(1).iter().map(|r| r.id));
+        }
+        racer.join().unwrap();
+        assert_eq!(dropped.lock().unwrap().as_slice(), &[0]);
+        let mut sorted = admitted.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shedding_while_running_batch_full() {
+        // The running batch is full (take_ready(0) every step), so the
+        // bounded queue backs up and admission load-sheds — exactly the
+        // saturation regime continuous batching runs in.
+        let b = DynamicBatcher::with_capacity(4, Duration::from_millis(1), 2);
+        assert!(b.try_push(req(0)).is_ok());
+        assert!(b.try_push(req(1)).is_ok());
+        let back = b.try_push(req(2)).unwrap_err();
+        assert_eq!(back.id, 2, "full queue sheds while the batch is full");
+        // Several decode steps pass with no free slots: nothing drains,
+        // shedding continues deterministically.
+        for _ in 0..3 {
+            assert!(b.take_ready(0).is_empty());
+            assert!(b.try_push(req(9)).is_err());
+        }
+        // One retirement frees one slot; one queued request admits and
+        // exactly one shed producer gets space back.
+        assert_eq!(b.take_ready(1)[0].id, 0);
+        assert!(b.try_push(req(3)).is_ok());
+        assert!(b.try_push(req(4)).is_err(), "queue full again");
     }
 
     #[test]

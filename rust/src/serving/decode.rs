@@ -1,0 +1,453 @@
+//! Continuous batching: the step-frame wire protocol and the
+//! iteration-level scheduler state behind the leader's decode loop.
+//!
+//! ## Why iteration-level scheduling
+//!
+//! The legacy hot path treats a request as exactly one forward pass:
+//! the batcher fuses whoever arrived inside one admission window, the
+//! batch runs to completion, and the next batch only forms afterwards.
+//! For multi-token (decode) workloads that gang-scheduling wastes most
+//! of the machine: a batch runs as long as its *longest* member, while
+//! finished slots sit idle. The decode loop here re-schedules **every
+//! iteration**: each decode step admits queued requests into free slots
+//! (prefill) and retires finished or SLO-expired ones, so the running
+//! batch stays full as long as there is work — the classic continuous
+//! batching result (≈ the max-budget/mean-budget ratio in throughput).
+//!
+//! ## The wire protocol
+//!
+//! One **step frame** per pipeline lane per iteration, carried *inside*
+//! the existing [`Envelope`](super::stage_worker::Envelope) as a U8
+//! tensor with an 8-byte magic prefix, so legacy one-shot batches
+//! (i32 `[B, S]` token tensors) and step frames share every transport
+//! byte except the inner payload — `max_tokens = 1` deployments never
+//! produce a frame and stay byte-identical to the pre-streaming
+//! runtime. A frame carries:
+//!
+//! * per-slot directives ([`StepEntry`]): `Prefill` (bind the slot to a
+//!   request and allocate KV state), `Decode` (advance the resident
+//!   request), `Retire` (free the slot);
+//! * the packed token payload (`[B, S]` i32; row *i* is slot *i*'s
+//!   sliding window of prompt + generated tokens).
+//!
+//! Workers apply the directives to their slot-addressed
+//! [`DecodeSlots`](crate::runtime::decode::DecodeSlots), run the stage
+//! step-wise, substitute the output payload and forward the frame —
+//! the leader's collector harvests one token per occupied slot per
+//! frame. The **leader is the source of truth**: worker slot state is
+//! soft, so a promoted spare adopts the next frame's directives from
+//! empty state and evicted-by-failure requests **re-prefill** (their
+//! prompt plus everything generated so far is replayed) instead of
+//! being lost.
+
+use super::request::Request;
+use crate::tensor::{read_tensor, DType, Tensor};
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+/// Magic prefix distinguishing a step frame from every legacy envelope
+/// payload (which are i32/f32 tensors, never U8 starting with this).
+pub const STEP_MAGIC: [u8; 8] = *b"MWSTEP1\0";
+
+/// Slot directive carried by a [`StepEntry`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPhase {
+    /// Bind the slot to this request and allocate decode state.
+    Prefill,
+    /// Advance the resident request one decode step.
+    Decode,
+    /// Free the slot (request finished or was evicted).
+    Retire,
+}
+
+/// One slot's directive within a step frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepEntry {
+    pub slot: u16,
+    pub req_id: u64,
+    /// Tokens generated so far (the decode position).
+    pub pos: u32,
+    /// Tokens still budgeted after this position.
+    pub budget: u32,
+    pub phase: StepPhase,
+}
+
+const ENTRY_BYTES: usize = 2 + 8 + 4 + 4 + 1;
+
+/// One decode iteration on the wire. See module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepFrame {
+    pub entries: Vec<StepEntry>,
+    /// `[B, S]` i32 on the leader→stage0 hop; whatever the stages
+    /// produce on later hops (logits on the final one).
+    pub payload: Tensor,
+}
+
+impl StepFrame {
+    /// Cheap classifier: is this envelope payload a step frame?
+    pub fn is_step(t: &Tensor) -> bool {
+        t.dtype() == DType::U8 && t.bytes().len() >= 8 && t.bytes()[..8] == STEP_MAGIC
+    }
+
+    pub fn pack(&self) -> Tensor {
+        let mut bytes = Vec::with_capacity(
+            8 + 2 + self.entries.len() * ENTRY_BYTES + 64 + self.payload.byte_len(),
+        );
+        bytes.extend_from_slice(&STEP_MAGIC);
+        bytes.extend_from_slice(&(self.entries.len() as u16).to_le_bytes());
+        for e in &self.entries {
+            bytes.extend_from_slice(&e.slot.to_le_bytes());
+            bytes.extend_from_slice(&e.req_id.to_le_bytes());
+            bytes.extend_from_slice(&e.pos.to_le_bytes());
+            bytes.extend_from_slice(&e.budget.to_le_bytes());
+            bytes.push(match e.phase {
+                StepPhase::Prefill => 0,
+                StepPhase::Decode => 1,
+                StepPhase::Retire => 2,
+            });
+        }
+        crate::tensor::write_tensor(&mut bytes, &self.payload).expect("pack step frame");
+        let n = bytes.len();
+        Tensor::from_bytes(DType::U8, &[n], bytes).expect("step frame tensor")
+    }
+
+    pub fn unpack(t: &Tensor) -> anyhow::Result<StepFrame> {
+        anyhow::ensure!(Self::is_step(t), "not a step frame");
+        let bytes = t.bytes();
+        anyhow::ensure!(bytes.len() >= 10, "step frame too short");
+        let count = u16::from_le_bytes(bytes[8..10].try_into().unwrap()) as usize;
+        let mut off = 10;
+        anyhow::ensure!(
+            bytes.len() >= off + count * ENTRY_BYTES,
+            "step frame truncated: {} entries claimed",
+            count
+        );
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            let slot = u16::from_le_bytes(bytes[off..off + 2].try_into().unwrap());
+            let req_id = u64::from_le_bytes(bytes[off + 2..off + 10].try_into().unwrap());
+            let pos = u32::from_le_bytes(bytes[off + 10..off + 14].try_into().unwrap());
+            let budget = u32::from_le_bytes(bytes[off + 14..off + 18].try_into().unwrap());
+            let phase = match bytes[off + 18] {
+                0 => StepPhase::Prefill,
+                1 => StepPhase::Decode,
+                2 => StepPhase::Retire,
+                other => anyhow::bail!("step frame: bad phase byte {other}"),
+            };
+            entries.push(StepEntry { slot, req_id, pos, budget, phase });
+            off += ENTRY_BYTES;
+        }
+        let payload = read_tensor(&mut &bytes[off..])?;
+        Ok(StepFrame { entries, payload })
+    }
+}
+
+/// Deterministic stand-in token for forward-only pipelines (the echoed
+/// payload carries no logits to argmax): a splitmix64 hash of
+/// (request id, position) folded into the vocab, so streams are
+/// reproducible across retries and re-prefills.
+pub fn token_hash(req_id: u64, pos: u32, vocab: usize) -> i32 {
+    let mut z = req_id ^ ((pos as u64) << 32) ^ 0x9E37_79B9_7F4A_7C15;
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % vocab.max(1) as u64) as i32
+}
+
+/// One request resident in (or between) decode slots.
+pub(crate) struct ActiveReq {
+    pub req: Request,
+    /// Total decode budget (tokens to generate).
+    pub budget: u32,
+    /// Tokens generated so far, in order.
+    pub generated: Vec<i32>,
+    /// Whether the worker side has (as far as we know) prefilled this
+    /// request — `false` forces a `Prefill` directive on the next frame
+    /// (fresh admission, or re-admission after its lane died).
+    pub prefilled: bool,
+    /// When the first token came back (epoch seconds); `None` until
+    /// then. Drives the TTFT SLO and the TTFT metric.
+    pub first_token_at: Option<f64>,
+    /// When the most recent token came back (epoch seconds). Drives the
+    /// inter-token-gap SLO and the ITL metric.
+    pub last_token_at: f64,
+}
+
+impl ActiveReq {
+    pub fn new(req: Request) -> ActiveReq {
+        let budget = req.max_tokens.max(1);
+        let arrival = req.arrival;
+        ActiveReq {
+            req,
+            budget,
+            generated: Vec::new(),
+            prefilled: false,
+            first_token_at: None,
+            last_token_at: arrival,
+        }
+    }
+
+    /// Tokens still to generate.
+    pub fn remaining(&self) -> u32 {
+        self.budget.saturating_sub(self.generated.len() as u32)
+    }
+
+    /// The request's current token window: the last `seq_len` tokens of
+    /// prompt ++ generated. This is both the decode-step input and the
+    /// **re-prefill** input after a failure — generated tokens are
+    /// leader-side state, so a dead worker costs re-computation, never
+    /// the request.
+    pub fn window(&self, seq_len: usize) -> Vec<i32> {
+        let total = self.req.tokens.len() + self.generated.len();
+        let skip = total.saturating_sub(seq_len);
+        self.req
+            .tokens
+            .iter()
+            .chain(self.generated.iter())
+            .skip(skip)
+            .copied()
+            .collect()
+    }
+}
+
+/// A frame in flight on one lane.
+pub(crate) struct Inflight {
+    pub iter: u64,
+    pub sent_at: Instant,
+    pub attempts: u32,
+    /// The packed envelope, kept so a retry resends the *identical*
+    /// frame (worker-side directive application is idempotent).
+    pub env: Tensor,
+}
+
+/// One pipeline lane: the decode loop's view of one stage-0 in-edge —
+/// its running batch (slot-addressed), the frame in flight on it (at
+/// most one; the iteration stream is a pipeline of depth 1 per lane),
+/// and slots retired since the last frame (their `Retire` directives
+/// ride the next one).
+pub(crate) struct Lane {
+    pub edge: String,
+    pub slots: Vec<Option<ActiveReq>>,
+    pub inflight: Option<Inflight>,
+    pub retiring: Vec<(u16, u64)>,
+}
+
+impl Lane {
+    pub fn new(edge: String, batch: usize) -> Lane {
+        Lane {
+            edge,
+            slots: (0..batch).map(|_| None).collect(),
+            inflight: None,
+            retiring: Vec::new(),
+        }
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().flatten().count()
+    }
+}
+
+/// The decode scheduler's shared state: lanes keyed by in-edge name
+/// plus the re-admission queue for requests whose lane died (they
+/// re-prefill on the next lane with a free slot, ahead of fresh
+/// arrivals). Pure bookkeeping — the leader drives it and owns all
+/// I/O.
+pub(crate) struct DecodeState {
+    pub lanes: HashMap<String, Lane>,
+    pub requeue: VecDeque<ActiveReq>,
+    batch: usize,
+}
+
+impl DecodeState {
+    pub fn new(batch: usize) -> DecodeState {
+        DecodeState { lanes: HashMap::new(), requeue: VecDeque::new(), batch }
+    }
+
+    /// Reconcile lanes against the router's live in-edge set: dead or
+    /// retired edges requeue their residents (re-prefill elsewhere),
+    /// fresh edges (scale-out, recovery re-mint) get empty lanes.
+    pub fn sync_lanes(&mut self, alive: &[String]) {
+        let gone: Vec<String> = self
+            .lanes
+            .keys()
+            .filter(|e| !alive.iter().any(|a| a == *e))
+            .cloned()
+            .collect();
+        for e in gone {
+            self.kill_lane(&e);
+        }
+        for e in alive {
+            if !self.lanes.contains_key(e) {
+                self.lanes.insert(e.clone(), Lane::new(e.clone(), self.batch));
+            }
+        }
+    }
+
+    /// Tear a lane down, requeueing every resident for re-prefill. The
+    /// in-flight frame (if any) is simply dropped — its requests are
+    /// the residents being requeued, so nothing is lost.
+    pub fn kill_lane(&mut self, edge: &str) {
+        if let Some(lane) = self.lanes.remove(edge) {
+            for mut a in lane.slots.into_iter().flatten() {
+                a.prefilled = false;
+                self.requeue.push_back(a);
+            }
+        }
+    }
+
+    /// Requests resident in slots or waiting to re-admit (the decode
+    /// side of the leader's outstanding-work signal).
+    pub fn in_flight(&self) -> usize {
+        self.requeue.len()
+            + self
+                .lanes
+                .values()
+                .map(|l| l.occupied() + usize::from(l.inflight.is_some()))
+                .sum::<usize>()
+    }
+}
+
+/// Pack the per-slot token windows into the `[B, S]` step payload.
+/// Empty slots are zero rows (workers compute them, the leader ignores
+/// them — slot addressing must stay positional).
+pub(crate) fn pack_step_rows(
+    slots: &[Option<ActiveReq>],
+    batch: usize,
+    seq_len: usize,
+) -> Tensor {
+    let mut tokens = vec![0i32; batch * seq_len];
+    for (i, slot) in slots.iter().enumerate().take(batch) {
+        if let Some(a) = slot {
+            let w = a.window(seq_len);
+            let row = &mut tokens[i * seq_len..(i + 1) * seq_len];
+            // A short window (prompt shorter than seq_len) left-pads
+            // with zeros so the most recent token sits at the end —
+            // where the next-token logit is read.
+            let off = seq_len.saturating_sub(w.len());
+            row[off..].copy_from_slice(&w[w.len().saturating_sub(seq_len)..]);
+        }
+    }
+    Tensor::from_i32(&[batch, seq_len], &tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(slot: u16, req_id: u64, phase: StepPhase) -> StepEntry {
+        StepEntry { slot, req_id, pos: 3, budget: 5, phase }
+    }
+
+    #[test]
+    fn step_frame_roundtrip() {
+        let payload = Tensor::from_i32(&[2, 4], &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let f = StepFrame {
+            entries: vec![
+                entry(0, 100, StepPhase::Prefill),
+                entry(1, 200, StepPhase::Decode),
+                entry(3, 300, StepPhase::Retire),
+            ],
+            payload: payload.clone(),
+        };
+        let packed = f.pack();
+        assert!(StepFrame::is_step(&packed));
+        let back = StepFrame::unpack(&packed).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(back.payload.as_i32(), payload.as_i32());
+    }
+
+    #[test]
+    fn legacy_payloads_are_not_step_frames() {
+        // The exact tensors the legacy wire carries: i32 token batches
+        // and f32 activations — and even a U8 tensor without the magic.
+        assert!(!StepFrame::is_step(&Tensor::from_i32(&[2, 4], &[0; 8])));
+        assert!(!StepFrame::is_step(&Tensor::zeros(DType::F32, &[8])));
+        let u8t = Tensor::from_bytes(DType::U8, &[9], vec![7; 9]).unwrap();
+        assert!(!StepFrame::is_step(&u8t));
+        assert!(StepFrame::unpack(&u8t).is_err());
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected_not_panicked() {
+        let f = StepFrame {
+            entries: vec![entry(0, 1, StepPhase::Decode)],
+            payload: Tensor::from_i32(&[1, 2], &[1, 2]),
+        };
+        let packed = f.pack();
+        let bytes = packed.bytes();
+        for cut in [9, 12, 20] {
+            let t = Tensor::from_bytes(DType::U8, &[cut], bytes[..cut].to_vec()).unwrap();
+            assert!(StepFrame::unpack(&t).is_err(), "cut at {cut} must error");
+        }
+        // Bad phase byte.
+        let mut corrupt = bytes.to_vec();
+        corrupt[10 + ENTRY_BYTES - 1] = 9;
+        let n = corrupt.len();
+        let t = Tensor::from_bytes(DType::U8, &[n], corrupt).unwrap();
+        assert!(StepFrame::unpack(&t).is_err());
+    }
+
+    #[test]
+    fn token_hash_is_deterministic_and_in_vocab() {
+        for vocab in [1usize, 2, 32, 50_000] {
+            for pos in 0..8u32 {
+                let a = token_hash(42, pos, vocab);
+                assert_eq!(a, token_hash(42, pos, vocab));
+                assert!((0..vocab as i32).contains(&a));
+            }
+        }
+        assert_ne!(
+            token_hash(1, 0, 50_000),
+            token_hash(2, 0, 50_000),
+            "different requests stream different tokens"
+        );
+    }
+
+    fn active(id: u64, prompt: &[i32], budget: u32) -> ActiveReq {
+        ActiveReq::new(Request::new(id, prompt.to_vec()).with_max_tokens(budget))
+    }
+
+    #[test]
+    fn window_slides_over_prompt_plus_generated() {
+        let mut a = active(1, &[10, 11, 12, 13], 8);
+        assert_eq!(a.window(4), vec![10, 11, 12, 13]);
+        a.generated.extend([20, 21]);
+        assert_eq!(a.window(4), vec![12, 13, 20, 21], "generated tokens shift in");
+        assert_eq!(a.window(8), vec![10, 11, 12, 13, 20, 21], "short window keeps all");
+        assert_eq!(a.remaining(), 6);
+    }
+
+    #[test]
+    fn pack_step_rows_is_positional_with_zero_padding() {
+        let mut slots: Vec<Option<ActiveReq>> = vec![None, None, None];
+        slots[1] = Some(active(7, &[1, 2], 4));
+        let t = pack_step_rows(&slots, 3, 4);
+        assert_eq!(t.shape(), &[3, 4]);
+        let rows = t.as_i32();
+        assert_eq!(&rows[0..4], &[0, 0, 0, 0], "empty slot row is zeros");
+        assert_eq!(&rows[4..8], &[0, 0, 1, 2], "short prompt left-pads");
+        assert_eq!(&rows[8..12], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn kill_lane_requeues_residents_for_reprefill() {
+        let mut st = DecodeState::new(2);
+        st.sync_lanes(&["in-a".into(), "in-b".into()]);
+        assert_eq!(st.lanes.len(), 2);
+        let lane = st.lanes.get_mut("in-a").unwrap();
+        let mut a = active(5, &[1, 2, 3], 6);
+        a.generated.extend([9, 8]);
+        a.prefilled = true;
+        lane.slots[1] = Some(a);
+        assert_eq!(st.in_flight(), 1);
+        // The lane's edge disappears (worker died / edge retired).
+        st.sync_lanes(&["in-b".into()]);
+        assert!(!st.lanes.contains_key("in-a"));
+        assert_eq!(st.requeue.len(), 1, "resident survived the lane");
+        let back = st.requeue.front().unwrap();
+        assert!(!back.prefilled, "re-admission forces a fresh prefill");
+        assert_eq!(back.generated, vec![9, 8], "generated tokens are leader state");
+        assert_eq!(st.in_flight(), 1);
+    }
+}

@@ -24,6 +24,29 @@
 //! [`Leader::serve`] from earlier revisions survives as a thin
 //! compatibility wrapper: submit-all, wait-all, report.
 //!
+//! ## The decode loop (continuous batching)
+//!
+//! Multi-token requests (`max_tokens > 1`) bypass the dispatcher
+//! entirely: they queue on a second [`DynamicBatcher`] drained by the
+//! **decode scheduler**, which keeps one [`Lane`](super::decode::Lane)
+//! per stage-0 in-edge holding a slot-addressed running batch. Every
+//! iteration it admits queued requests into free slots (prefill),
+//! retires finished or SLO-expired ones, and sends one
+//! [`StepFrame`](super::decode::StepFrame) per lane (at most one in
+//! flight per lane); the collector recognises returning step frames by
+//! their magic, harvests **one token per occupied slot**, pushes each
+//! down its request's token stream, and immediately schedules the next
+//! iteration — so iteration latency is round-trip-bound, with a
+//! low-frequency scheduler thread covering pacing, retries (identical
+//! frame resend — worker directive application is idempotent), SLO
+//! eviction (TTFT before the first token, inter-token gap after) and
+//! lane reconciliation. Generated tokens are leader-side state: when a
+//! lane dies mid-decode its residents requeue and **re-prefill**
+//! (prompt + generated so far) on a surviving lane — recomputation,
+//! never a lost request. With `max_tokens = 1` none of this machinery
+//! is ever touched and the one-shot path is byte-identical to the
+//! pre-streaming runtime.
+//!
 //! The leader is rank 0 of each `in-*` world (feeding stage-0 replicas)
 //! and rank 1 of each `out-*` world (hearing from last-stage replicas).
 //! Batches carry an id in their [`Envelope`]; responses are correlated
@@ -32,8 +55,13 @@
 //! `retry_timeout` — at-least-once with response dedupe.
 
 use super::batcher::DynamicBatcher;
+use super::decode::{
+    pack_step_rows, token_hash, ActiveReq, DecodeState, Inflight, StepEntry, StepFrame,
+    StepPhase,
+};
 use super::request::{
     DropReason, Outcome, OutcomeSlot, RejectReason, Request, RequestHandle, Response,
+    TokenStream,
 };
 use super::router::ReplicaRouter;
 use super::stage_worker::{Envelope, TAG_DATA};
@@ -64,6 +92,11 @@ struct RuntimeThreads {
     collector: std::thread::JoinHandle<()>,
 }
 
+/// How long the decode scheduler thread sleeps between passes. The
+/// collector drives the hot path (next frame as soon as the previous
+/// one returns); this cadence only bounds retry/eviction latency.
+const DECODE_TICK: Duration = Duration::from_micros(500);
+
 /// See module docs.
 pub struct Leader {
     mgr: WorldManager,
@@ -93,6 +126,32 @@ pub struct Leader {
     retries: AtomicU64,
     runtime: Mutex<Option<RuntimeThreads>>,
     stop: Arc<AtomicBool>,
+    /// Streaming admission queue (multi-token requests). Separate from
+    /// `batcher` so the legacy dispatcher never steals a streaming
+    /// request and the one-shot path stays byte-identical.
+    pub stream_batcher: Arc<DynamicBatcher>,
+    /// Decode-loop scheduler state: lanes keyed by in-edge plus the
+    /// re-prefill queue.
+    decode: Mutex<DecodeState>,
+    /// Token streams of in-flight streaming requests, by request id.
+    streams: Mutex<HashMap<u64, Arc<TokenStream>>>,
+    decode_on: AtomicBool,
+    decode_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Deployment-default decode budget (`MW_MAX_TOKENS`); a request's
+    /// own `max_tokens > 1` overrides it.
+    default_max_tokens: u32,
+    /// Time-to-first-token SLO (`MW_SLO_TTFT_MS`).
+    slo_ttft: Option<Duration>,
+    /// Inter-token-gap SLO (`MW_SLO_ITL_MS`).
+    slo_itl: Option<Duration>,
+    /// Gang-schedule ablation (`MW_DECODE_GANG`): step framing, but
+    /// admission only into an empty batch.
+    decode_gang: bool,
+    /// Recent TTFT window (autoscaler signal).
+    ttft_recent: SlidingWindow,
+    /// Recent decoded-token events (tokens/s signal: count / window).
+    token_events: SlidingWindow,
+    token_window: Duration,
 }
 
 /// Final numbers for a serve run.
@@ -161,11 +220,35 @@ impl Leader {
             retries: AtomicU64::new(0),
             runtime: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
+            stream_batcher: DynamicBatcher::with_capacity(
+                batch_size,
+                Duration::from_millis(cfg.batch_timeout_ms),
+                cfg.admission_depth,
+            ),
+            decode: Mutex::new(DecodeState::new(batch_size)),
+            streams: Mutex::new(HashMap::new()),
+            decode_on: AtomicBool::new(false),
+            decode_thread: Mutex::new(None),
+            default_max_tokens: cfg.max_tokens.max(1),
+            slo_ttft: (cfg.slo_ttft_ms > 0).then(|| Duration::from_millis(cfg.slo_ttft_ms)),
+            slo_itl: (cfg.slo_itl_ms > 0).then(|| Duration::from_millis(cfg.slo_itl_ms)),
+            decode_gang: cfg.decode_gang,
+            ttft_recent: SlidingWindow::new(Duration::from_millis(cfg.scale_window_ms.max(1))),
+            token_events: SlidingWindow::new(Duration::from_millis(cfg.scale_window_ms.max(1))),
+            token_window: Duration::from_millis(cfg.scale_window_ms.max(1)),
         });
-        // The admission queue resolves the handle of every request it
-        // expires (SLO deadline passed before dispatch).
+        // The admission queues resolve the handle of every request they
+        // expire (SLO / TTFT deadline passed before dispatch); resolve
+        // also finishes a streaming request's token stream.
         let weak = Arc::downgrade(&leader);
         leader.batcher.set_drop_hook(Box::new(move |r: Request| {
+            if let Some(me) = weak.upgrade() {
+                crate::metrics::global().counter("serving.dropped.deadline").inc();
+                me.resolve(r.id, Outcome::Dropped(DropReason::Deadline));
+            }
+        }));
+        let weak = Arc::downgrade(&leader);
+        leader.stream_batcher.set_drop_hook(Box::new(move |r: Request| {
             if let Some(me) = weak.upgrade() {
                 crate::metrics::global().counter("serving.dropped.deadline").inc();
                 me.resolve(r.id, Outcome::Dropped(DropReason::Deadline));
@@ -216,7 +299,7 @@ impl Leader {
         self.admit(r, true)
     }
 
-    fn admit(&self, mut r: Request, block: bool) -> RequestHandle {
+    fn admit(self: &Arc<Self>, mut r: Request, block: bool) -> RequestHandle {
         let g = crate::metrics::global();
         if r.tokens.len() != self.seq_len {
             // Malformed requests die at admission — never inside the
@@ -231,6 +314,13 @@ impl Leader {
             );
         }
         r.arrival = since_epoch();
+        // Effective decode budget: the request's own `max_tokens` wins,
+        // otherwise the deployment default. Budget 1 is the legacy
+        // one-shot path, byte-identical to the pre-streaming runtime.
+        let budget = if r.max_tokens > 1 { r.max_tokens } else { self.default_max_tokens };
+        if budget > 1 {
+            return self.admit_streaming(r, budget, block);
+        }
         r.deadline = self.slo.map(|slo| r.arrival + slo.as_secs_f64());
         let id = r.id;
         let slot = Arc::new(OutcomeSlot::default());
@@ -273,10 +363,71 @@ impl Leader {
         }
     }
 
+    /// Streaming admission: multi-token requests get a token stream and
+    /// queue on the decode scheduler's own batcher — the legacy
+    /// dispatcher never sees them.
+    fn admit_streaming(self: &Arc<Self>, mut r: Request, budget: u32, block: bool) -> RequestHandle {
+        let g = crate::metrics::global();
+        r.max_tokens = budget;
+        // Queue deadline: until the first token the TTFT SLO is the
+        // deadline; without one, fall back to the whole-request SLO.
+        let queue_slo = self.slo_ttft.or(self.slo);
+        r.deadline = queue_slo.map(|slo| r.arrival + slo.as_secs_f64());
+        let id = r.id;
+        let slot = Arc::new(OutcomeSlot::default());
+        {
+            let mut handles = self.handles.lock().unwrap();
+            match handles.entry(id) {
+                std::collections::hash_map::Entry::Occupied(_) => {
+                    drop(handles);
+                    g.counter("serving.rejected.duplicate").inc();
+                    return RequestHandle::resolved(
+                        id,
+                        Outcome::Rejected(RejectReason::DuplicateId),
+                    );
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(slot.clone());
+                }
+            }
+        }
+        let stream = Arc::new(TokenStream::default());
+        self.streams.lock().unwrap().insert(id, stream.clone());
+        let pushed = if block {
+            self.stream_batcher.push_wait(r)
+        } else {
+            self.stream_batcher.try_push(r)
+        };
+        match pushed {
+            Ok(_) => {
+                g.counter("serving.admitted").inc();
+                g.counter("serving.admitted.streaming").inc();
+                self.ensure_decode_runtime();
+                RequestHandle::new_streaming(id, slot, stream)
+            }
+            Err(_) => {
+                self.handles.lock().unwrap().remove(&id);
+                self.streams.lock().unwrap().remove(&id);
+                let outcome = if self.stop.load(Ordering::Relaxed) {
+                    Outcome::Dropped(DropReason::Shutdown)
+                } else {
+                    g.counter("serving.rejected.queue_full").inc();
+                    Outcome::Rejected(RejectReason::QueueFull)
+                };
+                RequestHandle::resolved(id, outcome)
+            }
+        }
+    }
+
     /// Resolve a request's handle (first outcome wins; later calls for
-    /// the same id are no-ops).
+    /// the same id are no-ops). A streaming request's token stream is
+    /// finished with the same outcome, after any already-pushed tokens.
     fn resolve(&self, id: u64, outcome: Outcome) {
-        if let Some(slot) = self.handles.lock().unwrap().remove(&id) {
+        let slot = self.handles.lock().unwrap().remove(&id);
+        if let Some(stream) = self.streams.lock().unwrap().remove(&id) {
+            stream.finish(outcome.clone());
+        }
+        if let Some(slot) = slot {
             slot.resolve(outcome);
         }
     }
@@ -334,16 +485,302 @@ impl Leader {
     pub fn stop_runtime(&self) {
         self.stop.store(true, Ordering::Relaxed);
         self.batcher.close();
+        self.stream_batcher.close();
         let rt = self.runtime.lock().unwrap().take();
         if let Some(rt) = rt {
             let _ = rt.dispatcher.join();
             let _ = rt.collector.join();
         }
+        if let Some(t) = self.decode_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
         let unresolved: Vec<u64> = self.handles.lock().unwrap().keys().copied().collect();
         for id in unresolved {
+            // Also finishes streaming requests' token streams.
             self.resolve(id, Outcome::Dropped(DropReason::Shutdown));
         }
         self.outstanding.lock().unwrap().clear();
+        let mut st = self.decode.lock().unwrap();
+        st.lanes.clear();
+        st.requeue.clear();
+    }
+
+    // ------------------------------------------------------------------
+    // The decode loop (continuous batching).
+    // ------------------------------------------------------------------
+
+    /// Start the decode scheduler thread (idempotent; lazily started by
+    /// the first streaming admission). The collector drives the hot
+    /// path — this thread covers pacing, retries, SLO eviction and lane
+    /// reconciliation when no frames are returning.
+    fn ensure_decode_runtime(self: &Arc<Self>) {
+        if self.decode_on.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let weak = Arc::downgrade(self);
+        let t = std::thread::Builder::new()
+            .name("leader-decode".into())
+            .spawn(move || loop {
+                let Some(me) = weak.upgrade() else { break };
+                if me.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                me.decode_tick();
+                drop(me);
+                std::thread::sleep(DECODE_TICK);
+            })
+            .expect("spawn leader decode");
+        *self.decode_thread.lock().unwrap() = Some(t);
+    }
+
+    /// One decode-scheduler pass: reconcile lanes with router liveness,
+    /// retry or fail stale frames, evict SLO violators, admit queued
+    /// requests into free slots, and send one step frame per idle lane
+    /// with work. Safe to call from multiple threads (the collector
+    /// calls it after every harvested frame): the per-lane `inflight`
+    /// marker, set under the state lock before any send, makes frame
+    /// emission single-shot.
+    fn decode_tick(&self) {
+        let now = since_epoch();
+        let alive = self.in_router.alive_replicas();
+        let g = crate::metrics::global();
+        let mut to_send: Vec<(String, Tensor)> = Vec::new();
+        let mut evicted: Vec<u64> = Vec::new();
+        let mut dead_lanes: Vec<String> = Vec::new();
+        {
+            let mut guard = self.decode.lock().unwrap();
+            let st = &mut *guard;
+            st.sync_lanes(&alive);
+            for lane in st.lanes.values_mut() {
+                // At most one frame in flight per lane.
+                if let Some(inf) = &mut lane.inflight {
+                    if inf.sent_at.elapsed() > self.retry_timeout {
+                        if inf.attempts >= self.retry_max_attempts {
+                            dead_lanes.push(lane.edge.clone());
+                        } else {
+                            inf.attempts += 1;
+                            inf.sent_at = Instant::now();
+                            self.retries.fetch_add(1, Ordering::Relaxed);
+                            self.timeline.record_labeled(
+                                "retry",
+                                1.0,
+                                &format!("step {}", inf.iter),
+                            );
+                            to_send.push((lane.edge.clone(), inf.env.clone()));
+                        }
+                    }
+                    continue;
+                }
+                // SLO eviction: TTFT until the first token, inter-token
+                // gap afterwards.
+                for (s, slot) in lane.slots.iter_mut().enumerate() {
+                    let Some(a) = slot else { continue };
+                    let over = match a.first_token_at {
+                        None => self
+                            .slo_ttft
+                            .is_some_and(|d| now > a.req.arrival + d.as_secs_f64()),
+                        Some(_) => self
+                            .slo_itl
+                            .is_some_and(|d| now > a.last_token_at + d.as_secs_f64()),
+                    };
+                    if over {
+                        lane.retiring.push((s as u16, a.req.id));
+                        evicted.push(a.req.id);
+                        *slot = None;
+                    }
+                }
+                // Admission into free slots — continuous by default;
+                // gang mode (the ablation baseline) only refills an
+                // empty batch. Requeued (re-prefill) requests go ahead
+                // of fresh arrivals.
+                let free: Vec<usize> = lane
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, s)| s.is_none().then_some(i))
+                    .collect();
+                let admit_n = if self.decode_gang && free.len() < lane.slots.len() {
+                    0
+                } else {
+                    free.len()
+                };
+                let mut incoming: Vec<ActiveReq> = Vec::new();
+                while incoming.len() < admit_n {
+                    let Some(a) = st.requeue.pop_front() else { break };
+                    incoming.push(a);
+                }
+                if incoming.len() < admit_n {
+                    incoming.extend(
+                        self.stream_batcher
+                            .take_ready(admit_n - incoming.len())
+                            .into_iter()
+                            .map(ActiveReq::new),
+                    );
+                }
+                for (slot_idx, a) in free.into_iter().zip(incoming) {
+                    lane.slots[slot_idx] = Some(a);
+                }
+                // Cut the frame: staged retirements plus one directive
+                // per occupant.
+                let mut entries: Vec<StepEntry> = lane
+                    .retiring
+                    .drain(..)
+                    .map(|(slot, req_id)| StepEntry {
+                        slot,
+                        req_id,
+                        pos: 0,
+                        budget: 0,
+                        phase: StepPhase::Retire,
+                    })
+                    .collect();
+                for (s, slot) in lane.slots.iter().enumerate() {
+                    if let Some(a) = slot {
+                        entries.push(StepEntry {
+                            slot: s as u16,
+                            req_id: a.req.id,
+                            pos: a.generated.len() as u32,
+                            budget: a.remaining(),
+                            phase: if a.prefilled {
+                                StepPhase::Decode
+                            } else {
+                                StepPhase::Prefill
+                            },
+                        });
+                    }
+                }
+                if entries.is_empty() {
+                    continue; // idle lane
+                }
+                let payload = pack_step_rows(&lane.slots, self.batch_size, self.seq_len);
+                let iter = self.next_batch_id.fetch_add(1, Ordering::Relaxed);
+                let env = Envelope { id: iter, tensor: StepFrame { entries, payload }.pack() }
+                    .pack();
+                lane.inflight = Some(Inflight {
+                    iter,
+                    sent_at: Instant::now(),
+                    attempts: 1,
+                    env: env.clone(),
+                });
+                to_send.push((lane.edge.clone(), env));
+            }
+            for edge in &dead_lanes {
+                g.counter("serving.decode.lane_failed").inc();
+                self.in_router.mark_dead(edge);
+                st.kill_lane(edge);
+            }
+        }
+        if !evicted.is_empty() {
+            g.counter("serving.dropped.deadline").add(evicted.len() as u64);
+            for id in evicted {
+                self.resolve(id, Outcome::Dropped(DropReason::Deadline));
+            }
+        }
+        for (edge, env) in to_send {
+            if self.comm.send_blocking(&edge, env, 1, TAG_DATA).is_err() {
+                // Dead edge: the next pass kills the lane and requeues
+                // its residents for re-prefill.
+                self.in_router.mark_dead(&edge);
+            }
+        }
+    }
+
+    /// Harvest one returned step frame: one token per occupied slot,
+    /// pushed down the request's stream; exhausted requests finish with
+    /// a [`Response`] and their slots are staged for retirement on the
+    /// next frame.
+    fn harvest_step(&self, env: Envelope) {
+        let g = crate::metrics::global();
+        let Ok(frame) = StepFrame::unpack(&env.tensor) else {
+            g.counter("serving.step.corrupt").inc();
+            return;
+        };
+        // Forward-only pipelines echo the (i32) step payload instead of
+        // producing logits; stream deterministic hash tokens so the
+        // decode lifecycle is still fully observable.
+        let decodable = frame.payload.dtype() == DType::F32
+            && frame.payload.elems() >= self.batch_size * self.seq_len * self.vocab;
+        let now = since_epoch();
+        let mut tokens_out: Vec<(u64, i32)> = Vec::new();
+        let mut finished: Vec<Response> = Vec::new();
+        {
+            let mut guard = self.decode.lock().unwrap();
+            let st = &mut *guard;
+            let Some(lane) = st
+                .lanes
+                .values_mut()
+                .find(|l| l.inflight.as_ref().is_some_and(|i| i.iter == env.id))
+            else {
+                return; // stale frame: lane died, or a retry's duplicate
+            };
+            lane.inflight = None;
+            for e in &frame.entries {
+                if e.phase == StepPhase::Retire {
+                    continue;
+                }
+                let Some(slot) = lane.slots.get_mut(e.slot as usize) else { continue };
+                let Some(a) = slot.as_mut() else { continue };
+                if a.req.id != e.req_id {
+                    continue; // slot reassigned after this frame was cut
+                }
+                let tok = if decodable {
+                    argmax_last(&frame.payload, e.slot as usize, self.seq_len, self.vocab)
+                } else {
+                    token_hash(e.req_id, a.generated.len() as u32, self.vocab)
+                };
+                a.generated.push(tok);
+                a.prefilled = true;
+                match a.first_token_at {
+                    None => {
+                        a.first_token_at = Some(now);
+                        let ttft = Duration::from_secs_f64((now - a.req.arrival).max(0.0));
+                        self.ttft_recent.observe(ttft);
+                        g.window("serving.ttft_ms").observe(ttft);
+                    }
+                    Some(_) => {
+                        let itl = Duration::from_secs_f64((now - a.last_token_at).max(0.0));
+                        g.window("serving.itl_ms").observe(itl);
+                    }
+                }
+                a.last_token_at = now;
+                self.token_events.observe(Duration::ZERO);
+                tokens_out.push((e.req_id, tok));
+                if a.generated.len() as u32 >= a.budget {
+                    let latency = (now - a.req.arrival).max(0.0);
+                    finished.push(Response { id: e.req_id, latency, next_token: tok });
+                    lane.retiring.push((e.slot, e.req_id));
+                    *slot = None;
+                }
+            }
+        }
+        g.counter("serving.tokens").add(tokens_out.len() as u64);
+        {
+            let streams = self.streams.lock().unwrap();
+            for (id, tok) in &tokens_out {
+                if let Some(stream) = streams.get(id) {
+                    stream.push_token(*tok);
+                }
+            }
+        }
+        if !finished.is_empty() {
+            {
+                let mut responses = self.responses.lock().unwrap();
+                for resp in &finished {
+                    let dur = Duration::from_secs_f64(resp.latency.max(0.0));
+                    self.latency.observe(dur);
+                    self.recent.observe(dur);
+                    responses.push_back(resp.clone());
+                }
+                while responses.len() > RESPONSES_KEEP {
+                    responses.pop_front();
+                }
+            }
+            g.counter("serving.completed").add(finished.len() as u64);
+            self.timeline.record("completed", finished.len() as f64);
+            for resp in finished {
+                let id = resp.id;
+                self.resolve(id, Outcome::Response(resp));
+            }
+        }
     }
 
     /// Pack up to `batch_size` requests into the model input tensor,
@@ -472,7 +909,15 @@ impl Leader {
                 match work.wait() {
                     Ok(Some(packed)) => {
                         if let Ok(env) = Envelope::unpack(&packed) {
-                            self.harvest_response(env);
+                            if StepFrame::is_step(&env.tensor) {
+                                self.harvest_step(env);
+                                // Keep the lane hot: schedule the next
+                                // iteration now, not at the scheduler
+                                // thread's next pass.
+                                self.decode_tick();
+                            } else {
+                                self.harvest_response(env);
+                            }
                         }
                     }
                     Ok(None) => {}
@@ -660,6 +1105,7 @@ impl Leader {
     /// no-op path.
     fn abandon(&self, ids: &[u64]) {
         let _ = self.batcher.purge(ids);
+        let _ = self.stream_batcher.purge(ids);
         self.outstanding
             .lock()
             .unwrap()
@@ -685,13 +1131,16 @@ impl Leader {
         if alive == 0 {
             f64::INFINITY
         } else {
-            self.batcher.depth() as f64 / alive as f64
+            self.queue_depth() as f64 / alive as f64
         }
     }
 
-    /// Admission queue depth right now.
+    /// Admission queue depth right now: both queues, plus streaming
+    /// requests waiting to re-admit after their lane died.
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
+            + self.stream_batcher.depth()
+            + self.decode.lock().unwrap().requeue.len()
     }
 
     /// Alive stage-0 replicas (router liveness).
@@ -699,14 +1148,34 @@ impl Leader {
         self.in_router.counts().0
     }
 
-    /// Dispatched batches not yet answered.
+    /// Dispatched batches not yet answered, plus decode-lane residents
+    /// and step frames in flight (so scale-in drain waits for them).
     pub fn outstanding_batches(&self) -> usize {
-        self.outstanding.lock().unwrap().len()
+        let decode_busy = {
+            let st = self.decode.lock().unwrap();
+            st.lanes
+                .values()
+                .map(|l| l.occupied() + usize::from(l.inflight.is_some()))
+                .sum::<usize>()
+        };
+        self.outstanding.lock().unwrap().len() + decode_busy
     }
 
     /// p99 latency (ms) over the recent sliding window (0 when idle).
     pub fn recent_p99_ms(&self) -> f64 {
         self.recent.quantile_us(0.99) as f64 / 1e3
+    }
+
+    /// p99 time-to-first-token (ms) over the recent window (0 when
+    /// idle) — the decode loop's admission-side SLO signal.
+    pub fn recent_ttft_p99_ms(&self) -> f64 {
+        self.ttft_recent.quantile_us(0.99) as f64 / 1e3
+    }
+
+    /// Decoded tokens per second over the recent window — the decode
+    /// loop's throughput signal.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.token_events.count() as f64 / self.token_window.as_secs_f64().max(1e-9)
     }
 
     /// Per-in-edge dispatch totals (router introspection).
@@ -747,13 +1216,21 @@ impl Drop for Leader {
         // the last Arc is dropped by one of them.
         self.stop.store(true, Ordering::Relaxed);
         self.batcher.close();
+        self.stream_batcher.close();
         let _ = self.runtime.lock().unwrap().take();
-        // Clients may outlive the leader (handles own only the slot):
-        // resolve everything still pending so no wait() hangs forever.
+        let _ = self.decode_thread.lock().unwrap().take();
+        // Clients may outlive the leader (handles own only the slot /
+        // stream): resolve everything still pending so no wait() or
+        // next_event() loop hangs forever.
         let unresolved: Vec<Arc<OutcomeSlot>> =
             self.handles.lock().unwrap().drain().map(|(_, s)| s).collect();
         for slot in unresolved {
             slot.resolve(Outcome::Dropped(DropReason::Shutdown));
+        }
+        let leftover: Vec<Arc<TokenStream>> =
+            self.streams.lock().unwrap().drain().map(|(_, s)| s).collect();
+        for stream in leftover {
+            stream.finish(Outcome::Dropped(DropReason::Shutdown));
         }
     }
 }

@@ -15,15 +15,41 @@
 //! (sequence-length validation, bounded queue depth with load-shedding,
 //! per-request SLO deadline stamping) and returns a [`RequestHandle`]
 //! that resolves to exactly one outcome: a [`Response`], an SLO-deadline
-//! drop, or an admission rejection. Two persistent leader threads do
-//! the rest: a *dispatcher* batches admitted requests (expired ones are
-//! dropped at the queue head, before any forward pass) and routes each
-//! batch to a live replica; a *collector* harvests responses, resolves
-//! handles, and re-dispatches batches lost to dead workers
-//! (at-least-once with response dedupe). The run-to-completion
+//! drop, or an admission rejection. One-shot requests
+//! (`max_tokens = 1`, the default) take the legacy run-to-completion
+//! path: a *dispatcher* thread batches admitted requests (expired ones
+//! are dropped at the queue head, before any forward pass) and routes
+//! each batch to a live replica; a *collector* thread harvests
+//! responses, resolves handles, and re-dispatches batches lost to dead
+//! workers (at-least-once with response dedupe). The run-to-completion
 //! [`Leader::serve`] survives as a compatibility wrapper over the same
 //! machinery: submit-all (with backpressure instead of shedding),
 //! wait-all, report.
+//!
+//! **Continuous batching.** Multi-token requests (`max_tokens > 1`,
+//! or `MW_MAX_TOKENS` as the deployment default) route through the
+//! streaming decode loop instead: a persistent per-deployment scheduler
+//! keeps one *lane* per stage-0 replica edge with a slot-addressed
+//! **running batch**, and re-schedules it **every decode iteration** —
+//! queued requests admit into free slots (prefill) and finished or
+//! SLO-expired ones retire, mid-flight, without waiting for the rest of
+//! the batch. Each iteration travels as a [`decode::StepFrame`] inside
+//! the ordinary [`stage_worker::Envelope`]: per-slot directives
+//! (prefill/decode/retire, applied idempotently to the workers'
+//! [`crate::runtime::decode::DecodeSlots`]) plus the slot-packed token
+//! payload. The collector harvests one token per occupied slot per
+//! frame and pushes it down the request's [`RequestHandle`] token
+//! stream ([`StreamEvent::Token`], terminated by [`StreamEvent::Done`])
+//! — so the handle is a *token stream*, and the SLO splits into
+//! time-to-first-token (`MW_SLO_TTFT_MS`) and inter-token gap
+//! (`MW_SLO_ITL_MS`) instead of a single whole-request deadline. The
+//! leader is the source of truth for decode state: generated tokens
+//! live leader-side, worker slot state is soft, and a request whose
+//! lane dies mid-decode **re-prefills** (prompt + everything generated
+//! so far) on the next live lane — a killed worker costs recomputation,
+//! never a lost request. `MW_DECODE_GANG=1` keeps iteration framing but
+//! admits only into an empty batch (gang scheduling), the ablation
+//! baseline the continuous-batching benchmark leg is measured against.
 //!
 //! **Serving parallelism.** Two axes compose:
 //!
@@ -97,6 +123,8 @@
 //! * [`batcher`] — the deadline-aware admission queue + dynamic batcher
 //!   (bounded depth, load-shedding, SLO expiry before dispatch,
 //!   max-batch/timeout fill).
+//! * [`decode`] — the step-frame wire protocol and the iteration-level
+//!   scheduler state behind the continuous-batching decode loop.
 //! * [`router`] — replica selection with least-inflight routing,
 //!   backpressure and replica death handling.
 //! * [`topology`] — names and members of every world in a pipeline
@@ -119,6 +147,7 @@
 pub mod autoscaler;
 pub mod batcher;
 pub mod controller;
+pub mod decode;
 pub mod leader;
 pub mod request;
 pub mod router;
@@ -129,9 +158,11 @@ pub mod topology;
 pub use autoscaler::{AutoscalePolicy, Autoscaler, AutoscalerHandle, LoadSignals};
 pub use batcher::DynamicBatcher;
 pub use controller::{Controller, ScalingPolicy};
+pub use decode::{StepEntry, StepFrame, StepPhase};
 pub use leader::{Leader, LeaderReport};
 pub use request::{
     DropReason, Outcome, RejectReason, Request, RequestGen, RequestHandle, Response,
+    StreamEvent,
 };
 pub use router::ReplicaRouter;
 pub use spares::{host_cache, WeightCache};

@@ -9,6 +9,13 @@
 //! full under load-shedding, malformed sequence length, duplicate
 //! in-flight id). Callers hold a [`RequestHandle`] and block on
 //! [`RequestHandle::wait`] (or poll [`RequestHandle::try_outcome`]).
+//!
+//! Multi-token requests (`max_tokens > 1`) additionally *stream*: the
+//! handle yields each decoded token as the iteration that produced it
+//! is harvested ([`RequestHandle::next_event`] →
+//! [`StreamEvent::Token`]), and the final [`Outcome`] arrives as
+//! [`StreamEvent::Done`]. One-shot requests keep the exact legacy
+//! surface — no stream is ever attached.
 
 use crate::util::prng::Rng;
 use crate::util::time::since_epoch;
@@ -28,11 +35,21 @@ pub struct Request {
     /// their deadline are dropped in the admission queue *before*
     /// dispatch — never after a wasted forward pass.
     pub deadline: Option<f64>,
+    /// Decode budget: tokens to generate. `1` (the default) is the
+    /// legacy one-shot request — a single forward pass, no decode loop.
+    /// `> 1` routes the request through the streaming decode scheduler.
+    pub max_tokens: u32,
 }
 
 impl Request {
     pub fn new(id: u64, tokens: Vec<i32>) -> Self {
-        Request { id, tokens, arrival: since_epoch(), deadline: None }
+        Request { id, tokens, arrival: since_epoch(), deadline: None, max_tokens: 1 }
+    }
+
+    /// Builder: set the decode budget (clamped to ≥ 1).
+    pub fn with_max_tokens(mut self, n: u32) -> Self {
+        self.max_tokens = n.max(1);
+        self
     }
 
     /// Past its SLO deadline at time `now` (seconds since epoch)?
@@ -121,22 +138,120 @@ impl OutcomeSlot {
     }
 }
 
+/// One event on a streaming request's token stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamEvent {
+    /// A decoded token, in generation order.
+    Token(i32),
+    /// The stream is finished; this is the request's final [`Outcome`]
+    /// (the same one [`RequestHandle::wait`] returns).
+    Done(Outcome),
+}
+
+/// Token pipe between the collector (producer) and the client's handle
+/// (consumer). Tokens queue until consumed; the terminal outcome is
+/// delivered after the last token.
+#[derive(Default)]
+pub(crate) struct TokenStream {
+    state: Mutex<StreamInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct StreamInner {
+    tokens: std::collections::VecDeque<i32>,
+    done: Option<Outcome>,
+}
+
+impl TokenStream {
+    /// Producer side: append one decoded token.
+    pub(crate) fn push_token(&self, tok: i32) {
+        let mut st = self.state.lock().unwrap();
+        if st.done.is_some() {
+            return;
+        }
+        st.tokens.push_back(tok);
+        self.cv.notify_all();
+    }
+
+    /// Producer side: terminate the stream. First call wins, mirroring
+    /// [`OutcomeSlot::resolve`].
+    pub(crate) fn finish(&self, outcome: Outcome) {
+        let mut st = self.state.lock().unwrap();
+        if st.done.is_none() {
+            st.done = Some(outcome);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Consumer side: next event, or `None` if `deadline` passes first.
+    /// Buffered tokens drain before the terminal `Done`.
+    fn next_event(&self, deadline: Instant) -> Option<StreamEvent> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(tok) = st.tokens.pop_front() {
+                return Some(StreamEvent::Token(tok));
+            }
+            if let Some(o) = st.done.as_ref() {
+                return Some(StreamEvent::Done(o.clone()));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+            if timeout.timed_out() && st.tokens.is_empty() && st.done.is_none() {
+                return None;
+            }
+        }
+    }
+}
+
 /// The client's side of a submitted request. See module docs.
 pub struct RequestHandle {
     id: u64,
     slot: Arc<OutcomeSlot>,
+    /// Attached only for streaming (multi-token) requests.
+    stream: Option<Arc<TokenStream>>,
 }
 
 impl RequestHandle {
     pub(crate) fn new(id: u64, slot: Arc<OutcomeSlot>) -> Self {
-        RequestHandle { id, slot }
+        RequestHandle { id, slot, stream: None }
+    }
+
+    /// Handle for a streaming request: tokens arrive on `stream` as the
+    /// decode loop produces them; the final outcome still lands in
+    /// `slot` so `wait`/`try_outcome` keep working unchanged.
+    pub(crate) fn new_streaming(
+        id: u64,
+        slot: Arc<OutcomeSlot>,
+        stream: Arc<TokenStream>,
+    ) -> Self {
+        RequestHandle { id, slot, stream: Some(stream) }
     }
 
     /// Handle whose outcome is already known (admission rejection).
     pub(crate) fn resolved(id: u64, outcome: Outcome) -> Self {
         let slot = Arc::new(OutcomeSlot::default());
         slot.resolve(outcome);
-        RequestHandle { id, slot }
+        RequestHandle { id, slot, stream: None }
+    }
+
+    /// Next streaming event, or `None` if `deadline` passes first. On a
+    /// non-streaming handle this degenerates to `wait_deadline` mapped
+    /// into a single [`StreamEvent::Done`].
+    pub fn next_event(&self, deadline: Instant) -> Option<StreamEvent> {
+        match &self.stream {
+            Some(s) => s.next_event(deadline),
+            None => self.wait_deadline(deadline).map(StreamEvent::Done),
+        }
+    }
+
+    /// Whether this handle carries a token stream.
+    pub fn is_streaming(&self) -> bool {
+        self.stream.is_some()
     }
 
     pub fn id(&self) -> u64 {
@@ -324,5 +439,78 @@ mod tests {
     fn pre_resolved_handle() {
         let h = RequestHandle::resolved(9, Outcome::Rejected(RejectReason::QueueFull));
         assert_eq!(h.try_outcome(), Some(Outcome::Rejected(RejectReason::QueueFull)));
+        assert!(!h.is_streaming());
+        // Non-streaming next_event degenerates to Done(outcome).
+        assert_eq!(
+            h.next_event(Instant::now() + Duration::from_millis(10)),
+            Some(StreamEvent::Done(Outcome::Rejected(RejectReason::QueueFull)))
+        );
+    }
+
+    #[test]
+    fn max_tokens_builder_clamps() {
+        let r = Request::new(1, vec![0; 4]);
+        assert_eq!(r.max_tokens, 1, "default is the one-shot path");
+        assert_eq!(r.clone().with_max_tokens(8).max_tokens, 8);
+        assert_eq!(r.with_max_tokens(0).max_tokens, 1, "budget clamps to ≥ 1");
+    }
+
+    #[test]
+    fn stream_drains_tokens_before_done() {
+        let stream = Arc::new(TokenStream::default());
+        let slot = Arc::new(OutcomeSlot::default());
+        let h = RequestHandle::new_streaming(5, slot.clone(), stream.clone());
+        assert!(h.is_streaming());
+        stream.push_token(11);
+        stream.push_token(22);
+        let resp = Response { id: 5, latency: 0.1, next_token: 22 };
+        stream.finish(Outcome::Response(resp.clone()));
+        slot.resolve(Outcome::Response(resp.clone()));
+        let dl = || Instant::now() + Duration::from_millis(50);
+        assert_eq!(h.next_event(dl()), Some(StreamEvent::Token(11)));
+        assert_eq!(h.next_event(dl()), Some(StreamEvent::Token(22)));
+        assert_eq!(h.next_event(dl()), Some(StreamEvent::Done(Outcome::Response(resp.clone()))));
+        // Done is sticky: further polls keep returning it.
+        assert_eq!(h.next_event(dl()), Some(StreamEvent::Done(Outcome::Response(resp))));
+        // The legacy surface still works on a streaming handle.
+        assert!(h.wait().is_response());
+    }
+
+    #[test]
+    fn stream_times_out_then_delivers_across_threads() {
+        let stream = Arc::new(TokenStream::default());
+        let slot = Arc::new(OutcomeSlot::default());
+        let h = RequestHandle::new_streaming(6, slot, stream.clone());
+        assert!(
+            h.next_event(Instant::now() + Duration::from_millis(20)).is_none(),
+            "empty stream times out"
+        );
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            stream.push_token(7);
+            stream.finish(Outcome::Dropped(DropReason::Shutdown));
+        });
+        assert_eq!(
+            h.next_event(Instant::now() + Duration::from_secs(5)),
+            Some(StreamEvent::Token(7))
+        );
+        t.join().unwrap();
+        assert_eq!(
+            h.next_event(Instant::now() + Duration::from_secs(5)),
+            Some(StreamEvent::Done(Outcome::Dropped(DropReason::Shutdown)))
+        );
+    }
+
+    #[test]
+    fn finished_stream_ignores_late_tokens() {
+        let stream = TokenStream::default();
+        stream.finish(Outcome::Dropped(DropReason::Deadline));
+        stream.push_token(3);
+        stream.finish(Outcome::Dropped(DropReason::Failed));
+        assert_eq!(
+            stream.next_event(Instant::now()),
+            Some(StreamEvent::Done(Outcome::Dropped(DropReason::Deadline))),
+            "first finish wins; post-finish tokens are discarded"
+        );
     }
 }

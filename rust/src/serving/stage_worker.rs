@@ -16,6 +16,16 @@
 //!      → send envelope downstream
 //! ```
 //!
+//! Continuous-batching step frames (see [`super::decode`]) ride the
+//! same loop: when the envelope payload carries the step-frame magic,
+//! the head first applies the frame's slot directives to its
+//! [`crate::runtime::decode::DecodeSlots`] (idempotently — retries
+//! resend identical frames), runs **one decode iteration** on the
+//! slot-packed payload — through the very same TP round when sharded,
+//! so the collective selector runs once per decode step — and forwards
+//! the frame with the payload substituted. A corrupt frame increments
+//! `serving.worker.step_corrupt` and is skipped, never fatal.
+//!
 //! Non-head shards sit on no edge worlds at all: they loop on the TP
 //! world only — `broadcast` (receive the activation from the head),
 //! compute their weight slice, `all_reduce` — so the first multi-member
@@ -345,6 +355,13 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
     }
     // Non-head shards: the pending broadcast of the next TP round.
     let mut tp_pending: Option<Work> = None;
+    // Slot-addressed running-batch state for step frames (continuous
+    // batching). Heads only — followers see step payloads through the
+    // ordinary TP broadcast and need no slot view.
+    let mut decode_slots = crate::runtime::decode::DecodeSlots::default();
+    let step_metrics = crate::metrics::global();
+    let step_frames = step_metrics.counter("serving.worker.step_frames");
+    let step_corrupt = step_metrics.counter("serving.worker.step_corrupt");
 
     let debug = std::env::var("MW_DEBUG").is_ok();
     let mut last_dbg = std::time::Instant::now();
@@ -547,7 +564,86 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
                     pending.insert(edge.clone(), w);
                 }
                 let env = Envelope::unpack(&packed)?;
-                let result = if let Some(tps) = tp.clone() {
+                let result = if super::decode::StepFrame::is_step(&env.tensor) {
+                    // ---- continuous-batching step frame ----
+                    // Apply the leader's slot directives (idempotently —
+                    // a retry resends the identical frame), run one
+                    // decode iteration on the slot-packed payload, and
+                    // forward the frame with the payload substituted.
+                    let mut frame = match super::decode::StepFrame::unpack(&env.tensor) {
+                        Ok(f) => f,
+                        Err(_) => {
+                            // A corrupt frame must never kill the worker:
+                            // count it and let the leader's retry resend.
+                            step_corrupt.inc();
+                            continue;
+                        }
+                    };
+                    step_frames.inc();
+                    for e in &frame.entries {
+                        match e.phase {
+                            super::decode::StepPhase::Prefill => {
+                                decode_slots.alloc(e.slot as usize, e.req_id, e.pos, e.budget);
+                            }
+                            super::decode::StepPhase::Decode => {
+                                decode_slots.adopt(e.slot as usize, e.req_id, e.pos, e.budget);
+                            }
+                            super::decode::StepPhase::Retire => {
+                                decode_slots.free(e.slot as usize);
+                            }
+                        }
+                    }
+                    let stepped = if let Some(tps) = tp.clone() {
+                        // The TP round runs once per decode step, so the
+                        // collective selector is exercised per iteration
+                        // exactly as it is per one-shot batch.
+                        match tp_head_round(
+                            &comm,
+                            cfg.stage.as_ref(),
+                            &tps,
+                            &frame.payload,
+                            &cfg.stop,
+                        ) {
+                            Ok(Some(t)) => {
+                                stats.tp_batches += 1;
+                                decode_slots.advance();
+                                t
+                            }
+                            Ok(None) => continue, // stopping mid-round
+                            Err(e) => {
+                                if debug {
+                                    eprintln!(
+                                        "[worker {}] tp step round failed: {e}",
+                                        cfg.node
+                                    );
+                                }
+                                mgr.break_world(&tps.world, &e.to_string());
+                                tp = None;
+                                stats.tp_failures += 1;
+                                continue;
+                            }
+                        }
+                    } else if sharded {
+                        // TP world down: drop the frame; the leader
+                        // resends after its retry timeout (directives are
+                        // idempotent) or re-prefills elsewhere.
+                        continue;
+                    } else {
+                        match &cfg.stage {
+                            Some(stage) => {
+                                stage.decode_step(&mut decode_slots, &frame.payload)?
+                            }
+                            None => {
+                                // Forward-only: echo the payload, but the
+                                // slot lifecycle still advances.
+                                decode_slots.advance();
+                                frame.payload.clone()
+                            }
+                        }
+                    };
+                    frame.payload = stepped;
+                    frame.pack()
+                } else if let Some(tps) = tp.clone() {
                     // TP inner loop: fan the activation out across the
                     // replica's shards, combine partial outputs.
                     match tp_head_round(&comm, cfg.stage.as_ref(), &tps, &env.tensor, &cfg.stop) {

@@ -175,6 +175,89 @@ fn hier_all_reduce_avg_scales_exactly_once() {
 }
 
 #[test]
+fn forced_hier_gather_scatter_degrade_is_counted_once() {
+    // gather/scatter have no hierarchical variant (`CollOp::has_hier`:
+    // per-rank-distinct payloads), so a forced-Hier multi-host world
+    // silently runs them on the ring. That degrade must be observable:
+    // the first such op per world bumps `coll.hier_degraded` (and logs
+    // a `coll.hier_degraded` event) — once per world, however many
+    // degraded ops follow.
+    //
+    // The counter is process-global and other tests in this binary also
+    // create forced-hier worlds (each fires at most once thanks to the
+    // latch), so the assertions are inequalities: the first degrading
+    // op adds at least this world's bump, and a burst of N follow-ups
+    // adds far fewer than N (N·ranks if the latch ever regressed).
+    let degraded = || multiworld::metrics::global().counter("coll.hier_degraded").get();
+    let worlds =
+        Rendezvous::single_process(&uniq("hdeg"), 4, opts("shm", CollAlgo::Hier, "2x2"))
+            .unwrap();
+    let c0 = degraded();
+    let worlds: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            std::thread::spawn(move || {
+                let g = w.gather(int_tensor(64, w.rank()), 0).unwrap();
+                assert_eq!(g.is_some(), w.rank() == 0);
+                assert_eq!(
+                    w.last_algo(CollOp::Gather),
+                    Some("ring"),
+                    "forced hier degrades gather to the ring, never silently to flat"
+                );
+                w
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect();
+    let c1 = degraded();
+    assert!(c1 > c0, "the first degraded op must bump coll.hier_degraded");
+
+    const BURST: u64 = 10;
+    let worlds: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            std::thread::spawn(move || {
+                for _ in 0..BURST {
+                    let parts = (w.rank() == 0).then(|| {
+                        (0..w.size()).map(|i| int_tensor(32, i)).collect::<Vec<_>>()
+                    });
+                    w.scatter(parts, 0).unwrap();
+                }
+                assert_eq!(w.last_algo(CollOp::Scatter), Some("ring"));
+                w
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect();
+    let c2 = degraded();
+    assert!(
+        c2 - c1 < BURST,
+        "per-world latch must keep the counter one-shot ({} bumps over {BURST} ops)",
+        c2 - c1
+    );
+
+    // Positive control: ops *with* a hierarchical variant still run
+    // hier on this very world — the degrade is per-op capability, not a
+    // whole-policy downgrade.
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|w| {
+            std::thread::spawn(move || {
+                w.all_reduce(int_tensor(1024, w.rank()), ReduceOp::Sum).unwrap();
+                assert_eq!(w.last_algo(CollOp::AllReduce), Some("hier"));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
 fn auto_picks_hier_only_when_hosts_exceed_one() {
     // The same 1 MiB all_reduce that rings on a single host must go
     // hierarchical once the world spans hosts — and sub-threshold

@@ -109,6 +109,7 @@ fn burst_scales_out_and_idle_scales_in_with_zero_loss() {
         cooldown: Duration::from_millis(300),
         high_depth: 8.0,
         slo_p99_ms: 0.0,
+        slo_ttft_ms: 0.0,
         high_samples: 1,
         low_samples: 6,
         min_replicas: 1,
@@ -219,6 +220,7 @@ fn replica_kill_recovery_and_scale_out_compose_under_live_traffic() {
         cooldown: Duration::from_millis(300),
         high_depth: 8.0,
         slo_p99_ms: 0.0,
+        slo_ttft_ms: 0.0,
         high_samples: 1,
         low_samples: 100_000, // never scale in during this test
         min_replicas: 1,

@@ -470,6 +470,7 @@ fn slow_link_during_scale_out_fresh_replica_verified_serving() {
         cooldown: Duration::from_millis(300),
         high_depth: 8.0,
         slo_p99_ms: 0.0,
+        slo_ttft_ms: 0.0,
         high_samples: 1,
         low_samples: 6,
         min_replicas: 1,

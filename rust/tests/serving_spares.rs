@@ -198,6 +198,7 @@ fn promotion_during_inflight_scale_out_never_double_spawns() {
         cooldown: Duration::from_millis(300),
         high_depth: 8.0,
         slo_p99_ms: 0.0,
+        slo_ttft_ms: 0.0,
         high_samples: 1,
         low_samples: 100_000,
         min_replicas: 1,
