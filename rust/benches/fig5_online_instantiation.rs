@@ -230,4 +230,70 @@ fn main() {
         assert_eq!(s.conns, 2, "O(1) sockets per host pair while minting worlds");
     }
     println!("sockets stayed O(1) per host pair across {} minted worlds ✓", minted.len());
+
+    // === Control plane at scale ===
+    // The figure above touches ~8 worlds total; this phase mints ~100×
+    // that through the sharded store + batched rendezvous (one SET to
+    // publish, one WAIT_MANY to collect all peer addresses, push-based
+    // server waits) and reports minting throughput as the
+    // BENCH_control_plane.json trajectory artifact.
+    let quick = std::env::var("MW_BENCH_QUICK").as_deref() == Ok("1");
+    const CP_THREADS: usize = 8;
+    const CP_PER_THREAD: usize = 100; // 8 × 100 = 800 worlds ≈ 100× the figure's own count
+    let ops = multiworld::metrics::global().counter("store.client.ops");
+    let conns = multiworld::metrics::global().counter("store.client.conns_opened");
+    let (ops0, conns0) = (ops.get(), conns.get());
+    println!(
+        "\n=== control plane: minting {} worlds across {CP_THREADS} threads ===",
+        CP_THREADS * CP_PER_THREAD
+    );
+    let t_cp = Instant::now();
+    let lanes: Vec<_> = (0..CP_THREADS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                for i in 0..CP_PER_THREAD {
+                    let name = uniq(&format!("fig5-cp-{t}-{i}"));
+                    // Minted and immediately retired: the phase measures
+                    // control-plane throughput, not steady-state worlds.
+                    drop(
+                        Rendezvous::single_process(&name, 2, WorldOptions::tcp())
+                            .expect("mint world"),
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in lanes {
+        h.join().expect("mint thread");
+    }
+    let cp_secs = t_cp.elapsed().as_secs_f64();
+    let cp_worlds = (CP_THREADS * CP_PER_THREAD) as f64;
+    let worlds_per_s = cp_worlds / cp_secs;
+    let ops_per_world = (ops.get() - ops0) as f64 / cp_worlds;
+    println!(
+        "minted {cp_worlds:.0} worlds in {cp_secs:.2} s → {worlds_per_s:.0} worlds/s \
+         ({ops_per_world:.1} store ops/world, {} conns opened)",
+        conns.get() - conns0
+    );
+    use multiworld::util::json::Json;
+    multiworld::bench::write_json(
+        "BENCH_control_plane",
+        &Json::obj(vec![
+            ("meta", multiworld::bench::bench_meta()),
+            ("quick", Json::num(if quick { 1.0 } else { 0.0 })),
+            (
+                "control_plane",
+                Json::obj(vec![
+                    ("worlds", Json::num(cp_worlds)),
+                    ("threads", Json::num(CP_THREADS as f64)),
+                    ("world_size", Json::num(2.0)),
+                    ("secs", Json::num(cp_secs)),
+                    ("worlds_per_s", Json::num(worlds_per_s)),
+                    ("store_ops", Json::num((ops.get() - ops0) as f64)),
+                    ("store_ops_per_world", Json::num(ops_per_world)),
+                    ("conns_opened", Json::num((conns.get() - conns0) as f64)),
+                ]),
+            ),
+        ]),
+    );
 }

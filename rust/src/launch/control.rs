@@ -173,7 +173,11 @@ impl ControlPlane {
                 let mut next: i64 = 1;
                 while !stop2.load(Ordering::Relaxed) {
                     let key = format!("ctl/update/{next}");
-                    match store.wait(&key, Duration::from_millis(200)) {
+                    // Server-side waits are push-based: the store parks
+                    // this wait and answers the instant the key lands,
+                    // so the timeout only bounds how often we re-check
+                    // the stop flag — not delivery latency.
+                    match store.wait(&key, Duration::from_secs(1)) {
                         Ok(bytes) => {
                             next += 1;
                             let Ok(text) = String::from_utf8(bytes) else { continue };

@@ -17,7 +17,7 @@
 //! a dying pool never publishes half-finished joins into live worlds.
 
 use crate::serving::topology::{NodeId, Topology, WorldDef};
-use crate::store::StoreServer;
+use crate::store::{StoreClient, StoreServer};
 use crate::util::free_port;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -41,6 +41,10 @@ pub struct ProcessCluster {
     pub artifacts: PathBuf,
     /// Cluster store hosting the control plane.
     pub cluster_store: Arc<StoreServer>,
+    /// Cached client to the cluster store — promotions publish through
+    /// this instead of dialing per call (the pooled client shares one
+    /// socket process-wide anyway; caching also skips the pool lookup).
+    cluster_client: Arc<StoreClient>,
     pub cluster_port: u16,
     topo_file: PathBuf,
     procs: Mutex<HashMap<NodeId, ProcHandle>>,
@@ -73,8 +77,11 @@ impl ProcessCluster {
         spares: usize,
     ) -> anyhow::Result<ProcessCluster> {
         let cluster_port = free_port();
-        let cluster_store =
-            Arc::new(StoreServer::bind(&format!("127.0.0.1:{cluster_port}"))?);
+        let cluster_store = Arc::new(StoreServer::bind(&format!("127.0.0.1:{cluster_port}"))?);
+        let cluster_client = Arc::new(StoreClient::connect(
+            format!("127.0.0.1:{cluster_port}").parse()?,
+            std::time::Duration::from_secs(5),
+        )?);
         let topo_file =
             std::env::temp_dir().join(format!("mw-topo-{}-{cluster_port}.json", std::process::id()));
         topo.save(&topo_file)?;
@@ -82,6 +89,7 @@ impl ProcessCluster {
             topology: topo,
             artifacts,
             cluster_store,
+            cluster_client,
             cluster_port,
             topo_file,
             procs: Mutex::new(HashMap::new()),
@@ -203,11 +211,8 @@ impl ProcessCluster {
             None => String::new(),
         };
         let payload = format!("{node}\n{worlds_path}");
-        let client = crate::store::StoreClient::connect(
-            format!("127.0.0.1:{}", self.cluster_port).parse()?,
-            std::time::Duration::from_secs(5),
-        )?;
-        client.set(&format!("spare/{}/assign", spare.id), payload.as_bytes())?;
+        self.cluster_client
+            .set(&format!("spare/{}/assign", spare.id), payload.as_bytes())?;
         self.procs.lock().unwrap().insert(node, ProcHandle { child: spare.child });
         crate::metrics::global().counter("serving.spares.promoted").inc();
         Ok(true)

@@ -128,20 +128,24 @@ impl Watchdog {
                     broken.push((w.world.clone(), format!("store unreachable: {e}"), None));
                     continue;
                 }
-                // 2. Check the peers.
-                for peer in 0..w.size {
-                    if peer == w.rank {
+                // 2. Check the peers — one batched `mget` per world per
+                // tick instead of a round trip per peer, so the sweep
+                // cost is O(1) in member count on the wire.
+                let peers: Vec<usize> = (0..w.size).filter(|&p| p != w.rank).collect();
+                let keys: Vec<String> =
+                    peers.iter().map(|p| format!("mw/{}/hb/{p}", w.world)).collect();
+                let key_refs: Vec<&str> = keys.iter().map(String::as_str).collect();
+                let stamps = match w.store.mget(&key_refs) {
+                    Ok(vals) => vals,
+                    Err(e) => {
+                        broken.push((w.world.clone(), format!("store unreachable: {e}"), None));
                         continue;
                     }
-                    let key = format!("mw/{}/hb/{peer}", w.world);
-                    let stamp = match w.store.get(&key) {
-                        Ok(Some(v)) => String::from_utf8(v).ok().and_then(|s| s.parse::<u64>().ok()),
-                        Ok(None) => None,
-                        Err(e) => {
-                            broken.push((w.world.clone(), format!("store unreachable: {e}"), None));
-                            break;
-                        }
-                    };
+                };
+                for (&peer, val) in peers.iter().zip(stamps) {
+                    let stamp = val
+                        .and_then(|v| String::from_utf8(v).ok())
+                        .and_then(|s| s.parse::<u64>().ok());
                     let last = match stamp {
                         // Stamps from other processes use the same wall
                         // clock; a manual test clock sees its own writes.

@@ -7,6 +7,12 @@
 //! member is wired. The same store instance later carries the
 //! MultiWorld watchdog's heartbeats (§3.3: "One TCPStore instance is
 //! associated with one world").
+//!
+//! Minting is batched: each member publishes its address with one `SET`
+//! and collects *all* peers' with one `WAIT_MANY`, so the store round
+//! trips per member are constant in world size (publish + collect +
+//! barrier add + barrier wait ≈ 4) — the property the control-plane
+//! regression test pins via the `store.client.ops` counter.
 
 use super::error::{CclError, CclResult};
 use super::hostmap::HostMap;
@@ -399,6 +405,12 @@ pub fn barrier(
 /// Establish full-mesh TCP links: every rank listens; the higher rank of
 /// each pair dials the lower; a 8-byte hello (`rank:u32 || magic:u32`)
 /// identifies the dialer.
+///
+/// Address exchange is **O(1) store round trips in the member count**:
+/// one `SET` publishes our endpoint, one `WAIT_MANY` collects every
+/// peer's (the store answers when the last address lands — no per-peer
+/// wait chain). Accepts block in the kernel with a deadline
+/// ([`crate::util::accept_deadline`]) instead of a sleep-poll loop.
 fn tcp_links(
     world: &str,
     rank: usize,
@@ -417,14 +429,19 @@ fn tcp_links(
         .set(&key(world, &format!("addr/{rank}")), my_addr.to_string().as_bytes())
         .map_err(|e| CclError::InitFailure(format!("publish addr: {e}")))?;
 
+    // All peer addresses in one batched round trip.
+    let addr_keys: Vec<String> =
+        (0..size).map(|p| key(world, &format!("addr/{p}"))).collect();
+    let addr_refs: Vec<&str> = addr_keys.iter().map(|s| s.as_str()).collect();
+    let addr_vals = store
+        .wait_many(&addr_refs, timeout)
+        .map_err(|e| CclError::InitFailure(format!("peer addrs: {e}")))?;
+
     let mut links: HashMap<usize, Box<dyn Link>> = HashMap::new();
 
     // Dial every lower rank.
     for peer in 0..rank {
-        let addr_bytes = store
-            .wait(&key(world, &format!("addr/{peer}")), timeout)
-            .map_err(|e| CclError::InitFailure(format!("peer {peer} addr: {e}")))?;
-        let addr: SocketAddr = String::from_utf8(addr_bytes)
+        let addr: SocketAddr = std::str::from_utf8(&addr_vals[peer])
             .ok()
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| CclError::InitFailure(format!("bad addr for {peer}")))?;
@@ -439,33 +456,13 @@ fn tcp_links(
         links.insert(peer, Box::new(TcpLink::new(peer, stream, limiter.clone())?));
     }
 
-    // Accept every higher rank.
+    // Accept every higher rank (deadline-bounded blocking accepts).
     let expect_accepts = size - rank - 1;
-    listener
-        .set_nonblocking(false)
-        .map_err(|e| CclError::InitFailure(e.to_string()))?;
     let deadline = std::time::Instant::now() + timeout;
     for _ in 0..expect_accepts {
-        listener
-            .set_nonblocking(true)
-            .map_err(|e| CclError::InitFailure(e.to_string()))?;
-        let stream = loop {
-            match listener.accept() {
-                Ok((s, _)) => break s,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if std::time::Instant::now() >= deadline {
-                        return Err(CclError::InitFailure("accept timeout".into()));
-                    }
-                    std::thread::sleep(Duration::from_millis(2));
-                }
-                Err(e) => return Err(CclError::InitFailure(format!("accept: {e}"))),
-            }
-        };
-        stream
-            .set_nonblocking(false)
-            .map_err(|e| CclError::InitFailure(e.to_string()))?;
+        let mut s = crate::util::accept_deadline(&listener, deadline)
+            .map_err(|e| CclError::InitFailure(format!("accept: {e}")))?;
         let mut hello = [0u8; 8];
-        let mut s = stream;
         s.read_exact(&mut hello)
             .map_err(|e| CclError::InitFailure(format!("hello read: {e}")))?;
         let peer = u32::from_le_bytes(hello[0..4].try_into().unwrap()) as usize;

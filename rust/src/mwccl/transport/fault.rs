@@ -48,6 +48,24 @@
 //! ms=2 prob=0.1` — stall the head→shard-1 direction of replica (1,1)'s
 //! TP world, and delay 10% of all other sends by 2 ms.
 //!
+//! ## The store pseudo-edge
+//!
+//! The per-world TCP store (heartbeats, rendezvous, control keys) is a
+//! fault target too: the pseudo-edge `edge=store:*->*` injects the
+//! client side of every store request in the process (see
+//! [`store_channel_action`]). Matching is **exact-name only** — the
+//! `*` world glob (and any other glob) never reaches the store channel,
+//! so blanket data-plane chaos plans keep their two-run determinism
+//! without surprise watchdog-timed store events; you opt the control
+//! plane into chaos by naming it. Kind semantics shift to fit a
+//! reliable request/response stream: `delay`/`bandwidth` sleep before
+//! the request is written; `drop`/`truncate` model a lost segment — the
+//! client pauses one RTO (~200 ms) and then transmits, so the call
+//! survives unless its deadline passes; `stall`/`partition` wedge every
+//! request until the rule is healed (or stalls released), after which
+//! traffic resumes — an unhealed wedge surfaces as store-op timeouts,
+//! i.e. a dead-looking store.
+//!
 //! **Multi-rule semantics: first match wins.** Several rules may match
 //! the same directed edge; per send, rules are evaluated in plan order
 //! and the *first* one whose `after`/`count`/`prob` gates all pass
@@ -79,7 +97,8 @@
 //! even on stalled/partitioned edges. The farewell stands in for the
 //! out-of-band control plane (the per-world store), which stays healthy
 //! in these scenarios — suppressing it would conflate data-plane and
-//! control-plane failure domains.
+//! control-plane failure domains. Store-channel faults are their own
+//! explicitly-named pseudo-edge (above) for exactly that reason.
 
 use super::Link;
 use crate::mwccl::error::{CclError, CclResult};
@@ -780,6 +799,11 @@ impl FaultRegistry {
     /// the static stream, see module docs). Returns an id for
     /// [`FaultRegistry::heal`].
     pub fn inject(&self, rule: FaultRule) -> u64 {
+        if rule.pattern.world == STORE_EDGE {
+            // Arm the store-channel fast path (stays armed: a healed
+            // store rule costs one registry snapshot per store op).
+            STORE_DYNAMIC_ARMED.store(true, Ordering::Release);
+        }
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
@@ -905,6 +929,172 @@ impl FaultRegistry {
             inner.events.push(event);
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Store-channel injection (the `store` pseudo-edge — see module docs).
+// ---------------------------------------------------------------------
+
+/// The exact world name a rule must carry to hit the store channel.
+pub const STORE_EDGE: &str = "store";
+
+/// What the store client must do with one outgoing request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StoreAction {
+    /// No fault: write the request.
+    Forward,
+    /// Sleep this long, then write (delay / bandwidth).
+    Sleep(Duration),
+    /// The request "segment" was lost: pause one RTO, then write — the
+    /// reliable stream retransmits, so the call survives unless its
+    /// deadline passes first (drop / truncate).
+    Retransmit(Duration),
+    /// Stall / partition: hold the request until the rule heals (poll
+    /// [`store_channel_wedged`]) or the caller's deadline passes.
+    Wedge,
+}
+
+/// TCP-ish retransmission timeout modeled for a dropped store segment.
+const STORE_RTO: Duration = Duration::from_millis(200);
+
+/// Set once any dynamic rule ever names the store edge; lets the common
+/// no-chaos case skip the registry snapshot entirely.
+static STORE_DYNAMIC_ARMED: AtomicBool = AtomicBool::new(false);
+
+/// The process-wide static plan as seen by the store channel, plus its
+/// decision state. Seeded from the plan seed alone (there is one store
+/// channel per process, not one per rank pair).
+static STORE_STATE: Lazy<Option<Mutex<EdgeRand>>> = Lazy::new(|| {
+    let plan = STORE_PLAN.as_ref()?;
+    if !plan.rules.iter().any(is_store_rule) {
+        return None;
+    }
+    let mut mix = plan.seed ^ 0x53_54_4F_52_45; // "STORE"
+    Some(Mutex::new(EdgeRand {
+        sends: 0,
+        rng: Rng::new(splitmix64(&mut mix)),
+        injected: Vec::new(),
+    }))
+});
+
+static STORE_PLAN: Lazy<Option<FaultPlan>> = Lazy::new(FaultPlan::from_env);
+
+/// Exact-name match only: the `*` glob (or any other glob) never
+/// reaches the store channel. Rank patterns apply to the fixed edge
+/// `0 -> 0`.
+fn is_store_rule(r: &FaultRule) -> bool {
+    r.pattern.world == STORE_EDGE
+        && !r.pattern.src.is_some_and(|s| s != 0)
+        && !r.pattern.dst.is_some_and(|d| d != 0)
+}
+
+/// Decide the fault action for one outgoing store request of `len`
+/// bytes. Events and `fault.injected.<kind>` counters are recorded here
+/// (with `world = "store"`); the caller just applies the action. Cheap
+/// when no store rule exists anywhere: one atomic load + one `Lazy`
+/// deref.
+pub fn store_channel_action(len: usize) -> StoreAction {
+    let dynamic_armed = STORE_DYNAMIC_ARMED.load(Ordering::Acquire);
+    if STORE_STATE.is_none() && !dynamic_armed {
+        return StoreAction::Forward;
+    }
+    let reg = registry();
+    let (dynamic, stalls_released) = reg.snapshot();
+
+    let action_of = |kind: FaultKind| match kind {
+        FaultKind::Delay { ms } => StoreAction::Sleep(Duration::from_millis(ms)),
+        FaultKind::Bandwidth { bps } => {
+            StoreAction::Sleep(Duration::from_secs_f64(len as f64 / bps.max(1.0)))
+        }
+        FaultKind::Drop | FaultKind::Truncate { .. } => StoreAction::Retransmit(STORE_RTO),
+        FaultKind::Stall | FaultKind::Partition => StoreAction::Wedge,
+    };
+    let wedges = |k: FaultKind| {
+        matches!(k, FaultKind::Partition) || (matches!(k, FaultKind::Stall) && !stalls_released)
+    };
+
+    let mut record_kind: Option<&'static str> = None;
+    let mut action = StoreAction::Forward;
+
+    // Static pass (mirrors FaultLinkShared::decide): every matching
+    // rule's probability draw is consumed per request; stall/partition
+    // win categorically, otherwise first firing rule supplies the
+    // verdict and its count bookkeeping.
+    let mut n = 0u64;
+    if let Some(state) = STORE_STATE.as_ref() {
+        let plan = STORE_PLAN.as_ref().expect("store state implies plan");
+        let mut rand = state.lock().unwrap();
+        if rand.injected.len() < plan.rules.len() {
+            rand.injected.resize(plan.rules.len(), 0);
+        }
+        n = rand.sends;
+        rand.sends += 1;
+        let mut static_wedge: Option<&'static str> = None;
+        for (i, rule) in plan.rules.iter().enumerate() {
+            if !is_store_rule(rule) || n < rule.after {
+                continue;
+            }
+            if wedges(rule.kind) {
+                static_wedge.get_or_insert(rule.kind.name());
+                continue;
+            }
+            if rand.injected[i] >= rule.count {
+                continue;
+            }
+            if rule.prob < 1.0 && !rand.rng.chance(rule.prob) {
+                continue;
+            }
+            if record_kind.is_none() {
+                rand.injected[i] += 1;
+                record_kind = Some(rule.kind.name());
+                action = action_of(rule.kind);
+            }
+        }
+        if let Some(kind) = static_wedge {
+            record_kind = Some(kind);
+            action = StoreAction::Wedge;
+        }
+    }
+
+    // Dynamic overrides, wedges first (categorical, no budget), then
+    // the first consumable non-wedge rule.
+    if let Some((_, rule)) = dynamic
+        .iter()
+        .find(|(_, r)| is_store_rule(r) && wedges(r.kind))
+    {
+        record_kind = Some(rule.kind.name());
+        action = StoreAction::Wedge;
+    } else if !matches!(action, StoreAction::Wedge) {
+        for (id, rule) in &dynamic {
+            if is_store_rule(rule) && !wedges(rule.kind) && reg.try_consume(*id) {
+                record_kind = Some(rule.kind.name());
+                action = action_of(rule.kind);
+                break;
+            }
+        }
+    }
+
+    if let Some(kind) = record_kind {
+        reg.record(FaultEvent { world: STORE_EDGE.to_string(), src: 0, dst: 0, op: n, kind });
+    }
+    action
+}
+
+/// Is the store channel still wedged? Polled by a client whose request
+/// got [`StoreAction::Wedge`]; healing the rule (or releasing stalls)
+/// lets the request proceed. `after` gates only the initial decision —
+/// once wedged, healing is the only exit.
+pub fn store_channel_wedged() -> bool {
+    let (dynamic, stalls_released) = registry().snapshot();
+    let wedges = |k: FaultKind| {
+        matches!(k, FaultKind::Partition) || (matches!(k, FaultKind::Stall) && !stalls_released)
+    };
+    if dynamic.iter().any(|(_, r)| is_store_rule(r) && wedges(r.kind)) {
+        return true;
+    }
+    STORE_PLAN
+        .as_ref()
+        .is_some_and(|p| p.rules.iter().any(|r| is_store_rule(r) && wedges(r.kind)))
 }
 
 #[cfg(test)]
@@ -1165,5 +1355,53 @@ mod tests {
         a.send(1, &[b"late"]).unwrap();
         assert_eq!(b.recv(1, Some(Duration::from_secs(2))).unwrap(), b"late");
         assert!(t0.elapsed() >= Duration::from_millis(35), "delay applied");
+    }
+
+    #[test]
+    fn store_edge_requires_exact_name() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        // A blanket glob must never reach the store channel.
+        let glob = registry().inject(FaultRule::always(
+            EdgePattern::new("*", None, None),
+            FaultKind::Delay { ms: 5 },
+        ));
+        assert_eq!(store_channel_action(64), StoreAction::Forward);
+        // An exact `store` rule does.
+        let exact = registry().inject(FaultRule::always(
+            EdgePattern::new(STORE_EDGE, None, None),
+            FaultKind::Delay { ms: 5 },
+        ));
+        assert_eq!(store_channel_action(64), StoreAction::Sleep(Duration::from_millis(5)));
+        let events = registry().events();
+        assert!(
+            events.iter().any(|e| e.world == STORE_EDGE && e.kind == "delay"),
+            "store injection recorded: {events:?}"
+        );
+        registry().heal(glob);
+        registry().heal(exact);
+        assert_eq!(store_channel_action(64), StoreAction::Forward);
+    }
+
+    #[test]
+    fn store_wedge_holds_until_healed() {
+        let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        registry().reset();
+        let id = registry().inject(FaultRule::always(
+            EdgePattern::new(STORE_EDGE, None, None),
+            FaultKind::Partition,
+        ));
+        assert_eq!(store_channel_action(8), StoreAction::Wedge);
+        assert!(store_channel_wedged());
+        registry().heal(id);
+        assert!(!store_channel_wedged());
+        assert_eq!(store_channel_action(8), StoreAction::Forward);
+        // Drop models a lost segment: retransmit, not an error.
+        let id = registry().inject(FaultRule::always(
+            EdgePattern::new(STORE_EDGE, None, None),
+            FaultKind::Drop,
+        ));
+        assert!(matches!(store_channel_action(8), StoreAction::Retransmit(_)));
+        registry().heal(id);
     }
 }

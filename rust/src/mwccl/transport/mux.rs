@@ -668,25 +668,9 @@ fn establish(
 }
 
 fn accept_deadline(listener: &TcpListener, timeout: Duration) -> CclResult<TcpStream> {
-    listener
-        .set_nonblocking(true)
-        .map_err(|e| CclError::InitFailure(e.to_string()))?;
-    let deadline = Instant::now() + timeout;
-    loop {
-        match listener.accept() {
-            Ok((s, _)) => {
-                s.set_nonblocking(false).map_err(|e| CclError::InitFailure(e.to_string()))?;
-                return Ok(s);
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if Instant::now() >= deadline {
-                    return Err(CclError::InitFailure("mux accept timeout".into()));
-                }
-                std::thread::sleep(Duration::from_millis(1));
-            }
-            Err(e) => return Err(CclError::InitFailure(format!("mux accept: {e}"))),
-        }
-    }
+    // Kernel-blocking accept with a deadline — no sleep-poll loop.
+    crate::util::accept_deadline(listener, Instant::now() + timeout)
+        .map_err(|e| CclError::InitFailure(format!("mux accept: {e}")))
 }
 
 /// Socket-scaling observability for one mux domain.

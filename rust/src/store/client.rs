@@ -1,57 +1,245 @@
-//! Blocking store client. One TCP connection, requests serialized under
-//! a mutex so a client handle can be shared across threads (the watchdog
-//! thread and the communicator share one).
+//! Pipelined store client over a process-global connection pool.
+//!
+//! All `StoreClient` handles pointing at the same server address share
+//! **one** TCP connection: a mutexed writer pushes correlation-id-
+//! stamped requests, a single demux reader thread routes responses back
+//! to per-call channels by id. Requests from many threads interleave
+//! freely — a parked `WAIT` never head-of-line-blocks a heartbeat `SET`
+//! on the same socket, because the server answers out of order and the
+//! reader demuxes. Concurrent world inits therefore share sockets
+//! instead of minting `O(worlds × members)` connections.
+//!
+//! Failure domains stay per-server: the pool is keyed by address and
+//! each world runs its own store, so one dying store only poisons its
+//! own pooled connection. When the reader hits EOF/error it marks the
+//! connection dead, fails every in-flight call, and evicts itself from
+//! the pool — the next `connect` dials fresh. The watchdog's "store
+//! unreachable ⇒ leader death" signal is preserved: severed server
+//! sockets surface as errors on every sharing client within one demux
+//! turn.
+//!
+//! Every call counts into `store.client.ops` (the round-trip budget
+//! regression tests assert on deltas) and each dial into
+//! `store.client.conns_opened`. Outgoing requests pass the store
+//! fault-injection point (`edge=store:*->*` — see
+//! [`crate::mwccl::transport::fault`]): delays sleep, drops pause one
+//! RTO then transmit, wedges hold the request until healed or the op
+//! deadline (`MW_STORE_OP_TIMEOUT_MS`, default 10 s) expires.
 
-use super::protocol::{read_response, write_request, Op, Status};
+use super::protocol::{
+    decode_maybe_values, decode_values, encode_keys, encode_pairs, encode_wait_many,
+    read_response, write_request, Op, Status, MAX_KEY, MAX_VAL,
+};
+use crate::metrics;
+use crate::mwccl::transport::fault::{store_channel_action, store_channel_wedged, StoreAction};
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-struct Conn {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
+/// Default per-op response deadline (overridable via
+/// `MW_STORE_OP_TIMEOUT_MS`). Far above healthy control-plane
+/// latencies; hit only when the server is wedged or gone.
+static OP_TIMEOUT: Lazy<Duration> = Lazy::new(|| {
+    let ms = std::env::var("MW_STORE_OP_TIMEOUT_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(10_000);
+    Duration::from_millis(ms)
+});
 
-/// Client handle to a [`super::StoreServer`].
-pub struct StoreClient {
-    conn: Mutex<Conn>,
+/// Extra slack on top of a WAIT's own timeout before the client gives
+/// up on the response (covers scheduling + timer-thread latency).
+const WAIT_SLACK: Duration = Duration::from_millis(2_000);
+
+/// One pooled connection per server address, shared process-wide.
+static POOL: Lazy<Mutex<HashMap<SocketAddr, Arc<PooledConn>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+struct PooledConn {
     addr: SocketAddr,
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, mpsc::Sender<(Status, Vec<u8>)>>>,
+    next_id: AtomicU64,
+    dead: AtomicBool,
 }
 
-impl StoreClient {
-    /// Connect, retrying until `timeout` (rendezvous races: clients often
-    /// start before the leader's server is up).
-    pub fn connect(addr: SocketAddr, timeout: Duration) -> anyhow::Result<Self> {
+impl PooledConn {
+    /// Pool hit (live conn) or a fresh dial with exponential backoff —
+    /// rendezvous races mean clients often start before the leader's
+    /// server is up, so refusals retry until `timeout`.
+    fn get_or_dial(addr: SocketAddr, timeout: Duration) -> anyhow::Result<Arc<PooledConn>> {
+        if let Some(c) = POOL.lock().unwrap().get(&addr) {
+            if !c.dead.load(Ordering::Acquire) {
+                return Ok(c.clone());
+            }
+        }
         let deadline = Instant::now() + timeout;
+        let mut backoff = Duration::from_millis(1);
         loop {
             match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
                 Ok(stream) => {
                     stream.set_nodelay(true)?;
                     let writer = stream.try_clone()?;
-                    return Ok(StoreClient {
-                        conn: Mutex::new(Conn { reader: BufReader::new(stream), writer }),
+                    let conn = Arc::new(PooledConn {
                         addr,
+                        writer: Mutex::new(writer),
+                        pending: Mutex::new(HashMap::new()),
+                        next_id: AtomicU64::new(1),
+                        dead: AtomicBool::new(false),
                     });
+                    // Someone may have won the dial race while we were
+                    // connecting: keep the pool's live conn, drop ours.
+                    let mut pool = POOL.lock().unwrap();
+                    if let Some(existing) = pool.get(&addr) {
+                        if !existing.dead.load(Ordering::Acquire) {
+                            return Ok(existing.clone());
+                        }
+                    }
+                    pool.insert(addr, conn.clone());
+                    drop(pool);
+                    metrics::global().counter("store.client.conns_opened").inc();
+                    let rconn = conn.clone();
+                    std::thread::Builder::new()
+                        .name(format!("store-demux-{}", addr.port()))
+                        .spawn(move || reader_loop(rconn, stream))?;
+                    return Ok(conn);
                 }
                 Err(e) => {
                     if Instant::now() >= deadline {
                         anyhow::bail!("store connect to {addr} timed out: {e}");
                     }
-                    std::thread::sleep(Duration::from_millis(20));
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(64));
                 }
             }
         }
+    }
+
+    /// Fail every in-flight call and evict this conn from the pool
+    /// (unless a replacement already took the slot).
+    fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Release);
+        // Dropping the senders disconnects every waiting receiver.
+        self.pending.lock().unwrap().clear();
+        let mut pool = POOL.lock().unwrap();
+        if let Some(cur) = pool.get(&self.addr) {
+            if std::ptr::eq(Arc::as_ptr(cur), self) {
+                pool.remove(&self.addr);
+            }
+        }
+    }
+
+    /// One pipelined round trip. `deadline` bounds the whole call,
+    /// including any fault-injected wedge time.
+    fn call(
+        &self,
+        op: Op,
+        key: &str,
+        val: &[u8],
+        deadline: Duration,
+    ) -> anyhow::Result<(Status, Vec<u8>)> {
+        anyhow::ensure!(key.len() <= MAX_KEY, "store key too large: {}", key.len());
+        anyhow::ensure!(val.len() <= MAX_VAL, "store value too large: {}", val.len());
+        if self.dead.load(Ordering::Acquire) {
+            anyhow::bail!("store connection to {} lost", self.addr);
+        }
+        metrics::global().counter("store.client.ops").inc();
+        let hard_deadline = Instant::now() + deadline;
+        // Fault point: applied per request, before the shared writer is
+        // touched, so an injected sleep never blocks other callers.
+        match store_channel_action(key.len() + val.len()) {
+            StoreAction::Forward => {}
+            StoreAction::Sleep(d) | StoreAction::Retransmit(d) => std::thread::sleep(d),
+            StoreAction::Wedge => loop {
+                if !store_channel_wedged() {
+                    break;
+                }
+                if Instant::now() >= hard_deadline {
+                    anyhow::bail!("store op {op:?} to {} timed out (wedged)", self.addr);
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            },
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        {
+            let mut w = self.writer.lock().unwrap();
+            if let Err(e) = write_request(&mut *w, id, op, key, val) {
+                drop(w);
+                self.pending.lock().unwrap().remove(&id);
+                self.mark_dead();
+                anyhow::bail!("store send to {} failed: {e}", self.addr);
+            }
+        }
+        let left = hard_deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(resp) => Ok(resp),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.pending.lock().unwrap().remove(&id);
+                anyhow::bail!("store op {op:?} to {} timed out", self.addr)
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("store connection to {} lost", self.addr)
+            }
+        }
+    }
+}
+
+/// Demux loop: route responses to callers by correlation id; on any
+/// read error declare the connection dead (the server severing sockets
+/// on drop is the watchdog's leader-death signal).
+fn reader_loop(conn: Arc<PooledConn>, stream: TcpStream) {
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_response(&mut reader) {
+            Ok((id, status, val)) => {
+                let tx = conn.pending.lock().unwrap().remove(&id);
+                if let Some(tx) = tx {
+                    let _ = tx.send((status, val));
+                }
+                // No registered caller: the caller gave up (timeout) —
+                // drop the response.
+            }
+            Err(_) => {
+                conn.mark_dead();
+                return;
+            }
+        }
+    }
+}
+
+/// Client handle to a [`super::StoreServer`]. Cheap to clone-by-
+/// reconnect: handles to the same address share one pooled connection.
+pub struct StoreClient {
+    conn: Arc<PooledConn>,
+    addr: SocketAddr,
+}
+
+impl StoreClient {
+    /// Connect (or join the pooled connection), retrying dials until
+    /// `timeout`.
+    pub fn connect(addr: SocketAddr, timeout: Duration) -> anyhow::Result<Self> {
+        let conn = PooledConn::get_or_dial(addr, timeout)?;
+        Ok(StoreClient { conn, addr })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
+    /// Do two handles ride the same pooled connection? (test hook)
+    #[cfg(test)]
+    pub(crate) fn shares_conn_with(&self, other: &StoreClient) -> bool {
+        Arc::ptr_eq(&self.conn, &other.conn)
+    }
+
     fn call(&self, op: Op, key: &str, val: &[u8]) -> anyhow::Result<(Status, Vec<u8>)> {
-        let mut conn = self.conn.lock().unwrap();
-        write_request(&mut conn.writer, op, key, val)?;
-        read_response(&mut conn.reader)
+        self.conn.call(op, key, val, *OP_TIMEOUT)
     }
 
     /// Insert or overwrite.
@@ -79,13 +267,77 @@ impl StoreClient {
         }
     }
 
-    /// Block until `key` exists (or timeout) and return its value.
+    /// Block until `key` exists (or timeout) and return its value. The
+    /// wait parks server-side (no polling); other requests keep flowing
+    /// on the shared connection meanwhile.
     pub fn wait(&self, key: &str, timeout: Duration) -> anyhow::Result<Vec<u8>> {
-        let ms = timeout.as_millis() as u64;
-        match self.call(Op::Wait, key, &ms.to_le_bytes())? {
+        let ms = timeout.as_millis().min(u64::MAX as u128) as u64;
+        let deadline = timeout.saturating_add(WAIT_SLACK);
+        match self.conn.call(Op::Wait, key, &ms.to_le_bytes(), deadline)? {
             (Status::Ok, v) => Ok(v),
             (Status::Timeout, _) => anyhow::bail!("wait({key}) timeout after {ms} ms"),
             (s, v) => anyhow::bail!("wait failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Block until **all** `keys` exist (or timeout); returns their
+    /// values in request order. One round trip regardless of key count
+    /// — the O(1) primitive rendezvous address exchange rides on.
+    pub fn wait_many(&self, keys: &[&str], timeout: Duration) -> anyhow::Result<Vec<Vec<u8>>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        let ms = timeout.as_millis().min(u64::MAX as u128) as u64;
+        let deadline = timeout.saturating_add(WAIT_SLACK);
+        let body = encode_wait_many(keys, ms);
+        match self.conn.call(Op::WaitMany, "", &body, deadline)? {
+            (Status::Ok, v) => {
+                let vals = decode_values(&v)?;
+                anyhow::ensure!(
+                    vals.len() == keys.len(),
+                    "WAIT_MANY returned {} values for {} keys",
+                    vals.len(),
+                    keys.len()
+                );
+                Ok(vals)
+            }
+            (Status::Timeout, _) => {
+                anyhow::bail!("wait_many({} keys) timeout after {ms} ms", keys.len())
+            }
+            (s, v) => anyhow::bail!("wait_many failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Batched insert: all pairs land in one round trip, applied
+    /// atomically per shard.
+    pub fn mset(&self, pairs: &[(&str, &[u8])]) -> anyhow::Result<()> {
+        if pairs.is_empty() {
+            return Ok(());
+        }
+        match self.call(Op::MSet, "", &encode_pairs(pairs))? {
+            (Status::Ok, _) => Ok(()),
+            (s, v) => anyhow::bail!("mset failed: {s:?} {}", String::from_utf8_lossy(&v)),
+        }
+    }
+
+    /// Batched fetch: one round trip; `None` per absent key, in request
+    /// order.
+    pub fn mget(&self, keys: &[&str]) -> anyhow::Result<Vec<Option<Vec<u8>>>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        match self.call(Op::MGet, "", &encode_keys(keys))? {
+            (Status::Ok, v) => {
+                let vals = decode_maybe_values(&v)?;
+                anyhow::ensure!(
+                    vals.len() == keys.len(),
+                    "MGET returned {} values for {} keys",
+                    vals.len(),
+                    keys.len()
+                );
+                Ok(vals)
+            }
+            (s, v) => anyhow::bail!("mget failed: {s:?} {}", String::from_utf8_lossy(&v)),
         }
     }
 
@@ -115,14 +367,14 @@ impl StoreClient {
     /// All keys with the given prefix.
     pub fn keys(&self, prefix: &str) -> anyhow::Result<Vec<String>> {
         match self.call(Op::Keys, prefix, &[])? {
-            (Status::Ok, mut v) => {
+            (Status::Ok, v) => {
                 let mut out = Vec::new();
-                let mut rest = v.as_mut_slice();
+                let mut rest = v.as_slice();
                 while rest.len() >= 4 {
                     let len = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
                     anyhow::ensure!(rest.len() >= 4 + len, "short KEYS frame");
                     out.push(String::from_utf8(rest[4..4 + len].to_vec())?);
-                    rest = &mut rest[4 + len..];
+                    rest = &rest[4 + len..];
                 }
                 Ok(out)
             }

@@ -1,5 +1,5 @@
-//! TCPStore — a PyTorch-compatible-in-spirit blocking key-value store
-//! over TCP.
+//! TCPStore — a PyTorch-compatible-in-spirit key-value store over TCP,
+//! rebuilt for control-plane throughput.
 //!
 //! PyTorch creates one `TCPStore` per process group during `init`; the
 //! paper's watchdog piggybacks worker heartbeats on exactly that store
@@ -9,15 +9,48 @@
 //! member connects a [`StoreClient`]. Rendezvous, rank assignment,
 //! address exchange and heartbeats all flow through it.
 //!
-//! ## Protocol (length-prefixed binary, one request per round trip)
+//! ## Architecture
+//!
+//! * **Sharded server** — the key space is FNV-hashed across
+//!   `MW_STORE_SHARDS` (default 8) independent lock domains, so
+//!   concurrent world inits on disjoint key prefixes never serialize on
+//!   one mutex.
+//! * **Push-based waits** — `WAIT`/`WAIT_MANY` register a waiter under
+//!   the shard(s) of their key(s) and free the connection thread; the
+//!   write that lands the last missing key answers the wait
+//!   (notify-on-write), and a single timer thread answers `Timeout`.
+//!   No server-side polling, no parked connection threads.
+//! * **Pipelined pooled client** — every request carries a correlation
+//!   id; responses may return out of order and a demux reader routes
+//!   them back by id. All `StoreClient` handles to one server address
+//!   share a single process-global pooled connection (one writer, one
+//!   reader), so minting many worlds costs O(servers) sockets, not
+//!   O(clients). Dials retry with exponential backoff (1→64 ms).
+//! * **Batched verbs** — `MSET`, `MGET` and `WAIT_MANY` move whole key
+//!   sets in one round trip; rendezvous exchanges all peer addresses
+//!   per world in O(1) round trips regardless of member count, and the
+//!   watchdog sweeps all peers' heartbeats with one `MGET` per tick.
+//! * **Fault injection** — outgoing requests pass the `store`
+//!   pseudo-edge of the chaos plan grammar
+//!   (`edge=store:*->* kind=...`, exact-name match only; see
+//!   [`crate::mwccl::transport::fault`]), closing the "the watchdog
+//!   channel is never injected" gap: delays sleep, drops retransmit
+//!   after one RTO, stalls/partitions wedge until healed.
+//!
+//! ## Protocol (length-prefixed binary, correlation-id pipelined)
 //!
 //! ```text
-//!   request  = op:u8  key_len:u32  key  val_len:u32  val
-//!   response = status:u8  val_len:u32  val
+//!   request  = id:u64  op:u8  key_len:u32  key  val_len:u32  val
+//!   response = id:u64  status:u8  val_len:u32  val
 //!   ops: 1=SET 2=GET 3=ADD(val=i64 le) 4=WAIT(timeout ms in val)
 //!        5=DELETE 6=COMPARE_SET(val = old_len:u32 old new)
 //!        7=KEYS(prefix in key) 8=NUM_KEYS 9=PING
+//!        10=MSET(val = count (klen key vlen val)*)
+//!        11=MGET(val = count (klen key)*; resp = (present:u8 vlen val)*)
+//!        12=WAIT_MANY(val = timeout_ms:u64 count (klen key)*;
+//!                     resp Ok = (vlen val)* in request order)
 //!   status: 0=ok 1=not_found 2=timeout 3=error
+//!   caps: key ≤ 64 KiB, value ≤ 64 MiB (enforced on both ends)
 //! ```
 
 mod client;
@@ -25,7 +58,7 @@ mod protocol;
 mod server;
 
 pub use client::StoreClient;
-pub use protocol::{Op, Status};
+pub use protocol::{Op, Status, MAX_KEY, MAX_VAL};
 pub use server::StoreServer;
 
 #[cfg(test)]
@@ -145,5 +178,157 @@ mod tests {
         // Give the acceptor a beat to die.
         std::thread::sleep(Duration::from_millis(30));
         assert!(c.set("x", b"y").is_err() || c.get("x").is_err());
+    }
+
+    #[test]
+    fn clients_share_one_pooled_conn() {
+        let (s, c1) = pair();
+        let c2 = StoreClient::connect(s.addr(), Duration::from_secs(2)).unwrap();
+        assert!(c1.shares_conn_with(&c2), "same address ⇒ same pooled conn");
+        let other = StoreServer::bind_any().unwrap();
+        let c3 = StoreClient::connect(other.addr(), Duration::from_secs(2)).unwrap();
+        assert!(!c1.shares_conn_with(&c3), "different server ⇒ different conn");
+    }
+
+    #[test]
+    fn concurrent_adds_on_shared_conn_are_atomic() {
+        // All threads share ONE pooled pipelined connection; the adds
+        // interleave on the wire but each must apply exactly once.
+        let (s, _c) = pair();
+        let addr = s.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let c = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+                    for _ in 0..50 {
+                        c.add("hot", 1).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let c = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+        assert_eq!(c.add("hot", 0).unwrap(), 400);
+    }
+
+    #[test]
+    fn mset_mget_roundtrip() {
+        let (_s, c) = pair();
+        c.mset(&[("m/0", b"a" as &[u8]), ("m/1", b"bb"), ("m/2", b"")]).unwrap();
+        let got = c.mget(&["m/0", "m/2", "m/missing", "m/1"]).unwrap();
+        assert_eq!(
+            got,
+            vec![
+                Some(b"a".to_vec()),
+                Some(Vec::new()),
+                None,
+                Some(b"bb".to_vec()),
+            ]
+        );
+        // Empty batches are client-side no-ops.
+        c.mset(&[]).unwrap();
+        assert!(c.mget(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn wait_many_blocks_until_all_keys_land() {
+        let (s, c) = pair();
+        let addr = s.addr();
+        let setter = std::thread::spawn(move || {
+            let c2 = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+            c2.set("wm/0", b"zero").unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+            // Last key lands via MSET — the batched write must notify.
+            c2.mset(&[("wm/1", b"one" as &[u8]), ("wm/2", b"two")]).unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        let vals = c
+            .wait_many(&["wm/0", "wm/1", "wm/2"], Duration::from_secs(2))
+            .unwrap();
+        assert_eq!(vals, vec![b"zero".to_vec(), b"one".to_vec(), b"two".to_vec()]);
+        assert!(t0.elapsed() >= Duration::from_millis(50), "blocked for the mset");
+        setter.join().unwrap();
+    }
+
+    #[test]
+    fn wait_many_times_out_with_partial_keys() {
+        let (_s, c) = pair();
+        c.set("part/0", b"here").unwrap();
+        let t0 = std::time::Instant::now();
+        let err = c
+            .wait_many(&["part/0", "part/never"], Duration::from_millis(80))
+            .unwrap_err();
+        assert!(err.to_string().contains("timeout"), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(70));
+        // The present key is untouched and a later wait on it succeeds.
+        assert_eq!(c.wait("part/0", Duration::from_millis(100)).unwrap(), b"here");
+    }
+
+    #[test]
+    fn oversized_keys_and_values_rejected_client_side() {
+        let (_s, c) = pair();
+        let big_key = "k".repeat(MAX_KEY + 1);
+        assert!(c.set(&big_key, b"v").is_err());
+        let big_val = vec![0u8; MAX_VAL + 1];
+        assert!(c.set("k", &big_val).is_err());
+        // The connection survives the rejection (nothing hit the wire).
+        c.set("k", b"fine").unwrap();
+        assert_eq!(c.get("k").unwrap(), Some(b"fine".to_vec()));
+    }
+
+    #[test]
+    fn compare_set_races_have_exactly_one_winner_per_key() {
+        // 16 threads race empty-expectation compare_set over 4 keys that
+        // hash to different shards; exactly one insert wins per key.
+        let (s, _c) = pair();
+        let addr = s.addr();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let c = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+                    let key = format!("race/{}", i % 4);
+                    let mine = format!("winner-{i}").into_bytes();
+                    let stored = c.compare_set(&key, b"", &mine).unwrap();
+                    (key, mine, stored)
+                })
+            })
+            .collect();
+        let mut winners: std::collections::HashMap<String, Vec<u8>> = Default::default();
+        let mut claimed = 0;
+        for h in handles {
+            let (key, mine, stored) = h.join().unwrap();
+            if stored == mine {
+                claimed += 1;
+            }
+            // Everyone must observe SOME winner's value.
+            let w = winners.entry(key).or_insert_with(|| stored.clone());
+            assert_eq!(*w, stored, "all racers on a key observe one winner");
+        }
+        assert_eq!(claimed, 4, "exactly one winner per key");
+    }
+
+    #[test]
+    fn pipelined_wait_does_not_block_other_ops() {
+        // A parked WAIT on the shared connection must not head-of-line
+        // block a SET/GET issued afterwards.
+        let (s, c) = pair();
+        let addr = s.addr();
+        let waiter = std::thread::spawn(move || {
+            let c2 = StoreClient::connect(addr, Duration::from_secs(2)).unwrap();
+            c2.wait("parked", Duration::from_secs(5)).unwrap()
+        });
+        // Let the WAIT get onto the wire first.
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = std::time::Instant::now();
+        c.set("other", b"1").unwrap();
+        assert_eq!(c.get("other").unwrap(), Some(b"1".to_vec()));
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "ops flowed while the wait was parked"
+        );
+        c.set("parked", b"released").unwrap();
+        assert_eq!(waiter.join().unwrap(), b"released");
     }
 }

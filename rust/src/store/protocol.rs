@@ -1,6 +1,30 @@
 //! Wire protocol shared by the store server and client.
+//!
+//! Every request carries a client-chosen **correlation id** echoed in
+//! its response, so one connection can have many requests in flight and
+//! responses may return out of order (a registered `WAIT` answers when
+//! its key lands, while later `SET`s on the same connection answer
+//! immediately). This is what lets the client pool one pipelined
+//! connection per `(process, server)` instead of one per handle.
+//!
+//! ```text
+//!   request  = id:u64  op:u8  key_len:u32  key  val_len:u32  val
+//!   response = id:u64  status:u8  val_len:u32  val
+//! ```
+//!
+//! Batched verbs pack their operands into `val` (the `key` field is
+//! empty): see [`encode_pairs`] / [`encode_keys`] and the per-op notes
+//! on [`Op`].
 
 use std::io::{Read, Write};
+
+/// Hard cap on key length (bytes). Enforced on both ends: the client
+/// rejects oversized keys before they touch the wire, the server
+/// rejects them on read (a malicious or corrupt frame must not balloon
+/// server memory).
+pub const MAX_KEY: usize = 1 << 16;
+/// Hard cap on value length (bytes), ditto.
+pub const MAX_VAL: usize = 1 << 26;
 
 /// Request opcodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -15,6 +39,18 @@ pub enum Op {
     Keys = 7,
     NumKeys = 8,
     Ping = 9,
+    /// Batched set: `val = count:u32 (klen:u32 key vlen:u32 val)*`,
+    /// applied atomically per shard (all keys land before any waiter
+    /// on them is answered).
+    MSet = 10,
+    /// Batched get: `val = count:u32 (klen:u32 key)*`; response `val =
+    /// (present:u8 vlen:u32 val)*` in request order.
+    MGet = 11,
+    /// Wait until **all** keys exist: `val = timeout_ms:u64 count:u32
+    /// (klen:u32 key)*`; response `Ok` with `(vlen:u32 val)*` in
+    /// request order once every key is present, `Timeout` otherwise
+    /// (all-or-nothing: no partial values on timeout).
+    WaitMany = 12,
 }
 
 impl Op {
@@ -29,6 +65,9 @@ impl Op {
             7 => Op::Keys,
             8 => Op::NumKeys,
             9 => Op::Ping,
+            10 => Op::MSet,
+            11 => Op::MGet,
+            12 => Op::WaitMany,
             _ => anyhow::bail!("bad store op {v}"),
         })
     }
@@ -57,8 +96,17 @@ impl Status {
 }
 
 /// Encode one request frame.
-pub fn write_request<W: Write>(w: &mut W, op: Op, key: &str, val: &[u8]) -> anyhow::Result<()> {
-    let mut buf = Vec::with_capacity(9 + key.len() + val.len());
+pub fn write_request<W: Write>(
+    w: &mut W,
+    id: u64,
+    op: Op,
+    key: &str,
+    val: &[u8],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(key.len() <= MAX_KEY, "store key too large: {}", key.len());
+    anyhow::ensure!(val.len() <= MAX_VAL, "store value too large: {}", val.len());
+    let mut buf = Vec::with_capacity(17 + key.len() + val.len());
+    buf.extend_from_slice(&id.to_le_bytes());
     buf.push(op as u8);
     buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
     buf.extend_from_slice(key.as_bytes());
@@ -70,18 +118,27 @@ pub fn write_request<W: Write>(w: &mut W, op: Op, key: &str, val: &[u8]) -> anyh
 }
 
 /// Decode one request frame.
-pub fn read_request<R: Read>(r: &mut R) -> anyhow::Result<(Op, String, Vec<u8>)> {
+pub fn read_request<R: Read>(r: &mut R) -> anyhow::Result<(u64, Op, String, Vec<u8>)> {
+    let mut id = [0u8; 8];
+    r.read_exact(&mut id)?;
+    let id = u64::from_le_bytes(id);
     let mut op = [0u8; 1];
     r.read_exact(&mut op)?;
     let op = Op::from_u8(op[0])?;
-    let key = read_chunk(r, 1 << 16)?;
-    let val = read_chunk(r, 1 << 26)?;
-    Ok((op, String::from_utf8(key)?, val))
+    let key = read_chunk(r, MAX_KEY)?;
+    let val = read_chunk(r, MAX_VAL)?;
+    Ok((id, op, String::from_utf8(key)?, val))
 }
 
 /// Encode one response frame.
-pub fn write_response<W: Write>(w: &mut W, status: Status, val: &[u8]) -> anyhow::Result<()> {
-    let mut buf = Vec::with_capacity(5 + val.len());
+pub fn write_response<W: Write>(
+    w: &mut W,
+    id: u64,
+    status: Status,
+    val: &[u8],
+) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(13 + val.len());
+    buf.extend_from_slice(&id.to_le_bytes());
     buf.push(status as u8);
     buf.extend_from_slice(&(val.len() as u32).to_le_bytes());
     buf.extend_from_slice(val);
@@ -91,12 +148,15 @@ pub fn write_response<W: Write>(w: &mut W, status: Status, val: &[u8]) -> anyhow
 }
 
 /// Decode one response frame.
-pub fn read_response<R: Read>(r: &mut R) -> anyhow::Result<(Status, Vec<u8>)> {
+pub fn read_response<R: Read>(r: &mut R) -> anyhow::Result<(u64, Status, Vec<u8>)> {
+    let mut id = [0u8; 8];
+    r.read_exact(&mut id)?;
+    let id = u64::from_le_bytes(id);
     let mut st = [0u8; 1];
     r.read_exact(&mut st)?;
     let status = Status::from_u8(st[0])?;
-    let val = read_chunk(r, 1 << 26)?;
-    Ok((status, val))
+    let val = read_chunk(r, MAX_VAL)?;
+    Ok((id, status, val))
 }
 
 fn read_chunk<R: Read>(r: &mut R, max: usize) -> anyhow::Result<Vec<u8>> {
@@ -109,6 +169,135 @@ fn read_chunk<R: Read>(r: &mut R, max: usize) -> anyhow::Result<Vec<u8>> {
     Ok(buf)
 }
 
+/// Pack `(key, value)` pairs into an [`Op::MSet`] operand.
+pub fn encode_pairs(pairs: &[(&str, &[u8])]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+    for (k, v) in pairs {
+        out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        out.extend_from_slice(v);
+    }
+    out
+}
+
+/// Unpack an [`Op::MSet`] operand.
+pub fn decode_pairs(mut val: &[u8]) -> anyhow::Result<Vec<(String, Vec<u8>)>> {
+    let count = take_u32(&mut val)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let k = take_chunk(&mut val, MAX_KEY)?;
+        let v = take_chunk(&mut val, MAX_VAL)?;
+        out.push((String::from_utf8(k)?, v));
+    }
+    Ok(out)
+}
+
+/// Pack a key list into an [`Op::MGet`] / [`Op::WaitMany`] operand
+/// (the latter prefixes a timeout — see [`encode_wait_many`]).
+pub fn encode_keys(keys: &[&str]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+    for k in keys {
+        out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+        out.extend_from_slice(k.as_bytes());
+    }
+    out
+}
+
+/// Unpack a key list.
+pub fn decode_keys(mut val: &[u8]) -> anyhow::Result<Vec<String>> {
+    let count = take_u32(&mut val)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(String::from_utf8(take_chunk(&mut val, MAX_KEY)?)?);
+    }
+    Ok(out)
+}
+
+/// Pack an [`Op::WaitMany`] operand: timeout + key list.
+pub fn encode_wait_many(keys: &[&str], timeout_ms: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    out.extend_from_slice(&timeout_ms.to_le_bytes());
+    out.extend_from_slice(&encode_keys(keys));
+    out
+}
+
+/// Unpack an [`Op::WaitMany`] operand.
+pub fn decode_wait_many(val: &[u8]) -> anyhow::Result<(u64, Vec<String>)> {
+    anyhow::ensure!(val.len() >= 8, "short WAIT_MANY operand");
+    let timeout = u64::from_le_bytes(val[0..8].try_into().unwrap());
+    Ok((timeout, decode_keys(&val[8..])?))
+}
+
+/// Pack values (an [`Op::WaitMany`] `Ok` response body).
+pub fn encode_values(values: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for v in values {
+        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        out.extend_from_slice(v);
+    }
+    out
+}
+
+/// Unpack a values list ([`Op::WaitMany`] response body).
+pub fn decode_values(mut val: &[u8]) -> anyhow::Result<Vec<Vec<u8>>> {
+    let mut out = Vec::new();
+    while !val.is_empty() {
+        out.push(take_chunk(&mut val, MAX_VAL)?);
+    }
+    Ok(out)
+}
+
+/// Pack `(present, value)` entries (an [`Op::MGet`] response body).
+pub fn encode_maybe_values(values: &[Option<&[u8]>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for v in values {
+        match v {
+            Some(v) => {
+                out.push(1);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                out.extend_from_slice(v);
+            }
+            None => {
+                out.push(0);
+                out.extend_from_slice(&0u32.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Unpack an [`Op::MGet`] response body.
+pub fn decode_maybe_values(mut val: &[u8]) -> anyhow::Result<Vec<Option<Vec<u8>>>> {
+    let mut out = Vec::new();
+    while !val.is_empty() {
+        anyhow::ensure!(!val.is_empty(), "short MGET frame");
+        let present = val[0] == 1;
+        val = &val[1..];
+        let v = take_chunk(&mut val, MAX_VAL)?;
+        out.push(if present { Some(v) } else { None });
+    }
+    Ok(out)
+}
+
+fn take_u32(buf: &mut &[u8]) -> anyhow::Result<u32> {
+    anyhow::ensure!(buf.len() >= 4, "short store frame");
+    let v = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    *buf = &buf[4..];
+    Ok(v)
+}
+
+fn take_chunk(buf: &mut &[u8], max: usize) -> anyhow::Result<Vec<u8>> {
+    let len = take_u32(buf)? as usize;
+    anyhow::ensure!(len <= max, "store chunk too large: {len}");
+    anyhow::ensure!(buf.len() >= len, "short store frame");
+    let out = buf[..len].to_vec();
+    *buf = &buf[len..];
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,8 +305,9 @@ mod tests {
     #[test]
     fn request_roundtrip() {
         let mut buf = Vec::new();
-        write_request(&mut buf, Op::Set, "hb/w1/0", b"12345").unwrap();
-        let (op, key, val) = read_request(&mut buf.as_slice()).unwrap();
+        write_request(&mut buf, 42, Op::Set, "hb/w1/0", b"12345").unwrap();
+        let (id, op, key, val) = read_request(&mut buf.as_slice()).unwrap();
+        assert_eq!(id, 42);
         assert_eq!(op, Op::Set);
         assert_eq!(key, "hb/w1/0");
         assert_eq!(val, b"12345");
@@ -126,8 +316,9 @@ mod tests {
     #[test]
     fn response_roundtrip() {
         let mut buf = Vec::new();
-        write_response(&mut buf, Status::Timeout, b"").unwrap();
-        let (st, val) = read_response(&mut buf.as_slice()).unwrap();
+        write_response(&mut buf, 7, Status::Timeout, b"").unwrap();
+        let (id, st, val) = read_response(&mut buf.as_slice()).unwrap();
+        assert_eq!(id, 7);
         assert_eq!(st, Status::Timeout);
         assert!(val.is_empty());
     }
@@ -135,15 +326,37 @@ mod tests {
     #[test]
     fn rejects_oversized_key() {
         // key length field says 1 MiB — beyond the 64 KiB key cap.
-        let mut buf = vec![Op::Get as u8];
+        let mut buf = 1u64.to_le_bytes().to_vec();
+        buf.push(Op::Get as u8);
         buf.extend_from_slice(&(1u32 << 20).to_le_bytes());
         buf.extend_from_slice(&[0u8; 16]);
         assert!(read_request(&mut buf.as_slice()).is_err());
     }
 
     #[test]
+    fn rejects_oversized_key_on_write() {
+        let big = "k".repeat(MAX_KEY + 1);
+        let mut buf = Vec::new();
+        assert!(write_request(&mut buf, 1, Op::Set, &big, b"").is_err());
+        assert!(buf.is_empty(), "nothing hits the wire");
+    }
+
+    #[test]
     fn op_status_tags() {
-        for op in [Op::Set, Op::Get, Op::Add, Op::Wait, Op::Delete, Op::CompareSet, Op::Keys, Op::NumKeys, Op::Ping] {
+        for op in [
+            Op::Set,
+            Op::Get,
+            Op::Add,
+            Op::Wait,
+            Op::Delete,
+            Op::CompareSet,
+            Op::Keys,
+            Op::NumKeys,
+            Op::Ping,
+            Op::MSet,
+            Op::MGet,
+            Op::WaitMany,
+        ] {
             assert_eq!(Op::from_u8(op as u8).unwrap(), op);
         }
         assert!(Op::from_u8(0).is_err());
@@ -151,5 +364,26 @@ mod tests {
             assert_eq!(Status::from_u8(st as u8).unwrap(), st);
         }
         assert!(Status::from_u8(9).is_err());
+    }
+
+    #[test]
+    fn batch_encodings_roundtrip() {
+        let pairs: Vec<(&str, &[u8])> = vec![("a", b"1"), ("b/c", b""), ("d", b"xyz")];
+        let decoded = decode_pairs(&encode_pairs(&pairs)).unwrap();
+        assert_eq!(decoded.len(), 3);
+        assert_eq!(decoded[0], ("a".to_string(), b"1".to_vec()));
+        assert_eq!(decoded[1], ("b/c".to_string(), Vec::new()));
+
+        let keys = ["k0", "k1", "k2"];
+        let (t, ks) = decode_wait_many(&encode_wait_many(&keys, 1234)).unwrap();
+        assert_eq!(t, 1234);
+        assert_eq!(ks, vec!["k0", "k1", "k2"]);
+
+        let vals = vec![b"one".to_vec(), Vec::new(), b"three".to_vec()];
+        assert_eq!(decode_values(&encode_values(&vals)).unwrap(), vals);
+
+        let maybes: Vec<Option<&[u8]>> = vec![Some(b"v"), None, Some(b"")];
+        let decoded = decode_maybe_values(&encode_maybe_values(&maybes)).unwrap();
+        assert_eq!(decoded, vec![Some(b"v".to_vec()), None, Some(Vec::new())]);
     }
 }

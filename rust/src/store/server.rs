@@ -1,18 +1,234 @@
-//! The store server: one thread per client connection, shared map with
-//! condvar wakeups for WAIT.
+//! The store server: sharded key space, push-based waits.
+//!
+//! The key space is hashed across `MW_STORE_SHARDS` independent lock
+//! domains (default 8) so concurrent world inits touching disjoint key
+//! prefixes never contend on one global mutex. `WAIT`/`WAIT_MANY` no
+//! longer park the connection thread in a condvar poll: the request
+//! registers a **waiter** under the shard(s) of its key(s) and the
+//! connection goes straight back to reading; whichever write lands the
+//! last missing key answers the wait from the writer's thread
+//! (notify-on-write). A single timer thread owns a deadline heap and
+//! answers `Timeout` for waits that never complete, so an idle server
+//! burns no CPU regardless of how many waits are parked.
+//!
+//! Responses are written through a per-connection mutexed writer and
+//! carry the request's correlation id, so they may interleave out of
+//! request order — the pipelined client demuxes by id.
+//!
+//! Cross-shard aggregate ops (`KEYS`, `NUM_KEYS`) lock shards one at a
+//! time: they see a consistent per-shard view, not a global snapshot.
+//! Waiters whose client disconnects before the deadline linger until
+//! the deadline fires (the timeout write to the dead socket is simply
+//! discarded) — a bounded, self-cleaning leak.
 
-use super::protocol::{read_request, write_response, Op, Status};
-use std::collections::BTreeMap;
+use super::protocol::{
+    decode_keys, decode_pairs, decode_wait_many, encode_maybe_values, encode_values, read_request,
+    write_response, Op, Status,
+};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// Default shard count when `MW_STORE_SHARDS` is unset.
+const DEFAULT_SHARDS: usize = 8;
+
+fn shard_count_from_env() -> usize {
+    std::env::var("MW_STORE_SHARDS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_SHARDS)
+}
+
+/// FNV-1a; stable across platforms so shard placement is deterministic
+/// for a given key and shard count.
+fn shard_of(key: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
+
+/// Per-connection response writer. Shared by the connection's reader
+/// thread (immediate ops), writer threads fulfilling waits, and the
+/// timer thread — the mutex keeps frames whole; correlation ids make
+/// interleaving safe.
+struct ConnTx {
+    writer: Mutex<TcpStream>,
+}
+
+impl ConnTx {
+    /// Best-effort: a dead client simply stops receiving responses.
+    fn send(&self, id: u64, status: Status, body: &[u8]) {
+        let mut w = self.writer.lock().unwrap();
+        let _ = write_response(&mut *w, id, status, body);
+    }
+}
+
+#[derive(Clone, Copy)]
+enum WaitKind {
+    Single,
+    Many,
+}
+
+/// A parked `WAIT`/`WAIT_MANY`. `remaining` counts unfilled slots; the
+/// thread whose fill drives it to zero answers. `done` guards
+/// exactly-once response between fulfillment and timeout.
+struct Waiter {
+    id: u64,
+    tx: Arc<ConnTx>,
+    kind: WaitKind,
+    remaining: AtomicUsize,
+    slots: Mutex<Vec<Option<Vec<u8>>>>,
+    done: AtomicBool,
+    keys: Vec<String>,
+}
+
+impl Waiter {
+    /// Fill one slot; returns true iff this fill completed the set.
+    fn fill(&self, slot: usize, val: Vec<u8>) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        if slots[slot].is_some() {
+            return false;
+        }
+        slots[slot] = Some(val);
+        drop(slots);
+        self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    fn respond_ready(&self) {
+        if self.done.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let slots = self.slots.lock().unwrap();
+        let body = match self.kind {
+            WaitKind::Single => slots.first().and_then(|s| s.clone()).unwrap_or_default(),
+            WaitKind::Many => {
+                let vals: Vec<Vec<u8>> =
+                    slots.iter().map(|s| s.clone().unwrap_or_default()).collect();
+                encode_values(&vals)
+            }
+        };
+        drop(slots);
+        self.tx.send(self.id, Status::Ok, &body);
+    }
+}
+
 #[derive(Default)]
-struct Shared {
-    map: Mutex<BTreeMap<String, Vec<u8>>>,
-    changed: Condvar,
+struct ShardInner {
+    map: BTreeMap<String, Vec<u8>>,
+    /// Parked waiters per missing key: `(waiter, slot index)`.
+    waiters: HashMap<String, Vec<(Arc<Waiter>, usize)>>,
+}
+
+#[derive(Default)]
+struct Shard {
+    inner: Mutex<ShardInner>,
+}
+
+/// Insert and wake: fills every waiter parked on `key`; waiters whose
+/// set completed are pushed onto `ready` for the caller to answer
+/// *after* the shard lock drops (socket writes never run under it).
+fn insert_notify(inner: &mut ShardInner, key: &str, val: Vec<u8>, ready: &mut Vec<Arc<Waiter>>) {
+    if let Some(ws) = inner.waiters.remove(key) {
+        for (w, slot) in ws {
+            if w.fill(slot, val.clone()) {
+                ready.push(w);
+            }
+        }
+    }
+    inner.map.insert(key.to_string(), val);
+}
+
+/// Deadline heap entry; min-heap by deadline via reversed `Ord`.
+struct TimerEntry {
+    deadline: Instant,
+    waiter: Arc<Waiter>,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.deadline.cmp(&self.deadline)
+    }
+}
+
+#[derive(Default)]
+struct Timer {
+    queue: Mutex<BinaryHeap<TimerEntry>>,
+    wake: Condvar,
+    stop: AtomicBool,
+}
+
+impl Timer {
+    fn push(&self, waiter: Arc<Waiter>, deadline: Instant) {
+        self.queue.lock().unwrap().push(TimerEntry { deadline, waiter });
+        // Always wake: the new entry may front-run the current minimum.
+        self.wake.notify_one();
+    }
+}
+
+/// Timer thread body: sleep exactly until the next deadline (or until a
+/// registration / shutdown wakes us), then expire everything due.
+fn timer_loop(timer: Arc<Timer>, shards: Arc<Vec<Shard>>) {
+    loop {
+        let mut due: Vec<Arc<Waiter>> = Vec::new();
+        {
+            let mut q = timer.queue.lock().unwrap();
+            loop {
+                if timer.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let now = Instant::now();
+                while q.peek().is_some_and(|t| t.deadline <= now) {
+                    due.push(q.pop().unwrap().waiter);
+                }
+                if !due.is_empty() {
+                    break;
+                }
+                match q.peek().map(|t| t.deadline.saturating_duration_since(now)) {
+                    Some(d) => q = timer.wake.wait_timeout(q, d).unwrap().0,
+                    None => q = timer.wake.wait(q).unwrap(),
+                }
+            }
+        }
+        for w in due {
+            expire(&w, &shards);
+        }
+    }
+}
+
+/// Answer `Timeout` (unless already fulfilled) and unregister from
+/// every shard the waiter still parks on.
+fn expire(w: &Arc<Waiter>, shards: &[Shard]) {
+    if w.done.swap(true, Ordering::AcqRel) {
+        return; // fulfilled first; writers already unregistered it
+    }
+    for key in &w.keys {
+        let mut inner = shards[shard_of(key, shards.len())].inner.lock().unwrap();
+        if let Some(ws) = inner.waiters.get_mut(key) {
+            ws.retain(|(other, _)| !Arc::ptr_eq(other, w));
+            if ws.is_empty() {
+                inner.waiters.remove(key);
+            }
+        }
+    }
+    w.tx.send(w.id, Status::Timeout, &[]);
 }
 
 /// A TCPStore server. Dropping it stops the acceptor, closes the port
@@ -21,10 +237,12 @@ struct Shared {
 /// world-leader-death signal).
 pub struct StoreServer {
     addr: SocketAddr,
-    shared: Arc<Shared>,
+    shards: Arc<Vec<Shard>>,
+    timer: Arc<Timer>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<TcpStream>>>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    timer_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl StoreServer {
@@ -36,37 +254,64 @@ impl StoreServer {
     pub fn bind(addr: &str) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        // Poll the listener so drop() can stop the acceptor promptly.
-        listener.set_nonblocking(true)?;
-        let shared = Arc::new(Shared::default());
+        let nshards = shard_count_from_env();
+        let shards: Arc<Vec<Shard>> = Arc::new((0..nshards).map(|_| Shard::default()).collect());
+        let timer = Arc::new(Timer::default());
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
-        let s2 = shared.clone();
-        let stop2 = stop.clone();
-        let conns2 = conns.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("store-accept-{}", addr.port()))
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            if let Ok(dup) = stream.try_clone() {
-                                conns2.lock().unwrap().push(dup);
+
+        let timer_thread = {
+            let timer = timer.clone();
+            let shards = shards.clone();
+            std::thread::Builder::new()
+                .name(format!("store-timer-{}", addr.port()))
+                .spawn(move || timer_loop(timer, shards))?
+        };
+
+        let accept_thread = {
+            let shards = shards.clone();
+            let timer = timer.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name(format!("store-accept-{}", addr.port()))
+                .spawn(move || {
+                    // Blocking accept: drop() wakes us with a throwaway
+                    // connect to our own port (no poll loop).
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                                if let Ok(dup) = stream.try_clone() {
+                                    conns.lock().unwrap().push(dup);
+                                }
+                                let shards = shards.clone();
+                                let timer = timer.clone();
+                                let _ = std::thread::Builder::new()
+                                    .name("store-conn".into())
+                                    .spawn(move || handle_conn(stream, shards, timer));
                             }
-                            let s3 = s2.clone();
-                            let stop3 = stop2.clone();
-                            let _ = std::thread::Builder::new()
-                                .name("store-conn".into())
-                                .spawn(move || handle_conn(stream, s3, stop3));
+                            Err(_) => {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                            }
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
                     }
-                }
-            })?;
-        Ok(StoreServer { addr, shared, stop, conns, accept_thread: Some(accept_thread) })
+                })?
+        };
+
+        Ok(StoreServer {
+            addr,
+            shards,
+            timer,
+            stop,
+            conns,
+            accept_thread: Some(accept_thread),
+            timer_thread: Some(timer_thread),
+        })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -75,7 +320,7 @@ impl StoreServer {
 
     /// Number of keys currently stored (for tests/diagnostics).
     pub fn len(&self) -> usize {
-        self.shared.map.lock().unwrap().len()
+        self.shards.iter().map(|s| s.inner.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -86,8 +331,11 @@ impl StoreServer {
 impl Drop for StoreServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        // Wake any blocked WAITs so their connections notice shutdown.
-        self.shared.changed.notify_all();
+        // Wake the blocking acceptor with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        // Stop the timer thread.
+        self.timer.stop.store(true, Ordering::Relaxed);
+        self.timer.wake.notify_all();
         // Sever established connections: clients must observe the death
         // immediately, exactly as if the hosting process was killed.
         for conn in self.conns.lock().unwrap().drain(..) {
@@ -96,50 +344,122 @@ impl Drop for StoreServer {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        if let Some(t) = self.timer_thread.take() {
+            let _ = t.join();
+        }
     }
 }
 
-fn handle_conn(stream: TcpStream, shared: Arc<Shared>, stop: Arc<AtomicBool>) {
+fn handle_conn(stream: TcpStream, shards: Arc<Vec<Shard>>, timer: Arc<Timer>) {
     let _ = stream.set_nodelay(true);
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
+    let tx = match stream.try_clone() {
+        Ok(w) => Arc::new(ConnTx { writer: Mutex::new(w) }),
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
     loop {
-        let (op, key, val) = match read_request(&mut reader) {
+        let (id, op, key, val) = match read_request(&mut reader) {
             Ok(r) => r,
             Err(_) => return, // client went away
         };
-        let result = apply(&shared, &stop, op, &key, &val);
-        let (status, out) = match result {
-            Ok((s, v)) => (s, v),
-            Err(e) => (Status::Error, e.to_string().into_bytes()),
-        };
-        if write_response(&mut writer, status, &out).is_err() {
-            return;
+        match op {
+            Op::Wait | Op::WaitMany => {
+                if let Err(e) = register_wait(&shards, &timer, &tx, id, op, &key, &val) {
+                    tx.send(id, Status::Error, e.to_string().as_bytes());
+                }
+            }
+            _ => {
+                let mut ready: Vec<Arc<Waiter>> = Vec::new();
+                let (status, out) = match apply(&shards, op, &key, &val, &mut ready) {
+                    Ok((s, v)) => (s, v),
+                    Err(e) => (Status::Error, e.to_string().into_bytes()),
+                };
+                tx.send(id, status, &out);
+                // Shard locks are released: now answer any waits this
+                // write completed.
+                for w in ready {
+                    w.respond_ready();
+                }
+            }
         }
     }
 }
 
-fn apply(
-    shared: &Shared,
-    stop: &AtomicBool,
+/// Park a `WAIT`/`WAIT_MANY`. Keys that already exist fill their slot
+/// immediately (under the shard lock, so there is no check-then-register
+/// window); missing keys register the waiter for notify-on-write.
+fn register_wait(
+    shards: &[Shard],
+    timer: &Timer,
+    tx: &Arc<ConnTx>,
+    id: u64,
     op: Op,
     key: &str,
     val: &[u8],
+) -> anyhow::Result<()> {
+    let (kind, timeout_ms, keys) = match op {
+        Op::Wait => {
+            anyhow::ensure!(val.len() == 8, "WAIT takes u64 timeout ms");
+            let t = u64::from_le_bytes(val.try_into().unwrap());
+            (WaitKind::Single, t, vec![key.to_string()])
+        }
+        Op::WaitMany => {
+            let (t, keys) = decode_wait_many(val)?;
+            (WaitKind::Many, t, keys)
+        }
+        _ => unreachable!("register_wait only handles wait ops"),
+    };
+    let n = keys.len();
+    let waiter = Arc::new(Waiter {
+        id,
+        tx: tx.clone(),
+        kind,
+        remaining: AtomicUsize::new(n),
+        slots: Mutex::new(vec![None; n]),
+        done: AtomicBool::new(false),
+        keys: keys.clone(),
+    });
+    let mut completed_here = n == 0; // empty WAIT_MANY is trivially ready
+    for (slot, k) in keys.iter().enumerate() {
+        let mut inner = shards[shard_of(k, shards.len())].inner.lock().unwrap();
+        if let Some(v) = inner.map.get(k) {
+            let v = v.clone();
+            drop(inner);
+            if waiter.fill(slot, v) {
+                completed_here = true;
+            }
+        } else {
+            inner.waiters.entry(k.clone()).or_default().push((waiter.clone(), slot));
+        }
+    }
+    if completed_here {
+        waiter.respond_ready();
+    } else {
+        // May already be fulfilled by a concurrent writer — the expiry
+        // then finds `done` set and is a no-op.
+        timer.push(waiter, Instant::now() + Duration::from_millis(timeout_ms));
+    }
+    Ok(())
+}
+
+fn apply(
+    shards: &[Shard],
+    op: Op,
+    key: &str,
+    val: &[u8],
+    ready: &mut Vec<Arc<Waiter>>,
 ) -> anyhow::Result<(Status, Vec<u8>)> {
+    let nsh = shards.len();
     match op {
         Op::Ping => Ok((Status::Ok, b"pong".to_vec())),
         Op::Set => {
-            let mut m = shared.map.lock().unwrap();
-            m.insert(key.to_string(), val.to_vec());
-            shared.changed.notify_all();
+            let mut inner = shards[shard_of(key, nsh)].inner.lock().unwrap();
+            insert_notify(&mut inner, key, val.to_vec(), ready);
             Ok((Status::Ok, Vec::new()))
         }
         Op::Get => {
-            let m = shared.map.lock().unwrap();
-            match m.get(key) {
+            let inner = shards[shard_of(key, nsh)].inner.lock().unwrap();
+            match inner.map.get(key) {
                 Some(v) => Ok((Status::Ok, v.clone())),
                 None => Ok((Status::NotFound, Vec::new())),
             }
@@ -147,43 +467,21 @@ fn apply(
         Op::Add => {
             anyhow::ensure!(val.len() == 8, "ADD takes i64");
             let delta = i64::from_le_bytes(val.try_into().unwrap());
-            let mut m = shared.map.lock().unwrap();
-            let cur: i64 = m
+            let mut inner = shards[shard_of(key, nsh)].inner.lock().unwrap();
+            let cur: i64 = inner
+                .map
                 .get(key)
                 .and_then(|v| std::str::from_utf8(v).ok())
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(0);
             let next = cur + delta;
-            m.insert(key.to_string(), next.to_string().into_bytes());
-            shared.changed.notify_all();
-            Ok((Status::Ok, next.to_string().into_bytes()))
-        }
-        Op::Wait => {
-            anyhow::ensure!(val.len() == 8, "WAIT takes u64 timeout ms");
-            let timeout = Duration::from_millis(u64::from_le_bytes(val.try_into().unwrap()));
-            let deadline = Instant::now() + timeout;
-            let mut m = shared.map.lock().unwrap();
-            loop {
-                if let Some(v) = m.get(key) {
-                    return Ok((Status::Ok, v.clone()));
-                }
-                if stop.load(Ordering::Relaxed) {
-                    return Ok((Status::Error, b"server shutting down".to_vec()));
-                }
-                let now = Instant::now();
-                if now >= deadline {
-                    return Ok((Status::Timeout, Vec::new()));
-                }
-                let (guard, _timeout) = shared
-                    .changed
-                    .wait_timeout(m, (deadline - now).min(Duration::from_millis(100)))
-                    .unwrap();
-                m = guard;
-            }
+            let bytes = next.to_string().into_bytes();
+            insert_notify(&mut inner, key, bytes.clone(), ready);
+            Ok((Status::Ok, bytes))
         }
         Op::Delete => {
-            let mut m = shared.map.lock().unwrap();
-            let existed = m.remove(key).is_some();
+            let mut inner = shards[shard_of(key, nsh)].inner.lock().unwrap();
+            let existed = inner.map.remove(key).is_some();
             Ok((
                 if existed { Status::Ok } else { Status::NotFound },
                 Vec::new(),
@@ -196,18 +494,16 @@ fn apply(
             anyhow::ensure!(val.len() >= 4 + old_len, "COMPARE_SET old truncated");
             let old = &val[4..4 + old_len];
             let new = &val[4 + old_len..];
-            let mut m = shared.map.lock().unwrap();
-            let cur = m.get(key).cloned();
+            let mut inner = shards[shard_of(key, nsh)].inner.lock().unwrap();
+            let cur = inner.map.get(key).cloned();
             let out = match cur {
                 None if old.is_empty() => {
-                    m.insert(key.to_string(), new.to_vec());
-                    shared.changed.notify_all();
+                    insert_notify(&mut inner, key, new.to_vec(), ready);
                     new.to_vec()
                 }
                 None => Vec::new(), // missing and expectation non-empty: no-op
                 Some(c) if c == old => {
-                    m.insert(key.to_string(), new.to_vec());
-                    shared.changed.notify_all();
+                    insert_notify(&mut inner, key, new.to_vec(), ready);
                     new.to_vec()
                 }
                 Some(c) => c,
@@ -215,19 +511,53 @@ fn apply(
             Ok((Status::Ok, out))
         }
         Op::Keys => {
-            let m = shared.map.lock().unwrap();
+            let mut all: Vec<String> = Vec::new();
+            for sh in shards {
+                let inner = sh.inner.lock().unwrap();
+                all.extend(inner.map.keys().filter(|k| k.starts_with(key)).cloned());
+            }
+            all.sort();
             let mut out = Vec::new();
-            for k in m.keys() {
-                if k.starts_with(key) {
-                    out.extend_from_slice(&(k.len() as u32).to_le_bytes());
-                    out.extend_from_slice(k.as_bytes());
-                }
+            for k in all {
+                out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+                out.extend_from_slice(k.as_bytes());
             }
             Ok((Status::Ok, out))
         }
         Op::NumKeys => {
-            let m = shared.map.lock().unwrap();
-            Ok((Status::Ok, (m.len() as u64).to_le_bytes().to_vec()))
+            let n: u64 = shards
+                .iter()
+                .map(|s| s.inner.lock().unwrap().map.len() as u64)
+                .sum();
+            Ok((Status::Ok, n.to_le_bytes().to_vec()))
         }
+        Op::MSet => {
+            let pairs = decode_pairs(val)?;
+            let mut by_shard: Vec<Vec<(String, Vec<u8>)>> = (0..nsh).map(|_| Vec::new()).collect();
+            for (k, v) in pairs {
+                by_shard[shard_of(&k, nsh)].push((k, v));
+            }
+            for (i, batch) in by_shard.into_iter().enumerate() {
+                if batch.is_empty() {
+                    continue;
+                }
+                let mut inner = shards[i].inner.lock().unwrap();
+                for (k, v) in batch {
+                    insert_notify(&mut inner, &k, v, ready);
+                }
+            }
+            Ok((Status::Ok, Vec::new()))
+        }
+        Op::MGet => {
+            let keys = decode_keys(val)?;
+            let mut vals: Vec<Option<Vec<u8>>> = Vec::with_capacity(keys.len());
+            for k in &keys {
+                let inner = shards[shard_of(k, nsh)].inner.lock().unwrap();
+                vals.push(inner.map.get(k).cloned());
+            }
+            let refs: Vec<Option<&[u8]>> = vals.iter().map(|v| v.as_deref()).collect();
+            Ok((Status::Ok, encode_maybe_values(&refs)))
+        }
+        Op::Wait | Op::WaitMany => unreachable!("wait ops are handled by register_wait"),
     }
 }

@@ -17,6 +17,66 @@ pub fn free_port() -> u16 {
     l.local_addr().unwrap().port()
 }
 
+/// Blocking accept with a deadline, no poll loop: `SO_RCVTIMEO` on the
+/// listener makes the kernel wake us on connection-or-timeout, so a
+/// rank parked in rendezvous accept burns zero CPU (the 2 ms
+/// sleep-poll this replaced burned a wakeup per tick per rank).
+///
+/// The accepted stream has its inherited receive timeout cleared —
+/// Linux copies the listener's `SO_RCVTIMEO` onto accepted sockets,
+/// which would otherwise poison later blocking reads.
+pub fn accept_deadline(
+    listener: &TcpListener,
+    deadline: std::time::Instant,
+) -> std::io::Result<std::net::TcpStream> {
+    use std::os::unix::io::AsRawFd;
+    listener.set_nonblocking(false)?;
+    loop {
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "accept deadline passed",
+            ));
+        }
+        // Zero means "block forever" to the kernel: clamp up to 1 ms.
+        let left = (deadline - now).max(std::time::Duration::from_millis(1));
+        let tv = libc::timeval {
+            tv_sec: left.as_secs().min(i64::MAX as u64) as libc::time_t,
+            tv_usec: left.subsec_micros() as libc::suseconds_t,
+        };
+        let rc = unsafe {
+            libc::setsockopt(
+                listener.as_raw_fd(),
+                libc::SOL_SOCKET,
+                libc::SO_RCVTIMEO,
+                &tv as *const libc::timeval as *const libc::c_void,
+                std::mem::size_of::<libc::timeval>() as libc::socklen_t,
+            )
+        };
+        if rc != 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_read_timeout(None)?;
+                return Ok(stream);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// Format a byte count with binary units ("4.0 KiB", "3.2 GiB").
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -57,6 +117,21 @@ mod tests {
         assert!(p > 0);
         // Port should be immediately re-bindable.
         TcpListener::bind(("127.0.0.1", p)).unwrap();
+    }
+
+    #[test]
+    fn accept_deadline_times_out_then_accepts() {
+        let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = accept_deadline(&l, t0 + std::time::Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(40));
+        let addr = l.local_addr().unwrap();
+        let dialer = std::thread::spawn(move || std::net::TcpStream::connect(addr).unwrap());
+        let s = accept_deadline(&l, std::time::Instant::now() + std::time::Duration::from_secs(2))
+            .unwrap();
+        assert!(s.read_timeout().unwrap().is_none(), "inherited timeout cleared");
+        dialer.join().unwrap();
     }
 
     #[test]

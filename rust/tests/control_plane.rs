@@ -1,0 +1,144 @@
+//! Control-plane regression tests: world minting must stay O(1) store
+//! round trips per member (the batched-rendezvous property), ranks of
+//! one world must share a single pooled store connection, and watchdog
+//! verdicts must survive fault injection on the store channel itself.
+//!
+//! Every test serializes on `fault::TEST_SERIAL`: the first two read
+//! process-global `store.client.*` counters and the last mutates the
+//! process-global fault registry, so they cannot overlap with each
+//! other (other test binaries are separate processes and don't
+//! interfere).
+
+use multiworld::multiworld::{Watchdog, WatchdogConfig};
+use multiworld::mwccl::transport::fault::{self, STORE_EDGE};
+use multiworld::mwccl::{fault_registry, EdgePattern, FaultKind, FaultRule};
+use multiworld::mwccl::{Rendezvous, WorldOptions};
+use multiworld::store::{StoreClient, StoreServer};
+use multiworld::util::time::Clock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn uniq(name: &str) -> String {
+    static N: AtomicU64 = AtomicU64::new(0);
+    format!("{name}-{}-{}", std::process::id(), N.fetch_add(1, Ordering::Relaxed))
+}
+
+fn store_ops() -> u64 {
+    multiworld::metrics::global().counter("store.client.ops").get()
+}
+
+/// Mint one tcp world of `size` and return the store ops it cost.
+fn ops_to_mint(size: usize) -> u64 {
+    let before = store_ops();
+    let worlds =
+        Rendezvous::single_process(&uniq("cp-o1"), size, WorldOptions::tcp()).unwrap();
+    let delta = store_ops() - before;
+    drop(worlds);
+    delta
+}
+
+#[test]
+fn world_minting_round_trips_are_constant_in_member_count() {
+    let _serial = fault::TEST_SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // Publish(SET) + collect(WAIT_MANY) + barrier add + barrier wait is
+    // 4 ops per member, plus one go-key SET for the whole world. The
+    // pre-batching protocol waited on each peer's address individually,
+    // which made per-member cost grow linearly with world size — that
+    // regression is what this test pins.
+    let per_member_4 = ops_to_mint(4) as f64 / 4.0;
+    let per_member_8 = ops_to_mint(8) as f64 / 8.0;
+    assert!(
+        (per_member_8 - per_member_4).abs() <= 1.0,
+        "per-member store ops must not grow with world size \
+         (size 4: {per_member_4:.2}, size 8: {per_member_8:.2})"
+    );
+    assert!(
+        per_member_8 <= 6.0,
+        "minting a rank should take ~4 store ops, got {per_member_8:.2}"
+    );
+}
+
+#[test]
+fn ranks_of_one_world_share_a_pooled_store_connection() {
+    let _serial = fault::TEST_SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let conns = multiworld::metrics::global().counter("store.client.conns_opened");
+    let before = conns.get();
+    let worlds =
+        Rendezvous::single_process(&uniq("cp-pool"), 4, WorldOptions::tcp()).unwrap();
+    assert_eq!(
+        conns.get() - before,
+        1,
+        "all four ranks talk to one store — the pool must open exactly one socket"
+    );
+    drop(worlds);
+}
+
+/// The FaultLink gap the store pseudo-edge closes: injecting delay and
+/// drop on the watchdog's own channel must not corrupt the verdict —
+/// the silent peer is still convicted, with the right rank attributed.
+#[test]
+fn watchdog_verdict_survives_store_delay_and_drop() {
+    let _serial = fault::TEST_SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault_registry().reset();
+
+    let server = StoreServer::bind_any().unwrap();
+    let store = Arc::new(StoreClient::connect(server.addr(), Duration::from_secs(2)).unwrap());
+    let broken: Arc<Mutex<Vec<(String, Option<usize>)>>> = Arc::new(Mutex::new(Vec::new()));
+    let b2 = broken.clone();
+    let clock = Clock::manual();
+    let wd = Watchdog::start(
+        // Effectively-infinite daemon period: the test drives ticks.
+        WatchdogConfig { heartbeat: Duration::from_millis(3_600_000), miss_threshold: 3 },
+        clock.clone(),
+        Arc::new(move |w: &str, _r: &str, c: Option<usize>| {
+            b2.lock().unwrap().push((w.to_string(), c))
+        }),
+    );
+    let world = uniq("cp-chaos");
+    wd.watch(&world, 0, 2, store.clone());
+    store
+        .set(&format!("mw/{world}/hb/1"), clock.now_millis().to_string().as_bytes())
+        .unwrap();
+    wd.tick(); // fresh stamp — healthy
+    assert!(broken.lock().unwrap().is_empty());
+
+    // Degrade the store channel: the next request is "lost" (drop on a
+    // reliable control channel means an RTO pause + retransmit, not
+    // silent data loss — the watchdog must not misread injected loss as
+    // a dead leader), and every request after that is delayed.
+    let drop_id = fault_registry().inject(
+        FaultRule::always(EdgePattern::new(STORE_EDGE, None, None), FaultKind::Drop)
+            .with_count(1),
+    );
+    let delay_id = fault_registry().inject(FaultRule::always(
+        EdgePattern::new(STORE_EDGE, None, None),
+        FaultKind::Delay { ms: 5 },
+    ));
+
+    // Peer 1 goes silent past the threshold. The conviction tick's own
+    // store traffic (heartbeat publish + peer mget) eats the injected
+    // drop and delay.
+    clock.advance(Duration::from_secs(3 * 3600 + 10));
+    wd.tick();
+    {
+        let broken = broken.lock().unwrap();
+        assert_eq!(broken.len(), 1, "exactly one verdict despite channel chaos");
+        assert_eq!(broken[0].0, world);
+        assert_eq!(broken[0].1, Some(1), "the silent rank is still convicted");
+    }
+    let events = fault_registry().events();
+    assert!(
+        events.iter().any(|e| e.world == "store" && e.kind == "drop"),
+        "the drop must demonstrably have hit the store channel"
+    );
+    assert!(
+        events.iter().any(|e| e.world == "store" && e.kind == "delay"),
+        "the delay must demonstrably have hit the store channel"
+    );
+
+    fault_registry().heal(delay_id);
+    fault_registry().heal(drop_id);
+    wd.shutdown();
+    fault_registry().reset();
+}

@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Control-plane minting-throughput regression gate over
+BENCH_control_plane.json.
+
+Reads the `control_plane` section the scaled `fig5_online_instantiation`
+bench emits — N two-rank worlds minted concurrently through the sharded
+store + batched rendezvous, with worlds/s and the store-op cost per
+world — and checks it two ways:
+
+  * **batching efficacy**: store ops per world must stay O(1) in the
+    member count (publish + collect + barrier ≈ 4 per member + 1, so
+    ~9 for a two-rank world); a jump back toward per-peer wait chains
+    shows up here long before wall-clock does;
+  * **regression vs baseline**: worlds/s is compared against the
+    committed `tools/control_plane_baseline.json`; a measurement more
+    than --tolerance-pct slower than baseline (default 25%) is flagged.
+
+Both checks are *soft* failures, matching check_mttr.py: the script
+prints GitHub Actions `::warning::` annotations and always exits 0 —
+minting throughput on a shared CI box is noisy (thread scheduling,
+ephemeral-port churn), so a hard gate would flake. The warnings make
+every drift visible on the push that caused it.
+
+The artifact's `meta` block (commit / branch / run / knobs) is printed
+for provenance and skipped as data. Re-baseline by copying the measured
+worlds/s from a healthy run into tools/control_plane_baseline.json.
+"""
+
+import argparse
+import json
+import sys
+
+
+def warn(msg: str) -> None:
+    print(f"::warning title=control-plane::{msg}")
+
+
+def load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        warn(f"cannot read {path}: {e}")
+        return None
+
+
+def print_meta(doc: dict) -> None:
+    meta = doc.get("meta")
+    if not isinstance(meta, dict):
+        print("(artifact has no meta block)")
+        return
+    sha = meta.get("sha") or "?"
+    branch = meta.get("branch") or "?"
+    run = meta.get("run_id") or "local"
+    cfg = " ".join(f"{k}={v}" for k, v in sorted(meta.get("config", {}).items()))
+    print(f"provenance: {sha[:12]} ({branch}, run {run}) {cfg}".rstrip())
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact", help="path to BENCH_control_plane.json")
+    ap.add_argument("--baseline", default="tools/control_plane_baseline.json",
+                    help="committed minting baseline (default "
+                         "tools/control_plane_baseline.json)")
+    ap.add_argument("--tolerance-pct", type=float, default=25.0,
+                    help="regression threshold vs baseline, percent "
+                         "(default 25)")
+    args = ap.parse_args()
+
+    doc = load(args.artifact)
+    if doc is None:
+        return 0
+    print_meta(doc)
+    cp = doc.get("control_plane")
+    if not isinstance(cp, dict):
+        warn(f"{args.artifact} has no control_plane section — did the "
+             f"fig5_online_instantiation bench run?")
+        return 0
+
+    warnings = 0
+    worlds = cp.get("worlds") or 0
+    wps = cp.get("worlds_per_s")
+    opw = cp.get("store_ops_per_world")
+    print(f"minted {worlds:.0f} worlds across {cp.get('threads', 0):.0f} "
+          f"threads in {cp.get('secs', 0):.2f} s")
+
+    # ---- batching efficacy: O(1) store ops per world ------------------
+    if opw is None:
+        warnings += 1
+        warn("artifact has no store_ops_per_world — op accounting broken?")
+    elif opw > 12.0:
+        warnings += 1
+        warn(f"store ops per minted world is {opw:.1f} (expected ~9 for a "
+             f"two-rank world) — the batched rendezvous may have "
+             f"regressed toward per-peer round trips")
+    else:
+        print(f"store ops per world: {opw:.1f} ok (batched rendezvous)")
+
+    # ---- regression vs the committed baseline -------------------------
+    base = load(args.baseline)
+    if base is None:
+        warn(f"no baseline at {args.baseline}; skipping regression check")
+    elif wps is None:
+        warnings += 1
+        warn("artifact has no worlds_per_s measurement")
+    else:
+        allowed = base.get("worlds_per_s")
+        if allowed is None:
+            warn(f"{args.baseline} has no worlds_per_s; skipping")
+        else:
+            floor = allowed * (1.0 - args.tolerance_pct / 100.0)
+            if wps < floor:
+                warnings += 1
+                warn(f"minting throughput regressed: {wps:.0f} worlds/s vs "
+                     f"baseline {allowed:.0f} worlds/s "
+                     f"(>{args.tolerance_pct:g}% slower) — if this "
+                     f"reflects a real change, re-baseline "
+                     f"{args.baseline}")
+            else:
+                print(f"worlds/s: {wps:.0f} (baseline {allowed:.0f}, "
+                      f"floor {floor:.0f}) ok")
+
+    print(f"control-plane check: {warnings} warning(s), "
+          f"tolerance {args.tolerance_pct:g}%")
+    # Fail-soft by design: shared CI hardware makes absolute minting
+    # rates noisy; warnings, not failures, gate this signal.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
