@@ -21,13 +21,18 @@
 //!   (run-to-completion) ablation over the identical wire: request and
 //!   token throughput plus client-side TTFT/ITL percentiles per leg,
 //!   and the headline ≥2× throughput gate.
+//! * `multi_tenant` — two tenant classes under weighted-fair admission:
+//!   the steady tenant's solo-baseline latency vs. its latency while a
+//!   low-weight burster floods at ~10× the solo rate, plus the
+//!   burster's shed count — the isolation artifact
+//!   `tools/check_tenant_isolation.py` gates fail-soft in CI.
 //!
 //! Every artifact carries a `meta` provenance block
 //! ([`multiworld::bench::bench_meta`]): commit, branch, CI run, knobs.
 
 use multiworld::bench::scenarios::{
-    autoscale_serve, chaos_serve, recovery_mttr, streaming_serve, tp_pipeline_serve,
-    ArrivalCurve, MttrReport, StreamReport,
+    autoscale_serve, chaos_serve, multi_tenant_serve, recovery_mttr, streaming_serve,
+    tp_pipeline_serve, ArrivalCurve, MttrReport, StreamReport,
 };
 use multiworld::bench::{bench_meta, write_json};
 use multiworld::mwccl::{FaultPlan, WorldOptions};
@@ -155,6 +160,29 @@ fn main() {
         cont.requests_per_s / gang.requests_per_s
     );
 
+    // Multi-tenant isolation: the steady tenant's latency with and
+    // without a co-resident flood. The hard assertions here are only
+    // accounting (the tolerance check is fail-soft in CI, where box
+    // noise is expected).
+    let n_tenant = if quick { 24 } else { 96 };
+    let tenant = multi_tenant_serve(n_tenant, opts(), 59_000 + jitter)
+        .expect("multi_tenant_serve");
+    assert_eq!(
+        tenant.steady_completed, n_tenant,
+        "the steady tenant must never lose a request to the flood"
+    );
+    assert!(tenant.burst_shed > 0, "the flood must overflow the burster's own bound");
+    println!(
+        "multi_tenant: steady p99 {:.2} ms (solo {:.2} ms), steady {:.1} req/s, \
+         burst {} submitted / {} completed / {} shed",
+        tenant.steady_p99_ms,
+        tenant.solo_p99_ms,
+        tenant.steady_rps,
+        tenant.burst_submitted,
+        tenant.burst_completed,
+        tenant.burst_shed
+    );
+
     write_json(
         "BENCH_serving",
         &Json::obj(vec![
@@ -209,6 +237,22 @@ fn main() {
                     ),
                     ("continuous", stream_json(&cont)),
                     ("gang", stream_json(&gang)),
+                ]),
+            ),
+            (
+                "multi_tenant",
+                Json::obj(vec![
+                    ("steady_requests", Json::num(n_tenant as f64)),
+                    ("solo_p50_ms", Json::num(tenant.solo_p50_ms)),
+                    ("solo_p99_ms", Json::num(tenant.solo_p99_ms)),
+                    ("solo_rps", Json::num(tenant.solo_rps)),
+                    ("steady_p50_ms", Json::num(tenant.steady_p50_ms)),
+                    ("steady_p99_ms", Json::num(tenant.steady_p99_ms)),
+                    ("steady_rps", Json::num(tenant.steady_rps)),
+                    ("steady_shed", Json::num(tenant.steady_shed as f64)),
+                    ("burst_submitted", Json::num(tenant.burst_submitted as f64)),
+                    ("burst_completed", Json::num(tenant.burst_completed as f64)),
+                    ("burst_shed", Json::num(tenant.burst_shed as f64)),
                 ]),
             ),
         ]),

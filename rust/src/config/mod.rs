@@ -498,6 +498,92 @@ impl ModelManifest {
     }
 }
 
+/// One tenant's SLO class and admission share, parsed from the
+/// `MW_TENANTS` grammar:
+///
+/// ```text
+/// MW_TENANTS='gold:weight=4,slo_ms=50;free:weight=1,slo_ms=500'
+/// ```
+///
+/// Entries are `;`-separated; each is `name[:key=val[,key=val]*]` with
+/// keys `weight` (deficit-round-robin admission share, default 1),
+/// `slo_ms` / `slo_ttft_ms` / `slo_itl_ms` (per-tenant SLO deadlines;
+/// 0 inherits the global `MW_SLO_*` value) and `depth` (per-tenant
+/// admission-queue bound; 0 inherits `MW_ADMISSION_DEPTH`). An empty
+/// tenant table (`MW_TENANTS` unset) keeps the single-tenant runtime
+/// byte-identical: one FIFO queue, global SLOs, unlabelled metrics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Weighted-fair admission share (DRR quantum). Clamped to ≥ 1.
+    pub weight: u32,
+    /// Per-tenant request SLO (ms); 0 = inherit the global `slo_ms`.
+    pub slo_ms: u64,
+    /// Per-tenant TTFT SLO (ms); 0 = inherit the global `slo_ttft_ms`.
+    pub slo_ttft_ms: u64,
+    /// Per-tenant inter-token SLO (ms); 0 = inherit `slo_itl_ms`.
+    pub slo_itl_ms: u64,
+    /// Per-tenant admission-queue bound; 0 = inherit `admission_depth`.
+    /// A tenant at its bound sheds *its own* traffic — other tenants'
+    /// sub-queues are unaffected.
+    pub depth: usize,
+}
+
+impl TenantSpec {
+    /// A tenant with the default share (weight 1) and inherited SLOs.
+    pub fn named(name: &str) -> Self {
+        TenantSpec {
+            name: name.to_string(),
+            weight: 1,
+            slo_ms: 0,
+            slo_ttft_ms: 0,
+            slo_itl_ms: 0,
+            depth: 0,
+        }
+    }
+}
+
+/// Parse the `MW_TENANTS` grammar (see [`TenantSpec`]). Errors on an
+/// empty tenant name, a duplicate name, an unknown key, or an
+/// unparsable value — `from_env` logs and ignores a bad table rather
+/// than guessing at a partial one.
+pub fn parse_tenants(spec: &str) -> Result<Vec<TenantSpec>, String> {
+    let mut out: Vec<TenantSpec> = Vec::new();
+    for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, kvs) = match entry.split_once(':') {
+            Some((n, rest)) => (n.trim(), rest),
+            None => (entry, ""),
+        };
+        if name.is_empty() {
+            return Err(format!("empty tenant name in {entry:?}"));
+        }
+        if out.iter().any(|t| t.name == name) {
+            return Err(format!("duplicate tenant {name:?}"));
+        }
+        let mut t = TenantSpec::named(name);
+        for kv in kvs.split(',').map(str::trim).filter(|kv| !kv.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("tenant {name:?}: expected key=val, got {kv:?}"))?;
+            let parse = |v: &str| -> Result<u64, String> {
+                v.trim()
+                    .parse()
+                    .map_err(|_| format!("tenant {name:?}: bad value {v:?} for {k:?}"))
+            };
+            match k.trim() {
+                "weight" => t.weight = (parse(v)? as u32).max(1),
+                "slo_ms" => t.slo_ms = parse(v)?,
+                "slo_ttft_ms" => t.slo_ttft_ms = parse(v)?,
+                "slo_itl_ms" => t.slo_itl_ms = parse(v)?,
+                "depth" => t.depth = parse(v)? as usize,
+                other => return Err(format!("tenant {name:?}: unknown key {other:?}")),
+            }
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
 /// Serving/runtime knobs with environment overrides, shared by examples
 /// and benches.
 #[derive(Clone, Debug)]
@@ -565,6 +651,11 @@ pub struct ServingConfig {
     /// reloading them. On by default; recovery still works with it off,
     /// it just pays the full load on every spawn.
     pub weight_cache: bool,
+    /// Per-tenant SLO classes and admission shares (`MW_TENANTS`).
+    /// Empty (the default) keeps the single-tenant runtime — one FIFO
+    /// admission queue, global SLOs, and exactly the pre-tenancy metric
+    /// names.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for ServingConfig {
@@ -590,6 +681,7 @@ impl Default for ServingConfig {
             autoscale_cooldown_ms: 2_000,
             spares: 0,
             weight_cache: true,
+            tenants: Vec::new(),
         }
     }
 }
@@ -646,6 +738,17 @@ impl ServingConfig {
         }
         if let Some(v) = get("MW_WEIGHT_CACHE") {
             c.weight_cache = v != "0";
+        }
+        if let Some(v) = get("MW_TENANTS") {
+            match parse_tenants(&v) {
+                Ok(t) => c.tenants = t,
+                // A bad table is ignored wholesale (single-tenant
+                // fallback) rather than half-applied.
+                Err(e) => crate::metrics::log_event(
+                    "config.tenants_invalid",
+                    &[("error", e.as_str())],
+                ),
+            }
         }
         c
     }
@@ -713,6 +816,48 @@ mod tests {
         assert_eq!(c.slo_ttft_ms, 0);
         assert_eq!(c.slo_itl_ms, 0);
         assert!(!c.decode_gang);
+    }
+
+    #[test]
+    fn tenants_parse_full_grammar() {
+        let t = parse_tenants("gold:weight=4,slo_ms=50;free:weight=1,slo_ms=500").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].name, "gold");
+        assert_eq!(t[0].weight, 4);
+        assert_eq!(t[0].slo_ms, 50);
+        assert_eq!(t[1].name, "free");
+        assert_eq!(t[1].weight, 1);
+        assert_eq!(t[1].slo_ms, 500);
+        // Unset keys inherit (0 = global fallback at the consumer).
+        assert_eq!(t[0].slo_ttft_ms, 0);
+        assert_eq!(t[0].depth, 0);
+        let t = parse_tenants(
+            "a:weight=2,slo_ms=10,slo_ttft_ms=5,slo_itl_ms=3,depth=64; b ;",
+        )
+        .unwrap();
+        assert_eq!(t[0].slo_ttft_ms, 5);
+        assert_eq!(t[0].slo_itl_ms, 3);
+        assert_eq!(t[0].depth, 64);
+        assert_eq!(t[1], TenantSpec::named("b"), "bare name = default class");
+        // Weight 0 would starve the tenant forever: clamp to 1.
+        assert_eq!(parse_tenants("z:weight=0").unwrap()[0].weight, 1);
+    }
+
+    #[test]
+    fn tenants_parse_rejects_malformed() {
+        assert!(parse_tenants(":weight=1").is_err(), "empty name");
+        assert!(parse_tenants("a;a").is_err(), "duplicate name");
+        assert!(parse_tenants("a:rate=9").is_err(), "unknown key");
+        assert!(parse_tenants("a:weight=fast").is_err(), "bad number");
+        assert!(parse_tenants("a:weight").is_err(), "missing =val");
+        assert_eq!(parse_tenants("").unwrap(), vec![], "empty spec = single-tenant");
+    }
+
+    #[test]
+    fn serving_config_defaults_single_tenant() {
+        // The tenant table is strictly opt-in: the default config (and
+        // any config without MW_TENANTS) is the single-tenant runtime.
+        assert!(ServingConfig::default().tenants.is_empty());
     }
 
     #[test]

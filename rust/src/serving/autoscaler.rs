@@ -42,6 +42,18 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// One tenant's load sample: admission depth across both batchers, the
+/// recent p99 over that tenant's own completion window, and the
+/// tenant's resolved request SLO (0 when the tenant has no latency
+/// target, in which case it never participates in breach attribution).
+#[derive(Clone, Debug, Default)]
+pub struct TenantSignal {
+    pub tenant: String,
+    pub depth: usize,
+    pub p99_ms: f64,
+    pub slo_ms: f64,
+}
+
 /// Live load signals the autoscaler samples, plus the drain hooks it
 /// needs for graceful scale-in. Implemented by the serving
 /// [`Leader`](super::leader::Leader); test fixtures fake it.
@@ -63,6 +75,13 @@ pub trait LoadSignals: Send + Sync {
     /// streaming traffic). Observability signal, not a trigger.
     fn tokens_per_s(&self) -> f64 {
         0.0
+    }
+    /// Per-tenant depth/p99/SLO samples. Empty when the deployment has
+    /// no tenant table (`MW_TENANTS` unset) — the per-tenant gauges and
+    /// breach attribution are then skipped entirely, keeping the
+    /// single-tenant metric surface unchanged.
+    fn tenant_signals(&self) -> Vec<TenantSignal> {
+        Vec::new()
     }
     /// Stop routing new batches to these in-edges (drain start).
     fn quiesce_edges(&self, edges: &[String]);
@@ -91,6 +110,9 @@ impl LoadSignals for super::leader::Leader {
     }
     fn tokens_per_s(&self) -> f64 {
         Self::tokens_per_s(self)
+    }
+    fn tenant_signals(&self) -> Vec<TenantSignal> {
+        Self::tenant_signals(self)
     }
     fn quiesce_edges(&self, edges: &[String]) {
         Self::quiesce_edges(self, edges)
@@ -265,8 +287,28 @@ impl Autoscaler {
         g.gauge("serving.recent_p99_ms").set(p99 as i64);
         g.gauge("serving.recent_ttft_p99_ms").set(ttft as i64);
         g.gauge("serving.tokens_per_s").set(self.signals.tokens_per_s() as i64);
+        // Per-tenant sampling: publish each tenant's depth and p99, and
+        // attribute any SLO breach to the tenant furthest over its own
+        // target (largest p99/SLO ratio). A tenant-level breach counts
+        // as a hot sample even when the aggregate p99 looks healthy — a
+        // gold tenant drowning behind free-tier traffic is exactly the
+        // signal the aggregate hides.
+        let mut breach_tenant: Option<(String, f64)> = None;
+        for ts in self.signals.tenant_signals() {
+            g.gauge(&format!("serving.autoscale.tenant_depth.{}", ts.tenant))
+                .set(ts.depth as i64);
+            g.gauge(&format!("serving.recent_p99_ms.tenant.{}", ts.tenant))
+                .set(ts.p99_ms as i64);
+            if ts.slo_ms > 0.0 && ts.p99_ms > ts.slo_ms {
+                let ratio = ts.p99_ms / ts.slo_ms;
+                if breach_tenant.as_ref().map_or(true, |(_, worst)| ratio > *worst) {
+                    breach_tenant = Some((ts.tenant, ratio));
+                }
+            }
+        }
         let slo_hot = (self.policy.slo_p99_ms > 0.0 && p99 > self.policy.slo_p99_ms)
-            || (self.policy.slo_ttft_ms > 0.0 && ttft > self.policy.slo_ttft_ms);
+            || (self.policy.slo_ttft_ms > 0.0 && ttft > self.policy.slo_ttft_ms)
+            || breach_tenant.is_some();
         let hot = depth >= self.policy.high_depth || slo_hot;
         let idle = self.signals.queue_depth() == 0
             && self.signals.outstanding_batches() == 0
@@ -291,7 +333,7 @@ impl Autoscaler {
             // by (`MW_SPARES`), scale-out is promote-then-backfill —
             // near-free — so pool headroom overrides the cooldown.
             if cooled || self.controller.spare_headroom() > 0 {
-                return self.try_scale_out(depth, p99, slo_hot);
+                return self.try_scale_out(depth, p99, slo_hot, breach_tenant);
             }
             return None;
         }
@@ -306,21 +348,38 @@ impl Autoscaler {
 
     /// Drive `Controller::maybe_scale_out` with the measured signal. An
     /// SLO breach overrides a shallow queue: the latency target *is*
-    /// the demand signal then, so the depth check is forced open.
-    fn try_scale_out(&mut self, depth: f64, p99: f64, slo_hot: bool) -> Option<Action> {
+    /// the demand signal then, so the depth check is forced open. When
+    /// a per-tenant breach drove the decision, `breach_tenant` names
+    /// the worst offender so the action log and the
+    /// `serving.autoscale.tenant_breach.<tenant>` counter attribute the
+    /// scale-out instead of blaming "the workload".
+    fn try_scale_out(
+        &mut self,
+        depth: f64,
+        p99: f64,
+        slo_hot: bool,
+        breach_tenant: Option<(String, f64)>,
+    ) -> Option<Action> {
         let signal = if slo_hot { f64::INFINITY } else { depth };
         match self.controller.maybe_scale_out(self.policy.stage, signal) {
             Ok(Some(action)) => {
-                crate::metrics::global().counter("serving.autoscale.out").inc();
-                crate::metrics::log_event(
-                    "autoscale.out",
-                    &[
-                        ("stage", self.policy.stage.to_string().as_str()),
-                        ("depth_per_replica", format!("{depth:.1}").as_str()),
-                        ("p99_ms", format!("{p99:.1}").as_str()),
-                        ("trigger", if slo_hot { "slo" } else { "depth" }),
-                    ],
-                );
+                let g = crate::metrics::global();
+                g.counter("serving.autoscale.out").inc();
+                let stage = self.policy.stage.to_string();
+                let depth_s = format!("{depth:.1}");
+                let p99_s = format!("{p99:.1}");
+                let trigger = if slo_hot { "slo" } else { "depth" };
+                let mut fields: Vec<(&str, &str)> = vec![
+                    ("stage", stage.as_str()),
+                    ("depth_per_replica", depth_s.as_str()),
+                    ("p99_ms", p99_s.as_str()),
+                    ("trigger", trigger),
+                ];
+                if let Some((tenant, _ratio)) = &breach_tenant {
+                    g.counter(&format!("serving.autoscale.tenant_breach.{tenant}")).inc();
+                    fields.push(("tenant", tenant.as_str()));
+                }
+                crate::metrics::log_event("autoscale.out", &fields);
                 self.last_action = Some(Instant::now());
                 self.breach_streak = 0;
                 Some(action)
@@ -462,6 +521,7 @@ mod tests {
         outstanding: AtomicUsize,
         p99: Mutex<f64>,
         ttft: Mutex<f64>,
+        tenants: Mutex<Vec<TenantSignal>>,
         quiesced: Mutex<Vec<String>>,
         restored: Mutex<Vec<String>>,
         released: Mutex<Vec<String>>,
@@ -482,6 +542,9 @@ mod tests {
         }
         fn recent_ttft_p99_ms(&self) -> f64 {
             *self.ttft.lock().unwrap()
+        }
+        fn tenant_signals(&self) -> Vec<TenantSignal> {
+            self.tenants.lock().unwrap().clone()
         }
         fn quiesce_edges(&self, edges: &[String]) {
             self.quiesced.lock().unwrap().extend(edges.iter().cloned());
@@ -582,6 +645,37 @@ mod tests {
         let action = a.tick().expect("TTFT breach forces the depth check open");
         assert!(matches!(action, Action::ScaledOut { stage: 0, .. }));
         assert_eq!(c.topology().replicas[0], 2);
+    }
+
+    #[test]
+    fn tenant_slo_breach_scales_out_and_names_the_tenant() {
+        // Aggregate p99 healthy, queue shallow — but one tenant is 2.4×
+        // over its own SLO. That alone must count as a hot sample, and
+        // the attribution must blame the tenant furthest over target
+        // (gold at 120/50 = 2.4×, not free at 600/500 = 1.2×).
+        let (mut a, c, s) = setup(
+            &[1],
+            AutoscalePolicy { high_samples: 2, ..hot_policy() },
+            ScalingPolicy { scale_up_depth: 1e9, max_replicas: 2, recover: false },
+        );
+        s.depth.store(1, Ordering::Relaxed);
+        *s.p99.lock().unwrap() = 1.0;
+        *s.tenants.lock().unwrap() = vec![
+            TenantSignal { tenant: "free".into(), depth: 7, p99_ms: 600.0, slo_ms: 500.0 },
+            TenantSignal { tenant: "gold".into(), depth: 2, p99_ms: 120.0, slo_ms: 50.0 },
+        ];
+        assert!(a.tick().is_none(), "hysteresis holds on the 1st tenant breach");
+        let action = a.tick().expect("tenant-level breach forces scale-out");
+        assert!(matches!(action, Action::ScaledOut { stage: 0, .. }));
+        assert_eq!(c.topology().replicas[0], 2);
+        let g = crate::metrics::global();
+        assert!(
+            g.counter("serving.autoscale.tenant_breach.gold").get() >= 1,
+            "breach attributed to the worst-ratio tenant"
+        );
+        assert_eq!(g.counter("serving.autoscale.tenant_breach.free").get(), 0);
+        assert_eq!(g.gauge("serving.autoscale.tenant_depth.gold").get(), 2);
+        assert_eq!(g.gauge("serving.recent_p99_ms.tenant.free").get(), 600);
     }
 
     #[test]

@@ -15,29 +15,83 @@
 //!   a wasted forward pass), handing each to the drop hook so the
 //!   runtime can resolve its handle.
 //!
+//! Multi-tenant admission ([`with_tenants`]): each configured
+//! [`TenantClass`] gets its own sub-queue, drained by deficit
+//! round-robin — every visit grants a tenant `weight` dispatch credits,
+//! so under backlog tenants drain in weight ratio (4:1 weights → 4:1
+//! slots) while each tenant's own traffic stays FIFO. Depth bounds are
+//! *per tenant* (a class's `depth`, inheriting the global `capacity`
+//! when 0), so a bursting tenant sheds its own traffic first and never
+//! consumes another tenant's admission budget. Requests tagged with an
+//! unknown tenant fold into the implicit `default` class. With no
+//! tenant table the batcher degenerates to the exact single-FIFO
+//! behavior above — same order, same bounds, same metric names.
+//!
 //! Observability: queue depth and its high-water mark ride the global
 //! registry (`serving.queue.depth` gauge, `serving.queue.high_water`
 //! gauge, `serving.batcher.expired` counter) — the signals the
-//! autoscaler samples.
+//! autoscaler samples. Tenant-aware batchers additionally publish
+//! `serving.queue.depth.tenant.<name>` per class. Gauges are published
+//! *while the queue lock is held* so concurrent pushes can never
+//! publish depths out of order and pin the gauge stale-low.
 //!
 //! [`try_push`]: DynamicBatcher::try_push
 //! [`push_wait`]: DynamicBatcher::push_wait
 //! [`next_batch`]: DynamicBatcher::next_batch
+//! [`with_tenants`]: DynamicBatcher::with_tenants
 
-use super::request::Request;
+use super::request::{DropReason, Request, TenantId, DEFAULT_TENANT};
 use crate::metrics::{Counter, Gauge};
 use crate::util::time::since_epoch;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Called with each request dropped in the queue (SLO expiry, purge on
-/// close) so its handle can be resolved.
-pub type DropHook = Box<dyn Fn(Request) + Send + Sync>;
+/// close, push into a closed queue) so its handle can be resolved with
+/// the given reason.
+pub type DropHook = Box<dyn Fn(Request, DropReason) + Send + Sync>;
+
+/// One tenant's admission class: DRR weight and queue-depth bound.
+#[derive(Clone, Debug)]
+pub struct TenantClass {
+    pub name: String,
+    /// DRR quantum: dispatch slots granted per rotation visit (≥ 1).
+    pub weight: u32,
+    /// Per-tenant admission bound; 0 inherits the batcher's global
+    /// `capacity`.
+    pub depth: usize,
+}
+
+impl TenantClass {
+    pub fn new(name: &str, weight: u32, depth: usize) -> Self {
+        TenantClass { name: name.to_string(), weight, depth }
+    }
+}
+
+/// Resolved per-class state (weights, bounds, pre-resolved gauge).
+struct ClassCfg {
+    weight: u64,
+    depth: usize,
+    gauge: Arc<Gauge>,
+}
+
+struct SubQueue {
+    items: VecDeque<Request>,
+    /// Unspent DRR credits. Non-zero only when a drain stopped mid-visit
+    /// because the output filled; the next drain resumes here.
+    deficit: u64,
+}
 
 struct Queue {
-    items: VecDeque<Request>,
+    /// Per-tenant sub-queues. Invariant: a tenant is present iff its
+    /// sub-queue is non-empty, and `rotation` lists exactly those
+    /// tenants in DRR visit order.
+    subs: BTreeMap<TenantId, SubQueue>,
+    rotation: VecDeque<TenantId>,
+    /// Total queued requests across all sub-queues.
+    total: usize,
     closed: bool,
 }
 
@@ -48,8 +102,15 @@ pub struct DynamicBatcher {
     cv: Condvar,
     pub max_batch: usize,
     pub timeout: Duration,
-    /// Admission bound (0 = unbounded).
+    /// Global admission bound (0 = unbounded). Tenant-aware batchers
+    /// bound admission per class instead; a class with `depth == 0`
+    /// inherits this value.
     pub capacity: usize,
+    /// Tenant classes (empty = single-tenant FIFO).
+    classes: BTreeMap<TenantId, ClassCfg>,
+    /// Any admission bound at all (drains must wake blocked producers).
+    bounded: bool,
+    default_tenant: TenantId,
     high_water: AtomicUsize,
     drop_hook: Mutex<Option<DropHook>>,
     /// Pre-resolved global metrics (the push/drain paths are hot).
@@ -66,14 +127,56 @@ impl DynamicBatcher {
     /// Batcher with a bounded admission queue (`capacity` requests;
     /// 0 = unbounded).
     pub fn with_capacity(max_batch: usize, timeout: Duration, capacity: usize) -> Arc<Self> {
+        Self::with_tenants(max_batch, timeout, capacity, &[])
+    }
+
+    /// Tenant-aware batcher: weighted-fair admission across `classes`
+    /// (empty = the single-tenant batcher of
+    /// [`with_capacity`](Self::with_capacity)). An implicit `default`
+    /// class (weight 1, depth inherited) is added when absent so
+    /// untagged and unknown tenants stay schedulable.
+    pub fn with_tenants(
+        max_batch: usize,
+        timeout: Duration,
+        capacity: usize,
+        classes: &[TenantClass],
+    ) -> Arc<Self> {
         assert!(max_batch >= 1);
         let g = crate::metrics::global();
+        let default_tenant = TenantId::default();
+        let mut map = BTreeMap::new();
+        if !classes.is_empty() {
+            for c in classes {
+                map.insert(
+                    TenantId::new(&c.name),
+                    ClassCfg {
+                        weight: u64::from(c.weight.max(1)),
+                        depth: c.depth,
+                        gauge: g.gauge(&format!("serving.queue.depth.tenant.{}", c.name)),
+                    },
+                );
+            }
+            map.entry(default_tenant.clone()).or_insert_with(|| ClassCfg {
+                weight: 1,
+                depth: 0,
+                gauge: g.gauge(&format!("serving.queue.depth.tenant.{DEFAULT_TENANT}")),
+            });
+        }
+        let bounded = capacity > 0 || map.values().any(|c| c.depth > 0);
         Arc::new(DynamicBatcher {
-            q: Mutex::new(Queue { items: VecDeque::new(), closed: false }),
+            q: Mutex::new(Queue {
+                subs: BTreeMap::new(),
+                rotation: VecDeque::new(),
+                total: 0,
+                closed: false,
+            }),
             cv: Condvar::new(),
             max_batch,
             timeout,
             capacity,
+            classes: map,
+            bounded,
+            default_tenant,
             high_water: AtomicUsize::new(0),
             drop_hook: Mutex::new(None),
             depth_gauge: g.gauge("serving.queue.depth"),
@@ -88,8 +191,58 @@ impl DynamicBatcher {
         *self.drop_hook.lock().unwrap() = Some(hook);
     }
 
-    fn note_depth(&self, depth: usize) {
+    /// Whether this batcher runs weighted-fair multi-tenant admission.
+    pub fn tenant_aware(&self) -> bool {
+        !self.classes.is_empty()
+    }
+
+    /// The admission class a request's tenant lands in: itself when
+    /// configured, otherwise the implicit default (which is also the
+    /// single class of a non-tenant-aware batcher).
+    fn class_of(&self, t: &TenantId) -> TenantId {
+        if self.classes.contains_key(t) {
+            t.clone()
+        } else {
+            self.default_tenant.clone()
+        }
+    }
+
+    /// Admission check for one class. Tenant-aware batchers bound each
+    /// sub-queue independently so a burster sheds its own traffic
+    /// first; the legacy batcher bounds the whole queue.
+    fn full_locked(&self, q: &Queue, class: &TenantId) -> bool {
+        match self.classes.get(class) {
+            Some(c) => {
+                let limit = if c.depth > 0 { c.depth } else { self.capacity };
+                limit > 0 && q.subs.get(class).map_or(0, |s| s.items.len()) >= limit
+            }
+            None => self.capacity > 0 && q.total >= self.capacity,
+        }
+    }
+
+    fn enqueue_locked(&self, q: &mut Queue, r: Request) {
+        let t = self.class_of(&r.tenant);
+        let sub = q
+            .subs
+            .entry(t.clone())
+            .or_insert_with(|| SubQueue { items: VecDeque::new(), deficit: 0 });
+        if sub.items.is_empty() {
+            q.rotation.push_back(t);
+        }
+        sub.items.push_back(r);
+        q.total += 1;
+    }
+
+    /// Publish depth gauges from a coherent snapshot. MUST be called
+    /// with the queue lock held: publishing after the lock drops lets
+    /// two racing pushes publish out of order and pin the gauge
+    /// stale-low — the autoscaler's primary signal.
+    fn note_depth_locked(&self, q: &Queue) {
+        let depth = q.total;
         self.depth_gauge.set(depth as i64);
+        for (t, c) in &self.classes {
+            c.gauge.set(q.subs.get(t).map_or(0, |s| s.items.len()) as i64);
+        }
         let mut hw = self.high_water.load(Ordering::Relaxed);
         while depth > hw {
             match self.high_water.compare_exchange_weak(
@@ -107,30 +260,41 @@ impl DynamicBatcher {
         }
     }
 
-    fn run_drop_hook(&self, dropped: Vec<Request>) {
+    fn run_drop_hook(&self, dropped: Vec<Request>, reason: DropReason) {
         if dropped.is_empty() {
             return;
         }
-        self.expired_counter.add(dropped.len() as u64);
+        if reason == DropReason::Deadline {
+            self.expired_counter.add(dropped.len() as u64);
+        }
         let hook = self.drop_hook.lock().unwrap();
         if let Some(h) = hook.as_ref() {
             for r in dropped {
-                h(r);
+                h(r, reason);
             }
         }
     }
 
     /// Enqueue a request unconditionally — bypasses the capacity bound
-    /// and the closed flag (legacy/test path; a request pushed after
-    /// `close` may never be drained). Production ingress goes through
-    /// [`try_push`](Self::try_push) / [`push_wait`](Self::push_wait).
-    /// Returns current queue depth (the controller's scaling signal).
+    /// (legacy/test path). A request pushed after `close` is handed to
+    /// the drop hook as [`DropReason::Shutdown`] instead of being
+    /// enqueued into a queue nobody will ever drain, so every submitted
+    /// id still resolves to exactly one outcome. Production ingress
+    /// goes through [`try_push`](Self::try_push) /
+    /// [`push_wait`](Self::push_wait). Returns current queue depth (the
+    /// controller's scaling signal).
     pub fn push(&self, r: Request) -> usize {
         let mut q = self.q.lock().unwrap();
-        q.items.push_back(r);
-        let depth = q.items.len();
+        if q.closed {
+            let depth = q.total;
+            drop(q);
+            self.run_drop_hook(vec![r], DropReason::Shutdown);
+            return depth;
+        }
+        self.enqueue_locked(&mut q, r);
+        self.note_depth_locked(&q);
+        let depth = q.total;
         drop(q);
-        self.note_depth(depth);
         self.cv.notify_all();
         depth
     }
@@ -140,13 +304,14 @@ impl DynamicBatcher {
     /// `Ok` carries the queue depth after the push.
     pub fn try_push(&self, r: Request) -> Result<usize, Request> {
         let mut q = self.q.lock().unwrap();
-        if q.closed || (self.capacity > 0 && q.items.len() >= self.capacity) {
+        let class = self.class_of(&r.tenant);
+        if q.closed || self.full_locked(&q, &class) {
             return Err(r);
         }
-        q.items.push_back(r);
-        let depth = q.items.len();
+        self.enqueue_locked(&mut q, r);
+        self.note_depth_locked(&q);
+        let depth = q.total;
         drop(q);
-        self.note_depth(depth);
         self.cv.notify_all();
         Ok(depth)
     }
@@ -156,23 +321,34 @@ impl DynamicBatcher {
     /// closed while waiting.
     pub fn push_wait(&self, r: Request) -> Result<usize, Request> {
         let mut q = self.q.lock().unwrap();
-        while !q.closed && self.capacity > 0 && q.items.len() >= self.capacity {
+        let class = self.class_of(&r.tenant);
+        while !q.closed && self.full_locked(&q, &class) {
             q = self.cv.wait(q).unwrap();
         }
         if q.closed {
             return Err(r);
         }
-        q.items.push_back(r);
-        let depth = q.items.len();
+        self.enqueue_locked(&mut q, r);
+        self.note_depth_locked(&q);
+        let depth = q.total;
         drop(q);
-        self.note_depth(depth);
         self.cv.notify_all();
         Ok(depth)
     }
 
-    /// Queue depth right now.
+    /// Queue depth right now (all tenants).
     pub fn depth(&self) -> usize {
-        self.q.lock().unwrap().items.len()
+        self.q.lock().unwrap().total
+    }
+
+    /// Per-tenant queue depths for every configured class (empty on a
+    /// single-tenant batcher) — the autoscaler's per-tenant signal.
+    pub fn tenant_depths(&self) -> Vec<(TenantId, usize)> {
+        let q = self.q.lock().unwrap();
+        self.classes
+            .keys()
+            .map(|t| (t.clone(), q.subs.get(t).map_or(0, |s| s.items.len())))
+            .collect()
     }
 
     /// Highest queue depth ever observed (surfaced as the
@@ -195,21 +371,79 @@ impl DynamicBatcher {
     pub fn purge(&self, ids: &[u64]) -> Vec<Request> {
         let mut q = self.q.lock().unwrap();
         let mut purged = Vec::new();
-        q.items.retain(|r| {
-            if ids.contains(&r.id) {
-                purged.push(r.clone());
-                false
-            } else {
-                true
-            }
-        });
-        let depth = q.items.len();
-        drop(q);
+        let qm = &mut *q;
+        for sub in qm.subs.values_mut() {
+            sub.items.retain(|r| {
+                if ids.contains(&r.id) {
+                    purged.push(r.clone());
+                    false
+                } else {
+                    true
+                }
+            });
+        }
         if !purged.is_empty() {
-            self.note_depth(depth);
+            qm.total -= purged.len();
+            qm.subs.retain(|_, s| !s.items.is_empty());
+            let subs = &qm.subs;
+            qm.rotation.retain(|t| subs.contains_key(t));
+            self.note_depth_locked(&q);
+            drop(q);
             self.cv.notify_all();
         }
         purged
+    }
+
+    /// Deficit-round-robin drain of up to `max` live requests. Each
+    /// rotation visit grants the head tenant `weight` credits; live
+    /// requests cost one credit, expired requests are shed for free
+    /// (collected into the returned expiry list, never consuming a
+    /// dispatch slot). A tenant whose credits run out rotates to the
+    /// back; a tenant emptied mid-visit leaves the rotation; when the
+    /// output fills mid-visit the tenant keeps its unspent credits and
+    /// stays at the head so the next drain resumes exactly where this
+    /// one stopped. With a single class this is exact FIFO.
+    fn drain_locked(&self, q: &mut Queue, max: usize, now: f64) -> (Vec<Request>, Vec<Request>) {
+        let mut out = Vec::new();
+        let mut expired = Vec::new();
+        let Queue { subs, rotation, total, .. } = q;
+        'rounds: while out.len() < max && *total > 0 {
+            let t = rotation
+                .front()
+                .expect("rotation tracks non-empty sub-queues")
+                .clone();
+            let quantum = self.classes.get(&t).map_or(1, |c| c.weight);
+            let sub = subs.get_mut(&t).unwrap();
+            if sub.deficit == 0 {
+                sub.deficit = quantum;
+            }
+            while sub.deficit > 0 {
+                if out.len() >= max {
+                    // Leaving mid-visit: keep the invariant that the
+                    // rotation lists exactly the non-empty sub-queues.
+                    if sub.items.is_empty() {
+                        subs.remove(&t);
+                        rotation.pop_front();
+                    }
+                    break 'rounds;
+                }
+                let Some(r) = sub.items.pop_front() else { break };
+                *total -= 1;
+                if r.expired_at(now) {
+                    expired.push(r);
+                } else {
+                    sub.deficit -= 1;
+                    out.push(r);
+                }
+            }
+            if sub.items.is_empty() {
+                subs.remove(&t);
+                rotation.pop_front();
+            } else {
+                rotation.rotate_left(1);
+            }
+        }
+        (out, expired)
     }
 
     /// Non-blocking slot-fill for the continuous decode loop: take up to
@@ -218,32 +452,25 @@ impl DynamicBatcher {
     /// [`next_batch`](Self::next_batch) and never consume a slot. The
     /// decode scheduler calls this once per iteration with however many
     /// slots its running batch has free; an empty return means the loop
-    /// simply decodes whoever is already resident.
+    /// simply decodes whoever is already resident. On a tenant-aware
+    /// batcher slots fill by DRR, so decode admission respects the same
+    /// weighted shares as batch dispatch.
     pub fn take_ready(&self, max: usize) -> Vec<Request> {
         if max == 0 {
             return Vec::new();
         }
         let now = since_epoch();
         let mut q = self.q.lock().unwrap();
-        let mut out = Vec::new();
-        let mut expired = Vec::new();
-        while out.len() < max {
-            let Some(r) = q.items.pop_front() else { break };
-            if r.expired_at(now) {
-                expired.push(r);
-            } else {
-                out.push(r);
-            }
+        let (out, expired) = self.drain_locked(&mut q, max, now);
+        let touched = !out.is_empty() || !expired.is_empty();
+        if touched {
+            self.note_depth_locked(&q);
         }
-        let depth = q.items.len();
         drop(q);
-        if !out.is_empty() || !expired.is_empty() {
-            self.note_depth(depth);
-            if self.capacity > 0 {
-                self.cv.notify_all(); // space freed for push_wait
-            }
+        if touched && self.bounded {
+            self.cv.notify_all(); // space freed for push_wait
         }
-        self.run_drop_hook(expired);
+        self.run_drop_hook(expired, DropReason::Deadline);
         out
     }
 
@@ -257,7 +484,7 @@ impl DynamicBatcher {
             // Phase 1: wait for anything. The condvar is notified by
             // push/close, so no poll cap is needed.
             loop {
-                if !q.items.is_empty() {
+                if q.total > 0 {
                     break;
                 }
                 if q.closed {
@@ -268,7 +495,7 @@ impl DynamicBatcher {
             // Phase 2: batch-fill window.
             let deadline = Instant::now() + self.timeout;
             loop {
-                if q.items.len() >= self.max_batch || q.closed {
+                if q.total >= self.max_batch || q.closed {
                     break;
                 }
                 let now = Instant::now();
@@ -277,26 +504,17 @@ impl DynamicBatcher {
                 }
                 q = self.cv.wait_timeout(q, deadline - now).unwrap().0;
             }
-            // Drain: fill the batch from the front, shedding expired
-            // requests so they never occupy a dispatch slot.
+            // Drain: fill the batch by DRR (single-tenant = front-first
+            // FIFO), shedding expired requests so they never occupy a
+            // dispatch slot.
             let now = since_epoch();
-            let mut batch = Vec::new();
-            let mut expired = Vec::new();
-            while batch.len() < self.max_batch {
-                let Some(r) = q.items.pop_front() else { break };
-                if r.expired_at(now) {
-                    expired.push(r);
-                } else {
-                    batch.push(r);
-                }
-            }
-            let depth = q.items.len();
+            let (batch, expired) = self.drain_locked(&mut q, self.max_batch, now);
+            self.note_depth_locked(&q);
             drop(q);
-            self.note_depth(depth);
-            if self.capacity > 0 {
+            if self.bounded {
                 self.cv.notify_all(); // space freed for push_wait
             }
-            self.run_drop_hook(expired);
+            self.run_drop_hook(expired, DropReason::Deadline);
             if !batch.is_empty() {
                 return Some(batch);
             }
@@ -311,6 +529,10 @@ mod tests {
 
     fn req(id: u64) -> Request {
         Request::new(id, vec![0; 4])
+    }
+
+    fn treq(id: u64, tenant: &str) -> Request {
+        req(id).with_tenant(tenant)
     }
 
     #[test]
@@ -449,11 +671,35 @@ mod tests {
     }
 
     #[test]
+    fn push_after_close_resolves_via_drop_hook() {
+        // Regression: the legacy unconditional `push` used to ignore the
+        // closed flag, enqueueing into a queue nobody drains — the
+        // request's handle never resolved. Now a post-close push hands
+        // the request to the drop hook as Shutdown: exactly one outcome.
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        let dropped: Arc<Mutex<Vec<(u64, DropReason)>>> = Arc::new(Mutex::new(Vec::new()));
+        let d2 = dropped.clone();
+        b.set_drop_hook(Box::new(move |r, why| d2.lock().unwrap().push((r.id, why))));
+        b.close();
+        b.push(req(9));
+        assert_eq!(
+            dropped.lock().unwrap().as_slice(),
+            &[(9, DropReason::Shutdown)],
+            "post-close push resolves through the drop hook"
+        );
+        assert_eq!(b.depth(), 0, "nothing lingers in the closed queue");
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
     fn expired_requests_dropped_before_dispatch() {
         let b = DynamicBatcher::new(4, Duration::from_millis(1));
         let dropped: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
         let d2 = dropped.clone();
-        b.set_drop_hook(Box::new(move |r| d2.lock().unwrap().push(r.id)));
+        b.set_drop_hook(Box::new(move |r, why| {
+            assert_eq!(why, DropReason::Deadline);
+            d2.lock().unwrap().push(r.id);
+        }));
         let mut dead = req(0);
         dead.deadline = Some(since_epoch() - 1.0); // already expired
         let live = req(1);
@@ -498,7 +744,7 @@ mod tests {
             let b = DynamicBatcher::with_capacity(4, Duration::from_millis(1), 8);
             let dropped: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
             let d2 = dropped.clone();
-            b.set_drop_hook(Box::new(move |r| d2.lock().unwrap().push(r.id)));
+            b.set_drop_hook(Box::new(move |r, _| d2.lock().unwrap().push(r.id)));
             let shed: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
             let producers: Vec<_> = (0..PRODUCERS)
                 .map(|p| {
@@ -634,7 +880,7 @@ mod tests {
         let b = DynamicBatcher::new(4, Duration::from_millis(1));
         let dropped: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
         let d2 = dropped.clone();
-        b.set_drop_hook(Box::new(move |r| d2.lock().unwrap().push(r.id)));
+        b.set_drop_hook(Box::new(move |r, _| d2.lock().unwrap().push(r.id)));
         let mut dead = req(0);
         dead.deadline = Some(since_epoch() - 1.0);
         b.push(dead);
@@ -692,5 +938,136 @@ mod tests {
         assert_eq!(b.depth(), 2);
         let ids: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn drr_drains_in_weight_ratio_under_backlog() {
+        // 4:1 weights → exactly 4:1 drain under backlog, each tenant
+        // internally FIFO. 80+80 queued, 50 slots = 10 full DRR rounds
+        // of (4 gold, 1 free) → 40 gold, 10 free.
+        let classes = [TenantClass::new("g4", 4, 0), TenantClass::new("f1", 1, 0)];
+        let b = DynamicBatcher::with_tenants(8, Duration::from_millis(1), 0, &classes);
+        assert!(b.tenant_aware());
+        for i in 0..80 {
+            b.push(treq(i, "g4"));
+            b.push(treq(1000 + i, "f1"));
+        }
+        let got = b.take_ready(50);
+        assert_eq!(got.len(), 50);
+        let gold: Vec<u64> =
+            got.iter().filter(|r| r.id < 1000).map(|r| r.id).collect();
+        let free: Vec<u64> =
+            got.iter().filter(|r| r.id >= 1000).map(|r| r.id).collect();
+        assert_eq!(gold.len(), 40, "weight-4 tenant gets 4/5 of the slots");
+        assert_eq!(free.len(), 10, "weight-1 tenant gets 1/5 of the slots");
+        assert_eq!(gold, (0..40).collect::<Vec<_>>(), "per-tenant FIFO holds");
+        assert_eq!(free, (1000..1010).collect::<Vec<_>>());
+        // The remainder drains completely — DRR starves nobody.
+        let rest = b.take_ready(500);
+        assert_eq!(rest.len(), 110);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn drr_resumes_mid_visit_and_unknown_tenants_fold_to_default() {
+        let classes = [TenantClass::new("vip", 3, 0)];
+        let b = DynamicBatcher::with_tenants(8, Duration::from_millis(1), 0, &classes);
+        // Unknown tenant + untagged requests share the implicit default
+        // class, staying mutually FIFO.
+        b.push(treq(0, "mystery"));
+        b.push(req(1));
+        b.push(treq(2, "vip"));
+        b.push(treq(3, "vip"));
+        // One slot at a time: the vip visit (quantum 3) is interrupted
+        // by output-full and must resume where it stopped, not restart
+        // a fresh quantum that would overweight it.
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            order.extend(b.take_ready(1).iter().map(|r| r.id));
+        }
+        // default was enqueued first → visited first (quantum 1 → one
+        // slot), then vip spends its quantum of 3 (only 2 queued), then
+        // default again.
+        assert_eq!(order, vec![0, 2, 3, 1]);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn per_tenant_bound_sheds_burster_without_touching_others() {
+        // The burster exhausts its own depth and sheds; the steady
+        // tenant's admission budget is untouched — per-tenant bounds,
+        // not a shared global one.
+        let classes = [
+            TenantClass::new("burst", 1, 3),
+            TenantClass::new("steady", 1, 2),
+        ];
+        let b = DynamicBatcher::with_tenants(8, Duration::from_millis(1), 0, &classes);
+        for i in 0..3 {
+            assert!(b.try_push(treq(i, "burst")).is_ok());
+        }
+        assert!(b.try_push(treq(9, "burst")).is_err(), "burster sheds its own");
+        assert!(b.try_push(treq(10, "steady")).is_ok(), "other tenant unaffected");
+        assert!(b.try_push(treq(11, "steady")).is_ok());
+        assert!(b.try_push(treq(12, "steady")).is_err(), "its own bound applies");
+        let depths: BTreeMap<String, usize> = b
+            .tenant_depths()
+            .into_iter()
+            .map(|(t, d)| (t.as_str().to_string(), d))
+            .collect();
+        assert_eq!(depths["burst"], 3);
+        assert_eq!(depths["steady"], 2);
+        assert_eq!(depths["default"], 0, "implicit class always reported");
+    }
+
+    #[test]
+    fn depth_gauge_published_under_lock_never_pins_stale() {
+        // Regression for the note_depth race: the gauge used to be set
+        // *after* the queue lock dropped, so two racing pushes could
+        // publish depths out of order and pin the gauge below the real
+        // depth. Publishing under the lock makes gauge == depth at every
+        // quiescent point. The per-tenant gauge is unique to this test's
+        // class name, so parallel tests can't interfere with the
+        // assertion.
+        let classes = [TenantClass::new("gauge_pin", 1, 0)];
+        let b = DynamicBatcher::with_tenants(8, Duration::from_millis(1), 0, &classes);
+        let gauge = crate::metrics::global().gauge("serving.queue.depth.tenant.gauge_pin");
+        for round in 0..20 {
+            let pushers: Vec<_> = (0..4)
+                .map(|p| {
+                    let b = b.clone();
+                    std::thread::spawn(move || {
+                        for k in 0..25 {
+                            b.push(treq(round * 1000 + p * 100 + k, "gauge_pin"));
+                        }
+                    })
+                })
+                .collect();
+            for p in pushers {
+                p.join().unwrap();
+            }
+            let depth = b
+                .tenant_depths()
+                .into_iter()
+                .find(|(t, _)| t.as_str() == "gauge_pin")
+                .unwrap()
+                .1;
+            assert_eq!(
+                gauge.get(),
+                depth as i64,
+                "round {round}: gauge coherent after concurrent pushes"
+            );
+            // Drain some, then re-check: drains publish under the lock
+            // too.
+            let drained = b.take_ready(60).len();
+            assert!(drained > 0);
+            let depth = b
+                .tenant_depths()
+                .into_iter()
+                .find(|(t, _)| t.as_str() == "gauge_pin")
+                .unwrap()
+                .1;
+            assert_eq!(gauge.get(), depth as i64, "round {round}: gauge after drain");
+            b.take_ready(10_000); // empty it for the next round
+        }
     }
 }

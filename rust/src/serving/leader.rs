@@ -54,19 +54,19 @@
 //! worker died while holding them) are re-dispatched after
 //! `retry_timeout` — at-least-once with response dedupe.
 
-use super::batcher::DynamicBatcher;
+use super::batcher::{DynamicBatcher, TenantClass};
 use super::decode::{
     pack_step_rows, token_hash, ActiveReq, DecodeState, Inflight, StepEntry, StepFrame,
     StepPhase,
 };
 use super::request::{
     DropReason, Outcome, OutcomeSlot, RejectReason, Request, RequestHandle, Response,
-    TokenStream,
+    TenantId, TokenStream,
 };
 use super::router::ReplicaRouter;
 use super::stage_worker::{Envelope, TAG_DATA};
 use super::topology::{NodeId, Topology, WorldDef};
-use crate::metrics::{Histogram, SlidingWindow, Timeline};
+use crate::metrics::{Counter, Histogram, SlidingWindow, Timeline};
 use crate::multiworld::{WorldCommunicator, WorldEvent, WorldManager};
 use crate::mwccl::{Work, WorldOptions};
 use crate::tensor::{DType, Tensor};
@@ -90,6 +90,45 @@ struct Outstanding {
 struct RuntimeThreads {
     dispatcher: std::thread::JoinHandle<()>,
     collector: std::thread::JoinHandle<()>,
+}
+
+/// Resolved per-tenant serving state: effective SLO class (the tenant's
+/// own values, inheriting the global knobs where a field is 0), a
+/// recent-latency window for per-tenant p99 / breach attribution, and
+/// pre-resolved labelled metrics. Built only when `MW_TENANTS` names a
+/// tenant table — the single-tenant runtime carries none of this.
+struct TenantState {
+    slo: Option<Duration>,
+    slo_ttft: Option<Duration>,
+    slo_itl: Option<Duration>,
+    /// Whole-request SLO in ms (0 = none) — the attribution threshold
+    /// the autoscaler compares per-tenant p99 against.
+    slo_ms: f64,
+    /// Recent per-tenant latency window (p99 signal).
+    recent: SlidingWindow,
+    completed: Arc<Counter>,
+    dropped_deadline: Arc<Counter>,
+    rejected_queue_full: Arc<Counter>,
+    /// Registry window name for per-tenant TTFT observations.
+    ttft_metric: String,
+}
+
+impl TenantState {
+    fn resolve(name: &str, slo_ms: u64, ttft_ms: u64, itl_ms: u64, window: Duration) -> Self {
+        let g = crate::metrics::global();
+        TenantState {
+            slo: (slo_ms > 0).then(|| Duration::from_millis(slo_ms)),
+            slo_ttft: (ttft_ms > 0).then(|| Duration::from_millis(ttft_ms)),
+            slo_itl: (itl_ms > 0).then(|| Duration::from_millis(itl_ms)),
+            slo_ms: slo_ms as f64,
+            recent: SlidingWindow::new(window),
+            completed: g.counter(&format!("serving.completed.tenant.{name}")),
+            dropped_deadline: g.counter(&format!("serving.dropped.deadline.tenant.{name}")),
+            rejected_queue_full: g
+                .counter(&format!("serving.rejected.queue_full.tenant.{name}")),
+            ttft_metric: format!("serving.ttft_ms.tenant.{name}"),
+        }
+    }
 }
 
 /// How long the decode scheduler thread sleeps between passes. The
@@ -152,6 +191,13 @@ pub struct Leader {
     /// Recent decoded-token events (tokens/s signal: count / window).
     token_events: SlidingWindow,
     token_window: Duration,
+    /// Per-tenant SLO classes and labelled metrics (`MW_TENANTS`);
+    /// empty = single-tenant runtime, byte-identical to the
+    /// pre-tenancy behavior.
+    tenants: BTreeMap<TenantId, TenantState>,
+    /// Cached key for the implicit default class unknown tenants fold
+    /// into.
+    default_tenant: TenantId,
 }
 
 /// Final numbers for a serve run.
@@ -194,13 +240,46 @@ impl Leader {
             .iter()
             .map(|w| w.name.clone())
             .collect();
+        // Tenant table: admission classes for the batchers plus the
+        // leader-side SLO/metric state. Empty with `MW_TENANTS` unset —
+        // everything below then reduces to the single-tenant runtime.
+        let classes: Vec<TenantClass> = cfg
+            .tenants
+            .iter()
+            .map(|t| TenantClass::new(&t.name, t.weight, t.depth))
+            .collect();
+        let window = Duration::from_millis(cfg.scale_window_ms.max(1));
+        let default_tenant = TenantId::default();
+        let mut tenants: BTreeMap<TenantId, TenantState> = BTreeMap::new();
+        if !cfg.tenants.is_empty() {
+            for spec in &cfg.tenants {
+                // A 0 field inherits the matching global knob.
+                let slo = if spec.slo_ms > 0 { spec.slo_ms } else { cfg.slo_ms };
+                let ttft = if spec.slo_ttft_ms > 0 { spec.slo_ttft_ms } else { cfg.slo_ttft_ms };
+                let itl = if spec.slo_itl_ms > 0 { spec.slo_itl_ms } else { cfg.slo_itl_ms };
+                tenants.insert(
+                    TenantId::new(&spec.name),
+                    TenantState::resolve(&spec.name, slo, ttft, itl, window),
+                );
+            }
+            tenants.entry(default_tenant.clone()).or_insert_with(|| {
+                TenantState::resolve(
+                    super::request::DEFAULT_TENANT,
+                    cfg.slo_ms,
+                    cfg.slo_ttft_ms,
+                    cfg.slo_itl_ms,
+                    window,
+                )
+            });
+        }
         let leader = Arc::new(Leader {
             mgr,
             comm,
-            batcher: DynamicBatcher::with_capacity(
+            batcher: DynamicBatcher::with_tenants(
                 batch_size,
                 Duration::from_millis(cfg.batch_timeout_ms),
                 cfg.admission_depth,
+                &classes,
             ),
             in_router,
             out_edges: Mutex::new(out_edges),
@@ -220,10 +299,11 @@ impl Leader {
             retries: AtomicU64::new(0),
             runtime: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
-            stream_batcher: DynamicBatcher::with_capacity(
+            stream_batcher: DynamicBatcher::with_tenants(
                 batch_size,
                 Duration::from_millis(cfg.batch_timeout_ms),
                 cfg.admission_depth,
+                &classes,
             ),
             decode: Mutex::new(DecodeState::new(batch_size)),
             streams: Mutex::new(HashMap::new()),
@@ -236,22 +316,25 @@ impl Leader {
             ttft_recent: SlidingWindow::new(Duration::from_millis(cfg.scale_window_ms.max(1))),
             token_events: SlidingWindow::new(Duration::from_millis(cfg.scale_window_ms.max(1))),
             token_window: Duration::from_millis(cfg.scale_window_ms.max(1)),
+            tenants,
+            default_tenant,
         });
         // The admission queues resolve the handle of every request they
-        // expire (SLO / TTFT deadline passed before dispatch); resolve
-        // also finishes a streaming request's token stream.
+        // drop instead of dispatching — SLO / TTFT deadline expiry, or
+        // a legacy push into a closed queue (Shutdown); resolve also
+        // finishes a streaming request's token stream.
         let weak = Arc::downgrade(&leader);
-        leader.batcher.set_drop_hook(Box::new(move |r: Request| {
+        leader.batcher.set_drop_hook(Box::new(move |r: Request, why: DropReason| {
             if let Some(me) = weak.upgrade() {
-                crate::metrics::global().counter("serving.dropped.deadline").inc();
-                me.resolve(r.id, Outcome::Dropped(DropReason::Deadline));
+                me.note_queue_drop(&r.tenant, why);
+                me.resolve(r.id, Outcome::Dropped(why));
             }
         }));
         let weak = Arc::downgrade(&leader);
-        leader.stream_batcher.set_drop_hook(Box::new(move |r: Request| {
+        leader.stream_batcher.set_drop_hook(Box::new(move |r: Request, why: DropReason| {
             if let Some(me) = weak.upgrade() {
-                crate::metrics::global().counter("serving.dropped.deadline").inc();
-                me.resolve(r.id, Outcome::Dropped(DropReason::Deadline));
+                me.note_queue_drop(&r.tenant, why);
+                me.resolve(r.id, Outcome::Dropped(why));
             }
         }));
         Ok(leader)
@@ -321,7 +404,9 @@ impl Leader {
         if budget > 1 {
             return self.admit_streaming(r, budget, block);
         }
-        r.deadline = self.slo.map(|slo| r.arrival + slo.as_secs_f64());
+        let (slo, _, _) = self.slos_for(&r.tenant);
+        r.deadline = slo.map(|slo| r.arrival + slo.as_secs_f64());
+        let tenant = r.tenant.clone();
         let id = r.id;
         let slot = Arc::new(OutcomeSlot::default());
         {
@@ -356,6 +441,9 @@ impl Leader {
                     Outcome::Dropped(DropReason::Shutdown)
                 } else {
                     g.counter("serving.rejected.queue_full").inc();
+                    if let Some(ts) = self.tenant_state(&tenant) {
+                        ts.rejected_queue_full.inc();
+                    }
                     Outcome::Rejected(RejectReason::QueueFull)
                 };
                 RequestHandle::resolved(id, outcome)
@@ -369,10 +457,13 @@ impl Leader {
     fn admit_streaming(self: &Arc<Self>, mut r: Request, budget: u32, block: bool) -> RequestHandle {
         let g = crate::metrics::global();
         r.max_tokens = budget;
-        // Queue deadline: until the first token the TTFT SLO is the
-        // deadline; without one, fall back to the whole-request SLO.
-        let queue_slo = self.slo_ttft.or(self.slo);
+        // Queue deadline: until the first token the tenant's TTFT SLO
+        // is the deadline; without one, fall back to its whole-request
+        // SLO.
+        let (slo, slo_ttft, _) = self.slos_for(&r.tenant);
+        let queue_slo = slo_ttft.or(slo);
         r.deadline = queue_slo.map(|slo| r.arrival + slo.as_secs_f64());
+        let tenant = r.tenant.clone();
         let id = r.id;
         let slot = Arc::new(OutcomeSlot::default());
         {
@@ -412,9 +503,43 @@ impl Leader {
                     Outcome::Dropped(DropReason::Shutdown)
                 } else {
                     g.counter("serving.rejected.queue_full").inc();
+                    if let Some(ts) = self.tenant_state(&tenant) {
+                        ts.rejected_queue_full.inc();
+                    }
                     Outcome::Rejected(RejectReason::QueueFull)
                 };
                 RequestHandle::resolved(id, outcome)
+            }
+        }
+    }
+
+    /// Per-tenant state for a request's tenant: exact match, else the
+    /// implicit default class (unknown tenants fold there, mirroring
+    /// the batcher); `None` on a single-tenant runtime.
+    fn tenant_state(&self, t: &TenantId) -> Option<&TenantState> {
+        if self.tenants.is_empty() {
+            return None;
+        }
+        self.tenants.get(t).or_else(|| self.tenants.get(&self.default_tenant))
+    }
+
+    /// Effective (request, TTFT, inter-token) SLOs for a tenant — its
+    /// class when configured, the global knobs otherwise.
+    fn slos_for(&self, t: &TenantId) -> (Option<Duration>, Option<Duration>, Option<Duration>) {
+        match self.tenant_state(t) {
+            Some(ts) => (ts.slo, ts.slo_ttft, ts.slo_itl),
+            None => (self.slo, self.slo_ttft, self.slo_itl),
+        }
+    }
+
+    /// Account one admission-queue drop (global + per-tenant counters).
+    /// Deadline expiries feed the SLO drop counters; Shutdown drops
+    /// (push into a closed queue) resolve the handle without them.
+    fn note_queue_drop(&self, tenant: &TenantId, why: DropReason) {
+        if why == DropReason::Deadline {
+            crate::metrics::global().counter("serving.dropped.deadline").inc();
+            if let Some(ts) = self.tenant_state(tenant) {
+                ts.dropped_deadline.inc();
             }
         }
     }
@@ -545,7 +670,7 @@ impl Leader {
         let alive = self.in_router.alive_replicas();
         let g = crate::metrics::global();
         let mut to_send: Vec<(String, Tensor)> = Vec::new();
-        let mut evicted: Vec<u64> = Vec::new();
+        let mut evicted: Vec<(u64, TenantId)> = Vec::new();
         let mut dead_lanes: Vec<String> = Vec::new();
         {
             let mut guard = self.decode.lock().unwrap();
@@ -571,21 +696,22 @@ impl Leader {
                     }
                     continue;
                 }
-                // SLO eviction: TTFT until the first token, inter-token
-                // gap afterwards.
+                // SLO eviction: the occupant tenant's TTFT SLO until
+                // the first token, its inter-token gap SLO afterwards.
                 for (s, slot) in lane.slots.iter_mut().enumerate() {
                     let Some(a) = slot else { continue };
+                    let (_, slo_ttft, slo_itl) = self.slos_for(&a.req.tenant);
                     let over = match a.first_token_at {
-                        None => self
-                            .slo_ttft
-                            .is_some_and(|d| now > a.req.arrival + d.as_secs_f64()),
-                        Some(_) => self
-                            .slo_itl
-                            .is_some_and(|d| now > a.last_token_at + d.as_secs_f64()),
+                        None => {
+                            slo_ttft.is_some_and(|d| now > a.req.arrival + d.as_secs_f64())
+                        }
+                        Some(_) => {
+                            slo_itl.is_some_and(|d| now > a.last_token_at + d.as_secs_f64())
+                        }
                     };
                     if over {
                         lane.retiring.push((s as u16, a.req.id));
-                        evicted.push(a.req.id);
+                        evicted.push((a.req.id, a.req.tenant.clone()));
                         *slot = None;
                     }
                 }
@@ -671,7 +797,10 @@ impl Leader {
         }
         if !evicted.is_empty() {
             g.counter("serving.dropped.deadline").add(evicted.len() as u64);
-            for id in evicted {
+            for (id, tenant) in evicted {
+                if let Some(ts) = self.tenant_state(&tenant) {
+                    ts.dropped_deadline.inc();
+                }
                 self.resolve(id, Outcome::Dropped(DropReason::Deadline));
             }
         }
@@ -701,7 +830,7 @@ impl Leader {
             && frame.payload.elems() >= self.batch_size * self.seq_len * self.vocab;
         let now = since_epoch();
         let mut tokens_out: Vec<(u64, i32)> = Vec::new();
-        let mut finished: Vec<Response> = Vec::new();
+        let mut finished: Vec<(Response, TenantId)> = Vec::new();
         {
             let mut guard = self.decode.lock().unwrap();
             let st = &mut *guard;
@@ -735,6 +864,9 @@ impl Leader {
                         let ttft = Duration::from_secs_f64((now - a.req.arrival).max(0.0));
                         self.ttft_recent.observe(ttft);
                         g.window("serving.ttft_ms").observe(ttft);
+                        if let Some(ts) = self.tenant_state(&a.req.tenant) {
+                            g.window(&ts.ttft_metric).observe(ttft);
+                        }
                     }
                     Some(_) => {
                         let itl = Duration::from_secs_f64((now - a.last_token_at).max(0.0));
@@ -746,7 +878,10 @@ impl Leader {
                 tokens_out.push((e.req_id, tok));
                 if a.generated.len() as u32 >= a.budget {
                     let latency = (now - a.req.arrival).max(0.0);
-                    finished.push(Response { id: e.req_id, latency, next_token: tok });
+                    finished.push((
+                        Response { id: e.req_id, latency, next_token: tok },
+                        a.req.tenant.clone(),
+                    ));
                     lane.retiring.push((e.slot, e.req_id));
                     *slot = None;
                 }
@@ -764,10 +899,14 @@ impl Leader {
         if !finished.is_empty() {
             {
                 let mut responses = self.responses.lock().unwrap();
-                for resp in &finished {
+                for (resp, tenant) in &finished {
                     let dur = Duration::from_secs_f64(resp.latency.max(0.0));
                     self.latency.observe(dur);
                     self.recent.observe(dur);
+                    if let Some(ts) = self.tenant_state(tenant) {
+                        ts.recent.observe(dur);
+                        ts.completed.inc();
+                    }
                     responses.push_back(resp.clone());
                 }
                 while responses.len() > RESPONSES_KEEP {
@@ -776,7 +915,7 @@ impl Leader {
             }
             g.counter("serving.completed").add(finished.len() as u64);
             self.timeline.record("completed", finished.len() as f64);
-            for resp in finished {
+            for (resp, _) in finished {
                 let id = resp.id;
                 self.resolve(id, Outcome::Response(resp));
             }
@@ -848,12 +987,12 @@ impl Leader {
         let Ok(tensor) = self.pack_batch(reqs) else { return false };
         let env = Envelope { id, tensor }.pack();
         loop {
-            let Some(edge) = self.in_router.pick() else {
+            let Some(token) = self.in_router.pick() else {
                 return false;
             };
-            match self.comm.send_blocking(&edge, env.clone(), 1, TAG_DATA) {
+            match self.comm.send_blocking(&token.replica, env.clone(), 1, TAG_DATA) {
                 Ok(()) => {
-                    self.in_router.complete(&edge);
+                    self.in_router.complete(&token);
                     if let Some(entry) = self.outstanding.lock().unwrap().get_mut(&id) {
                         entry.sent_at = Instant::now();
                         entry.attempts += 1;
@@ -861,7 +1000,7 @@ impl Leader {
                     return true;
                 }
                 Err(_) => {
-                    self.in_router.mark_dead(&edge);
+                    self.in_router.mark_dead(&token.replica);
                 }
             }
         }
@@ -963,6 +1102,9 @@ impl Leader {
                 .add(reqs.len() as u64);
             self.timeline.record_labeled("expired", 1.0, &format!("batch {id}"));
             for r in reqs {
+                if let Some(ts) = self.tenant_state(&r.tenant) {
+                    ts.dropped_deadline.inc();
+                }
                 self.resolve(r.id, Outcome::Dropped(DropReason::Deadline));
             }
         }
@@ -1008,6 +1150,10 @@ impl Leader {
                 let dur = Duration::from_secs_f64(latency.max(0.0));
                 self.latency.observe(dur);
                 self.recent.observe(dur);
+                if let Some(ts) = self.tenant_state(&req.tenant) {
+                    ts.recent.observe(dur);
+                    ts.completed.inc();
+                }
                 let resp = Response { id: req.id, latency, next_token };
                 responses.push_back(resp.clone());
                 self.resolve(req.id, Outcome::Response(resp));
@@ -1176,6 +1322,32 @@ impl Leader {
     /// loop's throughput signal.
     pub fn tokens_per_s(&self) -> f64 {
         self.token_events.count() as f64 / self.token_window.as_secs_f64().max(1e-9)
+    }
+
+    /// Per-tenant autoscaler signals: queue depth summed across both
+    /// admission queues, recent p99, and the tenant's SLO target so
+    /// breach attribution can name the tenant driving a scale-out.
+    /// Empty on a single-tenant runtime.
+    pub fn tenant_signals(&self) -> Vec<super::autoscaler::TenantSignal> {
+        if self.tenants.is_empty() {
+            return Vec::new();
+        }
+        let mut depths: BTreeMap<TenantId, usize> = BTreeMap::new();
+        for (t, d) in self.batcher.tenant_depths() {
+            *depths.entry(t).or_default() += d;
+        }
+        for (t, d) in self.stream_batcher.tenant_depths() {
+            *depths.entry(t).or_default() += d;
+        }
+        self.tenants
+            .iter()
+            .map(|(t, ts)| super::autoscaler::TenantSignal {
+                tenant: t.as_str().to_string(),
+                depth: depths.get(t).copied().unwrap_or(0),
+                p99_ms: ts.recent.quantile_us(0.99) as f64 / 1e3,
+                slo_ms: ts.slo_ms,
+            })
+            .collect()
     }
 
     /// Per-in-edge dispatch totals (router introspection).

@@ -67,6 +67,47 @@
 //!   forwards downstream. A `tp = 1` deployment is byte-identical
 //!   (world names and members) to the pre-sharding scheme.
 //!
+//! **Multi-tenancy.** Every [`Request`] carries a [`TenantId`]
+//! (builder: [`Request::with_tenant`]; untagged requests belong to the
+//! `"default"` tenant). A deployment opts into per-tenant SLO classes
+//! through `MW_TENANTS` — grammar
+//! `name[:key=val,...][;name[:key=val,...]]...` with keys `weight`
+//! (admission share, default 1), `slo_ms` / `slo_ttft_ms` / `slo_itl_ms`
+//! (per-tenant latency targets; 0 or absent inherits the global
+//! `MW_SLO_MS` / `MW_SLO_TTFT_MS` / `MW_SLO_ITL_MS`), and `depth`
+//! (per-tenant admission bound; 0 or absent inherits
+//! `MW_ADMISSION_DEPTH`). Example:
+//! `MW_TENANTS='gold:weight=4,slo_ms=50;free:weight=1,slo_ms=500'`.
+//! With a tenant table configured:
+//!
+//! * the admission queue becomes a **weighted-fair** queue — one
+//!   sub-queue per tenant, drained deficit-round-robin by weight, so a
+//!   4:1 gold:free weight split admits in a 4:1 ratio under backlog
+//!   while either class alone uses the full capacity (work-conserving);
+//!   the decode tick admits into free slots through the same DRR drain,
+//!   so continuous-batching slot admission respects the same shares;
+//! * admission bounds are **per-tenant**: a bursting tenant sheds or
+//!   backpressures *its own* traffic at its own `depth` while other
+//!   tenants' sub-queues stay open (`serving.rejected.queue_full.
+//!   tenant.<name>` counts the sheds);
+//! * SLO stamping, deadline drops, TTFT windows and completion counts
+//!   are tracked per tenant (`serving.{completed,dropped.deadline}.
+//!   tenant.<name>` counters, `serving.ttft_ms.tenant.<name>` windows,
+//!   `serving.queue.depth.tenant.<name>` gauges);
+//! * the autoscaler samples per-tenant depth and recent p99
+//!   ([`autoscaler::TenantSignal`]) and attributes an SLO breach to the
+//!   tenant furthest over its own target (`serving.autoscale.
+//!   tenant_breach.<name>`, plus a `tenant` field on the
+//!   `autoscale.out` log event) — a gold tenant drowning behind
+//!   free-tier traffic is visible even when the aggregate p99 looks
+//!   healthy.
+//!
+//! Requests naming a tenant absent from the table fold into the
+//! implicit `default` class. With `MW_TENANTS` unset (the default)
+//! there is exactly one tenant: the queue is plain FIFO, no per-tenant
+//! metric names are created, and the wire format, metric surface and
+//! scheduling behavior are byte-identical to the pre-tenancy runtime.
+//!
 //! **Elasticity, closed loop.** The [`Autoscaler`] samples live signals
 //! every tick — admission-queue depth per alive replica, recent p99
 //! latency vs. the SLO target, replica liveness — and drives
@@ -155,16 +196,16 @@ pub mod spares;
 pub mod stage_worker;
 pub mod topology;
 
-pub use autoscaler::{AutoscalePolicy, Autoscaler, AutoscalerHandle, LoadSignals};
-pub use batcher::DynamicBatcher;
+pub use autoscaler::{AutoscalePolicy, Autoscaler, AutoscalerHandle, LoadSignals, TenantSignal};
+pub use batcher::{DynamicBatcher, TenantClass};
 pub use controller::{Controller, ScalingPolicy};
 pub use decode::{StepEntry, StepFrame, StepPhase};
 pub use leader::{Leader, LeaderReport};
 pub use request::{
     DropReason, Outcome, RejectReason, Request, RequestGen, RequestHandle, Response,
-    StreamEvent,
+    StreamEvent, TenantId, DEFAULT_TENANT,
 };
-pub use router::ReplicaRouter;
+pub use router::{DispatchToken, ReplicaRouter};
 pub use spares::{host_cache, WeightCache};
 pub use stage_worker::{run_stage_worker, StageWorkerConfig, WorkerStats};
 pub use topology::{NodeId, Topology, WorldDef, WorldKind};

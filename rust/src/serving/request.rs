@@ -22,11 +22,58 @@ use crate::util::time::since_epoch;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+/// Name of the implicit tenant every request belongs to unless the
+/// caller says otherwise. Keeps the single-tenant runtime byte-identical
+/// when no tenant table is configured.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// A tenant name. Cheap to clone (shared `Arc<str>`) because every
+/// request, sub-queue key and per-tenant metric carries one.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(Arc<str>);
+
+impl TenantId {
+    pub fn new(name: &str) -> Self {
+        TenantId(Arc::from(name))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    /// The implicit [`DEFAULT_TENANT`]?
+    pub fn is_default(&self) -> bool {
+        &*self.0 == DEFAULT_TENANT
+    }
+}
+
+impl Default for TenantId {
+    fn default() -> Self {
+        TenantId::new(DEFAULT_TENANT)
+    }
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<&str> for TenantId {
+    fn from(name: &str) -> Self {
+        TenantId::new(name)
+    }
+}
+
 /// One inference request: a token sequence for the model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
+    /// Owning tenant. Defaults to [`DEFAULT_TENANT`]; only meaningful
+    /// when the runtime has a tenant table (`MW_TENANTS`) — unknown
+    /// tenants fold into the default class.
+    pub tenant: TenantId,
     /// Arrival time (seconds since experiment epoch); re-stamped at
     /// admission.
     pub arrival: f64,
@@ -43,12 +90,25 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: u64, tokens: Vec<i32>) -> Self {
-        Request { id, tokens, arrival: since_epoch(), deadline: None, max_tokens: 1 }
+        Request {
+            id,
+            tokens,
+            tenant: TenantId::default(),
+            arrival: since_epoch(),
+            deadline: None,
+            max_tokens: 1,
+        }
     }
 
     /// Builder: set the decode budget (clamped to ≥ 1).
     pub fn with_max_tokens(mut self, n: u32) -> Self {
         self.max_tokens = n.max(1);
+        self
+    }
+
+    /// Builder: tag the request with a tenant.
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = TenantId::new(tenant);
         self
     }
 
@@ -445,6 +505,20 @@ mod tests {
             h.next_event(Instant::now() + Duration::from_millis(10)),
             Some(StreamEvent::Done(Outcome::Rejected(RejectReason::QueueFull)))
         );
+    }
+
+    #[test]
+    fn tenant_defaults_and_builder() {
+        let r = Request::new(1, vec![0; 4]);
+        assert!(r.tenant.is_default());
+        assert_eq!(r.tenant.as_str(), DEFAULT_TENANT);
+        let r = r.with_tenant("gold");
+        assert!(!r.tenant.is_default());
+        assert_eq!(r.tenant, TenantId::from("gold"));
+        assert_eq!(r.tenant.to_string(), "gold");
+        // Cheap clones share the same allocation.
+        let t2 = r.tenant.clone();
+        assert_eq!(t2, r.tenant);
     }
 
     #[test]

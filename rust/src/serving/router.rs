@@ -2,6 +2,14 @@
 //! next batch. Least-inflight with round-robin tie-break, inflight caps
 //! for backpressure, and replica death/addition at runtime — the
 //! data-plane half of the paper's stage-level scaling story.
+//!
+//! Dispatches are **epoch-stamped**: [`ReplicaRouter::pick`] returns a
+//! [`DispatchToken`] carrying the replica's liveness epoch, and
+//! [`ReplicaRouter::complete`] ignores tokens from a dead epoch. Without
+//! the stamp, a completion racing `mark_dead` + revival would decrement
+//! the *new* epoch's inflight (a phantom completion from work the dead
+//! replica never finished), skewing least-inflight routing and letting
+//! the revived replica overshoot its inflight cap.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -11,6 +19,17 @@ struct ReplicaState {
     inflight: usize,
     dispatched: u64,
     alive: bool,
+    /// Liveness epoch, bumped on every `mark_dead`. Completions carry
+    /// the epoch they were dispatched under; stale ones are ignored.
+    epoch: u64,
+}
+
+/// Proof of one dispatch: which replica took the batch and under which
+/// liveness epoch. Hand it back via [`ReplicaRouter::complete`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DispatchToken {
+    pub replica: String,
+    pub epoch: u64,
 }
 
 /// See module docs. Keyed by an opaque replica id (the edge-world name
@@ -49,12 +68,15 @@ impl ReplicaRouter {
     }
 
     /// A replica died (its edge world broke): stop routing to it. Its
-    /// inflight work is presumed lost; callers requeue.
+    /// inflight work is presumed lost; callers requeue. The epoch bump
+    /// invalidates every outstanding [`DispatchToken`] so a straggling
+    /// completion from the dead epoch can't touch a revival's counters.
     pub fn mark_dead(&self, id: &str) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(r) = inner.replicas.get_mut(id) {
             r.alive = false;
             r.inflight = 0;
+            r.epoch += 1;
         }
     }
 
@@ -65,7 +87,7 @@ impl ReplicaRouter {
     /// Choose the next replica: among alive replicas under the inflight
     /// cap, least inflight wins; ties break round-robin. `None` when
     /// everything is dead or saturated (backpressure).
-    pub fn pick(&self) -> Option<String> {
+    pub fn pick(&self) -> Option<DispatchToken> {
         let mut inner = self.inner.lock().unwrap();
         let cap = inner.max_inflight;
         let candidates: Vec<(String, usize)> = inner
@@ -89,14 +111,19 @@ impl ReplicaRouter {
         let st = inner.replicas.get_mut(&chosen).unwrap();
         st.inflight += 1;
         st.dispatched += 1;
-        Some(chosen)
+        Some(DispatchToken { epoch: st.epoch, replica: chosen })
     }
 
-    /// A dispatched batch completed (or failed) on `id`.
-    pub fn complete(&self, id: &str) {
+    /// A dispatched batch completed (or failed) on the token's replica.
+    /// A token minted before the replica's last `mark_dead` is stale —
+    /// its inflight was already forgotten with the dead epoch — and is
+    /// ignored rather than debited against the revived replica.
+    pub fn complete(&self, token: &DispatchToken) {
         let mut inner = self.inner.lock().unwrap();
-        if let Some(r) = inner.replicas.get_mut(id) {
-            r.inflight = r.inflight.saturating_sub(1);
+        if let Some(r) = inner.replicas.get_mut(&token.replica) {
+            if r.epoch == token.epoch {
+                r.inflight = r.inflight.saturating_sub(1);
+            }
         }
     }
 
@@ -155,7 +182,7 @@ mod tests {
         r.complete(&first);
         let second = r.pick().unwrap();
         r.complete(&second);
-        assert_ne!(first, second, "tie-break must rotate");
+        assert_ne!(first.replica, second.replica, "tie-break must rotate");
     }
 
     #[test]
@@ -165,19 +192,19 @@ mod tests {
         r.add_replica("b");
         let x = r.pick().unwrap(); // x has 1 inflight now
         let y = r.pick().unwrap();
-        assert_ne!(x, y);
+        assert_ne!(x.replica, y.replica);
         r.complete(&y); // y back to 0, x still 1
-        assert_eq!(r.pick().unwrap(), y);
+        assert_eq!(r.pick().unwrap().replica, y.replica);
     }
 
     #[test]
     fn inflight_cap_backpressures() {
         let r = ReplicaRouter::new(2);
         r.add_replica("a");
-        assert!(r.pick().is_some());
+        let t1 = r.pick().unwrap();
         assert!(r.pick().is_some());
         assert!(r.pick().is_none(), "cap reached");
-        r.complete("a");
+        r.complete(&t1);
         assert!(r.pick().is_some());
     }
 
@@ -188,7 +215,7 @@ mod tests {
         r.add_replica("b");
         r.mark_dead("a");
         for _ in 0..10 {
-            assert_eq!(r.pick().unwrap(), "b");
+            assert_eq!(r.pick().unwrap().replica, "b");
         }
         assert_eq!(r.counts(), (1, 2));
     }
@@ -210,7 +237,7 @@ mod tests {
         r.mark_dead("a");
         assert!(r.pick().is_none());
         r.add_replica("a2");
-        assert_eq!(r.pick().unwrap(), "a2");
+        assert_eq!(r.pick().unwrap().replica, "a2");
     }
 
     #[test]
@@ -220,8 +247,8 @@ mod tests {
             r.add_replica(id);
         }
         for _ in 0..300 {
-            let id = r.pick().unwrap();
-            r.complete(&id);
+            let t = r.pick().unwrap();
+            r.complete(&t);
         }
         let counts = r.dispatch_counts();
         for (_, c) in counts {
@@ -237,5 +264,28 @@ mod tests {
         r.mark_dead("a");
         r.add_replica("a"); // revived (new worker, same edge id)
         assert!(r.pick().is_some(), "inflight from the dead epoch is forgotten");
+    }
+
+    #[test]
+    fn stale_complete_across_revival_is_ignored() {
+        // Regression: a completion that raced mark_dead + revival used
+        // to decrement the NEW epoch's inflight — a phantom completion
+        // for work the dead replica never finished. With max_inflight=1
+        // that would free a slot the revived replica still occupies.
+        let r = ReplicaRouter::new(1);
+        r.add_replica("a");
+        let stale = r.pick().unwrap(); // dispatched under epoch 0
+        r.mark_dead("a"); // batch presumed lost; epoch bumps to 1
+        r.add_replica("a"); // revived
+        let live = r.pick().unwrap(); // fills the revived cap (epoch 1)
+        assert_ne!(stale.epoch, live.epoch);
+        // The dead epoch's straggler finally reports in: must be a no-op.
+        r.complete(&stale);
+        assert_eq!(r.inflight(), 1, "stale complete must not free a slot");
+        assert!(r.pick().is_none(), "cap still honored after stale complete");
+        // The live epoch's completion works as usual.
+        r.complete(&live);
+        assert_eq!(r.inflight(), 0);
+        assert!(r.pick().is_some());
     }
 }

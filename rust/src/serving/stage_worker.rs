@@ -683,18 +683,18 @@ pub fn run_stage_worker(mgr: WorldManager, cfg: StageWorkerConfig) -> anyhow::Re
                 // Route downstream, retrying across replicas on failure.
                 let out = Envelope { id: env.id, tensor: result }.pack();
                 loop {
-                    let Some(target) = out_router.pick() else {
+                    let Some(token) = out_router.pick() else {
                         // No downstream alive: drop (leader will retry the batch).
                         break;
                     };
-                    match comm.send_blocking(&target, out.clone(), 1, TAG_DATA) {
+                    match comm.send_blocking(&token.replica, out.clone(), 1, TAG_DATA) {
                         Ok(()) => {
-                            out_router.complete(&target);
+                            out_router.complete(&token);
                             stats.forwarded += 1;
                             break;
                         }
                         Err(_) => {
-                            out_router.mark_dead(&target);
+                            out_router.mark_dead(&token.replica);
                             stats.out_edge_failures += 1;
                         }
                     }

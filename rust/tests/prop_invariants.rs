@@ -3,7 +3,7 @@
 //! tensor framing and the envelope codec.
 
 use multiworld::serving::batcher::DynamicBatcher;
-use multiworld::serving::router::ReplicaRouter;
+use multiworld::serving::router::{DispatchToken, ReplicaRouter};
 use multiworld::serving::stage_worker::Envelope;
 use multiworld::serving::topology::{NodeId, Topology};
 use multiworld::serving::Request;
@@ -20,14 +20,14 @@ fn prop_router_never_exceeds_inflight_cap() {
             r.add_replica(&format!("r{i}"));
         }
         let mut rng = Rng::new(cap as u64);
-        let mut outstanding: Vec<String> = Vec::new();
+        let mut outstanding: Vec<DispatchToken> = Vec::new();
         for _ in 0..300 {
             if rng.chance(0.6) {
-                if let Some(id) = r.pick() {
-                    outstanding.push(id);
+                if let Some(t) = r.pick() {
+                    outstanding.push(t);
                 }
-            } else if let Some(id) = outstanding.pop() {
-                r.complete(&id);
+            } else if let Some(t) = outstanding.pop() {
+                r.complete(&t);
             }
             if r.inflight() > cap * 4 {
                 return Err(format!("inflight {} > cap {} × replicas", r.inflight(), cap));
@@ -46,8 +46,8 @@ fn prop_router_dispatch_conserved() {
             r.add_replica(&format!("r{i}"));
         }
         for _ in 0..n {
-            let id = r.pick().ok_or("pick failed")?;
-            r.complete(&id);
+            let t = r.pick().ok_or("pick failed")?;
+            r.complete(&t);
         }
         let total: u64 = r.dispatch_counts().values().sum();
         if total == n as u64 {
@@ -67,8 +67,8 @@ fn prop_router_balance_within_one() {
             r.add_replica(&format!("r{i}"));
         }
         for _ in 0..n {
-            let id = r.pick().ok_or("pick failed")?;
-            r.complete(&id);
+            let t = r.pick().ok_or("pick failed")?;
+            r.complete(&t);
         }
         let counts = r.dispatch_counts();
         let max = counts.values().max().copied().unwrap_or(0);

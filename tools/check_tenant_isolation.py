@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Multi-tenant isolation gate over BENCH_serving.json.
+
+Reads the `multi_tenant` section the `serving_trajectory` bench emits —
+the steady tenant's client-side latency measured twice on identical
+deployments: alone (`solo_*`, the baseline) and while a low-weight
+burster floods at ~10x the steady tenant's solo service rate
+(`steady_*`) — and checks the isolation properties the weighted-fair
+admission queue exists to provide:
+
+  * **latency isolation**: the steady tenant's p99 under the flood must
+    stay within --tolerance-pct of its solo baseline (plus a small
+    absolute slack for scheduler noise on sub-ms baselines);
+  * **no collateral shedding**: the steady tenant must shed nothing —
+    the burster's overflow is bounded per-tenant, so only the burster's
+    own sub-queue fills;
+  * **the burster actually sheds**: a flood at 10x share with zero
+    sheds means the per-tenant bound never engaged and the leg did not
+    measure isolation at all.
+
+The artifact carries its own baseline (the solo phase runs in the same
+bench invocation, on the same box), so there is no committed baseline
+file to re-anchor. All checks are *soft* failures, matching
+check_mttr.py: the script prints GitHub Actions `::warning::`
+annotations and always exits 0 — CI boxes are noisy and the baseline is
+a handful of milliseconds, so a hard gate would flake. The warnings
+make every drift visible on the push that caused it.
+"""
+
+import argparse
+import json
+import sys
+
+
+def warn(msg: str) -> None:
+    print(f"::warning title=tenant-isolation::{msg}")
+
+
+def load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        warn(f"cannot read {path}: {e}")
+        return None
+
+
+def print_meta(doc: dict) -> None:
+    meta = doc.get("meta")
+    if not isinstance(meta, dict):
+        print("(artifact has no meta block)")
+        return
+    sha = meta.get("sha") or "?"
+    branch = meta.get("branch") or "?"
+    run = meta.get("run_id") or "local"
+    cfg = " ".join(f"{k}={v}" for k, v in sorted(meta.get("config", {}).items()))
+    print(f"provenance: {sha[:12]} ({branch}, run {run}) {cfg}".rstrip())
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact", help="path to BENCH_serving.json")
+    ap.add_argument("--tolerance-pct", type=float, default=50.0,
+                    help="allowed steady-p99 growth vs the solo "
+                         "baseline, percent (default 50)")
+    ap.add_argument("--slack-ms", type=float, default=3.0,
+                    help="absolute slack added to the p99 limit, ms "
+                         "(default 3; baselines are a few ms, so pure "
+                         "ratios over-trigger on scheduler noise)")
+    args = ap.parse_args()
+
+    doc = load(args.artifact)
+    if doc is None:
+        return 0
+    print_meta(doc)
+    mt = doc.get("multi_tenant")
+    if not isinstance(mt, dict):
+        warn(f"{args.artifact} has no multi_tenant section — did the "
+             f"serving_trajectory bench run?")
+        return 0
+
+    warnings = 0
+
+    # ---- latency isolation: steady p99 vs its own solo baseline -------
+    solo_p99, steady_p99 = mt.get("solo_p99_ms"), mt.get("steady_p99_ms")
+    if solo_p99 is None or steady_p99 is None:
+        warnings += 1
+        warn("multi_tenant section is missing solo_p99_ms/steady_p99_ms")
+    else:
+        limit = solo_p99 * (1.0 + args.tolerance_pct / 100.0) + args.slack_ms
+        if steady_p99 > limit:
+            warnings += 1
+            warn(f"steady tenant p99 degraded under the flood: "
+                 f"{steady_p99:.2f} ms vs solo {solo_p99:.2f} ms "
+                 f"(limit {limit:.2f} ms = +{args.tolerance_pct:g}% "
+                 f"+ {args.slack_ms:g} ms) — weighted-fair admission "
+                 f"is not isolating tenants")
+        else:
+            print(f"steady p99 {steady_p99:.2f} ms vs solo "
+                  f"{solo_p99:.2f} ms (limit {limit:.2f} ms) ok")
+
+    # ---- no collateral shedding ---------------------------------------
+    steady_shed = mt.get("steady_shed")
+    if steady_shed is None:
+        warnings += 1
+        warn("multi_tenant section is missing steady_shed")
+    elif steady_shed > 0:
+        warnings += 1
+        warn(f"steady tenant shed {steady_shed} request(s) — the "
+             f"burster's overflow leaked out of its per-tenant bound")
+    else:
+        print("steady tenant shed nothing ok")
+
+    # ---- the burster must actually overflow its bound -----------------
+    burst_shed = mt.get("burst_shed") or 0
+    burst_submitted = mt.get("burst_submitted") or 0
+    if burst_shed < 1:
+        warnings += 1
+        warn(f"burster shed nothing ({burst_submitted} submitted) — the "
+             f"per-tenant bound never engaged, so the leg did not "
+             f"measure isolation")
+    else:
+        print(f"burster: {burst_submitted} submitted, "
+              f"{mt.get('burst_completed') or 0} completed, "
+              f"{burst_shed} shed ok")
+
+    print(f"tenant isolation check: {warnings} warning(s), tolerance "
+          f"{args.tolerance_pct:g}% + {args.slack_ms:g} ms")
+    # Fail-soft by design: the baseline is a few milliseconds measured
+    # on a shared CI box; warnings, not failures, gate this signal.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
